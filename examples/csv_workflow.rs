@@ -1,0 +1,113 @@
+//! Bring-your-own-data workflow: the path a real user of this library
+//! takes when they have actual recordings instead of the synthetic
+//! generators.
+//!
+//! 1. Export the synthetic Damage1 benchmark to CSV (stand-in for "your
+//!    sensor dump").
+//! 2. Re-import the CSVs with `data::csv` (label in last column).
+//! 3. Pre-train, save the backbone as `.s2l`, reload it (deployment
+//!    hand-off), fine-tune with Skip2-LoRA, evaluate.
+//!
+//! Run: `cargo run --release --example csv_workflow`
+
+use std::path::Path;
+
+use skip2lora::data::csv;
+use skip2lora::data::fan::{damage, DamageKind};
+use skip2lora::method::Method;
+use skip2lora::model::io::TensorBundle;
+use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::tensor::{ops::Backend, Mat};
+use skip2lora::train::trainer::pretrain;
+use skip2lora::train::{train, FineTuner, TrainConfig};
+use skip2lora::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("skip2lora_csv_workflow");
+    std::fs::create_dir_all(&dir)?;
+    println!("== CSV workflow (files under {}) ==\n", dir.display());
+
+    // 1. export "recordings"
+    let bench = damage(7, DamageKind::Holes);
+    for (name, split) in [
+        ("pretrain.csv", &bench.pretrain),
+        ("finetune.csv", &bench.finetune),
+        ("test.csv", &bench.test),
+    ] {
+        csv::save(split, &dir.join(name))?;
+    }
+    println!("exported pretrain/finetune/test CSVs (256 features + label)");
+
+    // 2. re-import
+    let pre = csv::load(&dir.join("pretrain.csv"), 3)?;
+    let fine = csv::load(&dir.join("finetune.csv"), 3)?;
+    let test = csv::load(&dir.join("test.csv"), 3)?;
+    assert_eq!(pre.n_features(), 256);
+
+    // 3. pre-train + save + reload + fine-tune
+    let backbone = pretrain(MlpConfig::fan(), &pre, 40, 0.05, 1, Backend::Blocked);
+    let path = dir.join("backbone.s2l");
+    save_backbone(&backbone, &path)?;
+    println!("saved backbone to {} ({} bytes)", path.display(), std::fs::metadata(&path)?.len());
+
+    let mut reloaded = load_backbone(&path)?;
+    let mut rng = Rng::new(2);
+    reloaded.set_topology(&mut rng, AdapterTopology::Skip);
+    let mut tuner = FineTuner::new(reloaded, Method::Skip2Lora, Backend::Blocked, 20);
+    let before = tuner.accuracy(&test);
+    let out = train(&mut tuner, &fine, None, &TrainConfig { epochs: 80, lr: 0.02, ..Default::default() });
+    let after = tuner.accuracy(&test);
+
+    println!(
+        "fine-tuned from CSV: {:.1}% -> {:.1}% ({} batches, {:.3} ms/batch, {:.0}% cache hits)",
+        before * 100.0,
+        after * 100.0,
+        out.batches,
+        out.train_ms_per_batch(),
+        out.cache_hits as f64 / (out.cache_hits + out.cache_misses).max(1) as f64 * 100.0
+    );
+    assert!(after > before);
+    println!("OK");
+    Ok(())
+}
+
+/// Persist a 3-layer backbone into the `.s2l` named-tensor format.
+fn save_backbone(m: &Mlp, path: &Path) -> anyhow::Result<()> {
+    let mut tb = TensorBundle::default();
+    for (k, fc) in m.fcs.iter().enumerate() {
+        tb.insert(&format!("w{}", k + 1), fc.w.clone());
+        tb.insert_vec(&format!("b{}", k + 1), &fc.b);
+    }
+    for (k, bn) in m.bns.iter().enumerate() {
+        tb.insert_vec(&format!("g{}", k + 1), &bn.gamma);
+        tb.insert_vec(&format!("beta{}", k + 1), &bn.beta);
+        tb.insert_vec(&format!("mean{}", k + 1), &bn.running_mean);
+        tb.insert_vec(&format!("var{}", k + 1), &bn.running_var);
+    }
+    tb.save(path)?;
+    Ok(())
+}
+
+/// Reload a `.s2l` backbone into a fresh `Mlp` (fan shape).
+fn load_backbone(path: &Path) -> anyhow::Result<Mlp> {
+    let tb = TensorBundle::load(path)?;
+    let mut rng = Rng::new(0);
+    let mut m = Mlp::new(&mut rng, MlpConfig::fan(), AdapterTopology::None);
+    for k in 0..m.fcs.len() {
+        let w = tb.get(&format!("w{}", k + 1)).expect("missing weight").clone();
+        let b = tb.get_vec(&format!("b{}", k + 1)).expect("missing bias");
+        m.fcs[k] = skip2lora::nn::fc::FcLayer::from_weights(w, b);
+    }
+    for k in 0..m.bns.len() {
+        m.bns[k].gamma = tb.get_vec(&format!("g{}", k + 1)).unwrap();
+        m.bns[k].beta = tb.get_vec(&format!("beta{}", k + 1)).unwrap();
+        m.bns[k].running_mean = tb.get_vec(&format!("mean{}", k + 1)).unwrap();
+        m.bns[k].running_var = tb.get_vec(&format!("var{}", k + 1)).unwrap();
+    }
+    Ok(m)
+}
+
+// Mat is used in save/load signatures via TensorBundle.
+#[allow(unused)]
+fn _type_anchor(_: Mat) {}

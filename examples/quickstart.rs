@@ -1,0 +1,87 @@
+//! Quickstart: the whole Skip2-LoRA story in ~60 lines.
+//!
+//! 1. Generate the Damage1 drift benchmark (silent pre-train data, noisy
+//!    deployment data — paper §5.1).
+//! 2. Pre-train a 3-layer DNN on the silent data (§5.2 step 1).
+//! 3. Observe the accuracy crater after drift (Table 3 "Before").
+//! 4. Fine-tune with Skip2-LoRA for a few seconds (Algorithm 1).
+//! 5. Observe recovery (Table 4) and the Skip-Cache hit rate.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use skip2lora::data::fan::{damage, DamageKind};
+use skip2lora::method::Method;
+use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::tensor::ops::Backend;
+use skip2lora::train::trainer::pretrain;
+use skip2lora::train::{train, FineTuner, TrainConfig};
+use skip2lora::util::rng::Rng;
+
+fn main() {
+    println!("== Skip2-LoRA quickstart (Damage1) ==\n");
+
+    // 1. data
+    let bench = damage(42, DamageKind::Holes);
+    println!(
+        "dataset: {} pre-train / {} fine-tune / {} test samples, {} features",
+        bench.pretrain.len(),
+        bench.finetune.len(),
+        bench.test.len(),
+        bench.pretrain.n_features()
+    );
+
+    // 2. pre-train on the silent (factory) data
+    let t0 = std::time::Instant::now();
+    let backbone = pretrain(
+        skip2lora::model::MlpConfig::fan(),
+        &bench.pretrain,
+        60,
+        0.05,
+        1,
+        Backend::Blocked,
+    );
+    println!("pre-trained 256-96-96-3 backbone in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // 3. accuracy before adaptation
+    let mut probe = FineTuner::new(backbone.clone(), Method::FtAll, Backend::Blocked, 20);
+    let before = probe.accuracy(&bench.test);
+    println!("accuracy on drifted test data BEFORE fine-tuning: {:.1}%", before * 100.0);
+
+    // 4. Skip2-LoRA fine-tune (adapters only, Skip-Cache active)
+    let mut model = backbone;
+    let mut rng = Rng::new(2);
+    model.set_topology(&mut rng, AdapterTopology::Skip);
+    println!(
+        "skip adapters: {} trainable parameters (backbone {} frozen)",
+        model.adapter_param_count(),
+        model.backbone_param_count()
+    );
+    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 20);
+    let t0 = std::time::Instant::now();
+    let out = train(
+        &mut tuner,
+        &bench.finetune,
+        None,
+        &TrainConfig { epochs: 100, lr: 0.02, ..Default::default() },
+    );
+    let secs = t0.elapsed().as_secs_f64();
+
+    // 5. results
+    let after = tuner.accuracy(&bench.test);
+    let hit_rate = out.cache_hits as f64 / (out.cache_hits + out.cache_misses).max(1) as f64;
+    println!(
+        "\nfine-tuned {} batches in {:.2}s ({:.3} ms/batch)",
+        out.batches,
+        secs,
+        out.train_ms_per_batch()
+    );
+    println!(
+        "Skip-Cache: {:.1}% hit rate, {} KiB ({} entries)",
+        hit_rate * 100.0,
+        out.cache_bytes / 1024,
+        bench.finetune.len()
+    );
+    println!("accuracy AFTER Skip2-LoRA fine-tuning: {:.1}%", after * 100.0);
+    assert!(after > before, "fine-tuning must improve accuracy");
+    println!("\nOK — drift gap closed: {:.1}% -> {:.1}%", before * 100.0, after * 100.0);
+}

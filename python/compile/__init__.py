@@ -1,0 +1,5 @@
+"""Build-time compile path: Layer-2 jax model + Layer-1 Pallas kernels.
+
+This package runs ONLY at `make artifacts` time; nothing here is imported
+on the rust request path.
+"""

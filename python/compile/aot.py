@@ -1,0 +1,172 @@
+"""AOT lowering: jax/pallas -> HLO text artifacts for the rust runtime.
+
+Run as ``python -m compile.aot --out ../artifacts`` (wired to
+``make artifacts``). Python executes ONLY here; afterwards the rust binary
+is self-contained.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowering goes through stablehlo -> XlaComputation with ``return_tuple=True``
+so the rust side always unwraps one tuple.
+
+Artifacts per dataset shape (fan: 256-96-96-3, har: 561-96-96-6; B = 20,
+R = 4 — paper §5.1):
+
+    {ds}_cache_populate.hlo.txt   (frozen..., x)                  -> (x2, x3, c3)
+    {ds}_skip2_step.hlo.txt       (lora..., x1, x2, x3, c3, y, lr)-> (loss, lora'...)
+    {ds}_predict.hlo.txt          (frozen..., lora..., x[1])      -> (logits,)
+    {ds}_predict_b20.hlo.txt      (frozen..., lora..., x[20])     -> (logits,)
+    {ds}_pretrain_step.hlo.txt    (frozen..., x, y, lr)           -> (loss, frozen'...)
+
+plus ``manifest.json`` describing every artifact's exact positional input /
+output signature so the rust runtime stays data-driven.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DATASETS = {
+    # name: (n_in, hidden, n_out)
+    "fan": (256, 96, 3),
+    "har": (561, 96, 6),
+}
+BATCH = 20
+RANK = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _frozen_specs(n, h, m):
+    return [
+        _spec(n, h), _spec(h), _spec(h), _spec(h), _spec(h), _spec(h),
+        _spec(h, h), _spec(h), _spec(h), _spec(h), _spec(h), _spec(h),
+        _spec(h, m), _spec(m),
+    ]
+
+
+def _lora_specs(n, h, m, r):
+    return [_spec(n, r), _spec(r, m), _spec(h, r), _spec(r, m), _spec(h, r), _spec(r, m)]
+
+
+def _sig(specs, names):
+    return [{"name": nm, "shape": list(s.shape), "dtype": "f32"}
+            for nm, s in zip(names, specs)]
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"batch": BATCH, "rank": RANK, "format": "hlo-text",
+                "datasets": {}, "artifacts": {}}
+
+    for ds, (n, h, m) in DATASETS.items():
+        manifest["datasets"][ds] = {"n_in": n, "hidden": h, "n_out": m}
+        fro = _frozen_specs(n, h, m)
+        lor = _lora_specs(n, h, m, RANK)
+        fro_names = list(model.FROZEN_NAMES)
+        lor_names = list(model.LORA_NAMES)
+
+        # ---- cache_populate -------------------------------------------------
+        def cache_fn(*args):
+            frozen = model.frozen_from_list(args[:14])
+            x = args[14]
+            return model.cache_populate(frozen, x)
+
+        entries = {}
+
+        def emit(name, fn, in_specs, in_names, out_names):
+            lowered = jax.jit(fn).lower(*in_specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries[name] = {
+                "file": fname,
+                "inputs": _sig(in_specs, in_names),
+                "outputs": out_names,
+            }
+            print(f"  wrote {fname} ({len(text)} chars, "
+                  f"{len(in_specs)} inputs -> {len(out_names)} outputs)")
+
+        emit(f"{ds}_cache_populate", cache_fn,
+             fro + [_spec(BATCH, n)], fro_names + ["x"],
+             ["x2", "x3", "c3"])
+
+        # ---- skip2_train_step ----------------------------------------------
+        def step_fn(*args):
+            lora = model.lora_from_list(args[:6])
+            x1, x2, x3, c3, y, lr = args[6:]
+            loss, new = model.skip2_train_step(lora, x1, x2, x3, c3, y, lr)
+            return tuple([loss] + model.lora_to_list(new))
+
+        emit(f"{ds}_skip2_step", step_fn,
+             lor + [_spec(BATCH, n), _spec(BATCH, h), _spec(BATCH, h),
+                    _spec(BATCH, m), _spec(BATCH, m), _spec()],
+             lor_names + ["x1", "x2", "x3", "c3", "y_onehot", "lr"],
+             ["loss"] + [f"new_{k}" for k in lor_names])
+
+        # ---- predict (B=1 and B=20) ------------------------------------------
+        def predict_fn(*args):
+            frozen = model.frozen_from_list(args[:14])
+            lora = model.lora_from_list(args[14:20])
+            x = args[20]
+            return (model.predict(frozen, lora, x),)
+
+        emit(f"{ds}_predict", predict_fn,
+             fro + lor + [_spec(1, n)], fro_names + lor_names + ["x"],
+             ["logits"])
+        emit(f"{ds}_predict_b20", predict_fn,
+             fro + lor + [_spec(BATCH, n)], fro_names + lor_names + ["x"],
+             ["logits"])
+
+        # ---- pretrain step ---------------------------------------------------
+        def pretrain_fn(*args):
+            frozen = model.frozen_from_list(args[:14])
+            x, y, lr = args[14:]
+            loss, new = model.pretrain_step(frozen, x, y, lr)
+            return tuple([loss] + model.frozen_to_list(new))
+
+        emit(f"{ds}_pretrain_step", pretrain_fn,
+             fro + [_spec(BATCH, n), _spec(BATCH, m), _spec()],
+             fro_names + ["x", "y_onehot", "lr"],
+             ["loss"] + [f"new_{k}" for k in fro_names])
+
+        manifest["artifacts"].update(entries)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    args = ap.parse_args()
+    print(f"AOT-lowering to {os.path.abspath(args.out)}")
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

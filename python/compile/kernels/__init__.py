@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the Skip2-LoRA reproduction.
+
+Public surface used by the Layer-2 model (``compile.model``):
+
+* :func:`fc.fc` — differentiable FC layer (Eq. 1-4).
+* :func:`skip_lora.lora_pair` / :func:`skip_lora.skip_lora_delta` —
+  differentiable fused LoRA adapters (Eq. 7-17).
+* :func:`batchnorm.bn_inference` — frozen-BN (+ReLU) epilogue.
+
+All kernels run ``interpret=True`` on this image (see ``common.INTERPRET``).
+"""
+
+from . import batchnorm, common, fc, ref, skip_lora  # noqa: F401

@@ -1,0 +1,63 @@
+"""Pallas batch-normalization (inference) kernel.
+
+During every fine-tuning method for which Skip-Cache is valid (FT-Last,
+LoRA-Last, Skip-LoRA/Skip2-LoRA) the BN layers are *frozen*: they run in
+inference mode with running statistics, which is required for cached
+activations to stay valid across epochs (paper §4.2 validity argument and
+DESIGN.md decision 5).
+
+Inference BN is an affine map per feature. The wrapper folds
+(gamma, beta, mean, var) into (scale, shift) once — these are constants of
+the whole fine-tuning run — and the kernel performs the fused
+``y = max(x * scale + shift, 0)`` epilogue (VPU-only, no MXU), optionally
+without the ReLU for the rare BN-without-activation placement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK_B, BLOCK_M, INTERPRET, ceil_to, pad2
+
+
+def _bn_relu_kernel(x_ref, s_ref, t_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] * s_ref[...] + t_ref[...], 0.0)
+
+
+def _bn_kernel(x_ref, s_ref, t_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[...] + t_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "eps"))
+def bn_inference(x, gamma, beta, mean, var, relu=False, eps=1e-5):
+    """Frozen-BN forward with optional fused ReLU.
+
+    x: (B, M); gamma/beta/mean/var: (M,).
+    """
+    scale = gamma / jnp.sqrt(var + eps)
+    shift = beta - mean * scale
+
+    bsz, m = x.shape
+    bp, mp = ceil_to(bsz, BLOCK_B), ceil_to(m, BLOCK_M)
+    xp = pad2(x, bp, mp)
+    sp = pad2(scale.reshape(1, -1), 1, mp)
+    tp = pad2(shift.reshape(1, -1), 1, mp)
+
+    grid = (bp // BLOCK_B, mp // BLOCK_M)
+    out = pl.pallas_call(
+        _bn_relu_kernel if relu else _bn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, BLOCK_M), lambda i, j: (i, j)),
+            pl.BlockSpec((1, BLOCK_M), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_M), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, BLOCK_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), x.dtype),
+        interpret=INTERPRET,
+    )(xp, sp, tp)
+    return out[:bsz, :m]

@@ -1,0 +1,57 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+Hardware-adaptation note (paper targets ARM Neon on a Raspberry Pi Zero 2 W;
+we target TPU-style execution per the reproduction brief):
+
+* The paper vectorizes the scalar MAC loop of Algorithm 2 with 4-lane Neon.
+  On TPU the analogous resource is the 128x128 MXU systolic array, so the
+  block shapes below are chosen as multiples of the native (8, 128) f32
+  vreg tile: ``BLOCK_B = 8`` rows (sublanes), ``BLOCK_M = 128`` columns
+  (lanes).
+* The paper's working-set argument — rank-R LoRA intermediates are tiny and
+  stay cache-resident — maps to "the (B, R) ``y_A`` intermediate lives in
+  VMEM scratch and never round-trips to HBM".
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness path and
+real-TPU performance is *estimated* from the BlockSpec footprint (see
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+# Native TPU f32 tile: 8 sublanes x 128 lanes.
+BLOCK_B = 8
+BLOCK_M = 128
+
+# interpret=True is mandatory on this image (CPU PJRT); the env knob exists
+# so the same source can be pointed at a real TPU for compile-only checks.
+INTERPRET = os.environ.get("SKIP2LORA_PALLAS_INTERPRET", "1") != "0"
+
+
+def ceil_to(value: int, multiple: int) -> int:
+    """Round ``value`` up to the next multiple of ``multiple``."""
+    return ((value + multiple - 1) // multiple) * multiple
+
+
+def pad2(x, rows: int, cols: int):
+    """Zero-pad a rank-2 array up to (rows, cols)."""
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def vmem_bytes(*shapes, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for a set of block shapes."""
+    total = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        total += n * dtype_bytes
+    return total

@@ -1,0 +1,131 @@
+"""Pallas FC-layer kernels (paper §2, Eq. 1-4; compute types of Table 1).
+
+The forward kernel computes ``y = x @ W + b`` (Eq. 1 without the
+activation), tiled over (batch, output-feature) blocks so each grid step
+feeds the MXU one (BLOCK_B, N) x (N, BLOCK_M) matmul whose operands fit
+VMEM (N <= 561 in all paper configurations: the largest weight block is
+561 x 128 x 4 B = 287 KiB, far under the ~16 MiB VMEM budget, which leaves
+room for double-buffering the HBM->VMEM pipeline).
+
+The backward kernel implements the full ``FC_ywbx`` compute type:
+
+    gW = x^T gy    (Eq. 2)
+    gb = sum_B gy  (Eq. 3)
+    gx = gy W^T    (Eq. 4)
+
+``fc`` is exposed as a ``jax.custom_vjp`` so that jax autodiff *through the
+Pallas kernel* uses exactly the paper's backward equations — this is what
+lets Layer 2 lower whole train steps (pretrain / FT-All-LoRA) that contain
+Pallas ops.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK_B, BLOCK_M, INTERPRET, ceil_to, pad2
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fc_fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    # One (BLOCK_B, BLOCK_M) output tile: full-N contraction on the MXU,
+    # bias add on the VPU. All operands are VMEM-resident blocks.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...]) + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fc_forward(x, w, b):
+    """``y = x @ W + b`` via the tiled Pallas kernel.
+
+    x: (B, N) f32, w: (N, M) f32, b: (M,) f32 -> (B, M) f32.
+    Shapes need not be tile-aligned; inputs are zero-padded to the
+    (BLOCK_B, BLOCK_M) grid and the result is sliced back.
+    """
+    bsz, n = x.shape
+    m = w.shape[1]
+    bp, mp = ceil_to(bsz, BLOCK_B), ceil_to(m, BLOCK_M)
+    xp = pad2(x, bp, n)
+    wp = pad2(w, n, mp)
+    b2 = pad2(b.reshape(1, -1), 1, mp)
+
+    grid = (bp // BLOCK_B, mp // BLOCK_M)
+    out = pl.pallas_call(
+        _fc_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, BLOCK_M), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_M), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, BLOCK_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), x.dtype),
+        interpret=INTERPRET,
+    )(xp, wp, b2)
+    return out[:bsz, :m]
+
+
+# ---------------------------------------------------------------------------
+# backward (FC_ywbx)
+# ---------------------------------------------------------------------------
+
+def _fc_bwd_kernel(x_ref, w_ref, gy_ref, gw_ref, gb_ref, gx_ref):
+    # Whole-problem block: with N,M <= 561 and B = 20, all three gradient
+    # matmuls fit a single VMEM residency; the three products share the
+    # gy block so it is loaded from HBM exactly once.
+    x = x_ref[...]
+    gy = gy_ref[...]
+    gw_ref[...] = jnp.dot(x.T, gy)           # Eq. 2
+    gb_ref[...] = jnp.sum(gy, axis=0, keepdims=True)  # Eq. 3
+    gx_ref[...] = jnp.dot(gy, w_ref[...].T)  # Eq. 4
+
+
+def fc_backward(x, w, gy):
+    """Gradients (gW, gb, gx) of the FC layer — the ``FC_ywbx`` kernel."""
+    bsz, n = x.shape
+    m = w.shape[1]
+    bp = ceil_to(bsz, BLOCK_B)
+    np_, mp = ceil_to(n, BLOCK_M), ceil_to(m, BLOCK_M)
+    xp = pad2(x, bp, np_)
+    wp = pad2(w, np_, mp)
+    gyp = pad2(gy, bp, mp)
+
+    gw, gb, gx = pl.pallas_call(
+        _fc_bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((np_, mp), x.dtype),
+            jax.ShapeDtypeStruct((1, mp), x.dtype),
+            jax.ShapeDtypeStruct((bp, np_), x.dtype),
+        ),
+        interpret=INTERPRET,
+    )(xp, wp, gyp)
+    return gw[:n, :m], gb[0, :m], gx[:bsz, :n]
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp wrapper: autodiff through the kernel = paper's equations
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fc(x, w, b):
+    """Differentiable FC layer backed by the Pallas kernels."""
+    return fc_forward(x, w, b)
+
+
+def _fc_vjp_fwd(x, w, b):
+    return fc_forward(x, w, b), (x, w)
+
+
+def _fc_vjp_bwd(res, gy):
+    x, w = res
+    gw, gb, gx = fc_backward(x, w, gy)
+    return gx, gw, gb
+
+
+fc.defvjp(_fc_vjp_fwd, _fc_vjp_bwd)

@@ -1,0 +1,124 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+Every Pallas kernel in this package has an exact reference implementation
+here, written with plain jax.numpy.  pytest compares kernel-vs-ref with
+``assert_allclose`` over a hypothesis sweep of shapes and dtypes; this file
+is the *specification*, the kernels are the *implementation*.
+
+Equation numbers refer to the Skip2-LoRA paper (Matsutani et al., 2024).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# FC layer (paper §2, Eq. 1-4)
+# ---------------------------------------------------------------------------
+
+def fc_forward(x, w, b):
+    """Eq. 1 without the activation: ``y = x @ W + b``.
+
+    x: (B, N), w: (N, M), b: (M,) -> (B, M)
+    """
+    return x @ w + b
+
+
+def fc_backward(x, w, gy):
+    """Eq. 2-4: gradients of an ``FC_ywbx`` layer.
+
+    Returns (gW, gb, gx) = (x^T gy, sum_B gy, gy W^T).
+    """
+    gw = x.T @ gy
+    gb = jnp.sum(gy, axis=0)
+    gx = gy @ w.T
+    return gw, gb, gx
+
+
+# ---------------------------------------------------------------------------
+# LoRA adapter (paper §2, Eq. 7-14)
+# ---------------------------------------------------------------------------
+
+def lora_forward(x, wa, wb):
+    """Eq. 7-8: ``y_A = x W_A``; ``y_B = y_A W_B``.
+
+    Returns (y_B, y_A); y_A is the rank-R residual needed by the backward
+    pass (Eq. 10).
+    x: (B, N), wa: (N, R), wb: (R, M).
+    """
+    ya = x @ wa
+    yb = ya @ wb
+    return yb, ya
+
+
+def lora_backward(x, ya, wa, wb, gy):
+    """Eq. 10-13: gradients of a ``LoRA_ywx`` adapter.
+
+    gW_B = y_A^T gy          (Eq. 10)
+    gx_B = gy W_B^T          (Eq. 11)
+    gW_A = x^T gx_B          (Eq. 12)
+    gx_A = gx_B W_A^T        (Eq. 13)
+
+    Returns (gW_A, gW_B, gx_A).  A ``LoRA_yw`` adapter (Table 1) simply
+    discards gx_A.
+    """
+    gwb = ya.T @ gy
+    gxb = gy @ wb.T
+    gwa = x.T @ gxb
+    gxa = gxb @ wa.T
+    return gwa, gwb, gxa
+
+
+def skip_lora_delta(xs, was, wbs):
+    """Eq. 17 adapter sum: ``sum_k x^k W_A^{k-1,n} W_B^{k-1,n}``.
+
+    xs: list of (B, N_k); was: list of (N_k, R); wbs: list of (R, M).
+    """
+    acc = None
+    for x, wa, wb in zip(xs, was, wbs):
+        d = (x @ wa) @ wb
+        acc = d if acc is None else acc + d
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Batch normalization, inference mode (paper Table 2's BN1/BN2)
+# ---------------------------------------------------------------------------
+
+def bn_inference(x, gamma, beta, mean, var, eps=1e-5):
+    """``y = gamma * (x - mean) / sqrt(var + eps) + beta`` with running stats."""
+    inv = gamma / jnp.sqrt(var + eps)
+    return (x - mean) * inv + beta
+
+
+def bn_relu_inference(x, gamma, beta, mean, var, eps=1e-5):
+    """BN (inference) followed by ReLU — the fused hidden-block epilogue."""
+    return jnp.maximum(bn_inference(x, gamma, beta, mean, var, eps), 0.0)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Softmax cross-entropy (paper's CEL)
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits, labels_onehot):
+    """Mean softmax cross-entropy over the batch.
+
+    logits: (B, M), labels_onehot: (B, M) -> scalar
+    """
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=1, keepdims=True))
+    logp = logits - logz
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=1))
+
+
+def softmax_cross_entropy_grad(logits, labels_onehot):
+    """d(mean CE)/d(logits) = (softmax(logits) - labels) / B."""
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits)
+    p = e / jnp.sum(e, axis=1, keepdims=True)
+    return (p - labels_onehot) / logits.shape[0]

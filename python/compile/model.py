@@ -1,0 +1,222 @@
+"""Layer-2 jax model: the paper's 3-layer DNN and its train/predict steps.
+
+Network (paper §3.1 / §5.1, Figure 1):
+
+    block1: FC(N -> H)  [+LoRA]  BN  ReLU
+    block2: FC(H -> H)  [+LoRA]  BN  ReLU
+    block3: FC(H -> M)  [+ Skip-LoRA adapter sum]   -> softmax CE
+
+with N/M = 256/3 (Fan: Damage1, Damage2) or 561/6 (HAR), H = 96, LoRA rank
+R = 4, batch B = 20 — exactly the paper's configuration.
+
+Three jit-able entry points are AOT-lowered per dataset shape by ``aot.py``:
+
+* :func:`cache_populate` — the frozen forward producing the per-sample
+  activations (x^2, x^3, c^3) that Layer-3's Skip-Cache stores (paper §4.2,
+  incl. footnote 1: hidden layers cache post-BN/ReLU outputs, the last layer
+  caches the pre-adapter FC output).
+* :func:`skip2_train_step` — Algorithm 1 lines 8-10: the Skip2-LoRA train
+  step that runs *entirely from cached activations*. Its lowered HLO
+  contains NO (N x H) or (H x H) matmul — that is the Skip-Cache saving
+  expressed at graph level (asserted by ``tests/test_aot.py``).
+* :func:`predict` — frozen forward + adapter sum, for serving.
+* :func:`pretrain_step` — full backprop (FT-All) used for the §5.2 step-1
+  protocol; BN runs in training mode with batch statistics. Autodiff flows
+  through the Pallas custom-vjp kernels.
+
+Parameter flattening order (the rust runtime passes literals positionally;
+``aot.py`` writes the same order into artifacts/manifest.json):
+
+    FROZEN = [w1,b1,g1,beta1,mean1,var1, w2,b2,g2,beta2,mean2,var2, w3,b3]
+    LORA   = [wa1,wb1, wa2,wb2, wa3,wb3]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import batchnorm, ref, skip_lora
+from .kernels.fc import fc
+
+FROZEN_NAMES = (
+    "w1", "b1", "g1", "beta1", "mean1", "var1",
+    "w2", "b2", "g2", "beta2", "mean2", "var2",
+    "w3", "b3",
+)
+LORA_NAMES = ("wa1", "wb1", "wa2", "wb2", "wa3", "wb3")
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_frozen(key, n_in: int, hidden: int, n_out: int):
+    """He-uniform FC init + identity BN, as a dict keyed by FROZEN_NAMES."""
+    ks = jax.random.split(key, 3)
+
+    def he(k, fan_in, shape):
+        lim = jnp.sqrt(6.0 / fan_in)
+        return jax.random.uniform(k, shape, minval=-lim, maxval=lim)
+
+    return {
+        "w1": he(ks[0], n_in, (n_in, hidden)), "b1": jnp.zeros(hidden),
+        "g1": jnp.ones(hidden), "beta1": jnp.zeros(hidden),
+        "mean1": jnp.zeros(hidden), "var1": jnp.ones(hidden),
+        "w2": he(ks[1], hidden, (hidden, hidden)), "b2": jnp.zeros(hidden),
+        "g2": jnp.ones(hidden), "beta2": jnp.zeros(hidden),
+        "mean2": jnp.zeros(hidden), "var2": jnp.ones(hidden),
+        "w3": he(ks[2], hidden, (hidden, n_out)), "b3": jnp.zeros(n_out),
+    }
+
+
+def init_lora(key, n_in: int, hidden: int, n_out: int, rank: int = 4):
+    """Standard LoRA init: W_A ~ N(0, 1/N), W_B = 0 (adapters start as 0)."""
+    ks = jax.random.split(key, 3)
+    return {
+        "wa1": jax.random.normal(ks[0], (n_in, rank)) / jnp.sqrt(n_in),
+        "wb1": jnp.zeros((rank, n_out)),
+        "wa2": jax.random.normal(ks[1], (hidden, rank)) / jnp.sqrt(hidden),
+        "wb2": jnp.zeros((rank, n_out)),
+        "wa3": jax.random.normal(ks[2], (hidden, rank)) / jnp.sqrt(hidden),
+        "wb3": jnp.zeros((rank, n_out)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# frozen forward: the Skip-Cache populate path (Algorithm 1 line 6-7)
+# ---------------------------------------------------------------------------
+
+def cache_populate(frozen: dict, x):
+    """Frozen forward; returns the activations Layer-3 caches.
+
+    Returns (x2, x3, c3):
+      x2 = ReLU(BN1(FC1(x)))   — input feature map of layer 2
+      x3 = ReLU(BN2(FC2(x2)))  — input feature map of layer 3
+      c3 = FC3(x3)             — last layer's pre-adapter output (c_i^n)
+    """
+    h1 = fc(x, frozen["w1"], frozen["b1"])
+    x2 = batchnorm.bn_inference(
+        h1, frozen["g1"], frozen["beta1"], frozen["mean1"], frozen["var1"],
+        relu=True, eps=BN_EPS)
+    h2 = fc(x2, frozen["w2"], frozen["b2"])
+    x3 = batchnorm.bn_inference(
+        h2, frozen["g2"], frozen["beta2"], frozen["mean2"], frozen["var2"],
+        relu=True, eps=BN_EPS)
+    c3 = fc(x3, frozen["w3"], frozen["b3"])
+    return x2, x3, c3
+
+
+# ---------------------------------------------------------------------------
+# Skip2-LoRA cached train step (Algorithm 1 lines 8-10)
+# ---------------------------------------------------------------------------
+
+def skip2_logits(lora: dict, x1, x2, x3, c3):
+    """y^n = c^n + sum_k x^k W_A^k W_B^k (Eq. 17, cached form)."""
+    delta = skip_lora.skip_lora_delta(
+        [x1, x2, x3],
+        [lora["wa1"], lora["wa2"], lora["wa3"]],
+        [lora["wb1"], lora["wb2"], lora["wb3"]],
+    )
+    return c3 + delta
+
+
+def skip2_loss(lora: dict, x1, x2, x3, c3, y_onehot):
+    return ref.softmax_cross_entropy(skip2_logits(lora, x1, x2, x3, c3), y_onehot)
+
+
+def skip2_train_step(lora: dict, x1, x2, x3, c3, y_onehot, lr):
+    """One SGD step on the six adapter matrices, from cached activations.
+
+    Backward flows only through the Pallas ``lora_pair`` custom-vjp (the
+    ``LoRA_yw`` compute type): no frozen-layer matmul appears anywhere.
+    Returns (loss, new_lora).
+    """
+    loss, grads = jax.value_and_grad(skip2_loss)(lora, x1, x2, x3, c3, y_onehot)
+    new = {k: lora[k] - lr * grads[k] for k in lora}
+    return loss, new
+
+
+# ---------------------------------------------------------------------------
+# predict (serving path)
+# ---------------------------------------------------------------------------
+
+def predict(frozen: dict, lora: dict, x):
+    """Frozen forward + adapter sum -> logits (B, M)."""
+    x2, x3, c3 = cache_populate(frozen, x)
+    return skip2_logits(lora, x, x2, x3, c3)
+
+
+# ---------------------------------------------------------------------------
+# FT-All pretrain step (§5.2 protocol step 1)
+# ---------------------------------------------------------------------------
+
+def _bn_train(x, gamma, beta, mean, var):
+    """Training-mode BN: batch statistics + running-stat update.
+
+    Returns (y, new_mean, new_var). Differentiable jnp (Layer-2 code);
+    inference BN is the frozen Pallas kernel instead.
+    """
+    mu = jnp.mean(x, axis=0)
+    sig2 = jnp.var(x, axis=0)
+    y = gamma * (x - mu) / jnp.sqrt(sig2 + BN_EPS) + beta
+    new_mean = (1.0 - BN_MOMENTUM) * mean + BN_MOMENTUM * mu
+    bsz = x.shape[0]
+    unbiased = sig2 * bsz / jnp.maximum(bsz - 1, 1)
+    new_var = (1.0 - BN_MOMENTUM) * var + BN_MOMENTUM * unbiased
+    return y, new_mean, new_var
+
+
+def _pretrain_loss(trainable: dict, stats: dict, x, y_onehot):
+    h1 = fc(x, trainable["w1"], trainable["b1"])
+    a1, m1, v1 = _bn_train(h1, trainable["g1"], trainable["beta1"],
+                           stats["mean1"], stats["var1"])
+    x2 = ref.relu(a1)
+    h2 = fc(x2, trainable["w2"], trainable["b2"])
+    a2, m2, v2 = _bn_train(h2, trainable["g2"], trainable["beta2"],
+                           stats["mean2"], stats["var2"])
+    x3 = ref.relu(a2)
+    logits = fc(x3, trainable["w3"], trainable["b3"])
+    loss = ref.softmax_cross_entropy(logits, y_onehot)
+    return loss, {"mean1": m1, "var1": v1, "mean2": m2, "var2": v2}
+
+
+def pretrain_step(frozen: dict, x, y_onehot, lr):
+    """One FT-All SGD step over all weights/biases/BN affine params.
+
+    Returns (loss, new_frozen) where new_frozen includes updated running
+    statistics. Autodiff goes through the Pallas FC custom-vjp (Eq. 2-4).
+    """
+    trainable = {k: frozen[k] for k in
+                 ("w1", "b1", "g1", "beta1", "w2", "b2", "g2", "beta2", "w3", "b3")}
+    stats = {k: frozen[k] for k in ("mean1", "var1", "mean2", "var2")}
+    (loss, new_stats), grads = jax.value_and_grad(_pretrain_loss, has_aux=True)(
+        trainable, stats, x, y_onehot)
+    new = dict(frozen)
+    for k in trainable:
+        new[k] = trainable[k] - lr * grads[k]
+    new.update(new_stats)
+    return loss, new
+
+
+# ---------------------------------------------------------------------------
+# flattening helpers shared with aot.py and the pytest suite
+# ---------------------------------------------------------------------------
+
+def frozen_to_list(frozen: dict):
+    return [frozen[k] for k in FROZEN_NAMES]
+
+
+def frozen_from_list(vals):
+    return dict(zip(FROZEN_NAMES, vals))
+
+
+def lora_to_list(lora: dict):
+    return [lora[k] for k in LORA_NAMES]
+
+
+def lora_from_list(vals):
+    return dict(zip(LORA_NAMES, vals))

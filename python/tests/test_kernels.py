@@ -1,0 +1,201 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps the shape space (batch, feature dims, rank) so the
+padding/tiling logic in the kernels is exercised on non-tile-aligned
+shapes, tile-aligned shapes, and degenerate (size-1) axes alike.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import batchnorm, fc, ref, skip_lora
+
+# CPU interpret mode is slow-ish; keep examples bounded but meaningful.
+COMMON = dict(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=160)
+batches = st.integers(min_value=1, max_value=33)
+ranks = st.integers(min_value=1, max_value=8)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rnd(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, k):
+    return jax.random.split(jax.random.PRNGKey(seed), k)
+
+
+# ---------------------------------------------------------------------------
+# FC kernels (Eq. 1-4)
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(b=batches, n=dims, m=dims, seed=seeds)
+def test_fc_forward_matches_ref(b, n, m, seed):
+    kx, kw, kb = keys(seed, 3)
+    x, w, bias = rnd(kx, b, n), rnd(kw, n, m), rnd(kb, m)
+    got = fc.fc_forward(x, w, bias)
+    want = ref.fc_forward(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(**COMMON)
+@given(b=batches, n=dims, m=dims, seed=seeds)
+def test_fc_backward_matches_ref(b, n, m, seed):
+    kx, kw, kg = keys(seed, 3)
+    x, w, gy = rnd(kx, b, n), rnd(kw, n, m), rnd(kg, b, m)
+    gw, gb, gx = fc.fc_backward(x, w, gy)
+    rw, rb, rx = ref.fc_backward(x, w, gy)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb, rb, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(b=batches, n=dims, m=dims, seed=seeds)
+def test_fc_custom_vjp_matches_autodiff(b, n, m, seed):
+    """Autodiff THROUGH the Pallas kernel == autodiff of the jnp oracle."""
+    kx, kw, kb = keys(seed, 3)
+    x, w, bias = rnd(kx, b, n), rnd(kw, n, m), rnd(kb, m)
+
+    def via_kernel(x, w, bias):
+        return jnp.sum(jnp.tanh(fc.fc(x, w, bias)))
+
+    def via_ref(x, w, bias):
+        return jnp.sum(jnp.tanh(ref.fc_forward(x, w, bias)))
+
+    g1 = jax.grad(via_kernel, argnums=(0, 1, 2))(x, w, bias)
+    g2 = jax.grad(via_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, c in zip(g1, g2):
+        np.testing.assert_allclose(a, c, rtol=1e-3, atol=1e-4)
+
+
+def test_fc_forward_paper_shapes():
+    """The exact paper configurations (Fan 256->96, HAR 561->96, B=20)."""
+    for n, h in ((256, 96), (561, 96), (96, 96), (96, 3), (96, 6)):
+        kx, kw, kb = keys(n * 7 + h, 3)
+        x, w, bias = rnd(kx, 20, n), rnd(kw, n, h), rnd(kb, h)
+        # rtol is loose-ish: the kernel's padded-tile accumulation order
+        # differs from jnp's dot for long (561) contractions.
+        np.testing.assert_allclose(
+            fc.fc_forward(x, w, bias), ref.fc_forward(x, w, bias),
+            rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LoRA kernels (Eq. 7-14, Eq. 17)
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(b=batches, n=dims, m=dims, r=ranks, seed=seeds)
+def test_lora_forward_matches_ref(b, n, m, r, seed):
+    kx, ka, kb = keys(seed, 3)
+    x, wa, wb = rnd(kx, b, n), rnd(ka, n, r), rnd(kb, r, m)
+    yb, ya = skip_lora.lora_forward(x, wa, wb)
+    ryb, rya = ref.lora_forward(x, wa, wb)
+    np.testing.assert_allclose(yb, ryb, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ya, rya, rtol=1e-4, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(b=batches, n=dims, m=dims, r=ranks, seed=seeds)
+def test_lora_backward_matches_ref(b, n, m, r, seed):
+    kx, ka, kb, kg = keys(seed, 4)
+    x, wa, wb, gy = rnd(kx, b, n), rnd(ka, n, r), rnd(kb, r, m), rnd(kg, b, m)
+    ya = x @ wa
+    got = skip_lora.lora_backward(x, ya, wa, wb, gy)
+    want = ref.lora_backward(x, ya, wa, wb, gy)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(g, w_, rtol=1e-3, atol=1e-3)
+
+
+@settings(**COMMON)
+@given(b=batches, n=dims, m=st.integers(1, 16), r=ranks, seed=seeds)
+def test_lora_custom_vjp_matches_autodiff(b, n, m, r, seed):
+    kx, ka, kb = keys(seed, 3)
+    x, wa, wb = rnd(kx, b, n), rnd(ka, n, r), rnd(kb, r, m)
+
+    f_kernel = lambda wa, wb: jnp.sum(skip_lora.lora_pair(x, wa, wb) ** 2)
+    f_ref = lambda wa, wb: jnp.sum(ref.lora_forward(x, wa, wb)[0] ** 2)
+    g1 = jax.grad(f_kernel, argnums=(0, 1))(wa, wb)
+    g2 = jax.grad(f_ref, argnums=(0, 1))(wa, wb)
+    np.testing.assert_allclose(g1[0], g2[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(g1[1], g2[1], rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 24), m=st.integers(1, 8), r=ranks, seed=seeds)
+def test_skip_lora_delta_matches_ref(b, m, r, seed):
+    """Eq. 17 with heterogeneous N_k, like the real 3-layer network."""
+    ns = (37, 96, 96)
+    ks = keys(seed, 9)
+    xs = [rnd(ks[i], b, n) for i, n in enumerate(ns)]
+    was = [rnd(ks[3 + i], n, r) for i, n in enumerate(ns)]
+    wbs = [rnd(ks[6 + i], r, m) for i in range(3)]
+    got = skip_lora.skip_lora_delta(xs, was, wbs)
+    want = ref.skip_lora_delta(xs, was, wbs)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_lora_zero_wb_is_identity():
+    """Standard LoRA init (W_B = 0) must leave logits untouched."""
+    kx, ka = keys(0, 2)
+    x, wa = rnd(kx, 20, 256), rnd(ka, 256, 4)
+    wb = jnp.zeros((4, 3))
+    yb, _ = skip_lora.lora_forward(x, wa, wb)
+    np.testing.assert_array_equal(np.asarray(yb), np.zeros((20, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm kernel
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(b=batches, m=dims, relu=st.booleans(), seed=seeds)
+def test_bn_inference_matches_ref(b, m, relu, seed):
+    kx, kg, kb, km, kv = keys(seed, 5)
+    x = rnd(kx, b, m)
+    gamma, beta, mean = rnd(kg, m), rnd(kb, m), rnd(km, m)
+    var = jax.random.uniform(kv, (m,), minval=0.1, maxval=2.0)
+    got = batchnorm.bn_inference(x, gamma, beta, mean, var, relu=relu)
+    if relu:
+        want = ref.bn_relu_inference(x, gamma, beta, mean, var)
+    else:
+        want = ref.bn_inference(x, gamma, beta, mean, var)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bn_relu_clamps_negative():
+    x = jnp.array([[-5.0, 5.0]], dtype=jnp.float32)
+    ones, zeros = jnp.ones(2), jnp.zeros(2)
+    y = batchnorm.bn_inference(x, ones, zeros, zeros, ones, relu=True)
+    assert float(y[0, 0]) == 0.0
+    assert float(y[0, 1]) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# loss oracle sanity (used as the spec by both L2 and the rust engine)
+# ---------------------------------------------------------------------------
+
+@settings(**COMMON)
+@given(b=st.integers(1, 32), m=st.integers(2, 10), seed=seeds)
+def test_softmax_ce_grad_matches_autodiff(b, m, seed):
+    kx, kl = keys(seed, 2)
+    logits = rnd(kx, b, m)
+    labels = jax.nn.one_hot(
+        jax.random.randint(kl, (b,), 0, m), m, dtype=jnp.float32)
+    g1 = ref.softmax_cross_entropy_grad(logits, labels)
+    g2 = jax.grad(lambda l: ref.softmax_cross_entropy(l, labels))(logits)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_ce_uniform_is_log_m():
+    logits = jnp.zeros((4, 6))
+    labels = jax.nn.one_hot(jnp.array([0, 1, 2, 3]), 6, dtype=jnp.float32)
+    loss = ref.softmax_cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(loss), float(np.log(6.0)), rtol=1e-6)

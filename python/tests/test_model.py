@@ -1,0 +1,159 @@
+"""Layer-2 correctness: the 3-layer model, cached train step, pretrain step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+FAN = dict(n_in=256, hidden=96, n_out=3)
+HAR = dict(n_in=561, hidden=96, n_out=6)
+B = 20
+
+
+def make(key_seed, n_in, hidden, n_out, rank=4):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key_seed))
+    frozen = model.init_frozen(k1, n_in, hidden, n_out)
+    lora = model.init_lora(k2, n_in, hidden, n_out, rank)
+    return frozen, lora
+
+
+def batch(key_seed, n_in, n_out, b=B):
+    kx, ky = jax.random.split(jax.random.PRNGKey(1000 + key_seed))
+    x = jax.random.normal(kx, (b, n_in), dtype=jnp.float32)
+    y = jax.nn.one_hot(jax.random.randint(ky, (b,), 0, n_out), n_out,
+                       dtype=jnp.float32)
+    return x, y
+
+
+def ref_forward(frozen, x):
+    """Pure-jnp mirror of cache_populate (the specification)."""
+    h1 = ref.fc_forward(x, frozen["w1"], frozen["b1"])
+    x2 = ref.bn_relu_inference(h1, frozen["g1"], frozen["beta1"],
+                               frozen["mean1"], frozen["var1"])
+    h2 = ref.fc_forward(x2, frozen["w2"], frozen["b2"])
+    x3 = ref.bn_relu_inference(h2, frozen["g2"], frozen["beta2"],
+                               frozen["mean2"], frozen["var2"])
+    c3 = ref.fc_forward(x3, frozen["w3"], frozen["b3"])
+    return x2, x3, c3
+
+
+@pytest.mark.parametrize("cfg", [FAN, HAR], ids=["fan", "har"])
+def test_cache_populate_matches_ref(cfg):
+    frozen, _ = make(0, **cfg)
+    x, _ = batch(0, cfg["n_in"], cfg["n_out"])
+    got = model.cache_populate(frozen, x)
+    want = ref_forward(frozen, x)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [FAN, HAR], ids=["fan", "har"])
+def test_fresh_lora_is_identity(cfg):
+    """W_B = 0 at init => logits == c3 exactly (decision 4 in DESIGN.md)."""
+    frozen, lora = make(1, **cfg)
+    x, _ = batch(1, cfg["n_in"], cfg["n_out"])
+    x2, x3, c3 = model.cache_populate(frozen, x)
+    logits = model.skip2_logits(lora, x, x2, x3, c3)
+    np.testing.assert_allclose(logits, c3, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", [FAN, HAR], ids=["fan", "har"])
+def test_predict_equals_cached_path(cfg):
+    """Serving path == cache path + adapter sum (cache validity invariant)."""
+    frozen, lora = make(2, **cfg)
+    lora = {k: v + 0.05 for k, v in lora.items()}  # non-trivial adapters
+    x, _ = batch(2, cfg["n_in"], cfg["n_out"])
+    x2, x3, c3 = model.cache_populate(frozen, x)
+    via_cache = model.skip2_logits(lora, x, x2, x3, c3)
+    direct = model.predict(frozen, lora, x)
+    np.testing.assert_allclose(direct, via_cache, rtol=1e-5, atol=1e-5)
+
+
+def test_skip2_step_decreases_loss():
+    frozen, lora = make(3, **FAN)
+    x, y = batch(3, FAN["n_in"], FAN["n_out"])
+    x2, x3, c3 = model.cache_populate(frozen, x)
+    loss0, lora1 = model.skip2_train_step(lora, x, x2, x3, c3, y, 0.1)
+    # iterate a few steps on the same batch: loss must drop monotonically-ish
+    lora_t, losses = lora1, [float(loss0)]
+    for _ in range(10):
+        l, lora_t = model.skip2_train_step(lora_t, x, x2, x3, c3, y, 0.1)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_skip2_step_grads_match_pure_jnp():
+    """The lowered step (Pallas custom-vjp) == autodiff of the jnp spec."""
+    frozen, lora = make(4, **FAN)
+    x, y = batch(4, FAN["n_in"], FAN["n_out"])
+    x2, x3, c3 = model.cache_populate(frozen, x)
+
+    def jnp_loss(lora):
+        delta = ref.skip_lora_delta(
+            [x, x2, x3],
+            [lora["wa1"], lora["wa2"], lora["wa3"]],
+            [lora["wb1"], lora["wb2"], lora["wb3"]])
+        return ref.softmax_cross_entropy(c3 + delta, y)
+
+    g_kernel = jax.grad(model.skip2_loss)(lora, x, x2, x3, c3, y)
+    g_ref = jax.grad(jnp_loss)(lora)
+    for k in lora:
+        np.testing.assert_allclose(g_kernel[k], g_ref[k], rtol=1e-3,
+                                   atol=1e-4, err_msg=k)
+
+
+def test_skip2_step_only_touches_lora():
+    """Frozen params are not even inputs of the cached step — by construction
+    the method cannot update them (paper §4.2 validity argument)."""
+    frozen, lora = make(5, **FAN)
+    x, y = batch(5, FAN["n_in"], FAN["n_out"])
+    x2, x3, c3 = model.cache_populate(frozen, x)
+    _, new = model.skip2_train_step(lora, x, x2, x3, c3, y, 0.05)
+    assert set(new) == set(model.LORA_NAMES)
+    changed = [k for k in new if not np.allclose(new[k], lora[k])]
+    assert "wb1" in changed and "wb2" in changed and "wb3" in changed
+
+
+def test_pretrain_step_decreases_loss_and_updates_stats():
+    frozen, _ = make(6, **FAN)
+    x, y = batch(6, FAN["n_in"], FAN["n_out"])
+    loss0, f1 = model.pretrain_step(frozen, x, y, 0.05)
+    losses = [float(loss0)]
+    ft = f1
+    for _ in range(15):
+        l, ft = model.pretrain_step(ft, x, y, 0.05)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.8, losses
+    # running stats moved away from init
+    assert not np.allclose(ft["mean1"], frozen["mean1"])
+    assert not np.allclose(ft["var1"], frozen["var1"])
+
+
+def test_pretrain_reaches_separable_accuracy():
+    """On a linearly-separable toy problem FT-All should fit quickly."""
+    frozen, _ = make(7, n_in=16, hidden=32, n_out=3)
+    key = jax.random.PRNGKey(7)
+    centers = jax.random.normal(key, (3, 16)) * 3.0
+    labels = jnp.tile(jnp.arange(3), 40)[:B]
+    x = centers[labels] + 0.1 * jax.random.normal(key, (B, 16))
+    y = jax.nn.one_hot(labels, 3, dtype=jnp.float32)
+    ft = frozen
+    for _ in range(60):
+        _, ft = model.pretrain_step(ft, x, y, 0.1)
+    x2, x3, c3 = model.cache_populate(ft, x)
+    acc = float(jnp.mean((jnp.argmax(c3, 1) == labels).astype(jnp.float32)))
+    assert acc >= 0.9, acc
+
+
+def test_flatten_roundtrip():
+    frozen, lora = make(8, **FAN)
+    f2 = model.frozen_from_list(model.frozen_to_list(frozen))
+    l2 = model.lora_from_list(model.lora_to_list(lora))
+    assert set(f2) == set(frozen) and set(l2) == set(lora)
+    for k in frozen:
+        np.testing.assert_array_equal(frozen[k], f2[k])
+    for k in lora:
+        np.testing.assert_array_equal(lora[k], l2[k])

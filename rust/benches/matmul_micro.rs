@@ -1,0 +1,72 @@
+//! Microbenchmark: the tensor kernels on the paper's exact shapes
+//! (B=20, dims 256/561-96-96-3/6, LoRA rank 4), scalar vs blocked —
+//! the L3 hot-path roofline used by EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench matmul_micro`
+
+use skip2lora::bench::Bencher;
+use skip2lora::tensor::{ops, ops::Backend, Mat};
+use skip2lora::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut b = Bencher::from_env();
+
+    b.header("FC forward  y = xW + b  (paper shapes)");
+    for &(bb, n, m, label) in &[
+        (20usize, 256usize, 96usize, "fan FC1 20x256x96"),
+        (20, 561, 96, "har FC1 20x561x96"),
+        (20, 96, 96, "FC2 20x96x96"),
+        (20, 96, 3, "fan FC3 20x96x3"),
+        (1, 256, 96, "predict FC1 1x256x96"),
+    ] {
+        let x = rand_mat(&mut rng, bb, n);
+        let w = rand_mat(&mut rng, n, m);
+        let bias = vec![0.1f32; m];
+        let mut y = Mat::zeros(bb, m);
+        b.bench(&format!("{label} scalar"), || {
+            ops::matmul_bias(Backend::Scalar, &x, &w, &bias, &mut y);
+            std::hint::black_box(&y);
+        });
+        b.bench(&format!("{label} blocked"), || {
+            ops::matmul_bias(Backend::Blocked, &x, &w, &bias, &mut y);
+            std::hint::black_box(&y);
+        });
+    }
+
+    b.header("backward kernels (Eq. 2 and Eq. 4 shapes)");
+    {
+        let x = rand_mat(&mut rng, 20, 256);
+        let gy = rand_mat(&mut rng, 20, 96);
+        let mut gw = Mat::zeros(256, 96);
+        b.bench("gW = xT gy 20x256x96 blocked", || {
+            ops::matmul_at_b(Backend::Blocked, &x, &gy, &mut gw);
+            std::hint::black_box(&gw);
+        });
+        let w = rand_mat(&mut rng, 256, 96);
+        let mut gx = Mat::zeros(20, 256);
+        b.bench("gx = gy WT 20x96x256 blocked", || {
+            ops::matmul_a_bt(Backend::Blocked, &gy, &w, &mut gx);
+            std::hint::black_box(&gx);
+        });
+    }
+
+    b.header("LoRA adapter pair (rank 4): forward cost vs full FC");
+    {
+        let x = rand_mat(&mut rng, 20, 256);
+        let wa = rand_mat(&mut rng, 256, 4);
+        let wb = rand_mat(&mut rng, 4, 3);
+        let mut ya = Mat::zeros(20, 4);
+        let mut yb = Mat::zeros(20, 3);
+        b.bench("lora fwd 20x256x4x3 blocked", || {
+            ops::matmul(Backend::Blocked, &x, &wa, &mut ya);
+            ops::matmul(Backend::Blocked, &ya, &wb, &mut yb);
+            std::hint::black_box(&yb);
+        });
+    }
+    println!("\nshape check: LoRA pair ≈ R/M of the FC cost (paper §4.1: adapters are nearly free).");
+}

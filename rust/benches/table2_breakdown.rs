@@ -1,0 +1,21 @@
+//! Bench: regenerates paper Table 2 — per-layer execution-time breakdown
+//! of FT-All-LoRA forward/backward on Fan and HAR.
+//!
+//! Run: `cargo bench --bench table2_breakdown`
+//! (`SKIP2LORA_BENCH_QUICK=1` shrinks the epoch budget.)
+
+use skip2lora::experiments::{timing, ExpConfig};
+
+fn main() {
+    let quick = std::env::var("SKIP2LORA_BENCH_QUICK").is_ok();
+    let cfg = ExpConfig {
+        trials: 1,
+        epoch_scale: if quick { 0.05 } else { 0.2 },
+        ..Default::default()
+    };
+    println!("regenerating Table 2 (FT-All-LoRA per-layer breakdown)...");
+    let (fwd, bwd) = timing::table2(&cfg);
+    println!("{}", fwd.render());
+    println!("{}", bwd.render());
+    println!("paper shape check: FC1 dominates forward (71.8%/88.6%), FC1+FC2 dominate backward; LoRA/BN/Act are single-digit %.");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerates paper Tables 6 and 7 — execution time per training
+//! batch (forward / backward / weight-update split) and per-sample
+//! prediction, for all eight fine-tuning methods on Fan and HAR.
+//!
+//! Run: `cargo bench --bench table6_7_exec_time`
+
+use skip2lora::experiments::{timing, DatasetId, ExpConfig};
+
+fn main() {
+    let quick = std::env::var("SKIP2LORA_BENCH_QUICK").is_ok();
+    let cfg = ExpConfig {
+        trials: 1,
+        epoch_scale: if quick { 0.05 } else { 0.2 },
+        ..Default::default()
+    };
+    for ds in [DatasetId::Damage1, DatasetId::Har] {
+        println!("{}", timing::table6_7(ds, &cfg).render());
+    }
+    println!("{}", timing::headline(&cfg).render());
+    println!("paper shape check: Skip-LoRA backward ≈ LoRA-Last backward << LoRA-All backward;");
+    println!("Skip2-LoRA forward << Skip-LoRA forward; Skip2-LoRA train@batch ≈ 1/10 of LoRA-All.");
+}

@@ -1,0 +1,164 @@
+//! Measurement harness used by all `cargo bench` targets (`harness =
+//! false`): warmup, calibrated iteration count, mean/σ/p50/p95, throughput
+//! reporting — a deliberately small re-implementation of the criterion
+//! workflow for the offline image.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            self.iters,
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// target total measurement time per benchmark
+    pub budget_ns: u64,
+    /// warmup time
+    pub warmup_ns: u64,
+    /// hard cap on samples kept for percentiles
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            budget_ns: 1_500_000_000,
+            warmup_ns: 200_000_000,
+            max_samples: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            budget_ns: 300_000_000,
+            warmup_ns: 50_000_000,
+            ..Default::default()
+        }
+    }
+
+    /// From env: SKIP2LORA_BENCH_BUDGET_MS overrides the per-bench budget.
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if let Ok(v) = std::env::var("SKIP2LORA_BENCH_BUDGET_MS") {
+            if let Ok(ms) = v.parse::<u64>() {
+                b.budget_ns = ms * 1_000_000;
+                b.warmup_ns = (ms * 1_000_000 / 8).max(10_000_000);
+            }
+        }
+        b
+    }
+
+    /// Measure `f`; one invocation = one sample.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        while (t0.elapsed().as_nanos() as u64) < self.warmup_ns {
+            f();
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed().as_nanos() as u64) < self.budget_ns
+            && samples.len() < self.max_samples
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: stats::mean(&samples),
+            std_ns: stats::std_dev(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(&self, title: &str) {
+        println!("\n=== {title} ===");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p95"
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher {
+            budget_ns: 20_000_000,
+            warmup_ns: 2_000_000,
+            ..Default::default()
+        };
+        let mut x = 0u64;
+        let r = b.bench("spin", || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn format_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

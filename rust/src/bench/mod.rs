@@ -1,0 +1,5 @@
+//! Mini-criterion: the benchmark harness (no `criterion` crate offline).
+
+pub mod harness;
+
+pub use harness::{BenchResult, Bencher};

@@ -1,0 +1,184 @@
+//! Bounded key-value Skip-Cache with LRU eviction.
+//!
+//! Paper §4.3: "if the storage size is strictly limited, a key-value cache
+//! with a limited number of cache entries can be used. In any case, there
+//! is a trade-off between the cache size and performance." This module is
+//! that variant; `skip2lora ablate-cache-size` sweeps the capacity knob to
+//! chart the trade-off.
+//!
+//! LRU is implemented with a HashMap + monotone ticks and a lazily-pruned
+//! min-heap of (tick, key). Amortized O(log n) insert/evict, O(1) hit.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use super::skip_cache::{CacheEntry, CacheStats};
+
+#[derive(Clone, Debug)]
+pub struct BoundedSkipCache {
+    capacity: usize,
+    map: HashMap<usize, (CacheEntry, u64)>, // key -> (entry, last-used tick)
+    /// min-heap over (Reverse(tick), key); stale pairs are skipped on pop
+    heap: BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+    tick: u64,
+    stats: CacheStats,
+    evictions: u64,
+}
+
+impl BoundedSkipCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "capacity must be positive");
+        Self {
+            capacity,
+            map: HashMap::with_capacity(capacity + 1),
+            heap: BinaryHeap::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// O(1) hit (plus heap bookkeeping); refreshes recency.
+    pub fn lookup(&mut self, key: usize) -> Option<&CacheEntry> {
+        let t = self.next_tick();
+        match self.map.get_mut(&key) {
+            Some((_, tick)) => {
+                *tick = t;
+                self.heap.push(std::cmp::Reverse((t, key)));
+                self.stats.hits += 1;
+                self.map.get(&key).map(|(e, _)| e)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: usize, entry: CacheEntry) {
+        let t = self.next_tick();
+        self.map.insert(key, (entry, t));
+        self.heap.push(std::cmp::Reverse((t, key)));
+        while self.map.len() > self.capacity {
+            self.evict_one();
+        }
+    }
+
+    fn evict_one(&mut self) {
+        while let Some(std::cmp::Reverse((tick, key))) = self.heap.pop() {
+            // skip stale heap records (entry was refreshed or replaced)
+            if let Some((_, cur)) = self.map.get(&key) {
+                if *cur == tick {
+                    self.map.remove(&key);
+                    self.evictions += 1;
+                    return;
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains(&self, key: usize) -> bool {
+        self.map.contains_key(&key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(v: f32) -> CacheEntry {
+        CacheEntry { xs: vec![vec![v; 4]], c_n: vec![v] }
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = BoundedSkipCache::new(2);
+        c.insert(1, entry(1.0));
+        c.insert(2, entry(2.0));
+        let _ = c.lookup(1); // 1 is now most recent
+        c.insert(3, entry(3.0)); // evicts 2
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+        assert!(c.contains(3));
+        assert_eq!(c.evictions(), 1);
+    }
+
+    #[test]
+    fn capacity_is_respected() {
+        let mut c = BoundedSkipCache::new(10);
+        for i in 0..100 {
+            c.insert(i, entry(i as f32));
+            assert!(c.len() <= 10);
+        }
+        assert_eq!(c.len(), 10);
+        // the survivors are the ten most recent
+        for i in 90..100 {
+            assert!(c.contains(i), "{i}");
+        }
+    }
+
+    #[test]
+    fn reinsert_refreshes() {
+        let mut c = BoundedSkipCache::new(2);
+        c.insert(1, entry(1.0));
+        c.insert(2, entry(2.0));
+        c.insert(1, entry(1.5)); // refresh 1
+        c.insert(3, entry(3.0)); // evicts 2 (oldest), not 1
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn hit_rate_with_working_set_larger_than_capacity() {
+        // cyclic scan over 0..20 with capacity 10 => LRU thrashes: all misses
+        let mut c = BoundedSkipCache::new(10);
+        for _round in 0..5 {
+            for i in 0..20 {
+                if c.lookup(i).is_none() {
+                    c.insert(i, entry(i as f32));
+                }
+            }
+        }
+        assert_eq!(c.stats().hits, 0, "cyclic scan defeats LRU at cap < set");
+    }
+
+    #[test]
+    fn full_capacity_behaves_like_unbounded() {
+        let mut c = BoundedSkipCache::new(20);
+        for _round in 0..5 {
+            for i in 0..20 {
+                if c.lookup(i).is_none() {
+                    c.insert(i, entry(i as f32));
+                }
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.misses, 20);
+        assert_eq!(s.hits, 80);
+        assert_eq!(c.evictions(), 0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Skip-Cache (paper §4.2-4.3): per-sample caching of frozen-layer
+//! activations so the forward pass of seen samples is skipped entirely.
+
+pub mod bounded;
+pub mod skip_cache;
+
+pub use bounded::BoundedSkipCache;
+pub use skip_cache::{CacheEntry, CacheStats, SkipCache};
+
+/// Common interface over the full-store and bounded caches so the trainer
+/// can run Algorithm 1 against either (paper §4.3's size/performance
+/// trade-off, end to end — see `TrainConfig::cache_capacity`).
+pub trait CacheBackend {
+    fn lookup(&mut self, key: usize) -> Option<&CacheEntry>;
+    fn insert(&mut self, key: usize, entry: CacheEntry);
+    fn stats(&self) -> CacheStats;
+    /// current heap footprint of cached activations, in bytes
+    fn byte_size(&self) -> usize;
+}
+
+impl CacheBackend for SkipCache {
+    fn lookup(&mut self, key: usize) -> Option<&CacheEntry> {
+        SkipCache::lookup(self, key)
+    }
+
+    fn insert(&mut self, key: usize, entry: CacheEntry) {
+        SkipCache::insert(self, key, entry)
+    }
+
+    fn stats(&self) -> CacheStats {
+        SkipCache::stats(self)
+    }
+
+    fn byte_size(&self) -> usize {
+        SkipCache::byte_size(self)
+    }
+}
+
+impl CacheBackend for BoundedSkipCache {
+    fn lookup(&mut self, key: usize) -> Option<&CacheEntry> {
+        BoundedSkipCache::lookup(self, key)
+    }
+
+    fn insert(&mut self, key: usize, entry: CacheEntry) {
+        BoundedSkipCache::insert(self, key, entry)
+    }
+
+    fn stats(&self) -> CacheStats {
+        BoundedSkipCache::stats(self)
+    }
+
+    fn byte_size(&self) -> usize {
+        // entries are homogeneous; estimate from len x first entry —
+        // BoundedSkipCache tracks only the map, so approximate
+        self.len() * std::mem::size_of::<CacheEntry>()
+    }
+}
+
+#[cfg(test)]
+mod trait_tests {
+    use super::*;
+
+    fn exercise(c: &mut dyn CacheBackend) {
+        assert!(c.lookup(0).is_none());
+        c.insert(0, CacheEntry { xs: vec![vec![1.0; 4]], c_n: vec![2.0] });
+        assert_eq!(c.lookup(0).unwrap().c_n[0], 2.0);
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn both_backends_satisfy_contract() {
+        exercise(&mut SkipCache::new(4));
+        exercise(&mut BoundedSkipCache::new(4));
+    }
+}

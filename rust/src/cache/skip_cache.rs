@@ -1,0 +1,217 @@
+//! Full-store Skip-Cache: `C_skip[i]` holds every frozen activation of
+//! training sample i (paper §4.3).
+//!
+//! The paper stores `∀k, y_i^k` exclusively at index i, giving O(1) lookup
+//! and a total footprint smaller than the input data itself (358 KiB vs
+//! 470 KiB on Fan). We mirror that exactly:
+//!
+//! * entry i = `[x_i^2, ..., x_i^n, c_i^n]` — the *inputs* of layers
+//!   2..n (post BN+ReLU, per footnote 1) plus the last layer's
+//!   pre-adapter output `c_i^n`. (`x_i^1` is the training sample itself
+//!   and is never duplicated into the cache.)
+//! * `get` is a Vec index — O(1), no hashing;
+//! * hit/miss statistics feed the 1/E forward-cost model (Fig. 3 / §4.3).
+
+use crate::tensor::Mat;
+
+/// Cached activations for one training sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheEntry {
+    /// inputs of layers 2..=n: x^2 .. x^n (each a row vector)
+    pub xs: Vec<Vec<f32>>,
+    /// last layer's pre-adapter output c^n
+    pub c_n: Vec<f32>,
+}
+
+impl CacheEntry {
+    pub fn byte_size(&self) -> usize {
+        let floats: usize =
+            self.xs.iter().map(|v| v.len()).sum::<usize>() + self.c_n.len();
+        floats * std::mem::size_of::<f32>()
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// The paper's full-store cache: one slot per training-sample index.
+#[derive(Clone, Debug)]
+pub struct SkipCache {
+    slots: Vec<Option<CacheEntry>>,
+    stats: CacheStats,
+}
+
+impl SkipCache {
+    /// `capacity` = |T|, the fine-tuning set size (Algorithm 1 line 2).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            slots: vec![None; capacity],
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// O(1) lookup; counts a hit or miss (Algorithm 2 line 3).
+    pub fn lookup(&mut self, i: usize) -> Option<&CacheEntry> {
+        match self.slots[i].as_ref() {
+            Some(e) => {
+                self.stats.hits += 1;
+                Some(e)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching statistics.
+    pub fn peek(&self, i: usize) -> Option<&CacheEntry> {
+        self.slots[i].as_ref()
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        self.slots[i].is_some()
+    }
+
+    /// Algorithm 1 line 7: add newly computed results.
+    pub fn insert(&mut self, i: usize, entry: CacheEntry) {
+        self.slots[i] = Some(entry);
+    }
+
+    /// Build an entry from per-layer activation matrices (row `row` of
+    /// each), as produced by a batched forward pass.
+    pub fn entry_from_batch(xs: &[&Mat], c_n: &Mat, row: usize) -> CacheEntry {
+        CacheEntry {
+            xs: xs.iter().map(|m| m.row(row).to_vec()).collect(),
+            c_n: c_n.row(row).to_vec(),
+        }
+    }
+
+    /// Invalidate everything (Algorithm 1 line 2 — also what a frozen-
+    /// parameter change would require; exposed for the ablation bench).
+    pub fn clear(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.stats = CacheStats::default();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total heap footprint of the cached activations (paper's 358 KiB
+    /// figure for Fan).
+    pub fn byte_size(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|e| e.byte_size())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(val: f32) -> CacheEntry {
+        CacheEntry {
+            xs: vec![vec![val; 96], vec![val; 96]],
+            c_n: vec![val; 3],
+        }
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = SkipCache::new(10);
+        assert!(c.lookup(3).is_none());
+        c.insert(3, entry(1.0));
+        assert!(c.lookup(3).is_some());
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(c.occupied(), 1);
+    }
+
+    #[test]
+    fn paper_fan_cache_size() {
+        // Paper §4.3: 470 samples, 3-layer 256-96-96-3 network =>
+        // cache stores 96+96+3 floats per sample = 358 KiB total.
+        let mut c = SkipCache::new(470);
+        for i in 0..470 {
+            c.insert(i, entry(0.0));
+        }
+        let kib = c.byte_size() as f64 / 1024.0;
+        assert!((kib - 357.9).abs() < 1.0, "{kib} KiB");
+        // ...which is smaller than the 470 KiB of input data the paper cites
+        let input_kib = (470 * 256 * 4) as f64 / 1024.0;
+        assert!(kib < input_kib);
+    }
+
+    #[test]
+    fn hit_rate_approaches_one_over_epochs() {
+        // Simulate Algorithm 1's E-epoch loop with sequential batches:
+        // first epoch all misses, later epochs all hits => hit rate -> (E-1)/E.
+        let n = 100;
+        let epochs = 5;
+        let mut c = SkipCache::new(n);
+        for _e in 0..epochs {
+            for i in 0..n {
+                if c.lookup(i).is_none() {
+                    c.insert(i, entry(i as f32));
+                }
+            }
+        }
+        let s = c.stats();
+        assert_eq!(s.misses, n as u64);
+        assert_eq!(s.hits, ((epochs - 1) * n) as u64);
+        assert!((s.hit_rate() - (epochs - 1) as f64 / epochs as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entry_from_batch_slices_rows() {
+        let x2 = Mat::from_fn(4, 3, |i, j| (i * 10 + j) as f32);
+        let c3 = Mat::from_fn(4, 2, |i, j| (i * 100 + j) as f32);
+        let e = SkipCache::entry_from_batch(&[&x2], &c3, 2);
+        assert_eq!(e.xs, vec![vec![20.0, 21.0, 22.0]]);
+        assert_eq!(e.c_n, vec![200.0, 201.0]);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut c = SkipCache::new(5);
+        c.insert(0, entry(1.0));
+        let _ = c.lookup(0);
+        c.clear();
+        assert_eq!(c.occupied(), 0);
+        assert_eq!(c.stats().lookups(), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! On-device coordinator: the deployment story around Skip2-LoRA.
+//!
+//! The paper motivates Skip2-LoRA with the pre-train/deploy gap: a model
+//! ships with factory weights, encounters drifted data in the field, and
+//! must adapt in seconds on a $15 board. `DeviceAgent` is that runtime:
+//!
+//! * serves predictions from the current model;
+//! * monitors a sliding window of labelled feedback for drift (accuracy
+//!   drop below threshold);
+//! * buffers drifted samples into a fine-tune set;
+//! * triggers a Skip2-LoRA fine-tune when the buffer is full, then
+//!   hot-swaps the adapters (backbone untouched — LoRA portability);
+//! * records busy intervals into an `ActivityLog` for the Fig. 4
+//!   power/thermal trace.
+//!
+//! The event loop runs on std threads + mpsc channels (tokio is not
+//! available offline — DESIGN.md §3).
+
+pub mod agent;
+
+pub use agent::{AgentConfig, AgentReport, DeviceAgent, Event};

@@ -1,0 +1,131 @@
+//! CSV import/export for datasets (label in the last column).
+//!
+//! Lets users bring the *real* Damage/HAR data if they have it — the
+//! generators in `fan.rs`/`har.rs` are drop-in substitutes, not the only
+//! path (DESIGN.md §3).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+use crate::tensor::Mat;
+
+/// Write `dataset` as CSV: f0,f1,...,fN,label per line.
+pub fn save(dataset: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut line = String::new();
+    for i in 0..dataset.len() {
+        line.clear();
+        for v in dataset.x.row(i) {
+            line.push_str(&format!("{v},"));
+        }
+        line.push_str(&format!("{}\n", dataset.labels[i]));
+        f.write_all(line.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a CSV with the label in the last column.
+pub fn load(path: &Path, n_classes: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut labels: Vec<usize> = Vec::new();
+    let mut n_features: Option<usize> = None;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(',').collect();
+        if fields.len() < 2 {
+            bail!("line {}: need at least one feature + label", lineno + 1);
+        }
+        let (feat, lab) = fields.split_at(fields.len() - 1);
+        let row: Vec<f32> = feat
+            .iter()
+            .map(|s| s.trim().parse::<f32>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("line {}: bad feature", lineno + 1))?;
+        match n_features {
+            None => n_features = Some(row.len()),
+            Some(n) if n != row.len() => {
+                bail!("line {}: inconsistent feature count", lineno + 1)
+            }
+            _ => {}
+        }
+        let label: usize = lab[0]
+            .trim()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        if label >= n_classes {
+            bail!("line {}: label {} >= n_classes {}", lineno + 1, label, n_classes);
+        }
+        rows.push(row);
+        labels.push(label);
+    }
+    let nf = n_features.unwrap_or(0);
+    if rows.is_empty() {
+        bail!("empty dataset: {}", path.display());
+    }
+    let mut x = Mat::zeros(rows.len(), nf);
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(row);
+    }
+    Ok(Dataset { x, labels, n_classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fan::{damage, DamageKind};
+
+    #[test]
+    fn roundtrip() {
+        let b = damage(0, DamageKind::Holes);
+        let dir = std::env::temp_dir().join("s2l_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fan.csv");
+        let small = b.pretrain.split_at(10).0;
+        save(&small, &path).unwrap();
+        let back = load(&path, 3).unwrap();
+        assert_eq!(back.len(), 10);
+        assert_eq!(back.labels, small.labels);
+        for i in 0..10 {
+            for (a, b) in back.x.row(i).iter().zip(small.x.row(i)) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_labels_and_ragged_rows() {
+        let dir = std::env::temp_dir().join("s2l_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("bad_label.csv");
+        std::fs::write(&p1, "1.0,2.0,7\n").unwrap();
+        assert!(load(&p1, 3).is_err());
+        let p2 = dir.join("ragged.csv");
+        std::fs::write(&p2, "1.0,2.0,0\n1.0,1\n").unwrap();
+        assert!(load(&p2, 3).is_err());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let dir = std::env::temp_dir().join("s2l_csv_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.csv");
+        std::fs::write(&p, "# header\n\n0.5,1.5,1\n").unwrap();
+        let d = load(&p, 2).unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.labels, vec![1]);
+        std::fs::remove_file(&p).ok();
+    }
+}

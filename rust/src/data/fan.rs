@@ -1,0 +1,250 @@
+//! Synthetic cooling-fan vibration datasets (Damage1 / Damage2 stand-ins).
+//!
+//! The paper's datasets [Sunaga et al., IEEE Micro 2023] are vibration
+//! spectra of cooling fans: 256 input features, 3 classes {stop, normal,
+//! damaged}, fans rotating at 1500/2000/2500 rpm, recorded in a "silent"
+//! office (pre-train) and near a ventilation fan ("noisy", deploy). The
+//! generator models each sample as a 256-bin FFT-magnitude spectrum:
+//!
+//! * **stop**: noise floor only;
+//! * **normal**: fundamental at the rpm bin + harmonics;
+//! * **damaged**: fundamental + harmonics + damage signature
+//!   (Damage1 "holes on a blade": strong sub-harmonic sidebands;
+//!   Damage2 "chipped blade": asymmetric harmonic amplitudes + a
+//!   broadband high-frequency shelf — a *harder, subtler* signature,
+//!   matching the paper's lower Damage2 accuracies);
+//! * **drift** (silent -> noisy): added broadband noise floor, a gain
+//!   change, and a small spectral tilt — a covariate shift that leaves
+//!   class geometry intact but moves the input distribution, reproducing
+//!   the paper's Before ≈ 52-61% / After ≈ 91-99% accuracy gap (Table 3).
+//!
+//! Sizes match the paper exactly: 470 pre-train / 470 fine-tune / 470 test.
+
+use super::{Dataset, DriftBenchmark};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+pub const N_FEATURES: usize = 256;
+pub const N_CLASSES: usize = 3;
+pub const N_PRETRAIN: usize = 470;
+pub const N_FINETUNE: usize = 470;
+pub const N_TEST: usize = 470;
+
+/// Damage signature variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DamageKind {
+    /// Damage1: holes on a blade — strong sub-harmonic sidebands.
+    Holes,
+    /// Damage2: chipped blade — subtler asymmetric harmonics.
+    Chipped,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Environment {
+    /// office pre-train conditions
+    Silent,
+    /// deployed near a ventilation fan
+    Noisy,
+}
+
+const RPMS: [f32; 3] = [1500.0, 2000.0, 2500.0];
+
+/// rpm -> fundamental spectral bin (arbitrary but fixed mapping: the
+/// 256-bin spectrum spans 0..6400 "Hz", so bin = rpm/25).
+fn rpm_bin(rpm: f32) -> f32 {
+    rpm / 25.0
+}
+
+/// Add a Gaussian-shaped spectral peak centred at `bin`.
+fn add_peak(spec: &mut [f32], bin: f32, amp: f32, width: f32) {
+    let lo = ((bin - 4.0 * width).floor().max(0.0)) as usize;
+    let hi = ((bin + 4.0 * width).ceil().min((spec.len() - 1) as f32)) as usize;
+    for (i, v) in spec.iter_mut().enumerate().take(hi + 1).skip(lo) {
+        let d = (i as f32 - bin) / width;
+        *v += amp * (-0.5 * d * d).exp();
+    }
+}
+
+/// Generate one spectrum sample.
+fn sample(rng: &mut Rng, class: usize, kind: DamageKind, env: Environment) -> Vec<f32> {
+    let mut spec = vec![0.0f32; N_FEATURES];
+
+    // base sensor noise floor (fairly strong: real accelerometer windows
+    // are noisy; keeps within-environment accuracy off the ceiling)
+    for v in spec.iter_mut() {
+        *v = 0.08 + 0.06 * rng.normal().abs();
+    }
+
+    if class > 0 {
+        // rotating fan: fundamental + harmonics at a random rpm
+        let rpm = RPMS[rng.below(3)] * rng.uniform(0.97, 1.03);
+        let f0 = rpm_bin(rpm);
+        let amp = rng.uniform(0.55, 1.15); // wide amplitude spread
+        for h in 1..=3 {
+            add_peak(&mut spec, f0 * h as f32, amp / h as f32, 1.8);
+        }
+        if class == 2 {
+            match kind {
+                DamageKind::Holes => {
+                    // clear sub-harmonic sidebands at 0.5x and 1.5x f0
+                    let damp = amp * rng.uniform(0.35, 0.6);
+                    add_peak(&mut spec, f0 * 0.5, damp, 2.0);
+                    add_peak(&mut spec, f0 * 1.5, damp * 0.8, 2.0);
+                }
+                DamageKind::Chipped => {
+                    // subtle, sometimes nearly absent: the harder task
+                    let damp = amp * rng.uniform(0.10, 0.30);
+                    add_peak(&mut spec, f0 * 2.0, damp, 1.8);
+                    add_peak(&mut spec, f0 * 0.5, damp * 0.5, 3.0);
+                }
+            }
+        }
+    }
+
+    // Environment noise: both environments share the same ambient-noise
+    // *transform*, differing in severity. The silent office has a little
+    // ambient noise (s up to 0.18), the deployed site's ventilation fan a
+    // lot (s 0.42..1.05). The overlap means the silent-trained model
+    // partially transfers — the paper's Before is ~52-61%, not chance —
+    // while severe samples defeat it; class geometry survives retraining
+    // (After ~91-99%).
+    let s = match env {
+        Environment::Silent => rng.uniform(0.0, 0.18),
+        Environment::Noisy => rng.uniform(0.42, 1.05),
+    };
+    let gain = 1.0 + 0.16 * s;
+    for (i, v) in spec.iter_mut().enumerate() {
+        let tilt = 1.0 + 0.12 * s * (i as f32 / N_FEATURES as f32);
+        let vent = s
+            * (0.18 + 0.05 * rng.normal().abs()
+                + 0.22 * (-0.5 * ((i as f32 - 12.0) / 8.0).powi(2)).exp());
+        *v = *v * gain * tilt + vent;
+    }
+
+    spec
+}
+
+fn gen(rng: &mut Rng, n: usize, kind: DamageKind, env: Environment) -> Dataset {
+    let mut x = Mat::zeros(n, N_FEATURES);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % N_CLASSES; // balanced
+        let s = sample(rng, class, kind, env);
+        x.row_mut(i).copy_from_slice(&s);
+        labels.push(class);
+    }
+    // shuffle rows so splits stay balanced-ish but unordered
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut xs = Mat::zeros(n, N_FEATURES);
+    let mut ls = vec![0usize; n];
+    for (row, &i) in order.iter().enumerate() {
+        xs.row_mut(row).copy_from_slice(x.row(i));
+        ls[row] = labels[i];
+    }
+    Dataset { x: xs, labels: ls, n_classes: N_CLASSES }
+}
+
+/// Full Damage benchmark: silent pre-train, noisy fine-tune + test
+/// (paper §5.1: "fine-tuned with a half of the noisy dataset and then
+/// tested with the remaining half").
+pub fn damage(seed: u64, kind: DamageKind) -> DriftBenchmark {
+    let mut rng = Rng::new(seed ^ 0xFA17);
+    let pretrain = gen(&mut rng, N_PRETRAIN, kind, Environment::Silent);
+    let noisy = gen(&mut rng, N_FINETUNE + N_TEST, kind, Environment::Noisy);
+    let (finetune, test) = noisy.split_at(N_FINETUNE);
+    DriftBenchmark {
+        name: match kind {
+            DamageKind::Holes => "Damage1",
+            DamageKind::Chipped => "Damage2",
+        },
+        pretrain,
+        finetune,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let b = damage(0, DamageKind::Holes);
+        assert_eq!(b.pretrain.len(), 470);
+        assert_eq!(b.finetune.len(), 470);
+        assert_eq!(b.test.len(), 470);
+        assert_eq!(b.pretrain.n_features(), 256);
+        assert_eq!(b.pretrain.n_classes, 3);
+    }
+
+    #[test]
+    fn classes_are_balanced() {
+        let b = damage(1, DamageKind::Chipped);
+        for c in b.pretrain.class_counts() {
+            assert!((c as i64 - 470 / 3).abs() <= 2, "{c}");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = damage(7, DamageKind::Holes);
+        let b = damage(7, DamageKind::Holes);
+        assert_eq!(a.pretrain.x.data, b.pretrain.x.data);
+        assert_eq!(a.test.labels, b.test.labels);
+        let c = damage(8, DamageKind::Holes);
+        assert_ne!(a.pretrain.x.data, c.pretrain.x.data);
+    }
+
+    #[test]
+    fn drift_shifts_distribution() {
+        let b = damage(2, DamageKind::Holes);
+        let mean = |d: &Dataset| d.x.data.iter().sum::<f32>() / d.x.data.len() as f32;
+        let m_silent = mean(&b.pretrain);
+        let m_noisy = mean(&b.finetune);
+        // noisy environment adds a substantial broadband floor + gain
+        assert!(m_noisy > m_silent * 1.5, "{m_silent} vs {m_noisy}");
+    }
+
+    #[test]
+    fn classes_are_separable_within_environment() {
+        // nearest-class-centroid accuracy should be high on the noisy set
+        // itself (the task is learnable after drift — Table 3 "After").
+        let b = damage(3, DamageKind::Holes);
+        let d = &b.finetune;
+        let nf = d.n_features();
+        let mut centroids = vec![vec![0.0f32; nf]; 3];
+        let counts = d.class_counts();
+        for i in 0..d.len() {
+            let c = d.labels[i];
+            for (acc, v) in centroids[c].iter_mut().zip(d.x.row(i)) {
+                *acc += v;
+            }
+        }
+        for (c, cnt) in centroids.iter_mut().zip(&counts) {
+            for v in c.iter_mut() {
+                *v /= *cnt as f32;
+            }
+        }
+        let mut correct = 0;
+        let t = &b.test;
+        for i in 0..t.len() {
+            let row = t.x.row(i);
+            let mut best = (f32::INFINITY, 0usize);
+            for (c, cent) in centroids.iter().enumerate() {
+                let d2: f32 = row.iter().zip(cent).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == t.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / t.len() as f64;
+        // a plain nearest-centroid classifier is far weaker than the DNN
+        // (which reaches ~99% after fine-tuning), but must beat chance by
+        // a wide margin for the task to be learnable
+        assert!(acc > 0.55, "centroid accuracy {acc}");
+    }
+}

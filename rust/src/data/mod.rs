@@ -1,0 +1,125 @@
+//! Dataset substrate: synthetic generators reproducing the paper's drift
+//! experiments (Damage1/Damage2 fan vibration, UCI HAR subject drift), a
+//! common `Dataset` container, CSV import/export, and the Algorithm-1
+//! batch sampler.
+//!
+//! The original datasets are not redistributable/available offline; the
+//! generators reproduce the three properties the experiments rely on —
+//! dimensions, class structure, and a covariate drift between pre-train
+//! and deployment large enough to crater accuracy (DESIGN.md §3).
+
+pub mod csv;
+pub mod fan;
+pub mod har;
+pub mod sampler;
+
+use crate::tensor::Mat;
+
+/// A labelled dataset: one row per sample.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Split off the first `n` samples (paper: "fine-tuned with a half...
+    /// tested with the remaining half").
+    pub fn split_at(&self, n: usize) -> (Dataset, Dataset) {
+        assert!(n <= self.len());
+        let d = self.n_features();
+        let first = Dataset {
+            x: Mat::from_vec(n, d, self.x.data[..n * d].to_vec()),
+            labels: self.labels[..n].to_vec(),
+            n_classes: self.n_classes,
+        };
+        let second = Dataset {
+            x: Mat::from_vec(self.len() - n, d, self.x.data[n * d..].to_vec()),
+            labels: self.labels[n..].to_vec(),
+            n_classes: self.n_classes,
+        };
+        (first, second)
+    }
+
+    /// Gather rows by index into a preallocated batch (hot path: no alloc).
+    pub fn gather_into(&self, idx: &[usize], x_out: &mut Mat, labels_out: &mut [usize]) {
+        assert_eq!(x_out.shape(), (idx.len(), self.n_features()));
+        assert_eq!(labels_out.len(), idx.len());
+        for (row, &i) in idx.iter().enumerate() {
+            x_out.row_mut(row).copy_from_slice(self.x.row(i));
+            labels_out[row] = self.labels[i];
+        }
+    }
+
+    /// Per-class sample counts (diagnostics / tests).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            c[l] += 1;
+        }
+        c
+    }
+}
+
+/// The three splits every experiment uses (paper §5.1).
+#[derive(Clone, Debug)]
+pub struct DriftBenchmark {
+    pub name: &'static str,
+    pub pretrain: Dataset,
+    pub finetune: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: Mat::from_fn(6, 2, |i, j| (i * 2 + j) as f32),
+            labels: vec![0, 1, 2, 0, 1, 2],
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let d = tiny();
+        let (a, b) = d.split_at(4);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 2);
+        assert_eq!(a.x.row(3), d.x.row(3));
+        assert_eq!(b.x.row(0), d.x.row(4));
+        assert_eq!(b.labels, vec![1, 2]);
+    }
+
+    #[test]
+    fn gather_into_copies_rows() {
+        let d = tiny();
+        let mut x = Mat::zeros(3, 2);
+        let mut l = vec![0usize; 3];
+        d.gather_into(&[5, 0, 5], &mut x, &mut l);
+        assert_eq!(x.row(0), d.x.row(5));
+        assert_eq!(x.row(1), d.x.row(0));
+        assert_eq!(x.row(2), d.x.row(5));
+        assert_eq!(l, vec![2, 0, 2]);
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(tiny().class_counts(), vec![2, 2, 2]);
+    }
+}

@@ -1,0 +1,3 @@
+//! Edge-device environment simulation (Fig. 4's power/thermal trace).
+
+pub mod power;

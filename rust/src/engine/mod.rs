@@ -1,0 +1,11 @@
+//! Execution engines.
+//!
+//! * **native** — the paper-faithful edge substrate: `crate::train`
+//!   running the hand-written rust kernels with per-layer timers. All
+//!   tables/figures are regenerated on it (DESIGN.md §2).
+//! * **pjrt** (this module's `pjrt`) — the three-layer AOT path: the same
+//!   Skip2-LoRA computation compiled from jax/pallas, loaded as HLO text
+//!   and executed via the PJRT C API. Cross-checked against native by
+//!   integration tests and `skip2lora pjrt-verify`.
+
+pub mod pjrt;

@@ -1,0 +1,315 @@
+//! PJRT-backed Skip2-LoRA engine.
+//!
+//! Runs the full fine-tuning protocol using the AOT artifacts:
+//!
+//! * `{ds}_cache_populate` — frozen forward for cache misses;
+//! * `{ds}_skip2_step`     — cached train step (adapter-only backward);
+//! * `{ds}_predict_b20` / `{ds}_predict` — batched / single inference;
+//! * `{ds}_pretrain_step`  — FT-All pre-training.
+//!
+//! Weights flow rust → PJRT as flat f32 buffers in the manifest's
+//! positional order (model.FROZEN_NAMES / LORA_NAMES on the python side).
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{CacheEntry, SkipCache};
+use crate::data::Dataset;
+use crate::model::Mlp;
+use crate::runtime::Runtime;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+
+/// Flatten a backbone + skip adapters into the AOT parameter orders.
+pub fn export_frozen(m: &Mlp) -> Vec<Vec<f32>> {
+    assert_eq!(m.n_layers(), 3, "AOT artifacts are lowered for 3 layers");
+    let mut out = Vec::with_capacity(14);
+    for k in 0..3 {
+        out.push(m.fcs[k].w.data.clone());
+        out.push(m.fcs[k].b.clone());
+        if k < 2 {
+            out.push(m.bns[k].gamma.clone());
+            out.push(m.bns[k].beta.clone());
+            out.push(m.bns[k].running_mean.clone());
+            out.push(m.bns[k].running_var.clone());
+        }
+    }
+    out
+}
+
+pub fn export_lora(m: &Mlp) -> Vec<Vec<f32>> {
+    assert_eq!(m.skip.len(), 3, "skip topology required");
+    let mut out = Vec::with_capacity(6);
+    for ad in &m.skip {
+        out.push(ad.wa.data.clone());
+        out.push(ad.wb.data.clone());
+    }
+    out
+}
+
+/// One-hot encode labels.
+pub fn one_hot(labels: &[usize], n_classes: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; labels.len() * n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        v[i * n_classes + l] = 1.0;
+    }
+    v
+}
+
+pub struct PjrtSkip2 {
+    rt: Runtime,
+    ds: String,
+    pub frozen: Vec<Vec<f32>>,
+    pub lora: Vec<Vec<f32>>,
+    pub batch: usize,
+    pub n_in: usize,
+    pub hidden: usize,
+    pub n_out: usize,
+}
+
+impl PjrtSkip2 {
+    /// Wrap a pre-trained backbone (+ fresh skip adapters) for dataset
+    /// `ds` ("fan" or "har").
+    pub fn new(artifacts: &std::path::Path, ds: &str, model: &Mlp) -> Result<Self> {
+        let rt = Runtime::open(artifacts)?;
+        let (n_in, hidden, n_out) = rt.dataset_dims(ds)?;
+        if model.config.dims != vec![n_in, hidden, hidden, n_out] {
+            return Err(anyhow!(
+                "model dims {:?} do not match artifact dataset '{ds}'",
+                model.config.dims
+            ));
+        }
+        let batch = rt.batch();
+        Ok(Self {
+            frozen: export_frozen(model),
+            lora: export_lora(model),
+            rt,
+            ds: ds.to_string(),
+            batch,
+            n_in,
+            hidden,
+            n_out,
+        })
+    }
+
+    fn art(&mut self, kind: &str) -> String {
+        format!("{}_{kind}", self.ds)
+    }
+
+    /// Frozen forward for a batch (cache-populate artifact).
+    /// Returns (x2, x3, c3) as flat row-major buffers.
+    pub fn cache_populate(&mut self, x: &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let name = self.art("cache_populate");
+        let art = self.rt.load(&name)?;
+        let mut inputs: Vec<&[f32]> = self.frozen.iter().map(|v| v.as_slice()).collect();
+        inputs.push(x);
+        let mut out = art.run(&inputs)?;
+        let c3 = out.pop().unwrap();
+        let x3 = out.pop().unwrap();
+        let x2 = out.pop().unwrap();
+        Ok((x2, x3, c3))
+    }
+
+    /// One cached Skip2-LoRA train step; updates `self.lora` in place and
+    /// returns the loss.
+    pub fn step(
+        &mut self,
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+        c3: &[f32],
+        y_onehot: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let name = self.art("skip2_step");
+        let art = self.rt.load(&name)?;
+        let lr_buf = [lr];
+        let mut inputs: Vec<&[f32]> = self.lora.iter().map(|v| v.as_slice()).collect();
+        inputs.extend_from_slice(&[x1, x2, x3, c3, y_onehot, &lr_buf]);
+        let mut out = art.run(&inputs)?;
+        // outputs: [loss, new_wa1, new_wb1, new_wa2, new_wb2, new_wa3, new_wb3]
+        let loss = out[0][0];
+        for (dst, src) in self.lora.iter_mut().zip(out.drain(1..)) {
+            *dst = src;
+        }
+        Ok(loss)
+    }
+
+    /// Batched inference (B = artifact batch).
+    pub fn predict_batch(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let name = self.art("predict_b20");
+        let art = self.rt.load(&name)?;
+        let mut inputs: Vec<&[f32]> = self.frozen.iter().map(|v| v.as_slice()).collect();
+        inputs.extend(self.lora.iter().map(|v| v.as_slice()));
+        inputs.push(x);
+        Ok(art.run(&inputs)?.remove(0))
+    }
+
+    /// Single-sample inference (the serving path).
+    pub fn predict_one(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        let name = self.art("predict");
+        let art = self.rt.load(&name)?;
+        let mut inputs: Vec<&[f32]> = self.frozen.iter().map(|v| v.as_slice()).collect();
+        inputs.extend(self.lora.iter().map(|v| v.as_slice()));
+        inputs.push(x);
+        Ok(art.run(&inputs)?.remove(0))
+    }
+
+    /// One FT-All pre-training step on `self.frozen`.
+    pub fn pretrain_step(&mut self, x: &[f32], y_onehot: &[f32], lr: f32) -> Result<f32> {
+        let name = self.art("pretrain_step");
+        let art = self.rt.load(&name)?;
+        let lr_buf = [lr];
+        let mut inputs: Vec<&[f32]> = self.frozen.iter().map(|v| v.as_slice()).collect();
+        inputs.extend_from_slice(&[x, y_onehot, &lr_buf]);
+        let mut out = art.run(&inputs)?;
+        let loss = out[0][0];
+        for (dst, src) in self.frozen.iter_mut().zip(out.drain(1..)) {
+            *dst = src;
+        }
+        Ok(loss)
+    }
+
+    /// Full Algorithm-1 fine-tuning with the Skip-Cache, entirely on PJRT.
+    /// Returns (final mean loss, cache stats, timer).
+    pub fn finetune(
+        &mut self,
+        data: &Dataset,
+        epochs: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<(f32, crate::cache::CacheStats, PhaseTimer)> {
+        assert_eq!(data.n_features(), self.n_in);
+        let b = self.batch;
+        let mut rng = Rng::new(seed);
+        let mut cache = SkipCache::new(data.len());
+        let mut timer = PhaseTimer::new();
+        let mut last_loss = 0.0f32;
+
+        let mut x1 = vec![0.0f32; b * self.n_in];
+        let mut x2 = vec![0.0f32; b * self.hidden];
+        let mut x3 = vec![0.0f32; b * self.hidden];
+        let mut c3 = vec![0.0f32; b * self.n_out];
+        let batches = data.len() / b;
+
+        for _e in 0..epochs {
+            let mut eloss = 0.0f32;
+            for _ in 0..batches {
+                let idx = rng.sample_with_replacement(data.len(), b);
+                // gather inputs + labels
+                let mut labels = vec![0usize; b];
+                for (row, &i) in idx.iter().enumerate() {
+                    x1[row * self.n_in..(row + 1) * self.n_in]
+                        .copy_from_slice(data.x.row(i));
+                    labels[row] = data.labels[i];
+                }
+                // cache consult (dedup within batch)
+                let t0 = std::time::Instant::now();
+                let mut miss: Vec<usize> = Vec::new();
+                for (row, &i) in idx.iter().enumerate() {
+                    if idx[..row].contains(&i) {
+                        continue;
+                    }
+                    if let Some(e) = cache.lookup(i) {
+                        x2[row * self.hidden..(row + 1) * self.hidden]
+                            .copy_from_slice(&e.xs[0]);
+                        x3[row * self.hidden..(row + 1) * self.hidden]
+                            .copy_from_slice(&e.xs[1]);
+                        c3[row * self.n_out..(row + 1) * self.n_out]
+                            .copy_from_slice(&e.c_n);
+                    } else {
+                        miss.push(row);
+                    }
+                }
+                timer.add_ns("cache_mgmt", t0.elapsed().as_nanos());
+
+                if !miss.is_empty() {
+                    // run the whole batch through the frozen forward; only
+                    // miss rows are new, but the artifact is fixed-shape —
+                    // the executable cost is per batch either way
+                    let t0 = std::time::Instant::now();
+                    let (nx2, nx3, nc3) = self.cache_populate(&x1)?;
+                    timer.add_ns("forward", t0.elapsed().as_nanos());
+                    for &row in &miss {
+                        let h = self.hidden;
+                        let o = self.n_out;
+                        x2[row * h..(row + 1) * h]
+                            .copy_from_slice(&nx2[row * h..(row + 1) * h]);
+                        x3[row * h..(row + 1) * h]
+                            .copy_from_slice(&nx3[row * h..(row + 1) * h]);
+                        c3[row * o..(row + 1) * o]
+                            .copy_from_slice(&nc3[row * o..(row + 1) * o]);
+                        cache.insert(
+                            idx[row],
+                            CacheEntry {
+                                xs: vec![
+                                    nx2[row * h..(row + 1) * h].to_vec(),
+                                    nx3[row * h..(row + 1) * h].to_vec(),
+                                ],
+                                c_n: nc3[row * o..(row + 1) * o].to_vec(),
+                            },
+                        );
+                    }
+                }
+                // duplicates within batch: copy from first occurrence
+                for (row, &i) in idx.iter().enumerate() {
+                    if let Some(first) = idx[..row].iter().position(|&p| p == i) {
+                        let h = self.hidden;
+                        let o = self.n_out;
+                        let (a, bb) = x2.split_at_mut(row * h);
+                        bb[..h].copy_from_slice(&a[first * h..first * h + h]);
+                        let (a, bb) = x3.split_at_mut(row * h);
+                        bb[..h].copy_from_slice(&a[first * h..first * h + h]);
+                        let (a, bb) = c3.split_at_mut(row * o);
+                        bb[..o].copy_from_slice(&a[first * o..first * o + o]);
+                    }
+                }
+
+                let y = one_hot(&labels, self.n_out);
+                let t0 = std::time::Instant::now();
+                eloss = self.step(&x1, &x2, &x3, &c3, &y, lr)?;
+                timer.add_ns("step", t0.elapsed().as_nanos());
+            }
+            last_loss = eloss;
+        }
+        Ok((last_loss, cache.stats(), timer))
+    }
+
+    /// Accuracy over a dataset via the batched predict artifact.
+    pub fn accuracy(&mut self, data: &Dataset) -> Result<f64> {
+        let b = self.batch;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut xb = vec![0.0f32; b * self.n_in];
+        let mut i = 0;
+        while i + b <= data.len() {
+            for row in 0..b {
+                xb[row * self.n_in..(row + 1) * self.n_in]
+                    .copy_from_slice(data.x.row(i + row));
+            }
+            let logits = self.predict_batch(&xb)?;
+            let lm = Mat::from_vec(b, self.n_out, logits);
+            correct += (crate::nn::loss::accuracy(&lm, &data.labels[i..i + b])
+                * b as f64)
+                .round() as usize;
+            total += b;
+            i += b;
+        }
+        // remainder via single-sample predict
+        while i < data.len() {
+            let logits = self.predict_one(data.x.row(i))?;
+            let best = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if best == data.labels[i] {
+                correct += 1;
+            }
+            total += 1;
+            i += 1;
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}

@@ -1,0 +1,366 @@
+//! Ablation benches for the design choices called out in DESIGN.md §6:
+//! cache granularity, bounded-cache capacity, sampling mode, SIMD backend.
+
+use crate::cache::{BoundedSkipCache, CacheEntry, SkipCache};
+use crate::data::sampler::SamplingMode;
+use crate::method::Method;
+use crate::report::Table;
+use crate::tensor::ops::Backend;
+use crate::train::{train, FineTuner, TrainConfig};
+use crate::util::rng::Rng;
+
+use super::{accuracy, DatasetId, ExpConfig};
+
+/// Cache-granularity ablation: no cache (Skip-LoRA), full Skip-Cache
+/// (Skip2-LoRA), and both sampling modes. Shows time + hit rate + final
+/// accuracy are all preserved by the cache.
+pub fn ablate_cache(cfg: &ExpConfig) -> Table {
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let (_, fine_epochs) = cfg.epochs_for(ds);
+
+    let mut t = Table::new(
+        "Ablation: Skip-Cache on/off × sampling mode (Damage1)",
+        &["variant", "train@batch (ms)", "hit rate", "test acc (%)"],
+    );
+    for (label, method, sampling) in [
+        ("Skip-LoRA (no cache), with-replacement", Method::SkipLora, SamplingMode::WithReplacement),
+        ("Skip2-LoRA, with-replacement", Method::Skip2Lora, SamplingMode::WithReplacement),
+        ("Skip2-LoRA, shuffled epochs", Method::Skip2Lora, SamplingMode::Shuffled),
+    ] {
+        let mut model = backbone.clone();
+        let mut rng = Rng::new(cfg.seed ^ 0xAB);
+        model.set_topology(&mut rng, method.topology());
+        let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs: fine_epochs,
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            sampling,
+            ..Default::default()
+        };
+        let out = train(&mut tuner, &bench.finetune, None, &tc);
+        let acc = tuner.accuracy(&bench.test);
+        let hr = if out.cache_hits + out.cache_misses > 0 {
+            format!(
+                "{:.1}%",
+                out.cache_hits as f64 / (out.cache_hits + out.cache_misses) as f64 * 100.0
+            )
+        } else {
+            "-".to_string()
+        };
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", out.train_ms_per_batch()),
+            hr,
+            format!("{:.2}", acc * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Bounded-cache capacity sweep (paper §4.3's size/performance trade-off):
+/// replay the Algorithm-1 access pattern against LRU caches of varying
+/// capacity and report hit rates + bytes.
+pub fn ablate_cache_size(cfg: &ExpConfig) -> Table {
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let n = bench.finetune.len();
+    let epochs = cfg.scaled(100);
+    let batch = cfg.batch;
+
+    // synth entry with the real per-sample payload size (96+96+3 floats)
+    let entry = || CacheEntry {
+        xs: vec![vec![0.0; 96], vec![0.0; 96]],
+        c_n: vec![0.0; 3],
+    };
+
+    let mut t = Table::new(
+        "Ablation: bounded key-value Skip-Cache capacity sweep (Damage1 access pattern)",
+        &["capacity", "% of |T|", "hit rate", "evictions", "cache KiB"],
+    );
+    // full-store reference
+    {
+        let mut c = SkipCache::new(n);
+        let mut rng = Rng::new(cfg.seed);
+        for _ in 0..epochs * (n / batch) {
+            for _ in 0..batch {
+                let i = rng.below(n);
+                if c.lookup(i).is_none() {
+                    c.insert(i, entry());
+                }
+            }
+        }
+        t.row(vec![
+            format!("{n} (full store)"),
+            "100%".into(),
+            format!("{:.1}%", c.stats().hit_rate() * 100.0),
+            "0".into(),
+            format!("{:.0}", c.byte_size() as f64 / 1024.0),
+        ]);
+    }
+    for frac in [0.75, 0.5, 0.25, 0.1] {
+        let cap = ((n as f64 * frac) as usize).max(1);
+        let mut c = BoundedSkipCache::new(cap);
+        let mut rng = Rng::new(cfg.seed);
+        let mut bytes = 0usize;
+        for _ in 0..epochs * (n / batch) {
+            for _ in 0..batch {
+                let i = rng.below(n);
+                if c.lookup(i).is_none() {
+                    let e = entry();
+                    bytes = bytes.max(c.len() * e.byte_size());
+                    c.insert(i, e);
+                }
+            }
+        }
+        t.row(vec![
+            cap.to_string(),
+            format!("{:.0}%", frac * 100.0),
+            format!("{:.1}%", c.stats().hit_rate() * 100.0),
+            c.evictions().to_string(),
+            format!("{:.0}", bytes as f64 / 1024.0),
+        ]);
+    }
+    t
+}
+
+/// Backend ablation: scalar (Algorithm 2 verbatim) vs blocked kernels —
+/// the paper's with/without-Neon comparison.
+pub fn ablate_backend(cfg: &ExpConfig) -> Table {
+    let ds = DatasetId::Damage1;
+    let mut t = Table::new(
+        "Ablation: scalar vs blocked kernels (the paper's Neon on/off analogue, Damage1)",
+        &["method", "scalar train@batch (ms)", "blocked train@batch (ms)", "speedup"],
+    );
+    for method in [Method::FtAll, Method::LoraAll, Method::SkipLora, Method::Skip2Lora] {
+        let mut ms = [0.0f64; 2];
+        for (bi, backend) in [Backend::Scalar, Backend::Blocked].iter().enumerate() {
+            let sub = ExpConfig { backend: *backend, ..cfg.clone() };
+            let bench = ds.benchmark(sub.seed);
+            let backbone = accuracy::pretrain_backbone(ds, &bench, &sub, 0);
+            let mut model = backbone;
+            let mut rng = Rng::new(sub.seed);
+            model.set_topology(&mut rng, method.topology());
+            let mut tuner = FineTuner::new(model, method, *backend, sub.batch);
+            let tc = TrainConfig {
+                epochs: sub.scaled(40),
+                batch_size: sub.batch,
+                lr: sub.lr_finetune,
+                seed: sub.seed,
+                ..Default::default()
+            };
+            let out = train(&mut tuner, &bench.finetune, None, &tc);
+            ms[bi] = out.train_ms_per_batch();
+        }
+        t.row(vec![
+            method.name().to_string(),
+            format!("{:.3}", ms[0]),
+            format!("{:.3}", ms[1]),
+            format!("{:.2}x", ms[0] / ms[1].max(1e-9)),
+        ]);
+    }
+    t
+}
+
+/// Depth ablation — the paper's motivation ("the ELM-based approach
+/// cannot be applied to DNNs that have multiple or many hidden layers")
+/// and its implicit scaling claim: LoRA-All's backward cost grows with
+/// depth while Skip-LoRA's stays flat (every adapter still terminates at
+/// the last layer). Sweeps n = 3..=7 hidden stacks on fan-shaped data.
+pub fn ablate_depth(cfg: &ExpConfig) -> Table {
+    use crate::model::MlpConfig;
+    use crate::model::Mlp;
+    let mut t = Table::new(
+        "Ablation: network depth vs backward time (ms/batch) — Skip-LoRA stays flat, LoRA-All grows",
+        &["layers", "LoRA-All bwd", "Skip-LoRA bwd", "ratio", "LoRA-All acc (%)", "Skip-LoRA acc (%)"],
+    );
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    for depth in [3usize, 4, 5, 7] {
+        let mut dims = vec![256];
+        dims.extend(std::iter::repeat(96).take(depth - 1));
+        dims.push(3);
+        let mconfig = MlpConfig { dims, rank: 4, batch_norm: true };
+        // pretrain this deeper backbone briefly
+        let backbone = crate::train::trainer::pretrain(
+            mconfig,
+            &bench.pretrain,
+            cfg.scaled(60),
+            cfg.lr_pretrain,
+            cfg.seed,
+            cfg.backend,
+        );
+        let mut row = vec![depth.to_string()];
+        let mut times = Vec::new();
+        let mut accs = Vec::new();
+        for method in [Method::LoraAll, Method::SkipLora] {
+            let mut model: Mlp = backbone.clone();
+            let mut rng = Rng::new(cfg.seed ^ depth as u64);
+            model.set_topology(&mut rng, method.topology());
+            let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+            let tc = TrainConfig {
+                epochs: cfg.scaled(80),
+                batch_size: cfg.batch,
+                lr: cfg.lr_finetune,
+                seed: cfg.seed,
+                ..Default::default()
+            };
+            let out = train(&mut tuner, &bench.finetune, None, &tc);
+            times.push(out.timer.mean_ms_per("backward", out.batches));
+            accs.push(tuner.accuracy(&bench.test) * 100.0);
+        }
+        row.push(format!("{:.4}", times[0]));
+        row.push(format!("{:.4}", times[1]));
+        row.push(format!("{:.1}x", times[0] / times[1].max(1e-9)));
+        row.push(format!("{:.1}", accs[0]));
+        row.push(format!("{:.1}", accs[1]));
+        t.row(row);
+    }
+    t
+}
+
+/// LoRA-rank sweep: accuracy vs adapter size for Skip2-LoRA (the paper
+/// fixes R = 4; this charts the trade-off it implies).
+pub fn ablate_rank(cfg: &ExpConfig) -> Table {
+    use crate::model::MlpConfig;
+    let mut t = Table::new(
+        "Ablation: LoRA rank sweep for Skip2-LoRA (Damage1; paper uses R=4)",
+        &["rank", "trainable params", "test acc (%)", "train@batch (ms)"],
+    );
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let backbone0 = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    for rank in [1usize, 2, 4, 8, 16] {
+        let mut model = backbone0.clone();
+        model.config = MlpConfig { rank, ..model.config.clone() };
+        let mut rng = Rng::new(cfg.seed ^ rank as u64);
+        model.set_topology(&mut rng, Method::Skip2Lora.topology());
+        let params = model.adapter_param_count();
+        let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs: cfg.scaled(100),
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let out = train(&mut tuner, &bench.finetune, None, &tc);
+        let acc = tuner.accuracy(&bench.test) * 100.0;
+        t.row(vec![
+            rank.to_string(),
+            params.to_string(),
+            format!("{acc:.1}"),
+            format!("{:.3}", out.train_ms_per_batch()),
+        ]);
+    }
+    t
+}
+
+/// Bounded-cache capacity, END TO END: run real Skip2-LoRA fine-tuning
+/// with the LRU cache at various capacities (TrainConfig::cache_capacity)
+/// and report time, hit rate, and accuracy — the §4.3 trade-off measured,
+/// not replayed.
+pub fn ablate_cache_size_e2e(cfg: &ExpConfig) -> Table {
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let n = bench.finetune.len();
+    let mut t = Table::new(
+        "Ablation: bounded-LRU Skip-Cache end-to-end (Damage1, with-replacement sampling)",
+        &["capacity", "hit rate", "train@batch (ms)", "test acc (%)"],
+    );
+    for cap in [None, Some(n), Some(n / 2), Some(n / 4), Some(n / 10)] {
+        let mut model = backbone.clone();
+        let mut rng = Rng::new(cfg.seed ^ 0xCA9);
+        model.set_topology(&mut rng, Method::Skip2Lora.topology());
+        let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs: cfg.scaled(100),
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            cache_capacity: cap,
+            ..Default::default()
+        };
+        let out = train(&mut tuner, &bench.finetune, None, &tc);
+        let acc = tuner.accuracy(&bench.test) * 100.0;
+        let hr = out.cache_hits as f64 / (out.cache_hits + out.cache_misses).max(1) as f64;
+        let label = match cap {
+            None => format!("{n} (full store)"),
+            Some(c) => format!("{c} (LRU)"),
+        };
+        t.row(vec![
+            label,
+            format!("{:.1}%", hr * 100.0),
+            format!("{:.3}", out.train_ms_per_batch()),
+            format!("{acc:.1}"),
+        ]);
+    }
+    t
+}
+
+/// Epoch sweep: measured Skip2-LoRA forward cost vs the 1/E model
+/// (paper §4.2: "it is expected that the forward compute cost is reduced
+/// to 1/E"), with the analytic cost model's prediction alongside.
+pub fn sweep_epochs(cfg: &ExpConfig) -> Table {
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let mut t = Table::new(
+        "Epoch sweep: Skip2-LoRA forward ms/batch vs E (paper model: cost -> 1/E of Skip-LoRA)",
+        &["E", "hit rate", "Skip2 fwd (ms)", "Skip-LoRA fwd (ms)", "measured ratio", "1/E + residual model"],
+    );
+    // Skip-LoRA reference forward (uncached)
+    let skip_fwd = {
+        let mut model = backbone.clone();
+        let mut rng = Rng::new(cfg.seed);
+        model.set_topology(&mut rng, Method::SkipLora.topology());
+        let mut tuner = FineTuner::new(model, Method::SkipLora, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs: 20,
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let out = train(&mut tuner, &bench.finetune, None, &tc);
+        out.timer.mean_ms_per("forward", out.batches)
+    };
+    for epochs in [1usize, 2, 5, 10, 30, 100] {
+        let mut model = backbone.clone();
+        let mut rng = Rng::new(cfg.seed ^ epochs as u64);
+        model.set_topology(&mut rng, Method::Skip2Lora.topology());
+        let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs,
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let out = train(&mut tuner, &bench.finetune, None, &tc);
+        let fwd = out.timer.mean_ms_per("forward", out.batches);
+        let hr = out.cache_hits as f64 / (out.cache_hits + out.cache_misses).max(1) as f64;
+        // model: adapter residual fraction r stays; frozen stack scales 1/E
+        let residual = {
+            let full = crate::costmodel::batch_cost(
+                Method::SkipLora, &[256, 96, 96, 3], 4, cfg.batch, 0.0);
+            let cached = crate::costmodel::batch_cost(
+                Method::Skip2Lora, &[256, 96, 96, 3], 4, cfg.batch, 1.0);
+            cached.forward_flops as f64 / full.forward_flops as f64
+        };
+        let model_ratio = residual + (1.0 - residual) / epochs as f64;
+        t.row(vec![
+            epochs.to_string(),
+            format!("{:.1}%", hr * 100.0),
+            format!("{fwd:.4}"),
+            format!("{skip_fwd:.4}"),
+            format!("{:.3}", fwd / skip_fwd.max(1e-12)),
+            format!("{model_ratio:.3}"),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,183 @@
+//! Accuracy experiments: Tables 3, 4, 5.
+
+use crate::data::DriftBenchmark;
+use crate::method::Method;
+use crate::model::Mlp;
+use crate::nn::tinytl::ResidualNorm;
+use crate::report::Table;
+use crate::train::trainer::pretrain;
+use crate::train::{train, FineTuner, TrainConfig};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::{DatasetId, ExpConfig};
+
+/// Pre-train a backbone for one trial (§5.2 step 1).
+pub fn pretrain_backbone(
+    ds: DatasetId,
+    bench: &DriftBenchmark,
+    cfg: &ExpConfig,
+    trial: usize,
+) -> Mlp {
+    let (pre_epochs, _) = cfg.epochs_for(ds);
+    pretrain(
+        ds.mlp_config(),
+        &bench.pretrain,
+        pre_epochs,
+        cfg.lr_pretrain,
+        cfg.seed ^ (trial as u64) << 8,
+        cfg.backend,
+    )
+}
+
+/// Fine-tune a pre-trained backbone with `method` and return test accuracy
+/// plus the train outcome (§5.2 steps 2-3).
+pub fn finetune_and_test(
+    ds: DatasetId,
+    bench: &DriftBenchmark,
+    backbone: &Mlp,
+    method: Method,
+    cfg: &ExpConfig,
+    trial: usize,
+) -> (f64, crate::train::TrainOutcome) {
+    let (_, fine_epochs) = cfg.epochs_for(ds);
+    let mut model = backbone.clone();
+    let mut rng = Rng::new(cfg.seed ^ 0xAD ^ (trial as u64) << 16);
+    model.set_topology(&mut rng, method.topology());
+    let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+    let tc = TrainConfig {
+        epochs: fine_epochs,
+        batch_size: cfg.batch,
+        lr: cfg.lr_finetune,
+        seed: cfg.seed ^ (trial as u64),
+        ..Default::default()
+    };
+    let out = train(&mut tuner, &bench.finetune, None, &tc);
+    let acc = tuner.accuracy(&bench.test);
+    (acc, out)
+}
+
+/// Table 3: accuracy before/after data drift (no fine-tuning methods —
+/// "Before" trains on the pre-train set only, "After" on the fine-tune set
+/// only, both tested on the drifted test set).
+pub fn table3(cfg: &ExpConfig) -> Table {
+    let mut t = Table::new(
+        "Table 3: Accuracy before and after data drift on 3-layer DNN (%)",
+        &["", "Before", "After"],
+    );
+    for ds in DatasetId::ALL {
+        let (mut before, mut after) = (Vec::new(), Vec::new());
+        let (_, _, e3) = ds.paper_epochs();
+        let epochs = cfg.scaled(e3);
+        for trial in 0..cfg.trials {
+            let bench = ds.benchmark(cfg.seed ^ trial as u64);
+            // Before: train on pre-train data, test on drifted test data
+            let mut m = pretrain(
+                ds.mlp_config(),
+                &bench.pretrain,
+                epochs,
+                cfg.lr_pretrain,
+                cfg.seed ^ (trial as u64) << 4,
+                cfg.backend,
+            );
+            let mut ft = FineTuner::new(
+                std::mem::replace(&mut m, Mlp::new(&mut Rng::new(0), ds.mlp_config(), crate::model::mlp::AdapterTopology::None)),
+                Method::FtAll,
+                cfg.backend,
+                cfg.batch,
+            );
+            before.push(ft.accuracy(&bench.test) * 100.0);
+            // After: train on the fine-tune (drifted) data only
+            let m2 = pretrain(
+                ds.mlp_config(),
+                &bench.finetune,
+                epochs,
+                cfg.lr_pretrain,
+                cfg.seed ^ (trial as u64) << 5,
+                cfg.backend,
+            );
+            let mut ft2 = FineTuner::new(m2, Method::FtAll, cfg.backend, cfg.batch);
+            after.push(ft2.accuracy(&bench.test) * 100.0);
+        }
+        t.row(vec![
+            ds.name().to_string(),
+            stats::mean_pm_std(&before),
+            stats::mean_pm_std(&after),
+        ]);
+    }
+    t
+}
+
+/// Table 4: accuracy of all eight fine-tuning methods on the three
+/// datasets (§5.2 protocol: pretrain -> finetune -> test, per trial).
+pub fn table4(cfg: &ExpConfig) -> Table {
+    let headers: Vec<&str> = std::iter::once("")
+        .chain(Method::ALL.iter().map(|m| m.name()))
+        .collect();
+    let mut t = Table::new(
+        "Table 4: Accuracy of proposed and counterpart fine-tuning methods (%)",
+        &headers,
+    );
+    for ds in DatasetId::ALL {
+        let mut per_method: Vec<Vec<f64>> = vec![Vec::new(); Method::ALL.len()];
+        for trial in 0..cfg.trials {
+            let bench = ds.benchmark(cfg.seed ^ trial as u64);
+            // one backbone per trial, shared by every method (the paper
+            // fine-tunes the same pre-trained model per method)
+            let backbone = pretrain_backbone(ds, &bench, cfg, trial);
+            for (mi, &method) in Method::ALL.iter().enumerate() {
+                let (acc, _) =
+                    finetune_and_test(ds, &bench, &backbone, method, cfg, trial);
+                per_method[mi].push(acc * 100.0);
+            }
+        }
+        let mut row = vec![ds.name().to_string()];
+        for accs in &per_method {
+            row.push(stats::mean_pm_std(accs));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Table 5: TinyTL (GN and BN variants).
+pub fn table5(cfg: &ExpConfig) -> Table {
+    let mut t = Table::new(
+        "Table 5: Accuracy of TinyTL-style fine-tuning (lite residual, MLP backbone) (%)",
+        &["", "TinyTL (GN)", "TinyTL (BN)"],
+    );
+    for ds in DatasetId::ALL {
+        let (mut gn, mut bn) = (Vec::new(), Vec::new());
+        let (_, fine_epochs) = cfg.epochs_for(ds);
+        for trial in 0..cfg.trials {
+            let bench = ds.benchmark(cfg.seed ^ trial as u64);
+            let backbone = pretrain_backbone(ds, &bench, cfg, trial);
+            for (norm, accs) in [
+                (ResidualNorm::Group { groups: 8 }, &mut gn),
+                (ResidualNorm::Batch, &mut bn),
+            ] {
+                let mut tt = crate::train::tinytl::TinyTlTuner::new(
+                    backbone.clone(),
+                    norm,
+                    4,
+                    cfg.backend,
+                    cfg.batch,
+                    cfg.seed ^ (trial as u64) << 3,
+                );
+                tt.finetune(
+                    &bench.finetune,
+                    fine_epochs,
+                    cfg.lr_finetune,
+                    cfg.seed ^ trial as u64,
+                );
+                accs.push(tt.accuracy(&bench.test) * 100.0);
+            }
+        }
+        t.row(vec![
+            ds.name().to_string(),
+            stats::mean_pm_std(&gn),
+            stats::mean_pm_std(&bn),
+        ]);
+    }
+    t
+}

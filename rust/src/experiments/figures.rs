@@ -1,0 +1,178 @@
+//! Figure experiments: Fig. 3 (training curves / required epochs) and
+//! Fig. 4 (power/temperature trace).
+
+use crate::device::power::{simulate, ActivityLog, DeviceModel};
+use crate::method::Method;
+use crate::report::{ascii_plot, Table};
+use crate::train::{train, FineTuner, TrainConfig};
+use crate::util::rng::Rng;
+
+use super::{accuracy, DatasetId, ExpConfig};
+
+/// One dataset's training curve: (epoch, accuracy%) samples + the
+/// paper's "required epochs" (first epoch within 1% of the final value).
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub ds: DatasetId,
+    pub points: Vec<(usize, f64)>,
+    pub required_epochs: usize,
+    pub train_ms_per_batch: f64,
+    pub batches_per_epoch: usize,
+    /// estimated total fine-tune time at required_epochs (paper §5.3:
+    /// 1.06 s / 0.64 s / 2.79 s on the Pi)
+    pub total_secs_at_required: f64,
+}
+
+/// Fig. 3: Skip2-LoRA accuracy-vs-epoch on each dataset (mean over
+/// trials), plus required-epoch extraction.
+pub fn fig3(cfg: &ExpConfig) -> (Vec<Curve>, String) {
+    let mut curves = Vec::new();
+    let mut plots = String::new();
+    for ds in DatasetId::ALL {
+        let (_, fine_epochs) = cfg.epochs_for(ds);
+        let eval_every = (fine_epochs / 25).max(1);
+        // accumulate accuracy curves over trials
+        let mut acc_sum: Vec<(usize, f64)> = Vec::new();
+        let mut train_ms = 0.0;
+        let mut bpe = 0usize;
+        for trial in 0..cfg.trials {
+            let bench = ds.benchmark(cfg.seed ^ trial as u64);
+            let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, trial);
+            let mut model = backbone;
+            let mut rng = Rng::new(cfg.seed ^ 0xF3 ^ trial as u64);
+            model.set_topology(&mut rng, Method::Skip2Lora.topology());
+            let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+            let tc = TrainConfig {
+                epochs: fine_epochs,
+                batch_size: cfg.batch,
+                lr: cfg.lr_finetune,
+                seed: cfg.seed ^ trial as u64,
+                eval_every,
+                ..Default::default()
+            };
+            let out = train(&mut tuner, &bench.finetune, Some(&bench.test), &tc);
+            if acc_sum.is_empty() {
+                acc_sum = out.curve.iter().map(|&(e, a)| (e, a)).collect();
+            } else {
+                for (dst, &(_, a)) in acc_sum.iter_mut().zip(&out.curve) {
+                    dst.1 += a;
+                }
+            }
+            train_ms += out.train_ms_per_batch();
+            bpe = bench.finetune.len() / cfg.batch;
+        }
+        for p in acc_sum.iter_mut() {
+            p.1 = p.1 / cfg.trials as f64 * 100.0;
+        }
+        train_ms /= cfg.trials as f64;
+
+        // required epochs: first epoch within 1% of the final accuracy
+        let final_acc = acc_sum.last().map(|&(_, a)| a).unwrap_or(0.0);
+        let required = acc_sum
+            .iter()
+            .find(|&&(_, a)| a >= final_acc - 1.0)
+            .map(|&(e, _)| e.max(1))
+            .unwrap_or(1);
+        let total_secs = required as f64 * bpe as f64 * train_ms / 1e3;
+
+        let xs: Vec<f64> = acc_sum.iter().map(|&(e, _)| e as f64).collect();
+        let ys: Vec<f64> = acc_sum.iter().map(|&(_, a)| a).collect();
+        plots.push_str(&ascii_plot(
+            &format!(
+                "Fig 3 ({}): Skip2-LoRA test accuracy (%) vs epoch — required epochs ≈ {} (total ≈ {:.2}s)",
+                ds.name(),
+                required,
+                total_secs
+            ),
+            &xs,
+            &ys,
+            64,
+            12,
+        ));
+        curves.push(Curve {
+            ds,
+            points: acc_sum,
+            required_epochs: required,
+            train_ms_per_batch: train_ms,
+            batches_per_epoch: bpe,
+            total_secs_at_required: total_secs,
+        });
+    }
+    (curves, plots)
+}
+
+pub fn fig3_table(curves: &[Curve]) -> Table {
+    let mut t = Table::new(
+        "Fig 3 summary: required epochs and total fine-tuning time (paper: 100/60/200 epochs; 1.06/0.64/2.79 s on Pi Zero 2 W)",
+        &["dataset", "required epochs", "train@batch (ms)", "batches/epoch", "total (s)"],
+    );
+    for c in curves {
+        t.row(vec![
+            c.ds.name().to_string(),
+            c.required_epochs.to_string(),
+            format!("{:.3}", c.train_ms_per_batch),
+            c.batches_per_epoch.to_string(),
+            format!("{:.2}", c.total_secs_at_required),
+        ]);
+    }
+    t
+}
+
+/// Fig. 4: run the HAR Skip2-LoRA fine-tune, record the real busy
+/// interval, and simulate the Pi Zero 2 W power/temperature trace
+/// (fine-tuning starts at t = 9 s like the paper's plot).
+pub fn fig4(cfg: &ExpConfig) -> (String, Table) {
+    let ds = DatasetId::Har;
+    let bench = ds.benchmark(cfg.seed);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let mut model = backbone;
+    let mut rng = Rng::new(cfg.seed ^ 0xF4);
+    model.set_topology(&mut rng, Method::Skip2Lora.topology());
+    let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+
+    // paper: E = 200 for the Fig. 4 run
+    let epochs = cfg.scaled(200);
+    let t0 = std::time::Instant::now();
+    let tc = TrainConfig {
+        epochs,
+        batch_size: cfg.batch,
+        lr: cfg.lr_finetune,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let _ = train(&mut tuner, &bench.finetune, None, &tc);
+    let busy = t0.elapsed().as_secs_f64();
+
+    // overheads the paper mentions (dataset read + weight load) modeled
+    // as a short lead-in burst
+    let mut log = ActivityLog::default();
+    let start = 9.0;
+    log.push_busy(start, start + 0.4 + busy);
+    let total = start + busy + 20.0;
+    let model = DeviceModel::default();
+    let trace = simulate(&model, &log, total, 0.1);
+
+    let xs: Vec<f64> = trace.iter().map(|p| p.t_s).collect();
+    let power: Vec<f64> = trace.iter().map(|p| p.power_mw).collect();
+    let temp: Vec<f64> = trace.iter().map(|p| p.temp_c).collect();
+    let mut plot = ascii_plot(
+        &format!("Fig 4a (HAR, E={epochs}): simulated power (mW) — fine-tuning starts at 9 s, busy {busy:.2} s"),
+        &xs,
+        &power,
+        70,
+        10,
+    );
+    plot.push_str(&ascii_plot("Fig 4b: simulated temperature (°C)", &xs, &temp, 70, 10));
+
+    let peak_p = power.iter().fold(0.0f64, |a, &b| a.max(b));
+    let peak_t = temp.iter().fold(0.0f64, |a, &b| a.max(b));
+    let mut t = Table::new(
+        "Fig 4 summary (paper: peak 1455 mW, max 44.5 °C)",
+        &["metric", "value"],
+    );
+    t.row(vec!["fine-tune busy time (s)".into(), format!("{busy:.2}")]);
+    t.row(vec!["peak power (mW)".into(), format!("{peak_p:.0}")]);
+    t.row(vec!["peak temperature (°C)".into(), format!("{peak_t:.1}")]);
+    t.row(vec!["clock idle/busy (MHz)".into(), "600 / 1000".into()]);
+    (plot, t)
+}

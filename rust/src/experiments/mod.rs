@@ -1,0 +1,126 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! CLI (`skip2lora <table>`) and the bench targets. See DESIGN.md §5 for
+//! the experiment index.
+
+pub mod ablation;
+pub mod accuracy;
+pub mod figures;
+pub mod pjrt_check;
+pub mod timing;
+
+use crate::data::{fan, har, DriftBenchmark};
+use crate::model::MlpConfig;
+use crate::tensor::ops::Backend;
+
+/// The paper's three drifted datasets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetId {
+    Damage1,
+    Damage2,
+    Har,
+}
+
+impl DatasetId {
+    pub const ALL: [DatasetId; 3] = [DatasetId::Damage1, DatasetId::Damage2, DatasetId::Har];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetId::Damage1 => "Damage1",
+            DatasetId::Damage2 => "Damage2",
+            DatasetId::Har => "HAR",
+        }
+    }
+
+    pub fn benchmark(self, seed: u64) -> DriftBenchmark {
+        match self {
+            DatasetId::Damage1 => fan::damage(seed, fan::DamageKind::Holes),
+            DatasetId::Damage2 => fan::damage(seed, fan::DamageKind::Chipped),
+            DatasetId::Har => har::har(seed),
+        }
+    }
+
+    pub fn mlp_config(self) -> MlpConfig {
+        match self {
+            DatasetId::Damage1 | DatasetId::Damage2 => MlpConfig::fan(),
+            DatasetId::Har => MlpConfig::har(),
+        }
+    }
+
+    /// Paper §5.2 epochs: (pretrain, finetune, before/after table-3).
+    pub fn paper_epochs(self) -> (usize, usize, usize) {
+        match self {
+            DatasetId::Damage1 | DatasetId::Damage2 => (100, 300, 400),
+            DatasetId::Har => (300, 600, 900),
+        }
+    }
+}
+
+/// Global experiment configuration (CLI flags map onto this).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub trials: usize,
+    pub seed: u64,
+    pub lr_pretrain: f32,
+    pub lr_finetune: f32,
+    pub batch: usize,
+    pub backend: Backend,
+    /// scale factor on the paper's epoch counts (1.0 = paper protocol;
+    /// the default `quick` profile uses fewer epochs — synthetic data
+    /// converges faster and the host is a single shared core)
+    pub epoch_scale: f64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self {
+            trials: 3,
+            seed: 42,
+            lr_pretrain: 0.05,
+            lr_finetune: 0.02,
+            batch: 20,
+            backend: Backend::Blocked,
+            epoch_scale: 0.3,
+        }
+    }
+}
+
+impl ExpConfig {
+    pub fn paper() -> Self {
+        Self { trials: 20, epoch_scale: 1.0, ..Default::default() }
+    }
+
+    pub fn scaled(&self, paper_epochs: usize) -> usize {
+        ((paper_epochs as f64 * self.epoch_scale).round() as usize).max(5)
+    }
+
+    /// (pretrain, finetune) epochs for a dataset under this profile.
+    pub fn epochs_for(&self, ds: DatasetId) -> (usize, usize) {
+        let (pre, fine, _) = ds.paper_epochs();
+        (self.scaled(pre), self.scaled(fine))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_epochs_match_section_5_2() {
+        assert_eq!(DatasetId::Damage1.paper_epochs(), (100, 300, 400));
+        assert_eq!(DatasetId::Har.paper_epochs(), (300, 600, 900));
+    }
+
+    #[test]
+    fn scaling_floors_at_5() {
+        let cfg = ExpConfig { epoch_scale: 0.001, ..Default::default() };
+        assert_eq!(cfg.scaled(300), 5);
+        let paper = ExpConfig::paper();
+        assert_eq!(paper.scaled(300), 300);
+    }
+
+    #[test]
+    fn dataset_configs_have_paper_dims() {
+        assert_eq!(DatasetId::Damage1.mlp_config().dims, vec![256, 96, 96, 3]);
+        assert_eq!(DatasetId::Har.mlp_config().dims, vec![561, 96, 96, 6]);
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT ↔ native cross-validation and benchmark: proves the three-layer
+//! AOT story end-to-end (jax/pallas-lowered HLO executed from rust
+//! matches the native engine's numerics).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::engine::pjrt::{one_hot, PjrtSkip2};
+use crate::method::Method;
+use crate::model::mlp::AdapterTopology;
+use crate::report::Table;
+use crate::tensor::Mat;
+use crate::train::FineTuner;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+
+use super::{accuracy, DatasetId, ExpConfig};
+
+/// Max |a-b| over two slices.
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Cross-check: native predict vs PJRT predict, native cached step vs
+/// PJRT skip2_step, on the Fan model. Returns a table of max deviations.
+pub fn verify(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let mut backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let mut rng = Rng::new(cfg.seed ^ 0x93);
+    backbone.set_topology(&mut rng, AdapterTopology::Skip);
+    // make adapters non-trivial so predict exercises them
+    for ad in backbone.skip.iter_mut() {
+        for v in ad.wb.data.iter_mut() {
+            *v = 0.01 * rng.normal();
+        }
+    }
+
+    let mut native = FineTuner::new(backbone.clone(), Method::SkipLora, cfg.backend, cfg.batch);
+    let mut pjrt = PjrtSkip2::new(artifacts, "fan", &backbone)?;
+
+    let mut t = Table::new(
+        "PJRT ↔ native cross-check (fan model)",
+        &["check", "max |Δ|", "verdict"],
+    );
+    let tol = 2e-3f32;
+    let verdict = |d: f32| if d < tol { "OK".to_string() } else { format!("FAIL (tol {tol})") };
+
+    // 1) batched predict
+    let b = pjrt.batch;
+    let nfe = bench.test.n_features();
+    let xb = Mat::from_vec(b, nfe, bench.test.x.data[..b * nfe].to_vec());
+    let native_logits = native.predict_alloc(&xb);
+    let pjrt_logits = pjrt.predict_batch(&xb.data)?;
+    let d1 = max_abs_diff(&native_logits.data, &pjrt_logits);
+    t.row(vec!["predict (B=20) logits".into(), format!("{d1:.2e}"), verdict(d1)]);
+
+    // 2) single-sample predict
+    let x1 = bench.test.x.row(0);
+    let p1 = pjrt.predict_one(x1)?;
+    let n1 = native.predict_alloc(&Mat::from_vec(1, nfe, x1.to_vec()));
+    let d2 = max_abs_diff(&n1.data, &p1);
+    t.row(vec!["predict (B=1) logits".into(), format!("{d2:.2e}"), verdict(d2)]);
+
+    // 3) cache populate == native frozen activations
+    let (x2, x3, c3) = pjrt.cache_populate(&xb.data)?;
+    // native: run the cached path through a fresh SkipCache
+    let mut cache = crate::cache::SkipCache::new(bench.test.len());
+    let mut timer = PhaseTimer::new();
+    let idx: Vec<usize> = (0..b).collect();
+    let mut nat2 = FineTuner::new(backbone.clone(), Method::Skip2Lora, cfg.backend, b);
+    nat2.forward_cached(&bench.test, &idx, &mut cache, &mut timer);
+    let mut native_x2 = Vec::new();
+    let mut native_c3 = Vec::new();
+    for i in 0..b {
+        let e = cache.peek(i).unwrap();
+        native_x2.extend_from_slice(&e.xs[0]);
+        native_c3.extend_from_slice(&e.c_n);
+    }
+    let d3 = max_abs_diff(&native_x2, &x2);
+    let d3b = max_abs_diff(&native_c3, &c3);
+    t.row(vec!["cache_populate x2".into(), format!("{d3:.2e}"), verdict(d3)]);
+    t.row(vec!["cache_populate c3".into(), format!("{d3b:.2e}"), verdict(d3b)]);
+
+    // 4) one train step: loss + updated adapter weights
+    let labels: Vec<usize> = bench.test.labels[..b].to_vec();
+    let y = one_hot(&labels, 3);
+    let lr = 0.05f32;
+    let pjrt_loss = pjrt.step(&xb.data, &x2, &x3, &c3, &y, lr)?;
+
+    nat2.labels.copy_from_slice(&labels);
+    let nat_loss = nat2.backward(&mut timer);
+    nat2.update(lr, &mut timer);
+    let d4 = (pjrt_loss - nat_loss).abs();
+    t.row(vec!["skip2 step loss".into(), format!("{d4:.2e}"), verdict(d4)]);
+    let d5 = max_abs_diff(&nat2.model.skip[0].wb.data, &pjrt.lora[1]);
+    t.row(vec!["updated wb1 after step".into(), format!("{d5:.2e}"), verdict(d5)]);
+
+    // 5) multi-step loss trajectory agreement
+    let mut worst = 0.0f32;
+    for _ in 0..5 {
+        let pl = pjrt.step(&xb.data, &x2, &x3, &c3, &y, lr)?;
+        nat2.forward_cached(&bench.test, &idx, &mut cache, &mut timer);
+        let nl = nat2.backward(&mut timer);
+        nat2.update(lr, &mut timer);
+        worst = worst.max((pl - nl).abs());
+    }
+    t.row(vec!["5-step loss trajectory".into(), format!("{worst:.2e}"), verdict(worst)]);
+
+    Ok(t)
+}
+
+/// Timing comparison: PJRT step/predict vs native (dispatch overhead is
+/// expected to dominate at these tiny model sizes — that's the point of
+/// the native engine; see DESIGN.md §2).
+pub fn bench(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
+    let ds = DatasetId::Damage1;
+    let bench_data = ds.benchmark(cfg.seed);
+    let mut backbone = accuracy::pretrain_backbone(ds, &bench_data, cfg, 0);
+    let mut rng = Rng::new(cfg.seed);
+    backbone.set_topology(&mut rng, AdapterTopology::Skip);
+    let mut pjrt = PjrtSkip2::new(artifacts, "fan", &backbone)?;
+
+    let b = pjrt.batch;
+    let nfe = bench_data.finetune.n_features();
+    let xb: Vec<f32> = bench_data.finetune.x.data[..b * nfe].to_vec();
+    let (x2, x3, c3) = pjrt.cache_populate(&xb)?;
+    let y = one_hot(&bench_data.finetune.labels[..b], 3);
+
+    let reps = 100;
+    let time_it = |f: &mut dyn FnMut()| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+    };
+
+    let step_ms = time_it(&mut || {
+        let _ = pjrt.step(&xb, &x2, &x3, &c3, &y, 0.01).unwrap();
+    });
+    let populate_ms = time_it(&mut || {
+        let _ = pjrt.cache_populate(&xb).unwrap();
+    });
+    let x1 = &xb[..nfe];
+    let predict_ms = time_it(&mut || {
+        let _ = pjrt.predict_one(x1).unwrap();
+    });
+
+    // native comparison
+    let mut native = FineTuner::new(backbone.clone(), Method::SkipLora, cfg.backend, b);
+    let mut timer = PhaseTimer::new();
+    let idx: Vec<usize> = (0..b).collect();
+    native.load_batch(&bench_data.finetune, &idx);
+    let native_step_ms = time_it(&mut || {
+        native.forward(&mut timer);
+        let _ = native.backward(&mut timer);
+        native.update(0.01, &mut timer);
+    });
+
+    let mut t = Table::new(
+        "PJRT engine timing (fan; dispatch overhead dominates at edge scale)",
+        &["operation", "ms"],
+    );
+    t.row(vec!["pjrt skip2_step (B=20)".into(), format!("{step_ms:.3}")]);
+    t.row(vec!["pjrt cache_populate (B=20)".into(), format!("{populate_ms:.3}")]);
+    t.row(vec!["pjrt predict (B=1)".into(), format!("{predict_ms:.3}")]);
+    t.row(vec!["native full train step (B=20)".into(), format!("{native_step_ms:.3}")]);
+    Ok(t)
+}

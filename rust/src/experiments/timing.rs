@@ -1,0 +1,179 @@
+//! Execution-time experiments: Tables 2, 6, 7 and the §5.3 headline
+//! reductions.
+
+use crate::method::Method;
+use crate::report::Table;
+use crate::tensor::Mat;
+use crate::train::finetuner::{FineTuner, PH_BACKWARD, PH_FORWARD, PH_UPDATE};
+use crate::train::{train, TrainConfig, TrainOutcome};
+use crate::util::rng::Rng;
+
+use super::{accuracy, DatasetId, ExpConfig};
+
+/// Timing rows for one method on one dataset.
+#[derive(Clone, Debug)]
+pub struct MethodTiming {
+    pub method: Method,
+    pub train_ms: f64,
+    pub forward_ms: f64,
+    pub backward_ms: f64,
+    pub update_ms: f64,
+    pub predict_ms_per_sample: f64,
+}
+
+/// Run the timing protocol for every method on `ds`. The backbone is
+/// pre-trained once (timing doesn't depend on weight values) and each
+/// method fine-tunes for the profile's epoch count — the Skip2-LoRA
+/// number *depends* on E (forward cost → 1/E), exactly as in the paper.
+pub fn measure_methods(ds: DatasetId, cfg: &ExpConfig) -> Vec<MethodTiming> {
+    let bench = ds.benchmark(cfg.seed);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let (_, fine_epochs) = cfg.epochs_for(ds);
+
+    let mut out = Vec::new();
+    for &method in Method::ALL.iter() {
+        let mut model = backbone.clone();
+        let mut rng = Rng::new(cfg.seed ^ 0x77);
+        model.set_topology(&mut rng, method.topology());
+        let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs: fine_epochs,
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let outcome: TrainOutcome = train(&mut tuner, &bench.finetune, None, &tc);
+        let b = outcome.batches;
+
+        // Predict@sample: single-sample inference, averaged
+        let reps = 200usize;
+        let x1 = Mat::from_vec(1, bench.test.n_features(), bench.test.x.row(0).to_vec());
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = std::hint::black_box(tuner.predict_alloc(&x1));
+        }
+        let predict_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+        out.push(MethodTiming {
+            method,
+            train_ms: outcome.train_ms_per_batch(),
+            forward_ms: outcome.timer.mean_ms_per(PH_FORWARD, b),
+            backward_ms: outcome.timer.mean_ms_per(PH_BACKWARD, b),
+            update_ms: outcome.timer.mean_ms_per(PH_UPDATE, b),
+            predict_ms_per_sample: predict_ms,
+        });
+    }
+    out
+}
+
+/// Tables 6 (Fan) / 7 (HAR): execution time per training batch, split by
+/// phase, plus per-sample prediction.
+pub fn table6_7(ds: DatasetId, cfg: &ExpConfig) -> Table {
+    let rows = measure_methods(ds, cfg);
+    let which = if ds == DatasetId::Har { "7" } else { "6" };
+    let name = if ds == DatasetId::Har { "HAR" } else { "Fan" };
+    let headers: Vec<&str> = std::iter::once("")
+        .chain(Method::ALL.iter().map(|m| m.name()))
+        .collect();
+    let mut t = Table::new(
+        &format!("Table {which}: Execution time for {name} dataset (msec, this host)"),
+        &headers,
+    );
+    let fmt = |f: f64| format!("{f:.3}");
+    for (label, get) in [
+        ("Train@batch", &(|r: &MethodTiming| r.train_ms) as &dyn Fn(&MethodTiming) -> f64),
+        ("  forward", &|r: &MethodTiming| r.forward_ms),
+        ("  backward", &|r: &MethodTiming| r.backward_ms),
+        ("  weight update", &|r: &MethodTiming| r.update_ms),
+        ("Predict@sample", &|r: &MethodTiming| r.predict_ms_per_sample),
+    ] {
+        let mut row = vec![label.to_string()];
+        row.extend(rows.iter().map(|r| fmt(get(r))));
+        t.row(row);
+    }
+    t
+}
+
+/// Table 2: per-layer execution-time breakdown of FT-All-LoRA (%) for
+/// forward and backward passes on both datasets.
+pub fn table2(cfg: &ExpConfig) -> (Table, Table) {
+    let fwd_rows = [
+        "fwd/FC1", "fwd/LoRA1", "fwd/BN1", "fwd/Act1", "fwd/FC2", "fwd/LoRA2",
+        "fwd/BN2", "fwd/Act2", "fwd/FC3", "fwd/LoRA3",
+    ];
+    let bwd_rows = [
+        "bwd/FC3", "bwd/LoRA3", "bwd/Act2", "bwd/BN2", "bwd/FC2", "bwd/LoRA2",
+        "bwd/Act1", "bwd/BN1", "bwd/FC1", "bwd/LoRA1",
+    ];
+    let mut fwd = Table::new(
+        "Table 2 (forward): FT-All-LoRA execution-time breakdown (%)",
+        &["Forward", "Fan", "HAR"],
+    );
+    let mut bwd = Table::new(
+        "Table 2 (backward): FT-All-LoRA execution-time breakdown (%)",
+        &["Backward", "Fan", "HAR"],
+    );
+
+    let pct = |ds: DatasetId| {
+        let bench = ds.benchmark(cfg.seed);
+        let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+        let mut model = backbone;
+        let mut rng = Rng::new(cfg.seed);
+        model.set_topology(&mut rng, Method::FtAllLora.topology());
+        let mut tuner = FineTuner::new(model, Method::FtAllLora, cfg.backend, cfg.batch);
+        let tc = TrainConfig {
+            epochs: cfg.scaled(60),
+            batch_size: cfg.batch,
+            lr: cfg.lr_finetune,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let out = train(&mut tuner, &bench.finetune, None, &tc);
+        (
+            out.timer.percent_breakdown(&fwd_rows),
+            out.timer.percent_breakdown(&bwd_rows),
+        )
+    };
+
+    let (fan_f, fan_b) = pct(DatasetId::Damage1);
+    let (har_f, har_b) = pct(DatasetId::Har);
+    for i in 0..fwd_rows.len() {
+        fwd.row(vec![
+            fwd_rows[i].trim_start_matches("fwd/").to_string(),
+            format!("{:.2}", fan_f[i].1),
+            format!("{:.2}", har_f[i].1),
+        ]);
+        bwd.row(vec![
+            bwd_rows[i].trim_start_matches("bwd/").to_string(),
+            format!("{:.2}", fan_b[i].1),
+            format!("{:.2}", har_b[i].1),
+        ]);
+    }
+    fwd.row(vec!["Total (%)".into(), "100.00".into(), "100.00".into()]);
+    bwd.row(vec!["Total (%)".into(), "100.00".into(), "100.00".into()]);
+    (fwd, bwd)
+}
+
+/// §5.3 headline: reductions of Skip-LoRA/Skip2-LoRA vs LoRA-All.
+pub fn headline(cfg: &ExpConfig) -> Table {
+    let mut t = Table::new(
+        "Headline (paper §5.3): reductions vs LoRA-All (paper: bwd −82.5..88.3%, fwd −89.0..93.5%, total −89.0..92.0%)",
+        &["dataset", "Skip-LoRA bwd vs LoRA-All", "Skip2 fwd vs Skip-LoRA", "Skip2 train vs LoRA-All"],
+    );
+    for ds in [DatasetId::Damage1, DatasetId::Har] {
+        let rows = measure_methods(ds, cfg);
+        let get = |m: Method| rows.iter().find(|r| r.method == m).unwrap().clone();
+        let lora_all = get(Method::LoraAll);
+        let skip = get(Method::SkipLora);
+        let skip2 = get(Method::Skip2Lora);
+        let red = |a: f64, b: f64| format!("-{:.1}%", (1.0 - a / b) * 100.0);
+        t.row(vec![
+            ds.name().to_string(),
+            red(skip.backward_ms, lora_all.backward_ms),
+            red(skip2.forward_ms, skip.forward_ms),
+            red(skip2.train_ms, lora_all.train_ms),
+        ]);
+    }
+    t
+}

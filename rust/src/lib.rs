@@ -1,0 +1,23 @@
+//! # skip2lora
+//!
+//! Reproduction of *Skip2-LoRA: A Lightweight On-device DNN Fine-tuning
+//! Method for Low-cost Edge Devices* (Matsutani et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack. See DESIGN.md.
+
+pub mod bench;
+pub mod cache;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod device;
+pub mod engine;
+pub mod experiments;
+pub mod method;
+pub mod model;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod testkit;
+pub mod util;

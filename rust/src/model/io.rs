@@ -1,0 +1,146 @@
+//! Model weight serialization — the `.s2l` binary format.
+//!
+//! Layout (little-endian):
+//!   magic "S2L1" | u32 n_tensors | per tensor: u32 name_len, name bytes,
+//!   u32 rows, u32 cols, rows*cols f32 values.
+//!
+//! Used by the coordinator to persist the pre-trained backbone (the §5.2
+//! protocol pre-trains once per trial, then each fine-tuning method starts
+//! from the same weights) and to hand weights to the PJRT engine.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Mat;
+
+const MAGIC: &[u8; 4] = b"S2L1";
+
+/// An ordered named-tensor bundle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TensorBundle {
+    pub tensors: BTreeMap<String, Mat>,
+}
+
+impl TensorBundle {
+    pub fn insert(&mut self, name: &str, m: Mat) {
+        self.tensors.insert(name.to_string(), m);
+    }
+
+    pub fn insert_vec(&mut self, name: &str, v: &[f32]) {
+        self.tensors
+            .insert(name.to_string(), Mat::from_vec(1, v.len(), v.to_vec()));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Mat> {
+        self.tensors.get(name)
+    }
+
+    pub fn get_vec(&self, name: &str) -> Option<Vec<f32>> {
+        self.tensors.get(name).map(|m| m.data.clone())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, m) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(m.rows as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.cols as u32).to_le_bytes());
+            for v in &m.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut p = 0usize;
+        let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+            if *p + n > bytes.len() {
+                bail!("truncated .s2l file at byte {p}");
+            }
+            let s = &bytes[*p..*p + n];
+            *p += n;
+            Ok(s)
+        };
+        let u32_at = |p: &mut usize| -> Result<u32> {
+            let s = take(p, 4)?;
+            Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        };
+
+        if take(&mut p, 4)? != MAGIC {
+            bail!("bad magic: not a .s2l file");
+        }
+        let n = u32_at(&mut p)? as usize;
+        let mut out = TensorBundle::default();
+        for _ in 0..n {
+            let name_len = u32_at(&mut p)? as usize;
+            let name = String::from_utf8(take(&mut p, name_len)?.to_vec())
+                .context("bad tensor name")?;
+            let rows = u32_at(&mut p)? as usize;
+            let cols = u32_at(&mut p)? as usize;
+            let raw = take(&mut p, rows * cols * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.tensors.insert(name, Mat::from_vec(rows, cols, data));
+        }
+        if p != bytes.len() {
+            bail!("trailing bytes in .s2l file");
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_bytes() {
+        let mut b = TensorBundle::default();
+        b.insert("w1", Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.5));
+        b.insert_vec("b1", &[1.0, -2.0, 3.5]);
+        let dir = std::env::temp_dir().join("s2l_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.s2l");
+        b.save(&path).unwrap();
+        let back = TensorBundle::load(&path).unwrap();
+        assert_eq!(b, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(TensorBundle::from_bytes(b"NOPE").is_err());
+        assert!(TensorBundle::from_bytes(b"S2L1\x01\x00\x00\x00").is_err());
+        // trailing garbage
+        let mut b = TensorBundle::default();
+        b.insert_vec("x", &[1.0]);
+        let dir = std::env::temp_dir().join("s2l_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.s2l");
+        b.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0);
+        assert!(TensorBundle::from_bytes(&bytes).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

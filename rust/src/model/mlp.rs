@@ -1,0 +1,207 @@
+//! The paper's DNN: n FC layers, each hidden layer followed by BN + ReLU
+//! (Figure 1 / Table 2 layout), plus two adapter topologies:
+//!
+//! * `per_layer` adapters — LoRA-All / LoRA-Last / FT-All-LoRA (adapter k
+//!   parallels FC k: N_k -> M_k);
+//! * `skip` adapters — Skip-LoRA / Skip2-LoRA (adapter k maps layer k's
+//!   INPUT to the last layer's output: N_k -> M_n, Eq. 17).
+//!
+//! The struct holds both vectors; `crate::method` decides which are
+//! instantiated and trained. The generic n-layer structure exceeds the
+//! paper's n = 3 so tests can exercise deeper stacks.
+
+use crate::nn::batchnorm::BatchNorm;
+use crate::nn::fc::FcLayer;
+use crate::nn::lora::LoraAdapter;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MlpConfig {
+    /// layer widths, e.g. [256, 96, 96, 3] for the Fan model
+    pub dims: Vec<usize>,
+    /// LoRA rank (paper: 4)
+    pub rank: usize,
+    /// BN + ReLU after each hidden FC (paper: true)
+    pub batch_norm: bool,
+}
+
+impl MlpConfig {
+    pub fn fan() -> Self {
+        Self { dims: vec![256, 96, 96, 3], rank: 4, batch_norm: true }
+    }
+
+    pub fn har() -> Self {
+        Self { dims: vec![561, 96, 96, 6], rank: 4, batch_norm: true }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn n_out(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+}
+
+/// Which adapter sets exist on this model instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterTopology {
+    /// no adapters at all (FT-* methods)
+    None,
+    /// adapter k parallels layer k (LoRA-All/Last, FT-All-LoRA)
+    PerLayer,
+    /// adapter k: layer-k input -> last-layer output (Skip-LoRA)
+    Skip,
+}
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub config: MlpConfig,
+    pub fcs: Vec<FcLayer>,
+    pub bns: Vec<BatchNorm>, // one per hidden layer (n_layers - 1)
+    pub topology: AdapterTopology,
+    /// per-layer adapters (PerLayer topology), len = n_layers or 0
+    pub per_layer: Vec<LoraAdapter>,
+    /// skip adapters (Skip topology), len = n_layers or 0
+    pub skip: Vec<LoraAdapter>,
+}
+
+impl Mlp {
+    pub fn new(rng: &mut Rng, config: MlpConfig, topology: AdapterTopology) -> Self {
+        let n = config.n_layers();
+        let mut fcs = Vec::with_capacity(n);
+        for k in 0..n {
+            fcs.push(FcLayer::new(rng, config.dims[k], config.dims[k + 1]));
+        }
+        let bns = if config.batch_norm {
+            (0..n - 1).map(|k| BatchNorm::new(config.dims[k + 1])).collect()
+        } else {
+            Vec::new()
+        };
+        let mut mlp = Self {
+            config,
+            fcs,
+            bns,
+            topology: AdapterTopology::None,
+            per_layer: Vec::new(),
+            skip: Vec::new(),
+        };
+        mlp.set_topology(rng, topology);
+        mlp
+    }
+
+    /// (Re)create adapters for the requested topology. Called when a
+    /// pre-trained backbone is repurposed for a different fine-tuning
+    /// method (the §5.2 protocol: pretrain once, fine-tune per method).
+    pub fn set_topology(&mut self, rng: &mut Rng, topology: AdapterTopology) {
+        let n = self.config.n_layers();
+        let rank = self.config.rank;
+        let n_out = self.config.n_out();
+        self.per_layer.clear();
+        self.skip.clear();
+        match topology {
+            AdapterTopology::None => {}
+            AdapterTopology::PerLayer => {
+                for k in 0..n {
+                    self.per_layer.push(LoraAdapter::new(
+                        rng,
+                        self.config.dims[k],
+                        rank,
+                        self.config.dims[k + 1],
+                    ));
+                }
+            }
+            AdapterTopology::Skip => {
+                for k in 0..n {
+                    self.skip
+                        .push(LoraAdapter::new(rng, self.config.dims[k], rank, n_out));
+                }
+            }
+        }
+        self.topology = topology;
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.config.n_layers()
+    }
+
+    /// Trainable-parameter count of the adapter sets (paper's "same number
+    /// of trainable parameters" comparison between LoRA-All and Skip-LoRA).
+    pub fn adapter_param_count(&self) -> usize {
+        self.per_layer.iter().map(|a| a.param_count()).sum::<usize>()
+            + self.skip.iter().map(|a| a.param_count()).sum::<usize>()
+    }
+
+    pub fn backbone_param_count(&self) -> usize {
+        self.fcs.iter().map(|f| f.param_count()).sum::<usize>()
+            + self.bns.iter().map(|b| b.param_count()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_shape() {
+        let mut rng = Rng::new(0);
+        let m = Mlp::new(&mut rng, MlpConfig::fan(), AdapterTopology::None);
+        assert_eq!(m.n_layers(), 3);
+        assert_eq!(m.fcs[0].n_in(), 256);
+        assert_eq!(m.fcs[2].n_out(), 3);
+        assert_eq!(m.bns.len(), 2);
+        // backbone params: 256*96+96 + 96*96+96 + 96*3+3 + BN 2*(2*96)
+        assert_eq!(
+            m.backbone_param_count(),
+            256 * 96 + 96 + 96 * 96 + 96 + 96 * 3 + 3 + 2 * 2 * 96
+        );
+    }
+
+    #[test]
+    fn skip_and_per_layer_have_different_shapes_same_count_when_m_matches() {
+        let mut rng = Rng::new(1);
+        let cfg = MlpConfig::fan();
+        let a = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::PerLayer);
+        let b = Mlp::new(&mut rng, cfg, AdapterTopology::Skip);
+        assert_eq!(a.per_layer.len(), 3);
+        assert_eq!(b.skip.len(), 3);
+        // Paper §4.1: LoRA-All adapter k is N_k -> M_k; Skip-LoRA is
+        // N_k -> M_n. For the 256-96-96-3 model:
+        //   LoRA-All : (256·4 + 4·96) + (96·4 + 4·96) + (96·4 + 4·3)
+        //   Skip-LoRA: (256·4 + 4·3)  + (96·4 + 4·3)  + (96·4 + 4·3)
+        assert_eq!(a.per_layer[0].n_out(), 96);
+        assert_eq!(b.skip[0].n_out(), 3);
+        assert_eq!(b.skip[0].n_in(), 256);
+        assert_eq!(b.skip[1].n_in(), 96);
+    }
+
+    #[test]
+    fn set_topology_swaps_adapters() {
+        let mut rng = Rng::new(2);
+        let mut m = Mlp::new(&mut rng, MlpConfig::har(), AdapterTopology::None);
+        assert_eq!(m.adapter_param_count(), 0);
+        m.set_topology(&mut rng, AdapterTopology::Skip);
+        assert_eq!(m.skip.len(), 3);
+        assert!(m.per_layer.is_empty());
+        // HAR skip adapters: (561+6)*4 + (96+6)*4 + (96+6)*4 params
+        assert_eq!(m.adapter_param_count(), 4 * (561 + 6) + 4 * (96 + 6) * 2);
+        m.set_topology(&mut rng, AdapterTopology::PerLayer);
+        assert!(m.skip.is_empty());
+        assert_eq!(m.per_layer.len(), 3);
+    }
+
+    #[test]
+    fn deeper_than_paper_works() {
+        let mut rng = Rng::new(3);
+        let cfg = MlpConfig { dims: vec![32, 16, 16, 16, 8, 5], rank: 2, batch_norm: true };
+        let m = Mlp::new(&mut rng, cfg, AdapterTopology::Skip);
+        assert_eq!(m.n_layers(), 5);
+        assert_eq!(m.skip.len(), 5);
+        assert_eq!(m.bns.len(), 4);
+        assert!(m.skip.iter().all(|a| a.n_out() == 5));
+    }
+}

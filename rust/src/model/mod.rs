@@ -1,0 +1,7 @@
+//! Model definition: the paper's n-layer DNN with optional per-layer LoRA
+//! adapters and skip adapters.
+
+pub mod io;
+pub mod mlp;
+
+pub use mlp::{Mlp, MlpConfig};

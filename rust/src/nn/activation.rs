@@ -1,0 +1,40 @@
+//! Activation functions (the paper uses ReLU throughout).
+
+use crate::tensor::Mat;
+
+/// ReLU forward, out-of-place (y = max(x, 0)).
+pub fn relu(x: &Mat, y: &mut Mat) {
+    assert_eq!(x.shape(), y.shape());
+    for (o, &v) in y.data.iter_mut().zip(&x.data) {
+        *o = if v > 0.0 { v } else { 0.0 };
+    }
+}
+
+/// ReLU backward: gx = gy ⊙ [y > 0], given the forward OUTPUT y.
+/// (Using the output rather than the input is exact for ReLU and lets the
+/// trainer drop the pre-activation buffer.)
+pub fn relu_backward(gy: &Mat, y: &Mat, gx: &mut Mat) {
+    assert_eq!(gy.shape(), y.shape());
+    assert_eq!(gy.shape(), gx.shape());
+    for ((o, &g), &v) in gx.data.iter_mut().zip(&gy.data).zip(&y.data) {
+        *o = if v > 0.0 { g } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwd_bwd() {
+        let x = Mat::from_vec(1, 4, vec![-2.0, -0.0, 0.5, 3.0]);
+        let mut y = Mat::zeros(1, 4);
+        relu(&x, &mut y);
+        assert_eq!(y.data, vec![0.0, 0.0, 0.5, 3.0]);
+
+        let gy = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut gx = Mat::zeros(1, 4);
+        relu_backward(&gy, &y, &mut gx);
+        assert_eq!(gx.data, vec![0.0, 0.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Batch normalization (Ioffe & Szegedy; paper Table 2's BN1/BN2).
+//!
+//! Two modes:
+//! * **train**: batch statistics + running-stat update; saves x̂ for the
+//!   backward pass. Used during pre-training and by fine-tuning methods
+//!   that update earlier layers (FT-All, FT-Bias, LoRA-All, FT-All-LoRA).
+//! * **eval**: frozen running statistics — REQUIRED for every Skip-Cache
+//!   compatible method (the cached activations must stay valid across the
+//!   whole fine-tuning run; paper §4.2 and DESIGN.md decision 5).
+
+use crate::tensor::{ops::Backend, Mat};
+
+#[derive(Clone, Debug)]
+pub struct BatchNorm {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub momentum: f32,
+    pub eps: f32,
+    pub ggamma: Vec<f32>,
+    pub gbeta: Vec<f32>,
+    // saved by forward_train for the backward pass
+    xhat: Mat,
+    inv_std: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            gamma: vec![1.0; dim],
+            beta: vec![0.0; dim],
+            running_mean: vec![0.0; dim],
+            running_var: vec![1.0; dim],
+            momentum: 0.1,
+            eps: 1e-5,
+            ggamma: vec![0.0; dim],
+            gbeta: vec![0.0; dim],
+            xhat: Mat::zeros(0, 0),
+            inv_std: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.gamma.len()
+    }
+
+    /// Training-mode forward: y = γ·x̂ + β with batch statistics.
+    /// Matches `model._bn_train` on the jax side (same momentum, same
+    /// unbiased-variance running update).
+    pub fn forward_train(&mut self, _backend: Backend, x: &Mat, y: &mut Mat) {
+        let (b, d) = x.shape();
+        assert_eq!(d, self.dim());
+        assert_eq!(y.shape(), (b, d));
+        if self.xhat.shape() != (b, d) {
+            self.xhat = Mat::zeros(b, d);
+        }
+        for j in 0..d {
+            // batch mean/var for feature j
+            let mut mu = 0.0f32;
+            for i in 0..b {
+                mu += x.at(i, j);
+            }
+            mu /= b as f32;
+            let mut var = 0.0f32;
+            for i in 0..b {
+                let dv = x.at(i, j) - mu;
+                var += dv * dv;
+            }
+            var /= b as f32; // biased, used for normalization
+            let inv = 1.0 / (var + self.eps).sqrt();
+            self.inv_std[j] = inv;
+            for i in 0..b {
+                let xh = (x.at(i, j) - mu) * inv;
+                *self.xhat.at_mut(i, j) = xh;
+                *y.at_mut(i, j) = self.gamma[j] * xh + self.beta[j];
+            }
+            // running stats (unbiased var), momentum update
+            let unbiased = if b > 1 {
+                var * b as f32 / (b as f32 - 1.0)
+            } else {
+                var
+            };
+            self.running_mean[j] =
+                (1.0 - self.momentum) * self.running_mean[j] + self.momentum * mu;
+            self.running_var[j] =
+                (1.0 - self.momentum) * self.running_var[j] + self.momentum * unbiased;
+        }
+    }
+
+    /// Inference-mode forward with frozen running statistics.
+    pub fn forward_eval(&self, x: &Mat, y: &mut Mat) {
+        let (b, d) = x.shape();
+        assert_eq!(d, self.dim());
+        assert_eq!(y.shape(), (b, d));
+        for j in 0..d {
+            let inv = 1.0 / (self.running_var[j] + self.eps).sqrt();
+            let scale = self.gamma[j] * inv;
+            let shift = self.beta[j] - self.running_mean[j] * scale;
+            for i in 0..b {
+                *y.at_mut(i, j) = x.at(i, j) * scale + shift;
+            }
+        }
+    }
+
+    /// Training-mode backward. Computes gγ/gβ (always — cheap) and, when
+    /// `compute_gx`, the full BN input gradient:
+    ///
+    ///   gx = (γ·inv_std / B) · (B·gy − Σgy − x̂·Σ(gy⊙x̂))
+    pub fn backward(&mut self, gy: &Mat, gx: Option<&mut Mat>) {
+        let (b, d) = gy.shape();
+        assert_eq!(self.xhat.shape(), (b, d), "backward before forward_train");
+        // per-feature reductions
+        let mut sum_gy = vec![0.0f32; d];
+        let mut sum_gy_xhat = vec![0.0f32; d];
+        for i in 0..b {
+            for j in 0..d {
+                let g = gy.at(i, j);
+                sum_gy[j] += g;
+                sum_gy_xhat[j] += g * self.xhat.at(i, j);
+            }
+        }
+        for j in 0..d {
+            self.gbeta[j] = sum_gy[j];
+            self.ggamma[j] = sum_gy_xhat[j];
+        }
+        if let Some(gx) = gx {
+            assert_eq!(gx.shape(), (b, d));
+            let bf = b as f32;
+            for j in 0..d {
+                let k = self.gamma[j] * self.inv_std[j] / bf;
+                for i in 0..b {
+                    let v = bf * gy.at(i, j)
+                        - sum_gy[j]
+                        - self.xhat.at(i, j) * sum_gy_xhat[j];
+                    *gx.at_mut(i, j) = k * v;
+                }
+            }
+        }
+    }
+
+    /// Eval-mode backward: BN with frozen running stats is a fixed affine
+    /// map, so gx = gy · γ · inv_std(running). Used by methods that freeze
+    /// BN but still propagate gradients through it (LoRA-All's hidden
+    /// adapters, TinyTL's residual chain).
+    pub fn backward_eval(&self, gy: &Mat, gx: &mut Mat) {
+        let (b, d) = gy.shape();
+        assert_eq!(gx.shape(), (b, d));
+        for j in 0..d {
+            let k = self.gamma[j] / (self.running_var[j] + self.eps).sqrt();
+            for i in 0..b {
+                *gx.at_mut(i, j) = gy.at(i, j) * k;
+            }
+        }
+    }
+
+    /// SGD on γ/β (used by methods that train BN affine parameters).
+    pub fn update(&mut self, lr: f32) {
+        for j in 0..self.dim() {
+            self.gamma[j] -= lr * self.ggamma[j];
+            self.beta[j] -= lr * self.gbeta[j];
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        2 * self.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn train_normalizes_batch() {
+        let mut rng = Rng::new(1);
+        let mut bn = BatchNorm::new(4);
+        let x = Mat::from_fn(64, 4, |_, j| rng.normal() * (j as f32 + 1.0) + j as f32);
+        let mut y = Mat::zeros(64, 4);
+        bn.forward_train(Backend::Blocked, &x, &mut y);
+        for j in 0..4 {
+            let mean: f32 = (0..64).map(|i| y.at(i, j)).sum::<f32>() / 64.0;
+            let var: f32 = (0..64).map(|i| (y.at(i, j) - mean).powi(2)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let mut rng = Rng::new(2);
+        let mut bn = BatchNorm::new(3);
+        // feed many batches so running stats converge to the distribution
+        for _ in 0..500 {
+            let x = Mat::from_fn(32, 3, |_, j| rng.normal() * 2.0 + 3.0 * (j as f32 + 1.0));
+            let mut y = Mat::zeros(32, 3);
+            bn.forward_train(Backend::Blocked, &x, &mut y);
+        }
+        for j in 0..3 {
+            assert!((bn.running_mean[j] - 3.0 * (j as f32 + 1.0)).abs() < 0.3);
+            assert!((bn.running_var[j] - 4.0).abs() < 0.6);
+        }
+        // eval on a fresh batch normalizes approximately
+        let x = Mat::from_fn(256, 3, |_, j| rng.normal() * 2.0 + 3.0 * (j as f32 + 1.0));
+        let mut y = Mat::zeros(256, 3);
+        bn.forward_eval(&x, &mut y);
+        let mean: f32 = (0..256).map(|i| y.at(i, 0)).sum::<f32>() / 256.0;
+        assert!(mean.abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn eval_is_deterministic_and_stateless() {
+        let mut rng = Rng::new(3);
+        let mut bn = BatchNorm::new(2);
+        let warm = Mat::from_fn(16, 2, |_, _| rng.normal());
+        let mut tmp = Mat::zeros(16, 2);
+        bn.forward_train(Backend::Blocked, &warm, &mut tmp);
+        let snapshot = (bn.running_mean.clone(), bn.running_var.clone());
+
+        let x = Mat::from_fn(4, 2, |_, _| rng.normal());
+        let mut y1 = Mat::zeros(4, 2);
+        let mut y2 = Mat::zeros(4, 2);
+        bn.forward_eval(&x, &mut y1);
+        bn.forward_eval(&x, &mut y2);
+        assert_eq!(y1, y2);
+        assert_eq!((bn.running_mean.clone(), bn.running_var.clone()), snapshot);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(8, 3, |_, _| rng.normal() * 1.5 + 0.3);
+
+        // L = 0.5 ||y||^2 through train-mode BN
+        let loss = |bn: &mut BatchNorm, x: &Mat| -> f32 {
+            let mut y = Mat::zeros(x.rows, 3);
+            bn.forward_train(Backend::Blocked, x, &mut y);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+
+        let mut bn = BatchNorm::new(3);
+        bn.gamma = vec![1.2, 0.8, 1.0];
+        bn.beta = vec![0.1, -0.2, 0.0];
+        let mut y = Mat::zeros(8, 3);
+        {
+            let mut b2 = bn.clone();
+            b2.forward_train(Backend::Blocked, &x, &mut y);
+            bn = b2;
+        }
+        let mut gx = Mat::zeros(8, 3);
+        bn.backward(&y, Some(&mut gx));
+
+        let eps = 1e-3f32;
+        // gamma
+        for j in 0..3 {
+            let mut p = bn.clone();
+            p.gamma[j] += eps;
+            let mut m = bn.clone();
+            m.gamma[j] -= eps;
+            let num = (loss(&mut p, &x) - loss(&mut m, &x)) / (2.0 * eps);
+            assert!(
+                (num - bn.ggamma[j]).abs() < 3e-2 * (1.0 + bn.ggamma[j].abs()),
+                "gamma {num} vs {}",
+                bn.ggamma[j]
+            );
+        }
+        // input gradient, a few entries
+        for &(i, j) in &[(0usize, 0usize), (3, 1), (7, 2)] {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += eps;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= eps;
+            let num =
+                (loss(&mut bn.clone(), &xp) - loss(&mut bn.clone(), &xm)) / (2.0 * eps);
+            let ana = gx.at(i, j);
+            assert!((num - ana).abs() < 5e-2 * (1.0 + ana.abs()), "gx {num} vs {ana}");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! The compute-type taxonomy of paper Table 1.
+//!
+//! A fine-tuning method is *defined* by which of (y, gW, gb, gx) each FC
+//! layer computes and which of (y, gW_A/gW_B, gx) each LoRA adapter
+//! computes. The per-method assignments live in `crate::method`.
+
+/// FC-layer compute types (upper half of Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FcComputeType {
+    /// forward only
+    Y,
+    /// y, gW, gb, gx — full training, propagating
+    Ywbx,
+    /// y, gW, gb — full training, first layer (gx not needed, paper §3)
+    Ywb,
+    /// y, gb, gx — bias training, propagating (FT-Bias middle/last layers)
+    Ybx,
+    /// y, gb — bias training, first layer
+    Yb,
+    /// y, gx — frozen but propagating (carries gradients to earlier adapters)
+    Yx,
+}
+
+impl FcComputeType {
+    pub fn computes_gw(self) -> bool {
+        matches!(self, FcComputeType::Ywbx | FcComputeType::Ywb)
+    }
+
+    pub fn computes_gb(self) -> bool {
+        matches!(
+            self,
+            FcComputeType::Ywbx | FcComputeType::Ywb | FcComputeType::Ybx | FcComputeType::Yb
+        )
+    }
+
+    pub fn computes_gx(self) -> bool {
+        matches!(
+            self,
+            FcComputeType::Ywbx | FcComputeType::Ybx | FcComputeType::Yx
+        )
+    }
+
+    /// Does the backward pass touch this layer at all?
+    pub fn has_backward(self) -> bool {
+        self != FcComputeType::Y
+    }
+
+    /// Are the layer's own parameters updated?
+    pub fn is_trained(self) -> bool {
+        self.computes_gw() || self.computes_gb()
+    }
+
+    /// FLOPs of one backward pass at batch B, dims N -> M (paper §3's
+    /// omitted cost model, reconstructed: each matmul is 2·B·N·M).
+    pub fn backward_flops(self, b: usize, n: usize, m: usize) -> u64 {
+        let mm = 2 * (b * n * m) as u64;
+        let gb = (b * m) as u64;
+        let mut f = 0;
+        if self.computes_gw() {
+            f += mm;
+        }
+        if self.computes_gb() {
+            f += gb;
+        }
+        if self.computes_gx() {
+            f += mm;
+        }
+        f
+    }
+}
+
+/// LoRA-adapter compute types (lower half of Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoraComputeType {
+    /// no adapter at this position
+    None,
+    /// y_A, y_B, gW_B, gW_A, gx_B, gx_A — propagating (LoRA-All mid layers)
+    Ywx,
+    /// y_A, y_B, gW_B, gW_A, gx_B — non-propagating (Skip-LoRA everywhere)
+    Yw,
+}
+
+impl LoraComputeType {
+    pub fn present(self) -> bool {
+        self != LoraComputeType::None
+    }
+
+    pub fn computes_gx(self) -> bool {
+        self == LoraComputeType::Ywx
+    }
+
+    /// Backward FLOPs at batch B, dims N -> M, rank R:
+    /// gW_B: 2BRM, gx_B: 2BRM, gW_A: 2BNR, gx_A (Ywx only): 2BNR.
+    pub fn backward_flops(self, b: usize, n: usize, m: usize, r: usize) -> u64 {
+        match self {
+            LoraComputeType::None => 0,
+            LoraComputeType::Yw => (2 * (b * r * m) * 2 + 2 * (b * n * r)) as u64,
+            LoraComputeType::Ywx => (2 * (b * r * m) * 2 + 2 * (b * n * r) * 2) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_fc_semantics() {
+        use FcComputeType::*;
+        // Row-by-row of Table 1 (upper half).
+        let rows = [
+            (Y, false, false, false),
+            (Ywbx, true, true, true),
+            (Ywb, true, true, false),
+            (Ybx, false, true, true),
+            (Yb, false, true, false),
+            (Yx, false, false, true),
+        ];
+        for (ct, gw, gb, gx) in rows {
+            assert_eq!(ct.computes_gw(), gw, "{ct:?} gw");
+            assert_eq!(ct.computes_gb(), gb, "{ct:?} gb");
+            assert_eq!(ct.computes_gx(), gx, "{ct:?} gx");
+        }
+    }
+
+    #[test]
+    fn table1_lora_semantics() {
+        assert!(!LoraComputeType::None.present());
+        assert!(LoraComputeType::Yw.present());
+        assert!(!LoraComputeType::Yw.computes_gx());
+        assert!(LoraComputeType::Ywx.computes_gx());
+    }
+
+    #[test]
+    fn backward_cost_ordering() {
+        // Ywbx > Ywb ≈ Ybx > Yb; Yx between.
+        let (b, n, m) = (20, 256, 96);
+        use FcComputeType::*;
+        assert!(Ywbx.backward_flops(b, n, m) > Ywb.backward_flops(b, n, m));
+        assert!(Ywb.backward_flops(b, n, m) > Yb.backward_flops(b, n, m));
+        assert_eq!(Y.backward_flops(b, n, m), 0);
+        // LoRA backward is tiny relative to FC backward when R << N, M —
+        // the paper's §4.1 argument.
+        let lora = LoraComputeType::Yw.backward_flops(b, n, m, 4);
+        let fc = Ywbx.backward_flops(b, n, m);
+        assert!((lora as f64) < 0.1 * fc as f64, "{lora} vs {fc}");
+    }
+}

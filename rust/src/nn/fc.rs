@@ -1,0 +1,198 @@
+//! Fully-connected layer (paper §2, Eq. 1-6).
+
+use crate::nn::compute_type::FcComputeType;
+use crate::tensor::{ops, ops::Backend, Mat};
+use crate::util::rng::Rng;
+
+/// FC layer `y = x·W + b` with gradient buffers.
+///
+/// Gradient buffers are owned by the layer and preallocated so the training
+/// hot loop never allocates (DESIGN.md §7 L3).
+#[derive(Clone, Debug)]
+pub struct FcLayer {
+    pub w: Mat,        // (n_in, n_out)
+    pub b: Vec<f32>,   // n_out
+    pub gw: Mat,
+    pub gb: Vec<f32>,
+    /// Cached Wᵀ for the Eq. 4 hot path: `gx = gy·Wᵀ` as a row-major
+    /// matmul vectorizes (axpy form), while the fused A·Bᵀ kernel is a
+    /// strict FP dot-reduction the compiler cannot reorder. Invalidated
+    /// by `update` (frozen layers — the common fine-tuning case — pay the
+    /// transpose exactly once). See EXPERIMENTS.md §Perf L3 iteration 2.
+    wt: std::cell::RefCell<Option<Mat>>,
+}
+
+impl FcLayer {
+    /// He-uniform init (matches `model.init_frozen` on the jax side).
+    pub fn new(rng: &mut Rng, n_in: usize, n_out: usize) -> Self {
+        let lim = (6.0f32 / n_in as f32).sqrt();
+        let w = Mat::from_fn(n_in, n_out, |_, _| rng.uniform(-lim, lim));
+        Self {
+            w,
+            b: vec![0.0; n_out],
+            gw: Mat::zeros(n_in, n_out),
+            gb: vec![0.0; n_out],
+            wt: std::cell::RefCell::new(None),
+        }
+    }
+
+    pub fn from_weights(w: Mat, b: Vec<f32>) -> Self {
+        let (n_in, n_out) = w.shape();
+        assert_eq!(b.len(), n_out);
+        Self {
+            w,
+            b,
+            gw: Mat::zeros(n_in, n_out),
+            gb: vec![0.0; n_out],
+            wt: std::cell::RefCell::new(None),
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.w.rows
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.w.cols
+    }
+
+    /// Eq. 1 (pre-activation): y = x·W + b.
+    pub fn forward(&self, backend: Backend, x: &Mat, y: &mut Mat) {
+        ops::matmul_bias(backend, x, &self.w, &self.b, y);
+    }
+
+    /// Eq. 2-4, gated by the compute type. `gx` is written only when the
+    /// compute type propagates (and a buffer is supplied).
+    pub fn backward(
+        &mut self,
+        backend: Backend,
+        ct: FcComputeType,
+        x: &Mat,
+        gy: &Mat,
+        gx: Option<&mut Mat>,
+    ) {
+        if ct.computes_gw() {
+            ops::matmul_at_b(backend, x, gy, &mut self.gw); // Eq. 2
+        }
+        if ct.computes_gb() {
+            ops::col_sums(gy, &mut self.gb); // Eq. 3
+        }
+        if ct.computes_gx() {
+            let gx = gx.expect("compute type requires gx buffer");
+            // Eq. 4. Frozen layers (the fine-tuning common case) use the
+            // cached-transpose axpy-form matmul; trained layers would
+            // invalidate the cache every step, so they use the fused
+            // A·Bᵀ kernel directly.
+            if backend == Backend::Blocked && !ct.computes_gw() {
+                let mut wt = self.wt.borrow_mut();
+                if wt.is_none() {
+                    *wt = Some(self.w.transposed());
+                }
+                ops::matmul_blocked(gy, wt.as_ref().unwrap(), gx);
+            } else {
+                ops::matmul_a_bt(backend, gy, &self.w, gx);
+            }
+        }
+    }
+
+    /// Eq. 5-6 for whichever parameters the compute type trains.
+    pub fn update(&mut self, ct: FcComputeType, lr: f32) {
+        if ct.computes_gw() {
+            ops::sgd_step(&mut self.w.data, &self.gw.data, lr);
+            self.wt.replace(None); // weights moved: transpose cache stale
+        }
+        if ct.computes_gb() {
+            ops::sgd_step(&mut self.b, &self.gb, lr);
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.data.len() + self.b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_loss(layer: &FcLayer, x: &Mat) -> f32 {
+        // L = 0.5 * ||y||^2 with y = xW + b
+        let mut y = Mat::zeros(x.rows, layer.n_out());
+        layer.forward(Backend::Scalar, x, &mut y);
+        0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+    }
+
+    #[test]
+    fn forward_matches_manual() {
+        let w = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let layer = FcLayer::from_weights(w, vec![0.5, -0.5]);
+        let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let mut y = Mat::zeros(1, 2);
+        layer.forward(Backend::Blocked, &x, &mut y);
+        assert_eq!(y.data, vec![4.5, 5.5]);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(10);
+        let mut layer = FcLayer::new(&mut rng, 5, 4);
+        let x = Mat::from_fn(3, 5, |_, _| rng.normal());
+        // gy for L = 0.5||y||^2 is y itself
+        let mut y = Mat::zeros(3, 4);
+        layer.forward(Backend::Scalar, &x, &mut y);
+        let mut gx = Mat::zeros(3, 5);
+        layer.backward(Backend::Scalar, FcComputeType::Ywbx, &x, &y, Some(&mut gx));
+
+        let eps = 1e-3f32;
+        // check a few weight entries
+        for &(i, j) in &[(0usize, 0usize), (2, 3), (4, 1)] {
+            let mut lp = layer.clone();
+            *lp.w.at_mut(i, j) += eps;
+            let mut lm = layer.clone();
+            *lm.w.at_mut(i, j) -= eps;
+            let num = (finite_diff_loss(&lp, &x) - finite_diff_loss(&lm, &x)) / (2.0 * eps);
+            let ana = layer.gw.at(i, j);
+            assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "{num} vs {ana}");
+        }
+        // bias entry
+        let mut lp = layer.clone();
+        lp.b[2] += eps;
+        let mut lm = layer.clone();
+        lm.b[2] -= eps;
+        let num = (finite_diff_loss(&lp, &x) - finite_diff_loss(&lm, &x)) / (2.0 * eps);
+        assert!((num - layer.gb[2]).abs() < 2e-2 * (1.0 + layer.gb[2].abs()));
+    }
+
+    #[test]
+    fn compute_type_gates_gradients() {
+        let mut rng = Rng::new(11);
+        let mut layer = FcLayer::new(&mut rng, 4, 3);
+        let x = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let gy = Mat::from_fn(2, 3, |_, _| rng.normal());
+
+        layer.gw.fill(9.0);
+        layer.gb.iter_mut().for_each(|v| *v = 9.0);
+        layer.backward(Backend::Blocked, FcComputeType::Yb, &x, &gy, None);
+        // gw untouched (still the sentinel), gb overwritten
+        assert!(layer.gw.data.iter().all(|&v| v == 9.0));
+        assert!(layer.gb.iter().any(|&v| v != 9.0));
+    }
+
+    #[test]
+    fn update_only_trained_params() {
+        let mut rng = Rng::new(12);
+        let mut layer = FcLayer::new(&mut rng, 3, 2);
+        let w0 = layer.w.clone();
+        let b0 = layer.b.clone();
+        layer.gw.fill(1.0);
+        layer.gb.iter_mut().for_each(|v| *v = 1.0);
+
+        layer.update(FcComputeType::Yx, 0.1); // frozen: nothing moves
+        assert_eq!(layer.w, w0);
+        assert_eq!(layer.b, b0);
+
+        layer.update(FcComputeType::Yb, 0.1); // bias only
+        assert_eq!(layer.w, w0);
+        assert!(layer.b.iter().zip(&b0).all(|(a, b)| (a - (b - 0.1)).abs() < 1e-6));
+    }
+}

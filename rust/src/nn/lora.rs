@@ -1,0 +1,237 @@
+//! LoRA adapter (paper §2, Eq. 7-16).
+//!
+//! One adapter holds `W_A (N×R)`, `W_B (R×M)`. In LoRA-All/LoRA-Last the
+//! adapter is attached in parallel to its own layer (N = layer input,
+//! M = layer output). In Skip-LoRA the *same struct* is attached from layer
+//! k's input to the LAST layer's output (M = n_out of the network) —
+//! the topology difference lives in `crate::method`, not here.
+
+use crate::nn::compute_type::LoraComputeType;
+use crate::tensor::{ops, ops::Backend, Mat};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LoraAdapter {
+    pub wa: Mat, // (n_in, rank)
+    pub wb: Mat, // (rank, n_out)
+    pub gwa: Mat,
+    pub gwb: Mat,
+    /// saved y_A from the last forward (needed by Eq. 10)
+    ya: Mat,
+    /// gx_B workspace (Eq. 11)
+    gxb: Mat,
+}
+
+impl LoraAdapter {
+    /// Standard LoRA init: W_A ~ N(0, 1/n_in), W_B = 0 — the adapter
+    /// starts as an exact no-op (DESIGN.md decision 4).
+    pub fn new(rng: &mut Rng, n_in: usize, rank: usize, n_out: usize) -> Self {
+        let std = 1.0 / (n_in as f32).sqrt();
+        Self {
+            wa: Mat::from_fn(n_in, rank, |_, _| rng.normal() * std),
+            wb: Mat::zeros(rank, n_out),
+            gwa: Mat::zeros(n_in, rank),
+            gwb: Mat::zeros(rank, n_out),
+            ya: Mat::zeros(0, 0),
+            gxb: Mat::zeros(0, 0),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.wa.cols
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.wa.rows
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.wb.cols
+    }
+
+    fn ensure_ws(&mut self, batch: usize) {
+        if self.ya.rows != batch {
+            self.ya = Mat::zeros(batch, self.rank());
+            self.gxb = Mat::zeros(batch, self.rank());
+        }
+    }
+
+    /// Eq. 7-9: y += (x·W_A)·W_B, saving y_A for the backward pass.
+    pub fn forward_accumulate(&mut self, backend: Backend, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.n_in());
+        assert_eq!(y.cols, self.n_out());
+        self.ensure_ws(x.rows);
+        ops::matmul(backend, x, &self.wa, &mut self.ya); // Eq. 7
+        // y += ya · wb  (Eq. 8-9) — accumulate without a temp
+        let m = self.n_out();
+        let r = self.rank();
+        for i in 0..x.rows {
+            let yarow = self.ya.row(i);
+            let yrow = y.row_mut(i);
+            for rr in 0..r {
+                let a = yarow[rr];
+                if a == 0.0 {
+                    continue;
+                }
+                let wrow = &self.wb.data[rr * m..(rr + 1) * m];
+                for j in 0..m {
+                    yrow[j] += a * wrow[j];
+                }
+            }
+        }
+    }
+
+    /// Eq. 10-14, gated by compute type. Accumulates `gx += gx_A` when the
+    /// type propagates (LoRA_ywx), so the parallel-adapter topology can sum
+    /// the FC and adapter contributions (Eq. 14).
+    pub fn backward(
+        &mut self,
+        backend: Backend,
+        ct: LoraComputeType,
+        x: &Mat,
+        gy: &Mat,
+        gx_accum: Option<&mut Mat>,
+    ) {
+        if !ct.present() {
+            return;
+        }
+        self.ensure_ws(x.rows);
+        ops::matmul_at_b(backend, &self.ya, gy, &mut self.gwb); // Eq. 10
+        ops::matmul_a_bt(backend, gy, &self.wb, &mut self.gxb); // Eq. 11
+        ops::matmul_at_b(backend, x, &self.gxb, &mut self.gwa); // Eq. 12
+        if ct.computes_gx() {
+            let gx = gx_accum.expect("LoRA_ywx requires a gx buffer");
+            // Eq. 13-14: gx += gx_B · W_Aᵀ, accumulated row-wise.
+            let n = self.n_in();
+            for i in 0..x.rows {
+                let gxbrow = self.gxb.row(i);
+                let gxrow = gx.row_mut(i);
+                for rr in 0..self.rank() {
+                    let g = gxbrow[rr];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    // W_Aᵀ row rr == W_A column rr
+                    for jn in 0..n {
+                        gxrow[jn] += g * self.wa.data[jn * self.rank() + rr];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Eq. 15-16.
+    pub fn update(&mut self, lr: f32) {
+        ops::sgd_step(&mut self.wa.data, &self.gwa.data, lr);
+        ops::sgd_step(&mut self.wb.data, &self.gwb.data, lr);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.wa.data.len() + self.wb.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loss(ad: &mut LoraAdapter, x: &Mat) -> f32 {
+        let mut y = Mat::zeros(x.rows, ad.n_out());
+        ad.forward_accumulate(Backend::Scalar, x, &mut y);
+        0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+    }
+
+    #[test]
+    fn fresh_adapter_is_noop() {
+        let mut rng = Rng::new(0);
+        let mut ad = LoraAdapter::new(&mut rng, 8, 4, 3);
+        let x = Mat::from_fn(5, 8, |_, _| rng.normal());
+        let mut y = Mat::from_fn(5, 3, |_, _| 1.5);
+        let y0 = y.clone();
+        ad.forward_accumulate(Backend::Blocked, &x, &mut y);
+        assert_eq!(y, y0); // W_B = 0 => delta = 0
+    }
+
+    #[test]
+    fn forward_matches_explicit_matmuls() {
+        let mut rng = Rng::new(1);
+        let mut ad = LoraAdapter::new(&mut rng, 6, 2, 4);
+        ad.wb = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let x = Mat::from_fn(3, 6, |_, _| rng.normal());
+        let mut y = Mat::zeros(3, 4);
+        ad.forward_accumulate(Backend::Blocked, &x, &mut y);
+
+        let mut ya = Mat::zeros(3, 2);
+        ops::matmul_naive(&x, &ad.wa, &mut ya);
+        let mut want = Mat::zeros(3, 4);
+        ops::matmul_naive(&ya, &ad.wb, &mut want);
+        for (a, b) in y.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(2);
+        let mut ad = LoraAdapter::new(&mut rng, 5, 3, 2);
+        ad.wb = Mat::from_fn(3, 2, |_, _| rng.normal());
+        let x = Mat::from_fn(4, 5, |_, _| rng.normal());
+
+        let mut y = Mat::zeros(4, 2);
+        ad.forward_accumulate(Backend::Scalar, &x, &mut y);
+        ad.backward(Backend::Scalar, LoraComputeType::Yw, &x, &y, None);
+        let (gwa, gwb) = (ad.gwa.clone(), ad.gwb.clone());
+
+        let eps = 1e-3f32;
+        for &(i, j) in &[(0usize, 0usize), (4, 2), (2, 1)] {
+            let mut p = ad.clone();
+            *p.wa.at_mut(i, j) += eps;
+            let mut m = ad.clone();
+            *m.wa.at_mut(i, j) -= eps;
+            let num = (loss(&mut p, &x) - loss(&mut m, &x)) / (2.0 * eps);
+            let ana = gwa.at(i, j);
+            assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "wa {num} vs {ana}");
+        }
+        for &(i, j) in &[(0usize, 0usize), (2, 1)] {
+            let mut p = ad.clone();
+            *p.wb.at_mut(i, j) += eps;
+            let mut m = ad.clone();
+            *m.wb.at_mut(i, j) -= eps;
+            let num = (loss(&mut p, &x) - loss(&mut m, &x)) / (2.0 * eps);
+            let ana = gwb.at(i, j);
+            assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "wb {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn gx_accumulates_only_for_ywx() {
+        let mut rng = Rng::new(3);
+        let mut ad = LoraAdapter::new(&mut rng, 4, 2, 3);
+        ad.wb = Mat::from_fn(2, 3, |_, _| rng.normal());
+        let x = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let gy = Mat::from_fn(2, 3, |_, _| rng.normal());
+        let mut y = Mat::zeros(2, 3);
+        ad.forward_accumulate(Backend::Scalar, &x, &mut y);
+
+        let mut gx = Mat::from_fn(2, 4, |_, _| 0.25);
+        let gx0 = gx.clone();
+        ad.backward(Backend::Scalar, LoraComputeType::Yw, &x, &gy, Some(&mut gx));
+        assert_eq!(gx, gx0, "Yw must not touch gx");
+
+        ad.backward(Backend::Scalar, LoraComputeType::Ywx, &x, &gy, Some(&mut gx));
+        assert_ne!(gx, gx0, "Ywx must accumulate into gx");
+    }
+
+    #[test]
+    fn update_moves_both_matrices() {
+        let mut rng = Rng::new(4);
+        let mut ad = LoraAdapter::new(&mut rng, 3, 2, 2);
+        ad.gwa.fill(1.0);
+        ad.gwb.fill(1.0);
+        let wa0 = ad.wa.clone();
+        let wb0 = ad.wb.clone();
+        ad.update(0.5);
+        assert!(ad.wa.data.iter().zip(&wa0.data).all(|(a, b)| (a - (b - 0.5)).abs() < 1e-6));
+        assert!(ad.wb.data.iter().zip(&wb0.data).all(|(a, b)| (a - (b - 0.5)).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,106 @@
+//! Softmax cross-entropy loss (the paper's CEL).
+
+use crate::tensor::{ops, Mat};
+
+/// Mean softmax cross-entropy over the batch + gradient w.r.t. logits.
+///
+/// `labels[i]` is the class index of sample i. Writes `(softmax − onehot)/B`
+/// into `glogits` and returns the scalar loss. The gradient matches
+/// `ref.softmax_cross_entropy_grad` on the jax side.
+pub fn softmax_ce(logits: &Mat, labels: &[usize], glogits: &mut Mat) -> f32 {
+    let (b, m) = logits.shape();
+    assert_eq!(labels.len(), b);
+    assert_eq!(glogits.shape(), (b, m));
+    glogits.data.copy_from_slice(&logits.data);
+    ops::softmax_rows(glogits);
+
+    let mut loss = 0.0f32;
+    let inv_b = 1.0 / b as f32;
+    for i in 0..b {
+        let yi = labels[i];
+        debug_assert!(yi < m);
+        let p = glogits.at(i, yi).max(1e-30);
+        loss -= p.ln();
+        // grad = (softmax - onehot) / B
+        let row = glogits.row_mut(i);
+        for v in row.iter_mut() {
+            *v *= inv_b;
+        }
+        row[yi] -= inv_b;
+    }
+    loss * inv_b
+}
+
+/// Argmax-accuracy of logits vs labels (evaluation helper).
+pub fn accuracy(logits: &Mat, labels: &[usize]) -> f64 {
+    let (b, _m) = logits.shape();
+    assert_eq!(labels.len(), b);
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = logits.row(i);
+        let mut best = 0usize;
+        for j in 1..row.len() {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_loss_is_log_m() {
+        let logits = Mat::zeros(4, 6);
+        let labels = [0, 1, 2, 3];
+        let mut g = Mat::zeros(4, 6);
+        let loss = softmax_ce(&logits, &labels, &mut g);
+        assert!((loss - (6.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let logits = Mat::from_vec(2, 3, vec![0.5, -1.0, 2.0, 0.0, 0.1, -0.2]);
+        let labels = [2usize, 0usize];
+        let mut g = Mat::zeros(2, 3);
+        let l0 = softmax_ce(&logits, &labels, &mut g);
+        let _ = l0;
+        let eps = 1e-3f32;
+        for i in 0..2 {
+            for j in 0..3 {
+                let mut lp = logits.clone();
+                *lp.at_mut(i, j) += eps;
+                let mut lm = logits.clone();
+                *lm.at_mut(i, j) -= eps;
+                let mut scratch = Mat::zeros(2, 3);
+                let num = (softmax_ce(&lp, &labels, &mut scratch)
+                    - softmax_ce(&lm, &labels, &mut scratch))
+                    / (2.0 * eps);
+                assert!((num - g.at(i, j)).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn grad_rows_sum_to_zero() {
+        let logits = Mat::from_vec(1, 4, vec![3.0, -1.0, 0.0, 0.5]);
+        let mut g = Mat::zeros(1, 4);
+        softmax_ce(&logits, &[1], &mut g);
+        let s: f32 = g.row(0).iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = Mat::from_vec(3, 2, vec![2.0, 1.0, 0.0, 5.0, 1.0, 1.0]);
+        // row2 tie -> argmax picks first (class 0)
+        assert!((accuracy(&logits, &[0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((accuracy(&logits, &[1, 1, 0]) - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

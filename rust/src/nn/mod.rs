@@ -1,0 +1,16 @@
+//! Neural-network layer substrate for the native (edge) engine.
+//!
+//! Implements exactly the paper's §2 equations with the compute-type
+//! taxonomy of Table 1: each layer's backward pass computes only the
+//! gradients its compute type requires, which is where every fine-tuning
+//! method's cost profile comes from.
+
+pub mod activation;
+pub mod batchnorm;
+pub mod compute_type;
+pub mod fc;
+pub mod loss;
+pub mod lora;
+pub mod tinytl;
+
+pub use compute_type::{FcComputeType, LoraComputeType};

@@ -1,0 +1,316 @@
+//! TinyTL-style fine-tuning [Cai et al., NeurIPS 2020] — the paper's
+//! Table 5 state-of-the-art comparison.
+//!
+//! TinyTL freezes backbone *weights* and trains (a) bias modules and (b)
+//! "lite residual" branches: small bottleneck side-networks added to each
+//! block's output. The original uses ProxylessNAS; the paper itself notes
+//! the backbone mismatch ("the backbone network of TinyTL is ProxylessNAS
+//! while ours use much simpler 3-layer DNNs"), so per DESIGN.md §3 we
+//! reproduce the *method* at MLP scale: a lite residual branch
+//!
+//! ```text
+//! r(x) = W_2 · ReLU( Norm( W_1 · x ) ),   width = dim_out/reduction
+//! ```
+//!
+//! per hidden block, with the Norm being GroupNorm (TinyTL's choice) or
+//! BatchNorm (the paper also evaluates a BN variant), plus trainable
+//! biases everywhere and a trainable classifier head.
+
+use crate::nn::fc::FcLayer;
+use crate::tensor::{ops, ops::Backend, Mat};
+use crate::util::rng::Rng;
+
+/// Normalization inside the lite-residual branch (Table 5's GN vs BN).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidualNorm {
+    /// GroupNorm with `groups` groups — per-sample, batch-independent.
+    Group { groups: usize },
+    /// BatchNorm over the fine-tuning batch (training statistics).
+    Batch,
+}
+
+/// One lite residual branch: dim_in -> width -> dim_out, where dim_in is
+/// the block's input width and dim_out its output width (the branch is
+/// parallel to the whole block).
+#[derive(Clone, Debug)]
+pub struct LiteResidual {
+    pub w1: FcLayer, // dim_in -> width
+    pub w2: FcLayer, // width -> dim_out
+    pub norm: ResidualNorm,
+    // normalization state saved by forward for backward
+    h_pre: Mat,   // pre-norm activations
+    h_norm: Mat,  // post-norm, pre-ReLU
+    h_act: Mat,   // post-ReLU (input of w2)
+    inv_std: Vec<f32>,
+    mean: Vec<f32>,
+}
+
+impl LiteResidual {
+    pub fn new(
+        rng: &mut Rng,
+        dim_in: usize,
+        dim_out: usize,
+        reduction: usize,
+        norm: ResidualNorm,
+    ) -> Self {
+        let width = (dim_out / reduction).max(4);
+        Self {
+            w1: FcLayer::new(rng, dim_in, width),
+            w2: {
+                // zero-init the projection so the branch starts as a no-op,
+                // like LoRA's W_B = 0
+                let mut fc = FcLayer::new(rng, width, dim_out);
+                fc.w.fill(0.0);
+                fc
+            },
+            norm,
+            h_pre: Mat::zeros(0, 0),
+            h_norm: Mat::zeros(0, 0),
+            h_act: Mat::zeros(0, 0),
+            inv_std: Vec::new(),
+            mean: Vec::new(),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.w1.n_out()
+    }
+
+    fn ensure_ws(&mut self, b: usize) {
+        let w = self.width();
+        if self.h_pre.shape() != (b, w) {
+            self.h_pre = Mat::zeros(b, w);
+            self.h_norm = Mat::zeros(b, w);
+            self.h_act = Mat::zeros(b, w);
+        }
+    }
+
+    /// Normalize h_pre into h_norm, saving stats for backward.
+    fn normalize(&mut self) {
+        let (b, w) = self.h_pre.shape();
+        match self.norm {
+            ResidualNorm::Group { groups } => {
+                // per-sample, per-group mean/var
+                let g = groups.min(w).max(1);
+                let gsz = w / g;
+                self.inv_std.resize(b * g, 0.0);
+                self.mean.resize(b * g, 0.0);
+                for i in 0..b {
+                    for gi in 0..g {
+                        let lo = gi * gsz;
+                        let hi = if gi == g - 1 { w } else { lo + gsz };
+                        let row = self.h_pre.row(i);
+                        let n = (hi - lo) as f32;
+                        let mu: f32 = row[lo..hi].iter().sum::<f32>() / n;
+                        let var: f32 =
+                            row[lo..hi].iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+                        let inv = 1.0 / (var + 1e-5).sqrt();
+                        self.mean[i * g + gi] = mu;
+                        self.inv_std[i * g + gi] = inv;
+                        for j in lo..hi {
+                            *self.h_norm.at_mut(i, j) = (row[j] - mu) * inv;
+                        }
+                    }
+                }
+            }
+            ResidualNorm::Batch => {
+                // per-feature batch stats
+                self.inv_std.resize(w, 0.0);
+                self.mean.resize(w, 0.0);
+                for j in 0..w {
+                    let mut mu = 0.0f32;
+                    for i in 0..b {
+                        mu += self.h_pre.at(i, j);
+                    }
+                    mu /= b as f32;
+                    let mut var = 0.0f32;
+                    for i in 0..b {
+                        let d = self.h_pre.at(i, j) - mu;
+                        var += d * d;
+                    }
+                    var /= b as f32;
+                    let inv = 1.0 / (var + 1e-5).sqrt();
+                    self.mean[j] = mu;
+                    self.inv_std[j] = inv;
+                    for i in 0..b {
+                        *self.h_norm.at_mut(i, j) = (self.h_pre.at(i, j) - mu) * inv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// y += r(x); saves intermediates.
+    pub fn forward_accumulate(&mut self, backend: Backend, x: &Mat, y: &mut Mat) {
+        self.ensure_ws(x.rows);
+        self.w1.forward(backend, x, &mut self.h_pre);
+        self.normalize();
+        // ReLU
+        for (a, &n) in self.h_act.data.iter_mut().zip(&self.h_norm.data) {
+            *a = if n > 0.0 { n } else { 0.0 };
+        }
+        // y += w2(h_act): accumulate via temp-free loop
+        let m = y.cols;
+        for i in 0..x.rows {
+            let h = self.h_act.row(i);
+            let yrow = y.row_mut(i);
+            for (k, &hv) in h.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w2.w.data[k * m..(k + 1) * m];
+                for j in 0..m {
+                    yrow[j] += hv * wrow[j];
+                }
+            }
+            for (j, bv) in self.w2.b.iter().enumerate() {
+                yrow[j] += bv;
+            }
+        }
+    }
+
+    /// Backward: gy (w.r.t. the block output) -> gradients of w1/w2, and
+    /// gx accumulation (the branch is parallel to the backbone, so the
+    /// trunk's own gx is computed by the caller and this ADDS the branch
+    /// contribution). Normalization backward treats the stats as constant
+    /// (straight-through w.r.t. μ/σ) — the standard TinyTL memory-saving
+    /// trick of not backpropagating through batch statistics.
+    pub fn backward_accumulate(
+        &mut self,
+        backend: Backend,
+        x: &Mat,
+        gy: &Mat,
+        gx_accum: Option<&mut Mat>,
+    ) {
+        let (b, _) = x.shape();
+        let w = self.width();
+        // gh_act = gy · w2ᵀ
+        let mut gh = Mat::zeros(b, w);
+        ops::matmul_a_bt(backend, gy, &self.w2.w, &mut gh);
+        // w2 grads
+        ops::matmul_at_b(backend, &self.h_act, gy, &mut self.w2.gw);
+        ops::col_sums(gy, &mut self.w2.gb);
+        // ReLU backward
+        for (g, &a) in gh.data.iter_mut().zip(&self.h_act.data) {
+            if a <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        // norm backward (straight-through stats): gh_pre = gh * inv_std
+        match self.norm {
+            ResidualNorm::Group { groups } => {
+                let g = groups.min(w).max(1);
+                let gsz = w / g;
+                for i in 0..b {
+                    for gi in 0..g {
+                        let lo = gi * gsz;
+                        let hi = if gi == g - 1 { w } else { lo + gsz };
+                        let inv = self.inv_std[i * g + gi];
+                        for j in lo..hi {
+                            *gh.at_mut(i, j) *= inv;
+                        }
+                    }
+                }
+            }
+            ResidualNorm::Batch => {
+                for i in 0..b {
+                    for j in 0..w {
+                        *gh.at_mut(i, j) *= self.inv_std[j];
+                    }
+                }
+            }
+        }
+        // w1 grads + gx
+        ops::matmul_at_b(backend, x, &gh, &mut self.w1.gw);
+        ops::col_sums(&gh, &mut self.w1.gb);
+        if let Some(gx) = gx_accum {
+            let mut gxb = Mat::zeros(b, x.cols);
+            ops::matmul_a_bt(backend, &gh, &self.w1.w, &mut gxb);
+            ops::add_assign(gx, &gxb);
+        }
+    }
+
+    pub fn update(&mut self, lr: f32) {
+        ops::sgd_step(&mut self.w1.w.data, &self.w1.gw.data, lr);
+        ops::sgd_step(&mut self.w1.b, &self.w1.gb, lr);
+        ops::sgd_step(&mut self.w2.w.data, &self.w2.gw.data, lr);
+        ops::sgd_step(&mut self.w2.b, &self.w2.gb, lr);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w1.param_count() + self.w2.param_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_init_branch_is_noop_except_bias() {
+        let mut rng = Rng::new(0);
+        let mut r = LiteResidual::new(&mut rng, 16, 16, 4, ResidualNorm::Group { groups: 2 });
+        let x = Mat::from_fn(5, 16, |_, _| rng.normal());
+        let mut y = Mat::zeros(5, 16);
+        r.forward_accumulate(Backend::Blocked, &x, &mut y);
+        // w2 weights are zero and biases start zero -> output unchanged
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn training_reduces_residual_loss() {
+        // teach the branch to cancel a constant offset: y_target = 0 while
+        // trunk output is a constant c -> branch must learn r(x) = -c
+        let mut rng = Rng::new(1);
+        let mut r = LiteResidual::new(&mut rng, 8, 8, 2, ResidualNorm::Group { groups: 2 });
+        let x = Mat::from_fn(10, 8, |_, _| rng.normal());
+        let trunk = Mat::from_fn(10, 8, |_, j| 0.5 + 0.1 * j as f32);
+
+        let mut last = f32::INFINITY;
+        for step in 0..200 {
+            let mut y = trunk.clone();
+            r.forward_accumulate(Backend::Blocked, &x, &mut y);
+            let loss: f32 = y.data.iter().map(|v| v * v).sum::<f32>() / y.data.len() as f32;
+            let mut gy = y.clone();
+            for g in gy.data.iter_mut() {
+                *g *= 2.0 / trunk.data.len() as f32;
+            }
+            r.backward_accumulate(Backend::Blocked, &x, &gy, None);
+            r.update(0.5);
+            if step == 0 {
+                last = loss;
+            }
+        }
+        let mut y = trunk.clone();
+        r.forward_accumulate(Backend::Blocked, &x, &mut y);
+        let final_loss: f32 =
+            y.data.iter().map(|v| v * v).sum::<f32>() / y.data.len() as f32;
+        assert!(final_loss < 0.1 * last, "{final_loss} vs {last}");
+    }
+
+    #[test]
+    fn group_norm_is_batch_independent() {
+        let mut rng = Rng::new(2);
+        let mut r = LiteResidual::new(&mut rng, 8, 8, 2, ResidualNorm::Group { groups: 2 });
+        r.w2.w.fill(0.1); // make the branch non-trivial
+        let x1 = Mat::from_fn(1, 8, |_, j| j as f32 * 0.3 - 1.0);
+        // same row duplicated in a larger batch
+        let x4 = Mat::from_fn(4, 8, |_, j| j as f32 * 0.3 - 1.0);
+        let mut y1 = Mat::zeros(1, 8);
+        let mut y4 = Mat::zeros(4, 8);
+        r.forward_accumulate(Backend::Blocked, &x1, &mut y1);
+        r.forward_accumulate(Backend::Blocked, &x4, &mut y4);
+        for j in 0..8 {
+            assert!((y1.at(0, j) - y4.at(2, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn param_count_is_small_fraction_of_backbone() {
+        let mut rng = Rng::new(3);
+        let r = LiteResidual::new(&mut rng, 96, 96, 4, ResidualNorm::Batch);
+        // 96->24->96 + biases = 96*24 + 24 + 24*96 + 96
+        assert_eq!(r.param_count(), 96 * 24 + 24 + 24 * 96 + 96);
+        assert!((r.param_count() as f64) < 0.6 * (96.0 * 96.0));
+    }
+}

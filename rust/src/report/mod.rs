@@ -1,0 +1,195 @@
+//! Table/figure formatting: renders experiment results in the paper's own
+//! row/column layout (so outputs are visually comparable to the paper),
+//! plus CSV/markdown/JSON sinks for downstream tooling.
+
+use std::fmt::Write as _;
+
+use crate::util::json::{arr, obj, s, Json};
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Pretty console rendering.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line: usize = w.iter().sum::<usize>() + 3 * w.len() + 1;
+        let sep = "-".repeat(line);
+        let _ = writeln!(out, "{sep}");
+        let mut hdr = String::from("|");
+        for (h, wi) in self.headers.iter().zip(&w) {
+            let _ = write!(hdr, " {h:<wi$} |");
+        }
+        let _ = writeln!(out, "{hdr}");
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let mut r = String::from("|");
+            for (c, wi) in row.iter().zip(&w) {
+                let _ = write!(r, " {c:<wi$} |");
+            }
+            let _ = writeln!(out, "{r}");
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("headers", arr(self.headers.iter().map(|h| s(h)).collect())),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|r| arr(r.iter().map(|c| s(c)).collect()))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// A simple series plot rendered as ASCII (Fig. 3 / Fig. 4 in a terminal).
+pub fn ascii_plot(title: &str, xs: &[f64], ys: &[f64], width: usize, height: usize) -> String {
+    assert_eq!(xs.len(), ys.len());
+    let mut out = format!("== {title} ==\n");
+    if xs.is_empty() {
+        return out;
+    }
+    let (ymin, ymax) = ys
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &y| (a.min(y), b.max(y)));
+    let (xmin, xmax) = (xs[0], xs[xs.len() - 1]);
+    let yr = (ymax - ymin).max(1e-12);
+    let xr = (xmax - xmin).max(1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (&x, &y) in xs.iter().zip(ys) {
+        let col = (((x - xmin) / xr) * (width - 1) as f64).round() as usize;
+        let row = (((y - ymin) / yr) * (height - 1) as f64).round() as usize;
+        grid[height - 1 - row][col.min(width - 1)] = b'*';
+    }
+    for (i, line) in grid.iter().enumerate() {
+        let yv = ymax - yr * i as f64 / (height - 1) as f64;
+        let _ = writeln!(out, "{yv:>9.3} |{}", String::from_utf8_lossy(line));
+    }
+    let _ = writeln!(out, "{:>9} +{}", "", "-".repeat(width));
+    let _ = writeln!(out, "{:>10} {:<.3} .. {:.3}", "x:", xmin, xmax);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Table X", &["method", "Damage1", "HAR"]);
+        t.row(vec!["FT-All".into(), "98.73±2.11".into(), "90.99±1.86".into()]);
+        t.row(vec!["Skip2-LoRA".into(), "96.19±2.29".into(), "91.99±1.00".into()]);
+        t
+    }
+
+    #[test]
+    fn render_contains_all_cells() {
+        let r = sample().render();
+        for needle in ["Table X", "FT-All", "98.73±2.11", "Skip2-LoRA", "HAR"] {
+            assert!(r.contains(needle), "missing {needle}\n{r}");
+        }
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn markdown_has_separator() {
+        let md = sample().to_markdown();
+        assert!(md.contains("|---|---|---|"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ascii_plot_marks_extremes() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x / 10.0).sin()).collect();
+        let p = ascii_plot("sine", &xs, &ys, 60, 10);
+        assert!(p.contains('*'));
+        assert!(p.lines().count() > 10);
+    }
+}

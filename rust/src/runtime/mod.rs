@@ -1,0 +1,246 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from rust. Python never runs here — the HLO text files
+//! plus `manifest.json` are the entire interface (see DESIGN.md §2).
+//!
+//! Flow per artifact: `HloModuleProto::from_text_file` (the text parser
+//! reassigns jax's 64-bit instruction ids, which xla_extension 0.5.1 would
+//! otherwise reject) → `XlaComputation::from_proto` → `client.compile` →
+//! cached `PjRtLoadedExecutable`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Input signature entry from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One compiled AOT artifact with its positional signature.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<String>,
+}
+
+impl Artifact {
+    /// Execute with positional f32 buffers matching the manifest signature.
+    /// Returns one Vec<f32> per declared output (tuple unpacked).
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (sig, buf) in self.inputs.iter().zip(inputs) {
+            if buf.len() != sig.element_count() {
+                bail!(
+                    "{}: input '{}' expects {} elements (shape {:?}), got {}",
+                    self.name,
+                    sig.name,
+                    sig.element_count(),
+                    sig.shape,
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .with_context(|| format!("reshape input '{}'", sig.name))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{e}")))
+            .collect()
+    }
+}
+
+/// Artifact registry: parses the manifest, compiles lazily, caches
+/// executables (one compile per model variant per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    compiled: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (must contain manifest.json) on the CPU PJRT
+    /// client.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let manifest = json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        if manifest.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Dataset metadata from the manifest.
+    pub fn dataset_dims(&self, ds: &str) -> Result<(usize, usize, usize)> {
+        let d = self
+            .manifest
+            .get("datasets")
+            .and_then(|m| m.get(ds))
+            .ok_or_else(|| anyhow!("dataset '{ds}' not in manifest"))?;
+        Ok((
+            d.get("n_in").and_then(Json::as_usize).unwrap_or(0),
+            d.get("hidden").and_then(Json::as_usize).unwrap_or(0),
+            d.get("n_out").and_then(Json::as_usize).unwrap_or(0),
+        ))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.get("batch").and_then(Json::as_usize).unwrap_or(20)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest key, e.g.
+    /// `fan_skip2_step`.
+    pub fn load(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.compiled.contains_key(name) {
+            let art = self
+                .manifest
+                .get("artifacts")
+                .and_then(|a| a.get(name))
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let file = art
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}': no file"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+
+            let inputs = art
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact '{name}': no inputs"))?
+                .iter()
+                .map(|sig| {
+                    let nm = sig.get("name").and_then(Json::as_str).unwrap_or("?");
+                    let shape = sig
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    TensorSig { name: nm.to_string(), shape }
+                })
+                .collect();
+            let outputs = art
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default();
+            self.compiled.insert(
+                name.to_string(),
+                Artifact { name: name.to_string(), exe, inputs, outputs },
+            );
+        }
+        Ok(&self.compiled[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::open(&artifacts_dir()).unwrap();
+        let names = rt.artifact_names();
+        assert!(names.iter().any(|n| n == "fan_skip2_step"), "{names:?}");
+        assert_eq!(rt.dataset_dims("fan").unwrap(), (256, 96, 3));
+        assert_eq!(rt.dataset_dims("har").unwrap(), (561, 96, 6));
+        assert_eq!(rt.batch(), 20);
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::open(&artifacts_dir()).unwrap();
+        let art = rt.load("fan_predict").unwrap();
+        // wrong arity
+        assert!(art.run(&[]).is_err());
+        // wrong element count in the first input
+        let bad = vec![0.0f32; 3];
+        let bufs: Vec<&[f32]> = (0..art.inputs.len()).map(|_| bad.as_slice()).collect();
+        assert!(art.run(&bufs).is_err());
+    }
+}

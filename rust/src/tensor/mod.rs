@@ -1,0 +1,129 @@
+//! Dense f32 matrix substrate for the native (edge-device) engine.
+//!
+//! The paper implements everything in C with hand-vectorized (Neon) MACs;
+//! this module is the rust equivalent. Two kernel families:
+//!
+//! * `*_naive` — the scalar triple loop exactly as the paper's Algorithm 2
+//!   (used as the correctness oracle and as the `--simd=false` baseline).
+//! * the default blocked/unrolled kernels in [`ops`] — register-tiled
+//!   matmuls that the compiler auto-vectorizes, standing in for the
+//!   paper's `-mfpu=neon -ffast-math` build.
+//!
+//! All hot-loop entry points write into caller-provided buffers; the
+//! training loop performs **zero allocation per batch** (DESIGN.md §7 L3).
+
+pub mod ops;
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Transposed copy (cold path only; hot paths use the fused
+    /// `matmul_at_b` / `matmul_a_bt` kernels instead of materializing
+    /// transposes).
+    pub fn transposed(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm (used by tests and drift diagnostics).
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        *m.at_mut(2, 3) = 7.5;
+        *m.at_mut(0, 0) = -1.0;
+        assert_eq!(m.at(2, 3), 7.5);
+        assert_eq!(m.at(0, 0), -1.0);
+        assert_eq!(m.row(2)[3], 7.5);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.data, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 7 + j * 3) as f32 * 0.5);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,452 @@
+//! Matmul and elementwise kernels.
+//!
+//! Naming follows the backward-pass needs of the paper's Table 1:
+//!
+//! * `matmul`        : C = A·B        — Eq. 1 forward (and Eq. 7-8)
+//! * `matmul_at_b`   : C = Aᵀ·B       — Eq. 2 (gW = xᵀ·gy), Eq. 10, 12
+//! * `matmul_a_bt`   : C = A·Bᵀ       — Eq. 4 (gx = gy·Wᵀ), Eq. 11, 13
+//!
+//! Each has a `_naive` scalar form (Algorithm 2's triple loop — the paper's
+//! non-SIMD baseline) and a blocked/unrolled form the compiler vectorizes
+//! (the `-mfpu=neon` stand-in). `Backend` selects between them at runtime,
+//! mirroring the paper's with/without-Neon measurements.
+
+use super::Mat;
+
+/// Kernel selection: `Scalar` = Algorithm 2 verbatim; `Blocked` =
+/// register-tiled + unrolled (auto-vectorized) hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Blocked,
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Blocked
+    }
+}
+
+// ---------------------------------------------------------------------------
+// C = A (R x K) · B (K x C) [+ bias]
+// ---------------------------------------------------------------------------
+
+/// Scalar MAC triple loop — paper Algorithm 2 lines 6-11 (batched).
+pub fn matmul_naive(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for m in 0..b.cols {
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                acc += arow[k] * b.data[k * b.cols + m];
+            }
+            orow[m] = acc;
+        }
+    }
+}
+
+/// Blocked matmul: row-major friendly i-k-j loop with 4-way k unrolling.
+/// The inner j loop is a contiguous axpy the compiler vectorizes — the
+/// rust analogue of the paper's Neon MAC.
+pub fn matmul_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let n = b.cols;
+    out.data.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        let mut k = 0;
+        while k + 4 <= a.cols {
+            let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+            let b0 = &b.data[k * n..(k + 1) * n];
+            let b1 = &b.data[(k + 1) * n..(k + 2) * n];
+            let b2 = &b.data[(k + 2) * n..(k + 3) * n];
+            let b3 = &b.data[(k + 3) * n..(k + 4) * n];
+            // zip chain guarantees bounds-check elision + vectorization
+            for ((((o, &v0), &v1), &v2), &v3) in
+                orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+            {
+                *o += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+            }
+            k += 4;
+        }
+        while k < a.cols {
+            let ak = arow[k];
+            let brow = &b.data[k * n..(k + 1) * n];
+            for (o, &v) in orow.iter_mut().zip(brow) {
+                *o += ak * v;
+            }
+            k += 1;
+        }
+    }
+}
+
+pub fn matmul(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
+    match backend {
+        Backend::Scalar => matmul_naive(a, b, out),
+        Backend::Blocked => matmul_blocked(a, b, out),
+    }
+}
+
+/// out = a·b + bias (bias broadcast over rows) — FC forward Eq. 1 pre-G.
+pub fn matmul_bias(backend: Backend, a: &Mat, b: &Mat, bias: &[f32], out: &mut Mat) {
+    matmul(backend, a, b, out);
+    add_bias(out, bias);
+}
+
+// ---------------------------------------------------------------------------
+// C = Aᵀ·B  (gW = xᵀ gy; gWB = yAᵀ gy; gWA = xᵀ gxB)
+// ---------------------------------------------------------------------------
+
+pub fn matmul_at_b_naive(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
+    for n in 0..a.cols {
+        for m in 0..b.cols {
+            let mut acc = 0.0f32;
+            for i in 0..a.rows {
+                acc += a.data[i * a.cols + n] * b.data[i * b.cols + m];
+            }
+            out.data[n * b.cols + m] = acc;
+        }
+    }
+}
+
+/// Blocked Aᵀ·B: accumulate rank-1 updates row-by-row of A/B; inner loop
+/// contiguous over B's columns.
+pub fn matmul_at_b_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
+    let m = b.cols;
+    out.data.iter_mut().for_each(|x| *x = 0.0);
+    if m <= 8 {
+        // rank-sized RHS (LoRA gW_A = xᵀ·gx_B): branchless — the m-wide
+        // update is cheaper than a data-dependent branch, and the whole
+        // (n, m) row pair is contiguous, so this vectorizes as
+        // out[n*m..][j] += a[i][n] * b[i][j].
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let brow = b.row(i);
+            for (ochunk, &an) in out.data.chunks_exact_mut(m).zip(arow) {
+                for (o, &v) in ochunk.iter_mut().zip(brow) {
+                    *o += an * v;
+                }
+            }
+        }
+        return;
+    }
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for (n, &an) in arow.iter().enumerate() {
+            if an == 0.0 {
+                continue; // post-ReLU activations are ~50% zero
+            }
+            let orow = &mut out.data[n * m..(n + 1) * m];
+            for (o, &v) in orow.iter_mut().zip(brow) {
+                *o += an * v;
+            }
+        }
+    }
+}
+
+pub fn matmul_at_b(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
+    match backend {
+        Backend::Scalar => matmul_at_b_naive(a, b, out),
+        Backend::Blocked => matmul_at_b_blocked(a, b, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// C = A·Bᵀ  (gx = gy·Wᵀ; gxB = gy·WBᵀ; gxA = gxB·WAᵀ)
+// ---------------------------------------------------------------------------
+
+pub fn matmul_a_bt_naive(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((out.rows, out.cols), (a.rows, b.rows));
+    for i in 0..a.rows {
+        for r in 0..b.rows {
+            let mut acc = 0.0f32;
+            for k in 0..a.cols {
+                acc += a.data[i * a.cols + k] * b.data[r * b.cols + k];
+            }
+            out.data[i * b.rows + r] = acc;
+        }
+    }
+}
+
+/// A·Bᵀ: rows of A dotted with rows of B. Tiled 4 B-rows × 4-unrolled k:
+/// 16 independent accumulator chains give the ILP that a single FP dot
+/// reduction (which the compiler may not reorder) cannot.
+pub fn matmul_a_bt_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((out.rows, out.cols), (a.rows, b.rows));
+    let k_len = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * b.rows..(i + 1) * b.rows];
+        let mut r = 0;
+        while r + 4 <= b.rows {
+            let b0 = b.row(r);
+            let b1 = b.row(r + 1);
+            let b2 = b.row(r + 2);
+            let b3 = b.row(r + 3);
+            let mut acc = [[0.0f32; 4]; 4]; // [unroll_lane][b_row]
+            let mut k = 0;
+            while k + 4 <= k_len {
+                for u in 0..4 {
+                    let av = arow[k + u];
+                    acc[u][0] += av * b0[k + u];
+                    acc[u][1] += av * b1[k + u];
+                    acc[u][2] += av * b2[k + u];
+                    acc[u][3] += av * b3[k + u];
+                }
+                k += 4;
+            }
+            while k < k_len {
+                let av = arow[k];
+                acc[0][0] += av * b0[k];
+                acc[0][1] += av * b1[k];
+                acc[0][2] += av * b2[k];
+                acc[0][3] += av * b3[k];
+                k += 1;
+            }
+            for j in 0..4 {
+                orow[r + j] = acc[0][j] + acc[1][j] + acc[2][j] + acc[3][j];
+            }
+            r += 4;
+        }
+        while r < b.rows {
+            let brow = b.row(r);
+            let mut acc0 = 0.0f32;
+            let mut acc1 = 0.0f32;
+            let mut acc2 = 0.0f32;
+            let mut acc3 = 0.0f32;
+            let mut k = 0;
+            while k + 4 <= k_len {
+                acc0 += arow[k] * brow[k];
+                acc1 += arow[k + 1] * brow[k + 1];
+                acc2 += arow[k + 2] * brow[k + 2];
+                acc3 += arow[k + 3] * brow[k + 3];
+                k += 4;
+            }
+            let mut acc = acc0 + acc1 + acc2 + acc3;
+            while k < k_len {
+                acc += arow[k] * brow[k];
+                k += 1;
+            }
+            orow[r] = acc;
+            r += 1;
+        }
+    }
+}
+
+pub fn matmul_a_bt(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
+    match backend {
+        Backend::Scalar => matmul_a_bt_naive(a, b, out),
+        Backend::Blocked => matmul_a_bt_blocked(a, b, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// elementwise / reductions
+// ---------------------------------------------------------------------------
+
+/// out[i, :] += bias
+pub fn add_bias(out: &mut Mat, bias: &[f32]) {
+    assert_eq!(out.cols, bias.len());
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        for (o, b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// out += src (same shape)
+pub fn add_assign(out: &mut Mat, src: &Mat) {
+    assert_eq!(out.shape(), src.shape());
+    for (o, s) in out.data.iter_mut().zip(&src.data) {
+        *o += s;
+    }
+}
+
+/// column sums: gb = Σ_B gy (Eq. 3)
+pub fn col_sums(a: &Mat, out: &mut [f32]) {
+    assert_eq!(a.cols, out.len());
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..a.rows {
+        for (o, v) in out.iter_mut().zip(a.row(i)) {
+            *o += v;
+        }
+    }
+}
+
+/// y -= lr * g, elementwise (Eq. 5-6, 15-16)
+pub fn sgd_step(param: &mut [f32], grad: &[f32], lr: f32) {
+    assert_eq!(param.len(), grad.len());
+    for (p, g) in param.iter_mut().zip(grad) {
+        *p -= lr * g;
+    }
+}
+
+/// In-place ReLU; returns nothing (mask recovered from output sign).
+pub fn relu_inplace(x: &mut Mat) {
+    for v in x.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// gx = gy ⊙ (y > 0): ReLU backward given the forward *output*.
+pub fn relu_backward_inplace(gy: &mut Mat, y: &Mat) {
+    assert_eq!(gy.shape(), y.shape());
+    for (g, &v) in gy.data.iter_mut().zip(&y.data) {
+        if v <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Row-wise softmax, numerically stable, in place.
+pub fn softmax_rows(x: &mut Mat) {
+    for i in 0..x.rows {
+        let row = x.row_mut(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_matmul() {
+        let mut rng = Rng::new(1);
+        for &(r, k, c) in &[(1, 1, 1), (3, 5, 7), (20, 256, 96), (20, 96, 3), (5, 4, 9)] {
+            let a = rand_mat(&mut rng, r, k);
+            let b = rand_mat(&mut rng, k, c);
+            let mut o1 = Mat::zeros(r, c);
+            let mut o2 = Mat::zeros(r, c);
+            matmul_naive(&a, &b, &mut o1);
+            matmul_blocked(&a, &b, &mut o2);
+            assert_close(&o1, &o2, 1e-5);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_at_b() {
+        let mut rng = Rng::new(2);
+        for &(bsz, n, m) in &[(1, 1, 1), (20, 256, 3), (20, 96, 3), (7, 13, 5)] {
+            let a = rand_mat(&mut rng, bsz, n);
+            let b = rand_mat(&mut rng, bsz, m);
+            let mut o1 = Mat::zeros(n, m);
+            let mut o2 = Mat::zeros(n, m);
+            matmul_at_b_naive(&a, &b, &mut o1);
+            matmul_at_b_blocked(&a, &b, &mut o2);
+            assert_close(&o1, &o2, 1e-5);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_a_bt() {
+        let mut rng = Rng::new(3);
+        for &(bsz, m, n) in &[(1, 1, 1), (20, 3, 256), (20, 3, 96), (6, 11, 4)] {
+            let a = rand_mat(&mut rng, bsz, m);
+            let b = rand_mat(&mut rng, n, m);
+            let mut o1 = Mat::zeros(bsz, n);
+            let mut o2 = Mat::zeros(bsz, n);
+            matmul_a_bt_naive(&a, &b, &mut o1);
+            matmul_a_bt_blocked(&a, &b, &mut o2);
+            assert_close(&o1, &o2, 1e-5);
+        }
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit_transpose() {
+        let mut rng = Rng::new(4);
+        let a = rand_mat(&mut rng, 8, 5);
+        let b = rand_mat(&mut rng, 8, 6);
+        let mut fused = Mat::zeros(5, 6);
+        matmul_at_b_blocked(&a, &b, &mut fused);
+        let mut explicit = Mat::zeros(5, 6);
+        matmul_naive(&a.transposed(), &b, &mut explicit);
+        assert_close(&fused, &explicit, 1e-5);
+
+        let w = rand_mat(&mut rng, 9, 6);
+        let mut fused2 = Mat::zeros(8, 9);
+        matmul_a_bt_blocked(&b, &w, &mut fused2);
+        let mut explicit2 = Mat::zeros(8, 9);
+        matmul_naive(&b, &w.transposed(), &mut explicit2);
+        assert_close(&fused2, &explicit2, 1e-5);
+    }
+
+    #[test]
+    fn bias_and_colsums() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        add_bias(&mut m, &[10.0, 20.0, 30.0]);
+        assert_eq!(m.data, vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        let mut sums = vec![0.0; 3];
+        col_sums(&m, &mut sums);
+        assert_eq!(sums, vec![25.0, 47.0, 69.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1000.0, 0.0, 1000.0]);
+        softmax_rows(&mut m);
+        for i in 0..2 {
+            let s: f32 = m.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // extreme logits stay finite
+        assert!(m.data.iter().all(|x| x.is_finite()));
+        assert!((m.at(1, 2) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn relu_fwd_bwd() {
+        let mut y = Mat::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        relu_inplace(&mut y);
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0, 0.0]);
+        let mut g = Mat::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        relu_backward_inplace(&mut g, &y);
+        assert_eq!(g.data, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn sgd_step_updates() {
+        let mut p = vec![1.0, 2.0];
+        sgd_step(&mut p, &[0.5, -0.5], 0.1);
+        assert_eq!(p, vec![0.95, 2.05]);
+    }
+}

@@ -1,0 +1,3 @@
+//! Property-based testing substrate (no `proptest` crate offline).
+
+pub mod prop;

@@ -1,0 +1,108 @@
+//! Mini-proptest: seeded random-input property checking with failure
+//! reporting (seed + case index) so failures are replayable.
+//!
+//! Used by the integration tests to sweep coordinator/cache/tensor
+//! invariants over randomized inputs (DESIGN.md §3 substitutions).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x5EED_CAFE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` randomized cases. `prop` receives a forked
+/// RNG per case and returns `Err(msg)` to fail. Panics with the seed and
+/// case number on failure so the case is replayable.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = root.fork();
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Generators.
+pub mod gen {
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+
+    pub fn mat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    /// Matrix with ~`sparsity` fraction of zeros (exercises the skip-zero
+    /// fast paths in the blocked kernels).
+    pub fn sparse_mat(rng: &mut Rng, rows: usize, cols: usize, sparsity: f32) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| {
+            if rng.f32() < sparsity {
+                0.0
+            } else {
+                rng.normal()
+            }
+        })
+    }
+
+    pub fn labels(rng: &mut Rng, n: usize, n_classes: usize) -> Vec<usize> {
+        (0..n).map(|_| rng.below(n_classes)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", PropConfig { cases: 10, seed: 1 }, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        check("fails", PropConfig { cases: 5, seed: 2 }, |rng| {
+            if rng.f32() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_produce_requested_shapes() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let m = gen::mat(&mut rng, 4, 7);
+        assert_eq!(m.shape(), (4, 7));
+        let s = gen::sparse_mat(&mut rng, 30, 30, 0.9);
+        let zeros = s.data.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 600, "{zeros}");
+        let l = gen::labels(&mut rng, 50, 3);
+        assert!(l.iter().all(|&x| x < 3));
+    }
+}

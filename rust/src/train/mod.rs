@@ -1,0 +1,10 @@
+//! Training: the generalized Algorithm 1 over all eight fine-tuning
+//! methods, with per-layer phase timing (Tables 2/6/7), training-curve
+//! recording (Fig. 3), and the Skip-Cache fast path (Skip2-LoRA).
+
+pub mod finetuner;
+pub mod tinytl;
+pub mod trainer;
+
+pub use finetuner::FineTuner;
+pub use trainer::{train, TrainConfig, TrainOutcome};

@@ -1,0 +1,263 @@
+//! The epoch loop — Algorithm 1 generalized to every method — plus
+//! training-curve recording (Fig. 3) and timing aggregation (Tables 6/7).
+
+use crate::cache::{BoundedSkipCache, CacheBackend, SkipCache};
+use crate::data::sampler::{BatchSampler, SamplingMode};
+use crate::data::Dataset;
+use crate::method::Method;
+use crate::train::finetuner::FineTuner;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub sampling: SamplingMode,
+    /// evaluate test accuracy every `k` epochs into `curve` (Fig. 3);
+    /// 0 disables curve recording
+    pub eval_every: usize,
+    /// Skip-Cache capacity: `None` = the paper's full store (one slot per
+    /// training sample); `Some(k)` = bounded key-value LRU with k entries
+    /// (paper §4.3's storage-limited variant)
+    pub cache_capacity: Option<usize>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 300,
+            batch_size: 20, // paper §5.3
+            lr: 0.02,
+            seed: 0,
+            sampling: SamplingMode::WithReplacement,
+            eval_every: 0,
+            cache_capacity: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    /// mean loss per epoch
+    pub loss_curve: Vec<f32>,
+    /// (epoch, test accuracy) samples when eval_every > 0
+    pub curve: Vec<(usize, f64)>,
+    /// phase timings accumulated over the whole run
+    pub timer: PhaseTimer,
+    /// batches executed
+    pub batches: u64,
+    /// Skip-Cache statistics (Skip2-LoRA only)
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// cache footprint in bytes at the end of training
+    pub cache_bytes: usize,
+}
+
+impl TrainOutcome {
+    /// Mean train time per batch in ms (the paper's "Train@batch").
+    /// Cache-management time is already inside the forward span (the
+    /// paper's `forward_fc(C_skip)` likewise includes the cache consult).
+    pub fn train_ms_per_batch(&self) -> f64 {
+        self.timer.mean_ms_per("forward", self.batches)
+            + self.timer.mean_ms_per("backward", self.batches)
+            + self.timer.mean_ms_per("weight_update", self.batches)
+    }
+}
+
+/// Fine-tune `tuner`'s model on `finetune` per Algorithm 1. If the method
+/// uses the Skip-Cache a fresh cache is created (line 2) and threaded
+/// through every batch. Returns curves + timing.
+pub fn train(
+    tuner: &mut FineTuner,
+    finetune: &Dataset,
+    test: Option<&Dataset>,
+    cfg: &TrainConfig,
+) -> TrainOutcome {
+    let mut rng = Rng::new(cfg.seed);
+    let mut sampler = BatchSampler::new(finetune.len(), cfg.batch_size, cfg.sampling);
+    let mut cache: Option<Box<dyn CacheBackend>> = if tuner.method.uses_cache() {
+        Some(match cfg.cache_capacity {
+            None => Box::new(SkipCache::new(finetune.len())),
+            Some(cap) => Box::new(BoundedSkipCache::new(cap)),
+        })
+    } else {
+        None
+    };
+
+    let mut out = TrainOutcome::default();
+    let mut idx: Vec<usize> = Vec::with_capacity(cfg.batch_size);
+    let bpe = sampler.batches_per_epoch();
+
+    for epoch in 0..cfg.epochs {
+        let mut epoch_loss = 0.0f32;
+        for _ in 0..bpe {
+            sampler.next_batch(&mut rng, &mut idx);
+            match cache.as_mut() {
+                Some(c) => {
+                    tuner.forward_cached(finetune, &idx, c.as_mut(), &mut out.timer);
+                }
+                None => {
+                    tuner.load_batch(finetune, &idx);
+                    tuner.forward(&mut out.timer);
+                }
+            }
+            epoch_loss += tuner.backward(&mut out.timer);
+            tuner.update(cfg.lr, &mut out.timer);
+            out.batches += 1;
+        }
+        out.loss_curve.push(epoch_loss / bpe as f32);
+
+        if cfg.eval_every > 0 && (epoch % cfg.eval_every == 0 || epoch == cfg.epochs - 1) {
+            if let Some(t) = test {
+                out.curve.push((epoch, tuner.accuracy(t)));
+            }
+        }
+    }
+
+    if let Some(c) = &cache {
+        out.cache_hits = c.stats().hits;
+        out.cache_misses = c.stats().misses;
+        out.cache_bytes = c.byte_size();
+    }
+    out
+}
+
+/// Pre-train a fresh backbone with FT-All (§5.2 protocol step 1). Returns
+/// the trained model (topology `None`); callers re-wrap it with the
+/// fine-tuning method's topology.
+pub fn pretrain(
+    config: crate::model::MlpConfig,
+    data: &Dataset,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+    backend: crate::tensor::ops::Backend,
+) -> crate::model::Mlp {
+    use crate::model::mlp::AdapterTopology;
+    let mut rng = Rng::new(seed);
+    let model = crate::model::Mlp::new(&mut rng, config, AdapterTopology::None);
+    let mut tuner = FineTuner::new(model, Method::FtAll, backend, 20.min(data.len()));
+    let cfg = TrainConfig {
+        epochs,
+        batch_size: 20.min(data.len()),
+        lr,
+        seed: seed ^ 0x5EED,
+        sampling: SamplingMode::WithReplacement,
+        eval_every: 0,
+        cache_capacity: None,
+    };
+    let _ = train(&mut tuner, data, None, &cfg);
+    tuner.model
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp::AdapterTopology;
+    use crate::model::{Mlp, MlpConfig};
+    use crate::tensor::ops::Backend;
+    use crate::tensor::Mat;
+
+    fn toy_benchmark(seed: u64) -> (Dataset, Dataset) {
+        // two-cluster-per-class data, train + test from same distribution
+        let mut rng = Rng::new(seed);
+        let gen = |rng: &mut Rng, n: usize| {
+            let centers: Vec<Vec<f32>> = (0..3)
+                .map(|c| (0..10).map(|j| if j % 3 == c { 2.5 } else { 0.0 }).collect())
+                .collect();
+            let mut x = Mat::zeros(n, 10);
+            let mut labels = Vec::new();
+            for i in 0..n {
+                let c = i % 3;
+                for j in 0..10 {
+                    *x.at_mut(i, j) = centers[c][j] + 0.4 * rng.normal();
+                }
+                labels.push(c);
+            }
+            Dataset { x, labels, n_classes: 3 }
+        };
+        (gen(&mut rng, 120), gen(&mut rng, 60))
+    }
+
+    #[test]
+    fn pretrain_then_skip2_finetune_reaches_high_accuracy() {
+        let (tr, te) = toy_benchmark(0);
+        let cfg = MlpConfig { dims: vec![10, 16, 16, 3], rank: 2, batch_norm: true };
+        let mut backbone = pretrain(cfg, &tr, 60, 0.05, 1, Backend::Blocked);
+        let mut rng = Rng::new(2);
+        backbone.set_topology(&mut rng, AdapterTopology::Skip);
+        let mut tuner = FineTuner::new(backbone, Method::Skip2Lora, Backend::Blocked, 20);
+        let out = train(
+            &mut tuner,
+            &tr,
+            Some(&te),
+            &TrainConfig { epochs: 40, lr: 0.05, eval_every: 10, ..Default::default() },
+        );
+        let final_acc = tuner.accuracy(&te);
+        assert!(final_acc > 0.9, "acc {final_acc}");
+        assert!(!out.curve.is_empty());
+        assert!(out.cache_hits > 0);
+        // with replacement over 40 epochs, hit rate should be >= 90%
+        let hr = out.cache_hits as f64 / (out.cache_hits + out.cache_misses) as f64;
+        assert!(hr > 0.9, "hit rate {hr}");
+    }
+
+    #[test]
+    fn loss_curve_is_decreasing_overall() {
+        let (tr, _) = toy_benchmark(1);
+        let cfg = MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true };
+        let mut rng = Rng::new(3);
+        let model = Mlp::new(&mut rng, cfg, AdapterTopology::None);
+        let mut tuner = FineTuner::new(model, Method::FtAll, Backend::Blocked, 20);
+        let out = train(
+            &mut tuner,
+            &tr,
+            None,
+            &TrainConfig { epochs: 30, lr: 0.05, ..Default::default() },
+        );
+        assert_eq!(out.loss_curve.len(), 30);
+        let first = out.loss_curve[..3].iter().sum::<f32>() / 3.0;
+        let last = out.loss_curve[27..].iter().sum::<f32>() / 3.0;
+        assert!(last < first * 0.7, "{first} -> {last}");
+    }
+
+    #[test]
+    fn cache_misses_bounded_by_dataset_size() {
+        let (tr, _) = toy_benchmark(2);
+        let cfg = MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true };
+        let mut rng = Rng::new(4);
+        let model = Mlp::new(&mut rng, cfg, AdapterTopology::Skip);
+        let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 20);
+        let out = train(
+            &mut tuner,
+            &tr,
+            None,
+            &TrainConfig { epochs: 20, lr: 0.02, ..Default::default() },
+        );
+        // every miss fills a slot permanently: misses <= |T|
+        assert!(out.cache_misses <= tr.len() as u64, "{}", out.cache_misses);
+        assert!(out.cache_bytes > 0);
+    }
+
+    #[test]
+    fn timer_phases_consistent_with_batches() {
+        let (tr, _) = toy_benchmark(3);
+        let cfg = MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true };
+        let mut rng = Rng::new(5);
+        let model = Mlp::new(&mut rng, cfg, AdapterTopology::None);
+        let mut tuner = FineTuner::new(model, Method::FtLast, Backend::Blocked, 20);
+        let out = train(
+            &mut tuner,
+            &tr,
+            None,
+            &TrainConfig { epochs: 5, lr: 0.02, ..Default::default() },
+        );
+        assert_eq!(out.batches, 5 * (120 / 20));
+        assert_eq!(out.timer.count("forward"), out.batches);
+        assert_eq!(out.timer.count("backward"), out.batches);
+        assert!(out.train_ms_per_batch() > 0.0);
+    }
+}

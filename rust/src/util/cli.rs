@@ -1,0 +1,147 @@
+//! Minimal declarative CLI parsing (no `clap` on this image).
+//!
+//! Supports `--name value`, `--name=value`, boolean `--flag`, and
+//! positional arguments. Typed getters with defaults; `--help` text is
+//! generated from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+    /// (name, default, help) registered by getters, for --help output.
+    registered: Vec<(String, String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn register(&mut self, name: &str, default: &str, help: &str) {
+        self.registered
+            .push((name.to_string(), default.to_string(), help.to_string()));
+    }
+
+    pub fn get_str(&mut self, name: &str, default: &str, help: &str) -> String {
+        self.register(name, default, help);
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&mut self, name: &str, default: usize, help: &str) -> usize {
+        self.register(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&mut self, name: &str, default: u64, help: &str) -> u64 {
+        self.register(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&mut self, name: &str, default: f32, help: &str) -> f32 {
+        self.register(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&mut self, name: &str, default: bool, help: &str) -> bool {
+        self.register(name, &default.to_string(), help);
+        self.flags
+            .get(name)
+            .map(|v| v == "true" || v == "1" || v == "yes")
+            .unwrap_or(default)
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.flags.contains_key("help")
+    }
+
+    /// Render help for all options touched so far.
+    pub fn help_text(&self, usage: &str) -> String {
+        let mut out = format!("usage: {usage}\n\noptions:\n");
+        for (name, default, help) in &self.registered {
+            out.push_str(&format!("  --{name:<18} {help} (default: {default})\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let mut a = parse(&["--epochs", "300", "--lr=0.05", "table4", "--simd"]);
+        assert_eq!(a.get_usize("epochs", 0, ""), 300);
+        assert!((a.get_f32("lr", 0.0, "") - 0.05).abs() < 1e-9);
+        assert!(a.get_bool("simd", false, ""));
+        assert_eq!(a.positional, vec!["table4"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse(&[]);
+        assert_eq!(a.get_usize("trials", 20, ""), 20);
+        assert_eq!(a.get_str("dataset", "fan", ""), "fan");
+        assert!(!a.get_bool("simd", false, ""));
+    }
+
+    #[test]
+    fn bool_flag_before_positional() {
+        // `--simd table6`: "table6" does not start with -- so it is consumed
+        // as the flag's value; users write `--simd=true table6` or put the
+        // positional first. Document the behaviour.
+        let a = parse(&["table6", "--simd"]);
+        assert_eq!(a.positional, vec!["table6"]);
+        assert_eq!(a.flags.get("simd").map(|s| s.as_str()), Some("true"));
+    }
+
+    #[test]
+    fn help_text_lists_registered() {
+        let mut a = parse(&["--help"]);
+        assert!(a.wants_help());
+        let _ = a.get_usize("epochs", 300, "fine-tuning epochs");
+        let text = a.help_text("skip2lora table4 [options]");
+        assert!(text.contains("--epochs"));
+        assert!(text.contains("fine-tuning epochs"));
+    }
+}

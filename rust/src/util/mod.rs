@@ -1,0 +1,9 @@
+//! Cross-cutting substrates implemented from scratch for the offline image
+//! (no rand / clap / serde / criterion crates available) — see DESIGN.md §3
+//! "Substitutions".
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

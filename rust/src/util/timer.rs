@@ -1,0 +1,151 @@
+//! Phase timers for the per-layer / per-phase execution-time breakdowns
+//! (paper Tables 2, 6, 7).
+//!
+//! `PhaseTimer` accumulates wall-clock nanoseconds per named phase across
+//! many batches; `mean_ms` divides by the number of recorded batches to
+//! give the paper's "Train@batch" style numbers.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc_ns: BTreeMap<&'static str, u128>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`, accumulating.
+    #[inline]
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_nanos();
+        *self.acc_ns.entry(phase).or_insert(0) += dt;
+        *self.counts.entry(phase).or_insert(0) += 1;
+        out
+    }
+
+    /// Add externally measured nanoseconds.
+    pub fn add_ns(&mut self, phase: &'static str, ns: u128) {
+        *self.acc_ns.entry(phase).or_insert(0) += ns;
+        *self.counts.entry(phase).or_insert(0) += 1;
+    }
+
+    pub fn total_ns(&self, phase: &str) -> u128 {
+        self.acc_ns.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    /// Mean milliseconds per recorded occurrence.
+    pub fn mean_ms(&self, phase: &str) -> f64 {
+        let c = self.count(phase);
+        if c == 0 {
+            return 0.0;
+        }
+        self.total_ns(phase) as f64 / c as f64 / 1.0e6
+    }
+
+    /// Mean ms per a caller-supplied divisor (e.g. per batch when a phase
+    /// is recorded once per epoch).
+    pub fn mean_ms_per(&self, phase: &str, divisor: u64) -> f64 {
+        if divisor == 0 {
+            return 0.0;
+        }
+        self.total_ns(phase) as f64 / divisor as f64 / 1.0e6
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, u128)> + '_ {
+        self.acc_ns.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Percentage breakdown over a set of phases (Table 2 format).
+    pub fn percent_breakdown(&self, phases: &[&'static str]) -> Vec<(String, f64)> {
+        let total: u128 = phases.iter().map(|p| self.total_ns(p)).sum();
+        phases
+            .iter()
+            .map(|p| {
+                let pct = if total == 0 {
+                    0.0
+                } else {
+                    self.total_ns(p) as f64 / total as f64 * 100.0
+                };
+                (p.to_string(), pct)
+            })
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc_ns {
+            *self.acc_ns.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc_ns.clear();
+        self.counts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_averages() {
+        let mut t = PhaseTimer::new();
+        t.add_ns("fwd", 2_000_000);
+        t.add_ns("fwd", 4_000_000);
+        t.add_ns("bwd", 1_000_000);
+        assert_eq!(t.count("fwd"), 2);
+        assert!((t.mean_ms("fwd") - 3.0).abs() < 1e-9);
+        assert!((t.mean_ms("bwd") - 1.0).abs() < 1e-9);
+        assert_eq!(t.mean_ms("nope"), 0.0);
+    }
+
+    #[test]
+    fn percent_breakdown_sums_to_100() {
+        let mut t = PhaseTimer::new();
+        t.add_ns("a", 750);
+        t.add_ns("b", 250);
+        let pct = t.percent_breakdown(&["a", "b"]);
+        let total: f64 = pct.iter().map(|(_, p)| p).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+        assert!((pct[0].1 - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_closure_runs_once() {
+        let mut t = PhaseTimer::new();
+        let mut n = 0;
+        let out = t.time("x", || {
+            n += 1;
+            42
+        });
+        assert_eq!((out, n), (42, 1));
+        assert_eq!(t.count("x"), 1);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = PhaseTimer::new();
+        let mut b = PhaseTimer::new();
+        a.add_ns("fwd", 100);
+        b.add_ns("fwd", 300);
+        b.add_ns("upd", 50);
+        a.merge(&b);
+        assert_eq!(a.total_ns("fwd"), 400);
+        assert_eq!(a.total_ns("upd"), 50);
+        assert_eq!(a.count("fwd"), 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! PJRT integration tests: the AOT artifacts (jax/pallas -> HLO text)
+//! executed from rust must reproduce the native engine's numerics and
+//! support the full cached fine-tuning loop.
+//!
+//! Skipped (with a message) when `artifacts/` hasn't been built — run
+//! `make artifacts` first.
+
+use std::path::PathBuf;
+
+use skip2lora::engine::pjrt::{one_hot, PjrtSkip2};
+use skip2lora::experiments::{accuracy, DatasetId, ExpConfig};
+use skip2lora::method::Method;
+use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::tensor::Mat;
+use skip2lora::train::FineTuner;
+use skip2lora::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn quick_cfg() -> ExpConfig {
+    ExpConfig { trials: 1, epoch_scale: 0.08, seed: 3, ..Default::default() }
+}
+
+#[test]
+fn pjrt_predict_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = quick_cfg();
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let mut backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let mut rng = Rng::new(1);
+    backbone.set_topology(&mut rng, AdapterTopology::Skip);
+    for ad in backbone.skip.iter_mut() {
+        for v in ad.wb.data.iter_mut() {
+            *v = 0.02 * rng.normal();
+        }
+    }
+    let mut native = FineTuner::new(backbone.clone(), Method::SkipLora, cfg.backend, 20);
+    let mut pjrt = PjrtSkip2::new(&dir, "fan", &backbone).expect("open pjrt");
+
+    let nfe = bench.test.n_features();
+    let xb = Mat::from_vec(20, nfe, bench.test.x.data[..20 * nfe].to_vec());
+    let want = native.predict_alloc(&xb);
+    let got = pjrt.predict_batch(&xb.data).expect("pjrt predict");
+    let max = want
+        .data
+        .iter()
+        .zip(&got)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 2e-3, "max |Δ| = {max}");
+}
+
+#[test]
+fn pjrt_finetune_loop_learns() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = quick_cfg();
+    let ds = DatasetId::Damage1;
+    let bench = ds.benchmark(cfg.seed);
+    let mut backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let mut rng = Rng::new(2);
+    backbone.set_topology(&mut rng, AdapterTopology::Skip);
+    let mut pjrt = PjrtSkip2::new(&dir, "fan", &backbone).expect("open pjrt");
+
+    let acc_before = pjrt.accuracy(&bench.test).expect("acc");
+    let (_loss, stats, _t) = pjrt.finetune(&bench.finetune, 8, 0.02, 5).expect("finetune");
+    let acc_after = pjrt.accuracy(&bench.test).expect("acc");
+    assert!(
+        acc_after > acc_before + 0.1,
+        "PJRT fine-tune must learn: {acc_before:.3} -> {acc_after:.3}"
+    );
+    assert!(stats.hits > 0, "cache unused");
+    assert!(stats.misses <= bench.finetune.len() as u64);
+}
+
+#[test]
+fn pjrt_step_matches_native_step() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = quick_cfg();
+    let t = skip2lora::experiments::pjrt_check::verify(&dir, &cfg).expect("verify");
+    let rendered = t.render();
+    println!("{rendered}");
+    assert!(!rendered.contains("FAIL"), "cross-check failures:\n{rendered}");
+}
+
+#[test]
+fn pjrt_har_artifacts_load_and_run() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = quick_cfg();
+    let ds = DatasetId::Har;
+    let bench = ds.benchmark(cfg.seed);
+    let mut backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let mut rng = Rng::new(3);
+    backbone.set_topology(&mut rng, AdapterTopology::Skip);
+    let mut pjrt = PjrtSkip2::new(&dir, "har", &backbone).expect("open har");
+    // one populate + one step, shape sanity
+    let b = pjrt.batch;
+    let x: Vec<f32> = bench.finetune.x.data[..b * 561].to_vec();
+    let (x2, x3, c3) = pjrt.cache_populate(&x).expect("populate");
+    assert_eq!(x2.len(), b * 96);
+    assert_eq!(x3.len(), b * 96);
+    assert_eq!(c3.len(), b * 6);
+    let y = one_hot(&bench.finetune.labels[..b], 6);
+    let loss = pjrt.step(&x, &x2, &x3, &c3, &y, 0.02).expect("step");
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn pjrt_rejects_wrong_model_dims() {
+    let Some(dir) = artifacts() else { return };
+    let mut rng = Rng::new(4);
+    let wrong = skip2lora::model::Mlp::new(
+        &mut rng,
+        skip2lora::model::MlpConfig { dims: vec![10, 8, 8, 3], rank: 4, batch_norm: true },
+        AdapterTopology::Skip,
+    );
+    assert!(PjrtSkip2::new(&dir, "fan", &wrong).is_err());
+}

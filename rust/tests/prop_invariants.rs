@@ -1,0 +1,257 @@
+//! Property-based invariant sweeps (mini-proptest; see testkit::prop):
+//! randomized shapes/inputs over the tensor kernels, cache semantics,
+//! batch sampler, compute-type routing, and the Skip-Cache exactness
+//! invariant at random model sizes.
+
+use skip2lora::cache::{BoundedSkipCache, CacheEntry, SkipCache};
+use skip2lora::data::sampler::{BatchSampler, SamplingMode};
+use skip2lora::data::Dataset;
+use skip2lora::method::Method;
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::tensor::{ops, ops::Backend, Mat};
+use skip2lora::testkit::prop::{check, gen, PropConfig};
+use skip2lora::train::FineTuner;
+use skip2lora::util::rng::Rng;
+use skip2lora::util::timer::PhaseTimer;
+
+fn close(a: &Mat, b: &Mat, tol: f32) -> Result<(), String> {
+    if a.shape() != b.shape() {
+        return Err(format!("shape {:?} vs {:?}", a.shape(), b.shape()));
+    }
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("elem {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_blocked_kernels_match_scalar() {
+    check("blocked==scalar", PropConfig { cases: 60, ..Default::default() }, |rng| {
+        let (r, k, c) = (
+            gen::usize_in(rng, 1, 33),
+            gen::usize_in(rng, 1, 300),
+            gen::usize_in(rng, 1, 120),
+        );
+        let a = gen::sparse_mat(rng, r, k, 0.3);
+        let b = gen::mat(rng, k, c);
+        let mut o1 = Mat::zeros(r, c);
+        let mut o2 = Mat::zeros(r, c);
+        ops::matmul_naive(&a, &b, &mut o1);
+        ops::matmul_blocked(&a, &b, &mut o2);
+        close(&o1, &o2, 1e-4)?;
+
+        // transposed variants on batch-shaped inputs
+        let x = gen::sparse_mat(rng, r, k, 0.5);
+        let gy = gen::mat(rng, r, c);
+        let mut g1 = Mat::zeros(k, c);
+        let mut g2 = Mat::zeros(k, c);
+        ops::matmul_at_b_naive(&x, &gy, &mut g1);
+        ops::matmul_at_b_blocked(&x, &gy, &mut g2);
+        close(&g1, &g2, 1e-4)?;
+
+        let w = gen::mat(rng, k, c);
+        let mut h1 = Mat::zeros(r, k);
+        let mut h2 = Mat::zeros(r, k);
+        ops::matmul_a_bt_naive(&gy, &w, &mut h1);
+        ops::matmul_a_bt_blocked(&gy, &w, &mut h2);
+        close(&h1, &h2, 1e-4)
+    });
+}
+
+#[test]
+fn prop_full_cache_is_exact_map() {
+    // the full store behaves as a partial map: insert-then-lookup returns
+    // exactly the inserted entry; never evicts; occupancy == distinct keys
+    check("full-cache map", PropConfig { cases: 40, ..Default::default() }, |rng| {
+        let n = gen::usize_in(rng, 1, 200);
+        let mut c = SkipCache::new(n);
+        let mut shadow: Vec<Option<f32>> = vec![None; n];
+        for _ in 0..500 {
+            let i = rng.below(n);
+            if rng.f32() < 0.5 {
+                let v = rng.normal();
+                c.insert(i, CacheEntry { xs: vec![vec![v; 3]], c_n: vec![v] });
+                shadow[i] = Some(v);
+            } else {
+                match (c.lookup(i), shadow[i]) {
+                    (Some(e), Some(v)) => {
+                        if e.c_n[0] != v {
+                            return Err(format!("stale value at {i}"));
+                        }
+                    }
+                    (None, None) => {}
+                    (a, b) => {
+                        return Err(format!(
+                            "presence mismatch at {i}: cache={} shadow={}",
+                            a.is_some(),
+                            b.is_some()
+                        ))
+                    }
+                }
+            }
+        }
+        let distinct = shadow.iter().filter(|s| s.is_some()).count();
+        if c.occupied() != distinct {
+            return Err(format!("occupancy {} != {}", c.occupied(), distinct));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bounded_cache_never_exceeds_capacity_and_serves_fresh() {
+    check("bounded-cache", PropConfig { cases: 40, ..Default::default() }, |rng| {
+        let cap = gen::usize_in(rng, 1, 50);
+        let universe = gen::usize_in(rng, 1, 200);
+        let mut c = BoundedSkipCache::new(cap);
+        let mut latest: Vec<Option<f32>> = vec![None; universe];
+        for _ in 0..400 {
+            let i = rng.below(universe);
+            if rng.f32() < 0.5 {
+                let v = rng.normal();
+                c.insert(i, CacheEntry { xs: vec![], c_n: vec![v] });
+                latest[i] = Some(v);
+            } else if let Some(e) = c.lookup(i) {
+                // a hit must serve the latest inserted value (never stale)
+                match latest[i] {
+                    Some(v) if e.c_n[0] == v => {}
+                    _ => return Err(format!("stale/unknown value for {i}")),
+                }
+            }
+            if c.len() > cap {
+                return Err(format!("len {} > cap {cap}", c.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_indices_in_range_and_deterministic() {
+    check("sampler", PropConfig { cases: 30, ..Default::default() }, |rng| {
+        let n = gen::usize_in(rng, 1, 500);
+        let b = gen::usize_in(rng, 1, n.min(64) + 1).min(n).max(1);
+        for mode in [SamplingMode::WithReplacement, SamplingMode::Shuffled] {
+            let seed = rng.next_u64();
+            let mut s1 = BatchSampler::new(n, b, mode);
+            let mut s2 = BatchSampler::new(n, b, mode);
+            let (mut r1, mut r2) = (Rng::new(seed), Rng::new(seed));
+            let (mut i1, mut i2) = (Vec::new(), Vec::new());
+            for _ in 0..5 {
+                s1.next_batch(&mut r1, &mut i1);
+                s2.next_batch(&mut r2, &mut i2);
+                if i1 != i2 {
+                    return Err("nondeterministic".into());
+                }
+                if i1.iter().any(|&i| i >= n) {
+                    return Err("index out of range".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_method_routing_consistency() {
+    // structural invariants of the Table 1 routing for any depth
+    check("method routing", PropConfig { cases: 30, ..Default::default() }, |rng| {
+        let n = gen::usize_in(rng, 1, 8);
+        for m in Method::ALL {
+            let fc = m.fc_types(n);
+            let lo = m.lora_types(n);
+            if fc.len() != n || lo.len() != n {
+                return Err(format!("{m}: wrong arity at n={n}"));
+            }
+            // cache-compatible methods must freeze every non-last FC layer
+            if m.cache_compatible() {
+                for (k, t) in fc.iter().enumerate().take(n - 1) {
+                    if t.is_trained() || t.computes_gx() {
+                        return Err(format!("{m}: layer {k} not frozen ({t:?})"));
+                    }
+                }
+            }
+            // the first layer never computes gx (nothing consumes it)
+            if fc[0].computes_gx() {
+                return Err(format!("{m}: first layer computes gx"));
+            }
+            if lo[0].computes_gx() {
+                return Err(format!("{m}: first adapter computes gx"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_skip2_cache_exactness_random_models() {
+    // For random widths/batch sizes, the cached path must reproduce the
+    // uncached Skip-LoRA trajectory (losses within float tolerance).
+    check("skip2 exactness", PropConfig { cases: 8, ..Default::default() }, |rng| {
+        let d_in = gen::usize_in(rng, 4, 40);
+        let hidden = gen::usize_in(rng, 4, 32);
+        let classes = gen::usize_in(rng, 2, 6);
+        let batch = gen::usize_in(rng, 2, 12);
+        let n_samples = gen::usize_in(rng, batch, 60).max(batch);
+
+        let cfg = MlpConfig {
+            dims: vec![d_in, hidden, hidden, classes],
+            rank: 2,
+            batch_norm: true,
+        };
+        let mut mrng = Rng::new(rng.next_u64());
+        let model = Mlp::new(&mut mrng, cfg, Method::SkipLora.topology());
+        let data = Dataset {
+            x: gen::mat(rng, n_samples, d_in),
+            labels: gen::labels(rng, n_samples, classes),
+            n_classes: classes,
+        };
+
+        let mut a = FineTuner::new(model.clone(), Method::SkipLora, Backend::Blocked, batch);
+        let mut b = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, batch);
+        let mut cache = SkipCache::new(n_samples);
+        let mut timer = PhaseTimer::new();
+        let seed = rng.next_u64();
+        let (mut ra, mut rb) = (Rng::new(seed), Rng::new(seed));
+        for step in 0..15 {
+            let ia = ra.sample_with_replacement(n_samples, batch);
+            let ib = rb.sample_with_replacement(n_samples, batch);
+            a.load_batch(&data, &ia);
+            a.forward(&mut timer);
+            let la = a.backward(&mut timer);
+            a.update(0.05, &mut timer);
+            b.forward_cached(&data, &ib, &mut cache, &mut timer);
+            let lb = b.backward(&mut timer);
+            b.update(0.05, &mut timer);
+            if (la - lb).abs() > 1e-4 * (1.0 + la.abs()) {
+                return Err(format!("step {step}: loss {la} vs {lb}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_softmax_ce_bounds() {
+    check("ce bounds", PropConfig { cases: 50, ..Default::default() }, |rng| {
+        let b = gen::usize_in(rng, 1, 16);
+        let m = gen::usize_in(rng, 2, 10);
+        let logits = gen::mat(rng, b, m);
+        let labels = gen::labels(rng, b, m);
+        let mut g = Mat::zeros(b, m);
+        let loss = skip2lora::nn::loss::softmax_ce(&logits, &labels, &mut g);
+        if !loss.is_finite() || loss < 0.0 {
+            return Err(format!("bad loss {loss}"));
+        }
+        // gradient rows sum to ~0
+        for i in 0..b {
+            let s: f32 = g.row(i).iter().sum();
+            if s.abs() > 1e-5 {
+                return Err(format!("row {i} grad sum {s}"));
+            }
+        }
+        Ok(())
+    });
+}
