@@ -1,0 +1,157 @@
+//! Microbenchmark: cross-tenant micro-batching vs independent per-tenant
+//! forwards.
+//!
+//! The acceptance claim: serving B requests from B distinct tenants costs
+//! ONE shared frozen-backbone forward + B rank-r adapter heads, and beats
+//! B independent `DeviceAgent`-style forwards (each a full backbone
+//! forward) once B is large enough to amortize the fan-out (B >= 8 on the
+//! fan-sized model). Also measured: registry snapshot/publish costs — the
+//! hot-swap path must stay nanosecond-scale so fine-tune jobs never stall
+//! the serving loop.
+//!
+//! Run: `cargo bench --bench serve_micro`
+
+use std::sync::Arc;
+
+use skip2lora::bench::Bencher;
+use skip2lora::method::Method;
+use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::tensor::ops::Backend;
+use skip2lora::train::FineTuner;
+use skip2lora::util::rng::Rng;
+
+fn fan_cfg() -> MlpConfig {
+    MlpConfig::fan() // 256-96-96-3, rank 4 — the paper's model
+}
+
+fn make_adapters(rng: &mut Rng, cfg: &MlpConfig) -> Vec<LoraAdapter> {
+    let n = cfg.n_layers();
+    (0..n)
+        .map(|k| {
+            let mut ad = LoraAdapter::new(rng, cfg.dims[k], cfg.rank, cfg.n_out());
+            for v in ad.wb.data.iter_mut() {
+                *v = 0.05 * rng.normal();
+            }
+            ad
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let cfg = fan_cfg();
+    let mut rng = Rng::new(42);
+    let backbone = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::None);
+
+    let n_tenants = 512usize;
+    let registry = Arc::new(AdapterRegistry::new());
+    for t in 0..n_tenants as u64 {
+        registry.publish(t, make_adapters(&mut rng, &cfg));
+    }
+    println!(
+        "fleet: {} tenants, {:.1} KiB total adapter weights ({} bytes/tenant)",
+        registry.tenant_count(),
+        registry.total_adapter_bytes() as f64 / 1024.0,
+        registry.total_adapter_bytes() / n_tenants,
+    );
+
+    // request pool
+    let requests: Vec<Vec<f32>> = (0..n_tenants)
+        .map(|_| (0..cfg.n_in()).map(|_| rng.normal()).collect())
+        .collect();
+
+    b.header("registry ops (512 tenants)");
+    {
+        let mut t = 0u64;
+        b.bench("snapshot (read path)", || {
+            t = (t + 7) % n_tenants as u64;
+            std::hint::black_box(registry.snapshot(t).is_some());
+        });
+        let ads = make_adapters(&mut rng, &cfg);
+        let mut t2 = 0u64;
+        b.bench("publish (hot swap)", || {
+            t2 = (t2 + 13) % n_tenants as u64;
+            registry.publish(t2, ads.clone());
+        });
+    }
+
+    b.header("B requests, B distinct tenants: batched vs independent");
+    let batch_sizes = [1usize, 4, 8, 16, 32];
+    let mut batched_ns = Vec::new();
+    let mut indep_ns = Vec::new();
+    for &bs in &batch_sizes {
+        // batched: one shared frozen forward + bs adapter heads
+        let frozen = FrozenBackbone::new(backbone.clone(), Backend::Blocked, bs);
+        let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+        let mut out = Vec::with_capacity(bs);
+        let mut round = 0usize;
+        let r = b.bench(&format!("batched      (B={bs:>2})"), || {
+            out.clear();
+            for i in 0..bs {
+                let t = ((round + i * 17) % n_tenants) as u64;
+                batcher.submit(BatchRequest {
+                    tenant: t,
+                    id: i as u64,
+                    x: requests[(round + i) % n_tenants].clone(),
+                    label: None,
+                });
+            }
+            round = (round + bs) % n_tenants;
+            batcher.flush(&mut out);
+            std::hint::black_box(out.len());
+        });
+        batched_ns.push(r.mean_ns);
+
+        // independent: bs full per-tenant forwards (the DeviceAgent path:
+        // each tenant owns a FineTuner over backbone + its adapters)
+        let mut tuners: Vec<FineTuner> = (0..bs)
+            .map(|t| {
+                let mut m = backbone.clone();
+                m.topology = AdapterTopology::Skip;
+                m.skip = registry.snapshot(t as u64).unwrap().adapters.clone();
+                FineTuner::new(m, Method::SkipLora, Backend::Blocked, 1)
+            })
+            .collect();
+        let mut round2 = 0usize;
+        let r = b.bench(&format!("independent  (B={bs:>2})"), || {
+            let mut acc = 0usize;
+            for (i, tuner) in tuners.iter_mut().enumerate() {
+                let x = skip2lora::tensor::Mat::from_vec(
+                    1,
+                    cfg.n_in(),
+                    requests[(round2 + i) % n_tenants].clone(),
+                );
+                let logits = tuner.predict_alloc(&x);
+                acc += (logits.row(0)[0] > 0.0) as usize;
+            }
+            round2 = (round2 + bs) % n_tenants;
+            std::hint::black_box(acc);
+        });
+        indep_ns.push(r.mean_ns);
+    }
+
+    println!("\nper-request cost and speedup (shared forward amortization):");
+    println!(
+        "{:>4} {:>16} {:>16} {:>9}",
+        "B", "batched ns/req", "indep ns/req", "speedup"
+    );
+    let mut wins_at_8 = false;
+    for (i, &bs) in batch_sizes.iter().enumerate() {
+        let per_b = batched_ns[i] / bs as f64;
+        let per_i = indep_ns[i] / bs as f64;
+        let speedup = per_i / per_b;
+        println!("{bs:>4} {per_b:>16.0} {per_i:>16.0} {speedup:>8.2}x");
+        if bs >= 8 && speedup > 1.0 {
+            wins_at_8 = true;
+        }
+    }
+    assert!(
+        wins_at_8,
+        "cross-tenant batching must beat independent forwards at B >= 8"
+    );
+    println!("\nOK: one shared backbone forward + B adapter heads beats B full forwards at B >= 8.");
+}

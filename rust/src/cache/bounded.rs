@@ -153,6 +153,49 @@ mod tests {
     }
 
     #[test]
+    fn eviction_order_follows_recency_exactly() {
+        // interleave inserts and lookups, then shrink the live set one
+        // eviction at a time and check victims leave in LRU order
+        let mut c = BoundedSkipCache::new(4);
+        for i in 0..4 {
+            c.insert(i, entry(i as f32));
+        }
+        // recency (old -> new) after these touches: 2, 0, 3, 1
+        let _ = c.lookup(0);
+        let _ = c.lookup(3);
+        let _ = c.lookup(1);
+        for (step, expect_gone) in [2usize, 0, 3].into_iter().enumerate() {
+            c.insert(step + 10, entry(0.0));
+            assert!(
+                !c.contains(expect_gone),
+                "step {step}: expected {expect_gone} evicted"
+            );
+            // everything else from the original recency list survives
+            for &k in &[0usize, 3, 1][step + 1..] {
+                assert!(c.contains(k), "step {step}: {k} should survive");
+            }
+        }
+        assert_eq!(c.evictions(), 3);
+        assert!(c.contains(1), "most recent original key survives to the end");
+    }
+
+    #[test]
+    fn lookup_refreshes_recency_even_under_stale_heap_records() {
+        // repeated lookups pile stale (tick, key) records into the heap;
+        // eviction must still pick the true LRU victim
+        let mut c = BoundedSkipCache::new(2);
+        c.insert(1, entry(1.0));
+        c.insert(2, entry(2.0));
+        for _ in 0..10 {
+            let _ = c.lookup(1);
+        }
+        c.insert(3, entry(3.0)); // 2 is LRU despite 1's many heap records
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+        assert!(c.contains(3));
+    }
+
+    #[test]
     fn hit_rate_with_working_set_larger_than_capacity() {
         // cyclic scan over 0..20 with capacity 10 => LRU thrashes: all misses
         let mut c = BoundedSkipCache::new(10);

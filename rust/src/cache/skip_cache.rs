@@ -108,6 +108,16 @@ impl SkipCache {
         }
     }
 
+    /// Invalidate a single slot. A cache entry is valid per
+    /// (sample, frozen backbone) pair (§4.2), so an online fine-tune
+    /// buffer that overwrites slot i with a NEW sample must drop
+    /// `C_skip[i]` while every other entry stays live — this is what lets
+    /// `serve`'s per-tenant caches persist across adaptation rounds.
+    /// Returns whether the slot held an entry.
+    pub fn invalidate(&mut self, i: usize) -> bool {
+        self.slots[i].take().is_some()
+    }
+
     /// Invalidate everything (Algorithm 1 line 2 — also what a frozen-
     /// parameter change would require; exposed for the ablation bench).
     pub fn clear(&mut self) {
@@ -203,6 +213,22 @@ mod tests {
         let e = SkipCache::entry_from_batch(&[&x2], &c3, 2);
         assert_eq!(e.xs, vec![vec![20.0, 21.0, 22.0]]);
         assert_eq!(e.c_n, vec![200.0, 201.0]);
+    }
+
+    #[test]
+    fn invalidate_drops_one_slot_only() {
+        let mut c = SkipCache::new(4);
+        c.insert(1, entry(1.0));
+        c.insert(2, entry(2.0));
+        assert!(c.invalidate(1));
+        assert!(!c.invalidate(1), "already empty");
+        assert!(!c.contains(1));
+        assert!(c.contains(2), "other slots untouched");
+        assert_eq!(c.occupied(), 1);
+        // a fresh sample in the slot re-populates on the miss path
+        assert!(c.lookup(1).is_none());
+        c.insert(1, entry(9.0));
+        assert_eq!(c.lookup(1).unwrap().c_n[0], 9.0);
     }
 
     #[test]

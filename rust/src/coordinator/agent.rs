@@ -1,8 +1,8 @@
 //! The device agent event loop.
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::coordinator::core::{DriftDetector, FeedbackBuffer};
 use crate::data::Dataset;
 use crate::device::power::ActivityLog;
 use crate::method::Method;
@@ -69,9 +69,8 @@ pub struct AgentReport {
 pub struct DeviceAgent {
     pub config: AgentConfig,
     tuner: FineTuner,
-    window: VecDeque<bool>,
-    buffer_x: Vec<Vec<f32>>,
-    buffer_y: Vec<usize>,
+    detector: DriftDetector,
+    buffer: FeedbackBuffer,
     pub report: AgentReport,
     pub activity: ActivityLog,
     started: Instant,
@@ -92,12 +91,13 @@ impl DeviceAgent {
             Backend::Blocked,
             config.batch_size,
         );
+        let detector = DriftDetector::new(config.window, config.accuracy_threshold);
+        let buffer = FeedbackBuffer::new(config.buffer_target);
         Self {
             config,
             tuner,
-            window: VecDeque::new(),
-            buffer_x: Vec::new(),
-            buffer_y: Vec::new(),
+            detector,
+            buffer,
             report: AgentReport::default(),
             activity: ActivityLog::default(),
             started: Instant::now(),
@@ -123,13 +123,6 @@ impl DeviceAgent {
         best
     }
 
-    fn window_accuracy(&self) -> f64 {
-        if self.window.is_empty() {
-            return 1.0;
-        }
-        self.window.iter().filter(|&&b| b).count() as f64 / self.window.len() as f64
-    }
-
     /// Process one event; returns the prediction when applicable.
     pub fn handle(&mut self, ev: Event) -> Option<usize> {
         self.events_seen += 1;
@@ -143,20 +136,10 @@ impl DeviceAgent {
                 let pred = self.predict_label(&x);
                 self.report.predictions += 1;
                 self.report.feedback_samples += 1;
-                self.window.push_back(pred == label);
-                if self.window.len() > self.config.window {
-                    self.window.pop_front();
-                }
-                self.buffer_x.push(x);
-                self.buffer_y.push(label);
-                if self.buffer_x.len() > self.config.buffer_target {
-                    self.buffer_x.remove(0);
-                    self.buffer_y.remove(0);
-                }
-                self.report.window_accuracy = self.window_accuracy();
-                let drifted = self.window.len() >= self.config.window
-                    && self.report.window_accuracy < self.config.accuracy_threshold;
-                if drifted && self.buffer_x.len() >= self.config.buffer_target {
+                self.detector.push(pred == label);
+                self.buffer.push(x, label);
+                self.report.window_accuracy = self.detector.accuracy();
+                if self.detector.drifted() && self.buffer.is_full() {
                     self.adapt();
                 }
                 Some(pred)
@@ -167,18 +150,9 @@ impl DeviceAgent {
     /// Run the quick Skip2-LoRA fine-tune on the buffered samples and
     /// hot-swap adapters.
     fn adapt(&mut self) {
-        let n = self.buffer_x.len();
-        let d = self.buffer_x[0].len();
-        let mut x = Mat::zeros(n, d);
-        for (i, row) in self.buffer_x.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(row);
-        }
-        let data = Dataset {
-            x,
-            labels: self.buffer_y.clone(),
-            n_classes: self.n_classes,
-        };
-        let acc_before = self.window_accuracy();
+        let n = self.buffer.len();
+        let data = self.buffer.to_dataset(self.n_classes);
+        let acc_before = self.detector.accuracy();
 
         // fresh adapters per adaptation round: LoRA portability means we
         // can discard stale adapters without touching the backbone
@@ -204,7 +178,7 @@ impl DeviceAgent {
             .push((self.events_seen, acc_before, acc_after));
         self.report.finetune_secs.push(t1 - t0);
         // reset the drift window: post-adaptation accuracy is measured fresh
-        self.window.clear();
+        self.detector.reset();
     }
 
     pub fn accuracy_on(&mut self, data: &Dataset) -> f64 {

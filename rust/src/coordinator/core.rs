@@ -1,0 +1,230 @@
+//! Reusable predict/feedback/adapt building blocks.
+//!
+//! `DeviceAgent` (one model, one stream) and `serve::FleetServer`
+//! (thousands of tenants over one shared frozen backbone) run the same
+//! per-stream control loop: score each labelled sample against a sliding
+//! window, buffer recent feedback, and trigger a Skip2-LoRA fine-tune when
+//! the window accuracy craters. This module holds that loop's state
+//! machines so both deployments share one implementation (DESIGN.md §8).
+
+use std::collections::VecDeque;
+
+use crate::data::Dataset;
+use crate::tensor::Mat;
+
+/// Sliding-window drift detector over per-sample correctness bits.
+///
+/// Drift is declared when the window is full AND its accuracy falls below
+/// the configured threshold — the trigger condition of the deployment
+/// story in the paper's introduction.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    window: VecDeque<bool>,
+    capacity: usize,
+    threshold: f64,
+}
+
+impl DriftDetector {
+    pub fn new(capacity: usize, threshold: f64) -> Self {
+        assert!(capacity > 0, "window capacity must be positive");
+        Self {
+            window: VecDeque::with_capacity(capacity + 1),
+            capacity,
+            threshold,
+        }
+    }
+
+    /// Record one prediction outcome.
+    pub fn push(&mut self, correct: bool) {
+        self.window.push_back(correct);
+        if self.window.len() > self.capacity {
+            self.window.pop_front();
+        }
+    }
+
+    /// Window accuracy; 1.0 on an empty window (nothing observed, nothing
+    /// wrong — matches the original agent semantics).
+    pub fn accuracy(&self) -> f64 {
+        if self.window.is_empty() {
+            return 1.0;
+        }
+        self.window.iter().filter(|&&b| b).count() as f64 / self.window.len() as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.window.len() >= self.capacity
+    }
+
+    /// Has accuracy dropped below the threshold over a full window?
+    pub fn drifted(&self) -> bool {
+        self.is_full() && self.accuracy() < self.threshold
+    }
+
+    /// Clear the window (post-adaptation: accuracy is measured fresh).
+    pub fn reset(&mut self) {
+        self.window.clear();
+    }
+}
+
+/// Fixed-capacity ring buffer of labelled feedback samples — the
+/// fine-tuning set T of Algorithm 1, maintained online.
+///
+/// `push` returns the slot index it wrote. Slots double as Skip-Cache
+/// keys: a cache entry is valid per (sample, frozen backbone) pair
+/// (paper §4.2), so overwriting slot i must invalidate `C_skip[i]` —
+/// see `SkipCache::invalidate` and `serve::server`.
+#[derive(Clone, Debug)]
+pub struct FeedbackBuffer {
+    x: Vec<Vec<f32>>,
+    y: Vec<usize>,
+    capacity: usize,
+    /// next slot to overwrite once full (oldest sample)
+    cursor: usize,
+}
+
+impl FeedbackBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "buffer capacity must be positive");
+        Self {
+            x: Vec::with_capacity(capacity),
+            y: Vec::with_capacity(capacity),
+            capacity,
+            cursor: 0,
+        }
+    }
+
+    /// Insert a sample, overwriting the oldest once full. Returns the slot
+    /// index written.
+    pub fn push(&mut self, x: Vec<f32>, y: usize) -> usize {
+        if self.x.len() < self.capacity {
+            self.x.push(x);
+            self.y.push(y);
+            self.x.len() - 1
+        } else {
+            let slot = self.cursor;
+            self.x[slot] = x;
+            self.y[slot] = y;
+            self.cursor = (slot + 1) % self.capacity;
+            slot
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.x.len() == self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn label(&self, slot: usize) -> usize {
+        self.y[slot]
+    }
+
+    pub fn sample(&self, slot: usize) -> &[f32] {
+        &self.x[slot]
+    }
+
+    /// Materialize the buffer as a `Dataset` (row i = slot i, so dataset
+    /// row indices line up with Skip-Cache keys).
+    pub fn to_dataset(&self, n_classes: usize) -> Dataset {
+        assert!(!self.is_empty(), "cannot build a dataset from an empty buffer");
+        let n = self.x.len();
+        let d = self.x[0].len();
+        let mut x = Mat::zeros(n, d);
+        for (i, row) in self.x.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(row);
+        }
+        Dataset {
+            x,
+            labels: self.y.clone(),
+            n_classes,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.x.clear();
+        self.y.clear();
+        self.cursor = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detector_triggers_only_on_full_window() {
+        let mut d = DriftDetector::new(4, 0.75);
+        d.push(false);
+        d.push(false);
+        d.push(false);
+        assert!(!d.drifted(), "window not yet full");
+        assert!((d.accuracy() - 0.0).abs() < 1e-12);
+        d.push(true);
+        assert!(d.is_full());
+        assert!(d.drifted(), "1/4 < 0.75");
+        d.reset();
+        assert!(d.is_empty());
+        assert_eq!(d.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn detector_window_slides() {
+        let mut d = DriftDetector::new(3, 0.5);
+        for _ in 0..3 {
+            d.push(false);
+        }
+        assert!(d.drifted());
+        for _ in 0..3 {
+            d.push(true);
+        }
+        assert_eq!(d.len(), 3);
+        assert!(!d.drifted(), "old failures slid out");
+    }
+
+    #[test]
+    fn buffer_wraps_and_reports_slots() {
+        let mut b = FeedbackBuffer::new(3);
+        assert_eq!(b.push(vec![0.0], 0), 0);
+        assert_eq!(b.push(vec![1.0], 1), 1);
+        assert!(!b.is_full());
+        assert_eq!(b.push(vec![2.0], 2), 2);
+        assert!(b.is_full());
+        // wrap: oldest slot (0) is overwritten first
+        assert_eq!(b.push(vec![3.0], 0), 0);
+        assert_eq!(b.push(vec![4.0], 1), 1);
+        assert_eq!(b.sample(0), &[3.0]);
+        assert_eq!(b.label(2), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn dataset_rows_align_with_slots() {
+        let mut b = FeedbackBuffer::new(2);
+        b.push(vec![1.0, 2.0], 1);
+        b.push(vec![3.0, 4.0], 0);
+        b.push(vec![5.0, 6.0], 1); // overwrites slot 0
+        let d = b.to_dataset(2);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.x.row(0), &[5.0, 6.0]);
+        assert_eq!(d.labels, vec![1, 0]);
+        assert_eq!(d.n_classes, 2);
+    }
+}

@@ -15,7 +15,13 @@
 //!
 //! The event loop runs on std threads + mpsc channels (tokio is not
 //! available offline — DESIGN.md §3).
+//!
+//! The predict/feedback/adapt core (`core::DriftDetector`,
+//! `core::FeedbackBuffer`) is shared with the fleet-scale
+//! `crate::serve::FleetServer` — one control loop, two deployment shapes.
 
 pub mod agent;
+pub mod core;
 
 pub use agent::{AgentConfig, AgentReport, DeviceAgent, Event};
+pub use core::{DriftDetector, FeedbackBuffer};

@@ -7,7 +7,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use super::Dataset;
 use crate::tensor::Mat;

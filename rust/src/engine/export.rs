@@ -1,0 +1,73 @@
+//! Weight-flattening helpers shared by the PJRT engine and the CLI
+//! `pretrain` subcommand: rust model state → flat f32 buffers in the AOT
+//! artifacts' positional parameter order (model.FROZEN_NAMES / LORA_NAMES
+//! on the python side). Pure data movement — no XLA dependency, so this
+//! module is available with or without the `pjrt` feature.
+
+use crate::model::Mlp;
+
+/// Flatten a backbone's frozen parameters into the AOT order.
+pub fn export_frozen(m: &Mlp) -> Vec<Vec<f32>> {
+    assert_eq!(m.n_layers(), 3, "AOT artifacts are lowered for 3 layers");
+    let mut out = Vec::with_capacity(14);
+    for k in 0..3 {
+        out.push(m.fcs[k].w.data.clone());
+        out.push(m.fcs[k].b.clone());
+        if k < 2 {
+            out.push(m.bns[k].gamma.clone());
+            out.push(m.bns[k].beta.clone());
+            out.push(m.bns[k].running_mean.clone());
+            out.push(m.bns[k].running_var.clone());
+        }
+    }
+    out
+}
+
+/// Flatten the skip adapters into the AOT order.
+pub fn export_lora(m: &Mlp) -> Vec<Vec<f32>> {
+    assert_eq!(m.skip.len(), 3, "skip topology required");
+    let mut out = Vec::with_capacity(6);
+    for ad in &m.skip {
+        out.push(ad.wa.data.clone());
+        out.push(ad.wb.data.clone());
+    }
+    out
+}
+
+/// One-hot encode labels.
+pub fn one_hot(labels: &[usize], n_classes: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; labels.len() * n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        v[i * n_classes + l] = 1.0;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::mlp::AdapterTopology;
+    use crate::model::MlpConfig;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frozen_export_order_and_sizes() {
+        let mut rng = Rng::new(0);
+        let m = Mlp::new(&mut rng, MlpConfig::fan(), AdapterTopology::Skip);
+        let frozen = export_frozen(&m);
+        assert_eq!(frozen.len(), 14);
+        assert_eq!(frozen[0].len(), 256 * 96); // w1
+        assert_eq!(frozen[1].len(), 96); // b1
+        assert_eq!(frozen[12].len(), 96 * 3); // w3
+        let lora = export_lora(&m);
+        assert_eq!(lora.len(), 6);
+        assert_eq!(lora[0].len(), 256 * 4); // wa1
+        assert_eq!(lora[1].len(), 4 * 3); // wb1
+    }
+
+    #[test]
+    fn one_hot_rows() {
+        let v = one_hot(&[2, 0], 3);
+        assert_eq!(v, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+}

@@ -3,9 +3,14 @@
 //! * **native** — the paper-faithful edge substrate: `crate::train`
 //!   running the hand-written rust kernels with per-layer timers. All
 //!   tables/figures are regenerated on it (DESIGN.md §2).
-//! * **pjrt** (this module's `pjrt`) — the three-layer AOT path: the same
-//!   Skip2-LoRA computation compiled from jax/pallas, loaded as HLO text
-//!   and executed via the PJRT C API. Cross-checked against native by
-//!   integration tests and `skip2lora pjrt-verify`.
+//! * **pjrt** (this module's `pjrt`, behind the `pjrt` cargo feature) —
+//!   the three-layer AOT path: the same Skip2-LoRA computation compiled
+//!   from jax/pallas, loaded as HLO text and executed via the PJRT C API.
+//!   Cross-checked against native by integration tests and
+//!   `skip2lora pjrt-verify`. Disabled by default because the offline
+//!   image has no XLA toolchain (DESIGN.md §2); the weight-flattening
+//!   helpers in [`export`] stay available either way.
 
+pub mod export;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;

@@ -10,51 +10,16 @@
 //! Weights flow rust → PJRT as flat f32 buffers in the manifest's
 //! positional order (model.FROZEN_NAMES / LORA_NAMES on the python side).
 
-use anyhow::{anyhow, Result};
-
 use crate::cache::{CacheEntry, SkipCache};
 use crate::data::Dataset;
 use crate::model::Mlp;
 use crate::runtime::Runtime;
 use crate::tensor::Mat;
+use crate::util::error::{anyhow, Result};
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 
-/// Flatten a backbone + skip adapters into the AOT parameter orders.
-pub fn export_frozen(m: &Mlp) -> Vec<Vec<f32>> {
-    assert_eq!(m.n_layers(), 3, "AOT artifacts are lowered for 3 layers");
-    let mut out = Vec::with_capacity(14);
-    for k in 0..3 {
-        out.push(m.fcs[k].w.data.clone());
-        out.push(m.fcs[k].b.clone());
-        if k < 2 {
-            out.push(m.bns[k].gamma.clone());
-            out.push(m.bns[k].beta.clone());
-            out.push(m.bns[k].running_mean.clone());
-            out.push(m.bns[k].running_var.clone());
-        }
-    }
-    out
-}
-
-pub fn export_lora(m: &Mlp) -> Vec<Vec<f32>> {
-    assert_eq!(m.skip.len(), 3, "skip topology required");
-    let mut out = Vec::with_capacity(6);
-    for ad in &m.skip {
-        out.push(ad.wa.data.clone());
-        out.push(ad.wb.data.clone());
-    }
-    out
-}
-
-/// One-hot encode labels.
-pub fn one_hot(labels: &[usize], n_classes: usize) -> Vec<f32> {
-    let mut v = vec![0.0f32; labels.len() * n_classes];
-    for (i, &l) in labels.iter().enumerate() {
-        v[i * n_classes + l] = 1.0;
-    }
-    v
-}
+pub use super::export::{export_frozen, export_lora, one_hot};
 
 pub struct PjrtSkip2 {
     rt: Runtime,

@@ -5,6 +5,7 @@
 pub mod ablation;
 pub mod accuracy;
 pub mod figures;
+#[cfg(feature = "pjrt")]
 pub mod pjrt_check;
 pub mod timing;
 

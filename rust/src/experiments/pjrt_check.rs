@@ -4,7 +4,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::engine::pjrt::{one_hot, PjrtSkip2};
 use crate::method::Method;

@@ -16,7 +16,9 @@ pub mod method;
 pub mod model;
 pub mod nn;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod testkit;

@@ -56,6 +56,26 @@ impl LoraAdapter {
         }
     }
 
+    fn ensure_grads(&mut self) {
+        if self.gwa.rows != self.n_in() {
+            self.gwa = Mat::zeros(self.n_in(), self.rank());
+        }
+        if self.gwb.rows != self.rank() {
+            self.gwb = Mat::zeros(self.rank(), self.n_out());
+        }
+    }
+
+    /// Drop gradient and forward workspaces, keeping only the inference
+    /// weights (W_A, W_B). Used before publishing to a serving registry so
+    /// a snapshot's heap footprint is exactly `param_count()` floats;
+    /// training on a compacted adapter re-grows the buffers lazily.
+    pub fn compact(&mut self) {
+        self.gwa = Mat::zeros(0, 0);
+        self.gwb = Mat::zeros(0, 0);
+        self.ya = Mat::zeros(0, 0);
+        self.gxb = Mat::zeros(0, 0);
+    }
+
     /// Eq. 7-9: y += (x·W_A)·W_B, saving y_A for the backward pass.
     pub fn forward_accumulate(&mut self, backend: Backend, x: &Mat, y: &mut Mat) {
         assert_eq!(x.cols, self.n_in());
@@ -96,6 +116,7 @@ impl LoraAdapter {
             return;
         }
         self.ensure_ws(x.rows);
+        self.ensure_grads();
         ops::matmul_at_b(backend, &self.ya, gy, &mut self.gwb); // Eq. 10
         ops::matmul_a_bt(backend, gy, &self.wb, &mut self.gxb); // Eq. 11
         ops::matmul_at_b(backend, x, &self.gxb, &mut self.gwa); // Eq. 12
@@ -220,6 +241,30 @@ mod tests {
 
         ad.backward(Backend::Scalar, LoraComputeType::Ywx, &x, &gy, Some(&mut gx));
         assert_ne!(gx, gx0, "Ywx must accumulate into gx");
+    }
+
+    #[test]
+    fn compact_preserves_inference_and_regrows_for_training() {
+        let mut rng = Rng::new(5);
+        let mut ad = LoraAdapter::new(&mut rng, 6, 2, 4);
+        ad.wb = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let x = Mat::from_fn(3, 6, |_, _| rng.normal());
+        let gy = Mat::from_fn(3, 4, |_, _| rng.normal());
+
+        let mut reference = ad.clone();
+        let mut y_ref = Mat::zeros(3, 4);
+        reference.forward_accumulate(Backend::Scalar, &x, &mut y_ref);
+        reference.backward(Backend::Scalar, LoraComputeType::Yw, &x, &gy, None);
+
+        ad.compact();
+        assert_eq!(ad.gwa.data.len(), 0);
+        let mut y = Mat::zeros(3, 4);
+        ad.forward_accumulate(Backend::Scalar, &x, &mut y);
+        assert_eq!(y, y_ref, "compacted adapter serves identically");
+        // training re-grows the gradient buffers and matches
+        ad.backward(Backend::Scalar, LoraComputeType::Yw, &x, &gy, None);
+        assert_eq!(ad.gwa, reference.gwa);
+        assert_eq!(ad.gwb, reference.gwb);
     }
 
     #[test]

@@ -1,0 +1,476 @@
+//! Cross-tenant micro-batching.
+//!
+//! The Skip-LoRA serving identity (Eq. 17): for every tenant t,
+//!
+//! ```text
+//! logits_t(x) = c^n(x) + Σ_k adapter_{t,k}(x^k)
+//! ```
+//!
+//! where `c^n` and the activations `x^k` depend ONLY on the shared frozen
+//! backbone — not on the tenant. So B requests from B different tenants
+//! cost ONE backbone forward (the expensive dense part, computed batched)
+//! plus B rank-r adapter heads (a few hundred MACs each). This is the
+//! serving-side mirror of the paper's training-side cache argument: the
+//! frozen computation is shared, only the tiny personalized part fans out.
+//!
+//! `FrozenBackbone` keeps the preallocated-workspace discipline of
+//! `train::FineTuner`: all activations live in matrices sized for the
+//! batch capacity, and a partial flush zero-pads the tail rows instead of
+//! reallocating (FC/BN-eval/ReLU are row-independent, so padded rows are
+//! simply ignored).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::model::Mlp;
+use crate::nn::activation;
+use crate::nn::lora::LoraAdapter;
+use crate::serve::registry::{AdapterRegistry, TenantId};
+use crate::tensor::{ops::Backend, Mat};
+
+/// Largest supported adapter rank for the stack-allocated head buffer.
+/// `FleetServer::validate_adapters` rejects `SwapAdapters` requests above
+/// this, so an oversized set can never reach the serving loop's assert.
+pub const MAX_RANK: usize = 32;
+
+/// Apply a tenant's skip-adapter set to one request row:
+/// `y += Σ_k (x^k · W_A_k) · W_B_k`. Read-only on the adapters (unlike
+/// `LoraAdapter::forward_accumulate`, which saves training workspaces), so
+/// any number of rows can fan out from one immutable registry snapshot.
+pub fn apply_skip_adapters_row(adapters: &[LoraAdapter], xs: &[&[f32]], y: &mut [f32]) {
+    assert_eq!(adapters.len(), xs.len(), "one adapter per backbone layer");
+    let mut ya = [0.0f32; MAX_RANK];
+    for (ad, x) in adapters.iter().zip(xs) {
+        let r = ad.rank();
+        assert!(r <= MAX_RANK, "adapter rank {r} exceeds MAX_RANK");
+        assert_eq!(x.len(), ad.n_in(), "adapter input width mismatch");
+        assert_eq!(y.len(), ad.n_out(), "adapter output width mismatch");
+        ya[..r].fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue; // ReLU outputs are ~50% zeros
+            }
+            let warow = &ad.wa.data[i * r..(i + 1) * r];
+            for (acc, &w) in ya[..r].iter_mut().zip(warow) {
+                *acc += xi * w;
+            }
+        }
+        let m = ad.n_out();
+        for (rr, &a) in ya[..r].iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let wbrow = &ad.wb.data[rr * m..(rr + 1) * m];
+            for (out, &w) in y.iter_mut().zip(wbrow) {
+                *out += a * w;
+            }
+        }
+    }
+}
+
+/// Index of the max logit.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for j in 1..xs.len() {
+        if xs[j] > xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// The shared frozen backbone with preallocated batch workspaces.
+pub struct FrozenBackbone {
+    model: Mlp,
+    backend: Backend,
+    capacity: usize,
+    /// x[k] = input of layer k for the whole batch (x[0] = request rows)
+    x: Vec<Mat>,
+    /// pre-BN layer outputs (hidden layers)
+    h: Vec<Mat>,
+    /// post-BN pre-ReLU (hidden layers)
+    bn_out: Vec<Mat>,
+    /// last layer's pre-adapter output c^n
+    c_n: Mat,
+}
+
+impl FrozenBackbone {
+    /// Wrap a frozen backbone for micro-batches of up to `capacity` rows.
+    /// Adapters on the model (if any) are ignored — per-tenant adapters
+    /// come from the registry at flush time.
+    pub fn new(model: Mlp, backend: Backend, capacity: usize) -> Self {
+        assert!(capacity > 0, "batch capacity must be positive");
+        assert!(
+            model.config.batch_norm,
+            "serve path assumes the paper's BN backbone"
+        );
+        let n = model.n_layers();
+        let dims = model.config.dims.clone();
+        let x = (0..n).map(|k| Mat::zeros(capacity, dims[k])).collect();
+        let h = (0..n - 1).map(|k| Mat::zeros(capacity, dims[k + 1])).collect();
+        let bn_out = (0..n - 1).map(|k| Mat::zeros(capacity, dims[k + 1])).collect();
+        let c_n = Mat::zeros(capacity, dims[n]);
+        Self {
+            model,
+            backend,
+            capacity,
+            x,
+            h,
+            bn_out,
+            c_n,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.model.config.n_in()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.model.config.n_out()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.model.n_layers()
+    }
+
+    pub fn model(&self) -> &Mlp {
+        &self.model
+    }
+
+    /// Copy one request into batch row `row`.
+    pub fn load_row(&mut self, row: usize, x: &[f32]) {
+        self.x[0].row_mut(row).copy_from_slice(x);
+    }
+
+    /// Frozen eval forward (BN eval + ReLU) over the first `b` loaded
+    /// rows; the tail rows are zero-padded so the fixed-shape kernels can
+    /// run without reallocation.
+    pub fn forward(&mut self, b: usize) {
+        assert!(b <= self.capacity, "batch overflow");
+        for row in b..self.capacity {
+            self.x[0].row_mut(row).fill(0.0);
+        }
+        let n = self.model.n_layers();
+        for k in 0..n {
+            if k == n - 1 {
+                self.model.fcs[k].forward(self.backend, &self.x[k], &mut self.c_n);
+            } else {
+                self.model.fcs[k].forward(self.backend, &self.x[k], &mut self.h[k]);
+                self.model.bns[k].forward_eval(&self.h[k], &mut self.bn_out[k]);
+                let (bo, xn) = (&self.bn_out[k], &mut self.x[k + 1]);
+                activation::relu(bo, xn);
+            }
+        }
+    }
+
+    /// Per-layer activation rows for request `row` (inputs x^1..x^n) —
+    /// exactly what the tenant's skip adapters consume.
+    pub fn activations_row(&self, row: usize) -> Vec<&[f32]> {
+        self.x.iter().map(|m| m.row(row)).collect()
+    }
+
+    /// Pre-adapter output row c^n for request `row`.
+    pub fn c_n_row(&self, row: usize) -> &[f32] {
+        self.c_n.row(row)
+    }
+}
+
+/// One queued request.
+#[derive(Clone, Debug)]
+pub struct BatchRequest {
+    pub tenant: TenantId,
+    /// caller-assigned ticket for matching responses
+    pub id: u64,
+    pub x: Vec<f32>,
+    /// ground-truth label for feedback requests
+    pub label: Option<usize>,
+}
+
+/// One served request.
+#[derive(Clone, Debug)]
+pub struct BatchResponse {
+    pub tenant: TenantId,
+    pub id: u64,
+    /// the request features, echoed back for feedback buffering
+    pub x: Vec<f32>,
+    pub label: Option<usize>,
+    pub logits: Vec<f32>,
+    pub prediction: usize,
+    /// adapter version used (0 = bare backbone, no adapters published)
+    pub adapter_version: u64,
+}
+
+/// The micro-batching queue: requests from ANY tenant coalesce into one
+/// shared backbone forward, then fan out through per-tenant adapter heads.
+pub struct MicroBatcher {
+    backbone: FrozenBackbone,
+    registry: Arc<AdapterRegistry>,
+    queue: VecDeque<BatchRequest>,
+    /// total micro-batches flushed
+    pub batches: u64,
+    /// total rows served
+    pub rows: u64,
+}
+
+impl MicroBatcher {
+    pub fn new(backbone: FrozenBackbone, registry: Arc<AdapterRegistry>) -> Self {
+        Self {
+            backbone,
+            registry,
+            queue: VecDeque::new(),
+            batches: 0,
+            rows: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.backbone.capacity()
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.backbone.n_in()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.backbone.n_out()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queue a request for the next flush.
+    pub fn submit(&mut self, req: BatchRequest) {
+        assert_eq!(req.x.len(), self.backbone.n_in(), "request width mismatch");
+        self.queue.push_back(req);
+    }
+
+    /// Serve up to `capacity` queued requests with ONE backbone forward.
+    /// Appends a response per request to `out`; returns the batch size.
+    pub fn flush(&mut self, out: &mut Vec<BatchResponse>) -> usize {
+        let b = self.queue.len().min(self.backbone.capacity());
+        if b == 0 {
+            return 0;
+        }
+        let reqs: Vec<BatchRequest> = self.queue.drain(..b).collect();
+        for (row, r) in reqs.iter().enumerate() {
+            self.backbone.load_row(row, &r.x);
+        }
+        self.backbone.forward(b);
+        // one registry lock acquisition for the whole batch; rows from the
+        // same tenant share one snapshot
+        let snaps = self.registry.snapshot_many(reqs.iter().map(|r| r.tenant));
+        for (row, req) in reqs.into_iter().enumerate() {
+            let mut logits = self.backbone.c_n_row(row).to_vec();
+            let adapter_version = match snaps.get(&req.tenant) {
+                Some(snap) => {
+                    let xs = self.backbone.activations_row(row);
+                    apply_skip_adapters_row(&snap.adapters, &xs, &mut logits);
+                    snap.version
+                }
+                None => 0, // bare backbone until the tenant publishes
+            };
+            let prediction = argmax(&logits);
+            out.push(BatchResponse {
+                tenant: req.tenant,
+                id: req.id,
+                x: req.x,
+                label: req.label,
+                logits,
+                prediction,
+                adapter_version,
+            });
+        }
+        self.batches += 1;
+        self.rows += b as u64;
+        b
+    }
+
+    /// Flush until the queue is empty (multiple micro-batches if needed).
+    pub fn flush_all(&mut self, out: &mut Vec<BatchResponse>) -> usize {
+        let mut total = 0;
+        loop {
+            let n = self.flush(out);
+            if n == 0 {
+                return total;
+            }
+            total += n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::method::Method;
+    use crate::model::mlp::AdapterTopology;
+    use crate::model::MlpConfig;
+    use crate::train::FineTuner;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> MlpConfig {
+        MlpConfig { dims: vec![6, 10, 10, 3], rank: 2, batch_norm: true }
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn batched_rows_match_single_request_forward() {
+        // one tenant's logits must be identical whether its request rides
+        // in a full cross-tenant batch or runs alone
+        let mut rng = Rng::new(0);
+        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let registry = Arc::new(AdapterRegistry::new());
+        // 5 tenants with distinct non-trivial adapters
+        for t in 0..5u64 {
+            let mut ads: Vec<LoraAdapter> = (0..3)
+                .map(|k| {
+                    let n_in = cfg().dims[k];
+                    LoraAdapter::new(&mut rng, n_in, 2, 3)
+                })
+                .collect();
+            for ad in ads.iter_mut() {
+                for v in ad.wb.data.iter_mut() {
+                    *v = 0.1 * rng.normal();
+                }
+            }
+            registry.publish(t, ads);
+        }
+        let fb = FrozenBackbone::new(backbone.clone(), Backend::Blocked, 8);
+        let mut batcher = MicroBatcher::new(fb, Arc::clone(&registry));
+
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..6).map(|_| rng.normal()).collect())
+            .collect();
+        for (t, x) in xs.iter().enumerate() {
+            batcher.submit(BatchRequest {
+                tenant: t as u64,
+                id: t as u64,
+                x: x.clone(),
+                label: None,
+            });
+        }
+        let mut batched = Vec::new();
+        assert_eq!(batcher.flush(&mut batched), 5);
+
+        for (t, x) in xs.iter().enumerate() {
+            let mut solo = Vec::new();
+            batcher.submit(BatchRequest {
+                tenant: t as u64,
+                id: 100 + t as u64,
+                x: x.clone(),
+                label: None,
+            });
+            assert_eq!(batcher.flush(&mut solo), 1);
+            close(&batched[t].logits, &solo[0].logits, 1e-5);
+        }
+    }
+
+    #[test]
+    fn matches_finetuner_predict_per_tenant() {
+        // cross-check against the training-side inference path: assemble
+        // backbone + tenant adapters into an Mlp and compare logits
+        let mut rng = Rng::new(1);
+        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let registry = Arc::new(AdapterRegistry::new());
+        let mut per_tenant: Vec<Vec<LoraAdapter>> = Vec::new();
+        for t in 0..4u64 {
+            let mut ads: Vec<LoraAdapter> = (0..3)
+                .map(|k| LoraAdapter::new(&mut rng, cfg().dims[k], 2, 3))
+                .collect();
+            for ad in ads.iter_mut() {
+                for v in ad.wb.data.iter_mut() {
+                    *v = 0.2 * rng.normal();
+                }
+            }
+            per_tenant.push(ads.clone());
+            registry.publish(t, ads);
+        }
+        let fb = FrozenBackbone::new(backbone.clone(), Backend::Blocked, 4);
+        let mut batcher = MicroBatcher::new(fb, registry);
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..6).map(|_| rng.normal()).collect())
+            .collect();
+        for (t, x) in xs.iter().enumerate() {
+            batcher.submit(BatchRequest { tenant: t as u64, id: 0, x: x.clone(), label: None });
+        }
+        let mut out = Vec::new();
+        batcher.flush(&mut out);
+
+        for (t, x) in xs.iter().enumerate() {
+            let mut model = backbone.clone();
+            model.topology = AdapterTopology::Skip;
+            model.skip = per_tenant[t].clone();
+            let mut tuner = FineTuner::new(model, Method::SkipLora, Backend::Blocked, 1);
+            let logits = tuner.predict_alloc(&Mat::from_vec(1, 6, x.clone()));
+            close(&out[t].logits, logits.row(0), 1e-4);
+        }
+    }
+
+    #[test]
+    fn partial_batches_and_unknown_tenants() {
+        let mut rng = Rng::new(2);
+        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 8);
+        let mut batcher = MicroBatcher::new(fb, registry);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        batcher.submit(BatchRequest { tenant: 99, id: 1, x, label: Some(2) });
+        let mut out = Vec::new();
+        assert_eq!(batcher.flush(&mut out), 1);
+        assert_eq!(out[0].adapter_version, 0, "no adapters published yet");
+        assert_eq!(out[0].label, Some(2));
+        assert_eq!(out[0].logits.len(), 3);
+        assert_eq!(batcher.flush(&mut out), 0, "queue drained");
+    }
+
+    #[test]
+    fn flush_all_splits_into_capacity_batches() {
+        let mut rng = Rng::new(3);
+        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 4);
+        let mut batcher = MicroBatcher::new(fb, registry);
+        for i in 0..10u64 {
+            let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            batcher.submit(BatchRequest { tenant: i, id: i, x, label: None });
+        }
+        let mut out = Vec::new();
+        assert_eq!(batcher.flush_all(&mut out), 10);
+        assert_eq!(batcher.batches, 3, "4 + 4 + 2");
+        assert_eq!(batcher.rows, 10);
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn fresh_adapters_are_noop_on_logits() {
+        // W_B = 0 init => published-but-untrained adapters must not change
+        // predictions vs the bare backbone
+        let mut rng = Rng::new(4);
+        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let registry = Arc::new(AdapterRegistry::new());
+        let ads: Vec<LoraAdapter> = (0..3)
+            .map(|k| LoraAdapter::new(&mut rng, cfg().dims[k], 2, 3))
+            .collect();
+        registry.publish(5, ads);
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 2);
+        let mut batcher = MicroBatcher::new(fb, registry);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        batcher.submit(BatchRequest { tenant: 5, id: 0, x: x.clone(), label: None });
+        batcher.submit(BatchRequest { tenant: 6, id: 1, x, label: None });
+        let mut out = Vec::new();
+        batcher.flush(&mut out);
+        assert!(out[0].adapter_version > 0);
+        assert_eq!(out[1].adapter_version, 0);
+        close(&out[0].logits, &out[1].logits, 1e-7);
+    }
+}

@@ -1,0 +1,242 @@
+//! Serving metrics: log-bucketed latency histograms + throughput counters,
+//! built on the `util::stats` substrate (Welford online moments — no
+//! external metrics crates offline, DESIGN.md §3).
+
+use std::time::Instant;
+
+use crate::util::stats::Welford;
+
+/// Number of power-of-two latency buckets: bucket i counts samples whose
+/// latency in ns lies in [2^i, 2^(i+1)). 2^39 ns ≈ 9 minutes — ample.
+const BUCKETS: usize = 40;
+
+/// Log2-bucketed latency histogram with exact online mean/σ and
+/// approximate percentiles (upper bucket bound — ≤ 2x overestimate,
+/// deterministic, allocation-free recording).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; BUCKETS],
+    stats: Welford,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: [0; BUCKETS],
+            stats: Welford::default(),
+            max_ns: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ns(&mut self, ns: u64) {
+        let b = (63 - ns.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[b] += 1;
+        self.stats.push(ns as f64);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record_ns((secs.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.n()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.stats.mean() / 1e6
+    }
+
+    pub fn std_ms(&self) -> f64 {
+        self.stats.std_dev() / 1e6
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ns as f64 / 1e6
+    }
+
+    /// Approximate p-th percentile (0..=100) in ms: the upper bound of the
+    /// bucket where the cumulative count crosses p.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let upper_ns = 1u64 << (i + 1).min(63);
+                return upper_ns as f64 / 1e6;
+            }
+        }
+        self.max_ms()
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        if self.count() == 0 {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.3}ms p50≤{:.3}ms p95≤{:.3}ms p99≤{:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_ms(),
+            self.percentile_ms(50.0),
+            self.percentile_ms(95.0),
+            self.percentile_ms(99.0),
+            self.max_ms(),
+        )
+    }
+}
+
+/// Aggregate serving metrics for a `FleetServer`.
+#[derive(Clone, Debug)]
+pub struct ServeMetrics {
+    /// one shared-backbone micro-batch forward (+ adapter fan-out)
+    pub batch_forward: LatencyHistogram,
+    /// one background/inline fine-tune job, end to end
+    pub finetune: LatencyHistogram,
+    pub predicts: u64,
+    pub feedbacks: u64,
+    pub swaps: u64,
+    pub adaptations: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    /// Skip-Cache hits/misses across fine-tune jobs — the §4.2 reuse win:
+    /// hits here are frozen forwards the fleet never recomputed
+    pub finetune_cache_hits: u64,
+    pub finetune_cache_misses: u64,
+    started: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self {
+            batch_forward: LatencyHistogram::new(),
+            finetune: LatencyHistogram::new(),
+            predicts: 0,
+            feedbacks: 0,
+            swaps: 0,
+            adaptations: 0,
+            batches: 0,
+            batched_rows: 0,
+            finetune_cache_hits: 0,
+            finetune_cache_misses: 0,
+            started: Instant::now(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean coalescing width — the cross-tenant batching win is ~linear in
+    /// this (one backbone forward amortized over this many requests).
+    pub fn rows_per_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / self.batches as f64
+        }
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Served rows per wall-clock second since creation.
+    pub fn throughput_rps(&self) -> f64 {
+        let dt = self.uptime_secs();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / dt
+        }
+    }
+
+    /// Fraction of fine-tune frozen forwards served from Skip-Caches.
+    pub fn finetune_cache_hit_rate(&self) -> f64 {
+        let total = self.finetune_cache_hits + self.finetune_cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.finetune_cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Multi-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes, {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n",
+            self.predicts,
+            self.feedbacks,
+            self.swaps,
+            self.batches,
+            self.batched_rows,
+            self.rows_per_batch(),
+            self.throughput_rps(),
+            self.batch_forward.summary(),
+            self.adaptations,
+            self.finetune.summary(),
+            self.finetune_cache_hit_rate() * 100.0,
+            self.finetune_cache_hits,
+            self.finetune_cache_misses,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_moments() {
+        let mut h = LatencyHistogram::new();
+        for ns in [1_000u64, 2_000, 4_000, 1_000_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 4);
+        let mean = (1_000.0 + 2_000.0 + 4_000.0 + 1_000_000.0) / 4.0 / 1e6;
+        assert!((h.mean_ms() - mean).abs() < 1e-9);
+        assert!((h.max_ms() - 1.0).abs() < 1e-9);
+        // p50 falls in the bucket holding 2_000 ns => upper bound 4096 ns
+        let p50 = h.percentile_ms(50.0);
+        assert!(p50 >= 0.002 && p50 <= 0.005, "{p50}");
+        // p100 lands in the 1ms bucket => upper bound ≤ 2.1ms
+        let p100 = h.percentile_ms(100.0);
+        assert!((0.9..=2.2).contains(&p100), "{p100}");
+    }
+
+    #[test]
+    fn zero_and_tiny_latencies_do_not_panic() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(0);
+        h.record_ns(1);
+        h.record_secs(0.0);
+        assert_eq!(h.count(), 3);
+        assert!(h.percentile_ms(99.0) >= 0.0);
+    }
+
+    #[test]
+    fn serve_metrics_rollups() {
+        let mut m = ServeMetrics::new();
+        m.batches = 4;
+        m.batched_rows = 64;
+        assert!((m.rows_per_batch() - 16.0).abs() < 1e-12);
+        m.batch_forward.record_ns(5_000);
+        let r = m.report();
+        assert!(r.contains("16.0 rows/batch"), "{r}");
+        assert!(r.contains("n=1"), "{r}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Fixed worker pool with per-worker queues and work stealing.
+//!
+//! Fine-tune jobs are coarse (tens of milliseconds to seconds), so the
+//! scheduler optimizes for simplicity and locality rather than
+//! nanosecond-scale stealing: each worker owns a deque, `submit`
+//! round-robins across owners, owners pop from the front of their own
+//! queue, and an idle worker steals from the BACK of a sibling's queue
+//! (oldest-first stealing, the classic deque discipline — cf. the
+//! FlatPool/work-stealing designs this module is modeled on). Everything
+//! is std-only: `Mutex<VecDeque>` + atomics, no crossbeam.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    stop: AtomicBool,
+    submitted: AtomicU64,
+    executed: AtomicU64,
+    steals: AtomicU64,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.handles.len())
+            .finish()
+    }
+}
+
+/// Counters snapshot for diagnostics and tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub workers: usize,
+    pub submitted: u64,
+    pub executed: u64,
+    pub steals: u64,
+}
+
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    rr: AtomicUsize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "worker pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            queues: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            stop: AtomicBool::new(false),
+            submitted: AtomicU64::new(0),
+            executed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&sh, i))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Self {
+            shared,
+            handles,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue a job on the next worker round-robin.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let n = self.shared.queues.len();
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        self.submit_to(i, job);
+    }
+
+    /// Enqueue a job on a specific worker's queue (tests use this to force
+    /// imbalance and observe stealing).
+    pub fn submit_to(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
+        self.shared.submitted.fetch_add(1, Ordering::SeqCst);
+        self.shared.queues[worker]
+            .lock()
+            .expect("worker queue poisoned")
+            .push_back(Box::new(job));
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> u64 {
+        let s = self.shared.submitted.load(Ordering::SeqCst);
+        let e = self.shared.executed.load(Ordering::SeqCst);
+        s.saturating_sub(e)
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            thread::sleep(Duration::from_micros(300));
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.handles.len(),
+            submitted: self.shared.submitted.load(Ordering::SeqCst),
+            executed: self.shared.executed.load(Ordering::SeqCst),
+            steals: self.shared.steals.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Stop the workers (each drains the queues before exiting) and join
+    /// them. Returns the final counters.
+    pub fn shutdown(mut self) -> PoolStats {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, me: usize) {
+    let n = sh.queues.len();
+    loop {
+        // own queue first: FIFO from the front
+        let local = sh.queues[me]
+            .lock()
+            .expect("worker queue poisoned")
+            .pop_front();
+        if let Some(job) = local {
+            job();
+            sh.executed.fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        // idle: steal the oldest job from a sibling's back
+        let mut stolen = None;
+        for off in 1..n {
+            let victim = (me + off) % n;
+            let job = sh.queues[victim]
+                .lock()
+                .expect("worker queue poisoned")
+                .pop_back();
+            if job.is_some() {
+                stolen = job;
+                break;
+            }
+        }
+        if let Some(job) = stolen {
+            sh.steals.fetch_add(1, Ordering::SeqCst);
+            job();
+            sh.executed.fetch_add(1, Ordering::SeqCst);
+            continue;
+        }
+        // every queue observed empty this pass: exit if stopping
+        if sh.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        thread::sleep(Duration::from_micros(200));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_jobs_execute() {
+        let pool = WorkerPool::new(4);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..200 {
+            let h = Arc::clone(&hits);
+            pool.submit(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 200);
+        let stats = pool.shutdown();
+        assert_eq!(stats.executed, 200);
+        assert_eq!(stats.submitted, 200);
+    }
+
+    #[test]
+    fn imbalanced_load_is_stolen() {
+        let pool = WorkerPool::new(4);
+        let hits = Arc::new(AtomicU64::new(0));
+        // everything lands on worker 0's queue; 1..3 must steal to help
+        for _ in 0..48 {
+            let h = Arc::clone(&hits);
+            pool.submit_to(0, move || {
+                thread::sleep(Duration::from_millis(1));
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 48);
+        let stats = pool.shutdown();
+        assert!(stats.steals > 0, "idle workers never stole: {stats:?}");
+    }
+
+    #[test]
+    fn shutdown_drains_outstanding_jobs() {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..32 {
+            let h = Arc::clone(&hits);
+            pool.submit(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // no wait_idle: workers drain queues before exiting on stop
+        let stats = pool.shutdown();
+        assert_eq!(stats.executed, 32);
+        assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn pending_reaches_zero() {
+        let pool = WorkerPool::new(2);
+        for _ in 0..10 {
+            pool.submit(|| {});
+        }
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+    }
+}

@@ -1,0 +1,727 @@
+//! The fleet front-end: Predict / Feedback / SwapAdapters / Stats over one
+//! shared frozen backbone and per-tenant Skip-LoRA adapter sets.
+//!
+//! Request flow:
+//!
+//! 1. `handle` queues Predict/Feedback into the cross-tenant
+//!    [`MicroBatcher`](crate::serve::batcher::MicroBatcher) and returns a
+//!    ticket; `pump` flushes one micro-batch and yields [`Completion`]s.
+//! 2. Feedback completions drive the per-tenant
+//!    [`DriftDetector`](crate::coordinator::core::DriftDetector) +
+//!    [`FeedbackBuffer`](crate::coordinator::core::FeedbackBuffer) (the
+//!    same control loop as the single-device `DeviceAgent`).
+//! 3. On drift, a Skip2-LoRA fine-tune job is launched (inline, or on the
+//!    [`WorkerPool`](crate::serve::scheduler::WorkerPool) when
+//!    `workers > 0`). The job clones the frozen backbone, trains fresh
+//!    skip adapters on the tenant's buffer through the tenant's PERSISTENT
+//!    `SkipCache`, and publishes the result to the
+//!    [`AdapterRegistry`](crate::serve::registry::AdapterRegistry).
+//!
+//! Per-tenant caches survive across adaptation rounds because the shared
+//! backbone is frozen: a cached activation is valid per (sample, frozen
+//! backbone) pair (§4.2), so only buffer slots overwritten since the last
+//! round miss (`SkipCache::invalidate`). Tenants are fully isolated — a
+//! fine-tune touches one tenant's adapters and nothing shared.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cache::SkipCache;
+use crate::coordinator::core::{DriftDetector, FeedbackBuffer};
+use crate::data::Dataset;
+use crate::method::Method;
+use crate::model::mlp::AdapterTopology;
+use crate::model::Mlp;
+use crate::nn::lora::LoraAdapter;
+use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, MAX_RANK};
+use crate::serve::metrics::ServeMetrics;
+use crate::serve::registry::{AdapterRegistry, TenantId};
+use crate::serve::scheduler::WorkerPool;
+use crate::tensor::ops::Backend;
+use crate::train::FineTuner;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+
+/// Server configuration (per-tenant knobs mirror `AgentConfig`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// micro-batch coalescing width (requests per shared forward)
+    pub batch_capacity: usize,
+    /// compute backend for the shared forward and fine-tune jobs
+    pub backend: Backend,
+    /// per-tenant sliding accuracy window length
+    pub window: usize,
+    /// fine-tune trigger threshold on window accuracy
+    pub accuracy_threshold: f64,
+    /// per-tenant fine-tune buffer size |T|
+    pub buffer_target: usize,
+    /// Skip2-LoRA epochs per fine-tune job
+    pub epochs: usize,
+    pub lr: f32,
+    /// fine-tune mini-batch size
+    pub train_batch: usize,
+    pub seed: u64,
+    /// fine-tune worker threads; 0 = run jobs inline inside `pump`
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            batch_capacity: 32,
+            backend: Backend::Blocked,
+            window: 30,
+            accuracy_threshold: 0.75,
+            buffer_target: 60,
+            epochs: 40,
+            lr: 0.05,
+            train_batch: 20,
+            seed: 7,
+            workers: 0,
+        }
+    }
+}
+
+/// Front-end requests.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// unlabelled sample: predict
+    Predict(Vec<f32>),
+    /// labelled sample: predict, score, buffer for adaptation
+    Feedback(Vec<f32>, usize),
+    /// externally trained adapters (e.g. migrated from another node)
+    SwapAdapters(Vec<LoraAdapter>),
+    Stats,
+}
+
+/// Immediate response to `handle` (Predict/Feedback resolve later via
+/// [`FleetServer::pump`]).
+#[derive(Debug)]
+pub enum Response {
+    /// queued into the micro-batch; the ticket reappears in a Completion
+    Queued { ticket: u64 },
+    Swapped { version: u64 },
+    Rejected(String),
+    Stats(Box<ServerStats>),
+}
+
+/// A served Predict/Feedback request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub tenant: TenantId,
+    pub ticket: u64,
+    pub prediction: usize,
+    pub label: Option<usize>,
+    pub correct: Option<bool>,
+    pub adapter_version: u64,
+}
+
+/// Aggregate server statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub tenants: usize,
+    pub publishes: u64,
+    pub adaptations: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub rows_per_batch: f64,
+    pub adapter_bytes: usize,
+}
+
+struct TenantState {
+    detector: DriftDetector,
+    buffer: FeedbackBuffer,
+    /// `None` while a fine-tune job owns the cache (buffer is frozen too)
+    cache: Option<SkipCache>,
+    adaptations: u64,
+    feedbacks: u64,
+    /// training-set accuracy reported by the most recent fine-tune
+    last_adapt_accuracy: f64,
+}
+
+impl TenantState {
+    fn new(cfg: &ServeConfig) -> Self {
+        Self {
+            detector: DriftDetector::new(cfg.window, cfg.accuracy_threshold),
+            buffer: FeedbackBuffer::new(cfg.buffer_target),
+            cache: Some(SkipCache::new(cfg.buffer_target)),
+            adaptations: 0,
+            feedbacks: 0,
+            last_adapt_accuracy: 0.0,
+        }
+    }
+}
+
+/// Result of one fine-tune job, sent back over the result channel.
+struct AdaptResult {
+    tenant: TenantId,
+    /// the tenant's cache, returned after the job (warm for next round)
+    cache: SkipCache,
+    /// training-set accuracy after the fine-tune
+    acc_after: f64,
+    train_secs: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+pub struct FleetServer {
+    cfg: ServeConfig,
+    /// the shared frozen backbone. Owned (not `Arc`): `FcLayer` caches a
+    /// transposed-weight `RefCell`, so `Mlp` is `Send` but not `Sync` —
+    /// fine-tune jobs get their own clone instead of a shared reference.
+    backbone: Mlp,
+    pub registry: Arc<AdapterRegistry>,
+    batcher: MicroBatcher,
+    tenants: HashMap<TenantId, TenantState>,
+    pool: Option<WorkerPool>,
+    results_tx: mpsc::Sender<AdaptResult>,
+    results_rx: mpsc::Receiver<AdaptResult>,
+    pub metrics: ServeMetrics,
+    next_ticket: u64,
+}
+
+impl FleetServer {
+    /// Deploy a pre-trained frozen backbone (topology `None`; adapters are
+    /// per-tenant and live in the registry).
+    pub fn new(backbone: Mlp, cfg: ServeConfig) -> Self {
+        assert_eq!(
+            backbone.topology,
+            AdapterTopology::None,
+            "the shared backbone carries no adapters; tenants publish theirs"
+        );
+        let registry = Arc::new(AdapterRegistry::new());
+        let frozen = FrozenBackbone::new(backbone.clone(), cfg.backend, cfg.batch_capacity);
+        let batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+        let pool = (cfg.workers > 0).then(|| WorkerPool::new(cfg.workers));
+        let (results_tx, results_rx) = mpsc::channel();
+        Self {
+            cfg,
+            backbone,
+            registry,
+            batcher,
+            tenants: HashMap::new(),
+            pool,
+            results_tx,
+            results_rx,
+            metrics: ServeMetrics::new(),
+            next_ticket: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.batcher.n_in()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.batcher.n_out()
+    }
+
+    /// Handle one front-end request.
+    pub fn handle(&mut self, tenant: TenantId, req: Request) -> Response {
+        match req {
+            Request::Predict(x) => {
+                if x.len() != self.n_in() {
+                    return Response::Rejected(format!(
+                        "expected {} features, got {}",
+                        self.n_in(),
+                        x.len()
+                    ));
+                }
+                self.metrics.predicts += 1;
+                Response::Queued { ticket: self.enqueue(tenant, x, None) }
+            }
+            Request::Feedback(x, label) => {
+                if x.len() != self.n_in() {
+                    return Response::Rejected(format!(
+                        "expected {} features, got {}",
+                        self.n_in(),
+                        x.len()
+                    ));
+                }
+                if label >= self.n_classes() {
+                    return Response::Rejected(format!(
+                        "label {label} out of range (n_classes {})",
+                        self.n_classes()
+                    ));
+                }
+                self.metrics.feedbacks += 1;
+                Response::Queued { ticket: self.enqueue(tenant, x, Some(label)) }
+            }
+            Request::SwapAdapters(mut adapters) => match self.validate_adapters(&adapters) {
+                Ok(()) => {
+                    self.tenants
+                        .entry(tenant)
+                        .or_insert_with(|| TenantState::new(&self.cfg));
+                    for ad in adapters.iter_mut() {
+                        ad.compact(); // registry holds inference weights only
+                    }
+                    let version = self.registry.publish(tenant, adapters);
+                    self.metrics.swaps += 1;
+                    Response::Swapped { version }
+                }
+                Err(msg) => Response::Rejected(msg),
+            },
+            Request::Stats => Response::Stats(Box::new(self.stats())),
+        }
+    }
+
+    fn validate_adapters(&self, adapters: &[LoraAdapter]) -> Result<(), String> {
+        let dims = &self.backbone.config.dims;
+        let n = self.backbone.n_layers();
+        if adapters.len() != n {
+            return Err(format!("expected {n} skip adapters, got {}", adapters.len()));
+        }
+        for (k, ad) in adapters.iter().enumerate() {
+            if ad.n_in() != dims[k] || ad.n_out() != dims[n] {
+                return Err(format!(
+                    "adapter {k}: shape {}x{}, want {}x{}",
+                    ad.n_in(),
+                    ad.n_out(),
+                    dims[k],
+                    dims[n]
+                ));
+            }
+            if ad.rank() > MAX_RANK {
+                return Err(format!(
+                    "adapter {k}: rank {} exceeds the serving limit {MAX_RANK}",
+                    ad.rank()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn enqueue(&mut self, tenant: TenantId, x: Vec<f32>, label: Option<usize>) -> u64 {
+        self.tenants
+            .entry(tenant)
+            .or_insert_with(|| TenantState::new(&self.cfg));
+        self.next_ticket += 1;
+        let id = self.next_ticket;
+        self.batcher.submit(BatchRequest { tenant, id, x, label });
+        id
+    }
+
+    /// Requests queued but not yet served.
+    pub fn queued(&self) -> usize {
+        self.batcher.pending()
+    }
+
+    /// Drain finished fine-tune jobs, flush ONE micro-batch, and process
+    /// feedback (drift detection + adaptation launch). Returns the served
+    /// requests.
+    pub fn pump(&mut self) -> Vec<Completion> {
+        self.drain_adapt_results();
+        let mut responses = Vec::new();
+        let t0 = Instant::now();
+        let n = self.batcher.flush(&mut responses);
+        if n > 0 {
+            self.metrics
+                .batch_forward
+                .record_ns(t0.elapsed().as_nanos() as u64);
+            self.metrics.batches += 1;
+            self.metrics.batched_rows += n as u64;
+        }
+        let mut out = Vec::with_capacity(responses.len());
+        for resp in responses {
+            let correct = resp.label.map(|l| resp.prediction == l);
+            out.push(Completion {
+                tenant: resp.tenant,
+                ticket: resp.id,
+                prediction: resp.prediction,
+                label: resp.label,
+                correct,
+                adapter_version: resp.adapter_version,
+            });
+            if let Some(label) = resp.label {
+                self.apply_feedback(resp.tenant, resp.x, label, correct.unwrap());
+            }
+        }
+        out
+    }
+
+    /// Pump until the request queue is empty.
+    pub fn pump_until_drained(&mut self) -> Vec<Completion> {
+        let mut all = Vec::new();
+        while self.queued() > 0 {
+            all.extend(self.pump());
+        }
+        self.drain_adapt_results();
+        all
+    }
+
+    fn apply_feedback(&mut self, tenant: TenantId, x: Vec<f32>, label: usize, correct: bool) {
+        let st = self
+            .tenants
+            .get_mut(&tenant)
+            .expect("tenant state created on enqueue");
+        st.feedbacks += 1;
+        st.detector.push(correct);
+        if let Some(cache) = st.cache.as_mut() {
+            // buffer mutable only while no job owns the cache; overwriting
+            // slot i invalidates C_skip[i] (§4.2: entry is per sample)
+            let slot = st.buffer.push(x, label);
+            cache.invalidate(slot);
+        }
+        if st.detector.drifted() && st.buffer.is_full() && st.cache.is_some() {
+            self.launch_adapt(tenant);
+        }
+    }
+
+    fn launch_adapt(&mut self, tenant: TenantId) {
+        let n_classes = self.n_classes();
+        let st = self.tenants.get_mut(&tenant).expect("tenant exists");
+        let data = st.buffer.to_dataset(n_classes);
+        let cache = st.cache.take().expect("cache present when launching");
+        st.detector.reset();
+        let round = st.adaptations;
+        st.adaptations += 1;
+        self.metrics.adaptations += 1;
+
+        let backbone = self.backbone.clone();
+        let registry = Arc::clone(&self.registry);
+        let tx = self.results_tx.clone();
+        let seed = self.cfg.seed ^ tenant.rotate_left(17) ^ round;
+        let (epochs, lr, train_batch, backend) =
+            (self.cfg.epochs, self.cfg.lr, self.cfg.train_batch, self.cfg.backend);
+        let job = move || {
+            let result = run_finetune(
+                backbone, &registry, tenant, &data, cache, epochs, lr, train_batch, backend,
+                seed,
+            );
+            // receiver lives as long as the server; a send error just
+            // means the server was dropped mid-job
+            let _ = tx.send(result);
+        };
+        match &self.pool {
+            Some(pool) => pool.submit(job),
+            None => {
+                job();
+                self.drain_adapt_results();
+            }
+        }
+    }
+
+    fn drain_adapt_results(&mut self) {
+        while let Ok(res) = self.results_rx.try_recv() {
+            self.metrics.finetune.record_secs(res.train_secs);
+            self.metrics.finetune_cache_hits += res.cache_hits;
+            self.metrics.finetune_cache_misses += res.cache_misses;
+            if let Some(st) = self.tenants.get_mut(&res.tenant) {
+                st.cache = Some(res.cache);
+                st.last_adapt_accuracy = res.acc_after;
+                // outcomes recorded while the job ran were scored against
+                // the OLD adapters; reset so the window measures the new
+                // ones instead of instantly re-triggering a redundant job
+                st.detector.reset();
+            }
+        }
+    }
+
+    /// Is a fine-tune job in flight for this tenant?
+    pub fn is_adapting(&self, tenant: TenantId) -> bool {
+        self.tenants
+            .get(&tenant)
+            .is_some_and(|st| st.cache.is_none())
+    }
+
+    pub fn any_adapting(&self) -> bool {
+        self.tenants.values().any(|st| st.cache.is_none())
+    }
+
+    /// Block (pumping) until every queued request is served and every
+    /// fine-tune job has landed.
+    pub fn quiesce(&mut self) {
+        loop {
+            self.pump_until_drained();
+            if !self.any_adapting() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(500));
+        }
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn tenant_window_accuracy(&self, tenant: TenantId) -> Option<f64> {
+        self.tenants.get(&tenant).map(|st| st.detector.accuracy())
+    }
+
+    pub fn tenant_adaptations(&self, tenant: TenantId) -> u64 {
+        self.tenants.get(&tenant).map_or(0, |st| st.adaptations)
+    }
+
+    /// Labelled samples this tenant has fed back so far.
+    pub fn tenant_feedbacks(&self, tenant: TenantId) -> u64 {
+        self.tenants.get(&tenant).map_or(0, |st| st.feedbacks)
+    }
+
+    /// Training-set accuracy reported by the tenant's most recent
+    /// fine-tune (`None` if it never adapted).
+    pub fn tenant_last_adapt_accuracy(&self, tenant: TenantId) -> Option<f64> {
+        self.tenants
+            .get(&tenant)
+            .filter(|st| st.adaptations > 0 && st.cache.is_some())
+            .map(|st| st.last_adapt_accuracy)
+    }
+
+    pub fn tenant_version(&self, tenant: TenantId) -> u64 {
+        self.registry.version(tenant)
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            tenants: self.tenants.len(),
+            publishes: self.registry.publishes(),
+            adaptations: self.metrics.adaptations,
+            batches: self.batcher.batches,
+            rows: self.batcher.rows,
+            rows_per_batch: self.metrics.rows_per_batch(),
+            adapter_bytes: self.registry.total_adapter_bytes(),
+        }
+    }
+
+    /// Quiesce and shut the worker pool down.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.quiesce();
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+        self.stats()
+    }
+}
+
+/// One Skip2-LoRA fine-tune job: fresh skip adapters on a cloned frozen
+/// backbone, trained on the tenant's buffer through its persistent cache,
+/// published to the registry on completion.
+#[allow(clippy::too_many_arguments)]
+fn run_finetune(
+    mut model: Mlp,
+    registry: &Arc<AdapterRegistry>,
+    tenant: TenantId,
+    data: &Dataset,
+    mut cache: SkipCache,
+    epochs: usize,
+    lr: f32,
+    train_batch: usize,
+    backend: Backend,
+    seed: u64,
+) -> AdaptResult {
+    let t0 = Instant::now();
+    let hits0 = cache.stats().hits;
+    let misses0 = cache.stats().misses;
+    let mut rng = Rng::new(seed);
+    // fresh adapters per round: LoRA portability means stale adapters are
+    // discarded without touching the backbone (same policy as DeviceAgent)
+    model.set_topology(&mut rng, AdapterTopology::Skip);
+    let batch = train_batch.min(data.len()).max(1);
+    let mut tuner = FineTuner::new(model, Method::Skip2Lora, backend, batch);
+    let mut timer = PhaseTimer::new();
+    let batches_per_epoch = (data.len() / batch).max(1);
+    for _epoch in 0..epochs {
+        for _ in 0..batches_per_epoch {
+            let idx = rng.sample_with_replacement(data.len(), batch);
+            tuner.forward_cached(data, &idx, &mut cache, &mut timer);
+            let _ = tuner.backward(&mut timer);
+            tuner.update(lr, &mut timer);
+        }
+    }
+    let acc_after = tuner.accuracy(data);
+    let mut adapters = std::mem::take(&mut tuner.model.skip);
+    for ad in adapters.iter_mut() {
+        ad.compact(); // publish inference weights only, not grad workspaces
+    }
+    registry.publish(tenant, adapters);
+    AdaptResult {
+        tenant,
+        cache_hits: cache.stats().hits - hits0,
+        cache_misses: cache.stats().misses - misses0,
+        cache,
+        acc_after,
+        train_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpConfig;
+    use crate::tensor::Mat;
+    use crate::train::trainer::pretrain;
+
+    fn clustered(seed: u64, n: usize, shift: f32) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, 8);
+        let mut labels = Vec::new();
+        for i in 0..n {
+            let c = i % 3;
+            for j in 0..8 {
+                let base = if j % 3 == c { 2.0 } else { 0.0 };
+                *x.at_mut(i, j) = base + shift + 0.3 * rng.normal();
+            }
+            labels.push(c);
+        }
+        Dataset { x, labels, n_classes: 3 }
+    }
+
+    fn server(workers: usize) -> FleetServer {
+        let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+        let pre = clustered(0, 120, 0.0);
+        let backbone = pretrain(cfg, &pre, 50, 0.05, 1, Backend::Blocked);
+        FleetServer::new(
+            backbone,
+            ServeConfig {
+                batch_capacity: 16,
+                window: 20,
+                accuracy_threshold: 0.7,
+                buffer_target: 45,
+                epochs: 30,
+                lr: 0.05,
+                train_batch: 15,
+                workers,
+                ..Default::default()
+            },
+        )
+    }
+
+    fn drive(server: &mut FleetServer, tenant: TenantId, data: &Dataset, feedback: bool) {
+        for i in 0..data.len() {
+            let x = data.x.row(i).to_vec();
+            let req = if feedback {
+                Request::Feedback(x, data.labels[i])
+            } else {
+                Request::Predict(x)
+            };
+            match server.handle(tenant, req) {
+                Response::Queued { .. } => {}
+                other => panic!("unexpected response {other:?}"),
+            }
+            if server.queued() >= server.config().batch_capacity {
+                server.pump();
+            }
+        }
+        server.pump_until_drained();
+    }
+
+    #[test]
+    fn in_distribution_tenants_never_adapt() {
+        let mut s = server(0);
+        for t in 0..3u64 {
+            drive(&mut s, t, &clustered(10 + t, 60, 0.0), true);
+        }
+        s.quiesce();
+        for t in 0..3u64 {
+            assert_eq!(s.tenant_adaptations(t), 0, "tenant {t}");
+            assert_eq!(s.tenant_feedbacks(t), 60);
+            assert!(s.tenant_window_accuracy(t).unwrap() > 0.7);
+        }
+        assert_eq!(s.registry.publishes(), 0);
+    }
+
+    #[test]
+    fn drifted_tenant_adapts_and_recovers_without_touching_others() {
+        let mut s = server(0);
+        // tenant 0 stays clean, tenant 1 drifts hard
+        drive(&mut s, 0, &clustered(20, 80, 0.0), true);
+        let drifted = clustered(21, 300, 2.5);
+        drive(&mut s, 1, &drifted, true);
+        s.quiesce();
+
+        assert!(s.tenant_adaptations(1) >= 1, "tenant 1 never adapted");
+        assert!(s.tenant_version(1) > 0, "no adapters published");
+        let adapt_acc = s.tenant_last_adapt_accuracy(1).unwrap();
+        assert!(adapt_acc > 0.7, "fine-tune train accuracy {adapt_acc}");
+        assert!(s.metrics.finetune_cache_misses > 0, "first round populates");
+        assert_eq!(s.tenant_adaptations(0), 0, "tenant 0 must be untouched");
+        assert_eq!(s.tenant_version(0), 0);
+
+        // post-adaptation: tenant 1 classifies its drifted distribution
+        let probe = clustered(22, 60, 2.5);
+        drive(&mut s, 1, &probe, true);
+        let acc = s.tenant_window_accuracy(1).unwrap();
+        assert!(acc > 0.75, "tenant 1 window accuracy after recovery: {acc}");
+
+        // tenant 0 still accurate with bare backbone
+        drive(&mut s, 0, &clustered(23, 40, 0.0), true);
+        assert!(s.tenant_window_accuracy(0).unwrap() > 0.7);
+    }
+
+    #[test]
+    fn background_pool_matches_inline_behavior() {
+        let mut s = server(2);
+        let drifted = clustered(30, 300, 2.5);
+        drive(&mut s, 5, &drifted, true);
+        s.quiesce();
+        assert!(s.tenant_adaptations(5) >= 1);
+        assert!(!s.is_adapting(5), "cache returned after quiesce");
+        drive(&mut s, 5, &clustered(31, 60, 2.5), true);
+        assert!(s.tenant_window_accuracy(5).unwrap() > 0.75);
+        let stats = s.shutdown();
+        assert!(stats.publishes >= 1);
+    }
+
+    #[test]
+    fn swap_adapters_validates_shapes() {
+        let mut s = server(0);
+        let mut rng = Rng::new(9);
+        let bad = vec![LoraAdapter::new(&mut rng, 4, 2, 3)];
+        match s.handle(7, Request::SwapAdapters(bad)) {
+            Response::Rejected(_) => {}
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // oversized rank must be rejected up front, not panic the
+        // serving loop later (apply_skip_adapters_row's MAX_RANK assert)
+        let huge_rank: Vec<LoraAdapter> = [8usize, 12, 12]
+            .iter()
+            .map(|&n_in| LoraAdapter::new(&mut rng, n_in, MAX_RANK + 1, 3))
+            .collect();
+        match s.handle(7, Request::SwapAdapters(huge_rank)) {
+            Response::Rejected(msg) => assert!(msg.contains("rank"), "{msg}"),
+            other => panic!("expected rank rejection, got {other:?}"),
+        }
+        let good: Vec<LoraAdapter> = [8usize, 12, 12]
+            .iter()
+            .map(|&n_in| LoraAdapter::new(&mut rng, n_in, 2, 3))
+            .collect();
+        match s.handle(7, Request::SwapAdapters(good)) {
+            Response::Swapped { version } => assert!(version > 0),
+            other => panic!("expected swap, got {other:?}"),
+        }
+        assert_eq!(s.tenant_version(7), 1);
+    }
+
+    #[test]
+    fn stats_roll_up() {
+        let mut s = server(0);
+        drive(&mut s, 1, &clustered(40, 32, 0.0), false);
+        match s.handle(1, Request::Stats) {
+            Response::Stats(stats) => {
+                assert_eq!(stats.tenants, 1);
+                assert_eq!(stats.rows, 32);
+                assert!(stats.batches >= 2, "16-cap batcher needed >= 2 flushes");
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+        assert_eq!(s.metrics.predicts, 32);
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let mut s = server(0);
+        match s.handle(1, Request::Predict(vec![0.0; 3])) {
+            Response::Rejected(_) => {}
+            other => panic!("{other:?}"),
+        }
+        match s.handle(1, Request::Feedback(vec![0.0; 8], 99)) {
+            Response::Rejected(_) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

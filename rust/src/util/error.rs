@@ -1,0 +1,139 @@
+//! Minimal error substrate standing in for the `anyhow` crate (the offline
+//! image has no crates.io access — DESIGN.md §3 "Substitutions").
+//!
+//! Provides the slice of anyhow's surface this crate actually uses:
+//!
+//! * an opaque string-backed [`Error`] with prefix-context chaining,
+//! * a [`Result`] alias with a defaulted error parameter,
+//! * the [`Context`] extension trait for `Result` and `Option`,
+//! * `bail!` / `anyhow!` macros (defined here, exported at the crate root
+//!   via `#[macro_export]`, and re-exported from this module so call sites
+//!   can `use crate::util::error::{anyhow, bail}`).
+
+use std::fmt;
+
+/// Opaque error: a rendered message plus any context prefixes.
+///
+/// Deliberately does NOT implement `std::error::Error` so that the blanket
+/// `From<E: std::error::Error>` impl below does not collide with the
+/// reflexive `From<T> for T` — the same trick `anyhow::Error` uses.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn push_context(mut self, c: impl fmt::Display) -> Self {
+        self.msg = format!("{c}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with the crate error as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-prefixing extension, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 7");
+        assert_eq!(format!("{e:?}"), "broke at 7");
+        // alternate flag (anyhow's chain format) degrades gracefully
+        assert_eq!(format!("{e:#}"), "broke at 7");
+    }
+
+    #[test]
+    fn context_chains_prefixes() {
+        let r: Result<()> = Err(Error::msg("inner")).context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+        let r: Result<u8> = None.with_context(|| format!("missing {}", "x"));
+        assert_eq!(r.unwrap_err().to_string(), "missing x");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+        let parsed: Result<i32> = "nope".parse::<i32>().context("parse");
+        assert!(parsed.unwrap_err().to_string().starts_with("parse: "));
+    }
+}

@@ -3,6 +3,7 @@
 //! "Substitutions".
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;

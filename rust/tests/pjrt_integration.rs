@@ -3,7 +3,10 @@
 //! support the full cached fine-tuning loop.
 //!
 //! Skipped (with a message) when `artifacts/` hasn't been built — run
-//! `make artifacts` first.
+//! `make artifacts` first. The whole suite is compiled only with
+//! `--features pjrt` (the default build has no XLA toolchain).
+
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,347 @@
+//! Integration tests for the `serve` subsystem and the §4.2 cache-validity
+//! contract it leans on:
+//!
+//! * the Skip-Cache freeze rule: cached activations are valid only while
+//!   the backbone (FC weights AND BN statistics) is bit-frozen — any
+//!   mutation requires invalidation;
+//! * registry snapshot consistency under concurrent adapter publishes
+//!   (mini-proptest over thread interleavings);
+//! * cross-tenant batching serves every tenant its own adapters with no
+//!   interference.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use skip2lora::cache::SkipCache;
+use skip2lora::method::Method;
+use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::tensor::{ops::Backend, Mat};
+use skip2lora::testkit::prop::{check, gen, PropConfig};
+use skip2lora::train::FineTuner;
+use skip2lora::util::rng::Rng;
+use skip2lora::util::timer::PhaseTimer;
+
+fn tiny_cfg() -> MlpConfig {
+    MlpConfig { dims: vec![10, 8, 8, 3], rank: 2, batch_norm: true }
+}
+
+fn tiny_data(rng: &mut Rng, n: usize) -> skip2lora::data::Dataset {
+    let x = gen::mat(rng, n, 10);
+    let labels = gen::labels(rng, n, 3);
+    skip2lora::data::Dataset { x, labels, n_classes: 3 }
+}
+
+// ---------------------------------------------------------------------
+// §4.2 freeze rule
+// ---------------------------------------------------------------------
+
+/// Mutating BN running statistics after the cache is populated makes the
+/// cached forward STALE: it keeps returning pre-mutation logits until the
+/// cache is invalidated, after which the recomputed activations reflect
+/// the new backbone state. This is exactly why every cache-compatible
+/// method must freeze BN (paper §4.2 / DESIGN.md decision 5).
+#[test]
+fn bn_mutation_invalidates_cached_activations() {
+    let mut rng = Rng::new(1);
+    let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+    let data = tiny_data(&mut rng, 24);
+    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut cache = SkipCache::new(data.len());
+    let mut timer = PhaseTimer::new();
+    let idx: Vec<usize> = (0..8).collect();
+
+    // populate + steady-state hit
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    let fresh = tuner.logits().clone();
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    assert_eq!(tuner.logits(), &fresh, "all-hit forward is bit-identical");
+
+    // mutate frozen state: BN running stats drift (what train-mode BN
+    // would do every batch)
+    for v in tuner.model.bns[0].running_mean.iter_mut() {
+        *v += 0.5;
+    }
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    assert_eq!(
+        tuner.logits(),
+        &fresh,
+        "stale cache ignores the BN change — the §4.2 hazard"
+    );
+
+    // the required invalidation: clear, recompute, observe the new state
+    cache.clear();
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    let recomputed = tuner.logits().clone();
+    let max_delta = recomputed
+        .data
+        .iter()
+        .zip(&fresh.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_delta > 1e-3,
+        "recomputed logits must reflect the BN mutation (Δ={max_delta})"
+    );
+}
+
+/// Same contract for FC weights: the other half of the frozen backbone.
+#[test]
+fn fc_mutation_invalidates_cached_activations() {
+    let mut rng = Rng::new(2);
+    let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+    let data = tiny_data(&mut rng, 16);
+    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut cache = SkipCache::new(data.len());
+    let mut timer = PhaseTimer::new();
+    let idx: Vec<usize> = (0..8).collect();
+
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    let fresh = tuner.logits().clone();
+
+    for v in tuner.model.fcs[0].w.data.iter_mut() {
+        *v *= 1.1;
+    }
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    assert_eq!(tuner.logits(), &fresh, "stale: FC change invisible through cache");
+
+    cache.clear();
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    assert_ne!(tuner.logits(), &fresh, "post-clear forward sees the new weights");
+    assert_eq!(cache.stats().misses, 8, "clear forces a full recompute");
+}
+
+/// Per-slot invalidation: replacing ONE buffer sample must only recompute
+/// that slot — the others keep hitting (the serve-path reuse argument).
+#[test]
+fn slot_invalidation_is_surgical() {
+    let mut rng = Rng::new(3);
+    let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+    let mut data = tiny_data(&mut rng, 8);
+    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut cache = SkipCache::new(data.len());
+    let mut timer = PhaseTimer::new();
+    let idx: Vec<usize> = (0..8).collect();
+
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    assert_eq!(cache.stats().misses, 8);
+
+    // slot 3 gets a new sample (ring-buffer overwrite in the server)
+    for j in 0..10 {
+        *data.x.at_mut(3, j) = rng.normal();
+    }
+    cache.invalidate(3);
+    let before = cache.stats();
+    tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
+    let after = cache.stats();
+    assert_eq!(after.misses - before.misses, 1, "only the new sample recomputes");
+    assert_eq!(after.hits - before.hits, 7);
+
+    // and the recomputed entry matches a from-scratch forward of slot 3
+    let mut oracle = SkipCache::new(data.len());
+    tuner.forward_cached(&data, &idx, &mut oracle, &mut timer);
+    assert_eq!(cache.peek(3).unwrap(), oracle.peek(3).unwrap());
+}
+
+// ---------------------------------------------------------------------
+// registry consistency under concurrent publishes
+// ---------------------------------------------------------------------
+
+/// A published adapter set is immutable and replaced atomically: readers
+/// racing a publisher must always observe an internally consistent set
+/// (every weight tagged with the same publish round) and per-tenant
+/// versions must be monotone. Each adapter set is tagged by filling every
+/// W_B entry with the round number.
+#[test]
+fn prop_registry_snapshots_consistent_under_concurrent_publishes() {
+    check(
+        "registry-snapshot-consistency",
+        PropConfig { cases: 12, seed: 0xC0FFEE },
+        |rng| {
+            let registry = Arc::new(AdapterRegistry::new());
+            let tenants: u64 = gen::usize_in(rng, 1, 4) as u64;
+            let rounds: usize = gen::usize_in(rng, 20, 60);
+            let seed = rng.next_u64();
+            let stop = Arc::new(AtomicBool::new(false));
+
+            std::thread::scope(|scope| {
+                // writers: one per tenant, publishing `rounds` versions
+                for t in 0..tenants {
+                    let registry = Arc::clone(&registry);
+                    scope.spawn(move || {
+                        let mut wrng = Rng::new(seed ^ t);
+                        for round in 1..=rounds {
+                            let ads = (0..3)
+                                .map(|_| {
+                                    let mut ad = LoraAdapter::new(&mut wrng, 6, 2, 3);
+                                    ad.wb.fill(round as f32);
+                                    ad
+                                })
+                                .collect();
+                            registry.publish(t, ads);
+                        }
+                    });
+                }
+                // readers: hammer snapshots while writers run
+                for r in 0..2 {
+                    let registry = Arc::clone(&registry);
+                    let stop = Arc::clone(&stop);
+                    scope.spawn(move || {
+                        let mut last_version = vec![0u64; tenants as usize];
+                        let mut last_tag = vec![0f32; tenants as usize];
+                        while !stop.load(Ordering::Relaxed) {
+                            for t in 0..tenants {
+                                if let Some(snap) = registry.snapshot(t) {
+                                    // internal consistency: one tag everywhere
+                                    let tag = snap.adapters[0].wb.data[0];
+                                    for ad in &snap.adapters {
+                                        for &v in &ad.wb.data {
+                                            assert_eq!(
+                                                v, tag,
+                                                "torn snapshot on tenant {t} (reader {r})"
+                                            );
+                                        }
+                                    }
+                                    // monotone versions and tags per tenant
+                                    let ti = t as usize;
+                                    assert!(snap.version >= last_version[ti]);
+                                    assert!(tag >= last_tag[ti]);
+                                    last_version[ti] = snap.version;
+                                    last_tag[ti] = tag;
+                                }
+                            }
+                        }
+                    });
+                }
+                // scope waits for writers; tell readers to wind down once
+                // writers are done (they are spawned first and finish fast)
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                stop.store(true, Ordering::Relaxed);
+            });
+
+            // final state: every tenant at the last round's tag
+            for t in 0..tenants {
+                let snap = registry.snapshot(t).expect("published");
+                if snap.adapters[0].wb.data[0] != rounds as f32 {
+                    return Err(format!(
+                        "tenant {t}: final tag {} != {rounds}",
+                        snap.adapters[0].wb.data[0]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// cross-tenant batching
+// ---------------------------------------------------------------------
+
+/// One shared forward serves B tenants their OWN logits: equivalent to B
+/// independent per-tenant model evaluations, with zero interference.
+#[test]
+fn batched_serving_matches_independent_per_tenant_models() {
+    let mut rng = Rng::new(7);
+    let cfg = tiny_cfg();
+    let backbone = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::None);
+    let registry = Arc::new(AdapterRegistry::new());
+
+    let n_tenants = 12u64;
+    let mut tenant_adapters: Vec<Vec<LoraAdapter>> = Vec::new();
+    for t in 0..n_tenants {
+        let mut ads: Vec<LoraAdapter> = (0..3)
+            .map(|k| LoraAdapter::new(&mut rng, cfg.dims[k], cfg.rank, 3))
+            .collect();
+        for ad in ads.iter_mut() {
+            for v in ad.wb.data.iter_mut() {
+                *v = 0.3 * rng.normal();
+            }
+        }
+        tenant_adapters.push(ads.clone());
+        registry.publish(t, ads);
+    }
+
+    let frozen = FrozenBackbone::new(backbone.clone(), Backend::Blocked, n_tenants as usize);
+    let mut batcher = MicroBatcher::new(frozen, registry);
+    let xs: Vec<Vec<f32>> = (0..n_tenants)
+        .map(|_| (0..10).map(|_| rng.normal()).collect())
+        .collect();
+    for (t, x) in xs.iter().enumerate() {
+        batcher.submit(BatchRequest { tenant: t as u64, id: t as u64, x: x.clone(), label: None });
+    }
+    let mut out = Vec::new();
+    assert_eq!(batcher.flush(&mut out), n_tenants as usize);
+    assert_eq!(batcher.batches, 1, "exactly one shared backbone forward");
+
+    for (t, x) in xs.iter().enumerate() {
+        let mut model = backbone.clone();
+        model.topology = AdapterTopology::Skip;
+        model.skip = tenant_adapters[t].clone();
+        let mut solo = FineTuner::new(model, Method::SkipLora, Backend::Blocked, 1);
+        let want = solo.predict_alloc(&Mat::from_vec(1, 10, x.clone()));
+        for (a, b) in out[t].logits.iter().zip(want.row(0)) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "tenant {t}: batched {a} vs independent {b}"
+            );
+        }
+    }
+}
+
+/// Registry + batcher end to end: republishing ONE tenant's adapters
+/// changes that tenant's logits and nobody else's.
+#[test]
+fn republish_changes_only_that_tenant() {
+    let mut rng = Rng::new(8);
+    let cfg = tiny_cfg();
+    let backbone = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::None);
+    let registry = Arc::new(AdapterRegistry::new());
+    for t in 0..4u64 {
+        let mut ads: Vec<LoraAdapter> = (0..3)
+            .map(|k| LoraAdapter::new(&mut rng, cfg.dims[k], 2, 3))
+            .collect();
+        for ad in ads.iter_mut() {
+            ad.wb.fill(0.1 * (t as f32 + 1.0));
+        }
+        registry.publish(t, ads);
+    }
+    let frozen = FrozenBackbone::new(backbone, Backend::Blocked, 4);
+    let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+    let x: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+
+    let serve_all = |batcher: &mut MicroBatcher| -> Vec<Vec<f32>> {
+        for t in 0..4u64 {
+            batcher.submit(BatchRequest { tenant: t, id: t, x: x.clone(), label: None });
+        }
+        let mut out = Vec::new();
+        batcher.flush(&mut out);
+        out.into_iter().map(|r| r.logits).collect()
+    };
+
+    let before = serve_all(&mut batcher);
+    // hot-swap tenant 2
+    let mut new_ads: Vec<LoraAdapter> = (0..3)
+        .map(|k| LoraAdapter::new(&mut rng, cfg.dims[k], 2, 3))
+        .collect();
+    for ad in new_ads.iter_mut() {
+        ad.wb.fill(-0.7);
+    }
+    registry.publish(2, new_ads);
+    let after = serve_all(&mut batcher);
+
+    for t in 0..4usize {
+        let changed = before[t]
+            .iter()
+            .zip(&after[t])
+            .any(|(a, b)| (a - b).abs() > 1e-6);
+        if t == 2 {
+            assert!(changed, "tenant 2 must see its new adapters");
+        } else {
+            assert!(!changed, "tenant {t} must be unaffected by tenant 2's swap");
+        }
+    }
+}
