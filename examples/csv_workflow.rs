@@ -17,13 +17,14 @@ use skip2lora::data::fan::{damage, DamageKind};
 use skip2lora::method::Method;
 use skip2lora::model::io::TensorBundle;
 use skip2lora::model::mlp::AdapterTopology;
-use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
 use skip2lora::tensor::{ops::Backend, Mat};
 use skip2lora::train::trainer::pretrain;
 use skip2lora::train::{train, FineTuner, TrainConfig};
+use skip2lora::util::error::Result;
 use skip2lora::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = std::env::temp_dir().join("skip2lora_csv_workflow");
     std::fs::create_dir_all(&dir)?;
     println!("== CSV workflow (files under {}) ==\n", dir.display());
@@ -51,10 +52,10 @@ fn main() -> anyhow::Result<()> {
     save_backbone(&backbone, &path)?;
     println!("saved backbone to {} ({} bytes)", path.display(), std::fs::metadata(&path)?.len());
 
-    let mut reloaded = load_backbone(&path)?;
+    let reloaded = load_backbone(&path)?;
     let mut rng = Rng::new(2);
-    reloaded.set_topology(&mut rng, AdapterTopology::Skip);
-    let mut tuner = FineTuner::new(reloaded, Method::Skip2Lora, Backend::Blocked, 20);
+    let adapters = AdapterSet::new(&mut rng, &reloaded.config, AdapterTopology::Skip);
+    let mut tuner = FineTuner::new(reloaded, adapters, Method::Skip2Lora, Backend::Blocked, 20);
     let before = tuner.accuracy(&test);
     let out = train(&mut tuner, &fine, None, &TrainConfig { epochs: 80, lr: 0.02, ..Default::default() });
     let after = tuner.accuracy(&test);
@@ -73,7 +74,7 @@ fn main() -> anyhow::Result<()> {
 }
 
 /// Persist a 3-layer backbone into the `.s2l` named-tensor format.
-fn save_backbone(m: &Mlp, path: &Path) -> anyhow::Result<()> {
+fn save_backbone(m: &Mlp, path: &Path) -> Result<()> {
     let mut tb = TensorBundle::default();
     for (k, fc) in m.fcs.iter().enumerate() {
         tb.insert(&format!("w{}", k + 1), fc.w.clone());
@@ -90,10 +91,10 @@ fn save_backbone(m: &Mlp, path: &Path) -> anyhow::Result<()> {
 }
 
 /// Reload a `.s2l` backbone into a fresh `Mlp` (fan shape).
-fn load_backbone(path: &Path) -> anyhow::Result<Mlp> {
+fn load_backbone(path: &Path) -> Result<Mlp> {
     let tb = TensorBundle::load(path)?;
     let mut rng = Rng::new(0);
-    let mut m = Mlp::new(&mut rng, MlpConfig::fan(), AdapterTopology::None);
+    let mut m = Mlp::new(&mut rng, MlpConfig::fan());
     for k in 0..m.fcs.len() {
         let w = tb.get(&format!("w{}", k + 1)).expect("missing weight").clone();
         let b = tb.get_vec(&format!("b{}", k + 1)).expect("missing bias");

@@ -28,8 +28,9 @@ fn main() {
     for ds in DatasetId::ALL {
         let bench = ds.benchmark(cfg.seed);
         let backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
-        let mut probe = skip2lora::train::FineTuner::new(
+        let probe = skip2lora::train::FineTuner::new(
             backbone.clone(),
+            skip2lora::model::AdapterSet::none(),
             Method::FtAll,
             cfg.backend,
             cfg.batch,

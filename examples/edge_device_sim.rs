@@ -25,10 +25,15 @@ fn main() {
     println!("== edge device simulation: HAR fine-tune on a Pi Zero 2 W model ==");
     let bench = ds.benchmark(cfg.seed);
     println!("pre-training backbone on the initial subject group...");
-    let mut model = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let model = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
     let mut rng = Rng::new(9);
-    model.set_topology(&mut rng, Method::Skip2Lora.topology());
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+    let mut tuner = FineTuner::with_fresh_adapters(
+        model,
+        Method::Skip2Lora,
+        &mut rng,
+        cfg.backend,
+        cfg.batch,
+    );
 
     println!("device idle at 600 MHz... fine-tuning starts at t = 9 s (E = {epochs})");
     let t0 = std::time::Instant::now();

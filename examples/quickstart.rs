@@ -12,6 +12,7 @@
 use skip2lora::data::fan::{damage, DamageKind};
 use skip2lora::method::Method;
 use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::model::AdapterSet;
 use skip2lora::tensor::ops::Backend;
 use skip2lora::train::trainer::pretrain;
 use skip2lora::train::{train, FineTuner, TrainConfig};
@@ -43,20 +44,26 @@ fn main() {
     println!("pre-trained 256-96-96-3 backbone in {:.2}s", t0.elapsed().as_secs_f64());
 
     // 3. accuracy before adaptation
-    let mut probe = FineTuner::new(backbone.clone(), Method::FtAll, Backend::Blocked, 20);
+    let probe = FineTuner::new(
+        backbone.clone(),
+        AdapterSet::none(),
+        Method::FtAll,
+        Backend::Blocked,
+        20,
+    );
     let before = probe.accuracy(&bench.test);
     println!("accuracy on drifted test data BEFORE fine-tuning: {:.1}%", before * 100.0);
 
-    // 4. Skip2-LoRA fine-tune (adapters only, Skip-Cache active)
-    let mut model = backbone;
+    // 4. Skip2-LoRA fine-tune: the backbone stays frozen; the trainable
+    //    state is a standalone AdapterSet passed to the tuner
     let mut rng = Rng::new(2);
-    model.set_topology(&mut rng, AdapterTopology::Skip);
+    let adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
     println!(
         "skip adapters: {} trainable parameters (backbone {} frozen)",
-        model.adapter_param_count(),
-        model.backbone_param_count()
+        adapters.param_count(),
+        backbone.backbone_param_count()
     );
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 20);
+    let mut tuner = FineTuner::new(backbone, adapters, Method::Skip2Lora, Backend::Blocked, 20);
     let t0 = std::time::Instant::now();
     let out = train(
         &mut tuner,

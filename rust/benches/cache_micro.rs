@@ -61,8 +61,9 @@ fn main() {
         let data = skip2lora::data::fan::damage(0, skip2lora::data::fan::DamageKind::Holes)
             .finetune;
         // uncached (Skip-LoRA)
-        let m1 = Mlp::new(&mut rng, MlpConfig::fan(), Method::SkipLora.topology());
-        let mut plain = FineTuner::new(m1, Method::SkipLora, Backend::Blocked, 20);
+        let m1 = Mlp::new(&mut rng, MlpConfig::fan());
+        let mut plain =
+            FineTuner::with_fresh_adapters(m1, Method::SkipLora, &mut rng, Backend::Blocked, 20);
         let mut timer = PhaseTimer::new();
         let idx: Vec<usize> = (0..20).collect();
         plain.load_batch(&data, &idx);
@@ -70,8 +71,14 @@ fn main() {
             plain.forward(&mut timer);
         });
         // cached, all hits (Skip2-LoRA steady state)
-        let m2 = Mlp::new(&mut rng, MlpConfig::fan(), Method::Skip2Lora.topology());
-        let mut cached = FineTuner::new(m2, Method::Skip2Lora, Backend::Blocked, 20);
+        let m2 = Mlp::new(&mut rng, MlpConfig::fan());
+        let mut cached = FineTuner::with_fresh_adapters(
+            m2,
+            Method::Skip2Lora,
+            &mut rng,
+            Backend::Blocked,
+            20,
+        );
         let mut cache = SkipCache::new(data.len());
         cached.forward_cached(&data, &idx, &mut cache, &mut timer); // populate
         b.bench("cached forward (Skip2-LoRA, 100% hits)", || {

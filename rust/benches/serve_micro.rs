@@ -15,8 +15,7 @@ use std::sync::Arc;
 
 use skip2lora::bench::Bencher;
 use skip2lora::method::Method;
-use skip2lora::model::mlp::AdapterTopology;
-use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::registry::AdapterRegistry;
@@ -45,7 +44,9 @@ fn main() {
     let mut b = Bencher::from_env();
     let cfg = fan_cfg();
     let mut rng = Rng::new(42);
-    let backbone = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::None);
+    // ONE shared backbone for everything below — batched and independent
+    // paths alike hold the same Arc (zero weight copies)
+    let backbone = Arc::new(Mlp::new(&mut rng, cfg.clone()));
 
     let n_tenants = 512usize;
     let registry = Arc::new(AdapterRegistry::new());
@@ -85,7 +86,7 @@ fn main() {
     let mut indep_ns = Vec::new();
     for &bs in &batch_sizes {
         // batched: one shared frozen forward + bs adapter heads
-        let frozen = FrozenBackbone::new(backbone.clone(), Backend::Blocked, bs);
+        let frozen = FrozenBackbone::new(Arc::clone(&backbone), Backend::Blocked, bs);
         let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
         let mut out = Vec::with_capacity(bs);
         let mut round = 0usize;
@@ -107,19 +108,26 @@ fn main() {
         batched_ns.push(r.mean_ns);
 
         // independent: bs full per-tenant forwards (the DeviceAgent path:
-        // each tenant owns a FineTuner over backbone + its adapters)
-        let mut tuners: Vec<FineTuner> = (0..bs)
+        // each tenant's FineTuner shares the SAME backbone Arc, so even
+        // the "independent" fleet costs one set of weights in memory)
+        let tuners: Vec<FineTuner> = (0..bs)
             .map(|t| {
-                let mut m = backbone.clone();
-                m.topology = AdapterTopology::Skip;
-                m.skip = registry.snapshot(t as u64).unwrap().adapters.clone();
-                FineTuner::new(m, Method::SkipLora, Backend::Blocked, 1)
+                let adapters = AdapterSet::skip_from(
+                    registry.snapshot(t as u64).unwrap().adapters.clone(),
+                );
+                FineTuner::new(
+                    Arc::clone(&backbone),
+                    adapters,
+                    Method::SkipLora,
+                    Backend::Blocked,
+                    1,
+                )
             })
             .collect();
         let mut round2 = 0usize;
         let r = b.bench(&format!("independent  (B={bs:>2})"), || {
             let mut acc = 0usize;
-            for (i, tuner) in tuners.iter_mut().enumerate() {
+            for (i, tuner) in tuners.iter().enumerate() {
                 let x = skip2lora::tensor::Mat::from_vec(
                     1,
                     cfg.n_in(),

@@ -7,7 +7,7 @@ use crate::data::Dataset;
 use crate::device::power::ActivityLog;
 use crate::method::Method;
 use crate::model::mlp::AdapterTopology;
-use crate::model::Mlp;
+use crate::model::{AdapterSet, Mlp};
 use crate::tensor::{ops::Backend, Mat};
 use crate::train::{train, FineTuner, TrainConfig};
 use crate::util::rng::Rng;
@@ -81,12 +81,13 @@ pub struct DeviceAgent {
 impl DeviceAgent {
     /// Deploy a pre-trained backbone. Skip adapters are created here
     /// (fresh — the factory model has none).
-    pub fn new(mut backbone: Mlp, config: AgentConfig) -> Self {
+    pub fn new(backbone: Mlp, config: AgentConfig) -> Self {
         let n_classes = backbone.config.n_out();
         let mut rng = Rng::new(config.seed);
-        backbone.set_topology(&mut rng, AdapterTopology::Skip);
+        let adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
         let tuner = FineTuner::new(
             backbone,
+            adapters,
             Method::Skip2Lora,
             Backend::Blocked,
             config.batch_size,
@@ -157,7 +158,8 @@ impl DeviceAgent {
         // fresh adapters per adaptation round: LoRA portability means we
         // can discard stale adapters without touching the backbone
         let mut rng = Rng::new(self.config.seed ^ self.report.adaptations);
-        self.tuner.model.set_topology(&mut rng, AdapterTopology::Skip);
+        self.tuner.adapters =
+            AdapterSet::new(&mut rng, &self.tuner.model.config, AdapterTopology::Skip);
 
         let t0 = self.now_s();
         let cfg = TrainConfig {

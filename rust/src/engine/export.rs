@@ -5,6 +5,7 @@
 //! module is available with or without the `pjrt` feature.
 
 use crate::model::Mlp;
+use crate::nn::lora::LoraAdapter;
 
 /// Flatten a backbone's frozen parameters into the AOT order.
 pub fn export_frozen(m: &Mlp) -> Vec<Vec<f32>> {
@@ -23,11 +24,12 @@ pub fn export_frozen(m: &Mlp) -> Vec<Vec<f32>> {
     out
 }
 
-/// Flatten the skip adapters into the AOT order.
-pub fn export_lora(m: &Mlp) -> Vec<Vec<f32>> {
-    assert_eq!(m.skip.len(), 3, "skip topology required");
+/// Flatten a skip-adapter set (passed explicitly — adapters are no
+/// longer a model field) into the AOT order.
+pub fn export_lora(adapters: &[LoraAdapter]) -> Vec<Vec<f32>> {
+    assert_eq!(adapters.len(), 3, "skip topology required");
     let mut out = Vec::with_capacity(6);
-    for ad in &m.skip {
+    for ad in adapters {
         out.push(ad.wa.data.clone());
         out.push(ad.wb.data.clone());
     }
@@ -47,19 +49,21 @@ pub fn one_hot(labels: &[usize], n_classes: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::model::mlp::AdapterTopology;
-    use crate::model::MlpConfig;
+    use crate::model::{AdapterSet, MlpConfig};
     use crate::util::rng::Rng;
 
     #[test]
     fn frozen_export_order_and_sizes() {
         let mut rng = Rng::new(0);
-        let m = Mlp::new(&mut rng, MlpConfig::fan(), AdapterTopology::Skip);
+        let cfg = MlpConfig::fan();
+        let m = Mlp::new(&mut rng, cfg.clone());
+        let adapters = AdapterSet::new(&mut rng, &cfg, AdapterTopology::Skip);
         let frozen = export_frozen(&m);
         assert_eq!(frozen.len(), 14);
         assert_eq!(frozen[0].len(), 256 * 96); // w1
         assert_eq!(frozen[1].len(), 96); // b1
         assert_eq!(frozen[12].len(), 96 * 3); // w3
-        let lora = export_lora(&m);
+        let lora = export_lora(&adapters.adapters);
         assert_eq!(lora.len(), 6);
         assert_eq!(lora[0].len(), 256 * 4); // wa1
         assert_eq!(lora[1].len(), 4 * 3); // wb1

@@ -33,9 +33,14 @@ pub struct PjrtSkip2 {
 }
 
 impl PjrtSkip2 {
-    /// Wrap a pre-trained backbone (+ fresh skip adapters) for dataset
-    /// `ds` ("fan" or "har").
-    pub fn new(artifacts: &std::path::Path, ds: &str, model: &Mlp) -> Result<Self> {
+    /// Wrap a pre-trained backbone plus an explicit skip-adapter set for
+    /// dataset `ds` ("fan" or "har").
+    pub fn new(
+        artifacts: &std::path::Path,
+        ds: &str,
+        model: &Mlp,
+        adapters: &[crate::nn::lora::LoraAdapter],
+    ) -> Result<Self> {
         let rt = Runtime::open(artifacts)?;
         let (n_in, hidden, n_out) = rt.dataset_dims(ds)?;
         if model.config.dims != vec![n_in, hidden, hidden, n_out] {
@@ -47,7 +52,7 @@ impl PjrtSkip2 {
         let batch = rt.batch();
         Ok(Self {
             frozen: export_frozen(model),
-            lora: export_lora(model),
+            lora: export_lora(adapters),
             rt,
             ds: ds.to_string(),
             batch,

@@ -29,10 +29,14 @@ pub fn ablate_cache(cfg: &ExpConfig) -> Table {
         ("Skip2-LoRA, with-replacement", Method::Skip2Lora, SamplingMode::WithReplacement),
         ("Skip2-LoRA, shuffled epochs", Method::Skip2Lora, SamplingMode::Shuffled),
     ] {
-        let mut model = backbone.clone();
         let mut rng = Rng::new(cfg.seed ^ 0xAB);
-        model.set_topology(&mut rng, method.topology());
-        let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone.clone(),
+            method,
+            &mut rng,
+            cfg.backend,
+            cfg.batch,
+        );
         let tc = TrainConfig {
             epochs: fine_epochs,
             batch_size: cfg.batch,
@@ -141,10 +145,9 @@ pub fn ablate_backend(cfg: &ExpConfig) -> Table {
             let sub = ExpConfig { backend: *backend, ..cfg.clone() };
             let bench = ds.benchmark(sub.seed);
             let backbone = accuracy::pretrain_backbone(ds, &bench, &sub, 0);
-            let mut model = backbone;
             let mut rng = Rng::new(sub.seed);
-            model.set_topology(&mut rng, method.topology());
-            let mut tuner = FineTuner::new(model, method, *backend, sub.batch);
+            let mut tuner =
+                FineTuner::with_fresh_adapters(backbone, method, &mut rng, *backend, sub.batch);
             let tc = TrainConfig {
                 epochs: sub.scaled(40),
                 batch_size: sub.batch,
@@ -197,10 +200,10 @@ pub fn ablate_depth(cfg: &ExpConfig) -> Table {
         let mut times = Vec::new();
         let mut accs = Vec::new();
         for method in [Method::LoraAll, Method::SkipLora] {
-            let mut model: Mlp = backbone.clone();
+            let model: Mlp = backbone.clone();
             let mut rng = Rng::new(cfg.seed ^ depth as u64);
-            model.set_topology(&mut rng, method.topology());
-            let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+            let mut tuner =
+                FineTuner::with_fresh_adapters(model, method, &mut rng, cfg.backend, cfg.batch);
             let tc = TrainConfig {
                 epochs: cfg.scaled(80),
                 batch_size: cfg.batch,
@@ -237,9 +240,14 @@ pub fn ablate_rank(cfg: &ExpConfig) -> Table {
         let mut model = backbone0.clone();
         model.config = MlpConfig { rank, ..model.config.clone() };
         let mut rng = Rng::new(cfg.seed ^ rank as u64);
-        model.set_topology(&mut rng, Method::Skip2Lora.topology());
-        let params = model.adapter_param_count();
-        let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+        let adapters = crate::model::AdapterSet::new(
+            &mut rng,
+            &model.config,
+            Method::Skip2Lora.topology(),
+        );
+        let params = adapters.param_count();
+        let mut tuner =
+            FineTuner::new(model, adapters, Method::Skip2Lora, cfg.backend, cfg.batch);
         let tc = TrainConfig {
             epochs: cfg.scaled(100),
             batch_size: cfg.batch,
@@ -273,10 +281,14 @@ pub fn ablate_cache_size_e2e(cfg: &ExpConfig) -> Table {
         &["capacity", "hit rate", "train@batch (ms)", "test acc (%)"],
     );
     for cap in [None, Some(n), Some(n / 2), Some(n / 4), Some(n / 10)] {
-        let mut model = backbone.clone();
         let mut rng = Rng::new(cfg.seed ^ 0xCA9);
-        model.set_topology(&mut rng, Method::Skip2Lora.topology());
-        let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone.clone(),
+            Method::Skip2Lora,
+            &mut rng,
+            cfg.backend,
+            cfg.batch,
+        );
         let tc = TrainConfig {
             epochs: cfg.scaled(100),
             batch_size: cfg.batch,
@@ -315,10 +327,14 @@ pub fn sweep_epochs(cfg: &ExpConfig) -> Table {
     );
     // Skip-LoRA reference forward (uncached)
     let skip_fwd = {
-        let mut model = backbone.clone();
         let mut rng = Rng::new(cfg.seed);
-        model.set_topology(&mut rng, Method::SkipLora.topology());
-        let mut tuner = FineTuner::new(model, Method::SkipLora, cfg.backend, cfg.batch);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone.clone(),
+            Method::SkipLora,
+            &mut rng,
+            cfg.backend,
+            cfg.batch,
+        );
         let tc = TrainConfig {
             epochs: 20,
             batch_size: cfg.batch,
@@ -330,10 +346,14 @@ pub fn sweep_epochs(cfg: &ExpConfig) -> Table {
         out.timer.mean_ms_per("forward", out.batches)
     };
     for epochs in [1usize, 2, 5, 10, 30, 100] {
-        let mut model = backbone.clone();
         let mut rng = Rng::new(cfg.seed ^ epochs as u64);
-        model.set_topology(&mut rng, Method::Skip2Lora.topology());
-        let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone.clone(),
+            Method::Skip2Lora,
+            &mut rng,
+            cfg.backend,
+            cfg.batch,
+        );
         let tc = TrainConfig {
             epochs,
             batch_size: cfg.batch,

@@ -41,10 +41,14 @@ pub fn finetune_and_test(
     trial: usize,
 ) -> (f64, crate::train::TrainOutcome) {
     let (_, fine_epochs) = cfg.epochs_for(ds);
-    let mut model = backbone.clone();
     let mut rng = Rng::new(cfg.seed ^ 0xAD ^ (trial as u64) << 16);
-    model.set_topology(&mut rng, method.topology());
-    let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+    let mut tuner = FineTuner::with_fresh_adapters(
+        backbone.clone(),
+        method,
+        &mut rng,
+        cfg.backend,
+        cfg.batch,
+    );
     let tc = TrainConfig {
         epochs: fine_epochs,
         batch_size: cfg.batch,
@@ -72,7 +76,7 @@ pub fn table3(cfg: &ExpConfig) -> Table {
         for trial in 0..cfg.trials {
             let bench = ds.benchmark(cfg.seed ^ trial as u64);
             // Before: train on pre-train data, test on drifted test data
-            let mut m = pretrain(
+            let m = pretrain(
                 ds.mlp_config(),
                 &bench.pretrain,
                 epochs,
@@ -80,8 +84,9 @@ pub fn table3(cfg: &ExpConfig) -> Table {
                 cfg.seed ^ (trial as u64) << 4,
                 cfg.backend,
             );
-            let mut ft = FineTuner::new(
-                std::mem::replace(&mut m, Mlp::new(&mut Rng::new(0), ds.mlp_config(), crate::model::mlp::AdapterTopology::None)),
+            let ft = FineTuner::new(
+                m,
+                crate::model::AdapterSet::none(),
                 Method::FtAll,
                 cfg.backend,
                 cfg.batch,
@@ -96,7 +101,13 @@ pub fn table3(cfg: &ExpConfig) -> Table {
                 cfg.seed ^ (trial as u64) << 5,
                 cfg.backend,
             );
-            let mut ft2 = FineTuner::new(m2, Method::FtAll, cfg.backend, cfg.batch);
+            let ft2 = FineTuner::new(
+                m2,
+                crate::model::AdapterSet::none(),
+                Method::FtAll,
+                cfg.backend,
+                cfg.batch,
+            );
             after.push(ft2.accuracy(&bench.test) * 100.0);
         }
         t.row(vec![

@@ -38,10 +38,14 @@ pub fn fig3(cfg: &ExpConfig) -> (Vec<Curve>, String) {
         for trial in 0..cfg.trials {
             let bench = ds.benchmark(cfg.seed ^ trial as u64);
             let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, trial);
-            let mut model = backbone;
             let mut rng = Rng::new(cfg.seed ^ 0xF3 ^ trial as u64);
-            model.set_topology(&mut rng, Method::Skip2Lora.topology());
-            let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+            let mut tuner = FineTuner::with_fresh_adapters(
+                backbone,
+                Method::Skip2Lora,
+                &mut rng,
+                cfg.backend,
+                cfg.batch,
+            );
             let tc = TrainConfig {
                 epochs: fine_epochs,
                 batch_size: cfg.batch,
@@ -125,10 +129,14 @@ pub fn fig4(cfg: &ExpConfig) -> (String, Table) {
     let ds = DatasetId::Har;
     let bench = ds.benchmark(cfg.seed);
     let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
-    let mut model = backbone;
     let mut rng = Rng::new(cfg.seed ^ 0xF4);
-    model.set_topology(&mut rng, Method::Skip2Lora.topology());
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, cfg.backend, cfg.batch);
+    let mut tuner = FineTuner::with_fresh_adapters(
+        backbone,
+        Method::Skip2Lora,
+        &mut rng,
+        cfg.backend,
+        cfg.batch,
+    );
 
     // paper: E = 200 for the Fig. 4 run
     let epochs = cfg.scaled(200);

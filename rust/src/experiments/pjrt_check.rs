@@ -9,6 +9,7 @@ use crate::util::error::Result;
 use crate::engine::pjrt::{one_hot, PjrtSkip2};
 use crate::method::Method;
 use crate::model::mlp::AdapterTopology;
+use crate::model::AdapterSet;
 use crate::report::Table;
 use crate::tensor::Mat;
 use crate::train::FineTuner;
@@ -27,18 +28,25 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 pub fn verify(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
     let ds = DatasetId::Damage1;
     let bench = ds.benchmark(cfg.seed);
-    let mut backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
     let mut rng = Rng::new(cfg.seed ^ 0x93);
-    backbone.set_topology(&mut rng, AdapterTopology::Skip);
+    let mut adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
     // make adapters non-trivial so predict exercises them
-    for ad in backbone.skip.iter_mut() {
+    for ad in adapters.adapters.iter_mut() {
         for v in ad.wb.data.iter_mut() {
             *v = 0.01 * rng.normal();
         }
     }
 
-    let mut native = FineTuner::new(backbone.clone(), Method::SkipLora, cfg.backend, cfg.batch);
-    let mut pjrt = PjrtSkip2::new(artifacts, "fan", &backbone)?;
+    let backbone = std::sync::Arc::new(backbone);
+    let native = FineTuner::new(
+        std::sync::Arc::clone(&backbone),
+        adapters.clone(),
+        Method::SkipLora,
+        cfg.backend,
+        cfg.batch,
+    );
+    let mut pjrt = PjrtSkip2::new(artifacts, "fan", &backbone, &adapters.adapters)?;
 
     let mut t = Table::new(
         "PJRT ↔ native cross-check (fan model)",
@@ -69,7 +77,13 @@ pub fn verify(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
     let mut cache = crate::cache::SkipCache::new(bench.test.len());
     let mut timer = PhaseTimer::new();
     let idx: Vec<usize> = (0..b).collect();
-    let mut nat2 = FineTuner::new(backbone.clone(), Method::Skip2Lora, cfg.backend, b);
+    let mut nat2 = FineTuner::new(
+        std::sync::Arc::clone(&backbone),
+        adapters.clone(),
+        Method::Skip2Lora,
+        cfg.backend,
+        b,
+    );
     nat2.forward_cached(&bench.test, &idx, &mut cache, &mut timer);
     let mut native_x2 = Vec::new();
     let mut native_c3 = Vec::new();
@@ -89,12 +103,12 @@ pub fn verify(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
     let lr = 0.05f32;
     let pjrt_loss = pjrt.step(&xb.data, &x2, &x3, &c3, &y, lr)?;
 
-    nat2.labels.copy_from_slice(&labels);
+    nat2.labels_mut().copy_from_slice(&labels);
     let nat_loss = nat2.backward(&mut timer);
     nat2.update(lr, &mut timer);
     let d4 = (pjrt_loss - nat_loss).abs();
     t.row(vec!["skip2 step loss".into(), format!("{d4:.2e}"), verdict(d4)]);
-    let d5 = max_abs_diff(&nat2.model.skip[0].wb.data, &pjrt.lora[1]);
+    let d5 = max_abs_diff(&nat2.adapters.adapters[0].wb.data, &pjrt.lora[1]);
     t.row(vec!["updated wb1 after step".into(), format!("{d5:.2e}"), verdict(d5)]);
 
     // 5) multi-step loss trajectory agreement
@@ -117,10 +131,10 @@ pub fn verify(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
 pub fn bench(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
     let ds = DatasetId::Damage1;
     let bench_data = ds.benchmark(cfg.seed);
-    let mut backbone = accuracy::pretrain_backbone(ds, &bench_data, cfg, 0);
+    let backbone = accuracy::pretrain_backbone(ds, &bench_data, cfg, 0);
     let mut rng = Rng::new(cfg.seed);
-    backbone.set_topology(&mut rng, AdapterTopology::Skip);
-    let mut pjrt = PjrtSkip2::new(artifacts, "fan", &backbone)?;
+    let adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
+    let mut pjrt = PjrtSkip2::new(artifacts, "fan", &backbone, &adapters.adapters)?;
 
     let b = pjrt.batch;
     let nfe = bench_data.finetune.n_features();
@@ -149,7 +163,8 @@ pub fn bench(artifacts: &Path, cfg: &ExpConfig) -> Result<Table> {
     });
 
     // native comparison
-    let mut native = FineTuner::new(backbone.clone(), Method::SkipLora, cfg.backend, b);
+    let mut native =
+        FineTuner::new(backbone, adapters, Method::SkipLora, cfg.backend, b);
     let mut timer = PhaseTimer::new();
     let idx: Vec<usize> = (0..b).collect();
     native.load_batch(&bench_data.finetune, &idx);

@@ -32,10 +32,14 @@ pub fn measure_methods(ds: DatasetId, cfg: &ExpConfig) -> Vec<MethodTiming> {
 
     let mut out = Vec::new();
     for &method in Method::ALL.iter() {
-        let mut model = backbone.clone();
         let mut rng = Rng::new(cfg.seed ^ 0x77);
-        model.set_topology(&mut rng, method.topology());
-        let mut tuner = FineTuner::new(model, method, cfg.backend, cfg.batch);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone.clone(),
+            method,
+            &mut rng,
+            cfg.backend,
+            cfg.batch,
+        );
         let tc = TrainConfig {
             epochs: fine_epochs,
             batch_size: cfg.batch,
@@ -118,10 +122,14 @@ pub fn table2(cfg: &ExpConfig) -> (Table, Table) {
     let pct = |ds: DatasetId| {
         let bench = ds.benchmark(cfg.seed);
         let backbone = accuracy::pretrain_backbone(ds, &bench, cfg, 0);
-        let mut model = backbone;
         let mut rng = Rng::new(cfg.seed);
-        model.set_topology(&mut rng, Method::FtAllLora.topology());
-        let mut tuner = FineTuner::new(model, Method::FtAllLora, cfg.backend, cfg.batch);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone,
+            Method::FtAllLora,
+            &mut rng,
+            cfg.backend,
+            cfg.batch,
+        );
         let tc = TrainConfig {
             epochs: cfg.scaled(60),
             batch_size: cfg.batch,

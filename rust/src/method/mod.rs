@@ -145,6 +145,18 @@ impl Method {
         self == Method::Skip2Lora
     }
 
+    /// Does the method move ANY backbone parameter — FC weights/biases,
+    /// BN affine, or BN running statistics? Frozen-backbone methods never
+    /// take a mutable reference to the model, which is what lets any
+    /// number of fine-tune jobs share one `Arc<Mlp>` (split-state API);
+    /// backbone-training methods go through `Arc::make_mut` copy-on-write.
+    pub fn trains_backbone(self) -> bool {
+        matches!(
+            self,
+            Method::FtAll | Method::FtLast | Method::FtBias | Method::FtAllLora
+        )
+    }
+
     /// BN mode during fine-tuning: methods that train backbone parameters
     /// run BN in training mode (batch stats, stats updated); all frozen-
     /// backbone methods must freeze BN (eval mode) or cached activations
@@ -265,6 +277,25 @@ mod tests {
         let p = Method::FtAll.trainable_params(&dims, 4);
         assert_eq!(p, 256 * 96 + 96 + 96 * 96 + 96 + 96 * 3 + 3);
         assert!(Method::FtBias.trainable_params(&dims, 4) == 96 + 96 + 3);
+    }
+
+    #[test]
+    fn frozen_backbone_methods_are_shareable() {
+        // The Arc-shareable set is everything that never mutates the
+        // backbone: exactly the adapter-only methods (note: wider than
+        // the cache-compatible set, which excludes LoRA-All).
+        let frozen: Vec<_> = Method::ALL
+            .iter()
+            .filter(|m| !m.trains_backbone())
+            .map(|m| m.name())
+            .collect();
+        assert_eq!(frozen, vec!["LoRA-All", "LoRA-Last", "Skip-LoRA", "Skip2-LoRA"]);
+        // bn-train-mode methods are a subset of backbone-training ones
+        for m in Method::ALL {
+            if m.bn_train_mode() {
+                assert!(m.trains_backbone(), "{m}: BN stats are backbone state");
+            }
+        }
     }
 
     #[test]

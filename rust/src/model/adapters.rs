@@ -1,0 +1,151 @@
+//! Adapter collections — the trainable, per-deployment half of the
+//! weights/state split.
+//!
+//! Adapters are deliberately **not** a field of [`Mlp`](crate::model::Mlp):
+//! the backbone is immutable shared infrastructure (one `Arc<Mlp>` for a
+//! whole fleet), while adapters are the unit of personalization — created
+//! per tenant / per fine-tune round, passed explicitly to
+//! `train::FineTuner` (`&mut` for training) and to the serving fan-out
+//! (`&[LoraAdapter]` from a registry snapshot). This unifies what used to
+//! be two code paths: the trainer's `model.skip = adapters.clone()` and
+//! the server's adapter-head fan-out now both read the same standalone
+//! collection.
+
+use crate::model::mlp::{AdapterTopology, MlpConfig};
+use crate::nn::lora::LoraAdapter;
+use crate::util::rng::Rng;
+
+/// One adapter set: a topology plus one [`LoraAdapter`] per backbone
+/// layer (empty for `AdapterTopology::None`).
+///
+/// * `PerLayer` — adapter k parallels FC k: `N_k -> M_k` (LoRA-All /
+///   LoRA-Last / FT-All-LoRA, Fig. 1 d/e);
+/// * `Skip` — adapter k maps layer k's INPUT to the last layer's output:
+///   `N_k -> M_n` (Skip-LoRA / Skip2-LoRA, Eq. 17).
+#[derive(Clone, Debug)]
+pub struct AdapterSet {
+    pub topology: AdapterTopology,
+    /// one adapter per backbone layer (empty for `None`)
+    pub adapters: Vec<LoraAdapter>,
+}
+
+impl AdapterSet {
+    /// The empty set (FT-* methods).
+    pub fn none() -> Self {
+        Self { topology: AdapterTopology::None, adapters: Vec::new() }
+    }
+
+    /// Fresh adapters for `topology` on a backbone shaped by `config`
+    /// (the §5.2 protocol: pretrain once, fine-tune per method with
+    /// freshly initialized adapters). W_B = 0 init means a fresh set is
+    /// an exact no-op on the network function (DESIGN.md decision 4).
+    pub fn new(rng: &mut Rng, config: &MlpConfig, topology: AdapterTopology) -> Self {
+        let n = config.n_layers();
+        let rank = config.rank;
+        let n_out = config.n_out();
+        let adapters = match topology {
+            AdapterTopology::None => Vec::new(),
+            AdapterTopology::PerLayer => (0..n)
+                .map(|k| LoraAdapter::new(rng, config.dims[k], rank, config.dims[k + 1]))
+                .collect(),
+            AdapterTopology::Skip => (0..n)
+                .map(|k| LoraAdapter::new(rng, config.dims[k], rank, n_out))
+                .collect(),
+        };
+        Self { topology, adapters }
+    }
+
+    /// Wrap an existing skip-adapter vector (e.g. a registry snapshot or
+    /// a `SwapAdapters` payload) without copying topology metadata around.
+    pub fn skip_from(adapters: Vec<LoraAdapter>) -> Self {
+        Self { topology: AdapterTopology::Skip, adapters }
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    /// Trainable-parameter count (the paper's "same number of trainable
+    /// parameters" comparison between LoRA-All and Skip-LoRA).
+    pub fn param_count(&self) -> usize {
+        self.adapters.iter().map(|a| a.param_count()).sum()
+    }
+
+    /// Shape-check this set against a backbone config (the serve-side
+    /// `SwapAdapters` validation and a cheap debug assert elsewhere).
+    pub fn matches(&self, config: &MlpConfig) -> bool {
+        let n = config.n_layers();
+        match self.topology {
+            AdapterTopology::None => self.adapters.is_empty(),
+            AdapterTopology::PerLayer => {
+                self.adapters.len() == n
+                    && self.adapters.iter().enumerate().all(|(k, a)| {
+                        a.n_in() == config.dims[k] && a.n_out() == config.dims[k + 1]
+                    })
+            }
+            AdapterTopology::Skip => {
+                self.adapters.len() == n
+                    && self.adapters.iter().enumerate().all(|(k, a)| {
+                        a.n_in() == config.dims[k] && a.n_out() == config.n_out()
+                    })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_and_per_layer_shapes() {
+        let mut rng = Rng::new(1);
+        let cfg = MlpConfig::fan();
+        let a = AdapterSet::new(&mut rng, &cfg, AdapterTopology::PerLayer);
+        let b = AdapterSet::new(&mut rng, &cfg, AdapterTopology::Skip);
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 3);
+        // Paper §4.1: LoRA-All adapter k is N_k -> M_k; Skip-LoRA is
+        // N_k -> M_n. For the 256-96-96-3 model:
+        assert_eq!(a.adapters[0].n_out(), 96);
+        assert_eq!(b.adapters[0].n_out(), 3);
+        assert_eq!(b.adapters[0].n_in(), 256);
+        assert_eq!(b.adapters[1].n_in(), 96);
+        assert!(a.matches(&cfg));
+        assert!(b.matches(&cfg));
+    }
+
+    #[test]
+    fn param_counts_match_paper_formulas() {
+        let mut rng = Rng::new(2);
+        let cfg = MlpConfig::har();
+        assert_eq!(AdapterSet::none().param_count(), 0);
+        let skip = AdapterSet::new(&mut rng, &cfg, AdapterTopology::Skip);
+        // HAR skip adapters: (561+6)*4 + (96+6)*4 + (96+6)*4 params
+        assert_eq!(skip.param_count(), 4 * (561 + 6) + 4 * (96 + 6) * 2);
+    }
+
+    #[test]
+    fn matches_rejects_wrong_shapes() {
+        let mut rng = Rng::new(3);
+        let fan = MlpConfig::fan();
+        let har = MlpConfig::har();
+        let skip = AdapterSet::new(&mut rng, &fan, AdapterTopology::Skip);
+        assert!(skip.matches(&fan));
+        assert!(!skip.matches(&har));
+        let truncated = AdapterSet {
+            topology: AdapterTopology::Skip,
+            adapters: skip.adapters[..2].to_vec(),
+        };
+        assert!(!truncated.matches(&fan));
+    }
+
+    #[test]
+    fn set_is_send_sync() {
+        crate::testkit::assert_send_sync::<AdapterSet>();
+    }
+}

@@ -1,0 +1,151 @@
+//! `ExecCtx` — one thread's complete execution state for driving an
+//! [`Mlp`](crate::model::Mlp).
+//!
+//! The model holds weights, the context holds everything else: batch
+//! activation workspaces, per-layer gradient/scratch contexts
+//! (`nn::ctx`), and the loaded labels. A context is
+//!
+//! * **per-thread** — never shared; `N` workers over one `Arc<Mlp>`
+//!   allocate `N` contexts and no locks;
+//! * **reusable** — all buffers are preallocated for `capacity` rows and
+//!   survive across batches, preserving the zero-allocation-per-batch
+//!   discipline (DESIGN.md §7 L3);
+//! * **batch-capacity-aware** — drivers may run any `b <= capacity` rows
+//!   by zero-padding the tail (FC/BN-eval/ReLU are row-independent, so
+//!   padded rows are simply ignored), which is how the serving
+//!   micro-batcher flushes partial batches without reallocating.
+//!
+//! Gradient buffers inside the per-layer contexts are lazily sized on the
+//! first backward that needs them, so an inference-only context (the
+//! serving path) never allocates gradient storage at all.
+
+use crate::model::mlp::MlpConfig;
+use crate::nn::ctx::{BnCtx, FcCtx, LoraCtx};
+use crate::tensor::{ops::Backend, Mat};
+
+#[derive(Clone, Debug)]
+pub struct ExecCtx {
+    pub backend: Backend,
+    capacity: usize,
+    /// layer widths, kept for lazily growing the backward workspaces
+    dims: Vec<usize>,
+    /// x[k] = input feature map of layer k (x[0] is the batch input)
+    pub x: Vec<Mat>,
+    /// h[k] = pre-BN output of layer k (post adapter-add for PerLayer)
+    pub h: Vec<Mat>,
+    /// bn_out[k] = BN output of hidden layer k (pre-ReLU)
+    pub bn_out: Vec<Mat>,
+    /// c^n = last layer pre-adapter output (Skip topologies)
+    pub c_n: Mat,
+    /// logits after adapter sum
+    pub logits: Mat,
+    /// gradient at h[k] — empty until [`ExecCtx::ensure_backward_ws`]
+    pub gh: Vec<Mat>,
+    /// gradient at x[k] — empty until [`ExecCtx::ensure_backward_ws`]
+    pub gx: Vec<Mat>,
+    /// labels of the current batch
+    pub labels: Vec<usize>,
+    /// per-FC-layer gradient + transpose-cache contexts
+    pub fc: Vec<FcCtx>,
+    /// per-hidden-layer BN contexts
+    pub bn: Vec<BnCtx>,
+    /// per-layer adapter contexts (lazily sized; unused slots stay empty)
+    pub lora: Vec<LoraCtx>,
+}
+
+impl ExecCtx {
+    /// Allocate a context for batches of up to `capacity` rows on a
+    /// backbone shaped by `config`. Only the FORWARD workspaces are
+    /// allocated here; backward workspaces stay empty until
+    /// [`ExecCtx::ensure_backward_ws`], so an inference-only context (the
+    /// serving path) never pays for gradient storage.
+    pub fn new(config: &MlpConfig, backend: Backend, capacity: usize) -> Self {
+        assert!(capacity > 0, "batch capacity must be positive");
+        let n = config.n_layers();
+        let dims = &config.dims;
+        Self {
+            backend,
+            capacity,
+            dims: dims.clone(),
+            x: (0..n).map(|k| Mat::zeros(capacity, dims[k])).collect(),
+            h: (0..n).map(|k| Mat::zeros(capacity, dims[k + 1])).collect(),
+            bn_out: (0..n.saturating_sub(1))
+                .map(|k| Mat::zeros(capacity, dims[k + 1]))
+                .collect(),
+            c_n: Mat::zeros(capacity, dims[n]),
+            logits: Mat::zeros(capacity, dims[n]),
+            gh: (0..n).map(|_| Mat::zeros(0, 0)).collect(),
+            gx: (0..n).map(|_| Mat::zeros(0, 0)).collect(),
+            labels: vec![0; capacity],
+            fc: (0..n).map(|_| FcCtx::new()).collect(),
+            bn: (0..n.saturating_sub(1)).map(|_| BnCtx::new()).collect(),
+            lora: (0..n).map(|_| LoraCtx::new()).collect(),
+        }
+    }
+
+    /// Grow the backward workspaces `gh`/`gx` to full batch shape (no-op
+    /// once sized). Training drivers call this at construction so the hot
+    /// loop stays allocation-free; inference-only contexts never do.
+    pub fn ensure_backward_ws(&mut self) {
+        for k in 0..self.n_layers() {
+            if self.gh[k].shape() != (self.capacity, self.dims[k + 1]) {
+                self.gh[k] = Mat::zeros(self.capacity, self.dims[k + 1]);
+            }
+            if self.gx[k].shape() != (self.capacity, self.dims[k]) {
+                self.gx[k] = Mat::zeros(self.capacity, self.dims[k]);
+            }
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.x.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_follow_config() {
+        let cfg = MlpConfig::fan();
+        let mut ctx = ExecCtx::new(&cfg, Backend::Blocked, 20);
+        assert_eq!(ctx.capacity(), 20);
+        assert_eq!(ctx.n_layers(), 3);
+        assert_eq!(ctx.x[0].shape(), (20, 256));
+        assert_eq!(ctx.x[2].shape(), (20, 96));
+        assert_eq!(ctx.h[2].shape(), (20, 3));
+        assert_eq!(ctx.bn_out.len(), 2);
+        assert_eq!(ctx.c_n.shape(), (20, 3));
+        assert_eq!(ctx.fc.len(), 3);
+        assert_eq!(ctx.bn.len(), 2);
+        assert_eq!(ctx.lora.len(), 3);
+        // backward workspaces grow on demand to the full batch shape
+        ctx.ensure_backward_ws();
+        assert_eq!(ctx.gh[0].shape(), (20, 96));
+        assert_eq!(ctx.gx[0].shape(), (20, 256));
+        assert_eq!(ctx.gh[2].shape(), (20, 3));
+    }
+
+    #[test]
+    fn gradient_buffers_start_empty() {
+        // inference-only contexts never pay for gradient storage: neither
+        // the per-layer grads nor the batch-shaped gh/gx workspaces
+        let cfg = MlpConfig::fan();
+        let ctx = ExecCtx::new(&cfg, Backend::Blocked, 8);
+        assert!(ctx.fc.iter().all(|f| f.heap_floats() == 0));
+        assert!(ctx.lora.iter().all(|l| l.gwa.data.is_empty()));
+        assert!(ctx.gh.iter().all(|m| m.data.is_empty()));
+        assert!(ctx.gx.iter().all(|m| m.data.is_empty()));
+    }
+
+    #[test]
+    fn ctx_is_send() {
+        // one context per thread: Send is required, Sync deliberately not
+        crate::testkit::assert_send::<ExecCtx>();
+    }
+}

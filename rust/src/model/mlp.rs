@@ -1,25 +1,27 @@
 //! The paper's DNN: n FC layers, each hidden layer followed by BN + ReLU
-//! (Figure 1 / Table 2 layout), plus two adapter topologies:
+//! (Figure 1 / Table 2 layout).
 //!
-//! * `per_layer` adapters — LoRA-All / LoRA-Last / FT-All-LoRA (adapter k
-//!   parallels FC k: N_k -> M_k);
-//! * `skip` adapters — Skip-LoRA / Skip2-LoRA (adapter k maps layer k's
-//!   INPUT to the last layer's output: N_k -> M_n, Eq. 17).
-//!
-//! The struct holds both vectors; `crate::method` decides which are
-//! instantiated and trained. The generic n-layer structure exceeds the
-//! paper's n = 3 so tests can exercise deeper stacks.
+//! `Mlp` is the **immutable backbone half** of the weights/state split:
+//! it holds FC and BN parameters and nothing else — no activation
+//! buffers, no gradient storage, no adapter sets. It is `Send + Sync`, so
+//! one `Arc<Mlp>` is shared by the serving micro-batcher and every
+//! fine-tune worker without cloning. Per-call state lives in
+//! [`ExecCtx`](crate::model::ExecCtx); adapters live in
+//! [`AdapterSet`](crate::model::AdapterSet) and are passed explicitly.
+//! The generic n-layer structure exceeds the paper's n = 3 so tests can
+//! exercise deeper stacks.
 
+use crate::model::exec::ExecCtx;
+use crate::nn::activation;
 use crate::nn::batchnorm::BatchNorm;
 use crate::nn::fc::FcLayer;
-use crate::nn::lora::LoraAdapter;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct MlpConfig {
     /// layer widths, e.g. [256, 96, 96, 3] for the Fan model
     pub dims: Vec<usize>,
-    /// LoRA rank (paper: 4)
+    /// LoRA rank (paper: 4) — consumed by `AdapterSet`, not the backbone
     pub rank: usize,
     /// BN + ReLU after each hidden FC (paper: true)
     pub batch_norm: bool,
@@ -47,7 +49,9 @@ impl MlpConfig {
     }
 }
 
-/// Which adapter sets exist on this model instance.
+/// Which adapter topology a method attaches (see
+/// [`AdapterSet`](crate::model::AdapterSet); kept here so `method` and
+/// `model` share one definition).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdapterTopology {
     /// no adapters at all (FT-* methods)
@@ -63,15 +67,10 @@ pub struct Mlp {
     pub config: MlpConfig,
     pub fcs: Vec<FcLayer>,
     pub bns: Vec<BatchNorm>, // one per hidden layer (n_layers - 1)
-    pub topology: AdapterTopology,
-    /// per-layer adapters (PerLayer topology), len = n_layers or 0
-    pub per_layer: Vec<LoraAdapter>,
-    /// skip adapters (Skip topology), len = n_layers or 0
-    pub skip: Vec<LoraAdapter>,
 }
 
 impl Mlp {
-    pub fn new(rng: &mut Rng, config: MlpConfig, topology: AdapterTopology) -> Self {
+    pub fn new(rng: &mut Rng, config: MlpConfig) -> Self {
         let n = config.n_layers();
         let mut fcs = Vec::with_capacity(n);
         for k in 0..n {
@@ -82,74 +81,61 @@ impl Mlp {
         } else {
             Vec::new()
         };
-        let mut mlp = Self {
-            config,
-            fcs,
-            bns,
-            topology: AdapterTopology::None,
-            per_layer: Vec::new(),
-            skip: Vec::new(),
-        };
-        mlp.set_topology(rng, topology);
-        mlp
-    }
-
-    /// (Re)create adapters for the requested topology. Called when a
-    /// pre-trained backbone is repurposed for a different fine-tuning
-    /// method (the §5.2 protocol: pretrain once, fine-tune per method).
-    pub fn set_topology(&mut self, rng: &mut Rng, topology: AdapterTopology) {
-        let n = self.config.n_layers();
-        let rank = self.config.rank;
-        let n_out = self.config.n_out();
-        self.per_layer.clear();
-        self.skip.clear();
-        match topology {
-            AdapterTopology::None => {}
-            AdapterTopology::PerLayer => {
-                for k in 0..n {
-                    self.per_layer.push(LoraAdapter::new(
-                        rng,
-                        self.config.dims[k],
-                        rank,
-                        self.config.dims[k + 1],
-                    ));
-                }
-            }
-            AdapterTopology::Skip => {
-                for k in 0..n {
-                    self.skip
-                        .push(LoraAdapter::new(rng, self.config.dims[k], rank, n_out));
-                }
-            }
-        }
-        self.topology = topology;
+        Self { config, fcs, bns }
     }
 
     pub fn n_layers(&self) -> usize {
         self.config.n_layers()
     }
 
-    /// Trainable-parameter count of the adapter sets (paper's "same number
-    /// of trainable parameters" comparison between LoRA-All and Skip-LoRA).
-    pub fn adapter_param_count(&self) -> usize {
-        self.per_layer.iter().map(|a| a.param_count()).sum::<usize>()
-            + self.skip.iter().map(|a| a.param_count()).sum::<usize>()
-    }
-
     pub fn backbone_param_count(&self) -> usize {
         self.fcs.iter().map(|f| f.param_count()).sum::<usize>()
             + self.bns.iter().map(|b| b.param_count()).sum::<usize>()
+    }
+
+    /// Frozen eval forward (BN eval + ReLU, Eq. 1 per layer) over the
+    /// first `b` rows of `ctx.x[0]`, zero-padding the tail rows so the
+    /// fixed-shape kernels run without reallocation. Fills `ctx.x[1..]`
+    /// (each layer's input) and `ctx.c_n` (the pre-adapter output c^n) —
+    /// exactly the quantities the skip-adapter sum and the Skip-Cache
+    /// consume. Tenant- and thread-agnostic: any number of contexts can
+    /// drive one shared backbone concurrently.
+    ///
+    /// `FineTuner::frozen_forward_alloc` mirrors this chain with
+    /// per-layer phase timing for the Table 2 buckets — keep the two in
+    /// lockstep (including the no-BN fallback).
+    pub fn forward_frozen(&self, ctx: &mut ExecCtx, b: usize) {
+        assert!(b <= ctx.capacity(), "batch overflow");
+        assert_eq!(ctx.n_layers(), self.n_layers(), "ctx shaped for another model");
+        for row in b..ctx.capacity() {
+            ctx.x[0].row_mut(row).fill(0.0);
+        }
+        let n = self.n_layers();
+        for k in 0..n {
+            if k == n - 1 {
+                self.fcs[k].forward(ctx.backend, &ctx.x[k], &mut ctx.c_n);
+            } else {
+                self.fcs[k].forward(ctx.backend, &ctx.x[k], &mut ctx.h[k]);
+                if self.bns.is_empty() {
+                    activation::relu(&ctx.h[k], &mut ctx.x[k + 1]);
+                } else {
+                    self.bns[k].forward_eval(&ctx.h[k], &mut ctx.bn_out[k]);
+                    activation::relu(&ctx.bn_out[k], &mut ctx.x[k + 1]);
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::ops::Backend;
 
     #[test]
     fn fan_shape() {
         let mut rng = Rng::new(0);
-        let m = Mlp::new(&mut rng, MlpConfig::fan(), AdapterTopology::None);
+        let m = Mlp::new(&mut rng, MlpConfig::fan());
         assert_eq!(m.n_layers(), 3);
         assert_eq!(m.fcs[0].n_in(), 256);
         assert_eq!(m.fcs[2].n_out(), 3);
@@ -162,46 +148,65 @@ mod tests {
     }
 
     #[test]
-    fn skip_and_per_layer_have_different_shapes_same_count_when_m_matches() {
-        let mut rng = Rng::new(1);
-        let cfg = MlpConfig::fan();
-        let a = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::PerLayer);
-        let b = Mlp::new(&mut rng, cfg, AdapterTopology::Skip);
-        assert_eq!(a.per_layer.len(), 3);
-        assert_eq!(b.skip.len(), 3);
-        // Paper §4.1: LoRA-All adapter k is N_k -> M_k; Skip-LoRA is
-        // N_k -> M_n. For the 256-96-96-3 model:
-        //   LoRA-All : (256·4 + 4·96) + (96·4 + 4·96) + (96·4 + 4·3)
-        //   Skip-LoRA: (256·4 + 4·3)  + (96·4 + 4·3)  + (96·4 + 4·3)
-        assert_eq!(a.per_layer[0].n_out(), 96);
-        assert_eq!(b.skip[0].n_out(), 3);
-        assert_eq!(b.skip[0].n_in(), 256);
-        assert_eq!(b.skip[1].n_in(), 96);
+    fn backbone_is_send_sync() {
+        // THE point of the split-state redesign: one Arc<Mlp> shared by
+        // the batcher and every fine-tune worker with no clone.
+        crate::testkit::assert_send_sync::<Mlp>();
     }
 
     #[test]
-    fn set_topology_swaps_adapters() {
-        let mut rng = Rng::new(2);
-        let mut m = Mlp::new(&mut rng, MlpConfig::har(), AdapterTopology::None);
-        assert_eq!(m.adapter_param_count(), 0);
-        m.set_topology(&mut rng, AdapterTopology::Skip);
-        assert_eq!(m.skip.len(), 3);
-        assert!(m.per_layer.is_empty());
-        // HAR skip adapters: (561+6)*4 + (96+6)*4 + (96+6)*4 params
-        assert_eq!(m.adapter_param_count(), 4 * (561 + 6) + 4 * (96 + 6) * 2);
-        m.set_topology(&mut rng, AdapterTopology::PerLayer);
-        assert!(m.skip.is_empty());
-        assert_eq!(m.per_layer.len(), 3);
+    fn forward_frozen_pads_and_matches_per_row() {
+        let mut rng = Rng::new(5);
+        let cfg = MlpConfig { dims: vec![6, 5, 5, 2], rank: 2, batch_norm: true };
+        let m = Mlp::new(&mut rng, cfg.clone());
+        let mut ctx = ExecCtx::new(&cfg, Backend::Blocked, 4);
+        // load 2 rows into a 4-capacity context
+        let rows: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..6).map(|_| rng.normal()).collect())
+            .collect();
+        for (i, r) in rows.iter().enumerate() {
+            ctx.x[0].row_mut(i).copy_from_slice(r);
+        }
+        // poison the tail to prove zero-padding
+        ctx.x[0].row_mut(3).fill(7.7);
+        m.forward_frozen(&mut ctx, 2);
+        let batch_c0 = ctx.c_n.row(0).to_vec();
+        let batch_c1 = ctx.c_n.row(1).to_vec();
+
+        // single-row reference forwards
+        for (i, want) in [batch_c0, batch_c1].iter().enumerate() {
+            let mut solo = ExecCtx::new(&cfg, Backend::Blocked, 1);
+            solo.x[0].row_mut(0).copy_from_slice(&rows[i]);
+            m.forward_frozen(&mut solo, 1);
+            for (a, b) in want.iter().zip(solo.c_n.row(0)) {
+                assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]
     fn deeper_than_paper_works() {
         let mut rng = Rng::new(3);
         let cfg = MlpConfig { dims: vec![32, 16, 16, 16, 8, 5], rank: 2, batch_norm: true };
-        let m = Mlp::new(&mut rng, cfg, AdapterTopology::Skip);
+        let m = Mlp::new(&mut rng, cfg.clone());
         assert_eq!(m.n_layers(), 5);
-        assert_eq!(m.skip.len(), 5);
         assert_eq!(m.bns.len(), 4);
-        assert!(m.skip.iter().all(|a| a.n_out() == 5));
+        let mut ctx = ExecCtx::new(&cfg, Backend::Blocked, 3);
+        m.forward_frozen(&mut ctx, 3);
+        assert_eq!(ctx.c_n.shape(), (3, 5));
+    }
+
+    #[test]
+    fn forward_frozen_without_bn() {
+        let mut rng = Rng::new(4);
+        let cfg = MlpConfig { dims: vec![4, 6, 3], rank: 2, batch_norm: false };
+        let m = Mlp::new(&mut rng, cfg.clone());
+        assert!(m.bns.is_empty());
+        let mut ctx = ExecCtx::new(&cfg, Backend::Blocked, 2);
+        for j in 0..4 {
+            *ctx.x[0].at_mut(0, j) = 0.5 * j as f32;
+        }
+        m.forward_frozen(&mut ctx, 1);
+        assert!(ctx.c_n.row(0).iter().all(|v| v.is_finite()));
     }
 }

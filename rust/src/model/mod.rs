@@ -1,7 +1,17 @@
-//! Model definition: the paper's n-layer DNN with optional per-layer LoRA
-//! adapters and skip adapters.
+//! Model definition — the weights/state split.
+//!
+//! * [`mlp::Mlp`] — the immutable, `Send + Sync` backbone (FC + BN
+//!   parameters only);
+//! * [`exec::ExecCtx`] — one thread's per-call execution state
+//!   (activations, gradients, transpose caches);
+//! * [`adapters::AdapterSet`] — the trainable per-deployment adapters,
+//!   passed explicitly instead of living inside the model.
 
+pub mod adapters;
+pub mod exec;
 pub mod io;
 pub mod mlp;
 
-pub use mlp::{Mlp, MlpConfig};
+pub use adapters::AdapterSet;
+pub use exec::ExecCtx;
+pub use mlp::{AdapterTopology, Mlp, MlpConfig};

@@ -1,14 +1,20 @@
 //! Batch normalization (Ioffe & Szegedy; paper Table 2's BN1/BN2).
 //!
 //! Two modes:
-//! * **train**: batch statistics + running-stat update; saves x̂ for the
-//!   backward pass. Used during pre-training and by fine-tuning methods
-//!   that update earlier layers (FT-All, FT-Bias, LoRA-All, FT-All-LoRA).
-//! * **eval**: frozen running statistics — REQUIRED for every Skip-Cache
-//!   compatible method (the cached activations must stay valid across the
-//!   whole fine-tuning run; paper §4.2 and DESIGN.md decision 5).
+//! * **train**: batch statistics + running-stat update; saves x̂ into the
+//!   caller's [`BnCtx`] for the backward pass. Used during pre-training
+//!   and by fine-tuning methods that update earlier layers (FT-All,
+//!   FT-Bias, LoRA-All, FT-All-LoRA). Running-statistic updates are the
+//!   only reason this takes `&mut self` — they are *parameters*, not
+//!   scratch.
+//! * **eval**: frozen running statistics, `&self` throughout — REQUIRED
+//!   for every Skip-Cache compatible method (the cached activations must
+//!   stay valid across the whole fine-tuning run; paper §4.2 and
+//!   DESIGN.md decision 5). In eval form the layer is `Send + Sync` and
+//!   shareable without cloning.
 
-use crate::tensor::{ops::Backend, Mat};
+use crate::nn::ctx::BnCtx;
+use crate::tensor::Mat;
 
 #[derive(Clone, Debug)]
 pub struct BatchNorm {
@@ -18,11 +24,6 @@ pub struct BatchNorm {
     pub running_var: Vec<f32>,
     pub momentum: f32,
     pub eps: f32,
-    pub ggamma: Vec<f32>,
-    pub gbeta: Vec<f32>,
-    // saved by forward_train for the backward pass
-    xhat: Mat,
-    inv_std: Vec<f32>,
 }
 
 impl BatchNorm {
@@ -34,10 +35,6 @@ impl BatchNorm {
             running_var: vec![1.0; dim],
             momentum: 0.1,
             eps: 1e-5,
-            ggamma: vec![0.0; dim],
-            gbeta: vec![0.0; dim],
-            xhat: Mat::zeros(0, 0),
-            inv_std: vec![0.0; dim],
         }
     }
 
@@ -45,16 +42,15 @@ impl BatchNorm {
         self.gamma.len()
     }
 
-    /// Training-mode forward: y = γ·x̂ + β with batch statistics.
-    /// Matches `model._bn_train` on the jax side (same momentum, same
+    /// Training-mode forward: y = γ·x̂ + β with batch statistics, saving
+    /// x̂ / inv_std into `ctx` for [`BatchNorm::backward`]. Matches
+    /// `model._bn_train` on the jax side (same momentum, same
     /// unbiased-variance running update).
-    pub fn forward_train(&mut self, _backend: Backend, x: &Mat, y: &mut Mat) {
+    pub fn forward_train(&mut self, ctx: &mut BnCtx, x: &Mat, y: &mut Mat) {
         let (b, d) = x.shape();
         assert_eq!(d, self.dim());
         assert_eq!(y.shape(), (b, d));
-        if self.xhat.shape() != (b, d) {
-            self.xhat = Mat::zeros(b, d);
-        }
+        ctx.ensure(b, d);
         for j in 0..d {
             // batch mean/var for feature j
             let mut mu = 0.0f32;
@@ -69,10 +65,10 @@ impl BatchNorm {
             }
             var /= b as f32; // biased, used for normalization
             let inv = 1.0 / (var + self.eps).sqrt();
-            self.inv_std[j] = inv;
+            ctx.inv_std[j] = inv;
             for i in 0..b {
                 let xh = (x.at(i, j) - mu) * inv;
-                *self.xhat.at_mut(i, j) = xh;
+                *ctx.xhat.at_mut(i, j) = xh;
                 *y.at_mut(i, j) = self.gamma[j] * xh + self.beta[j];
             }
             // running stats (unbiased var), momentum update
@@ -103,13 +99,16 @@ impl BatchNorm {
         }
     }
 
-    /// Training-mode backward. Computes gγ/gβ (always — cheap) and, when
-    /// `compute_gx`, the full BN input gradient:
+    /// Training-mode backward. Computes gγ/gβ into `ctx` (always — cheap)
+    /// and, when a buffer is supplied, the full BN input gradient:
     ///
     ///   gx = (γ·inv_std / B) · (B·gy − Σgy − x̂·Σ(gy⊙x̂))
-    pub fn backward(&mut self, gy: &Mat, gx: Option<&mut Mat>) {
+    ///
+    /// `ctx` must be the context the matching `forward_train` wrote.
+    pub fn backward(&self, ctx: &mut BnCtx, gy: &Mat, gx: Option<&mut Mat>) {
         let (b, d) = gy.shape();
-        assert_eq!(self.xhat.shape(), (b, d), "backward before forward_train");
+        assert_eq!(ctx.xhat.shape(), (b, d), "backward before forward_train");
+        ctx.ensure_grads(d);
         // per-feature reductions
         let mut sum_gy = vec![0.0f32; d];
         let mut sum_gy_xhat = vec![0.0f32; d];
@@ -117,22 +116,22 @@ impl BatchNorm {
             for j in 0..d {
                 let g = gy.at(i, j);
                 sum_gy[j] += g;
-                sum_gy_xhat[j] += g * self.xhat.at(i, j);
+                sum_gy_xhat[j] += g * ctx.xhat.at(i, j);
             }
         }
         for j in 0..d {
-            self.gbeta[j] = sum_gy[j];
-            self.ggamma[j] = sum_gy_xhat[j];
+            ctx.gbeta[j] = sum_gy[j];
+            ctx.ggamma[j] = sum_gy_xhat[j];
         }
         if let Some(gx) = gx {
             assert_eq!(gx.shape(), (b, d));
             let bf = b as f32;
             for j in 0..d {
-                let k = self.gamma[j] * self.inv_std[j] / bf;
+                let k = self.gamma[j] * ctx.inv_std[j] / bf;
                 for i in 0..b {
                     let v = bf * gy.at(i, j)
                         - sum_gy[j]
-                        - self.xhat.at(i, j) * sum_gy_xhat[j];
+                        - ctx.xhat.at(i, j) * sum_gy_xhat[j];
                     *gx.at_mut(i, j) = k * v;
                 }
             }
@@ -142,7 +141,7 @@ impl BatchNorm {
     /// Eval-mode backward: BN with frozen running stats is a fixed affine
     /// map, so gx = gy · γ · inv_std(running). Used by methods that freeze
     /// BN but still propagate gradients through it (LoRA-All's hidden
-    /// adapters, TinyTL's residual chain).
+    /// adapters, TinyTL's residual chain). Stateless — needs no context.
     pub fn backward_eval(&self, gy: &Mat, gx: &mut Mat) {
         let (b, d) = gy.shape();
         assert_eq!(gx.shape(), (b, d));
@@ -154,11 +153,13 @@ impl BatchNorm {
         }
     }
 
-    /// SGD on γ/β (used by methods that train BN affine parameters).
-    pub fn update(&mut self, lr: f32) {
+    /// SGD on γ/β from the gradients in `ctx` (methods that train BN
+    /// affine parameters).
+    pub fn update(&mut self, ctx: &BnCtx, lr: f32) {
+        assert_eq!(ctx.ggamma.len(), self.dim(), "update before backward");
         for j in 0..self.dim() {
-            self.gamma[j] -= lr * self.ggamma[j];
-            self.beta[j] -= lr * self.gbeta[j];
+            self.gamma[j] -= lr * ctx.ggamma[j];
+            self.beta[j] -= lr * ctx.gbeta[j];
         }
     }
 
@@ -176,9 +177,10 @@ mod tests {
     fn train_normalizes_batch() {
         let mut rng = Rng::new(1);
         let mut bn = BatchNorm::new(4);
+        let mut ctx = BnCtx::new();
         let x = Mat::from_fn(64, 4, |_, j| rng.normal() * (j as f32 + 1.0) + j as f32);
         let mut y = Mat::zeros(64, 4);
-        bn.forward_train(Backend::Blocked, &x, &mut y);
+        bn.forward_train(&mut ctx, &x, &mut y);
         for j in 0..4 {
             let mean: f32 = (0..64).map(|i| y.at(i, j)).sum::<f32>() / 64.0;
             let var: f32 = (0..64).map(|i| (y.at(i, j) - mean).powi(2)).sum::<f32>() / 64.0;
@@ -191,11 +193,12 @@ mod tests {
     fn eval_uses_running_stats() {
         let mut rng = Rng::new(2);
         let mut bn = BatchNorm::new(3);
+        let mut ctx = BnCtx::new();
         // feed many batches so running stats converge to the distribution
         for _ in 0..500 {
             let x = Mat::from_fn(32, 3, |_, j| rng.normal() * 2.0 + 3.0 * (j as f32 + 1.0));
             let mut y = Mat::zeros(32, 3);
-            bn.forward_train(Backend::Blocked, &x, &mut y);
+            bn.forward_train(&mut ctx, &x, &mut y);
         }
         for j in 0..3 {
             assert!((bn.running_mean[j] - 3.0 * (j as f32 + 1.0)).abs() < 0.3);
@@ -210,12 +213,14 @@ mod tests {
     }
 
     #[test]
-    fn eval_is_deterministic_and_stateless() {
+    fn eval_is_deterministic_stateless_and_sync() {
+        crate::testkit::assert_send_sync::<BatchNorm>();
         let mut rng = Rng::new(3);
         let mut bn = BatchNorm::new(2);
+        let mut ctx = BnCtx::new();
         let warm = Mat::from_fn(16, 2, |_, _| rng.normal());
         let mut tmp = Mat::zeros(16, 2);
-        bn.forward_train(Backend::Blocked, &warm, &mut tmp);
+        bn.forward_train(&mut ctx, &warm, &mut tmp);
         let snapshot = (bn.running_mean.clone(), bn.running_var.clone());
 
         let x = Mat::from_fn(4, 2, |_, _| rng.normal());
@@ -234,22 +239,24 @@ mod tests {
 
         // L = 0.5 ||y||^2 through train-mode BN
         let loss = |bn: &mut BatchNorm, x: &Mat| -> f32 {
+            let mut ctx = BnCtx::new();
             let mut y = Mat::zeros(x.rows, 3);
-            bn.forward_train(Backend::Blocked, x, &mut y);
+            bn.forward_train(&mut ctx, x, &mut y);
             0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
         };
 
         let mut bn = BatchNorm::new(3);
         bn.gamma = vec![1.2, 0.8, 1.0];
         bn.beta = vec![0.1, -0.2, 0.0];
+        let mut ctx = BnCtx::new();
         let mut y = Mat::zeros(8, 3);
         {
             let mut b2 = bn.clone();
-            b2.forward_train(Backend::Blocked, &x, &mut y);
+            b2.forward_train(&mut ctx, &x, &mut y);
             bn = b2;
         }
         let mut gx = Mat::zeros(8, 3);
-        bn.backward(&y, Some(&mut gx));
+        bn.backward(&mut ctx, &y, Some(&mut gx));
 
         let eps = 1e-3f32;
         // gamma
@@ -260,9 +267,9 @@ mod tests {
             m.gamma[j] -= eps;
             let num = (loss(&mut p, &x) - loss(&mut m, &x)) / (2.0 * eps);
             assert!(
-                (num - bn.ggamma[j]).abs() < 3e-2 * (1.0 + bn.ggamma[j].abs()),
+                (num - ctx.ggamma[j]).abs() < 3e-2 * (1.0 + ctx.ggamma[j].abs()),
                 "gamma {num} vs {}",
-                bn.ggamma[j]
+                ctx.ggamma[j]
             );
         }
         // input gradient, a few entries

@@ -1,0 +1,185 @@
+//! Per-layer execution contexts — the mutable half of the split-state
+//! layer API.
+//!
+//! Layers (`FcLayer`, `BatchNorm`, `LoraAdapter`) hold **parameters
+//! only** and expose `forward(&self, ...)` / `backward(&self, ctx, ...)`;
+//! every piece of per-call mutable state — gradient accumulators, saved
+//! activations, the `Wᵀ` transpose cache — lives in one of these context
+//! structs instead. Consequences:
+//!
+//! * a frozen backbone is `Send + Sync` and can be shared as one
+//!   `Arc<Mlp>` across the serving micro-batcher and every fine-tune
+//!   worker (the ROADMAP "shareable backbone" item);
+//! * concurrency is explicit: one context per thread, zero locks, zero
+//!   interior mutability on the hot path;
+//! * buffers are sized lazily on first use, so an inference-only context
+//!   (serving) never pays for gradient storage — the old
+//!   `LoraAdapter::compact` dance is now simply how the types work.
+//!
+//! `model::ExecCtx` aggregates one context per layer plus the
+//! batch-shaped activation workspaces.
+
+use crate::tensor::Mat;
+
+/// Scratch for one [`FcLayer`](crate::nn::fc::FcLayer): gradient buffers
+/// plus the cached `Wᵀ` for the Eq. 4 frozen-backward hot path.
+#[derive(Clone, Debug, Default)]
+pub struct FcCtx {
+    /// ∂L/∂W (Eq. 2); sized on the first backward that computes it
+    pub gw: Mat,
+    /// ∂L/∂b (Eq. 3)
+    pub gb: Vec<f32>,
+    /// cached transpose of the layer's weight matrix, stamped with the
+    /// layer's weight version so an update invalidates it implicitly
+    wt: Option<Mat>,
+    wt_version: u64,
+}
+
+impl FcCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow the gradient buffers to the layer's shape (no-op once sized).
+    pub(crate) fn ensure_grads(&mut self, n_in: usize, n_out: usize) {
+        if self.gw.shape() != (n_in, n_out) {
+            self.gw = Mat::zeros(n_in, n_out);
+        }
+        if self.gb.len() != n_out {
+            self.gb = vec![0.0; n_out];
+        }
+    }
+
+    /// Cached `Wᵀ` for weight matrix `w` at `version`, recomputing when
+    /// the stamp is stale. The version comes from
+    /// [`FcLayer::weight_version`](crate::nn::fc::FcLayer::weight_version):
+    /// frozen layers (the fine-tuning common case) pay the transpose once
+    /// per context, trained layers never hit this path.
+    pub(crate) fn wt_for(&mut self, w: &Mat, version: u64) -> &Mat {
+        if self.wt.is_none() || self.wt_version != version {
+            self.wt = Some(w.transposed());
+            self.wt_version = version;
+        }
+        self.wt.as_ref().unwrap()
+    }
+
+    /// Heap floats currently held (tests / footprint diagnostics).
+    pub fn heap_floats(&self) -> usize {
+        self.gw.data.len()
+            + self.gb.len()
+            + self.wt.as_ref().map_or(0, |m| m.data.len())
+    }
+}
+
+/// Scratch for one [`BatchNorm`](crate::nn::batchnorm::BatchNorm):
+/// affine-parameter gradients plus the batch statistics saved by the
+/// training-mode forward for the backward pass.
+#[derive(Clone, Debug, Default)]
+pub struct BnCtx {
+    pub ggamma: Vec<f32>,
+    pub gbeta: Vec<f32>,
+    /// normalized activations x̂ saved by `forward_train`
+    pub(crate) xhat: Mat,
+    pub(crate) inv_std: Vec<f32>,
+}
+
+impl BnCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn ensure(&mut self, batch: usize, dim: usize) {
+        if self.xhat.shape() != (batch, dim) {
+            self.xhat = Mat::zeros(batch, dim);
+        }
+        if self.inv_std.len() != dim {
+            self.inv_std = vec![0.0; dim];
+        }
+    }
+
+    pub(crate) fn ensure_grads(&mut self, dim: usize) {
+        if self.ggamma.len() != dim {
+            self.ggamma = vec![0.0; dim];
+        }
+        if self.gbeta.len() != dim {
+            self.gbeta = vec![0.0; dim];
+        }
+    }
+}
+
+/// Scratch for one [`LoraAdapter`](crate::nn::lora::LoraAdapter):
+/// gradient accumulators and the Eq. 7/11 intermediates. Everything is
+/// sized lazily, so an adapter published to a serving registry carries
+/// no training state at all — the snapshot footprint is exactly
+/// `param_count()` floats and training after a publish re-grows the
+/// buffers transparently.
+#[derive(Clone, Debug, Default)]
+pub struct LoraCtx {
+    pub gwa: Mat,
+    pub gwb: Mat,
+    /// saved y_A from the last forward (needed by Eq. 10)
+    pub(crate) ya: Mat,
+    /// gx_B workspace (Eq. 11)
+    pub(crate) gxb: Mat,
+}
+
+impl LoraCtx {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn ensure_ws(&mut self, batch: usize, rank: usize) {
+        if self.ya.shape() != (batch, rank) {
+            self.ya = Mat::zeros(batch, rank);
+            self.gxb = Mat::zeros(batch, rank);
+        }
+    }
+
+    pub(crate) fn ensure_grads(&mut self, n_in: usize, rank: usize, n_out: usize) {
+        if self.gwa.shape() != (n_in, rank) {
+            self.gwa = Mat::zeros(n_in, rank);
+        }
+        if self.gwb.shape() != (rank, n_out) {
+            self.gwb = Mat::zeros(rank, n_out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contexts_start_empty() {
+        let fc = FcCtx::new();
+        assert_eq!(fc.heap_floats(), 0);
+        let lora = LoraCtx::new();
+        assert_eq!(lora.gwa.data.len() + lora.gwb.data.len(), 0);
+        let bn = BnCtx::new();
+        assert!(bn.ggamma.is_empty());
+    }
+
+    #[test]
+    fn ensure_grads_is_idempotent() {
+        let mut fc = FcCtx::new();
+        fc.ensure_grads(4, 3);
+        fc.gw.fill(7.0);
+        fc.ensure_grads(4, 3); // same shape: buffer (and contents) kept
+        assert!(fc.gw.data.iter().all(|&v| v == 7.0));
+        fc.ensure_grads(5, 3); // new shape: re-allocated
+        assert_eq!(fc.gw.shape(), (5, 3));
+    }
+
+    #[test]
+    fn wt_cache_tracks_weight_version() {
+        let mut fc = FcCtx::new();
+        let mut w = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let t0 = fc.wt_for(&w, 0).clone();
+        assert_eq!(t0.shape(), (3, 2));
+        // same version: cached copy returned even if w changed silently
+        *w.at_mut(0, 0) = 99.0;
+        assert_eq!(fc.wt_for(&w, 0), &t0);
+        // bumped version: recomputed
+        assert_eq!(fc.wt_for(&w, 1).at(0, 0), 99.0);
+    }
+}

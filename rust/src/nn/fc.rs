@@ -1,25 +1,25 @@
 //! Fully-connected layer (paper §2, Eq. 1-6).
 
 use crate::nn::compute_type::FcComputeType;
+use crate::nn::ctx::FcCtx;
 use crate::tensor::{ops, ops::Backend, Mat};
 use crate::util::rng::Rng;
 
-/// FC layer `y = x·W + b` with gradient buffers.
+/// FC layer `y = x·W + b` — an immutable parameter holder.
 ///
-/// Gradient buffers are owned by the layer and preallocated so the training
-/// hot loop never allocates (DESIGN.md §7 L3).
+/// All mutable per-call state (gradient buffers, the cached `Wᵀ` for the
+/// Eq. 4 backward hot path) lives in a caller-supplied [`FcCtx`], so the
+/// layer itself is `Send + Sync` and a frozen backbone can be shared
+/// across threads without cloning (DESIGN.md §2 execution model).
 #[derive(Clone, Debug)]
 pub struct FcLayer {
-    pub w: Mat,        // (n_in, n_out)
-    pub b: Vec<f32>,   // n_out
-    pub gw: Mat,
-    pub gb: Vec<f32>,
-    /// Cached Wᵀ for the Eq. 4 hot path: `gx = gy·Wᵀ` as a row-major
-    /// matmul vectorizes (axpy form), while the fused A·Bᵀ kernel is a
-    /// strict FP dot-reduction the compiler cannot reorder. Invalidated
-    /// by `update` (frozen layers — the common fine-tuning case — pay the
-    /// transpose exactly once). See EXPERIMENTS.md §Perf L3 iteration 2.
-    wt: std::cell::RefCell<Option<Mat>>,
+    pub w: Mat,      // (n_in, n_out)
+    pub b: Vec<f32>, // n_out
+    /// Bumped on every weight update; contexts stamp their cached `Wᵀ`
+    /// with this so updates invalidate the transpose implicitly. Code
+    /// that mutates `w` directly (tests, weight loading) should call
+    /// [`FcLayer::touch_weights`].
+    version: u64,
 }
 
 impl FcLayer {
@@ -27,25 +27,13 @@ impl FcLayer {
     pub fn new(rng: &mut Rng, n_in: usize, n_out: usize) -> Self {
         let lim = (6.0f32 / n_in as f32).sqrt();
         let w = Mat::from_fn(n_in, n_out, |_, _| rng.uniform(-lim, lim));
-        Self {
-            w,
-            b: vec![0.0; n_out],
-            gw: Mat::zeros(n_in, n_out),
-            gb: vec![0.0; n_out],
-            wt: std::cell::RefCell::new(None),
-        }
+        Self { w, b: vec![0.0; n_out], version: 0 }
     }
 
     pub fn from_weights(w: Mat, b: Vec<f32>) -> Self {
-        let (n_in, n_out) = w.shape();
+        let (_, n_out) = w.shape();
         assert_eq!(b.len(), n_out);
-        Self {
-            w,
-            b,
-            gw: Mat::zeros(n_in, n_out),
-            gb: vec![0.0; n_out],
-            wt: std::cell::RefCell::new(None),
-        }
+        Self { w, b, version: 0 }
     }
 
     pub fn n_in(&self) -> usize {
@@ -56,26 +44,44 @@ impl FcLayer {
         self.w.cols
     }
 
-    /// Eq. 1 (pre-activation): y = x·W + b.
+    /// Monotone stamp of the weight matrix, used by [`FcCtx`] to keep its
+    /// transpose cache coherent.
+    pub fn weight_version(&self) -> u64 {
+        self.version
+    }
+
+    /// Declare an out-of-band weight mutation (weight loading, tests):
+    /// invalidates every context's cached `Wᵀ` on next use.
+    pub fn touch_weights(&mut self) {
+        self.version += 1;
+    }
+
+    /// Eq. 1 (pre-activation): y = x·W + b. Pure read of the parameters —
+    /// needs no context.
     pub fn forward(&self, backend: Backend, x: &Mat, y: &mut Mat) {
         ops::matmul_bias(backend, x, &self.w, &self.b, y);
     }
 
-    /// Eq. 2-4, gated by the compute type. `gx` is written only when the
-    /// compute type propagates (and a buffer is supplied).
+    /// Eq. 2-4, gated by the compute type. Gradients land in `ctx`; `gx`
+    /// is written only when the compute type propagates (and a buffer is
+    /// supplied).
     pub fn backward(
-        &mut self,
+        &self,
+        ctx: &mut FcCtx,
         backend: Backend,
         ct: FcComputeType,
         x: &Mat,
         gy: &Mat,
         gx: Option<&mut Mat>,
     ) {
+        if ct.computes_gw() || ct.computes_gb() {
+            ctx.ensure_grads(self.n_in(), self.n_out());
+        }
         if ct.computes_gw() {
-            ops::matmul_at_b(backend, x, gy, &mut self.gw); // Eq. 2
+            ops::matmul_at_b(backend, x, gy, &mut ctx.gw); // Eq. 2
         }
         if ct.computes_gb() {
-            ops::col_sums(gy, &mut self.gb); // Eq. 3
+            ops::col_sums(gy, &mut ctx.gb); // Eq. 3
         }
         if ct.computes_gx() {
             let gx = gx.expect("compute type requires gx buffer");
@@ -84,25 +90,25 @@ impl FcLayer {
             // invalidate the cache every step, so they use the fused
             // A·Bᵀ kernel directly.
             if backend == Backend::Blocked && !ct.computes_gw() {
-                let mut wt = self.wt.borrow_mut();
-                if wt.is_none() {
-                    *wt = Some(self.w.transposed());
-                }
-                ops::matmul_blocked(gy, wt.as_ref().unwrap(), gx);
+                let wt = ctx.wt_for(&self.w, self.version);
+                ops::matmul_blocked(gy, wt, gx);
             } else {
                 ops::matmul_a_bt(backend, gy, &self.w, gx);
             }
         }
     }
 
-    /// Eq. 5-6 for whichever parameters the compute type trains.
-    pub fn update(&mut self, ct: FcComputeType, lr: f32) {
+    /// Eq. 5-6 for whichever parameters the compute type trains, reading
+    /// the gradients accumulated in `ctx` by [`FcLayer::backward`].
+    pub fn update(&mut self, ctx: &FcCtx, ct: FcComputeType, lr: f32) {
         if ct.computes_gw() {
-            ops::sgd_step(&mut self.w.data, &self.gw.data, lr);
-            self.wt.replace(None); // weights moved: transpose cache stale
+            assert_eq!(ctx.gw.shape(), self.w.shape(), "update before backward");
+            ops::sgd_step(&mut self.w.data, &ctx.gw.data, lr);
+            self.version += 1; // weights moved: transpose caches stale
         }
         if ct.computes_gb() {
-            ops::sgd_step(&mut self.b, &self.gb, lr);
+            assert_eq!(ctx.gb.len(), self.b.len(), "update before backward");
+            ops::sgd_step(&mut self.b, &ctx.gb, lr);
         }
     }
 
@@ -133,15 +139,21 @@ mod tests {
     }
 
     #[test]
+    fn layer_is_send_sync() {
+        crate::testkit::assert_send_sync::<FcLayer>();
+    }
+
+    #[test]
     fn backward_matches_finite_difference() {
         let mut rng = Rng::new(10);
-        let mut layer = FcLayer::new(&mut rng, 5, 4);
+        let layer = FcLayer::new(&mut rng, 5, 4);
+        let mut ctx = FcCtx::new();
         let x = Mat::from_fn(3, 5, |_, _| rng.normal());
         // gy for L = 0.5||y||^2 is y itself
         let mut y = Mat::zeros(3, 4);
         layer.forward(Backend::Scalar, &x, &mut y);
         let mut gx = Mat::zeros(3, 5);
-        layer.backward(Backend::Scalar, FcComputeType::Ywbx, &x, &y, Some(&mut gx));
+        layer.backward(&mut ctx, Backend::Scalar, FcComputeType::Ywbx, &x, &y, Some(&mut gx));
 
         let eps = 1e-3f32;
         // check a few weight entries
@@ -151,7 +163,7 @@ mod tests {
             let mut lm = layer.clone();
             *lm.w.at_mut(i, j) -= eps;
             let num = (finite_diff_loss(&lp, &x) - finite_diff_loss(&lm, &x)) / (2.0 * eps);
-            let ana = layer.gw.at(i, j);
+            let ana = ctx.gw.at(i, j);
             assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "{num} vs {ana}");
         }
         // bias entry
@@ -160,39 +172,76 @@ mod tests {
         let mut lm = layer.clone();
         lm.b[2] -= eps;
         let num = (finite_diff_loss(&lp, &x) - finite_diff_loss(&lm, &x)) / (2.0 * eps);
-        assert!((num - layer.gb[2]).abs() < 2e-2 * (1.0 + layer.gb[2].abs()));
+        assert!((num - ctx.gb[2]).abs() < 2e-2 * (1.0 + ctx.gb[2].abs()));
     }
 
     #[test]
     fn compute_type_gates_gradients() {
         let mut rng = Rng::new(11);
-        let mut layer = FcLayer::new(&mut rng, 4, 3);
+        let layer = FcLayer::new(&mut rng, 4, 3);
+        let mut ctx = FcCtx::new();
         let x = Mat::from_fn(2, 4, |_, _| rng.normal());
         let gy = Mat::from_fn(2, 3, |_, _| rng.normal());
 
-        layer.gw.fill(9.0);
-        layer.gb.iter_mut().for_each(|v| *v = 9.0);
-        layer.backward(Backend::Blocked, FcComputeType::Yb, &x, &gy, None);
+        ctx.ensure_grads(4, 3);
+        ctx.gw.fill(9.0);
+        ctx.gb.iter_mut().for_each(|v| *v = 9.0);
+        layer.backward(&mut ctx, Backend::Blocked, FcComputeType::Yb, &x, &gy, None);
         // gw untouched (still the sentinel), gb overwritten
-        assert!(layer.gw.data.iter().all(|&v| v == 9.0));
-        assert!(layer.gb.iter().any(|&v| v != 9.0));
+        assert!(ctx.gw.data.iter().all(|&v| v == 9.0));
+        assert!(ctx.gb.iter().any(|&v| v != 9.0));
     }
 
     #[test]
     fn update_only_trained_params() {
         let mut rng = Rng::new(12);
         let mut layer = FcLayer::new(&mut rng, 3, 2);
+        let mut ctx = FcCtx::new();
         let w0 = layer.w.clone();
         let b0 = layer.b.clone();
-        layer.gw.fill(1.0);
-        layer.gb.iter_mut().for_each(|v| *v = 1.0);
+        ctx.ensure_grads(3, 2);
+        ctx.gw.fill(1.0);
+        ctx.gb.iter_mut().for_each(|v| *v = 1.0);
 
-        layer.update(FcComputeType::Yx, 0.1); // frozen: nothing moves
+        layer.update(&ctx, FcComputeType::Yx, 0.1); // frozen: nothing moves
         assert_eq!(layer.w, w0);
         assert_eq!(layer.b, b0);
+        assert_eq!(layer.weight_version(), 0);
 
-        layer.update(FcComputeType::Yb, 0.1); // bias only
+        layer.update(&ctx, FcComputeType::Yb, 0.1); // bias only
         assert_eq!(layer.w, w0);
         assert!(layer.b.iter().zip(&b0).all(|(a, b)| (a - (b - 0.1)).abs() < 1e-6));
+        assert_eq!(layer.weight_version(), 0, "bias update leaves Wᵀ valid");
+
+        layer.update(&ctx, FcComputeType::Ywb, 0.1);
+        assert_eq!(layer.weight_version(), 1, "weight update invalidates Wᵀ");
+    }
+
+    #[test]
+    fn frozen_backward_uses_fresh_transpose_after_update() {
+        // the stale-Wᵀ regression the version stamp exists to prevent:
+        // train a layer (Ywb), then freeze it (Yx) — the frozen backward
+        // must see the POST-update weights.
+        let mut rng = Rng::new(13);
+        let mut layer = FcLayer::new(&mut rng, 4, 3);
+        let mut ctx = FcCtx::new();
+        let x = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let gy = Mat::from_fn(2, 3, |_, _| rng.normal());
+
+        // populate the transpose cache on the frozen path
+        let mut gx0 = Mat::zeros(2, 4);
+        layer.backward(&mut ctx, Backend::Blocked, FcComputeType::Yx, &x, &gy, Some(&mut gx0));
+        // train step moves the weights
+        layer.backward(&mut ctx, Backend::Blocked, FcComputeType::Ywb, &x, &gy, None);
+        layer.update(&ctx, FcComputeType::Ywb, 0.5);
+        // frozen backward again: must match the uncached oracle kernel
+        let mut gx1 = Mat::zeros(2, 4);
+        layer.backward(&mut ctx, Backend::Blocked, FcComputeType::Yx, &x, &gy, Some(&mut gx1));
+        let mut want = Mat::zeros(2, 4);
+        ops::matmul_a_bt(Backend::Scalar, &gy, &layer.w, &mut want);
+        for (a, b) in gx1.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        assert_ne!(gx0, gx1, "update must change the propagated gradient");
     }
 }

@@ -1,12 +1,21 @@
 //! LoRA adapter (paper §2, Eq. 7-16).
 //!
-//! One adapter holds `W_A (N×R)`, `W_B (R×M)`. In LoRA-All/LoRA-Last the
-//! adapter is attached in parallel to its own layer (N = layer input,
-//! M = layer output). In Skip-LoRA the *same struct* is attached from layer
-//! k's input to the LAST layer's output (M = n_out of the network) —
-//! the topology difference lives in `crate::method`, not here.
+//! One adapter holds `W_A (N×R)`, `W_B (R×M)` — and **nothing else**. In
+//! LoRA-All/LoRA-Last the adapter is attached in parallel to its own
+//! layer (N = layer input, M = layer output). In Skip-LoRA the *same
+//! struct* is attached from layer k's input to the LAST layer's output
+//! (M = n_out of the network) — the topology difference lives in
+//! `crate::model::AdapterSet` / `crate::method`, not here.
+//!
+//! Training scratch (gradients, the saved `y_A`, the `gx_B` workspace)
+//! lives in a caller-supplied [`LoraCtx`], so a published adapter's heap
+//! footprint is exactly `param_count()` floats: the serving registry
+//! stores inference weights only, by construction rather than via a
+//! `compact()` call, and a fine-tune on a freshly published adapter grows
+//! its context buffers lazily on the first backward.
 
 use crate::nn::compute_type::LoraComputeType;
+use crate::nn::ctx::LoraCtx;
 use crate::tensor::{ops, ops::Backend, Mat};
 use crate::util::rng::Rng;
 
@@ -14,12 +23,6 @@ use crate::util::rng::Rng;
 pub struct LoraAdapter {
     pub wa: Mat, // (n_in, rank)
     pub wb: Mat, // (rank, n_out)
-    pub gwa: Mat,
-    pub gwb: Mat,
-    /// saved y_A from the last forward (needed by Eq. 10)
-    ya: Mat,
-    /// gx_B workspace (Eq. 11)
-    gxb: Mat,
 }
 
 impl LoraAdapter {
@@ -30,10 +33,6 @@ impl LoraAdapter {
         Self {
             wa: Mat::from_fn(n_in, rank, |_, _| rng.normal() * std),
             wb: Mat::zeros(rank, n_out),
-            gwa: Mat::zeros(n_in, rank),
-            gwb: Mat::zeros(rank, n_out),
-            ya: Mat::zeros(0, 0),
-            gxb: Mat::zeros(0, 0),
         }
     }
 
@@ -49,44 +48,18 @@ impl LoraAdapter {
         self.wb.cols
     }
 
-    fn ensure_ws(&mut self, batch: usize) {
-        if self.ya.rows != batch {
-            self.ya = Mat::zeros(batch, self.rank());
-            self.gxb = Mat::zeros(batch, self.rank());
-        }
-    }
-
-    fn ensure_grads(&mut self) {
-        if self.gwa.rows != self.n_in() {
-            self.gwa = Mat::zeros(self.n_in(), self.rank());
-        }
-        if self.gwb.rows != self.rank() {
-            self.gwb = Mat::zeros(self.rank(), self.n_out());
-        }
-    }
-
-    /// Drop gradient and forward workspaces, keeping only the inference
-    /// weights (W_A, W_B). Used before publishing to a serving registry so
-    /// a snapshot's heap footprint is exactly `param_count()` floats;
-    /// training on a compacted adapter re-grows the buffers lazily.
-    pub fn compact(&mut self) {
-        self.gwa = Mat::zeros(0, 0);
-        self.gwb = Mat::zeros(0, 0);
-        self.ya = Mat::zeros(0, 0);
-        self.gxb = Mat::zeros(0, 0);
-    }
-
-    /// Eq. 7-9: y += (x·W_A)·W_B, saving y_A for the backward pass.
-    pub fn forward_accumulate(&mut self, backend: Backend, x: &Mat, y: &mut Mat) {
+    /// Eq. 7-9: y += (x·W_A)·W_B, saving y_A into `ctx` for the backward
+    /// pass. The adapter itself is read-only.
+    pub fn forward_accumulate(&self, ctx: &mut LoraCtx, backend: Backend, x: &Mat, y: &mut Mat) {
         assert_eq!(x.cols, self.n_in());
         assert_eq!(y.cols, self.n_out());
-        self.ensure_ws(x.rows);
-        ops::matmul(backend, x, &self.wa, &mut self.ya); // Eq. 7
+        ctx.ensure_ws(x.rows, self.rank());
+        ops::matmul(backend, x, &self.wa, &mut ctx.ya); // Eq. 7
         // y += ya · wb  (Eq. 8-9) — accumulate without a temp
         let m = self.n_out();
         let r = self.rank();
         for i in 0..x.rows {
-            let yarow = self.ya.row(i);
+            let yarow = ctx.ya.row(i);
             let yrow = y.row_mut(i);
             for rr in 0..r {
                 let a = yarow[rr];
@@ -101,11 +74,14 @@ impl LoraAdapter {
         }
     }
 
-    /// Eq. 10-14, gated by compute type. Accumulates `gx += gx_A` when the
-    /// type propagates (LoRA_ywx), so the parallel-adapter topology can sum
-    /// the FC and adapter contributions (Eq. 14).
+    /// Eq. 10-14, gated by compute type. Gradients land in `ctx` (which
+    /// must have seen the matching `forward_accumulate`). Accumulates
+    /// `gx += gx_A` when the type propagates (LoRA_ywx), so the
+    /// parallel-adapter topology can sum the FC and adapter contributions
+    /// (Eq. 14).
     pub fn backward(
-        &mut self,
+        &self,
+        ctx: &mut LoraCtx,
         backend: Backend,
         ct: LoraComputeType,
         x: &Mat,
@@ -115,17 +91,17 @@ impl LoraAdapter {
         if !ct.present() {
             return;
         }
-        self.ensure_ws(x.rows);
-        self.ensure_grads();
-        ops::matmul_at_b(backend, &self.ya, gy, &mut self.gwb); // Eq. 10
-        ops::matmul_a_bt(backend, gy, &self.wb, &mut self.gxb); // Eq. 11
-        ops::matmul_at_b(backend, x, &self.gxb, &mut self.gwa); // Eq. 12
+        ctx.ensure_ws(x.rows, self.rank());
+        ctx.ensure_grads(self.n_in(), self.rank(), self.n_out());
+        ops::matmul_at_b(backend, &ctx.ya, gy, &mut ctx.gwb); // Eq. 10
+        ops::matmul_a_bt(backend, gy, &self.wb, &mut ctx.gxb); // Eq. 11
+        ops::matmul_at_b(backend, x, &ctx.gxb, &mut ctx.gwa); // Eq. 12
         if ct.computes_gx() {
             let gx = gx_accum.expect("LoRA_ywx requires a gx buffer");
             // Eq. 13-14: gx += gx_B · W_Aᵀ, accumulated row-wise.
             let n = self.n_in();
             for i in 0..x.rows {
-                let gxbrow = self.gxb.row(i);
+                let gxbrow = ctx.gxb.row(i);
                 let gxrow = gx.row_mut(i);
                 for rr in 0..self.rank() {
                     let g = gxbrow[rr];
@@ -141,12 +117,16 @@ impl LoraAdapter {
         }
     }
 
-    /// Eq. 15-16.
-    pub fn update(&mut self, lr: f32) {
-        ops::sgd_step(&mut self.wa.data, &self.gwa.data, lr);
-        ops::sgd_step(&mut self.wb.data, &self.gwb.data, lr);
+    /// Eq. 15-16, reading the gradients accumulated in `ctx`.
+    pub fn update(&mut self, ctx: &LoraCtx, lr: f32) {
+        assert_eq!(ctx.gwa.shape(), self.wa.shape(), "update before backward");
+        ops::sgd_step(&mut self.wa.data, &ctx.gwa.data, lr);
+        ops::sgd_step(&mut self.wb.data, &ctx.gwb.data, lr);
     }
 
+    /// Also the adapter's exact heap footprint in floats: the struct is
+    /// weights-only (enforced structurally by the size_of assertion in
+    /// the tests), so published registry snapshots carry nothing else.
     pub fn param_count(&self) -> usize {
         self.wa.data.len() + self.wb.data.len()
     }
@@ -156,21 +136,40 @@ impl LoraAdapter {
 mod tests {
     use super::*;
 
-    fn loss(ad: &mut LoraAdapter, x: &Mat) -> f32 {
+    fn loss(ad: &LoraAdapter, x: &Mat) -> f32 {
+        let mut ctx = LoraCtx::new();
         let mut y = Mat::zeros(x.rows, ad.n_out());
-        ad.forward_accumulate(Backend::Scalar, x, &mut y);
+        ad.forward_accumulate(&mut ctx, Backend::Scalar, x, &mut y);
         0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
     }
 
     #[test]
     fn fresh_adapter_is_noop() {
         let mut rng = Rng::new(0);
-        let mut ad = LoraAdapter::new(&mut rng, 8, 4, 3);
+        let ad = LoraAdapter::new(&mut rng, 8, 4, 3);
+        let mut ctx = LoraCtx::new();
         let x = Mat::from_fn(5, 8, |_, _| rng.normal());
         let mut y = Mat::from_fn(5, 3, |_, _| 1.5);
         let y0 = y.clone();
-        ad.forward_accumulate(Backend::Blocked, &x, &mut y);
+        ad.forward_accumulate(&mut ctx, Backend::Blocked, &x, &mut y);
         assert_eq!(y, y0); // W_B = 0 => delta = 0
+    }
+
+    #[test]
+    fn adapter_is_send_sync_and_weights_only() {
+        crate::testkit::assert_send_sync::<LoraAdapter>();
+        let mut rng = Rng::new(9);
+        let ad = LoraAdapter::new(&mut rng, 6, 2, 4);
+        assert_eq!(ad.param_count(), 6 * 2 + 2 * 4);
+        // the serving-registry footprint guarantee, structurally: the
+        // adapter is exactly two matrices — re-adding any training-state
+        // field (grads, saved activations) fails this at compile-eval
+        // time rather than silently bloating every published snapshot
+        assert_eq!(
+            std::mem::size_of::<LoraAdapter>(),
+            2 * std::mem::size_of::<crate::tensor::Mat>(),
+            "LoraAdapter must stay weights-only (wa + wb)"
+        );
     }
 
     #[test]
@@ -178,9 +177,10 @@ mod tests {
         let mut rng = Rng::new(1);
         let mut ad = LoraAdapter::new(&mut rng, 6, 2, 4);
         ad.wb = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let mut ctx = LoraCtx::new();
         let x = Mat::from_fn(3, 6, |_, _| rng.normal());
         let mut y = Mat::zeros(3, 4);
-        ad.forward_accumulate(Backend::Blocked, &x, &mut y);
+        ad.forward_accumulate(&mut ctx, Backend::Blocked, &x, &mut y);
 
         let mut ya = Mat::zeros(3, 2);
         ops::matmul_naive(&x, &ad.wa, &mut ya);
@@ -196,12 +196,13 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut ad = LoraAdapter::new(&mut rng, 5, 3, 2);
         ad.wb = Mat::from_fn(3, 2, |_, _| rng.normal());
+        let mut ctx = LoraCtx::new();
         let x = Mat::from_fn(4, 5, |_, _| rng.normal());
 
         let mut y = Mat::zeros(4, 2);
-        ad.forward_accumulate(Backend::Scalar, &x, &mut y);
-        ad.backward(Backend::Scalar, LoraComputeType::Yw, &x, &y, None);
-        let (gwa, gwb) = (ad.gwa.clone(), ad.gwb.clone());
+        ad.forward_accumulate(&mut ctx, Backend::Scalar, &x, &mut y);
+        ad.backward(&mut ctx, Backend::Scalar, LoraComputeType::Yw, &x, &y, None);
+        let (gwa, gwb) = (ctx.gwa.clone(), ctx.gwb.clone());
 
         let eps = 1e-3f32;
         for &(i, j) in &[(0usize, 0usize), (4, 2), (2, 1)] {
@@ -209,7 +210,7 @@ mod tests {
             *p.wa.at_mut(i, j) += eps;
             let mut m = ad.clone();
             *m.wa.at_mut(i, j) -= eps;
-            let num = (loss(&mut p, &x) - loss(&mut m, &x)) / (2.0 * eps);
+            let num = (loss(&p, &x) - loss(&m, &x)) / (2.0 * eps);
             let ana = gwa.at(i, j);
             assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "wa {num} vs {ana}");
         }
@@ -218,7 +219,7 @@ mod tests {
             *p.wb.at_mut(i, j) += eps;
             let mut m = ad.clone();
             *m.wb.at_mut(i, j) -= eps;
-            let num = (loss(&mut p, &x) - loss(&mut m, &x)) / (2.0 * eps);
+            let num = (loss(&p, &x) - loss(&m, &x)) / (2.0 * eps);
             let ana = gwb.at(i, j);
             assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "wb {num} vs {ana}");
         }
@@ -229,53 +230,57 @@ mod tests {
         let mut rng = Rng::new(3);
         let mut ad = LoraAdapter::new(&mut rng, 4, 2, 3);
         ad.wb = Mat::from_fn(2, 3, |_, _| rng.normal());
+        let mut ctx = LoraCtx::new();
         let x = Mat::from_fn(2, 4, |_, _| rng.normal());
         let gy = Mat::from_fn(2, 3, |_, _| rng.normal());
         let mut y = Mat::zeros(2, 3);
-        ad.forward_accumulate(Backend::Scalar, &x, &mut y);
+        ad.forward_accumulate(&mut ctx, Backend::Scalar, &x, &mut y);
 
         let mut gx = Mat::from_fn(2, 4, |_, _| 0.25);
         let gx0 = gx.clone();
-        ad.backward(Backend::Scalar, LoraComputeType::Yw, &x, &gy, Some(&mut gx));
+        ad.backward(&mut ctx, Backend::Scalar, LoraComputeType::Yw, &x, &gy, Some(&mut gx));
         assert_eq!(gx, gx0, "Yw must not touch gx");
 
-        ad.backward(Backend::Scalar, LoraComputeType::Ywx, &x, &gy, Some(&mut gx));
+        ad.backward(&mut ctx, Backend::Scalar, LoraComputeType::Ywx, &x, &gy, Some(&mut gx));
         assert_ne!(gx, gx0, "Ywx must accumulate into gx");
     }
 
     #[test]
-    fn compact_preserves_inference_and_regrows_for_training() {
+    fn fresh_context_reproduces_training_state() {
+        // the lazy re-grow contract: a context built from nothing (e.g.
+        // after a registry publish round-trip) yields identical gradients
+        // to the context that has lived alongside the adapter all along.
         let mut rng = Rng::new(5);
         let mut ad = LoraAdapter::new(&mut rng, 6, 2, 4);
         ad.wb = Mat::from_fn(2, 4, |_, _| rng.normal());
         let x = Mat::from_fn(3, 6, |_, _| rng.normal());
         let gy = Mat::from_fn(3, 4, |_, _| rng.normal());
 
-        let mut reference = ad.clone();
+        let mut warm = LoraCtx::new();
         let mut y_ref = Mat::zeros(3, 4);
-        reference.forward_accumulate(Backend::Scalar, &x, &mut y_ref);
-        reference.backward(Backend::Scalar, LoraComputeType::Yw, &x, &gy, None);
+        ad.forward_accumulate(&mut warm, Backend::Scalar, &x, &mut y_ref);
+        ad.backward(&mut warm, Backend::Scalar, LoraComputeType::Yw, &x, &gy, None);
 
-        ad.compact();
-        assert_eq!(ad.gwa.data.len(), 0);
+        let mut cold = LoraCtx::new();
         let mut y = Mat::zeros(3, 4);
-        ad.forward_accumulate(Backend::Scalar, &x, &mut y);
-        assert_eq!(y, y_ref, "compacted adapter serves identically");
-        // training re-grows the gradient buffers and matches
-        ad.backward(Backend::Scalar, LoraComputeType::Yw, &x, &gy, None);
-        assert_eq!(ad.gwa, reference.gwa);
-        assert_eq!(ad.gwb, reference.gwb);
+        ad.forward_accumulate(&mut cold, Backend::Scalar, &x, &mut y);
+        assert_eq!(y, y_ref, "weights-only adapter serves identically");
+        ad.backward(&mut cold, Backend::Scalar, LoraComputeType::Yw, &x, &gy, None);
+        assert_eq!(cold.gwa, warm.gwa);
+        assert_eq!(cold.gwb, warm.gwb);
     }
 
     #[test]
     fn update_moves_both_matrices() {
         let mut rng = Rng::new(4);
         let mut ad = LoraAdapter::new(&mut rng, 3, 2, 2);
-        ad.gwa.fill(1.0);
-        ad.gwb.fill(1.0);
+        let mut ctx = LoraCtx::new();
+        ctx.ensure_grads(3, 2, 2);
+        ctx.gwa.fill(1.0);
+        ctx.gwb.fill(1.0);
         let wa0 = ad.wa.clone();
         let wb0 = ad.wb.clone();
-        ad.update(0.5);
+        ad.update(&ctx, 0.5);
         assert!(ad.wa.data.iter().zip(&wa0.data).all(|(a, b)| (a - (b - 0.5)).abs() < 1e-6));
         assert!(ad.wb.data.iter().zip(&wb0.data).all(|(a, b)| (a - (b - 0.5)).abs() < 1e-6));
     }

@@ -4,13 +4,20 @@
 //! taxonomy of Table 1: each layer's backward pass computes only the
 //! gradients its compute type requires, which is where every fine-tuning
 //! method's cost profile comes from.
+//!
+//! Layers follow the **split-state API** (DESIGN.md §2 execution model):
+//! a layer struct holds parameters only and is `Send + Sync`; all
+//! per-call scratch — gradients, saved activations, transpose caches —
+//! lives in the per-thread contexts of [`ctx`].
 
 pub mod activation;
 pub mod batchnorm;
 pub mod compute_type;
+pub mod ctx;
 pub mod fc;
 pub mod loss;
 pub mod lora;
 pub mod tinytl;
 
 pub use compute_type::{FcComputeType, LoraComputeType};
+pub use ctx::{BnCtx, FcCtx, LoraCtx};

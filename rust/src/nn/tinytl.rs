@@ -16,6 +16,8 @@
 //! BatchNorm (the paper also evaluates a BN variant), plus trainable
 //! biases everywhere and a trainable classifier head.
 
+use crate::nn::compute_type::FcComputeType;
+use crate::nn::ctx::FcCtx;
 use crate::nn::fc::FcLayer;
 use crate::tensor::{ops, ops::Backend, Mat};
 use crate::util::rng::Rng;
@@ -37,6 +39,11 @@ pub struct LiteResidual {
     pub w1: FcLayer, // dim_in -> width
     pub w2: FcLayer, // width -> dim_out
     pub norm: ResidualNorm,
+    // gradient contexts for the two FC layers (the branch is trained
+    // every step, so unlike the shared backbone there is nothing to gain
+    // from splitting them out of the struct)
+    ctx1: FcCtx,
+    ctx2: FcCtx,
     // normalization state saved by forward for backward
     h_pre: Mat,   // pre-norm activations
     h_norm: Mat,  // post-norm, pre-ReLU
@@ -64,6 +71,8 @@ impl LiteResidual {
                 fc
             },
             norm,
+            ctx1: FcCtx::new(),
+            ctx2: FcCtx::new(),
             h_pre: Mat::zeros(0, 0),
             h_norm: Mat::zeros(0, 0),
             h_act: Mat::zeros(0, 0),
@@ -184,12 +193,14 @@ impl LiteResidual {
     ) {
         let (b, _) = x.shape();
         let w = self.width();
+        self.ctx1.ensure_grads(self.w1.n_in(), w);
+        self.ctx2.ensure_grads(w, self.w2.n_out());
         // gh_act = gy · w2ᵀ
         let mut gh = Mat::zeros(b, w);
         ops::matmul_a_bt(backend, gy, &self.w2.w, &mut gh);
         // w2 grads
-        ops::matmul_at_b(backend, &self.h_act, gy, &mut self.w2.gw);
-        ops::col_sums(gy, &mut self.w2.gb);
+        ops::matmul_at_b(backend, &self.h_act, gy, &mut self.ctx2.gw);
+        ops::col_sums(gy, &mut self.ctx2.gb);
         // ReLU backward
         for (g, &a) in gh.data.iter_mut().zip(&self.h_act.data) {
             if a <= 0.0 {
@@ -221,8 +232,8 @@ impl LiteResidual {
             }
         }
         // w1 grads + gx
-        ops::matmul_at_b(backend, x, &gh, &mut self.w1.gw);
-        ops::col_sums(&gh, &mut self.w1.gb);
+        ops::matmul_at_b(backend, x, &gh, &mut self.ctx1.gw);
+        ops::col_sums(&gh, &mut self.ctx1.gb);
         if let Some(gx) = gx_accum {
             let mut gxb = Mat::zeros(b, x.cols);
             ops::matmul_a_bt(backend, &gh, &self.w1.w, &mut gxb);
@@ -231,10 +242,8 @@ impl LiteResidual {
     }
 
     pub fn update(&mut self, lr: f32) {
-        ops::sgd_step(&mut self.w1.w.data, &self.w1.gw.data, lr);
-        ops::sgd_step(&mut self.w1.b, &self.w1.gb, lr);
-        ops::sgd_step(&mut self.w2.w.data, &self.w2.gw.data, lr);
-        ops::sgd_step(&mut self.w2.b, &self.w2.gb, lr);
+        self.w1.update(&self.ctx1, FcComputeType::Ywbx, lr);
+        self.w2.update(&self.ctx2, FcComputeType::Ywbx, lr);
     }
 
     pub fn param_count(&self) -> usize {

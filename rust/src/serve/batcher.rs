@@ -13,30 +13,38 @@
 //! serving-side mirror of the paper's training-side cache argument: the
 //! frozen computation is shared, only the tiny personalized part fans out.
 //!
-//! `FrozenBackbone` keeps the preallocated-workspace discipline of
-//! `train::FineTuner`: all activations live in matrices sized for the
-//! batch capacity, and a partial flush zero-pads the tail rows instead of
-//! reallocating (FC/BN-eval/ReLU are row-independent, so padded rows are
-//! simply ignored).
+//! `FrozenBackbone` is an `Arc<Mlp>` (THE shared backbone — the same
+//! pointer the fine-tune jobs train against) plus one
+//! [`ExecCtx`](crate::model::ExecCtx) of preallocated batch workspaces:
+//! all activations live in matrices sized for the batch capacity, and a
+//! partial flush zero-pads the tail rows instead of reallocating
+//! (FC/BN-eval/ReLU are row-independent, so padded rows are simply
+//! ignored).
+//!
+//! A lone request never waits indefinitely: [`MicroBatcher::pump`] flushes
+//! when the batch fills OR when the oldest queued request has aged past a
+//! configurable pump-count deadline.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::model::Mlp;
-use crate::nn::activation;
+use crate::model::{ExecCtx, Mlp};
 use crate::nn::lora::LoraAdapter;
 use crate::serve::registry::{AdapterRegistry, TenantId};
-use crate::tensor::{ops::Backend, Mat};
+use crate::tensor::ops::Backend;
 
 /// Largest supported adapter rank for the stack-allocated head buffer.
 /// `FleetServer::validate_adapters` rejects `SwapAdapters` requests above
 /// this, so an oversized set can never reach the serving loop's assert.
 pub const MAX_RANK: usize = 32;
 
+/// Default [`MicroBatcher`] flush deadline, in pump ticks.
+pub const DEFAULT_FLUSH_DEADLINE: u64 = 2;
+
 /// Apply a tenant's skip-adapter set to one request row:
-/// `y += Σ_k (x^k · W_A_k) · W_B_k`. Read-only on the adapters (unlike
-/// `LoraAdapter::forward_accumulate`, which saves training workspaces), so
-/// any number of rows can fan out from one immutable registry snapshot.
+/// `y += Σ_k (x^k · W_A_k) · W_B_k`. Read-only on the adapters (which
+/// hold weights and nothing else), so any number of rows can fan out from
+/// one immutable registry snapshot.
 pub fn apply_skip_adapters_row(adapters: &[LoraAdapter], xs: &[&[f32]], y: &mut [f32]) {
     assert_eq!(adapters.len(), xs.len(), "one adapter per backbone layer");
     let mut ya = [0.0f32; MAX_RANK];
@@ -79,50 +87,31 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// The shared frozen backbone with preallocated batch workspaces.
+/// The shared frozen backbone plus one thread's batch workspaces.
 pub struct FrozenBackbone {
-    model: Mlp,
-    backend: Backend,
-    capacity: usize,
-    /// x[k] = input of layer k for the whole batch (x[0] = request rows)
-    x: Vec<Mat>,
-    /// pre-BN layer outputs (hidden layers)
-    h: Vec<Mat>,
-    /// post-BN pre-ReLU (hidden layers)
-    bn_out: Vec<Mat>,
-    /// last layer's pre-adapter output c^n
-    c_n: Mat,
+    model: Arc<Mlp>,
+    ctx: ExecCtx,
 }
 
 impl FrozenBackbone {
     /// Wrap a frozen backbone for micro-batches of up to `capacity` rows.
-    /// Adapters on the model (if any) are ignored — per-tenant adapters
-    /// come from the registry at flush time.
-    pub fn new(model: Mlp, backend: Backend, capacity: usize) -> Self {
-        assert!(capacity > 0, "batch capacity must be positive");
+    /// Accepts the shared `Arc<Mlp>` directly — wrapping never copies the
+    /// weights.
+    pub fn new(model: impl Into<Arc<Mlp>>, backend: Backend, capacity: usize) -> Self {
+        let model: Arc<Mlp> = model.into();
+        // the serve stack's FINE-TUNE path (FineTuner's hidden-layer loop)
+        // requires the paper's BN backbone; reject a no-BN model here, up
+        // front, rather than panicking inside every adaptation job
         assert!(
             model.config.batch_norm,
             "serve path assumes the paper's BN backbone"
         );
-        let n = model.n_layers();
-        let dims = model.config.dims.clone();
-        let x = (0..n).map(|k| Mat::zeros(capacity, dims[k])).collect();
-        let h = (0..n - 1).map(|k| Mat::zeros(capacity, dims[k + 1])).collect();
-        let bn_out = (0..n - 1).map(|k| Mat::zeros(capacity, dims[k + 1])).collect();
-        let c_n = Mat::zeros(capacity, dims[n]);
-        Self {
-            model,
-            backend,
-            capacity,
-            x,
-            h,
-            bn_out,
-            c_n,
-        }
+        let ctx = ExecCtx::new(&model.config, backend, capacity);
+        Self { model, ctx }
     }
 
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.ctx.capacity()
     }
 
     pub fn n_in(&self) -> usize {
@@ -141,41 +130,33 @@ impl FrozenBackbone {
         &self.model
     }
 
+    /// The shared handle (for asserting pointer identity with the
+    /// fine-tune jobs' backbone in tests).
+    pub fn shared_model(&self) -> &Arc<Mlp> {
+        &self.model
+    }
+
     /// Copy one request into batch row `row`.
     pub fn load_row(&mut self, row: usize, x: &[f32]) {
-        self.x[0].row_mut(row).copy_from_slice(x);
+        self.ctx.x[0].row_mut(row).copy_from_slice(x);
     }
 
     /// Frozen eval forward (BN eval + ReLU) over the first `b` loaded
     /// rows; the tail rows are zero-padded so the fixed-shape kernels can
     /// run without reallocation.
     pub fn forward(&mut self, b: usize) {
-        assert!(b <= self.capacity, "batch overflow");
-        for row in b..self.capacity {
-            self.x[0].row_mut(row).fill(0.0);
-        }
-        let n = self.model.n_layers();
-        for k in 0..n {
-            if k == n - 1 {
-                self.model.fcs[k].forward(self.backend, &self.x[k], &mut self.c_n);
-            } else {
-                self.model.fcs[k].forward(self.backend, &self.x[k], &mut self.h[k]);
-                self.model.bns[k].forward_eval(&self.h[k], &mut self.bn_out[k]);
-                let (bo, xn) = (&self.bn_out[k], &mut self.x[k + 1]);
-                activation::relu(bo, xn);
-            }
-        }
+        self.model.forward_frozen(&mut self.ctx, b);
     }
 
     /// Per-layer activation rows for request `row` (inputs x^1..x^n) —
     /// exactly what the tenant's skip adapters consume.
     pub fn activations_row(&self, row: usize) -> Vec<&[f32]> {
-        self.x.iter().map(|m| m.row(row)).collect()
+        self.ctx.x.iter().map(|m| m.row(row)).collect()
     }
 
     /// Pre-adapter output row c^n for request `row`.
     pub fn c_n_row(&self, row: usize) -> &[f32] {
-        self.c_n.row(row)
+        self.ctx.c_n.row(row)
     }
 }
 
@@ -209,7 +190,11 @@ pub struct BatchResponse {
 pub struct MicroBatcher {
     backbone: FrozenBackbone,
     registry: Arc<AdapterRegistry>,
-    queue: VecDeque<BatchRequest>,
+    /// (request, pump tick at enqueue) — the tick drives the deadline
+    queue: VecDeque<(BatchRequest, u64)>,
+    /// flush when the oldest request has waited this many pump ticks
+    deadline_pumps: u64,
+    pump_count: u64,
     /// total micro-batches flushed
     pub batches: u64,
     /// total rows served
@@ -218,10 +203,24 @@ pub struct MicroBatcher {
 
 impl MicroBatcher {
     pub fn new(backbone: FrozenBackbone, registry: Arc<AdapterRegistry>) -> Self {
+        Self::with_deadline(backbone, registry, DEFAULT_FLUSH_DEADLINE)
+    }
+
+    /// `deadline_pumps` = 1 flushes on every pump with a non-empty queue
+    /// (maximum latency-greed); larger values trade a bounded wait for
+    /// better cross-tenant coalescing.
+    pub fn with_deadline(
+        backbone: FrozenBackbone,
+        registry: Arc<AdapterRegistry>,
+        deadline_pumps: u64,
+    ) -> Self {
+        assert!(deadline_pumps > 0, "a zero deadline would never flush");
         Self {
             backbone,
             registry,
             queue: VecDeque::new(),
+            deadline_pumps,
+            pump_count: 0,
             batches: 0,
             rows: 0,
         }
@@ -243,20 +242,45 @@ impl MicroBatcher {
         self.queue.len()
     }
 
+    /// The shared backbone handle (pointer-identity checks in tests).
+    pub fn shared_model(&self) -> &Arc<Mlp> {
+        self.backbone.shared_model()
+    }
+
     /// Queue a request for the next flush.
     pub fn submit(&mut self, req: BatchRequest) {
         assert_eq!(req.x.len(), self.backbone.n_in(), "request width mismatch");
-        self.queue.push_back(req);
+        self.queue.push_back((req, self.pump_count));
     }
 
-    /// Serve up to `capacity` queued requests with ONE backbone forward.
-    /// Appends a response per request to `out`; returns the batch size.
+    /// Deadline-aware flush: serve a micro-batch only when the queue has
+    /// filled to capacity, or the oldest queued request has waited at
+    /// least `deadline_pumps` pump ticks — so a lone request is served
+    /// within a bounded number of pumps instead of waiting for a full
+    /// batch that may never form. Returns the rows served (possibly 0).
+    pub fn pump(&mut self, out: &mut Vec<BatchResponse>) -> usize {
+        self.pump_count += 1;
+        let Some(&(_, oldest)) = self.queue.front() else {
+            return 0;
+        };
+        let full = self.queue.len() >= self.backbone.capacity();
+        let expired = self.pump_count.saturating_sub(oldest) >= self.deadline_pumps;
+        if full || expired {
+            self.flush(out)
+        } else {
+            0
+        }
+    }
+
+    /// Unconditional flush: serve up to `capacity` queued requests with
+    /// ONE backbone forward. Appends a response per request to `out`;
+    /// returns the batch size.
     pub fn flush(&mut self, out: &mut Vec<BatchResponse>) -> usize {
         let b = self.queue.len().min(self.backbone.capacity());
         if b == 0 {
             return 0;
         }
-        let reqs: Vec<BatchRequest> = self.queue.drain(..b).collect();
+        let reqs: Vec<BatchRequest> = self.queue.drain(..b).map(|(r, _)| r).collect();
         for (row, r) in reqs.iter().enumerate() {
             self.backbone.load_row(row, &r.x);
         }
@@ -307,8 +331,8 @@ impl MicroBatcher {
 mod tests {
     use super::*;
     use crate::method::Method;
-    use crate::model::mlp::AdapterTopology;
-    use crate::model::MlpConfig;
+    use crate::model::{AdapterSet, MlpConfig};
+    use crate::tensor::Mat;
     use crate::train::FineTuner;
     use crate::util::rng::Rng;
 
@@ -328,7 +352,7 @@ mod tests {
         // one tenant's logits must be identical whether its request rides
         // in a full cross-tenant batch or runs alone
         let mut rng = Rng::new(0);
-        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let backbone = Arc::new(Mlp::new(&mut rng, cfg()));
         let registry = Arc::new(AdapterRegistry::new());
         // 5 tenants with distinct non-trivial adapters
         for t in 0..5u64 {
@@ -345,7 +369,7 @@ mod tests {
             }
             registry.publish(t, ads);
         }
-        let fb = FrozenBackbone::new(backbone.clone(), Backend::Blocked, 8);
+        let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Blocked, 8);
         let mut batcher = MicroBatcher::new(fb, Arc::clone(&registry));
 
         let xs: Vec<Vec<f32>> = (0..5)
@@ -377,10 +401,11 @@ mod tests {
 
     #[test]
     fn matches_finetuner_predict_per_tenant() {
-        // cross-check against the training-side inference path: assemble
-        // backbone + tenant adapters into an Mlp and compare logits
+        // cross-check against the training-side inference path: ONE
+        // shared Arc<Mlp> drives both the batcher and every per-tenant
+        // FineTuner — no backbone clone anywhere
         let mut rng = Rng::new(1);
-        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let backbone = Arc::new(Mlp::new(&mut rng, cfg()));
         let registry = Arc::new(AdapterRegistry::new());
         let mut per_tenant: Vec<Vec<LoraAdapter>> = Vec::new();
         for t in 0..4u64 {
@@ -395,7 +420,7 @@ mod tests {
             per_tenant.push(ads.clone());
             registry.publish(t, ads);
         }
-        let fb = FrozenBackbone::new(backbone.clone(), Backend::Blocked, 4);
+        let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Blocked, 4);
         let mut batcher = MicroBatcher::new(fb, registry);
         let xs: Vec<Vec<f32>> = (0..4)
             .map(|_| (0..6).map(|_| rng.normal()).collect())
@@ -407,19 +432,23 @@ mod tests {
         batcher.flush(&mut out);
 
         for (t, x) in xs.iter().enumerate() {
-            let mut model = backbone.clone();
-            model.topology = AdapterTopology::Skip;
-            model.skip = per_tenant[t].clone();
-            let mut tuner = FineTuner::new(model, Method::SkipLora, Backend::Blocked, 1);
+            let tuner = FineTuner::new(
+                Arc::clone(&backbone),
+                AdapterSet::skip_from(per_tenant[t].clone()),
+                Method::SkipLora,
+                Backend::Blocked,
+                1,
+            );
             let logits = tuner.predict_alloc(&Mat::from_vec(1, 6, x.clone()));
             close(&out[t].logits, logits.row(0), 1e-4);
+            assert!(Arc::ptr_eq(batcher.shared_model(), &tuner.model));
         }
     }
 
     #[test]
     fn partial_batches_and_unknown_tenants() {
         let mut rng = Rng::new(2);
-        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let backbone = Mlp::new(&mut rng, cfg());
         let registry = Arc::new(AdapterRegistry::new());
         let fb = FrozenBackbone::new(backbone, Backend::Blocked, 8);
         let mut batcher = MicroBatcher::new(fb, registry);
@@ -436,7 +465,7 @@ mod tests {
     #[test]
     fn flush_all_splits_into_capacity_batches() {
         let mut rng = Rng::new(3);
-        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let backbone = Mlp::new(&mut rng, cfg());
         let registry = Arc::new(AdapterRegistry::new());
         let fb = FrozenBackbone::new(backbone, Backend::Blocked, 4);
         let mut batcher = MicroBatcher::new(fb, registry);
@@ -456,7 +485,7 @@ mod tests {
         // W_B = 0 init => published-but-untrained adapters must not change
         // predictions vs the bare backbone
         let mut rng = Rng::new(4);
-        let backbone = Mlp::new(&mut rng, cfg(), AdapterTopology::None);
+        let backbone = Mlp::new(&mut rng, cfg());
         let registry = Arc::new(AdapterRegistry::new());
         let ads: Vec<LoraAdapter> = (0..3)
             .map(|k| LoraAdapter::new(&mut rng, cfg().dims[k], 2, 3))
@@ -472,5 +501,42 @@ mod tests {
         assert!(out[0].adapter_version > 0);
         assert_eq!(out[1].adapter_version, 0);
         close(&out[0].logits, &out[1].logits, 1e-7);
+    }
+
+    #[test]
+    fn lone_request_flushes_at_the_deadline_not_before() {
+        let mut rng = Rng::new(5);
+        let backbone = Mlp::new(&mut rng, cfg());
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 8);
+        let mut batcher = MicroBatcher::with_deadline(fb, registry, 3);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        batcher.submit(BatchRequest { tenant: 1, id: 1, x, label: None });
+
+        let mut out = Vec::new();
+        // pumps 1 and 2: the lone request is younger than the deadline
+        assert_eq!(batcher.pump(&mut out), 0);
+        assert_eq!(batcher.pump(&mut out), 0);
+        // pump 3: age reaches the deadline -> served despite batch of 1
+        assert_eq!(batcher.pump(&mut out), 1);
+        assert_eq!(out.len(), 1);
+        assert_eq!(batcher.pending(), 0);
+        // empty queue: pumps are free no-ops
+        assert_eq!(batcher.pump(&mut out), 0);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately_regardless_of_deadline() {
+        let mut rng = Rng::new(6);
+        let backbone = Mlp::new(&mut rng, cfg());
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 4);
+        let mut batcher = MicroBatcher::with_deadline(fb, registry, 1_000_000);
+        for i in 0..4u64 {
+            let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            batcher.submit(BatchRequest { tenant: i, id: i, x, label: None });
+        }
+        let mut out = Vec::new();
+        assert_eq!(batcher.pump(&mut out), 4, "capacity reached: no waiting");
     }
 }

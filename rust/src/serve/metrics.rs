@@ -109,6 +109,8 @@ pub struct ServeMetrics {
     pub feedbacks: u64,
     pub swaps: u64,
     pub adaptations: u64,
+    /// fine-tune jobs that panicked and were isolated (`catch_unwind`)
+    pub finetune_panics: u64,
     pub batches: u64,
     pub batched_rows: u64,
     /// Skip-Cache hits/misses across fine-tune jobs — the §4.2 reuse win:
@@ -127,6 +129,7 @@ impl Default for ServeMetrics {
             feedbacks: 0,
             swaps: 0,
             adaptations: 0,
+            finetune_panics: 0,
             batches: 0,
             batched_rows: 0,
             finetune_cache_hits: 0,
@@ -178,7 +181,7 @@ impl ServeMetrics {
     /// Multi-line human report.
     pub fn report(&self) -> String {
         format!(
-            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes, {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n",
+            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n",
             self.predicts,
             self.feedbacks,
             self.swaps,
@@ -188,6 +191,7 @@ impl ServeMetrics {
             self.throughput_rps(),
             self.batch_forward.summary(),
             self.adaptations,
+            self.finetune_panics,
             self.finetune.summary(),
             self.finetune_cache_hit_rate() * 100.0,
             self.finetune_cache_hits,

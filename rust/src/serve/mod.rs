@@ -17,8 +17,15 @@
 //!   backbone is frozen (§4.2); only overwritten buffer slots miss
 //!   (`SkipCache::invalidate`).
 //!
-//! Background fine-tunes run on a work-stealing [`scheduler::WorkerPool`];
-//! [`metrics`] tracks latency histograms and throughput.
+//! Background fine-tunes run on a work-stealing [`scheduler::WorkerPool`]
+//! with panic isolation (a crashing job is counted and its tenant
+//! restored, never stranded); [`metrics`] tracks latency histograms and
+//! throughput. The whole subsystem holds exactly ONE `Arc<Mlp>`: the
+//! split-state layer API (DESIGN.md §2.1) makes the backbone `Sync`, so
+//! the batcher and every fine-tune job read the same weights with zero
+//! clones, and a lone request is served within
+//! `ServeConfig::flush_deadline_pumps` pumps instead of waiting for a
+//! full micro-batch.
 //!
 //! ## Quickstart
 //!

@@ -23,6 +23,18 @@ struct Shared {
     submitted: AtomicU64,
     executed: AtomicU64,
     steals: AtomicU64,
+    panics: AtomicU64,
+}
+
+/// Run one job with panic isolation: a panicking job is counted and
+/// swallowed so the worker thread survives and `executed` still
+/// advances (otherwise `pending()` would never reach zero and
+/// `wait_idle` would hang forever).
+fn run_job(sh: &Shared, job: Job) {
+    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+        sh.panics.fetch_add(1, Ordering::SeqCst);
+    }
+    sh.executed.fetch_add(1, Ordering::SeqCst);
 }
 
 impl std::fmt::Debug for WorkerPool {
@@ -40,6 +52,8 @@ pub struct PoolStats {
     pub submitted: u64,
     pub executed: u64,
     pub steals: u64,
+    /// jobs that panicked (isolated; the worker thread survives)
+    pub panics: u64,
 }
 
 pub struct WorkerPool {
@@ -57,6 +71,7 @@ impl WorkerPool {
             submitted: AtomicU64::new(0),
             executed: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
@@ -115,6 +130,7 @@ impl WorkerPool {
             submitted: self.shared.submitted.load(Ordering::SeqCst),
             executed: self.shared.executed.load(Ordering::SeqCst),
             steals: self.shared.steals.load(Ordering::SeqCst),
+            panics: self.shared.panics.load(Ordering::SeqCst),
         }
     }
 
@@ -147,8 +163,7 @@ fn worker_loop(sh: &Shared, me: usize) {
             .expect("worker queue poisoned")
             .pop_front();
         if let Some(job) = local {
-            job();
-            sh.executed.fetch_add(1, Ordering::SeqCst);
+            run_job(sh, job);
             continue;
         }
         // idle: steal the oldest job from a sibling's back
@@ -166,8 +181,7 @@ fn worker_loop(sh: &Shared, me: usize) {
         }
         if let Some(job) = stolen {
             sh.steals.fetch_add(1, Ordering::SeqCst);
-            job();
-            sh.executed.fetch_add(1, Ordering::SeqCst);
+            run_job(sh, job);
             continue;
         }
         // every queue observed empty this pass: exit if stopping
@@ -231,6 +245,26 @@ mod tests {
         let stats = pool.shutdown();
         assert_eq!(stats.executed, 32);
         assert_eq!(hits.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn panicking_jobs_are_isolated() {
+        let pool = WorkerPool::new(2);
+        let hits = Arc::new(AtomicU64::new(0));
+        for i in 0..20 {
+            let h = Arc::clone(&hits);
+            pool.submit(move || {
+                if i % 5 == 0 {
+                    panic!("job {i} exploded");
+                }
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // would hang forever if panics lost `executed`
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+        let stats = pool.shutdown();
+        assert_eq!(stats.executed, 20, "panicked jobs still count as executed");
+        assert_eq!(stats.panics, 4);
     }
 
     #[test]

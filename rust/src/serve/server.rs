@@ -5,25 +5,32 @@
 //!
 //! 1. `handle` queues Predict/Feedback into the cross-tenant
 //!    [`MicroBatcher`](crate::serve::batcher::MicroBatcher) and returns a
-//!    ticket; `pump` flushes one micro-batch and yields [`Completion`]s.
+//!    ticket; `pump` flushes one micro-batch (when full, or when the
+//!    oldest request hits the flush deadline) and yields [`Completion`]s.
 //! 2. Feedback completions drive the per-tenant
 //!    [`DriftDetector`](crate::coordinator::core::DriftDetector) +
 //!    [`FeedbackBuffer`](crate::coordinator::core::FeedbackBuffer) (the
 //!    same control loop as the single-device `DeviceAgent`).
 //! 3. On drift, a Skip2-LoRA fine-tune job is launched (inline, or on the
 //!    [`WorkerPool`](crate::serve::scheduler::WorkerPool) when
-//!    `workers > 0`). The job clones the frozen backbone, trains fresh
-//!    skip adapters on the tenant's buffer through the tenant's PERSISTENT
-//!    `SkipCache`, and publishes the result to the
+//!    `workers > 0`). The job shares the SAME `Arc<Mlp>` as the batcher —
+//!    the split-state layer API makes the backbone `Sync`, so there is no
+//!    per-job clone. It trains fresh skip adapters on the tenant's buffer
+//!    through the tenant's PERSISTENT `SkipCache`, and publishes the
+//!    result to the
 //!    [`AdapterRegistry`](crate::serve::registry::AdapterRegistry).
 //!
 //! Per-tenant caches survive across adaptation rounds because the shared
 //! backbone is frozen: a cached activation is valid per (sample, frozen
 //! backbone) pair (§4.2), so only buffer slots overwritten since the last
 //! round miss (`SkipCache::invalidate`). Tenants are fully isolated — a
-//! fine-tune touches one tenant's adapters and nothing shared.
+//! fine-tune touches one tenant's adapters and nothing shared, and a
+//! PANICKING fine-tune job is caught (`catch_unwind`): the failure is
+//! counted in [`ServerStats`] and the tenant is restored to a servable
+//! state with a fresh cache instead of being stranded.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -33,7 +40,7 @@ use crate::coordinator::core::{DriftDetector, FeedbackBuffer};
 use crate::data::Dataset;
 use crate::method::Method;
 use crate::model::mlp::AdapterTopology;
-use crate::model::Mlp;
+use crate::model::{AdapterSet, Mlp};
 use crate::nn::lora::LoraAdapter;
 use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, MAX_RANK};
 use crate::serve::metrics::ServeMetrics;
@@ -49,6 +56,9 @@ use crate::util::timer::PhaseTimer;
 pub struct ServeConfig {
     /// micro-batch coalescing width (requests per shared forward)
     pub batch_capacity: usize,
+    /// flush a partial micro-batch once its oldest request has waited
+    /// this many `pump` calls (1 = flush every pump, the greedy policy)
+    pub flush_deadline_pumps: u64,
     /// compute backend for the shared forward and fine-tune jobs
     pub backend: Backend,
     /// per-tenant sliding accuracy window length
@@ -65,12 +75,17 @@ pub struct ServeConfig {
     pub seed: u64,
     /// fine-tune worker threads; 0 = run jobs inline inside `pump`
     pub workers: usize,
+    /// Fault injection (chaos/testing): the first N fine-tune jobs panic
+    /// instead of training, exercising the panic-isolation path. 0 (the
+    /// default) disables injection.
+    pub inject_adapt_panics: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
             batch_capacity: 32,
+            flush_deadline_pumps: crate::serve::batcher::DEFAULT_FLUSH_DEADLINE,
             backend: Backend::Blocked,
             window: 30,
             accuracy_threshold: 0.75,
@@ -80,6 +95,7 @@ impl Default for ServeConfig {
             train_batch: 20,
             seed: 7,
             workers: 0,
+            inject_adapt_panics: 0,
         }
     }
 }
@@ -124,6 +140,8 @@ pub struct ServerStats {
     pub tenants: usize,
     pub publishes: u64,
     pub adaptations: u64,
+    /// fine-tune jobs that panicked and were isolated (tenant restored)
+    pub finetune_panics: u64,
     pub batches: u64,
     pub rows: u64,
     pub rows_per_batch: f64,
@@ -166,34 +184,41 @@ struct AdaptResult {
     cache_misses: u64,
 }
 
+/// What a fine-tune job reports back: success, or an isolated panic.
+enum AdaptMsg {
+    Done(Box<AdaptResult>),
+    /// the job panicked; its cache was lost in the unwind — the server
+    /// restores the tenant with a fresh one
+    Panicked { tenant: TenantId },
+}
+
 pub struct FleetServer {
     cfg: ServeConfig,
-    /// the shared frozen backbone. Owned (not `Arc`): `FcLayer` caches a
-    /// transposed-weight `RefCell`, so `Mlp` is `Send` but not `Sync` —
-    /// fine-tune jobs get their own clone instead of a shared reference.
-    backbone: Mlp,
+    /// THE shared frozen backbone: the same `Arc` is held by the batcher
+    /// and handed (by pointer) to every fine-tune job. The split-state
+    /// layer API makes `Mlp: Sync`, so nobody ever clones the weights.
+    backbone: Arc<Mlp>,
     pub registry: Arc<AdapterRegistry>,
     batcher: MicroBatcher,
     tenants: HashMap<TenantId, TenantState>,
     pool: Option<WorkerPool>,
-    results_tx: mpsc::Sender<AdaptResult>,
-    results_rx: mpsc::Receiver<AdaptResult>,
+    results_tx: mpsc::Sender<AdaptMsg>,
+    results_rx: mpsc::Receiver<AdaptMsg>,
     pub metrics: ServeMetrics,
     next_ticket: u64,
 }
 
 impl FleetServer {
-    /// Deploy a pre-trained frozen backbone (topology `None`; adapters are
-    /// per-tenant and live in the registry).
-    pub fn new(backbone: Mlp, cfg: ServeConfig) -> Self {
-        assert_eq!(
-            backbone.topology,
-            AdapterTopology::None,
-            "the shared backbone carries no adapters; tenants publish theirs"
-        );
+    /// Deploy a pre-trained frozen backbone (adapters are per-tenant and
+    /// live in the registry). Accepts an owned `Mlp` or an existing
+    /// `Arc<Mlp>`.
+    pub fn new(backbone: impl Into<Arc<Mlp>>, cfg: ServeConfig) -> Self {
+        let backbone: Arc<Mlp> = backbone.into();
         let registry = Arc::new(AdapterRegistry::new());
-        let frozen = FrozenBackbone::new(backbone.clone(), cfg.backend, cfg.batch_capacity);
-        let batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+        let frozen =
+            FrozenBackbone::new(Arc::clone(&backbone), cfg.backend, cfg.batch_capacity);
+        let batcher =
+            MicroBatcher::with_deadline(frozen, Arc::clone(&registry), cfg.flush_deadline_pumps);
         let pool = (cfg.workers > 0).then(|| WorkerPool::new(cfg.workers));
         let (results_tx, results_rx) = mpsc::channel();
         Self {
@@ -212,6 +237,12 @@ impl FleetServer {
 
     pub fn config(&self) -> &ServeConfig {
         &self.cfg
+    }
+
+    /// The shared backbone handle (tests assert pointer identity with the
+    /// batcher and fine-tune jobs).
+    pub fn shared_backbone(&self) -> &Arc<Mlp> {
+        &self.backbone
     }
 
     pub fn n_in(&self) -> usize {
@@ -253,14 +284,13 @@ impl FleetServer {
                 self.metrics.feedbacks += 1;
                 Response::Queued { ticket: self.enqueue(tenant, x, Some(label)) }
             }
-            Request::SwapAdapters(mut adapters) => match self.validate_adapters(&adapters) {
+            Request::SwapAdapters(adapters) => match self.validate_adapters(&adapters) {
                 Ok(()) => {
                     self.tenants
                         .entry(tenant)
                         .or_insert_with(|| TenantState::new(&self.cfg));
-                    for ad in adapters.iter_mut() {
-                        ad.compact(); // registry holds inference weights only
-                    }
+                    // adapters are weights-only by construction — nothing
+                    // to compact before the registry snapshot
                     let version = self.registry.publish(tenant, adapters);
                     self.metrics.swaps += 1;
                     Response::Swapped { version }
@@ -312,14 +342,14 @@ impl FleetServer {
         self.batcher.pending()
     }
 
-    /// Drain finished fine-tune jobs, flush ONE micro-batch, and process
-    /// feedback (drift detection + adaptation launch). Returns the served
-    /// requests.
+    /// Drain finished fine-tune jobs, pump the micro-batcher once (it
+    /// flushes when full or past the deadline), and process feedback
+    /// (drift detection + adaptation launch). Returns the served requests.
     pub fn pump(&mut self) -> Vec<Completion> {
         self.drain_adapt_results();
         let mut responses = Vec::new();
         let t0 = Instant::now();
-        let n = self.batcher.flush(&mut responses);
+        let n = self.batcher.pump(&mut responses);
         if n > 0 {
             self.metrics
                 .batch_forward
@@ -345,7 +375,8 @@ impl FleetServer {
         out
     }
 
-    /// Pump until the request queue is empty.
+    /// Pump until the request queue is empty (the flush deadline
+    /// guarantees progress even for a lone trailing request).
     pub fn pump_until_drained(&mut self) -> Vec<Completion> {
         let mut all = Vec::new();
         while self.queued() > 0 {
@@ -381,22 +412,38 @@ impl FleetServer {
         st.detector.reset();
         let round = st.adaptations;
         st.adaptations += 1;
+        // fault injection: the first `inject_adapt_panics` jobs fail
+        let inject_panic = self.metrics.adaptations < self.cfg.inject_adapt_panics;
         self.metrics.adaptations += 1;
 
-        let backbone = self.backbone.clone();
+        // pointer clone of the SHARED backbone — never a weight copy;
+        // Skip2-LoRA is a frozen-backbone method, so the job only ever
+        // reads through the Arc
+        let backbone = Arc::clone(&self.backbone);
         let registry = Arc::clone(&self.registry);
         let tx = self.results_tx.clone();
         let seed = self.cfg.seed ^ tenant.rotate_left(17) ^ round;
         let (epochs, lr, train_batch, backend) =
             (self.cfg.epochs, self.cfg.lr, self.cfg.train_batch, self.cfg.backend);
         let job = move || {
-            let result = run_finetune(
-                backbone, &registry, tenant, &data, cache, epochs, lr, train_batch, backend,
-                seed,
-            );
+            // isolate panics: a crashing job must not strand the tenant
+            // with `cache = None` (or kill a pool worker)
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if inject_panic {
+                    panic!("injected fine-tune fault (ServeConfig::inject_adapt_panics)");
+                }
+                run_finetune(
+                    backbone, &registry, tenant, &data, cache, epochs, lr, train_batch,
+                    backend, seed,
+                )
+            }));
+            let msg = match result {
+                Ok(res) => AdaptMsg::Done(Box::new(res)),
+                Err(_) => AdaptMsg::Panicked { tenant },
+            };
             // receiver lives as long as the server; a send error just
             // means the server was dropped mid-job
-            let _ = tx.send(result);
+            let _ = tx.send(msg);
         };
         match &self.pool {
             Some(pool) => pool.submit(job),
@@ -408,17 +455,32 @@ impl FleetServer {
     }
 
     fn drain_adapt_results(&mut self) {
-        while let Ok(res) = self.results_rx.try_recv() {
-            self.metrics.finetune.record_secs(res.train_secs);
-            self.metrics.finetune_cache_hits += res.cache_hits;
-            self.metrics.finetune_cache_misses += res.cache_misses;
-            if let Some(st) = self.tenants.get_mut(&res.tenant) {
-                st.cache = Some(res.cache);
-                st.last_adapt_accuracy = res.acc_after;
-                // outcomes recorded while the job ran were scored against
-                // the OLD adapters; reset so the window measures the new
-                // ones instead of instantly re-triggering a redundant job
-                st.detector.reset();
+        while let Ok(msg) = self.results_rx.try_recv() {
+            match msg {
+                AdaptMsg::Done(res) => {
+                    self.metrics.finetune.record_secs(res.train_secs);
+                    self.metrics.finetune_cache_hits += res.cache_hits;
+                    self.metrics.finetune_cache_misses += res.cache_misses;
+                    if let Some(st) = self.tenants.get_mut(&res.tenant) {
+                        st.cache = Some(res.cache);
+                        st.last_adapt_accuracy = res.acc_after;
+                        // outcomes recorded while the job ran were scored
+                        // against the OLD adapters; reset so the window
+                        // measures the new ones instead of instantly
+                        // re-triggering a redundant job
+                        st.detector.reset();
+                    }
+                }
+                AdaptMsg::Panicked { tenant } => {
+                    // the cache moved into the job and was dropped by the
+                    // unwind: restore the tenant to a servable state with
+                    // a fresh (cold) cache and count the failure
+                    self.metrics.finetune_panics += 1;
+                    if let Some(st) = self.tenants.get_mut(&tenant) {
+                        st.cache = Some(SkipCache::new(self.cfg.buffer_target));
+                        st.detector.reset();
+                    }
+                }
             }
         }
     }
@@ -481,6 +543,7 @@ impl FleetServer {
             tenants: self.tenants.len(),
             publishes: self.registry.publishes(),
             adaptations: self.metrics.adaptations,
+            finetune_panics: self.metrics.finetune_panics,
             batches: self.batcher.batches,
             rows: self.batcher.rows,
             rows_per_batch: self.metrics.rows_per_batch(),
@@ -498,12 +561,13 @@ impl FleetServer {
     }
 }
 
-/// One Skip2-LoRA fine-tune job: fresh skip adapters on a cloned frozen
-/// backbone, trained on the tenant's buffer through its persistent cache,
-/// published to the registry on completion.
+/// One Skip2-LoRA fine-tune job: fresh skip adapters trained against the
+/// SHARED frozen backbone (no clone — the job reads the same `Arc<Mlp>`
+/// the batcher serves from) on the tenant's buffer through its persistent
+/// cache, published to the registry on completion.
 #[allow(clippy::too_many_arguments)]
 fn run_finetune(
-    mut model: Mlp,
+    model: Arc<Mlp>,
     registry: &Arc<AdapterRegistry>,
     tenant: TenantId,
     data: &Dataset,
@@ -520,9 +584,9 @@ fn run_finetune(
     let mut rng = Rng::new(seed);
     // fresh adapters per round: LoRA portability means stale adapters are
     // discarded without touching the backbone (same policy as DeviceAgent)
-    model.set_topology(&mut rng, AdapterTopology::Skip);
+    let adapters = AdapterSet::new(&mut rng, &model.config, AdapterTopology::Skip);
     let batch = train_batch.min(data.len()).max(1);
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, backend, batch);
+    let mut tuner = FineTuner::new(model, adapters, Method::Skip2Lora, backend, batch);
     let mut timer = PhaseTimer::new();
     let batches_per_epoch = (data.len() / batch).max(1);
     for _epoch in 0..epochs {
@@ -534,11 +598,9 @@ fn run_finetune(
         }
     }
     let acc_after = tuner.accuracy(data);
-    let mut adapters = std::mem::take(&mut tuner.model.skip);
-    for ad in adapters.iter_mut() {
-        ad.compact(); // publish inference weights only, not grad workspaces
-    }
-    registry.publish(tenant, adapters);
+    // publish the trained weights: the adapter struct is weights-only, so
+    // the registry snapshot footprint is exactly param_count() floats
+    registry.publish(tenant, tuner.adapters.adapters);
     AdaptResult {
         tenant,
         cache_hits: cache.stats().hits - hits0,
@@ -571,7 +633,7 @@ mod tests {
         Dataset { x, labels, n_classes: 3 }
     }
 
-    fn server(workers: usize) -> FleetServer {
+    fn server_with(workers: usize, inject: u64) -> FleetServer {
         let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
         let pre = clustered(0, 120, 0.0);
         let backbone = pretrain(cfg, &pre, 50, 0.05, 1, Backend::Blocked);
@@ -586,9 +648,14 @@ mod tests {
                 lr: 0.05,
                 train_batch: 15,
                 workers,
+                inject_adapt_panics: inject,
                 ..Default::default()
             },
         )
+    }
+
+    fn server(workers: usize) -> FleetServer {
+        server_with(workers, 0)
     }
 
     fn drive(server: &mut FleetServer, tenant: TenantId, data: &Dataset, feedback: bool) {
@@ -642,6 +709,9 @@ mod tests {
         assert_eq!(s.tenant_adaptations(0), 0, "tenant 0 must be untouched");
         assert_eq!(s.tenant_version(0), 0);
 
+        // the fine-tune shared the batcher's backbone by pointer
+        assert!(Arc::ptr_eq(s.shared_backbone(), s.batcher.shared_model()));
+
         // post-adaptation: tenant 1 classifies its drifted distribution
         let probe = clustered(22, 60, 2.5);
         drive(&mut s, 1, &probe, true);
@@ -663,6 +733,43 @@ mod tests {
         assert!(!s.is_adapting(5), "cache returned after quiesce");
         drive(&mut s, 5, &clustered(31, 60, 2.5), true);
         assert!(s.tenant_window_accuracy(5).unwrap() > 0.75);
+        let stats = s.shutdown();
+        assert!(stats.publishes >= 1);
+        assert_eq!(stats.finetune_panics, 0);
+    }
+
+    #[test]
+    fn panicking_finetune_job_is_isolated_and_tenant_recovers() {
+        // first fine-tune job panics (fault injection): the tenant must
+        // come back to a servable state (fresh cache) and the NEXT drift
+        // trigger must succeed end to end.
+        let mut s = server_with(0, 1);
+        let drifted = clustered(40, 400, 2.5);
+        drive(&mut s, 9, &drifted, true);
+        s.quiesce();
+
+        assert!(s.stats().finetune_panics >= 1, "injected panic not recorded");
+        assert!(!s.is_adapting(9), "tenant stranded with cache = None");
+        assert!(
+            s.tenant_adaptations(9) >= 2,
+            "tenant never re-adapted after the panicked job"
+        );
+        assert!(s.tenant_version(9) > 0, "no adapters published after recovery");
+
+        // post-recovery serving quality on the drifted distribution
+        drive(&mut s, 9, &clustered(41, 60, 2.5), true);
+        assert!(s.tenant_window_accuracy(9).unwrap() > 0.75);
+    }
+
+    #[test]
+    fn panicking_job_on_worker_pool_does_not_kill_the_pool() {
+        let mut s = server_with(2, 1);
+        let drifted = clustered(50, 400, 2.5);
+        drive(&mut s, 3, &drifted, true);
+        s.quiesce();
+        assert!(s.stats().finetune_panics >= 1);
+        assert!(s.tenant_adaptations(3) >= 2, "pool died after the panic");
+        assert!(s.tenant_version(3) > 0);
         let stats = s.shutdown();
         assert!(stats.publishes >= 1);
     }
@@ -723,5 +830,18 @@ mod tests {
             Response::Rejected(_) => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn lone_trailing_request_is_served_by_the_deadline() {
+        let mut s = server(0);
+        let data = clustered(60, 1, 0.0);
+        s.handle(1, Request::Predict(data.x.row(0).to_vec()));
+        // far below batch_capacity: only the deadline can flush it
+        let mut served = 0;
+        for _ in 0..s.config().flush_deadline_pumps + 1 {
+            served += s.pump().len();
+        }
+        assert_eq!(served, 1, "lone request must not wait forever");
     }
 }

@@ -1,3 +1,17 @@
-//! Property-based testing substrate (no `proptest` crate offline).
+//! Property-based testing substrate (no `proptest` crate offline) plus
+//! compile-time marker-trait assertions (no `static_assertions` crate).
 
 pub mod prop;
+
+/// Compile-time assertion that `T: Send + Sync` — monomorphizing this
+/// function IS the check, so a regression (e.g. someone re-introducing a
+/// `RefCell` into a layer struct) fails to *compile*, not to run.
+///
+/// ```
+/// skip2lora::testkit::assert_send_sync::<skip2lora::model::Mlp>();
+/// ```
+pub fn assert_send_sync<T: Send + Sync>() {}
+
+/// Compile-time assertion that `T: Send` (per-thread state like
+/// `ExecCtx` must move into workers but is deliberately not `Sync`).
+pub fn assert_send<T: Send>() {}

@@ -1,16 +1,34 @@
-//! `FineTuner`: one model + one method + preallocated workspaces.
+//! `FineTuner`: one shared backbone + one adapter set + one execution
+//! context.
 //!
 //! Implements the batched forward/backward/update of paper §2-§4 with the
 //! compute-type gating of Table 1 and per-layer timing for the Table 2
-//! breakdown. The training hot loop performs no allocation except on the
-//! Skip-Cache *miss* path (which vanishes after the first epoch).
+//! breakdown, on top of the split-state layer API:
+//!
+//! * `model: Arc<Mlp>` — immutable parameters. Frozen-backbone methods
+//!   (every Skip-Cache-compatible method) NEVER take a mutable reference,
+//!   so any number of tuners can share one backbone with zero cloning —
+//!   the serve-path fine-tune jobs do exactly that. Backbone-training
+//!   methods (FT-*, pre-training) go through `Arc::make_mut`, which is
+//!   free when the tuner holds the only reference and degrades to an
+//!   explicit copy-on-write if the backbone happens to be shared.
+//! * `adapters: AdapterSet` — the trainable state, owned by the tuner and
+//!   extractable for publishing (`serve::AdapterRegistry`).
+//! * `ctx: ExecCtx` — all scratch, preallocated for `batch` rows. The
+//!   training hot loop performs no allocation except on the Skip-Cache
+//!   *miss* path (which vanishes after the first epoch).
+
+use std::sync::Arc;
 
 use crate::cache::{CacheBackend, SkipCache};
 use crate::data::Dataset;
 use crate::method::Method;
-use crate::model::mlp::{AdapterTopology, Mlp};
+use crate::model::mlp::AdapterTopology;
+use crate::model::{AdapterSet, ExecCtx, Mlp};
+use crate::nn::ctx::LoraCtx;
 use crate::nn::{activation, loss};
 use crate::tensor::{ops, ops::Backend, Mat};
+use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 
 /// Static per-layer phase names (support up to 8 layers, paper uses 3).
@@ -44,63 +62,69 @@ pub const PH_UPDATE: &str = "weight_update";
 pub const PH_CACHE: &str = "cache_mgmt";
 
 pub struct FineTuner {
-    pub model: Mlp,
+    /// the (possibly shared) backbone
+    pub model: Arc<Mlp>,
+    /// the trainable adapter set; replaceable between rounds
+    pub adapters: AdapterSet,
     pub method: Method,
     pub backend: Backend,
     pub batch: usize,
-    // --- workspaces, all preallocated for `batch` rows ---
-    /// x[k] = input feature map of layer k (x[0] is the batch input)
-    x: Vec<Mat>,
-    /// h[k] = pre-BN output of layer k (post adapter-add for PerLayer)
-    h: Vec<Mat>,
-    /// bn_out[k] = BN output of hidden layer k (pre-ReLU)
-    bn_out: Vec<Mat>,
-    /// c_n = last layer pre-adapter output (Skip topologies)
-    c_n: Mat,
-    /// logits after adapter sum
-    logits: Mat,
-    /// gradient at h[k]
-    gh: Vec<Mat>,
-    /// gradient at x[k]
-    gx: Vec<Mat>,
-    /// labels of the current batch
-    pub labels: Vec<usize>,
+    /// all per-call scratch (activations, gradients, transpose caches)
+    ctx: ExecCtx,
     fc_types: Vec<crate::nn::FcComputeType>,
     lora_types: Vec<crate::nn::LoraComputeType>,
 }
 
 impl FineTuner {
-    pub fn new(model: Mlp, method: Method, backend: Backend, batch: usize) -> Self {
+    /// Wrap a backbone and an explicit adapter set. Accepts either an
+    /// owned `Mlp` or an `Arc<Mlp>` already shared with other tuners /
+    /// the serving batcher.
+    pub fn new(
+        model: impl Into<Arc<Mlp>>,
+        adapters: AdapterSet,
+        method: Method,
+        backend: Backend,
+        batch: usize,
+    ) -> Self {
+        let model: Arc<Mlp> = model.into();
         assert_eq!(
-            model.topology,
+            adapters.topology,
             method.topology(),
-            "model adapter topology must match method"
+            "adapter topology must match method"
+        );
+        assert!(
+            adapters.matches(&model.config),
+            "adapter shapes must match the backbone"
         );
         let n = model.n_layers();
-        let dims = model.config.dims.clone();
-        let x = (0..n).map(|k| Mat::zeros(batch, dims[k])).collect();
-        let h = (0..n).map(|k| Mat::zeros(batch, dims[k + 1])).collect();
-        let bn_out = (0..n.saturating_sub(1))
-            .map(|k| Mat::zeros(batch, dims[k + 1]))
-            .collect();
-        let gh = (0..n).map(|k| Mat::zeros(batch, dims[k + 1])).collect();
-        let gx = (0..n).map(|k| Mat::zeros(batch, dims[k])).collect();
+        let mut ctx = ExecCtx::new(&model.config, backend, batch);
+        // training context: size the backward workspaces up front so the
+        // hot loop stays allocation-free (DESIGN.md §7 L3)
+        ctx.ensure_backward_ws();
         Self {
             fc_types: method.fc_types(n),
             lora_types: method.lora_types(n),
-            x,
-            h,
-            bn_out,
-            c_n: Mat::zeros(batch, dims[n]),
-            logits: Mat::zeros(batch, dims[n]),
-            gh,
-            gx,
-            labels: vec![0; batch],
+            ctx,
             model,
+            adapters,
             method,
             backend,
             batch,
         }
+    }
+
+    /// Convenience: fresh adapters for the method's topology (the common
+    /// "repurpose a pre-trained backbone for method M" pattern).
+    pub fn with_fresh_adapters(
+        model: impl Into<Arc<Mlp>>,
+        method: Method,
+        rng: &mut Rng,
+        backend: Backend,
+        batch: usize,
+    ) -> Self {
+        let model: Arc<Mlp> = model.into();
+        let adapters = AdapterSet::new(rng, &model.config, method.topology());
+        Self::new(model, adapters, method, backend, batch)
     }
 
     pub fn n_layers(&self) -> usize {
@@ -108,14 +132,34 @@ impl FineTuner {
     }
 
     pub fn logits(&self) -> &Mat {
-        &self.logits
+        &self.ctx.logits
+    }
+
+    pub fn labels(&self) -> &[usize] {
+        &self.ctx.labels
+    }
+
+    pub fn labels_mut(&mut self) -> &mut [usize] {
+        &mut self.ctx.labels
+    }
+
+    /// Recover the backbone (end of pre-training). Unwraps the `Arc` when
+    /// this tuner holds the only reference; clones otherwise.
+    pub fn into_model(self) -> Mlp {
+        Arc::try_unwrap(self.model).unwrap_or_else(|arc| (*arc).clone())
+    }
+
+    /// Mutable backbone access for tests / weight surgery. Copy-on-write:
+    /// clones the backbone first if it is shared.
+    pub fn model_mut(&mut self) -> &mut Mlp {
+        Arc::make_mut(&mut self.model)
     }
 
     /// Load a batch into the input workspace (Algorithm 1 line 5's
     /// `load_train_batch`).
     pub fn load_batch(&mut self, data: &Dataset, idx: &[usize]) {
         assert_eq!(idx.len(), self.batch);
-        data.gather_into(idx, &mut self.x[0], &mut self.labels);
+        data.gather_into(idx, &mut self.ctx.x[0], &mut self.ctx.labels);
     }
 
     // -----------------------------------------------------------------
@@ -132,43 +176,53 @@ impl FineTuner {
         for k in 0..n {
             // FC_k
             let tk = std::time::Instant::now();
-            self.model.fcs[k].forward(self.backend, &self.x[k], &mut self.h[k]);
+            self.model.fcs[k].forward(self.backend, &self.ctx.x[k], &mut self.ctx.h[k]);
             timer.add_ns(FWD_FC[k], tk.elapsed().as_nanos());
             // per-layer adapter (parallel to FC_k, pre-BN: Fig. 1 d/e)
-            if self.model.topology == AdapterTopology::PerLayer
+            if self.adapters.topology == AdapterTopology::PerLayer
                 && self.lora_types[k].present()
             {
                 let tk = std::time::Instant::now();
-                self.model.per_layer[k].forward_accumulate(
+                self.adapters.adapters[k].forward_accumulate(
+                    &mut self.ctx.lora[k],
                     self.backend,
-                    &self.x[k],
-                    &mut self.h[k],
+                    &self.ctx.x[k],
+                    &mut self.ctx.h[k],
                 );
                 timer.add_ns(FWD_LORA[k], tk.elapsed().as_nanos());
             }
             if k < n - 1 {
                 let tk = std::time::Instant::now();
                 if bn_train {
-                    let (h, bo) = (&self.h[k], &mut self.bn_out[k]);
-                    self.model.bns[k].forward_train(self.backend, h, bo);
+                    // the only mutation in any forward pass: BN running
+                    // statistics are parameters, so backbone-training
+                    // methods go through copy-on-write
+                    Arc::make_mut(&mut self.model).bns[k].forward_train(
+                        &mut self.ctx.bn[k],
+                        &self.ctx.h[k],
+                        &mut self.ctx.bn_out[k],
+                    );
                 } else {
-                    self.model.bns[k].forward_eval(&self.h[k], &mut self.bn_out[k]);
+                    self.model.bns[k].forward_eval(&self.ctx.h[k], &mut self.ctx.bn_out[k]);
                 }
                 timer.add_ns(FWD_BN[k], tk.elapsed().as_nanos());
                 let tk = std::time::Instant::now();
-                let (bo, xn) = (&self.bn_out[k], &mut self.x[k + 1]);
-                activation::relu(bo, xn);
+                activation::relu(&self.ctx.bn_out[k], &mut self.ctx.x[k + 1]);
                 timer.add_ns(FWD_ACT[k], tk.elapsed().as_nanos());
             }
         }
         // skip adapters: y^n += Σ_k adapter_k(x^k)  (Eq. 17)
-        self.logits.data.copy_from_slice(&self.h[n - 1].data);
-        if self.model.topology == AdapterTopology::Skip {
-            self.c_n.data.copy_from_slice(&self.h[n - 1].data);
+        self.ctx.logits.data.copy_from_slice(&self.ctx.h[n - 1].data);
+        if self.adapters.topology == AdapterTopology::Skip {
+            self.ctx.c_n.data.copy_from_slice(&self.ctx.h[n - 1].data);
             for k in 0..n {
                 let tk = std::time::Instant::now();
-                let (x, lg) = (&self.x[k], &mut self.logits);
-                self.model.skip[k].forward_accumulate(self.backend, x, lg);
+                self.adapters.adapters[k].forward_accumulate(
+                    &mut self.ctx.lora[k],
+                    self.backend,
+                    &self.ctx.x[k],
+                    &mut self.ctx.logits,
+                );
                 timer.add_ns(FWD_LORA[k], tk.elapsed().as_nanos());
             }
         }
@@ -189,7 +243,7 @@ impl FineTuner {
         assert!(self.method.uses_cache());
         let n = self.n_layers();
         let t0 = std::time::Instant::now();
-        data.gather_into(idx, &mut self.x[0], &mut self.labels);
+        data.gather_into(idx, &mut self.ctx.x[0], &mut self.ctx.labels);
 
         // partition batch into hits (copy rows) and misses; duplicates
         // within a batch (with-replacement sampling) are deduplicated —
@@ -205,9 +259,9 @@ impl FineTuner {
             // Algorithm 2 line 3: if x_i ∈ C_skip, reuse
             if let Some(entry) = cache.lookup(i) {
                 for k in 1..n {
-                    self.x[k].row_mut(pos).copy_from_slice(&entry.xs[k - 1]);
+                    self.ctx.x[k].row_mut(pos).copy_from_slice(&entry.xs[k - 1]);
                 }
-                self.c_n.row_mut(pos).copy_from_slice(&entry.c_n);
+                self.ctx.c_n.row_mut(pos).copy_from_slice(&entry.c_n);
             } else {
                 miss_pos.push(pos);
             }
@@ -218,18 +272,17 @@ impl FineTuner {
             // cold path (first sighting of these samples): batched frozen
             // forward over the miss subset, then scatter + cache-insert.
             let m = miss_pos.len();
-            let dims = &self.model.config.dims;
-            let mut mx = Mat::zeros(m, dims[0]);
+            let mut mx = Mat::zeros(m, self.model.config.dims[0]);
             for (row, &pos) in miss_pos.iter().enumerate() {
-                mx.row_mut(row).copy_from_slice(self.x[0].row(pos));
+                mx.row_mut(row).copy_from_slice(self.ctx.x[0].row(pos));
             }
             let (acts, c_n) = self.frozen_forward_alloc(&mx, timer);
             let tc = std::time::Instant::now();
             for (row, &pos) in miss_pos.iter().enumerate() {
                 for k in 1..n {
-                    self.x[k].row_mut(pos).copy_from_slice(acts[k - 1].row(row));
+                    self.ctx.x[k].row_mut(pos).copy_from_slice(acts[k - 1].row(row));
                 }
-                self.c_n.row_mut(pos).copy_from_slice(c_n.row(row));
+                self.ctx.c_n.row_mut(pos).copy_from_slice(c_n.row(row));
                 // Algorithm 1 line 7: add_cache
                 let refs: Vec<&Mat> = acts.iter().collect();
                 cache.insert(idx[pos], SkipCache::entry_from_batch(&refs, &c_n, row));
@@ -240,19 +293,23 @@ impl FineTuner {
         // resolve within-batch duplicates by row copy
         for &(pos, first) in &dup {
             for k in 1..n {
-                let row = self.x[k].row(first).to_vec();
-                self.x[k].row_mut(pos).copy_from_slice(&row);
+                let row = self.ctx.x[k].row(first).to_vec();
+                self.ctx.x[k].row_mut(pos).copy_from_slice(&row);
             }
-            let row = self.c_n.row(first).to_vec();
-            self.c_n.row_mut(pos).copy_from_slice(&row);
+            let row = self.ctx.c_n.row(first).to_vec();
+            self.ctx.c_n.row_mut(pos).copy_from_slice(&row);
         }
 
         // adapter sum over (possibly cached) activations — Eq. 17
-        self.logits.data.copy_from_slice(&self.c_n.data);
+        self.ctx.logits.data.copy_from_slice(&self.ctx.c_n.data);
         for k in 0..n {
             let tk = std::time::Instant::now();
-            let (x, lg) = (&self.x[k], &mut self.logits);
-            self.model.skip[k].forward_accumulate(self.backend, x, lg);
+            self.adapters.adapters[k].forward_accumulate(
+                &mut self.ctx.lora[k],
+                self.backend,
+                &self.ctx.x[k],
+                &mut self.ctx.logits,
+            );
             timer.add_ns(FWD_LORA[k], tk.elapsed().as_nanos());
         }
         timer.add_ns(PH_FORWARD, t0.elapsed().as_nanos());
@@ -261,7 +318,12 @@ impl FineTuner {
     /// Frozen-backbone forward (BN eval) on an arbitrary-size batch,
     /// allocating outputs. Returns (per-hidden-layer activations
     /// `[x^2..x^n]`, `c^n`). Used by the cache miss path and evaluation.
-    fn frozen_forward_alloc(&mut self, x_in: &Mat, timer: &mut PhaseTimer) -> (Vec<Mat>, Mat) {
+    ///
+    /// Mirrors `Mlp::forward_frozen` (the serving path) layer by layer —
+    /// this copy exists only to attribute per-layer timings to the
+    /// Table 2 phase buckets and to allocate per-miss-batch outputs;
+    /// keep the two in lockstep (including the no-BN fallback).
+    fn frozen_forward_alloc(&self, x_in: &Mat, timer: &mut PhaseTimer) -> (Vec<Mat>, Mat) {
         let n = self.n_layers();
         let dims = &self.model.config.dims;
         let b = x_in.rows;
@@ -277,10 +339,15 @@ impl FineTuner {
                 let mut h = Mat::zeros(b, dims[k + 1]);
                 self.model.fcs[k].forward(self.backend, cur, &mut h);
                 timer.add_ns(FWD_FC[k], tk.elapsed().as_nanos());
-                let tb = std::time::Instant::now();
-                let mut bo = Mat::zeros(b, dims[k + 1]);
-                self.model.bns[k].forward_eval(&h, &mut bo);
-                timer.add_ns(FWD_BN[k], tb.elapsed().as_nanos());
+                let mut bo = if self.model.bns.is_empty() {
+                    h
+                } else {
+                    let tb = std::time::Instant::now();
+                    let mut bo = Mat::zeros(b, dims[k + 1]);
+                    self.model.bns[k].forward_eval(&h, &mut bo);
+                    timer.add_ns(FWD_BN[k], tb.elapsed().as_nanos());
+                    bo
+                };
                 let ta = std::time::Instant::now();
                 ops::relu_inplace(&mut bo);
                 timer.add_ns(FWD_ACT[k], ta.elapsed().as_nanos());
@@ -295,23 +362,25 @@ impl FineTuner {
     // backward
     // -----------------------------------------------------------------
 
-    /// Backward pass for the loaded batch; returns the CE loss.
+    /// Backward pass for the loaded batch; returns the CE loss. Layers are
+    /// `&self` throughout — gradients land in the context, never the
+    /// shared model.
     pub fn backward(&mut self, timer: &mut PhaseTimer) -> f32 {
         let n = self.n_layers();
         let t0 = std::time::Instant::now();
-        let l = loss::softmax_ce(&self.logits, &self.labels, &mut self.gh[n - 1]);
+        let l = loss::softmax_ce(&self.ctx.logits, &self.ctx.labels, &mut self.ctx.gh[n - 1]);
 
-        if self.model.topology == AdapterTopology::Skip {
+        if self.adapters.topology == AdapterTopology::Skip {
             // Skip-LoRA backward: every adapter sees gy^n directly; no
             // gradient ever crosses a frozen layer (all LoRA_yw).
             for k in 0..n {
                 let tk = std::time::Instant::now();
-                let (x, g) = (&self.x[k], &self.gh[n - 1]);
-                self.model.skip[k].backward(
+                self.adapters.adapters[k].backward(
+                    &mut self.ctx.lora[k],
                     self.backend,
                     self.lora_types[k],
-                    x,
-                    g,
+                    &self.ctx.x[k],
+                    &self.ctx.gh[n - 1],
                     None,
                 );
                 timer.add_ns(BWD_LORA[k], tk.elapsed().as_nanos());
@@ -330,14 +399,26 @@ impl FineTuner {
             // FC_k backward (Eq. 2-4 per compute type)
             let tk = std::time::Instant::now();
             if fc_ct.computes_gx() {
-                let (x, gh, gx) = (&self.x[k], &self.gh[k], &mut self.gx[k]);
-                self.model.fcs[k].backward(self.backend, fc_ct, x, gh, Some(gx));
+                self.model.fcs[k].backward(
+                    &mut self.ctx.fc[k],
+                    self.backend,
+                    fc_ct,
+                    &self.ctx.x[k],
+                    &self.ctx.gh[k],
+                    Some(&mut self.ctx.gx[k]),
+                );
             } else {
                 if need_gx {
-                    self.gx[k].fill(0.0); // adapter will accumulate
+                    self.ctx.gx[k].fill(0.0); // adapter will accumulate
                 }
-                let (x, gh) = (&self.x[k], &self.gh[k]);
-                self.model.fcs[k].backward(self.backend, fc_ct, x, gh, None);
+                self.model.fcs[k].backward(
+                    &mut self.ctx.fc[k],
+                    self.backend,
+                    fc_ct,
+                    &self.ctx.x[k],
+                    &self.ctx.gh[k],
+                    None,
+                );
             }
             timer.add_ns(BWD_FC[k], tk.elapsed().as_nanos());
 
@@ -345,12 +426,18 @@ impl FineTuner {
             if lo_ct.present() {
                 let tk = std::time::Instant::now();
                 let gx_opt = if lo_ct.computes_gx() {
-                    Some(&mut self.gx[k])
+                    Some(&mut self.ctx.gx[k])
                 } else {
                     None
                 };
-                let (x, gh) = (&self.x[k], &self.gh[k]);
-                self.model.per_layer[k].backward(self.backend, lo_ct, x, gh, gx_opt);
+                self.adapters.adapters[k].backward(
+                    &mut self.ctx.lora[k],
+                    self.backend,
+                    lo_ct,
+                    &self.ctx.x[k],
+                    &self.ctx.gh[k],
+                    gx_opt,
+                );
                 timer.add_ns(BWD_LORA[k], tk.elapsed().as_nanos());
             }
 
@@ -365,17 +452,19 @@ impl FineTuner {
             // propagate: gx[k] is grad at x[k] = ReLU(BN(h[k-1]))
             let tk = std::time::Instant::now();
             {
-                let (gxk, xk) = (&mut self.gx[k], &self.x[k]);
+                let (gxk, xk) = (&mut self.ctx.gx[k], &self.ctx.x[k]);
                 ops::relu_backward_inplace(gxk, xk);
             }
             timer.add_ns(BWD_ACT[k - 1], tk.elapsed().as_nanos());
             let tk = std::time::Instant::now();
             if bn_train {
-                let (gxk, ghk) = (&self.gx[k], &mut self.gh[k - 1]);
-                self.model.bns[k - 1].backward(gxk, Some(ghk));
+                self.model.bns[k - 1].backward(
+                    &mut self.ctx.bn[k - 1],
+                    &self.ctx.gx[k],
+                    Some(&mut self.ctx.gh[k - 1]),
+                );
             } else {
-                let (gxk, ghk) = (&self.gx[k], &mut self.gh[k - 1]);
-                self.model.bns[k - 1].backward_eval(gxk, ghk);
+                self.model.bns[k - 1].backward_eval(&self.ctx.gx[k], &mut self.ctx.gh[k - 1]);
             }
             timer.add_ns(BWD_BN[k - 1], tk.elapsed().as_nanos());
         }
@@ -387,31 +476,26 @@ impl FineTuner {
     // update
     // -----------------------------------------------------------------
 
-    /// SGD update of every trainable parameter (Eq. 5-6, 15-16).
+    /// SGD update of every trainable parameter (Eq. 5-6, 15-16). Only
+    /// backbone-training methods touch the shared model (copy-on-write);
+    /// frozen-backbone methods update adapters exclusively.
     pub fn update(&mut self, lr: f32, timer: &mut PhaseTimer) {
         let t0 = std::time::Instant::now();
         let n = self.n_layers();
+        if self.method.trains_backbone() {
+            let model = Arc::make_mut(&mut self.model);
+            for k in 0..n {
+                model.fcs[k].update(&self.ctx.fc[k], self.fc_types[k], lr);
+            }
+            if self.method.trains_bn_affine() {
+                for (bn, bctx) in model.bns.iter_mut().zip(&self.ctx.bn) {
+                    bn.update(bctx, lr);
+                }
+            }
+        }
         for k in 0..n {
-            self.model.fcs[k].update(self.fc_types[k], lr);
-        }
-        match self.model.topology {
-            AdapterTopology::PerLayer => {
-                for k in 0..n {
-                    if self.lora_types[k].present() {
-                        self.model.per_layer[k].update(lr);
-                    }
-                }
-            }
-            AdapterTopology::Skip => {
-                for ad in self.model.skip.iter_mut() {
-                    ad.update(lr);
-                }
-            }
-            AdapterTopology::None => {}
-        }
-        if self.method.trains_bn_affine() {
-            for bn in self.model.bns.iter_mut() {
-                bn.update(lr);
+            if self.lora_types[k].present() {
+                self.adapters.adapters[k].update(&self.ctx.lora[k], lr);
             }
         }
         timer.add_ns(PH_UPDATE, t0.elapsed().as_nanos());
@@ -422,21 +506,28 @@ impl FineTuner {
     // -----------------------------------------------------------------
 
     /// Inference forward (BN eval, adapters applied) on an arbitrary
-    /// batch; allocates. Used for accuracy evaluation and serving.
-    pub fn predict_alloc(&mut self, x_in: &Mat) -> Mat {
+    /// batch; allocates. Read-only on model AND adapters — safe to call
+    /// from any thread holding a shared reference.
+    pub fn predict_alloc(&self, x_in: &Mat) -> Mat {
         let n = self.n_layers();
-        let dims = self.model.config.dims.clone();
+        let dims = &self.model.config.dims;
         let b = x_in.rows;
         let mut xs: Vec<Mat> = Vec::with_capacity(n);
         let mut cur = x_in.clone();
         let mut logits = Mat::zeros(b, dims[n]);
+        let mut scratch = LoraCtx::new(); // cold path: allocation is fine
         for k in 0..n {
             let mut h = Mat::zeros(b, dims[k + 1]);
             self.model.fcs[k].forward(self.backend, &cur, &mut h);
-            if self.model.topology == AdapterTopology::PerLayer
+            if self.adapters.topology == AdapterTopology::PerLayer
                 && self.lora_types[k].present()
             {
-                self.model.per_layer[k].forward_accumulate(self.backend, &cur, &mut h);
+                self.adapters.adapters[k].forward_accumulate(
+                    &mut scratch,
+                    self.backend,
+                    &cur,
+                    &mut h,
+                );
             }
             if k < n - 1 {
                 let mut bo = Mat::zeros(b, dims[k + 1]);
@@ -449,16 +540,21 @@ impl FineTuner {
                 xs.push(cur.clone());
             }
         }
-        if self.model.topology == AdapterTopology::Skip {
+        if self.adapters.topology == AdapterTopology::Skip {
             for k in 0..n {
-                self.model.skip[k].forward_accumulate(self.backend, &xs[k], &mut logits);
+                self.adapters.adapters[k].forward_accumulate(
+                    &mut scratch,
+                    self.backend,
+                    &xs[k],
+                    &mut logits,
+                );
             }
         }
         logits
     }
 
     /// Mean argmax accuracy over a dataset (chunked to bound memory).
-    pub fn accuracy(&mut self, data: &Dataset) -> f64 {
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
         let chunk = 256usize;
         let mut correct = 0usize;
         let d = data.n_features();
@@ -479,7 +575,6 @@ impl FineTuner {
 mod tests {
     use super::*;
     use crate::model::MlpConfig;
-    use crate::util::rng::Rng;
 
     fn tiny_cfg() -> MlpConfig {
         MlpConfig { dims: vec![12, 8, 8, 3], rank: 2, batch_norm: true }
@@ -505,8 +600,8 @@ mod tests {
 
     fn tuner(method: Method, seed: u64) -> FineTuner {
         let mut rng = Rng::new(seed);
-        let model = Mlp::new(&mut rng, tiny_cfg(), method.topology());
-        FineTuner::new(model, method, Backend::Blocked, 6)
+        let model = Mlp::new(&mut rng, tiny_cfg());
+        FineTuner::with_fresh_adapters(model, method, &mut rng, Backend::Blocked, 6)
     }
 
     fn run_steps(ft: &mut FineTuner, data: &Dataset, steps: usize, lr: f32) -> (f32, f32) {
@@ -549,13 +644,21 @@ mod tests {
     fn skip2_cached_equals_skip_lora_uncached() {
         // The cache must be *exact*: Skip2-LoRA and Skip-LoRA produce
         // bit-identical adapter trajectories given the same init and batch
-        // sequence (frozen activations are deterministic).
+        // sequence (frozen activations are deterministic). Both tuners
+        // share ONE backbone Arc — no clone anywhere.
         let data = tiny_data(2, 30);
         let mut rng = Rng::new(7);
-        let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+        let model = Arc::new(Mlp::new(&mut rng, tiny_cfg()));
+        let adapters = AdapterSet::new(&mut rng, &model.config, AdapterTopology::Skip);
 
-        let mut a = FineTuner::new(model.clone(), Method::SkipLora, Backend::Blocked, 6);
-        let mut b = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 6);
+        let mut a = FineTuner::new(
+            Arc::clone(&model),
+            adapters.clone(),
+            Method::SkipLora,
+            Backend::Blocked,
+            6,
+        );
+        let mut b = FineTuner::new(model, adapters, Method::Skip2Lora, Backend::Blocked, 6);
         let mut cache = SkipCache::new(data.len());
 
         let mut timer = PhaseTimer::new();
@@ -578,7 +681,7 @@ mod tests {
             assert!((la - lb).abs() < 1e-5, "loss diverged: {la} vs {lb}");
         }
         // adapter weights must match closely
-        for (ad_a, ad_b) in a.model.skip.iter().zip(&b.model.skip) {
+        for (ad_a, ad_b) in a.adapters.adapters.iter().zip(&b.adapters.adapters) {
             for (x, y) in ad_a.wa.data.iter().zip(&ad_b.wa.data) {
                 assert!((x - y).abs() < 1e-4);
             }
@@ -588,6 +691,8 @@ mod tests {
         }
         // and the cache saw real hits
         assert!(cache.stats().hits > 0);
+        // the shared backbone was never copied-on-write
+        assert!(Arc::ptr_eq(&a.model, &b.model), "frozen methods must not CoW");
     }
 
     #[test]
@@ -595,6 +700,7 @@ mod tests {
         let data = tiny_data(3, 30);
         for method in [Method::LoraAll, Method::LoraLast, Method::SkipLora] {
             let mut ft = tuner(method, 11);
+            let shared = Arc::clone(&ft.model);
             let w0: Vec<Mat> = ft.model.fcs.iter().map(|f| f.w.clone()).collect();
             let bn0: Vec<Vec<f32>> =
                 ft.model.bns.iter().map(|b| b.running_mean.clone()).collect();
@@ -605,7 +711,25 @@ mod tests {
             for (bn, m) in ft.model.bns.iter().zip(&bn0) {
                 assert_eq!(&bn.running_mean, m, "{method} moved BN stats");
             }
+            // stronger than value equality: the Arc was never split
+            assert!(Arc::ptr_eq(&shared, &ft.model), "{method} cloned the backbone");
         }
+    }
+
+    #[test]
+    fn backbone_training_on_shared_arc_copies_on_write() {
+        // FT-All over a shared backbone must NOT corrupt the other
+        // holder's view: make_mut splits the Arc instead.
+        let data = tiny_data(8, 30);
+        let mut rng = Rng::new(21);
+        let model = Arc::new(Mlp::new(&mut rng, tiny_cfg()));
+        let observer = Arc::clone(&model);
+        let w0 = observer.fcs[0].w.clone();
+        let mut ft = FineTuner::new(model, AdapterSet::none(), Method::FtAll, Backend::Blocked, 6);
+        run_steps(&mut ft, &data, 10, 0.05);
+        assert_eq!(observer.fcs[0].w, w0, "shared view must be untouched");
+        assert!(!Arc::ptr_eq(&observer, &ft.model), "CoW must have split the Arc");
+        assert_ne!(ft.model.fcs[0].w, w0, "trainer's copy must have moved");
     }
 
     #[test]

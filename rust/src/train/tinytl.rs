@@ -8,6 +8,7 @@
 use crate::data::sampler::{BatchSampler, SamplingMode};
 use crate::data::Dataset;
 use crate::model::Mlp;
+use crate::nn::ctx::FcCtx;
 use crate::nn::tinytl::{LiteResidual, ResidualNorm};
 use crate::nn::{activation, loss};
 use crate::tensor::{ops, ops::Backend, Mat};
@@ -18,7 +19,9 @@ pub struct TinyTlTuner {
     pub residuals: Vec<LiteResidual>,
     pub backend: Backend,
     batch: usize,
-    // workspaces
+    // workspaces (TinyTL trains biases + head every step, so it owns its
+    // backbone outright instead of sharing an Arc)
+    fc_ctx: Vec<FcCtx>,
     x: Vec<Mat>,
     h: Vec<Mat>,
     bn_out: Vec<Mat>,
@@ -45,6 +48,7 @@ impl TinyTlTuner {
             .map(|k| LiteResidual::new(&mut rng, dims[k], dims[k + 1], reduction, norm))
             .collect();
         Self {
+            fc_ctx: (0..n).map(|_| FcCtx::new()).collect(),
             x: (0..n).map(|k| Mat::zeros(batch, dims[k])).collect(),
             h: (0..n).map(|k| Mat::zeros(batch, dims[k + 1])).collect(),
             bn_out: (0..n - 1).map(|k| Mat::zeros(batch, dims[k + 1])).collect(),
@@ -100,9 +104,17 @@ impl TinyTlTuner {
             {
                 let (x, gh, gx) = (&self.x[k], &self.gh[k], &mut self.gx[k]);
                 if need_gx {
-                    self.backbone.fcs[k].backward(self.backend, ct, x, gh, Some(gx));
+                    self.backbone.fcs[k].backward(
+                        &mut self.fc_ctx[k],
+                        self.backend,
+                        ct,
+                        x,
+                        gh,
+                        Some(gx),
+                    );
                 } else {
                     self.backbone.fcs[k].backward(
+                        &mut self.fc_ctx[k],
                         self.backend,
                         crate::nn::FcComputeType::Ywb,
                         x,
@@ -166,7 +178,7 @@ impl TinyTlTuner {
             } else {
                 crate::nn::FcComputeType::Ybx
             };
-            self.backbone.fcs[k].update(ct, lr);
+            self.backbone.fcs[k].update(&self.fc_ctx[k], ct, lr);
         }
         for r in self.residuals.iter_mut() {
             r.update(lr);

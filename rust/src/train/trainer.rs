@@ -136,10 +136,11 @@ pub fn pretrain(
     seed: u64,
     backend: crate::tensor::ops::Backend,
 ) -> crate::model::Mlp {
-    use crate::model::mlp::AdapterTopology;
+    use crate::model::AdapterSet;
     let mut rng = Rng::new(seed);
-    let model = crate::model::Mlp::new(&mut rng, config, AdapterTopology::None);
-    let mut tuner = FineTuner::new(model, Method::FtAll, backend, 20.min(data.len()));
+    let model = crate::model::Mlp::new(&mut rng, config);
+    let mut tuner =
+        FineTuner::new(model, AdapterSet::none(), Method::FtAll, backend, 20.min(data.len()));
     let cfg = TrainConfig {
         epochs,
         batch_size: 20.min(data.len()),
@@ -150,13 +151,12 @@ pub fn pretrain(
         cache_capacity: None,
     };
     let _ = train(&mut tuner, data, None, &cfg);
-    tuner.model
+    tuner.into_model()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::mlp::AdapterTopology;
     use crate::model::{Mlp, MlpConfig};
     use crate::tensor::ops::Backend;
     use crate::tensor::Mat;
@@ -186,10 +186,15 @@ mod tests {
     fn pretrain_then_skip2_finetune_reaches_high_accuracy() {
         let (tr, te) = toy_benchmark(0);
         let cfg = MlpConfig { dims: vec![10, 16, 16, 3], rank: 2, batch_norm: true };
-        let mut backbone = pretrain(cfg, &tr, 60, 0.05, 1, Backend::Blocked);
+        let backbone = pretrain(cfg, &tr, 60, 0.05, 1, Backend::Blocked);
         let mut rng = Rng::new(2);
-        backbone.set_topology(&mut rng, AdapterTopology::Skip);
-        let mut tuner = FineTuner::new(backbone, Method::Skip2Lora, Backend::Blocked, 20);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            backbone,
+            Method::Skip2Lora,
+            &mut rng,
+            Backend::Blocked,
+            20,
+        );
         let out = train(
             &mut tuner,
             &tr,
@@ -210,8 +215,9 @@ mod tests {
         let (tr, _) = toy_benchmark(1);
         let cfg = MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true };
         let mut rng = Rng::new(3);
-        let model = Mlp::new(&mut rng, cfg, AdapterTopology::None);
-        let mut tuner = FineTuner::new(model, Method::FtAll, Backend::Blocked, 20);
+        let model = Mlp::new(&mut rng, cfg);
+        let mut tuner =
+            FineTuner::with_fresh_adapters(model, Method::FtAll, &mut rng, Backend::Blocked, 20);
         let out = train(
             &mut tuner,
             &tr,
@@ -229,8 +235,14 @@ mod tests {
         let (tr, _) = toy_benchmark(2);
         let cfg = MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true };
         let mut rng = Rng::new(4);
-        let model = Mlp::new(&mut rng, cfg, AdapterTopology::Skip);
-        let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 20);
+        let model = Mlp::new(&mut rng, cfg);
+        let mut tuner = FineTuner::with_fresh_adapters(
+            model,
+            Method::Skip2Lora,
+            &mut rng,
+            Backend::Blocked,
+            20,
+        );
         let out = train(
             &mut tuner,
             &tr,
@@ -247,8 +259,9 @@ mod tests {
         let (tr, _) = toy_benchmark(3);
         let cfg = MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true };
         let mut rng = Rng::new(5);
-        let model = Mlp::new(&mut rng, cfg, AdapterTopology::None);
-        let mut tuner = FineTuner::new(model, Method::FtLast, Backend::Blocked, 20);
+        let model = Mlp::new(&mut rng, cfg);
+        let mut tuner =
+            FineTuner::with_fresh_adapters(model, Method::FtLast, &mut rng, Backend::Blocked, 20);
         let out = train(
             &mut tuner,
             &tr,

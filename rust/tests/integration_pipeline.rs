@@ -5,6 +5,7 @@
 use skip2lora::data::fan::{damage, DamageKind};
 use skip2lora::experiments::{accuracy, timing, DatasetId, ExpConfig};
 use skip2lora::method::Method;
+use skip2lora::model::AdapterSet;
 use skip2lora::tensor::ops::Backend;
 use skip2lora::train::FineTuner;
 
@@ -19,7 +20,13 @@ fn drift_gap_exists_and_skip2_closes_it() {
     let bench = ds.benchmark(cfg.seed);
     let backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
 
-    let mut probe = FineTuner::new(backbone.clone(), Method::FtAll, Backend::Blocked, 20);
+    let probe = FineTuner::new(
+        backbone.clone(),
+        AdapterSet::none(),
+        Method::FtAll,
+        Backend::Blocked,
+        20,
+    );
     let before = probe.accuracy(&bench.test);
 
     let (after, out) =

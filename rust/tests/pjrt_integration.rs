@@ -14,6 +14,7 @@ use skip2lora::engine::pjrt::{one_hot, PjrtSkip2};
 use skip2lora::experiments::{accuracy, DatasetId, ExpConfig};
 use skip2lora::method::Method;
 use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::model::AdapterSet;
 use skip2lora::tensor::Mat;
 use skip2lora::train::FineTuner;
 use skip2lora::util::rng::Rng;
@@ -38,16 +39,17 @@ fn pjrt_predict_matches_native() {
     let cfg = quick_cfg();
     let ds = DatasetId::Damage1;
     let bench = ds.benchmark(cfg.seed);
-    let mut backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
     let mut rng = Rng::new(1);
-    backbone.set_topology(&mut rng, AdapterTopology::Skip);
-    for ad in backbone.skip.iter_mut() {
+    let mut adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
+    for ad in adapters.adapters.iter_mut() {
         for v in ad.wb.data.iter_mut() {
             *v = 0.02 * rng.normal();
         }
     }
-    let mut native = FineTuner::new(backbone.clone(), Method::SkipLora, cfg.backend, 20);
-    let mut pjrt = PjrtSkip2::new(&dir, "fan", &backbone).expect("open pjrt");
+    let mut pjrt =
+        PjrtSkip2::new(&dir, "fan", &backbone, &adapters.adapters).expect("open pjrt");
+    let native = FineTuner::new(backbone, adapters, Method::SkipLora, cfg.backend, 20);
 
     let nfe = bench.test.n_features();
     let xb = Mat::from_vec(20, nfe, bench.test.x.data[..20 * nfe].to_vec());
@@ -68,10 +70,11 @@ fn pjrt_finetune_loop_learns() {
     let cfg = quick_cfg();
     let ds = DatasetId::Damage1;
     let bench = ds.benchmark(cfg.seed);
-    let mut backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
     let mut rng = Rng::new(2);
-    backbone.set_topology(&mut rng, AdapterTopology::Skip);
-    let mut pjrt = PjrtSkip2::new(&dir, "fan", &backbone).expect("open pjrt");
+    let adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
+    let mut pjrt =
+        PjrtSkip2::new(&dir, "fan", &backbone, &adapters.adapters).expect("open pjrt");
 
     let acc_before = pjrt.accuracy(&bench.test).expect("acc");
     let (_loss, stats, _t) = pjrt.finetune(&bench.finetune, 8, 0.02, 5).expect("finetune");
@@ -100,10 +103,11 @@ fn pjrt_har_artifacts_load_and_run() {
     let cfg = quick_cfg();
     let ds = DatasetId::Har;
     let bench = ds.benchmark(cfg.seed);
-    let mut backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
+    let backbone = accuracy::pretrain_backbone(ds, &bench, &cfg, 0);
     let mut rng = Rng::new(3);
-    backbone.set_topology(&mut rng, AdapterTopology::Skip);
-    let mut pjrt = PjrtSkip2::new(&dir, "har", &backbone).expect("open har");
+    let adapters = AdapterSet::new(&mut rng, &backbone.config, AdapterTopology::Skip);
+    let mut pjrt =
+        PjrtSkip2::new(&dir, "har", &backbone, &adapters.adapters).expect("open har");
     // one populate + one step, shape sanity
     let b = pjrt.batch;
     let x: Vec<f32> = bench.finetune.x.data[..b * 561].to_vec();
@@ -120,10 +124,8 @@ fn pjrt_har_artifacts_load_and_run() {
 fn pjrt_rejects_wrong_model_dims() {
     let Some(dir) = artifacts() else { return };
     let mut rng = Rng::new(4);
-    let wrong = skip2lora::model::Mlp::new(
-        &mut rng,
-        skip2lora::model::MlpConfig { dims: vec![10, 8, 8, 3], rank: 4, batch_norm: true },
-        AdapterTopology::Skip,
-    );
-    assert!(PjrtSkip2::new(&dir, "fan", &wrong).is_err());
+    let cfg = skip2lora::model::MlpConfig { dims: vec![10, 8, 8, 3], rank: 4, batch_norm: true };
+    let wrong = skip2lora::model::Mlp::new(&mut rng, cfg.clone());
+    let adapters = AdapterSet::new(&mut rng, &cfg, AdapterTopology::Skip);
+    assert!(PjrtSkip2::new(&dir, "fan", &wrong, &adapters.adapters).is_err());
 }

@@ -202,15 +202,23 @@ fn prop_skip2_cache_exactness_random_models() {
             batch_norm: true,
         };
         let mut mrng = Rng::new(rng.next_u64());
-        let model = Mlp::new(&mut mrng, cfg, Method::SkipLora.topology());
+        let model = std::sync::Arc::new(Mlp::new(&mut mrng, cfg.clone()));
+        let adapters =
+            skip2lora::model::AdapterSet::new(&mut mrng, &cfg, Method::SkipLora.topology());
         let data = Dataset {
             x: gen::mat(rng, n_samples, d_in),
             labels: gen::labels(rng, n_samples, classes),
             n_classes: classes,
         };
 
-        let mut a = FineTuner::new(model.clone(), Method::SkipLora, Backend::Blocked, batch);
-        let mut b = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, batch);
+        let mut a = FineTuner::new(
+            std::sync::Arc::clone(&model),
+            adapters.clone(),
+            Method::SkipLora,
+            Backend::Blocked,
+            batch,
+        );
+        let mut b = FineTuner::new(model, adapters, Method::Skip2Lora, Backend::Blocked, batch);
         let mut cache = SkipCache::new(n_samples);
         let mut timer = PhaseTimer::new();
         let seed = rng.next_u64();

@@ -14,8 +14,7 @@ use std::sync::Arc;
 
 use skip2lora::cache::SkipCache;
 use skip2lora::method::Method;
-use skip2lora::model::mlp::AdapterTopology;
-use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::registry::AdapterRegistry;
@@ -47,9 +46,10 @@ fn tiny_data(rng: &mut Rng, n: usize) -> skip2lora::data::Dataset {
 #[test]
 fn bn_mutation_invalidates_cached_activations() {
     let mut rng = Rng::new(1);
-    let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+    let model = Mlp::new(&mut rng, tiny_cfg());
     let data = tiny_data(&mut rng, 24);
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut tuner =
+        FineTuner::with_fresh_adapters(model, Method::Skip2Lora, &mut rng, Backend::Blocked, 8);
     let mut cache = SkipCache::new(data.len());
     let mut timer = PhaseTimer::new();
     let idx: Vec<usize> = (0..8).collect();
@@ -61,8 +61,9 @@ fn bn_mutation_invalidates_cached_activations() {
     assert_eq!(tuner.logits(), &fresh, "all-hit forward is bit-identical");
 
     // mutate frozen state: BN running stats drift (what train-mode BN
-    // would do every batch)
-    for v in tuner.model.bns[0].running_mean.iter_mut() {
+    // would do every batch); model_mut is copy-on-write but this tuner
+    // holds the only reference, so the mutation is in place
+    for v in tuner.model_mut().bns[0].running_mean.iter_mut() {
         *v += 0.5;
     }
     tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
@@ -92,9 +93,10 @@ fn bn_mutation_invalidates_cached_activations() {
 #[test]
 fn fc_mutation_invalidates_cached_activations() {
     let mut rng = Rng::new(2);
-    let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+    let model = Mlp::new(&mut rng, tiny_cfg());
     let data = tiny_data(&mut rng, 16);
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut tuner =
+        FineTuner::with_fresh_adapters(model, Method::Skip2Lora, &mut rng, Backend::Blocked, 8);
     let mut cache = SkipCache::new(data.len());
     let mut timer = PhaseTimer::new();
     let idx: Vec<usize> = (0..8).collect();
@@ -102,8 +104,12 @@ fn fc_mutation_invalidates_cached_activations() {
     tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
     let fresh = tuner.logits().clone();
 
-    for v in tuner.model.fcs[0].w.data.iter_mut() {
-        *v *= 1.1;
+    {
+        let fc = &mut tuner.model_mut().fcs[0];
+        for v in fc.w.data.iter_mut() {
+            *v *= 1.1;
+        }
+        fc.touch_weights(); // out-of-band mutation: invalidate Wᵀ caches
     }
     tuner.forward_cached(&data, &idx, &mut cache, &mut timer);
     assert_eq!(tuner.logits(), &fresh, "stale: FC change invisible through cache");
@@ -119,9 +125,10 @@ fn fc_mutation_invalidates_cached_activations() {
 #[test]
 fn slot_invalidation_is_surgical() {
     let mut rng = Rng::new(3);
-    let model = Mlp::new(&mut rng, tiny_cfg(), AdapterTopology::Skip);
+    let model = Mlp::new(&mut rng, tiny_cfg());
     let mut data = tiny_data(&mut rng, 8);
-    let mut tuner = FineTuner::new(model, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut tuner =
+        FineTuner::with_fresh_adapters(model, Method::Skip2Lora, &mut rng, Backend::Blocked, 8);
     let mut cache = SkipCache::new(data.len());
     let mut timer = PhaseTimer::new();
     let idx: Vec<usize> = (0..8).collect();
@@ -247,7 +254,7 @@ fn prop_registry_snapshots_consistent_under_concurrent_publishes() {
 fn batched_serving_matches_independent_per_tenant_models() {
     let mut rng = Rng::new(7);
     let cfg = tiny_cfg();
-    let backbone = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::None);
+    let backbone = Arc::new(Mlp::new(&mut rng, cfg.clone()));
     let registry = Arc::new(AdapterRegistry::new());
 
     let n_tenants = 12u64;
@@ -265,7 +272,8 @@ fn batched_serving_matches_independent_per_tenant_models() {
         registry.publish(t, ads);
     }
 
-    let frozen = FrozenBackbone::new(backbone.clone(), Backend::Blocked, n_tenants as usize);
+    let frozen =
+        FrozenBackbone::new(Arc::clone(&backbone), Backend::Blocked, n_tenants as usize);
     let mut batcher = MicroBatcher::new(frozen, registry);
     let xs: Vec<Vec<f32>> = (0..n_tenants)
         .map(|_| (0..10).map(|_| rng.normal()).collect())
@@ -278,10 +286,15 @@ fn batched_serving_matches_independent_per_tenant_models() {
     assert_eq!(batcher.batches, 1, "exactly one shared backbone forward");
 
     for (t, x) in xs.iter().enumerate() {
-        let mut model = backbone.clone();
-        model.topology = AdapterTopology::Skip;
-        model.skip = tenant_adapters[t].clone();
-        let mut solo = FineTuner::new(model, Method::SkipLora, Backend::Blocked, 1);
+        // the "independent" model shares the SAME backbone Arc: adapters
+        // are the only per-tenant state
+        let solo = FineTuner::new(
+            Arc::clone(&backbone),
+            AdapterSet::skip_from(tenant_adapters[t].clone()),
+            Method::SkipLora,
+            Backend::Blocked,
+            1,
+        );
         let want = solo.predict_alloc(&Mat::from_vec(1, 10, x.clone()));
         for (a, b) in out[t].logits.iter().zip(want.row(0)) {
             assert!(
@@ -298,7 +311,7 @@ fn batched_serving_matches_independent_per_tenant_models() {
 fn republish_changes_only_that_tenant() {
     let mut rng = Rng::new(8);
     let cfg = tiny_cfg();
-    let backbone = Mlp::new(&mut rng, cfg.clone(), AdapterTopology::None);
+    let backbone = Mlp::new(&mut rng, cfg.clone());
     let registry = Arc::new(AdapterRegistry::new());
     for t in 0..4u64 {
         let mut ads: Vec<LoraAdapter> = (0..3)

@@ -1,0 +1,221 @@
+//! The split-state acceptance tests: one `Arc<Mlp>` backbone driven
+//! concurrently from N threads (serving micro-batcher + fine-tune
+//! workers) must produce BIT-IDENTICAL logits and adapter trajectories
+//! to the old cloned-backbone discipline — and the sharing itself must be
+//! provable (compile-time `Send + Sync`, runtime pointer identity).
+
+use std::sync::Arc;
+
+use skip2lora::data::Dataset;
+use skip2lora::method::Method;
+use skip2lora::model::mlp::AdapterTopology;
+use skip2lora::model::{AdapterSet, ExecCtx, Mlp, MlpConfig};
+use skip2lora::nn::batchnorm::BatchNorm;
+use skip2lora::nn::fc::FcLayer;
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::tensor::{ops::Backend, Mat};
+use skip2lora::testkit::{assert_send, assert_send_sync};
+use skip2lora::train::FineTuner;
+use skip2lora::util::rng::Rng;
+use skip2lora::util::timer::PhaseTimer;
+
+/// Compile-time: the backbone (and each parameter-only layer type) is
+/// `Send + Sync`; the per-thread context is `Send`. Monomorphizing the
+/// testkit helpers IS the assertion — a `RefCell` regression in any layer
+/// makes this test fail to compile.
+#[test]
+fn backbone_types_are_send_sync() {
+    assert_send_sync::<Mlp>();
+    assert_send_sync::<FcLayer>();
+    assert_send_sync::<BatchNorm>();
+    assert_send_sync::<LoraAdapter>();
+    assert_send_sync::<AdapterSet>();
+    assert_send::<ExecCtx>();
+}
+
+fn cfg() -> MlpConfig {
+    MlpConfig { dims: vec![10, 12, 12, 3], rank: 2, batch_norm: true }
+}
+
+fn clustered(seed: u64, n: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 10);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..10 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset { x, labels, n_classes: 3 }
+}
+
+/// Run one Skip2-LoRA fine-tune to completion; returns the trained
+/// adapters and the per-step losses.
+fn finetune(
+    model: impl Into<Arc<Mlp>>,
+    adapters: AdapterSet,
+    data: &Dataset,
+    steps: usize,
+) -> (AdapterSet, Vec<f32>) {
+    let mut tuner = FineTuner::new(model, adapters, Method::Skip2Lora, Backend::Blocked, 8);
+    let mut cache = skip2lora::cache::SkipCache::new(data.len());
+    let mut timer = PhaseTimer::new();
+    let mut rng = Rng::new(4242);
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let idx = rng.sample_with_replacement(data.len(), 8);
+        tuner.forward_cached(data, &idx, &mut cache, &mut timer);
+        losses.push(tuner.backward(&mut timer));
+        tuner.update(0.05, &mut timer);
+    }
+    (tuner.adapters, losses)
+}
+
+/// N fine-tune threads + a serving batcher over ONE `Arc<Mlp>` produce
+/// exactly (bit-for-bit) what N runs over N private backbone clones
+/// produce. This is the acceptance criterion for deleting the per-job
+/// backbone clone.
+#[test]
+fn shared_arc_matches_cloned_backbone_bit_for_bit() {
+    const N_WORKERS: u64 = 4;
+    let mut rng = Rng::new(11);
+    let shared = Arc::new(Mlp::new(&mut rng, cfg()));
+
+    // per-worker deterministic inputs: adapters + data
+    let jobs: Vec<(AdapterSet, Dataset)> = (0..N_WORKERS)
+        .map(|t| {
+            let mut arng = Rng::new(100 + t);
+            (
+                AdapterSet::new(&mut arng, &cfg(), AdapterTopology::Skip),
+                clustered(200 + t, 40),
+            )
+        })
+        .collect();
+
+    // reference: the OLD discipline — every job trains against its own
+    // deep clone of the backbone, serially
+    let reference: Vec<(AdapterSet, Vec<f32>)> = jobs
+        .iter()
+        .map(|(adapters, data)| {
+            let private: Mlp = (*shared).clone();
+            finetune(private, adapters.clone(), data, 60)
+        })
+        .collect();
+
+    // new discipline: all jobs run CONCURRENTLY against the one shared
+    // Arc, while a serving batcher hammers the same backbone from the
+    // main thread
+    let registry = Arc::new(AdapterRegistry::new());
+    let results: Vec<(AdapterSet, Vec<f32>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|(adapters, data)| {
+                let model = Arc::clone(&shared);
+                let adapters = adapters.clone();
+                scope.spawn(move || finetune(model, adapters, data, 60))
+            })
+            .collect();
+
+        // concurrent read pressure: serve micro-batches from the same Arc
+        let frozen = FrozenBackbone::new(Arc::clone(&shared), Backend::Blocked, 8);
+        let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+        let mut rng = Rng::new(77);
+        let mut out = Vec::new();
+        for round in 0..200u64 {
+            for t in 0..N_WORKERS {
+                let x: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+                batcher.submit(BatchRequest { tenant: t, id: round, x, label: None });
+            }
+            batcher.flush(&mut out);
+        }
+        assert_eq!(out.len(), 200 * N_WORKERS as usize);
+
+        handles.into_iter().map(|h| h.join().expect("worker")).collect()
+    });
+
+    // bit-identical trajectories: losses AND final adapter weights
+    for (t, ((got_ad, got_losses), (want_ad, want_losses))) in
+        results.iter().zip(&reference).enumerate()
+    {
+        assert_eq!(got_losses, want_losses, "worker {t}: loss trajectory diverged");
+        for (a, b) in got_ad.adapters.iter().zip(&want_ad.adapters) {
+            assert_eq!(a.wa.data, b.wa.data, "worker {t}: W_A diverged");
+            assert_eq!(a.wb.data, b.wb.data, "worker {t}: W_B diverged");
+        }
+    }
+
+    // and the backbone is still the one everyone started with — no CoW
+    // split happened anywhere (frozen methods never take &mut), so after
+    // workers and batcher dropped their handles ours is the last one
+    assert_eq!(Arc::strong_count(&shared), 1);
+}
+
+/// Serving logits from the shared batcher are bit-identical to logits
+/// computed through a FineTuner holding the same Arc — the two code paths
+/// (`apply_skip_adapters_row` fan-out vs `predict_alloc`) read the same
+/// weights and must agree while fine-tunes run concurrently.
+#[test]
+fn concurrent_serving_is_stable_under_finetune_load() {
+    let mut rng = Rng::new(31);
+    let shared = Arc::new(Mlp::new(&mut rng, cfg()));
+    let registry = Arc::new(AdapterRegistry::new());
+
+    // publish non-trivial adapters for tenant 0
+    let mut adapters = AdapterSet::new(&mut rng, &cfg(), AdapterTopology::Skip);
+    for ad in adapters.adapters.iter_mut() {
+        for v in ad.wb.data.iter_mut() {
+            *v = 0.1 * rng.normal();
+        }
+    }
+    registry.publish(0, adapters.adapters.clone());
+
+    let x: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+    let expected = {
+        let tuner = FineTuner::new(
+            Arc::clone(&shared),
+            adapters.clone(),
+            Method::SkipLora,
+            Backend::Blocked,
+            1,
+        );
+        tuner.predict_alloc(&Mat::from_vec(1, 10, x.clone())).row(0).to_vec()
+    };
+
+    std::thread::scope(|scope| {
+        // background fine-tune churn on other tenants' adapters over the
+        // SAME backbone Arc
+        for t in 1..4u64 {
+            let model = Arc::clone(&shared);
+            let data = clustered(900 + t, 30);
+            scope.spawn(move || {
+                let mut arng = Rng::new(t);
+                let adapters = AdapterSet::new(&mut arng, &cfg(), AdapterTopology::Skip);
+                let _ = finetune(model, adapters, &data, 40);
+            });
+        }
+
+        // meanwhile: tenant 0's logits must never waver
+        let frozen = FrozenBackbone::new(Arc::clone(&shared), Backend::Blocked, 4);
+        let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+        let mut out = Vec::new();
+        for i in 0..100u64 {
+            batcher.submit(BatchRequest { tenant: 0, id: i, x: x.clone(), label: None });
+            batcher.flush(&mut out);
+        }
+        // same serving path + same frozen weights => bit-identical across
+        // all 100 repetitions, no matter what the fine-tune threads do
+        for resp in &out {
+            assert_eq!(resp.logits, out[0].logits, "serving logits drifted under load");
+        }
+        // and the serving path agrees with the training-side predict path
+        // (different kernel shapes: float tolerance, not bit equality)
+        for (a, b) in out[0].logits.iter().zip(&expected) {
+            assert!((a - b).abs() < 1e-4, "serve {a} vs predict {b}");
+        }
+    });
+}
