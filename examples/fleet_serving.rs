@@ -51,11 +51,16 @@ fn main() {
     println!("pre-training the shared backbone...");
     let backbone = pretrain(cfg, &clustered(0, 240, 0.0), 60, 0.05, 1, Backend::Blocked);
 
-    // 2. deploy behind the server: micro-batches of 64, 4 fine-tune workers
+    // 2. deploy behind the server: micro-batches of 64, 4 fine-tune
+    //    workers, hardened request path (bounded queue + sharded registry;
+    //    the driving loop below pumps before the bound can fill, so every
+    //    request is admitted — overload instead gets a typed rejection)
     let mut server = FleetServer::new(
         backbone,
         ServeConfig {
             batch_capacity: 64,
+            queue_bound: 256,
+            registry_shards: 16,
             window: 20,
             accuracy_threshold: 0.65,
             buffer_target: 45,
@@ -157,6 +162,11 @@ fn main() {
         stats.publishes,
         stats.adapter_bytes as f64 / 1024.0
     );
+    println!(
+        "admission: queue bound {} never exceeded ({} rejections), {} registry shards",
+        stats.queue_bound, stats.queue_rejections, stats.registry_shards
+    );
+    assert_eq!(stats.queue_rejections, 0, "driving loop stays under the bound");
     println!(
         "drifted tenants recovered: {drifted_recovered}/{drifted_total} (min window acc {:.0}%)",
         min_drifted_acc * 100.0

@@ -7,11 +7,16 @@
 //! forward) once B is large enough to amortize the fan-out (B >= 8 on the
 //! fan-sized model). Also measured: registry snapshot/publish costs — the
 //! hot-swap path must stay nanosecond-scale so fine-tune jobs never stall
-//! the serving loop.
+//! the serving loop — and the sharded-vs-single-lock read throughput
+//! sweep: N reader threads hammering `snapshot` while a publisher churns
+//! hot swaps, on a 1-shard (the old single `RwLock<HashMap>`) vs a
+//! multi-shard registry.
 //!
 //! Run: `cargo bench --bench serve_micro`
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use skip2lora::bench::Bencher;
 use skip2lora::method::Method;
@@ -78,6 +83,77 @@ fn main() {
             t2 = (t2 + 13) % n_tenants as u64;
             registry.publish(t2, ads.clone());
         });
+        let mut round = 0u64;
+        b.bench("snapshot_many (64-tenant batch)", || {
+            round = round.wrapping_add(1);
+            let batch = (0..64u64).map(|i| (round * 31 + i * 17) % n_tenants as u64);
+            std::hint::black_box(registry.snapshot_many(batch).len());
+        });
+    }
+
+    b.header("sharded vs single-lock registry: concurrent snapshot throughput");
+    {
+        let readers = std::thread::available_parallelism().map_or(4, |p| p.get().min(8));
+        let reads_per_thread = 200_000usize;
+        let fleet = 4096u64;
+        let mut results: Vec<(usize, f64)> = Vec::new();
+        for &shards in &[1usize, 16, 64] {
+            let reg = AdapterRegistry::with_shards(shards);
+            let mut srng = Rng::new(7);
+            for t in 0..fleet {
+                reg.publish(t, make_adapters(&mut srng, &cfg));
+            }
+            let writer_ads = make_adapters(&mut srng, &cfg);
+            let stop = AtomicBool::new(false);
+            let t0 = Instant::now();
+            let published = std::thread::scope(|scope| {
+                let (reg, stop, writer_ads) = (&reg, &stop, &writer_ads);
+                // one publisher churning hot swaps the whole time: the
+                // single-lock case makes every reader eat these write locks
+                let writer = scope.spawn(move || {
+                    let mut t = 0u64;
+                    let mut published = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        t = (t + 13) % fleet;
+                        reg.publish(t, writer_ads.clone());
+                        published += 1;
+                    }
+                    published
+                });
+                let handles: Vec<_> = (0..readers)
+                    .map(|r| {
+                        scope.spawn(move || {
+                            // cheap thread-local LCG for tenant selection
+                            let mut i = 0x9E3779B97F4A7C15u64 ^ r as u64;
+                            let mut found = 0usize;
+                            for _ in 0..reads_per_thread {
+                                i = i
+                                    .wrapping_mul(6364136223846793005)
+                                    .wrapping_add(1442695040888963407);
+                                found += reg.snapshot(i % fleet).is_some() as usize;
+                            }
+                            found
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    assert_eq!(h.join().unwrap(), reads_per_thread, "fleet fully published");
+                }
+                stop.store(true, Ordering::Relaxed);
+                writer.join().unwrap()
+            });
+            let secs = t0.elapsed().as_secs_f64();
+            let mops = (readers * reads_per_thread) as f64 / secs / 1e6;
+            println!(
+                "{shards:>3} shard(s): {mops:>7.2} M snapshots/s across {readers} readers \
+                 ({published} publishes churned alongside)",
+            );
+            results.push((shards, mops));
+        }
+        let single = results[0].1;
+        for &(shards, mops) in &results[1..] {
+            println!("{shards:>3} shards vs single lock: {:.2}x read throughput", mops / single);
+        }
     }
 
     b.header("B requests, B distinct tenants: batched vs independent");

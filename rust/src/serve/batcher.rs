@@ -23,7 +23,10 @@
 //!
 //! A lone request never waits indefinitely: [`MicroBatcher::pump`] flushes
 //! when the batch fills OR when the oldest queued request has aged past a
-//! configurable pump-count deadline.
+//! configurable pump-count deadline. And the queue itself is BOUNDED:
+//! [`MicroBatcher::try_submit`] rejects with a typed [`QueueFull`] once
+//! `queue_bound` requests are waiting, so overload degrades into explicit
+//! back-pressure instead of unbounded memory growth.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -40,6 +43,21 @@ pub const MAX_RANK: usize = 32;
 
 /// Default [`MicroBatcher`] flush deadline, in pump ticks.
 pub const DEFAULT_FLUSH_DEADLINE: u64 = 2;
+
+/// Default [`MicroBatcher`] queue bound (requests). The queue must be
+/// bounded: an unbounded queue turns a load spike into unbounded memory
+/// growth and unbounded tail latency instead of a typed rejection.
+pub const DEFAULT_QUEUE_BOUND: usize = 1024;
+
+/// Typed back-pressure signal: the request queue is at its bound and the
+/// request was NOT enqueued. Callers surface this to the client (the
+/// `FleetServer` maps it to `Response::Rejected(RejectReason::QueueFull)`)
+/// rather than letting the queue grow without limit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    /// the configured bound the queue is sitting at
+    pub bound: usize,
+}
 
 /// Apply a tenant's skip-adapter set to one request row:
 /// `y += Σ_k (x^k · W_A_k) · W_B_k`. Read-only on the adapters (which
@@ -192,6 +210,8 @@ pub struct MicroBatcher {
     registry: Arc<AdapterRegistry>,
     /// (request, pump tick at enqueue) — the tick drives the deadline
     queue: VecDeque<(BatchRequest, u64)>,
+    /// hard cap on queued requests; `try_submit` rejects at the bound
+    queue_bound: usize,
     /// flush when the oldest request has waited this many pump ticks
     deadline_pumps: u64,
     pump_count: u64,
@@ -203,7 +223,7 @@ pub struct MicroBatcher {
 
 impl MicroBatcher {
     pub fn new(backbone: FrozenBackbone, registry: Arc<AdapterRegistry>) -> Self {
-        Self::with_deadline(backbone, registry, DEFAULT_FLUSH_DEADLINE)
+        Self::with_limits(backbone, registry, DEFAULT_FLUSH_DEADLINE, DEFAULT_QUEUE_BOUND)
     }
 
     /// `deadline_pumps` = 1 flushes on every pump with a non-empty queue
@@ -214,11 +234,23 @@ impl MicroBatcher {
         registry: Arc<AdapterRegistry>,
         deadline_pumps: u64,
     ) -> Self {
+        Self::with_limits(backbone, registry, deadline_pumps, DEFAULT_QUEUE_BOUND)
+    }
+
+    /// Full-control constructor: flush deadline AND queue bound.
+    pub fn with_limits(
+        backbone: FrozenBackbone,
+        registry: Arc<AdapterRegistry>,
+        deadline_pumps: u64,
+        queue_bound: usize,
+    ) -> Self {
         assert!(deadline_pumps > 0, "a zero deadline would never flush");
+        assert!(queue_bound > 0, "a zero queue bound would reject everything");
         Self {
             backbone,
             registry,
             queue: VecDeque::new(),
+            queue_bound,
             deadline_pumps,
             pump_count: 0,
             batches: 0,
@@ -247,10 +279,29 @@ impl MicroBatcher {
         self.backbone.shared_model()
     }
 
-    /// Queue a request for the next flush.
-    pub fn submit(&mut self, req: BatchRequest) {
+    /// The configured queue bound.
+    pub fn queue_bound(&self) -> usize {
+        self.queue_bound
+    }
+
+    /// Queue a request for the next flush, or reject it if the queue is
+    /// at its bound (back-pressure: the queue can NEVER exceed
+    /// `queue_bound`, so a load spike costs a typed rejection instead of
+    /// unbounded memory growth).
+    pub fn try_submit(&mut self, req: BatchRequest) -> Result<(), QueueFull> {
         assert_eq!(req.x.len(), self.backbone.n_in(), "request width mismatch");
+        if self.queue.len() >= self.queue_bound {
+            return Err(QueueFull { bound: self.queue_bound });
+        }
         self.queue.push_back((req, self.pump_count));
+        Ok(())
+    }
+
+    /// Queue a request, panicking at the bound — for tests and benches
+    /// that size their load under the bound by construction.
+    pub fn submit(&mut self, req: BatchRequest) {
+        self.try_submit(req)
+            .expect("micro-batch queue full (use try_submit for back-pressure)");
     }
 
     /// Deadline-aware flush: serve a micro-batch only when the queue has
@@ -523,6 +574,36 @@ mod tests {
         assert_eq!(batcher.pending(), 0);
         // empty queue: pumps are free no-ops
         assert_eq!(batcher.pump(&mut out), 0);
+    }
+
+    #[test]
+    fn queue_bound_rejects_and_never_exceeds() {
+        let mut rng = Rng::new(7);
+        let backbone = Mlp::new(&mut rng, cfg());
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 4);
+        let mut batcher = MicroBatcher::with_limits(fb, registry, 2, 6);
+        let mut rejected = 0;
+        for i in 0..10u64 {
+            let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            let req = BatchRequest { tenant: i, id: i, x, label: None };
+            match batcher.try_submit(req) {
+                Ok(()) => {}
+                Err(QueueFull { bound }) => {
+                    assert_eq!(bound, 6);
+                    rejected += 1;
+                }
+            }
+            assert!(batcher.pending() <= batcher.queue_bound());
+        }
+        assert_eq!(rejected, 4, "6 admitted, 4 rejected");
+        // draining frees capacity: admission resumes
+        let mut out = Vec::new();
+        assert_eq!(batcher.flush_all(&mut out), 6);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+        assert!(batcher
+            .try_submit(BatchRequest { tenant: 0, id: 99, x, label: None })
+            .is_ok());
     }
 
     #[test]

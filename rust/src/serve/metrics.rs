@@ -108,6 +108,14 @@ pub struct ServeMetrics {
     pub predicts: u64,
     pub feedbacks: u64,
     pub swaps: u64,
+    /// requests turned away because the bounded queue was at its limit
+    /// (back-pressure working as designed — never unbounded growth)
+    pub queue_rejections: u64,
+    /// requests turned away by a tenant's token bucket
+    pub rate_limited: u64,
+    /// idle tenants whose serve-side state was evicted (TTL policy);
+    /// published adapter versions survive eviction by construction
+    pub evictions: u64,
     pub adaptations: u64,
     /// fine-tune jobs that panicked and were isolated (`catch_unwind`)
     pub finetune_panics: u64,
@@ -128,6 +136,9 @@ impl Default for ServeMetrics {
             predicts: 0,
             feedbacks: 0,
             swaps: 0,
+            queue_rejections: 0,
+            rate_limited: 0,
+            evictions: 0,
             adaptations: 0,
             finetune_panics: 0,
             batches: 0,
@@ -181,10 +192,13 @@ impl ServeMetrics {
     /// Multi-line human report.
     pub fn report(&self) -> String {
         format!(
-            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n",
+            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  admission: {} queue-full, {} rate-limited, {} idle evictions\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n",
             self.predicts,
             self.feedbacks,
             self.swaps,
+            self.queue_rejections,
+            self.rate_limited,
+            self.evictions,
             self.batches,
             self.batched_rows,
             self.rows_per_batch(),
@@ -239,8 +253,12 @@ mod tests {
         m.batched_rows = 64;
         assert!((m.rows_per_batch() - 16.0).abs() < 1e-12);
         m.batch_forward.record_ns(5_000);
+        m.queue_rejections = 3;
+        m.rate_limited = 2;
+        m.evictions = 1;
         let r = m.report();
         assert!(r.contains("16.0 rows/batch"), "{r}");
         assert!(r.contains("n=1"), "{r}");
+        assert!(r.contains("3 queue-full, 2 rate-limited, 1 idle evictions"), "{r}");
     }
 }

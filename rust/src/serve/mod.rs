@@ -11,7 +11,9 @@
 //!   (`benches/serve_micro.rs` quantifies the win).
 //! * **Atomic hot swaps** ([`registry`]): a tenant's personalization is a
 //!   few KB of adapter weights, published as immutable copy-on-write
-//!   snapshots — fine-tune jobs never block readers.
+//!   snapshots into a tenant-id-hash SHARDED registry — fine-tune jobs
+//!   never block readers, and publishers on different shards never block
+//!   each other (scales past ~10⁵ tenants).
 //! * **Cache-carrying online adaptation** ([`server`]): per-tenant
 //!   Skip-Caches stay valid across adaptation rounds because the shared
 //!   backbone is frozen (§4.2); only overwritten buffer slots miss
@@ -26,6 +28,16 @@
 //! clones, and a lone request is served within
 //! `ServeConfig::flush_deadline_pumps` pumps instead of waiting for a
 //! full micro-batch.
+//!
+//! Overload is handled by an explicit admission-control pipeline
+//! (request → validate → per-tenant token bucket → bounded queue →
+//! batcher): the queue never exceeds `ServeConfig::queue_bound` (typed
+//! `Rejected(QueueFull)` back-pressure instead of unbounded growth), a
+//! tenant can be capped at a sustained request rate
+//! (`ServeConfig::rate_limit`), and tenants idle past
+//! `ServeConfig::idle_ttl_pumps` have their serve-side scratch evicted —
+//! published adapters always survive in the registry, so an evicted
+//! tenant's next request is served its latest version transparently.
 //!
 //! ## Quickstart
 //!
@@ -76,8 +88,11 @@ pub mod registry;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher};
+pub use batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher, QueueFull};
 pub use metrics::{LatencyHistogram, ServeMetrics};
-pub use registry::{AdapterRegistry, AdapterSnapshot, TenantId};
+pub use registry::{AdapterRegistry, AdapterSnapshot, ShardStats, TenantId};
 pub use scheduler::{PoolStats, WorkerPool};
-pub use server::{Completion, FleetServer, Request, Response, ServeConfig, ServerStats};
+pub use server::{
+    Completion, FleetServer, RateLimit, RejectReason, Request, Response, ServeConfig,
+    ServerStats,
+};

@@ -1,4 +1,4 @@
-//! Versioned per-tenant adapter registry with copy-on-write snapshots.
+//! Versioned per-tenant adapter registry, sharded by tenant-id hash.
 //!
 //! The whole point of the Skip-LoRA split for fleet serving: a tenant's
 //! entire personalization is a few KB of adapter weights (`nn::lora`), so
@@ -9,15 +9,41 @@
 //! the reader either sees the old complete set or the new complete set
 //! (verified by the concurrency property test in
 //! `tests/serve_subsystem.rs`).
+//!
+//! ## Sharding
+//!
+//! A single `RwLock<HashMap>` is a fleet-wide point of contention: every
+//! publish briefly stalls every reader, and past ~10⁵ tenants the lock
+//! (not the adapter math) becomes the serving bottleneck. The registry is
+//! therefore split into `shard_count()` independent shards, each its own
+//! `RwLock<HashMap>`. A tenant id routes to exactly one shard via a
+//! SplitMix64 finalizer (a pure function of the id and the shard count, so
+//! the same tenant ALWAYS lands on the same shard — property-tested in
+//! `tests/serve_subsystem.rs`), which means:
+//!
+//! * per-tenant version monotonicity needs only the shard-local write
+//!   lock (the global version counter is an atomic, never a lock);
+//! * publishers on different shards never contend with each other or
+//!   with readers of other shards;
+//! * [`AdapterRegistry::snapshot_many`] groups a micro-batch's tenants by
+//!   shard and takes one read lock per DISTINCT shard touched, not one
+//!   per request.
+//!
+//! `benches/serve_micro.rs` quantifies the sharded-vs-single-lock read
+//! throughput under concurrent publish load.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::nn::lora::LoraAdapter;
+use crate::util::rng::SplitMix64;
 
 /// Tenant identifier (a device / user / deployment slot).
 pub type TenantId = u64;
+
+/// Default shard count (power of two; `with_shards` to override).
+pub const DEFAULT_SHARDS: usize = 16;
 
 /// One immutable published adapter set. Never mutated after publish —
 /// hand out `Arc<AdapterSnapshot>` freely across threads.
@@ -40,12 +66,46 @@ impl AdapterSnapshot {
     }
 }
 
-/// The registry: tenant -> latest published snapshot.
+/// One shard: an independent tenant → snapshot map plus lock-traffic
+/// counters (the per-shard contention signal surfaced in `ShardStats`).
+/// The counters track TENANT-ROUTED operations only — whole-registry
+/// aggregates (`tenant_count`, `tenants`, `total_adapter_bytes`,
+/// `shard_stats`) touch every shard uniformly and would only dilute the
+/// routing-skew signal the counters exist to expose.
 #[derive(Debug, Default)]
-pub struct AdapterRegistry {
+struct Shard {
     map: RwLock<HashMap<TenantId, Arc<AdapterSnapshot>>>,
+    /// tenant-routed read-lock acquisitions (snapshot / snapshot_many)
+    reads: AtomicU64,
+    /// tenant-routed write-lock acquisitions (publish / remove)
+    writes: AtomicU64,
+}
+
+/// Per-shard diagnostics: how many tenants the shard holds and how much
+/// lock traffic it has absorbed. A heavily skewed `reads`/`writes` across
+/// shards would indicate a routing hot spot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    pub tenants: usize,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+/// The registry: tenant -> latest published snapshot, sharded by
+/// tenant-id hash.
+#[derive(Debug)]
+pub struct AdapterRegistry {
+    shards: Box<[Shard]>,
+    /// `shards.len() - 1`; shard count is always a power of two
+    mask: u64,
     next_version: AtomicU64,
     publishes: AtomicU64,
+}
+
+impl Default for AdapterRegistry {
+    fn default() -> Self {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
 }
 
 impl AdapterRegistry {
@@ -53,14 +113,47 @@ impl AdapterRegistry {
         Self::default()
     }
 
+    /// Registry with `shards` shards (rounded up to a power of two,
+    /// minimum 1). `with_shards(1)` is the old single-lock registry —
+    /// the bench baseline.
+    pub fn with_shards(shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..n).map(|_| Shard::default()).collect(),
+            mask: (n - 1) as u64,
+            next_version: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard `tenant` routes to — one `SplitMix64` step (the same
+    /// mixer the RNG substrate seeds with), a pure function of the id and
+    /// the shard count, so the same tenant always lands on the same
+    /// shard. Sequential tenant ids scatter across shards.
+    #[inline]
+    pub fn shard_of(&self, tenant: TenantId) -> usize {
+        (SplitMix64::new(tenant).next_u64() & self.mask) as usize
+    }
+
+    #[inline]
+    fn shard(&self, tenant: TenantId) -> &Shard {
+        &self.shards[self.shard_of(tenant)]
+    }
+
     /// Publish a new adapter set for `tenant`, replacing any previous
     /// version atomically. Returns the version allocated to THIS publish.
     ///
     /// Per-tenant versions are monotone even under racing publishers
-    /// (e.g. a background fine-tune job vs a `SwapAdapters` request): the
-    /// installed snapshot is compared under the write lock, so a stale
-    /// publisher can never overwrite a newer version — its publish is a
-    /// no-op and the newer adapters stay live.
+    /// (e.g. a background fine-tune job vs a `SwapAdapters` request):
+    /// a tenant lives on exactly one shard, and the installed snapshot is
+    /// compared under that shard's write lock, so a stale publisher can
+    /// never overwrite a newer version — its publish is a no-op and the
+    /// newer adapters stay live. Publishers on OTHER shards proceed in
+    /// parallel, untouched.
     pub fn publish(&self, tenant: TenantId, adapters: Vec<LoraAdapter>) -> u64 {
         let version = self.next_version.fetch_add(1, Ordering::Relaxed) + 1;
         let snap = Arc::new(AdapterSnapshot {
@@ -68,8 +161,10 @@ impl AdapterRegistry {
             version,
             adapters,
         });
+        let shard = self.shard(tenant);
+        shard.writes.fetch_add(1, Ordering::Relaxed);
         {
-            let mut map = self.map.write().expect("registry lock poisoned");
+            let mut map = shard.map.write().expect("registry shard poisoned");
             let newer_installed = map
                 .get(&tenant)
                 .is_some_and(|cur| cur.version > version);
@@ -82,28 +177,44 @@ impl AdapterRegistry {
     }
 
     /// Latest snapshot for `tenant` (an `Arc` clone — O(1), never blocks
-    /// publishers for longer than the read lock).
+    /// publishers on other shards, and blocks same-shard publishers for
+    /// no longer than the shard read lock).
     pub fn snapshot(&self, tenant: TenantId) -> Option<Arc<AdapterSnapshot>> {
-        self.map
+        let shard = self.shard(tenant);
+        shard.reads.fetch_add(1, Ordering::Relaxed);
+        shard
+            .map
             .read()
-            .expect("registry lock poisoned")
+            .expect("registry shard poisoned")
             .get(&tenant)
             .cloned()
     }
 
-    /// Latest snapshots for a batch of tenants under ONE read-lock
-    /// acquisition — the serving fan-out path (`MicroBatcher::flush`)
-    /// uses this so a B-row micro-batch costs one lock, not B.
-    /// Missing tenants are simply absent from the result.
+    /// Latest snapshots for a batch of tenants with ONE read-lock
+    /// acquisition per DISTINCT shard touched — the serving fan-out path
+    /// (`MicroBatcher::flush`) uses this so a B-row micro-batch costs at
+    /// most `min(B, shard_count)` locks, not B. Missing tenants are
+    /// simply absent from the result.
     pub fn snapshot_many(
         &self,
         tenants: impl IntoIterator<Item = TenantId>,
     ) -> HashMap<TenantId, Arc<AdapterSnapshot>> {
-        let map = self.map.read().expect("registry lock poisoned");
-        let mut out = HashMap::new();
+        // group by shard first, then lock each touched shard exactly once
+        let mut by_shard: Vec<Vec<TenantId>> = vec![Vec::new(); self.shards.len()];
         for t in tenants {
-            if let Some(snap) = map.get(&t) {
-                out.entry(t).or_insert_with(|| Arc::clone(snap));
+            by_shard[self.shard_of(t)].push(t);
+        }
+        let mut out = HashMap::new();
+        for (shard, wanted) in self.shards.iter().zip(&by_shard) {
+            if wanted.is_empty() {
+                continue;
+            }
+            shard.reads.fetch_add(1, Ordering::Relaxed);
+            let map = shard.map.read().expect("registry shard poisoned");
+            for &t in wanted {
+                if let Some(snap) = map.get(&t) {
+                    out.entry(t).or_insert_with(|| Arc::clone(snap));
+                }
             }
         }
         out
@@ -116,28 +227,58 @@ impl AdapterRegistry {
 
     /// Drop a tenant's adapters (fall back to the bare backbone).
     pub fn remove(&self, tenant: TenantId) -> bool {
-        self.map
+        let shard = self.shard(tenant);
+        shard.writes.fetch_add(1, Ordering::Relaxed);
+        shard
+            .map
             .write()
-            .expect("registry lock poisoned")
+            .expect("registry shard poisoned")
             .remove(&tenant)
             .is_some()
     }
 
     pub fn tenant_count(&self) -> usize {
-        self.map.read().expect("registry lock poisoned").len()
+        self.shards
+            .iter()
+            .map(|s| s.map.read().expect("registry shard poisoned").len())
+            .sum()
     }
 
-    /// Sorted tenant ids (diagnostics / iteration in tests).
+    /// Sorted tenant ids across all shards (diagnostics / tests).
     pub fn tenants(&self) -> Vec<TenantId> {
-        let mut v: Vec<TenantId> = self
+        let mut v: Vec<TenantId> = (0..self.shards.len())
+            .flat_map(|i| self.shard_tenants(i))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Sorted tenant ids held by shard `i`. The union over all shards is
+    /// exactly `tenants()` and the per-shard sets are disjoint
+    /// (property-tested).
+    pub fn shard_tenants(&self, i: usize) -> Vec<TenantId> {
+        let shard = &self.shards[i];
+        let mut v: Vec<TenantId> = shard
             .map
             .read()
-            .expect("registry lock poisoned")
+            .expect("registry shard poisoned")
             .keys()
             .copied()
             .collect();
         v.sort_unstable();
         v
+    }
+
+    /// Per-shard occupancy and lock-traffic counters.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| ShardStats {
+                tenants: s.map.read().expect("registry shard poisoned").len(),
+                reads: s.reads.load(Ordering::Relaxed),
+                writes: s.writes.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     /// Total publishes since creation.
@@ -147,11 +288,16 @@ impl AdapterRegistry {
 
     /// Fleet-wide adapter footprint in bytes.
     pub fn total_adapter_bytes(&self) -> usize {
-        self.map
-            .read()
-            .expect("registry lock poisoned")
-            .values()
-            .map(|s| s.byte_size())
+        self.shards
+            .iter()
+            .map(|s| {
+                s.map
+                    .read()
+                    .expect("registry shard poisoned")
+                    .values()
+                    .map(|snap| snap.byte_size())
+                    .sum::<usize>()
+            })
             .sum()
     }
 }
@@ -213,5 +359,76 @@ mod tests {
         reg.publish(1, adapters(&mut rng));
         // 3 adapters x (8*2 + 2*3) params x 4 bytes
         assert_eq!(reg.total_adapter_bytes(), 3 * (8 * 2 + 2 * 3) * 4);
+    }
+
+    #[test]
+    fn shard_count_rounds_up_to_power_of_two() {
+        assert_eq!(AdapterRegistry::with_shards(0).shard_count(), 1);
+        assert_eq!(AdapterRegistry::with_shards(1).shard_count(), 1);
+        assert_eq!(AdapterRegistry::with_shards(5).shard_count(), 8);
+        assert_eq!(AdapterRegistry::with_shards(16).shard_count(), 16);
+        assert_eq!(AdapterRegistry::new().shard_count(), DEFAULT_SHARDS);
+    }
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let reg = AdapterRegistry::with_shards(8);
+        for t in 0..1000u64 {
+            let s = reg.shard_of(t);
+            assert!(s < reg.shard_count());
+            assert_eq!(s, reg.shard_of(t), "routing must be deterministic");
+        }
+    }
+
+    #[test]
+    fn tenants_spread_across_shards() {
+        // sequential ids must NOT all land on one shard (the hash mixes)
+        let reg = AdapterRegistry::with_shards(8);
+        let mut rng = Rng::new(4);
+        for t in 0..256u64 {
+            reg.publish(t, adapters(&mut rng));
+        }
+        let stats = reg.shard_stats();
+        let occupied = stats.iter().filter(|s| s.tenants > 0).count();
+        assert_eq!(occupied, 8, "all shards should hold tenants: {stats:?}");
+        let max = stats.iter().map(|s| s.tenants).max().unwrap();
+        assert!(max < 256 / 2, "heavily skewed routing: {stats:?}");
+    }
+
+    #[test]
+    fn snapshot_many_crosses_shards() {
+        let reg = AdapterRegistry::with_shards(4);
+        let mut rng = Rng::new(5);
+        for t in 0..32u64 {
+            reg.publish(t, adapters(&mut rng));
+        }
+        let snaps = reg.snapshot_many((0..40u64).chain([7, 7])); // dups + missing
+        assert_eq!(snaps.len(), 32);
+        for (t, snap) in &snaps {
+            assert_eq!(snap.tenant, *t);
+        }
+    }
+
+    #[test]
+    fn single_shard_registry_still_works() {
+        let reg = AdapterRegistry::with_shards(1);
+        let mut rng = Rng::new(6);
+        for t in 0..10u64 {
+            reg.publish(t, adapters(&mut rng));
+        }
+        assert_eq!(reg.tenant_count(), 10);
+        assert_eq!(reg.shard_tenants(0), (0..10u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_stats_count_lock_traffic() {
+        let reg = AdapterRegistry::with_shards(2);
+        let mut rng = Rng::new(7);
+        reg.publish(3, adapters(&mut rng));
+        reg.snapshot(3);
+        let stats = reg.shard_stats();
+        let s = stats[reg.shard_of(3)];
+        assert!(s.writes >= 1, "{stats:?}");
+        assert!(s.reads >= 1, "{stats:?}");
     }
 }

@@ -117,6 +117,17 @@ impl WorkerPool {
         s.saturating_sub(e)
     }
 
+    /// Per-worker queue depths (jobs waiting, not counting the one a
+    /// worker may be running) — the backlog-skew diagnostic that pairs
+    /// with the registry's per-shard `ShardStats`.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared
+            .queues
+            .iter()
+            .map(|q| q.lock().expect("worker queue poisoned").len())
+            .collect()
+    }
+
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         while self.pending() > 0 {
@@ -275,5 +286,13 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn queue_depths_report_per_worker_backlog() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.queue_depths(), vec![0, 0, 0]);
+        pool.wait_idle();
+        assert_eq!(pool.queue_depths().iter().sum::<usize>(), 0);
     }
 }

@@ -1,12 +1,19 @@
 //! The fleet front-end: Predict / Feedback / SwapAdapters / Stats over one
 //! shared frozen backbone and per-tenant Skip-LoRA adapter sets.
 //!
-//! Request flow:
+//! Request flow (the admission-control pipeline, DESIGN.md §8):
 //!
-//! 1. `handle` queues Predict/Feedback into the cross-tenant
-//!    [`MicroBatcher`](crate::serve::batcher::MicroBatcher) and returns a
-//!    ticket; `pump` flushes one micro-batch (when full, or when the
-//!    oldest request hits the flush deadline) and yields [`Completion`]s.
+//! 1. `handle` validates a Predict/Feedback request, charges the tenant's
+//!    token bucket (per-tenant rate limiting), and queues it into the
+//!    BOUNDED cross-tenant
+//!    [`MicroBatcher`](crate::serve::batcher::MicroBatcher) — returning a
+//!    ticket, or a typed [`RejectReason`] (`RateLimited` / `QueueFull`)
+//!    under overload so the server degrades into back-pressure instead of
+//!    unbounded queue growth. `pump` flushes one micro-batch (when full,
+//!    or when the oldest request hits the flush deadline) and yields
+//!    [`Completion`]s; it also sweeps idle tenants past their TTL out of
+//!    the per-tenant state map (their published adapters stay in the
+//!    registry — eviction only drops serve-side scratch).
 //! 2. Feedback completions drive the per-tenant
 //!    [`DriftDetector`](crate::coordinator::core::DriftDetector) +
 //!    [`FeedbackBuffer`](crate::coordinator::core::FeedbackBuffer) (the
@@ -42,7 +49,7 @@ use crate::method::Method;
 use crate::model::mlp::AdapterTopology;
 use crate::model::{AdapterSet, Mlp};
 use crate::nn::lora::LoraAdapter;
-use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, MAX_RANK};
+use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, QueueFull, MAX_RANK};
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::registry::{AdapterRegistry, TenantId};
 use crate::serve::scheduler::WorkerPool;
@@ -50,6 +57,24 @@ use crate::tensor::ops::Backend;
 use crate::train::FineTuner;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
+
+/// Per-tenant token-bucket rate limit, measured in pump ticks (the
+/// server's deterministic clock — wall-clock-free so admission decisions
+/// are exactly replayable in tests).
+///
+/// A tenant's bucket starts full at `burst` tokens; each admitted
+/// Predict/Feedback request costs one token; `tokens_per_pump` tokens
+/// drip back per [`FleetServer::pump`] call (lazily, on the tenant's next
+/// request — refill is O(1), never a fleet-wide sweep). A tenant can
+/// therefore burst up to `burst` requests instantly but sustain at most
+/// `tokens_per_pump` requests per pump.
+#[derive(Clone, Copy, Debug)]
+pub struct RateLimit {
+    /// bucket capacity (max burst size), ≥ 1
+    pub burst: f64,
+    /// sustained admission rate, tokens per pump tick
+    pub tokens_per_pump: f64,
+}
 
 /// Server configuration (per-tenant knobs mirror `AgentConfig`).
 #[derive(Clone, Debug)]
@@ -59,6 +84,19 @@ pub struct ServeConfig {
     /// flush a partial micro-batch once its oldest request has waited
     /// this many `pump` calls (1 = flush every pump, the greedy policy)
     pub flush_deadline_pumps: u64,
+    /// hard bound on the request queue; requests past it get a typed
+    /// `Rejected(QueueFull)` instead of growing the queue without limit
+    pub queue_bound: usize,
+    /// per-tenant token-bucket rate limit; `None` disables rate limiting
+    pub rate_limit: Option<RateLimit>,
+    /// evict a tenant's serve-side state (SkipCache, drift window,
+    /// feedback buffer) after this many pumps of inactivity; `None`
+    /// disables eviction. Published adapter versions are NEVER dropped —
+    /// an evicted tenant is transparently re-admitted on its next request
+    /// and served its latest registry snapshot.
+    pub idle_ttl_pumps: Option<u64>,
+    /// adapter-registry shard count (power of two; 1 = single lock)
+    pub registry_shards: usize,
     /// compute backend for the shared forward and fine-tune jobs
     pub backend: Backend,
     /// per-tenant sliding accuracy window length
@@ -86,6 +124,10 @@ impl Default for ServeConfig {
         Self {
             batch_capacity: 32,
             flush_deadline_pumps: crate::serve::batcher::DEFAULT_FLUSH_DEADLINE,
+            queue_bound: crate::serve::batcher::DEFAULT_QUEUE_BOUND,
+            rate_limit: None,
+            idle_ttl_pumps: None,
+            registry_shards: crate::serve::registry::DEFAULT_SHARDS,
             backend: Backend::Blocked,
             window: 30,
             accuracy_threshold: 0.75,
@@ -112,6 +154,19 @@ pub enum Request {
     Stats,
 }
 
+/// Why a request was turned away — typed so clients can react correctly
+/// (retry later vs fix the request) and so every rejection path is
+/// countable in [`ServerStats`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum RejectReason {
+    /// the bounded request queue is at its limit — back off and retry
+    QueueFull { bound: usize },
+    /// the tenant's token bucket is empty — retry after the bucket drips
+    RateLimited,
+    /// the request itself is invalid (shape / label / adapter mismatch)
+    Malformed(String),
+}
+
 /// Immediate response to `handle` (Predict/Feedback resolve later via
 /// [`FleetServer::pump`]).
 #[derive(Debug)]
@@ -119,7 +174,7 @@ pub enum Response {
     /// queued into the micro-batch; the ticket reappears in a Completion
     Queued { ticket: u64 },
     Swapped { version: u64 },
-    Rejected(String),
+    Rejected(RejectReason),
     Stats(Box<ServerStats>),
 }
 
@@ -146,6 +201,18 @@ pub struct ServerStats {
     pub rows: u64,
     pub rows_per_batch: f64,
     pub adapter_bytes: usize,
+    /// requests rejected because the bounded queue was at its limit
+    pub queue_rejections: u64,
+    /// requests rejected by the per-tenant token bucket
+    pub rate_limited: u64,
+    /// idle tenants whose serve-side state was evicted (TTL policy)
+    pub evictions: u64,
+    /// requests currently waiting in the (bounded) queue
+    pub queued: usize,
+    /// the queue's configured bound — `queued` never exceeds this
+    pub queue_bound: usize,
+    /// adapter-registry shard count
+    pub registry_shards: usize,
 }
 
 struct TenantState {
@@ -157,10 +224,17 @@ struct TenantState {
     feedbacks: u64,
     /// training-set accuracy reported by the most recent fine-tune
     last_adapt_accuracy: f64,
+    /// pump tick of the tenant's most recent request/feedback — drives
+    /// the idle-TTL eviction sweep
+    last_active_tick: u64,
+    /// token-bucket fill (only meaningful when rate limiting is on)
+    bucket_tokens: f64,
+    /// pump tick of the last lazy bucket refill
+    bucket_tick: u64,
 }
 
 impl TenantState {
-    fn new(cfg: &ServeConfig) -> Self {
+    fn new(cfg: &ServeConfig, tick: u64) -> Self {
         Self {
             detector: DriftDetector::new(cfg.window, cfg.accuracy_threshold),
             buffer: FeedbackBuffer::new(cfg.buffer_target),
@@ -168,6 +242,10 @@ impl TenantState {
             adaptations: 0,
             feedbacks: 0,
             last_adapt_accuracy: 0.0,
+            last_active_tick: tick,
+            // a fresh (or re-admitted) tenant starts with a full bucket
+            bucket_tokens: cfg.rate_limit.map_or(0.0, |rl| rl.burst),
+            bucket_tick: tick,
         }
     }
 }
@@ -206,6 +284,10 @@ pub struct FleetServer {
     results_rx: mpsc::Receiver<AdaptMsg>,
     pub metrics: ServeMetrics,
     next_ticket: u64,
+    /// the server's deterministic clock: increments once per `pump`.
+    /// Token-bucket refills and the idle-TTL sweep both run on it, so
+    /// admission/eviction behavior is exactly replayable in tests.
+    pump_tick: u64,
 }
 
 impl FleetServer {
@@ -213,12 +295,31 @@ impl FleetServer {
     /// live in the registry). Accepts an owned `Mlp` or an existing
     /// `Arc<Mlp>`.
     pub fn new(backbone: impl Into<Arc<Mlp>>, cfg: ServeConfig) -> Self {
+        if let Some(rl) = cfg.rate_limit {
+            // a burst below one token would silently reject EVERY request
+            // forever (the refill caps at `burst`); catch it at deploy
+            // time like the batcher's own limit asserts
+            assert!(
+                rl.burst >= 1.0 && rl.burst.is_finite(),
+                "rate_limit.burst must be >= 1 (got {})",
+                rl.burst
+            );
+            assert!(
+                rl.tokens_per_pump >= 0.0 && rl.tokens_per_pump.is_finite(),
+                "rate_limit.tokens_per_pump must be finite and >= 0 (got {})",
+                rl.tokens_per_pump
+            );
+        }
         let backbone: Arc<Mlp> = backbone.into();
-        let registry = Arc::new(AdapterRegistry::new());
+        let registry = Arc::new(AdapterRegistry::with_shards(cfg.registry_shards));
         let frozen =
             FrozenBackbone::new(Arc::clone(&backbone), cfg.backend, cfg.batch_capacity);
-        let batcher =
-            MicroBatcher::with_deadline(frozen, Arc::clone(&registry), cfg.flush_deadline_pumps);
+        let batcher = MicroBatcher::with_limits(
+            frozen,
+            Arc::clone(&registry),
+            cfg.flush_deadline_pumps,
+            cfg.queue_bound,
+        );
         let pool = (cfg.workers > 0).then(|| WorkerPool::new(cfg.workers));
         let (results_tx, results_rx) = mpsc::channel();
         Self {
@@ -232,6 +333,7 @@ impl FleetServer {
             results_rx,
             metrics: ServeMetrics::new(),
             next_ticket: 0,
+            pump_tick: 0,
         }
     }
 
@@ -253,49 +355,64 @@ impl FleetServer {
         self.batcher.n_out()
     }
 
-    /// Handle one front-end request.
+    /// Handle one front-end request. Predict/Feedback run the admission
+    /// pipeline: validate → per-tenant token bucket → bounded queue; each
+    /// stage rejects with its own typed [`RejectReason`].
     pub fn handle(&mut self, tenant: TenantId, req: Request) -> Response {
         match req {
             Request::Predict(x) => {
                 if x.len() != self.n_in() {
-                    return Response::Rejected(format!(
+                    return Response::Rejected(RejectReason::Malformed(format!(
                         "expected {} features, got {}",
                         self.n_in(),
                         x.len()
-                    ));
+                    )));
                 }
-                self.metrics.predicts += 1;
-                Response::Queued { ticket: self.enqueue(tenant, x, None) }
+                match self.admit_and_enqueue(tenant, x, None) {
+                    Ok(ticket) => {
+                        self.metrics.predicts += 1;
+                        Response::Queued { ticket }
+                    }
+                    Err(reason) => Response::Rejected(reason),
+                }
             }
             Request::Feedback(x, label) => {
                 if x.len() != self.n_in() {
-                    return Response::Rejected(format!(
+                    return Response::Rejected(RejectReason::Malformed(format!(
                         "expected {} features, got {}",
                         self.n_in(),
                         x.len()
-                    ));
+                    )));
                 }
                 if label >= self.n_classes() {
-                    return Response::Rejected(format!(
+                    return Response::Rejected(RejectReason::Malformed(format!(
                         "label {label} out of range (n_classes {})",
                         self.n_classes()
-                    ));
+                    )));
                 }
-                self.metrics.feedbacks += 1;
-                Response::Queued { ticket: self.enqueue(tenant, x, Some(label)) }
+                match self.admit_and_enqueue(tenant, x, Some(label)) {
+                    Ok(ticket) => {
+                        self.metrics.feedbacks += 1;
+                        Response::Queued { ticket }
+                    }
+                    Err(reason) => Response::Rejected(reason),
+                }
             }
             Request::SwapAdapters(adapters) => match self.validate_adapters(&adapters) {
                 Ok(()) => {
-                    self.tenants
+                    let tick = self.pump_tick;
+                    let st = self
+                        .tenants
                         .entry(tenant)
-                        .or_insert_with(|| TenantState::new(&self.cfg));
+                        .or_insert_with(|| TenantState::new(&self.cfg, tick));
+                    st.last_active_tick = tick;
                     // adapters are weights-only by construction — nothing
                     // to compact before the registry snapshot
                     let version = self.registry.publish(tenant, adapters);
                     self.metrics.swaps += 1;
                     Response::Swapped { version }
                 }
-                Err(msg) => Response::Rejected(msg),
+                Err(msg) => Response::Rejected(RejectReason::Malformed(msg)),
             },
             Request::Stats => Response::Stats(Box::new(self.stats())),
         }
@@ -327,14 +444,44 @@ impl FleetServer {
         Ok(())
     }
 
-    fn enqueue(&mut self, tenant: TenantId, x: Vec<f32>, label: Option<usize>) -> u64 {
-        self.tenants
+    /// The admission pipeline for one Predict/Feedback request: create or
+    /// re-admit the tenant's state, charge its token bucket, then try the
+    /// bounded queue. Every rejection is counted in [`ServeMetrics`].
+    fn admit_and_enqueue(
+        &mut self,
+        tenant: TenantId,
+        x: Vec<f32>,
+        label: Option<usize>,
+    ) -> Result<u64, RejectReason> {
+        let tick = self.pump_tick;
+        let rate_limit = self.cfg.rate_limit;
+        let st = self
+            .tenants
             .entry(tenant)
-            .or_insert_with(|| TenantState::new(&self.cfg));
-        self.next_ticket += 1;
-        let id = self.next_ticket;
-        self.batcher.submit(BatchRequest { tenant, id, x, label });
-        id
+            .or_insert_with(|| TenantState::new(&self.cfg, tick));
+        st.last_active_tick = tick;
+        if let Some(rl) = rate_limit {
+            // lazy refill: tokens drip per pump tick, capped at the burst
+            let elapsed = tick.saturating_sub(st.bucket_tick) as f64;
+            st.bucket_tokens = (st.bucket_tokens + elapsed * rl.tokens_per_pump).min(rl.burst);
+            st.bucket_tick = tick;
+            if st.bucket_tokens < 1.0 {
+                self.metrics.rate_limited += 1;
+                return Err(RejectReason::RateLimited);
+            }
+            st.bucket_tokens -= 1.0;
+        }
+        let id = self.next_ticket + 1;
+        match self.batcher.try_submit(BatchRequest { tenant, id, x, label }) {
+            Ok(()) => {
+                self.next_ticket = id;
+                Ok(id)
+            }
+            Err(QueueFull { bound }) => {
+                self.metrics.queue_rejections += 1;
+                Err(RejectReason::QueueFull { bound })
+            }
+        }
     }
 
     /// Requests queued but not yet served.
@@ -342,11 +489,14 @@ impl FleetServer {
         self.batcher.pending()
     }
 
-    /// Drain finished fine-tune jobs, pump the micro-batcher once (it
-    /// flushes when full or past the deadline), and process feedback
-    /// (drift detection + adaptation launch). Returns the served requests.
+    /// Drain finished fine-tune jobs, sweep idle tenants past their TTL,
+    /// pump the micro-batcher once (it flushes when full or past the
+    /// deadline), and process feedback (drift detection + adaptation
+    /// launch). Returns the served requests.
     pub fn pump(&mut self) -> Vec<Completion> {
+        self.pump_tick += 1;
         self.drain_adapt_results();
+        self.evict_idle();
         let mut responses = Vec::new();
         let t0 = Instant::now();
         let n = self.batcher.pump(&mut responses);
@@ -386,11 +536,40 @@ impl FleetServer {
         all
     }
 
+    /// TTL eviction: drop the serve-side state (SkipCache, drift window,
+    /// feedback buffer, token bucket) of tenants idle past
+    /// `idle_ttl_pumps`. Published adapter versions live in the registry
+    /// and are untouched — the next request from an evicted tenant
+    /// re-admits it transparently and is served its latest snapshot. A
+    /// tenant with a fine-tune job in flight is never evicted (its cache
+    /// must come home first). The sweep is amortized to every `ttl/4`
+    /// pumps, so a tenant is evicted at most ~1.25×TTL after going idle.
+    fn evict_idle(&mut self) {
+        let Some(ttl) = self.cfg.idle_ttl_pumps else {
+            return;
+        };
+        let sweep_every = (ttl / 4).max(1);
+        if self.pump_tick % sweep_every != 0 {
+            return;
+        }
+        let tick = self.pump_tick;
+        let before = self.tenants.len();
+        self.tenants.retain(|_, st| {
+            st.cache.is_none() || tick.saturating_sub(st.last_active_tick) < ttl
+        });
+        self.metrics.evictions += (before - self.tenants.len()) as u64;
+    }
+
     fn apply_feedback(&mut self, tenant: TenantId, x: Vec<f32>, label: usize, correct: bool) {
+        let tick = self.pump_tick;
+        // the tenant can have been evicted between enqueue and flush (a
+        // TTL shorter than the queue dwell): re-admit with fresh state
+        // rather than dropping the feedback
         let st = self
             .tenants
-            .get_mut(&tenant)
-            .expect("tenant state created on enqueue");
+            .entry(tenant)
+            .or_insert_with(|| TenantState::new(&self.cfg, tick));
+        st.last_active_tick = tick;
         st.feedbacks += 1;
         st.detector.push(correct);
         if let Some(cache) = st.cache.as_mut() {
@@ -548,6 +727,12 @@ impl FleetServer {
             rows: self.batcher.rows,
             rows_per_batch: self.metrics.rows_per_batch(),
             adapter_bytes: self.registry.total_adapter_bytes(),
+            queue_rejections: self.metrics.queue_rejections,
+            rate_limited: self.metrics.rate_limited,
+            evictions: self.metrics.evictions,
+            queued: self.batcher.pending(),
+            queue_bound: self.batcher.queue_bound(),
+            registry_shards: self.registry.shard_count(),
         }
     }
 
@@ -780,7 +965,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let bad = vec![LoraAdapter::new(&mut rng, 4, 2, 3)];
         match s.handle(7, Request::SwapAdapters(bad)) {
-            Response::Rejected(_) => {}
+            Response::Rejected(RejectReason::Malformed(_)) => {}
             other => panic!("expected rejection, got {other:?}"),
         }
         // oversized rank must be rejected up front, not panic the
@@ -790,7 +975,9 @@ mod tests {
             .map(|&n_in| LoraAdapter::new(&mut rng, n_in, MAX_RANK + 1, 3))
             .collect();
         match s.handle(7, Request::SwapAdapters(huge_rank)) {
-            Response::Rejected(msg) => assert!(msg.contains("rank"), "{msg}"),
+            Response::Rejected(RejectReason::Malformed(msg)) => {
+                assert!(msg.contains("rank"), "{msg}")
+            }
             other => panic!("expected rank rejection, got {other:?}"),
         }
         let good: Vec<LoraAdapter> = [8usize, 12, 12]
@@ -823,13 +1010,147 @@ mod tests {
     fn rejects_malformed_requests() {
         let mut s = server(0);
         match s.handle(1, Request::Predict(vec![0.0; 3])) {
-            Response::Rejected(_) => {}
+            Response::Rejected(RejectReason::Malformed(_)) => {}
             other => panic!("{other:?}"),
         }
         match s.handle(1, Request::Feedback(vec![0.0; 8], 99)) {
-            Response::Rejected(_) => {}
+            Response::Rejected(RejectReason::Malformed(_)) => {}
             other => panic!("{other:?}"),
         }
+        // malformed requests never charge admission counters
+        let stats = s.stats();
+        assert_eq!(stats.queue_rejections, 0);
+        assert_eq!(stats.rate_limited, 0);
+    }
+
+    #[test]
+    fn queue_full_gets_typed_rejection_and_is_counted() {
+        let mut s = FleetServer::new(
+            {
+                let cfg =
+                    MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+                let pre = clustered(0, 120, 0.0);
+                pretrain(cfg, &pre, 50, 0.05, 1, Backend::Blocked)
+            },
+            ServeConfig { batch_capacity: 4, queue_bound: 6, ..Default::default() },
+        );
+        let data = clustered(1, 10, 0.0);
+        let mut queued = 0;
+        let mut rejected = 0;
+        for i in 0..10 {
+            match s.handle(1, Request::Predict(data.x.row(i).to_vec())) {
+                Response::Queued { .. } => queued += 1,
+                Response::Rejected(RejectReason::QueueFull { bound }) => {
+                    assert_eq!(bound, 6);
+                    rejected += 1;
+                }
+                other => panic!("{other:?}"),
+            }
+            assert!(s.queued() <= 6, "queue grew past its bound");
+        }
+        assert_eq!((queued, rejected), (6, 4));
+        assert_eq!(s.stats().queue_rejections, 4);
+        // every ADMITTED request is served; the rejected ones are gone
+        assert_eq!(s.pump_until_drained().len(), 6);
+        assert_eq!(s.stats().queued, 0);
+    }
+
+    #[test]
+    fn token_bucket_bursts_then_sustains_the_configured_rate() {
+        let mut s = FleetServer::new(
+            {
+                let cfg =
+                    MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+                let pre = clustered(0, 120, 0.0);
+                pretrain(cfg, &pre, 50, 0.05, 1, Backend::Blocked)
+            },
+            ServeConfig {
+                batch_capacity: 16,
+                rate_limit: Some(RateLimit { burst: 3.0, tokens_per_pump: 1.0 }),
+                ..Default::default()
+            },
+        );
+        let data = clustered(2, 10, 0.0);
+        let x = || data.x.row(0).to_vec();
+        // burst: exactly `burst` requests admitted on tick 0
+        let mut admitted = 0;
+        for _ in 0..8 {
+            match s.handle(1, Request::Predict(x())) {
+                Response::Queued { .. } => admitted += 1,
+                Response::Rejected(RejectReason::RateLimited) => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(admitted, 3, "burst must cap instant admission");
+        assert_eq!(s.stats().rate_limited, 5);
+        // one pump drips one token: exactly one more admission
+        s.pump();
+        match s.handle(1, Request::Predict(x())) {
+            Response::Queued { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        match s.handle(1, Request::Predict(x())) {
+            Response::Rejected(RejectReason::RateLimited) => {}
+            other => panic!("{other:?}"),
+        }
+        // OTHER tenants have their own buckets — unaffected
+        match s.handle(2, Request::Predict(x())) {
+            Response::Queued { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        s.pump_until_drained();
+    }
+
+    #[test]
+    fn idle_tenant_is_evicted_and_readmitted_with_latest_adapters() {
+        let mut s = FleetServer::new(
+            {
+                let cfg =
+                    MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+                let pre = clustered(0, 120, 0.0);
+                pretrain(cfg, &pre, 50, 0.05, 1, Backend::Blocked)
+            },
+            ServeConfig {
+                batch_capacity: 4,
+                idle_ttl_pumps: Some(8),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(13);
+        let ads: Vec<LoraAdapter> = [8usize, 12, 12]
+            .iter()
+            .map(|&n_in| LoraAdapter::new(&mut rng, n_in, 2, 3))
+            .collect();
+        let version = match s.handle(5, Request::SwapAdapters(ads)) {
+            Response::Swapped { version } => version,
+            other => panic!("{other:?}"),
+        };
+        let data = clustered(3, 10, 0.0);
+        s.handle(5, Request::Feedback(data.x.row(0).to_vec(), data.labels[0]));
+        s.pump_until_drained();
+        assert_eq!(s.tenant_feedbacks(5), 1);
+        assert_eq!(s.tenant_count(), 1);
+
+        // idle past the TTL: serve-side state is swept...
+        for _ in 0..20 {
+            s.pump();
+        }
+        assert_eq!(s.tenant_count(), 0, "idle tenant not evicted");
+        assert!(s.stats().evictions >= 1);
+        // ...but the published adapters are NOT dropped
+        assert_eq!(s.tenant_version(5), version);
+
+        // transparent re-admission: served with the latest snapshot and
+        // a fresh (empty) serve state
+        match s.handle(5, Request::Predict(data.x.row(1).to_vec())) {
+            Response::Queued { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        let done = s.pump_until_drained();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].adapter_version, version, "latest adapters served");
+        assert_eq!(s.tenant_count(), 1, "tenant re-admitted");
+        assert_eq!(s.tenant_feedbacks(5), 0, "fresh serve state after eviction");
     }
 
     #[test]

@@ -1,7 +1,9 @@
-//! Property-based testing substrate (no `proptest` crate offline) plus
+//! Property-based testing substrate (no `proptest` crate offline),
+//! seeded multi-thread stress driver (no `loom`/`shuttle`), plus
 //! compile-time marker-trait assertions (no `static_assertions` crate).
 
 pub mod prop;
+pub mod stress;
 
 /// Compile-time assertion that `T: Send + Sync` — monomorphizing this
 /// function IS the check, so a regression (e.g. someone re-introducing a

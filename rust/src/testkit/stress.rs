@@ -1,0 +1,253 @@
+//! Seeded multi-thread stress driver (no `loom`/`shuttle` offline).
+//!
+//! Concurrency tests in this repo used to hand-roll the same scaffolding:
+//! spawn N writer threads doing a bounded amount of seeded work, spin M
+//! reader threads asserting invariants until the writers finish, then make
+//! final assertions. This module owns that scaffolding so every stress
+//! test is declared the same way and every input is derived from ONE
+//! `StressConfig::seed`:
+//!
+//! * each **worker** gets an independent, deterministically derived RNG
+//!   and a bounded op budget (`ops`) — inputs are exactly replayable from
+//!   the seed even though the OS interleaves the threads differently run
+//!   to run (the asserted invariants must hold under EVERY interleaving,
+//!   which is precisely what makes them worth stress-testing);
+//! * each **observer** gets its own derived RNG and runs until every
+//!   worker has finished (`ObserverCtx::workers_live`), checking
+//!   invariants against the shared state the whole time;
+//! * worker/observer return values are collected into a [`StressReport`]
+//!   for final whole-run assertions.
+//!
+//! Used by `tests/serve_subsystem.rs`, `tests/shared_backbone.rs`, and
+//! the `#[ignore]`-tagged long-running tests in `tests/serve_stress.rs`
+//! (run in CI's `stress` job via `cargo test --release -- --ignored`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Shape of one stress run.
+#[derive(Clone, Copy, Debug)]
+pub struct StressConfig {
+    /// worker threads doing the bounded mutating work
+    pub workers: usize,
+    /// op budget per worker (bounded: the run always terminates)
+    pub ops: usize,
+    /// observer threads asserting invariants while workers run
+    pub observers: usize,
+    /// root seed every thread's RNG is derived from
+    pub seed: u64,
+}
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        Self { workers: 4, ops: 100, observers: 2, seed: 0x57E55_5EED }
+    }
+}
+
+/// Everything a worker closure receives: its index, its op budget, and
+/// its own deterministically derived RNG stream.
+pub struct WorkerCtx {
+    pub index: usize,
+    pub ops: usize,
+    pub rng: Rng,
+}
+
+/// Everything an observer closure receives. Observers poll
+/// [`ObserverCtx::workers_live`] and return once it goes false.
+pub struct ObserverCtx<'a> {
+    pub index: usize,
+    pub rng: Rng,
+    live: &'a AtomicUsize,
+}
+
+impl ObserverCtx<'_> {
+    /// `true` while at least one worker is still running. An observer
+    /// loop conditioned on this is guaranteed to terminate because every
+    /// worker's op budget is bounded.
+    pub fn workers_live(&self) -> bool {
+        self.live.load(Ordering::Acquire) > 0
+    }
+}
+
+/// Per-thread results of one run.
+#[derive(Debug)]
+pub struct StressReport<W, O> {
+    /// worker return values, indexed by worker
+    pub workers: Vec<W>,
+    /// observer return values, indexed by observer
+    pub observers: Vec<O>,
+}
+
+/// Derive an independent seed for thread `index` in role `role` — one
+/// SplitMix64 step over a domain-separated input, so worker 0 and
+/// observer 0 never share a stream.
+fn derived_seed(seed: u64, role: u64, index: usize) -> u64 {
+    SplitMix64::new(seed ^ role.rotate_left(32) ^ (index as u64).wrapping_mul(0x9E37_79B9))
+        .next_u64()
+}
+
+/// Decrements the live-worker counter on drop — INCLUDING on unwind, so
+/// a panicking worker still releases its observers (they would otherwise
+/// spin on `workers_live()` forever and the run would hang instead of
+/// failing with the seed).
+struct LiveGuard<'a>(&'a AtomicUsize);
+
+impl Drop for LiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// Run `cfg.workers` worker threads and `cfg.observers` observer threads
+/// against `shared`, collecting both sides' return values.
+///
+/// Workers run `worker(ctx, shared)` once each — the closure performs its
+/// `ctx.ops`-bounded work loop (keeping per-worker state like a tuner or
+/// a cache across ops is the closure's business). Observers run
+/// `observer(ctx, shared)` once each and are expected to loop on
+/// `ctx.workers_live()`. Panics in any thread propagate to the caller
+/// (the test fails), as a stress test should.
+pub fn run<S, W, T, O, U>(
+    cfg: &StressConfig,
+    shared: &S,
+    worker: W,
+    observer: O,
+) -> StressReport<T, U>
+where
+    S: Sync + ?Sized,
+    W: Fn(WorkerCtx, &S) -> T + Sync,
+    O: Fn(ObserverCtx<'_>, &S) -> U + Sync,
+    T: Send,
+    U: Send,
+{
+    assert!(cfg.workers > 0, "a stress run needs at least one worker");
+    let live = AtomicUsize::new(cfg.workers);
+    let (worker, observer, live_ref) = (&worker, &observer, &live);
+    std::thread::scope(|scope| {
+        let worker_handles: Vec<_> = (0..cfg.workers)
+            .map(|i| {
+                scope.spawn(move || {
+                    // drop guard, not a trailing decrement: a panicking
+                    // worker must still release the observers
+                    let _live = LiveGuard(live_ref);
+                    let ctx = WorkerCtx {
+                        index: i,
+                        ops: cfg.ops,
+                        rng: Rng::new(derived_seed(cfg.seed, 0xA11CE, i)),
+                    };
+                    worker(ctx, shared)
+                })
+            })
+            .collect();
+        let observer_handles: Vec<_> = (0..cfg.observers)
+            .map(|i| {
+                scope.spawn(move || {
+                    let ctx = ObserverCtx {
+                        index: i,
+                        rng: Rng::new(derived_seed(cfg.seed, 0x0B5E6, i)),
+                        live: live_ref,
+                    };
+                    observer(ctx, shared)
+                })
+            })
+            .collect();
+        StressReport {
+            workers: worker_handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect(),
+            observers: observer_handles
+                .into_iter()
+                .map(|h| h.join().expect("observer panicked"))
+                .collect(),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_workers_and_observers_run_and_report() {
+        let counter = AtomicU64::new(0);
+        let cfg = StressConfig { workers: 3, ops: 50, observers: 2, seed: 1 };
+        let report = run(
+            &cfg,
+            &counter,
+            |ctx, c: &AtomicU64| {
+                for _ in 0..ctx.ops {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+                ctx.index
+            },
+            |ctx, c: &AtomicU64| {
+                let mut last = 0;
+                while ctx.workers_live() {
+                    // the counter only ever grows — a monotonicity probe
+                    let now = c.load(Ordering::Relaxed);
+                    assert!(now >= last, "counter went backwards");
+                    last = now;
+                }
+                last
+            },
+        );
+        assert_eq!(report.workers, vec![0, 1, 2]);
+        assert_eq!(report.observers.len(), 2);
+        assert_eq!(counter.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    fn worker_rng_streams_are_deterministic_and_distinct() {
+        let draw = |seed: u64| -> Vec<u64> {
+            let report = run(
+                &StressConfig { workers: 3, ops: 1, observers: 0, seed },
+                &(),
+                |mut ctx, _| ctx.rng.next_u64(),
+                |_, _| (),
+            );
+            report.workers
+        };
+        let a = draw(42);
+        let b = draw(42);
+        assert_eq!(a, b, "same seed must replay the same per-worker streams");
+        assert_eq!(a.len(), 3);
+        assert!(a[0] != a[1] && a[1] != a[2], "streams must be independent");
+        let c = draw(43);
+        assert_ne!(a, c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn observers_terminate_once_workers_finish() {
+        let report = run(
+            &StressConfig { workers: 2, ops: 10, observers: 1, seed: 7 },
+            &(),
+            |_, _| (),
+            |ctx, _| {
+                let mut spins = 0u64;
+                while ctx.workers_live() {
+                    spins += 1;
+                    std::hint::spin_loop();
+                }
+                spins
+            },
+        );
+        assert_eq!(report.observers.len(), 1); // returning at all IS the test
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panics_fail_the_run_and_release_observers() {
+        // the observer spins on workers_live(): if the panicking worker
+        // failed to decrement the live counter (LiveGuard), this test
+        // would HANG rather than fail fast with the panic
+        run(
+            &StressConfig { workers: 1, ops: 1, observers: 1, seed: 0 },
+            &(),
+            |_, _| panic!("boom"),
+            |ctx, _| while ctx.workers_live() {},
+        );
+    }
+}

@@ -1,0 +1,301 @@
+//! Stress tests for the hardened serve path: the sharded registry under
+//! concurrent publish/read churn, and the `FleetServer` admission pipeline
+//! (token bucket → bounded queue → batcher) plus TTL eviction under a
+//! long seeded op mix.
+//!
+//! Everything is driven by `testkit::stress` (seeded workers + invariant
+//! observers) or a seeded single-threaded op mix, so failures replay from
+//! the printed seed. The `#[ignore]`-tagged tests are the long-running
+//! versions: they stay out of the fast tier-1 loop and run in CI's
+//! `stress` job via `cargo test --release -- --ignored`.
+
+use skip2lora::model::MlpConfig;
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::serve::{
+    FleetServer, RateLimit, RejectReason, Request, Response, ServeConfig,
+};
+use skip2lora::tensor::ops::Backend;
+use skip2lora::testkit::stress::{self, StressConfig};
+use skip2lora::train::trainer::pretrain;
+use skip2lora::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// sharded registry under concurrent publishers
+// ---------------------------------------------------------------------
+
+/// N publishers all hammering the SAME small tenant set (tenants spread
+/// across shards): observers must never see a tenant's installed version
+/// decrease, and the final installed version per tenant must be the
+/// maximum version any publisher was allocated for it (a stale publisher
+/// can never clobber a newer snapshot).
+fn registry_monotonicity(shards: usize, workers: usize, ops: usize, seed: u64) {
+    const TENANTS: usize = 6;
+    let registry = AdapterRegistry::with_shards(shards);
+    let cfg = StressConfig { workers, ops, observers: 2, seed };
+
+    let report = stress::run(
+        &cfg,
+        &registry,
+        // each worker publishes `ops` adapter sets to random tenants and
+        // remembers the highest version it was allocated per tenant
+        |mut ctx, reg: &AdapterRegistry| {
+            let mut max_allocated = vec![0u64; TENANTS];
+            for _ in 0..ctx.ops {
+                let t = ctx.rng.below(TENANTS);
+                let ads = (0..3)
+                    .map(|_| LoraAdapter::new(&mut ctx.rng, 6, 2, 3))
+                    .collect();
+                let v = reg.publish(t as u64, ads);
+                max_allocated[t] = max_allocated[t].max(v);
+            }
+            max_allocated
+        },
+        // observers: installed versions are monotone per tenant
+        |ctx, reg: &AdapterRegistry| {
+            let mut last = vec![0u64; TENANTS];
+            let mut checks = 0u64;
+            while ctx.workers_live() {
+                for t in 0..TENANTS {
+                    if let Some(snap) = reg.snapshot(t as u64) {
+                        assert!(
+                            snap.version >= last[t],
+                            "tenant {t}: version {} < previously observed {} (seed {seed:#x})",
+                            snap.version,
+                            last[t]
+                        );
+                        last[t] = snap.version;
+                    }
+                }
+                checks += 1;
+            }
+            checks
+        },
+    );
+
+    for t in 0..TENANTS {
+        let max_published = report.workers.iter().map(|w| w[t]).max().unwrap();
+        assert_eq!(
+            registry.version(t as u64),
+            max_published,
+            "tenant {t}: a stale publish clobbered the newest version (seed {seed:#x})"
+        );
+    }
+    assert!(report.observers.iter().all(|&c| c > 0), "observers never ran");
+    assert_eq!(
+        registry.publishes(),
+        (workers * ops) as u64,
+        "every publish must be counted"
+    );
+}
+
+#[test]
+fn registry_versions_monotone_under_concurrent_publishers_across_shards() {
+    registry_monotonicity(8, 4, 150, 0x5EED_0001);
+    // the single-lock degenerate case obeys the same contract
+    registry_monotonicity(1, 4, 150, 0x5EED_0002);
+}
+
+/// Long-running version: more shards, workers, and rounds. CI `stress`
+/// job only (`cargo test --release -- --ignored`).
+#[test]
+#[ignore = "long-running stress; CI stress job runs it with --ignored"]
+fn stress_registry_monotonicity_long() {
+    for seed in 0..4u64 {
+        registry_monotonicity(32, 16, 2000, 0xC0DE_0000 + seed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// FleetServer admission pipeline under seeded churn
+// ---------------------------------------------------------------------
+
+fn stress_backbone() -> skip2lora::model::Mlp {
+    let mut rng = Rng::new(0);
+    let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+    let n = 120;
+    let mut x = skip2lora::tensor::Mat::zeros(n, 8);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..8 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    let data = skip2lora::data::Dataset { x, labels, n_classes: 3 };
+    pretrain(cfg, &data, 50, 0.05, 1, Backend::Blocked)
+}
+
+/// The admission pipeline under a phased, seeded load shape — each
+/// hardening feature is driven into its rejection/eviction regime by
+/// construction (not by hoping a random walk gets there), and the
+/// tentpole invariants hold throughout:
+///
+/// * the queue NEVER exceeds its bound, and admitted + rejected
+///   bookkeeping exactly matches `ServerStats`;
+/// * every admitted request is eventually served (completions == admits);
+/// * per-tenant registry versions only ever grow;
+/// * idle tenants are evicted, yet no published version is ever dropped.
+fn server_churn(steps: usize, n_tenants: u64, workers: usize, seed: u64) {
+    const QUEUE_BOUND: usize = 24;
+    const BURST: f64 = 6.0;
+    let mut server = FleetServer::new(
+        stress_backbone(),
+        ServeConfig {
+            batch_capacity: 8,
+            queue_bound: QUEUE_BOUND,
+            rate_limit: Some(RateLimit { burst: BURST, tokens_per_pump: 2.0 }),
+            idle_ttl_pumps: Some(64),
+            registry_shards: 8,
+            window: 12,
+            accuracy_threshold: 0.6,
+            buffer_target: 16,
+            epochs: 4,
+            train_batch: 8,
+            workers,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(seed);
+    let sample = |rng: &mut Rng| -> Vec<f32> { (0..8).map(|_| rng.normal()).collect() };
+
+    let mut admitted = 0u64;
+    let mut queue_full = 0u64;
+    let mut rate_limited = 0u64;
+    let mut served = 0u64;
+    let mut swap_version = vec![0u64; n_tenants as usize];
+    let mut last_version = vec![0u64; n_tenants as usize];
+
+    // Phase A — overload burst, zero pumps: with n_tenants × burst
+    // admissible tokens exceeding the bound, the queue MUST fill and
+    // reject the overflow. The bound is never exceeded.
+    assert!(n_tenants as f64 * BURST > QUEUE_BOUND as f64 + 8.0, "phase A needs overload");
+    for i in 0..(QUEUE_BOUND + 16) {
+        let t = (i as u64) % n_tenants; // round-robin keeps buckets charged
+        match server.handle(t, Request::Predict(sample(&mut rng))) {
+            Response::Queued { .. } => admitted += 1,
+            Response::Rejected(RejectReason::QueueFull { bound }) => {
+                assert_eq!(bound, QUEUE_BOUND);
+                queue_full += 1;
+            }
+            Response::Rejected(RejectReason::RateLimited) => rate_limited += 1,
+            other => panic!("phase A: {other:?} (seed {seed:#x})"),
+        }
+        assert!(server.queued() <= QUEUE_BOUND, "queue exceeded its bound");
+    }
+    assert!(queue_full >= 16, "overload burst never hit the queue bound");
+    served += server.pump_until_drained().len() as u64;
+
+    // Phase B — one hot tenant past its bucket: more requests in one
+    // tick than the bucket can hold ⇒ rate-limiting MUST trigger.
+    let before_rate_limited = rate_limited;
+    for _ in 0..(BURST as usize + 6) {
+        match server.handle(0, Request::Predict(sample(&mut rng))) {
+            Response::Queued { .. } => admitted += 1,
+            Response::Rejected(RejectReason::RateLimited) => rate_limited += 1,
+            other => panic!("phase B: {other:?} (seed {seed:#x})"),
+        }
+    }
+    assert!(rate_limited > before_rate_limited, "hot tenant never rate-limited");
+    served += server.pump_until_drained().len() as u64;
+
+    // Phase C — seeded mixed churn (Predict / Feedback / SwapAdapters /
+    // pumps) with the invariants checked at every step.
+    for step in 0..steps {
+        let t = rng.below(n_tenants as usize) as u64;
+        match rng.below(10) {
+            0..=4 => {
+                let label = rng.below(3);
+                match server.handle(t, Request::Feedback(sample(&mut rng), label)) {
+                    Response::Queued { .. } => admitted += 1,
+                    Response::Rejected(RejectReason::QueueFull { bound }) => {
+                        assert_eq!(bound, QUEUE_BOUND);
+                        queue_full += 1;
+                    }
+                    Response::Rejected(RejectReason::RateLimited) => rate_limited += 1,
+                    other => panic!("step {step}: {other:?} (seed {seed:#x})"),
+                }
+            }
+            5..=7 => match server.handle(t, Request::Predict(sample(&mut rng))) {
+                Response::Queued { .. } => admitted += 1,
+                Response::Rejected(RejectReason::QueueFull { .. }) => queue_full += 1,
+                Response::Rejected(RejectReason::RateLimited) => rate_limited += 1,
+                other => panic!("step {step}: {other:?} (seed {seed:#x})"),
+            },
+            8 => {
+                let ads: Vec<LoraAdapter> = [8usize, 12, 12]
+                    .iter()
+                    .map(|&n_in| LoraAdapter::new(&mut rng, n_in, 2, 3))
+                    .collect();
+                match server.handle(t, Request::SwapAdapters(ads)) {
+                    Response::Swapped { version } => {
+                        let ti = t as usize;
+                        assert!(version > swap_version[ti], "versions must grow");
+                        swap_version[ti] = version;
+                    }
+                    other => panic!("step {step}: {other:?} (seed {seed:#x})"),
+                }
+            }
+            _ => served += server.pump().len() as u64,
+        }
+        // THE back-pressure invariant: bounded, always
+        assert!(
+            server.queued() <= QUEUE_BOUND,
+            "step {step}: queue {} exceeded its bound (seed {seed:#x})",
+            server.queued()
+        );
+        // registry versions are monotone per tenant under serving churn
+        let ti = t as usize;
+        let v = server.tenant_version(t);
+        assert!(
+            v >= last_version[ti],
+            "step {step}: tenant {t} version went backwards (seed {seed:#x})"
+        );
+        last_version[ti] = v;
+    }
+    served += server.pump_until_drained().len() as u64;
+    server.quiesce();
+    served += server.pump_until_drained().len() as u64;
+
+    // Phase D — cooldown: the whole fleet goes idle for > TTL pumps, so
+    // every tenant's serve state MUST be evicted (no job is in flight
+    // after quiesce)...
+    for _ in 0..160 {
+        served += server.pump().len() as u64;
+    }
+    let stats = server.stats();
+    assert_eq!(server.tenant_count(), 0, "idle tenants survived the TTL sweep");
+    assert!(stats.evictions > 0, "TTL sweep never evicted: {stats:?}");
+
+    // ...and the books balance exactly.
+    assert_eq!(stats.queue_rejections, queue_full, "queue rejections miscounted");
+    assert_eq!(stats.rate_limited, rate_limited, "rate-limit rejections miscounted");
+    assert_eq!(served, admitted, "an admitted request was never served");
+    assert_eq!(stats.queued, 0);
+    assert_eq!(stats.registry_shards, 8);
+    // eviction never drops published adapters: every swapped version is
+    // still installed (or superseded by a later fine-tune publish)
+    for t in 0..n_tenants {
+        assert!(
+            server.tenant_version(t) >= swap_version[t as usize],
+            "tenant {t}: eviction dropped a published version (seed {seed:#x})"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn server_admission_pipeline_survives_seeded_churn() {
+    server_churn(3000, 12, 0, 0xFEED_0001);
+}
+
+/// Long-running version with a background worker pool. CI `stress` job
+/// only (`cargo test --release -- --ignored`).
+#[test]
+#[ignore = "long-running stress; CI stress job runs it with --ignored"]
+fn stress_server_churn_long() {
+    server_churn(40_000, 48, 2, 0xFEED_1001);
+    server_churn(40_000, 48, 2, 0xFEED_1002);
+}

@@ -5,11 +5,12 @@
 //!   the backbone (FC weights AND BN statistics) is bit-frozen — any
 //!   mutation requires invalidation;
 //! * registry snapshot consistency under concurrent adapter publishes
-//!   (mini-proptest over thread interleavings);
+//!   (mini-proptest over `testkit::stress` runs);
+//! * shard routing: stable tenant → shard assignment, and per-shard
+//!   snapshots partitioning the full registry;
 //! * cross-tenant batching serves every tenant its own adapters with no
 //!   interference.
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use skip2lora::cache::SkipCache;
@@ -20,6 +21,7 @@ use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::registry::AdapterRegistry;
 use skip2lora::tensor::{ops::Backend, Mat};
 use skip2lora::testkit::prop::{check, gen, PropConfig};
+use skip2lora::testkit::stress::{self, StressConfig};
 use skip2lora::train::FineTuner;
 use skip2lora::util::rng::Rng;
 use skip2lora::util::timer::PhaseTimer;
@@ -160,74 +162,74 @@ fn slot_invalidation_is_surgical() {
 /// A published adapter set is immutable and replaced atomically: readers
 /// racing a publisher must always observe an internally consistent set
 /// (every weight tagged with the same publish round) and per-tenant
-/// versions must be monotone. Each adapter set is tagged by filling every
-/// W_B entry with the round number.
+/// versions must be monotone — on every shard layout, including the
+/// single-lock degenerate case. Each adapter set is tagged by filling
+/// every W_B entry with the round number. The thread scaffolding is
+/// `testkit::stress`: one publisher worker per tenant, two observers
+/// hammering snapshots until the publishers finish.
 #[test]
 fn prop_registry_snapshots_consistent_under_concurrent_publishes() {
     check(
         "registry-snapshot-consistency",
         PropConfig { cases: 12, seed: 0xC0FFEE },
         |rng| {
-            let registry = Arc::new(AdapterRegistry::new());
+            let shards = [1usize, 4, 16][gen::usize_in(rng, 0, 3)];
+            let registry = AdapterRegistry::with_shards(shards);
             let tenants: u64 = gen::usize_in(rng, 1, 4) as u64;
             let rounds: usize = gen::usize_in(rng, 20, 60);
-            let seed = rng.next_u64();
-            let stop = Arc::new(AtomicBool::new(false));
+            let cfg = StressConfig {
+                workers: tenants as usize,
+                ops: rounds,
+                observers: 2,
+                seed: rng.next_u64(),
+            };
 
-            std::thread::scope(|scope| {
-                // writers: one per tenant, publishing `rounds` versions
-                for t in 0..tenants {
-                    let registry = Arc::clone(&registry);
-                    scope.spawn(move || {
-                        let mut wrng = Rng::new(seed ^ t);
-                        for round in 1..=rounds {
-                            let ads = (0..3)
-                                .map(|_| {
-                                    let mut ad = LoraAdapter::new(&mut wrng, 6, 2, 3);
-                                    ad.wb.fill(round as f32);
-                                    ad
-                                })
-                                .collect();
-                            registry.publish(t, ads);
-                        }
-                    });
-                }
-                // readers: hammer snapshots while writers run
-                for r in 0..2 {
-                    let registry = Arc::clone(&registry);
-                    let stop = Arc::clone(&stop);
-                    scope.spawn(move || {
-                        let mut last_version = vec![0u64; tenants as usize];
-                        let mut last_tag = vec![0f32; tenants as usize];
-                        while !stop.load(Ordering::Relaxed) {
-                            for t in 0..tenants {
-                                if let Some(snap) = registry.snapshot(t) {
-                                    // internal consistency: one tag everywhere
-                                    let tag = snap.adapters[0].wb.data[0];
-                                    for ad in &snap.adapters {
-                                        for &v in &ad.wb.data {
-                                            assert_eq!(
-                                                v, tag,
-                                                "torn snapshot on tenant {t} (reader {r})"
-                                            );
-                                        }
+            stress::run(
+                &cfg,
+                &registry,
+                // publisher worker t: `rounds` tagged versions for tenant t
+                |mut ctx, reg: &AdapterRegistry| {
+                    let t = ctx.index as u64;
+                    for round in 1..=ctx.ops {
+                        let ads = (0..3)
+                            .map(|_| {
+                                let mut ad = LoraAdapter::new(&mut ctx.rng, 6, 2, 3);
+                                ad.wb.fill(round as f32);
+                                ad
+                            })
+                            .collect();
+                        reg.publish(t, ads);
+                    }
+                },
+                // observers: snapshots stay untorn and monotone throughout
+                |ctx, reg: &AdapterRegistry| {
+                    let mut last_version = vec![0u64; tenants as usize];
+                    let mut last_tag = vec![0f32; tenants as usize];
+                    while ctx.workers_live() {
+                        for t in 0..tenants {
+                            if let Some(snap) = reg.snapshot(t) {
+                                // internal consistency: one tag everywhere
+                                let tag = snap.adapters[0].wb.data[0];
+                                for ad in &snap.adapters {
+                                    for &v in &ad.wb.data {
+                                        assert_eq!(
+                                            v, tag,
+                                            "torn snapshot on tenant {t} (observer {})",
+                                            ctx.index
+                                        );
                                     }
-                                    // monotone versions and tags per tenant
-                                    let ti = t as usize;
-                                    assert!(snap.version >= last_version[ti]);
-                                    assert!(tag >= last_tag[ti]);
-                                    last_version[ti] = snap.version;
-                                    last_tag[ti] = tag;
                                 }
+                                // monotone versions and tags per tenant
+                                let ti = t as usize;
+                                assert!(snap.version >= last_version[ti]);
+                                assert!(tag >= last_tag[ti]);
+                                last_version[ti] = snap.version;
+                                last_tag[ti] = tag;
                             }
                         }
-                    });
-                }
-                // scope waits for writers; tell readers to wind down once
-                // writers are done (they are spawned first and finish fast)
-                std::thread::sleep(std::time::Duration::from_millis(5));
-                stop.store(true, Ordering::Relaxed);
-            });
+                    }
+                },
+            );
 
             // final state: every tenant at the last round's tag
             for t in 0..tenants {
@@ -236,6 +238,106 @@ fn prop_registry_snapshots_consistent_under_concurrent_publishes() {
                     return Err(format!(
                         "tenant {t}: final tag {} != {rounds}",
                         snap.adapters[0].wb.data[0]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// shard routing
+// ---------------------------------------------------------------------
+
+/// Routing is a pure function of the tenant id: the same tenant ALWAYS
+/// lands on the same shard (within a registry and across registries with
+/// the same shard count), and every shard index is in range.
+#[test]
+fn prop_same_tenant_always_routes_to_the_same_shard() {
+    check(
+        "shard-routing-stability",
+        PropConfig { cases: 48, seed: 0x5AAD },
+        |rng| {
+            let shards = 1usize << gen::usize_in(rng, 0, 7); // 1..64
+            let reg = AdapterRegistry::with_shards(shards);
+            let twin = AdapterRegistry::with_shards(shards);
+            for _ in 0..64 {
+                let t = rng.next_u64();
+                let s = reg.shard_of(t);
+                if s >= reg.shard_count() {
+                    return Err(format!("tenant {t}: shard {s} out of range"));
+                }
+                if s != reg.shard_of(t) {
+                    return Err(format!("tenant {t}: unstable routing"));
+                }
+                if s != twin.shard_of(t) {
+                    return Err(format!(
+                        "tenant {t}: routing differs between equal-shard registries"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The per-shard views partition the registry: shard tenant sets are
+/// disjoint, their union is exactly `tenants()`, every tenant sits on the
+/// shard `shard_of` says, and a full-registry `snapshot_many` equals the
+/// union of per-shard snapshots.
+#[test]
+fn prop_full_snapshot_equals_union_of_shard_snapshots() {
+    check(
+        "shard-snapshot-union",
+        PropConfig { cases: 24, seed: 0x0DD_B175 },
+        |rng| {
+            let shards = 1usize << gen::usize_in(rng, 0, 6); // 1..32
+            let reg = AdapterRegistry::with_shards(shards);
+            let n = gen::usize_in(rng, 1, 64);
+            for _ in 0..n {
+                let t = rng.next_u64() % 997; // duplicates republish
+                let ads = (0..3).map(|_| LoraAdapter::new(rng, 6, 2, 3)).collect();
+                reg.publish(t, ads);
+            }
+
+            let mut union = Vec::new();
+            for s in 0..reg.shard_count() {
+                let ts = reg.shard_tenants(s);
+                for &t in &ts {
+                    if reg.shard_of(t) != s {
+                        return Err(format!("tenant {t} on shard {s}, routed elsewhere"));
+                    }
+                }
+                union.extend(ts);
+            }
+            let total = union.len();
+            union.sort_unstable();
+            union.dedup();
+            if union.len() != total {
+                return Err("shard tenant sets overlap".into());
+            }
+            if union != reg.tenants() {
+                return Err(format!(
+                    "union of shard views ({} tenants) != registry ({})",
+                    union.len(),
+                    reg.tenants().len()
+                ));
+            }
+
+            // snapshot equivalence: the batched read path sees exactly the
+            // per-shard state
+            let many = reg.snapshot_many(union.iter().copied());
+            if many.len() != union.len() {
+                return Err("snapshot_many dropped a tenant".into());
+            }
+            for &t in &union {
+                let direct = reg.snapshot(t).expect("published");
+                let batched = &many[&t];
+                if direct.version != batched.version {
+                    return Err(format!(
+                        "tenant {t}: snapshot version {} != snapshot_many {}",
+                        direct.version, batched.version
                     ));
                 }
             }

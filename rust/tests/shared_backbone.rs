@@ -16,6 +16,7 @@ use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::registry::AdapterRegistry;
 use skip2lora::tensor::{ops::Backend, Mat};
+use skip2lora::testkit::stress::{self, StressConfig};
 use skip2lora::testkit::{assert_send, assert_send_sync};
 use skip2lora::train::FineTuner;
 use skip2lora::util::rng::Rng;
@@ -108,35 +109,41 @@ fn shared_arc_matches_cloned_backbone_bit_for_bit() {
         .collect();
 
     // new discipline: all jobs run CONCURRENTLY against the one shared
-    // Arc, while a serving batcher hammers the same backbone from the
-    // main thread
+    // Arc, while a serving batcher (a `testkit::stress` observer)
+    // hammers the same backbone until every fine-tune worker finishes
     let registry = Arc::new(AdapterRegistry::new());
-    let results: Vec<(AdapterSet, Vec<f32>)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = jobs
-            .iter()
-            .map(|(adapters, data)| {
-                let model = Arc::clone(&shared);
-                let adapters = adapters.clone();
-                scope.spawn(move || finetune(model, adapters, data, 60))
-            })
-            .collect();
-
-        // concurrent read pressure: serve micro-batches from the same Arc
-        let frozen = FrozenBackbone::new(Arc::clone(&shared), Backend::Blocked, 8);
-        let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
-        let mut rng = Rng::new(77);
-        let mut out = Vec::new();
-        for round in 0..200u64 {
-            for t in 0..N_WORKERS {
-                let x: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
-                batcher.submit(BatchRequest { tenant: t, id: round, x, label: None });
+    let scfg = StressConfig { workers: N_WORKERS as usize, ops: 60, observers: 1, seed: 0xB17 };
+    let report = stress::run(
+        &scfg,
+        &jobs,
+        |ctx, jobs: &Vec<(AdapterSet, Dataset)>| {
+            let (adapters, data) = &jobs[ctx.index];
+            finetune(Arc::clone(&shared), adapters.clone(), data, ctx.ops)
+        },
+        |ctx, _| {
+            // concurrent read pressure: serve micro-batches from the Arc
+            // for AT LEAST 200 rounds, and for as long as any fine-tune
+            // worker is still running — the overlap is the point
+            let frozen = FrozenBackbone::new(Arc::clone(&shared), Backend::Blocked, 8);
+            let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+            let mut rng = Rng::new(77);
+            let mut out = Vec::new();
+            let mut served = 0usize;
+            let mut round = 0u64;
+            while round < 200 || ctx.workers_live() {
+                for t in 0..N_WORKERS {
+                    let x: Vec<f32> = (0..10).map(|_| rng.normal()).collect();
+                    batcher.submit(BatchRequest { tenant: t, id: round, x, label: None });
+                }
+                served += batcher.flush(&mut out);
+                out.clear();
+                round += 1;
             }
-            batcher.flush(&mut out);
-        }
-        assert_eq!(out.len(), 200 * N_WORKERS as usize);
-
-        handles.into_iter().map(|h| h.join().expect("worker")).collect()
-    });
+            served
+        },
+    );
+    assert!(report.observers[0] >= 200 * N_WORKERS as usize);
+    let results: Vec<(AdapterSet, Vec<f32>)> = report.workers;
 
     // bit-identical trajectories: losses AND final adapter weights
     for (t, ((got_ad, got_losses), (want_ad, want_losses))) in
@@ -186,36 +193,42 @@ fn concurrent_serving_is_stable_under_finetune_load() {
         tuner.predict_alloc(&Mat::from_vec(1, 10, x.clone())).row(0).to_vec()
     };
 
-    std::thread::scope(|scope| {
-        // background fine-tune churn on other tenants' adapters over the
-        // SAME backbone Arc
-        for t in 1..4u64 {
-            let model = Arc::clone(&shared);
+    // background fine-tune churn on other tenants' adapters over the SAME
+    // backbone Arc (stress workers), while the observer asserts tenant
+    // 0's serving logits never waver
+    let scfg = StressConfig { workers: 3, ops: 40, observers: 1, seed: 0xC4A0 };
+    stress::run(
+        &scfg,
+        &(),
+        |ctx, _| {
+            let t = ctx.index as u64 + 1;
             let data = clustered(900 + t, 30);
-            scope.spawn(move || {
-                let mut arng = Rng::new(t);
-                let adapters = AdapterSet::new(&mut arng, &cfg(), AdapterTopology::Skip);
-                let _ = finetune(model, adapters, &data, 40);
-            });
-        }
-
-        // meanwhile: tenant 0's logits must never waver
-        let frozen = FrozenBackbone::new(Arc::clone(&shared), Backend::Blocked, 4);
-        let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
-        let mut out = Vec::new();
-        for i in 0..100u64 {
-            batcher.submit(BatchRequest { tenant: 0, id: i, x: x.clone(), label: None });
-            batcher.flush(&mut out);
-        }
-        // same serving path + same frozen weights => bit-identical across
-        // all 100 repetitions, no matter what the fine-tune threads do
-        for resp in &out {
-            assert_eq!(resp.logits, out[0].logits, "serving logits drifted under load");
-        }
-        // and the serving path agrees with the training-side predict path
-        // (different kernel shapes: float tolerance, not bit equality)
-        for (a, b) in out[0].logits.iter().zip(&expected) {
-            assert!((a - b).abs() < 1e-4, "serve {a} vs predict {b}");
-        }
-    });
+            let mut arng = Rng::new(t);
+            let adapters = AdapterSet::new(&mut arng, &cfg(), AdapterTopology::Skip);
+            let _ = finetune(Arc::clone(&shared), adapters, &data, ctx.ops);
+        },
+        |ctx, _| {
+            let frozen = FrozenBackbone::new(Arc::clone(&shared), Backend::Blocked, 4);
+            let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+            let mut out = Vec::new();
+            // at least 100 repetitions, and keep serving while ANY
+            // fine-tune thread is still churning over the same Arc
+            let mut i = 0u64;
+            while i < 100 || ctx.workers_live() {
+                batcher.submit(BatchRequest { tenant: 0, id: i, x: x.clone(), label: None });
+                batcher.flush(&mut out);
+                i += 1;
+            }
+            // same serving path + same frozen weights => bit-identical
+            // across every repetition, whatever the fine-tune threads do
+            for resp in &out {
+                assert_eq!(resp.logits, out[0].logits, "serving logits drifted under load");
+            }
+            // and the serving path agrees with the training-side predict
+            // path (different kernel shapes: float tolerance, not bits)
+            for (a, b) in out[0].logits.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-4, "serve {a} vs predict {b}");
+            }
+        },
+    );
 }
