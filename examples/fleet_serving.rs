@@ -1,5 +1,6 @@
 //! Fleet serving: 120 tenants, one shared frozen backbone, per-tenant
-//! Skip-LoRA adapters with online drift adaptation.
+//! Skip-LoRA adapters with online drift adaptation — and a kill-and-
+//! restore finale proving the fleet's trained state is durable.
 //!
 //! Every tenant streams labelled sensor data through the `FleetServer`.
 //! Mid-stream, 2/3 of the fleet drifts (each tenant with its OWN drift
@@ -8,8 +9,13 @@
 //! fresh skip adapters on that tenant's feedback buffer (background
 //! worker pool), and hot-swaps them through the registry — while the
 //! control tenants keep being served by the bare backbone, untouched.
+//! Finally the server is checkpointed, KILLED, and a fresh server is
+//! restored from disk: every tenant's adapters come back bit-identical,
+//! at a version no lower than persisted, serving the same predictions.
 //!
 //! Run: `cargo run --release --example fleet_serving`
+
+use std::sync::Arc;
 
 use skip2lora::data::Dataset;
 use skip2lora::model::MlpConfig;
@@ -172,6 +178,73 @@ fn main() {
         min_drifted_acc * 100.0
     );
     println!("control tenants: 0 adaptations, 0 published adapter sets — fully isolated");
-    server.shutdown();
+
+    // 5. kill and restore: the fleet's trained state is durable. Persist
+    //    every tenant's published adapters (crash-safe atomic write),
+    //    KILL the server, bring up a brand-new one on the same deployed
+    //    backbone, and restore from disk.
+    println!("\n== kill and restore ==");
+    let snapshot_path = std::env::temp_dir().join("fleet_serving_demo.s2l");
+    let backbone = Arc::clone(server.shared_backbone());
+
+    // pre-kill ground truth: one probe prediction per drifted tenant
+    let probe_tenants: Vec<u64> = (0..N_TENANTS).filter(|&t| drifts(t)).collect();
+    let probe_x: Vec<Vec<f32>> = probe_tenants
+        .iter()
+        .map(|&t| streams[t as usize].1.x.row(0).to_vec())
+        .collect();
+    let mut pre_kill: Vec<(usize, u64)> = Vec::new();
+    for (&t, x) in probe_tenants.iter().zip(&probe_x) {
+        match server.handle(t, Request::Predict(x.clone())) {
+            Response::Queued { .. } => {}
+            other => panic!("unexpected response: {other:?}"),
+        }
+        let done = server.pump_until_drained();
+        pre_kill.push((done[0].prediction, done[0].adapter_version));
+    }
+    let pre_versions: Vec<u64> = (0..N_TENANTS).map(|t| server.tenant_version(t)).collect();
+
+    let report = server.persist_to(&snapshot_path).expect("persist fleet state");
+    println!(
+        "persisted {} tenants ({:.1} KiB) to {}",
+        report.tenants,
+        report.bytes as f64 / 1024.0,
+        snapshot_path.display()
+    );
+    server.shutdown(); // the "crash": every in-memory tenant state is gone
+
+    let mut revived = FleetServer::new(
+        backbone,
+        ServeConfig { batch_capacity: 64, queue_bound: 256, ..Default::default() },
+    );
+    assert_eq!(revived.stats().publishes, 0, "fresh server starts empty");
+    let restore = revived.restore_from(&snapshot_path).expect("restore fleet state");
+    println!(
+        "restored {} tenants (max persisted version {})",
+        restore.installed, restore.max_version
+    );
+
+    for (i, (&t, x)) in probe_tenants.iter().zip(&probe_x).enumerate() {
+        assert!(
+            revived.tenant_version(t) >= pre_versions[t as usize],
+            "tenant {t}: version rolled back across restore"
+        );
+        match revived.handle(t, Request::Predict(x.clone())) {
+            Response::Queued { .. } => {}
+            other => panic!("unexpected response: {other:?}"),
+        }
+        let done = revived.pump_until_drained();
+        assert_eq!(
+            (done[0].prediction, done[0].adapter_version),
+            pre_kill[i],
+            "tenant {t}: serving changed across kill+restore"
+        );
+    }
+    println!(
+        "all {} drifted tenants serve IDENTICAL predictions at their persisted versions",
+        probe_tenants.len()
+    );
+    revived.shutdown();
+    std::fs::remove_file(&snapshot_path).ok();
     println!("OK");
 }

@@ -23,6 +23,7 @@ use skip2lora::method::Method;
 use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::persist::RegistryCheckpoint;
 use skip2lora::serve::registry::AdapterRegistry;
 use skip2lora::tensor::ops::Backend;
 use skip2lora::train::FineTuner;
@@ -88,6 +89,35 @@ fn main() {
             round = round.wrapping_add(1);
             let batch = (0..64u64).map(|i| (round * 31 + i * 17) % n_tenants as u64);
             std::hint::black_box(registry.snapshot_many(batch).len());
+        });
+    }
+
+    b.header("registry checkpoint: persist/restore the whole fleet");
+    {
+        // the durability cost model: a full-fleet checkpoint must stay
+        // far off the serving hot path (capture is read-locks + Arc
+        // clones; serialization dominates and is still sub-ms per 512
+        // tenants of rank-4 adapters)
+        let ck = RegistryCheckpoint::capture(&registry);
+        let bytes = ck.to_bytes();
+        println!(
+            "checkpoint: {} tenants, {} params, {:.1} KiB serialized",
+            ck.tenants.len(),
+            ck.param_count(),
+            bytes.len() as f64 / 1024.0
+        );
+        b.bench("capture (consistent cut)", || {
+            std::hint::black_box(RegistryCheckpoint::capture(&registry).tenants.len());
+        });
+        b.bench("serialize (to_bytes)", || {
+            std::hint::black_box(ck.to_bytes().len());
+        });
+        b.bench("parse + validate (from_bytes)", || {
+            std::hint::black_box(RegistryCheckpoint::from_bytes(&bytes).unwrap().tenants.len());
+        });
+        b.bench("restore into fresh registry", || {
+            let fresh = AdapterRegistry::new();
+            std::hint::black_box(ck.restore_into(&fresh));
         });
     }
 

@@ -11,8 +11,10 @@
 //! the server's adapter-head fan-out now both read the same standalone
 //! collection.
 
+use crate::model::io::TensorBundle;
 use crate::model::mlp::{AdapterTopology, MlpConfig};
 use crate::nn::lora::LoraAdapter;
+use crate::util::error::{bail, Context, Result};
 use crate::util::rng::Rng;
 
 /// One adapter set: a topology plus one [`LoraAdapter`] per backbone
@@ -75,6 +77,12 @@ impl AdapterSet {
         self.adapters.iter().map(|a| a.param_count()).sum()
     }
 
+    /// Serialize this set's weights into `bundle` under `prefix` (see
+    /// [`write_adapters`]).
+    pub fn write_to(&self, bundle: &mut TensorBundle, prefix: &str) {
+        write_adapters(bundle, prefix, &self.adapters);
+    }
+
     /// Shape-check this set against a backbone config (the serve-side
     /// `SwapAdapters` validation and a cheap debug assert elsewhere).
     pub fn matches(&self, config: &MlpConfig) -> bool {
@@ -95,6 +103,55 @@ impl AdapterSet {
             }
         }
     }
+}
+
+/// Serialize an adapter vector into `bundle`: adapter k becomes the two
+/// tensors `{prefix}a{k}.wa` / `{prefix}a{k}.wb`. The inverse of
+/// [`read_adapters`]; the registry checkpoint (`serve::persist`) and the
+/// node-to-node migration payload both use this naming.
+pub fn write_adapters(bundle: &mut TensorBundle, prefix: &str, adapters: &[LoraAdapter]) {
+    for (k, ad) in adapters.iter().enumerate() {
+        bundle.insert(&format!("{prefix}a{k}.wa"), ad.wa.clone());
+        bundle.insert(&format!("{prefix}a{k}.wb"), ad.wb.clone());
+    }
+}
+
+/// Read `n_layers` adapters written by [`write_adapters`] back out of
+/// `bundle`, validating structural consistency: both tensors present per
+/// layer and `wa.cols == wb.rows` (the factorization rank). Anything off
+/// — missing tensor, rank mismatch — is a typed error, never a panic;
+/// shape-vs-backbone validation is the CALLER's job (the serve layer runs
+/// its `SwapAdapters` checks on the result).
+pub fn read_adapters(
+    bundle: &TensorBundle,
+    prefix: &str,
+    n_layers: usize,
+) -> Result<Vec<LoraAdapter>> {
+    // never pre-reserve from an untrusted count: a corrupt header asking
+    // for millions of layers fails on the first missing tensor below,
+    // without first attempting a giant allocation
+    let mut out = Vec::with_capacity(n_layers.min(bundle.tensors.len()));
+    for k in 0..n_layers {
+        let wa = bundle
+            .get(&format!("{prefix}a{k}.wa"))
+            .with_context(|| format!("adapter {k}: missing tensor {prefix}a{k}.wa"))?
+            .clone();
+        let wb = bundle
+            .get(&format!("{prefix}a{k}.wb"))
+            .with_context(|| format!("adapter {k}: missing tensor {prefix}a{k}.wb"))?
+            .clone();
+        if wa.cols != wb.rows {
+            bail!(
+                "adapter {k}: rank mismatch (wa is {}x{}, wb is {}x{})",
+                wa.rows,
+                wa.cols,
+                wb.rows,
+                wb.cols
+            );
+        }
+        out.push(LoraAdapter { wa, wb });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -147,5 +204,46 @@ mod tests {
     #[test]
     fn set_is_send_sync() {
         crate::testkit::assert_send_sync::<AdapterSet>();
+    }
+
+    #[test]
+    fn adapters_roundtrip_through_bundle_bitwise() {
+        let mut rng = Rng::new(11);
+        let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+        let mut set = AdapterSet::new(&mut rng, &cfg, AdapterTopology::Skip);
+        for ad in set.adapters.iter_mut() {
+            for v in ad.wb.data.iter_mut() {
+                *v = rng.normal();
+            }
+        }
+        let mut bundle = TensorBundle::default();
+        set.write_to(&mut bundle, "t7.");
+        // survive the full wire format, not just the in-memory map
+        let bundle = TensorBundle::from_bytes(&bundle.to_bytes()).unwrap();
+        let back = read_adapters(&bundle, "t7.", 3).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in set.adapters.iter().zip(&back) {
+            assert_eq!(a.wa, b.wa, "wa must be bit-identical");
+            assert_eq!(a.wb, b.wb, "wb must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn read_adapters_rejects_missing_and_mismatched() {
+        let mut rng = Rng::new(12);
+        let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+        let set = AdapterSet::new(&mut rng, &cfg, AdapterTopology::Skip);
+        let mut bundle = TensorBundle::default();
+        set.write_to(&mut bundle, "");
+        // asking for more layers than were written: typed error
+        let e = read_adapters(&bundle, "", 4).unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+        // wrong prefix: typed error
+        assert!(read_adapters(&bundle, "nope.", 3).is_err());
+        // rank mismatch between the factor matrices: typed error
+        let mut torn = bundle.clone();
+        torn.insert("a1.wb", crate::tensor::Mat::zeros(5, 3));
+        let e = read_adapters(&torn, "", 3).unwrap_err();
+        assert!(e.to_string().contains("rank mismatch"), "{e}");
     }
 }

@@ -6,11 +6,22 @@
 //!
 //! Used by the coordinator to persist the pre-trained backbone (the §5.2
 //! protocol pre-trains once per trial, then each fine-tuning method starts
-//! from the same weights) and to hand weights to the PJRT engine.
+//! from the same weights), to hand weights to the PJRT engine, and — via
+//! `serve::persist` — as the container for fleet registry checkpoints.
+//!
+//! Durability contract: [`TensorBundle::save`] is ATOMIC (write to a
+//! sibling temp file, fsync, rename into place, fsync the directory), so
+//! a crash mid-save can never leave a torn `.s2l` under the target name —
+//! readers see either the old complete file or the new complete file.
+//! [`TensorBundle::from_bytes`] in turn trusts nothing in the header: a
+//! truncated, trailing-garbage, or dimension-overflowing file is rejected
+//! with a typed [`Error`](crate::util::error::Error), never a panic or a
+//! silently wrapped bounds check.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::error::{bail, Context, Result};
 
@@ -42,7 +53,9 @@ impl TensorBundle {
         self.tensors.get(name).map(|m| m.data.clone())
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the `.s2l` wire format (what `save` writes and
+    /// `from_bytes` parses — also the node-to-node migration payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
@@ -55,10 +68,14 @@ impl TensorBundle {
                 buf.extend_from_slice(&v.to_le_bytes());
             }
         }
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("create {}", path.display()))?;
-        f.write_all(&buf)?;
-        Ok(())
+        buf
+    }
+
+    /// Atomically persist the bundle: a crash at ANY point leaves either
+    /// the previous complete file or the new complete file at `path`,
+    /// never a torn prefix (see [`atomic_write`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.to_bytes())
     }
 
     pub fn load(path: &Path) -> Result<Self> {
@@ -71,8 +88,10 @@ impl TensorBundle {
 
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut p = 0usize;
+        // `n > len - p` (not `p + n > len`): p never exceeds len, so this
+        // form cannot overflow even for an adversarial n near usize::MAX
         let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
-            if *p + n > bytes.len() {
+            if n > bytes.len() - *p {
                 bail!("truncated .s2l file at byte {p}");
             }
             let s = &bytes[*p..*p + n];
@@ -95,18 +114,78 @@ impl TensorBundle {
                 .context("bad tensor name")?;
             let rows = u32_at(&mut p)? as usize;
             let cols = u32_at(&mut p)? as usize;
-            let raw = take(&mut p, rows * cols * 4)?;
+            // a corrupt header can claim dims whose byte count wraps
+            // usize in release builds, sailing PAST the truncation check
+            // with a tiny wrapped value — do the size math checked and
+            // reject the file instead
+            let n_bytes = rows
+                .checked_mul(cols)
+                .and_then(|n_vals| n_vals.checked_mul(4))
+                .with_context(|| {
+                    format!("tensor '{name}': {rows}x{cols} dims overflow the byte count")
+                })?;
+            let raw = take(&mut p, n_bytes)?;
             let data: Vec<f32> = raw
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
-            out.tensors.insert(name, Mat::from_vec(rows, cols, data));
+            if out.tensors.insert(name.clone(), Mat::from_vec(rows, cols, data)).is_some() {
+                bail!("duplicate tensor '{name}' in .s2l file");
+            }
         }
         if p != bytes.len() {
             bail!("trailing bytes in .s2l file");
         }
         Ok(out)
     }
+}
+
+/// Crash-safe file replacement: write `bytes` to a uniquely named sibling
+/// temp file, fsync it, then atomically rename over `path` (same
+/// directory ⇒ same filesystem ⇒ POSIX rename atomicity) and fsync the
+/// directory so the rename itself is durable. A crash at any point leaves
+/// the target either absent/old or new-and-complete — never torn; at
+/// worst a stray `*.tmp` sibling survives, which no loader ever reads.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    // unique temp name: concurrent savers to the same target must not
+    // clobber each other's in-flight temp files
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir: PathBuf = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let mut tmp_name = path
+        .file_name()
+        .with_context(|| format!("atomic_write: no file name in {}", path.display()))?
+        .to_os_string();
+    tmp_name.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = dir.join(tmp_name);
+    let write = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        // data must hit disk BEFORE the rename publishes the name
+        f.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("rename into {}", path.display()));
+    }
+    // best effort: fsync the directory entry (not supported everywhere —
+    // the rename is already atomic, this only strengthens durability)
+    if let Ok(d) = std::fs::File::open(&dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -141,6 +220,105 @@ mod tests {
         let mut bytes = std::fs::read(&path).unwrap();
         bytes.push(0);
         assert!(TensorBundle::from_bytes(&bytes).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Hand-build a header claiming one tensor named "w" with the given
+    /// dims and NO payload bytes — the adversarial/corrupt-header shape.
+    fn header_with_dims(rows: u32, cols: u32) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"S2L1");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'w');
+        bytes.extend_from_slice(&rows.to_le_bytes());
+        bytes.extend_from_slice(&cols.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn corrupt_header_dims_error_instead_of_wrapping() {
+        // overflow boundary: rows*cols fits in usize but *4 wraps — in a
+        // release build the unchecked math would wrap to a tiny byte
+        // count, PASS the truncation check, and mis-parse the file
+        let e = TensorBundle::from_bytes(&header_with_dims(u32::MAX, u32::MAX)).unwrap_err();
+        assert!(e.to_string().contains("overflow"), "{e}");
+        // huge-but-not-overflowing dims: rejected as truncated (the
+        // claimed payload exceeds the actual bytes), never an OOM attempt
+        let e = TensorBundle::from_bytes(&header_with_dims(1 << 31, 2)).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+        // huge name_len is handled by the same no-overflow take() guard
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"S2L1");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // name_len
+        let e = TensorBundle::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn zero_dim_tensors_roundtrip_without_panic() {
+        // a 0xN tensor is degenerate but well-formed: it must roundtrip,
+        // not panic or confuse the size math
+        let mut b = TensorBundle::default();
+        b.insert("empty", Mat::zeros(0, 5));
+        b.insert_vec("nothing", &[]);
+        let back = TensorBundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(b, back);
+        assert_eq!(back.get("empty").unwrap().shape(), (0, 5));
+    }
+
+    #[test]
+    fn rejects_duplicate_tensor_names() {
+        let mut b = TensorBundle::default();
+        b.insert_vec("x", &[1.0]);
+        let full = b.to_bytes();
+        let one = &full[8..]; // one serialized tensor record
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"S2L1");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(one);
+        bytes.extend_from_slice(one);
+        let e = TensorBundle::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn every_truncation_point_is_rejected_not_panicked() {
+        let mut b = TensorBundle::default();
+        b.insert("w1", Mat::from_fn(3, 4, |i, j| (i + j) as f32));
+        b.insert_vec("b1", &[1.0, 2.0]);
+        let bytes = b.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                TensorBundle::from_bytes(&bytes[..cut]).is_err(),
+                "torn prefix of {cut} bytes must be rejected"
+            );
+        }
+        assert!(TensorBundle::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn save_is_atomic_no_temp_residue() {
+        let dir = std::env::temp_dir().join("s2l_io_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.s2l");
+        // overwrite an existing file: readers of `path` can only ever see
+        // a complete bundle
+        for round in 0..3u32 {
+            let mut b = TensorBundle::default();
+            b.insert_vec("x", &[round as f32; 4]);
+            b.save(&path).unwrap();
+            let back = TensorBundle::load(&path).unwrap();
+            assert_eq!(back.get_vec("x").unwrap(), vec![round as f32; 4]);
+        }
+        // no *.tmp stragglers after successful saves
+        let residue: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(residue.is_empty(), "temp files left behind: {residue:?}");
         std::fs::remove_file(&path).ok();
     }
 }

@@ -125,6 +125,15 @@ pub struct ServeMetrics {
     /// hits here are frozen forwards the fleet never recomputed
     pub finetune_cache_hits: u64,
     pub finetune_cache_misses: u64,
+    /// fleet checkpoints written to disk (`persist_to` / `SaveState`)
+    pub persists: u64,
+    /// fleet checkpoints installed (`restore_from` / `RestoreState`)
+    pub restores: u64,
+    /// tenants actually (re-)installed across all restores
+    pub tenants_restored: u64,
+    /// single-tenant migration payloads exported / imported
+    pub exports: u64,
+    pub imports: u64,
     started: Instant,
 }
 
@@ -145,6 +154,11 @@ impl Default for ServeMetrics {
             batched_rows: 0,
             finetune_cache_hits: 0,
             finetune_cache_misses: 0,
+            persists: 0,
+            restores: 0,
+            tenants_restored: 0,
+            exports: 0,
+            imports: 0,
             started: Instant::now(),
         }
     }
@@ -192,7 +206,7 @@ impl ServeMetrics {
     /// Multi-line human report.
     pub fn report(&self) -> String {
         format!(
-            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  admission: {} queue-full, {} rate-limited, {} idle evictions\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n",
+            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  admission: {} queue-full, {} rate-limited, {} idle evictions\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n  persist  : {} saves, {} restores ({} tenants installed), {} exports, {} imports\n",
             self.predicts,
             self.feedbacks,
             self.swaps,
@@ -210,6 +224,11 @@ impl ServeMetrics {
             self.finetune_cache_hit_rate() * 100.0,
             self.finetune_cache_hits,
             self.finetune_cache_misses,
+            self.persists,
+            self.restores,
+            self.tenants_restored,
+            self.exports,
+            self.imports,
         )
     }
 }
@@ -256,9 +275,16 @@ mod tests {
         m.queue_rejections = 3;
         m.rate_limited = 2;
         m.evictions = 1;
+        m.persists = 2;
+        m.restores = 1;
+        m.tenants_restored = 7;
         let r = m.report();
         assert!(r.contains("16.0 rows/batch"), "{r}");
         assert!(r.contains("n=1"), "{r}");
         assert!(r.contains("3 queue-full, 2 rate-limited, 1 idle evictions"), "{r}");
+        assert!(
+            r.contains("2 saves, 1 restores (7 tenants installed), 0 exports, 0 imports"),
+            "{r}"
+        );
     }
 }

@@ -39,6 +39,17 @@
 //! published adapters always survive in the registry, so an evicted
 //! tenant's next request is served its latest version transparently.
 //!
+//! Tenant state is DURABLE ([`persist`], DESIGN.md §9): the whole
+//! registry — per-tenant adapter weights + publish versions + the global
+//! version counter — checkpoints to one crash-safe `.s2l` file
+//! (`FleetServer::persist_to` / `Request::SaveState`; atomic
+//! tmp+fsync+rename) and restores with bit-identical weights and
+//! versions ≥ their persisted values (`restore_from` /
+//! `Request::RestoreState`), so a server restart never discards trained
+//! adapters. Single tenants migrate between nodes as validated byte
+//! payloads (`export_tenant` / `import_tenant`, running the same rank
+//! checks as `SwapAdapters`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -84,15 +95,17 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod persist;
 pub mod registry;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher, QueueFull};
 pub use metrics::{LatencyHistogram, ServeMetrics};
+pub use persist::{RegistryCheckpoint, TenantRecord};
 pub use registry::{AdapterRegistry, AdapterSnapshot, ShardStats, TenantId};
 pub use scheduler::{PoolStats, WorkerPool};
 pub use server::{
-    Completion, FleetServer, RateLimit, RejectReason, Request, Response, ServeConfig,
-    ServerStats,
+    Completion, FleetServer, PersistReport, RateLimit, RejectReason, Request, Response,
+    RestoreReport, ServeConfig, ServerStats,
 };

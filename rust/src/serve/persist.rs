@@ -1,0 +1,648 @@
+//! Durable tenant state — crash-safe registry checkpoints and tenant
+//! migration payloads, in the `.s2l` [`TensorBundle`] format.
+//!
+//! Skip2-LoRA's economics make per-tenant adapters cheap to train but
+//! valuable to keep: a tenant's whole personalization is a few KB of
+//! weights, so the ENTIRE fleet's state fits in one small file. This
+//! module serializes a consistent cut of the sharded
+//! [`AdapterRegistry`](crate::serve::registry::AdapterRegistry) —
+//! per-tenant weights + publish versions, plus the global version
+//! counter — so that a `FleetServer` restart (or a node-to-node tenant
+//! migration) never throws trained adapters away.
+//!
+//! ## File layout (DESIGN.md §9)
+//!
+//! One `.s2l` bundle containing:
+//!
+//! * `__manifest__` — `1×14` f32 vector: `[format_version,
+//!   n_tenants(4 limbs), next_version(4 limbs), n_layers,
+//!   captured_at_micros(4 limbs)]`. `u64` values are encoded as four
+//!   16-bit limbs (each exactly representable in f32), so versions and
+//!   the capture stamp survive the float container bit-exactly.
+//! * per tenant `t{id}.meta` — `1×5`: `[version(4 limbs), n_adapters]`;
+//! * per tenant, per layer `t{id}.a{k}.wa` / `t{id}.a{k}.wb` — the
+//!   adapter factor matrices (see `model::adapters::write_adapters`).
+//!
+//! ## Torn-file rejection
+//!
+//! Validation is belt and braces: the byte layer rejects truncation,
+//! trailing bytes, and dimension overflow (`TensorBundle::from_bytes`);
+//! this layer then rejects manifest absence, format-version drift,
+//! tenant-count mismatch, per-tenant adapter-count mismatch, versions of
+//! 0 or above the persisted counter, rank-mismatched factors, and any
+//! tensor the manifest does not account for. Every rejection is a typed
+//! [`Error`](crate::util::error::Error) — a corrupt checkpoint can never
+//! panic the server, and `TensorBundle::save`'s tmp+fsync+rename makes a
+//! torn file under the target name impossible in the first place.
+//!
+//! ## Restore semantics
+//!
+//! [`RegistryCheckpoint::restore_into`] installs each tenant at its
+//! EXACT persisted version via `AdapterRegistry::restore`, skipping
+//! tenants the live registry already holds at an equal-or-newer version
+//! — or at ANY locally published version: version numbers reset across
+//! restarts, so a pre-crash checkpoint can outnumber adapters a tenant
+//! just retrained post-crash, and live training always beats checkpoint
+//! data. The global version counter is raised to the checkpoint's
+//! either way — so the per-tenant version-monotonicity invariant
+//! stress-proved in PR 3 holds ACROSS a crash/restore boundary, and
+//! every post-restore publish outranks everything persisted.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::model::adapters::{read_adapters, write_adapters};
+use crate::model::io::TensorBundle;
+use crate::nn::lora::LoraAdapter;
+use crate::serve::registry::{AdapterRegistry, AdapterSnapshot, TenantId};
+use crate::util::error::{bail, Context, Result};
+
+/// Checkpoint format version — bump on any layout change so an old
+/// binary rejects a new file with a clear error instead of mis-parsing.
+pub const FORMAT_VERSION: u64 = 1;
+
+const MANIFEST: &str = "__manifest__";
+/// manifest floats: format_version + n_tenants(4) + next_version(4) +
+/// n_layers + captured_at_micros(4)
+const MANIFEST_LEN: usize = 14;
+/// tenant meta floats: version(4) + n_adapters
+const META_LEN: usize = 5;
+
+/// Append `x` as four 16-bit limbs, little-endian limb order. Each limb
+/// is ≤ 65535 and therefore exactly representable in f32 — the float
+/// container carries the u64 bit-exactly.
+fn push_u64(out: &mut Vec<f32>, x: u64) {
+    for i in 0..4 {
+        out.push(((x >> (16 * i)) & 0xFFFF) as f32);
+    }
+}
+
+/// Decode four 16-bit limbs written by [`push_u64`], rejecting limbs
+/// that are not integers in `[0, 65535]` (a torn or hand-edited file).
+fn read_u64(limbs: &[f32], what: &str) -> Result<u64> {
+    if limbs.len() < 4 {
+        bail!("{what}: expected 4 u64 limbs, got {}", limbs.len());
+    }
+    let mut x = 0u64;
+    for (i, &limb) in limbs.iter().take(4).enumerate() {
+        if !(limb.is_finite() && limb.fract() == 0.0 && (0.0..=65535.0).contains(&limb)) {
+            bail!("{what}: limb {i} is not a 16-bit integer ({limb})");
+        }
+        x |= (limb as u64) << (16 * i);
+    }
+    Ok(x)
+}
+
+/// Decode a small count stored as one f32 (exact for the values we
+/// write; anything non-integral or out of range is a corrupt file).
+fn read_count(v: f32, what: &str) -> Result<usize> {
+    if !(v.is_finite() && v.fract() == 0.0 && (0.0..=16_777_216.0).contains(&v)) {
+        bail!("{what}: not a valid count ({v})");
+    }
+    Ok(v as usize)
+}
+
+/// One tenant's persisted state, wrapping the immutable registry
+/// snapshot. At capture time this SHARES the live registry's `Arc` —
+/// checkpointing a fleet never deep-copies adapter weights (the only
+/// weight copy happens at serialization, into the output bundle). After
+/// a load it owns a freshly parsed snapshot flagged `restored`.
+#[derive(Clone, Debug)]
+pub struct TenantRecord {
+    pub snapshot: Arc<AdapterSnapshot>,
+}
+
+impl TenantRecord {
+    pub fn tenant(&self) -> TenantId {
+        self.snapshot.tenant
+    }
+
+    /// The publish version the weights were live at.
+    pub fn version(&self) -> u64 {
+        self.snapshot.version
+    }
+
+    /// The adapter weights, one per backbone layer.
+    pub fn adapters(&self) -> &[LoraAdapter] {
+        &self.snapshot.adapters
+    }
+}
+
+/// A consistent cut of the whole registry: every record's weights are an
+/// immutable published snapshot (never a torn mid-publish view — the
+/// registry hands out `Arc`s of complete sets only), and `next_version`
+/// is ≥ every record's version by construction.
+#[derive(Clone, Debug, Default)]
+pub struct RegistryCheckpoint {
+    /// the global version counter at capture time
+    pub next_version: u64,
+    /// wall-clock capture stamp (unix micros). Version numbers reset
+    /// across restarts, so THIS is what orders two checkpoints of the
+    /// same fleet: restore resolves restored-vs-restored conflicts by
+    /// capture stamp, never by raw version (see
+    /// [`AdapterRegistry::restore`]).
+    pub captured_at_micros: u64,
+    /// per-tenant records, sorted by tenant id
+    pub tenants: Vec<TenantRecord>,
+}
+
+/// Wall-clock unix micros (0 if the clock reads before the epoch —
+/// ordering degrades gracefully rather than panicking).
+fn now_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map_or(0, |d| d.as_micros() as u64)
+}
+
+impl RegistryCheckpoint {
+    /// Capture a consistent cut of `reg`. Publishers may race the
+    /// capture freely: each included record is an actually-published
+    /// immutable snapshot (either the pre-race or post-race version,
+    /// never a blend), and the counter is read AFTER the snapshots so it
+    /// upper-bounds every captured version.
+    pub fn capture(reg: &AdapterRegistry) -> Self {
+        let ids = reg.tenants();
+        let snaps = reg.snapshot_many(ids.iter().copied());
+        // records share the registry's immutable Arcs — capturing a
+        // 10^5-tenant fleet moves pointers, not weights
+        let mut tenants: Vec<TenantRecord> = snaps
+            .into_values()
+            .map(|snapshot| TenantRecord { snapshot })
+            .collect();
+        tenants.sort_unstable_by_key(|r| r.tenant());
+        // read the counter LAST: every captured version was allocated
+        // from it before we got here, so this load dominates them all
+        let next_version = reg.current_version();
+        Self { next_version, captured_at_micros: now_micros(), tenants }
+    }
+
+    /// Capture a single tenant — the node-to-node migration payload.
+    /// `None` if the tenant has nothing published.
+    pub fn capture_tenant(reg: &AdapterRegistry, tenant: TenantId) -> Option<Self> {
+        let snapshot = reg.snapshot(tenant)?;
+        Some(Self {
+            next_version: snapshot.version,
+            captured_at_micros: now_micros(),
+            tenants: vec![TenantRecord { snapshot }],
+        })
+    }
+
+    /// Reject a checkpoint that would serialize into a file `from_bundle`
+    /// itself refuses to load — called by [`RegistryCheckpoint::save`]
+    /// (and the server's persist path) so an operator can never write an
+    /// unreadable "backup". Today's single rule: every tenant must carry
+    /// the same adapter count (one manifest-wide `n_layers`); a raw
+    /// registry CAN hold heterogeneous layer counts since `publish` does
+    /// not shape-check, but such a fleet is not checkpointable.
+    pub fn validate(&self) -> Result<()> {
+        let n_layers = self.n_layers();
+        for rec in &self.tenants {
+            if rec.adapters().len() != n_layers {
+                bail!(
+                    "tenant {} has {} adapters but tenant {} has {n_layers} — \
+                     heterogeneous fleets cannot be checkpointed",
+                    rec.tenant(),
+                    rec.adapters().len(),
+                    self.tenants[0].tenant()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total adapter parameters across all records.
+    pub fn param_count(&self) -> usize {
+        self.tenants
+            .iter()
+            .map(|r| r.adapters().iter().map(|a| a.param_count()).sum::<usize>())
+            .sum()
+    }
+
+    /// Skip-adapter layer count of the first record (0 for an empty
+    /// checkpoint). All records carrying the same count is enforced at
+    /// save ([`RegistryCheckpoint::validate`]) and at load (manifest
+    /// validation) — not at capture, since a raw registry can hold
+    /// heterogeneous fleets.
+    pub fn n_layers(&self) -> usize {
+        self.tenants.first().map_or(0, |r| r.adapters().len())
+    }
+
+    pub fn to_bundle(&self) -> TensorBundle {
+        let mut bundle = TensorBundle::default();
+        let mut manifest = Vec::with_capacity(MANIFEST_LEN);
+        manifest.push(FORMAT_VERSION as f32);
+        push_u64(&mut manifest, self.tenants.len() as u64);
+        push_u64(&mut manifest, self.next_version);
+        manifest.push(self.n_layers() as f32);
+        push_u64(&mut manifest, self.captured_at_micros);
+        bundle.insert_vec(MANIFEST, &manifest);
+        for rec in &self.tenants {
+            let mut meta = Vec::with_capacity(META_LEN);
+            push_u64(&mut meta, rec.version());
+            meta.push(rec.adapters().len() as f32);
+            bundle.insert_vec(&format!("t{}.meta", rec.tenant()), &meta);
+            write_adapters(&mut bundle, &format!("t{}.", rec.tenant()), rec.adapters());
+        }
+        bundle
+    }
+
+    /// Parse and FULLY validate a bundle as a registry checkpoint. Any
+    /// inconsistency — missing/short manifest, wrong format version,
+    /// tenant or adapter counts that disagree with the manifest, corrupt
+    /// versions, rank-mismatched factors, unaccounted-for tensors — is a
+    /// typed error, never a panic.
+    pub fn from_bundle(bundle: &TensorBundle) -> Result<Self> {
+        let manifest = bundle
+            .get_vec(MANIFEST)
+            .context("not a registry checkpoint: no __manifest__ tensor")?;
+        if manifest.len() != MANIFEST_LEN {
+            bail!(
+                "corrupt manifest: {} floats, expected {MANIFEST_LEN}",
+                manifest.len()
+            );
+        }
+        let fmt = read_count(manifest[0], "manifest format version")? as u64;
+        if fmt != FORMAT_VERSION {
+            bail!("unsupported checkpoint format v{fmt} (this build reads v{FORMAT_VERSION})");
+        }
+        let n_tenants = read_u64(&manifest[1..5], "manifest tenant count")? as usize;
+        let next_version = read_u64(&manifest[5..9], "manifest next_version")?;
+        let n_layers = read_count(manifest[9], "manifest n_layers")?;
+        let captured_at_micros = read_u64(&manifest[10..14], "manifest capture stamp")?;
+
+        // cross-check the declared counts against the ACTUAL tensor count
+        // BEFORE believing either of them: manifest + per-tenant meta + 2
+        // factor tensors per adapter. This both rejects stray/missing
+        // tensors and keeps an adversarial count (e.g. 2^62 tenants in a
+        // 100-byte file) from ever reaching an allocation — a corrupt
+        // checkpoint must error, never panic or OOM.
+        let expected = n_tenants
+            .checked_mul(1 + 2 * n_layers)
+            .and_then(|t| t.checked_add(1))
+            .with_context(|| format!("manifest declares impossible tenant count {n_tenants}"))?;
+        if bundle.tensors.len() != expected {
+            bail!(
+                "checkpoint has {} tensors, expected {expected} for {n_tenants} tenants x \
+                 {n_layers} layers (torn or tampered checkpoint)",
+                bundle.tensors.len()
+            );
+        }
+
+        // collect the declared tenants from their meta tensors; the count
+        // check above bounds n_tenants by the real tensor count
+        let mut tenants = Vec::with_capacity(n_tenants);
+        for name in bundle.tensors.keys() {
+            let meta_name = name.strip_prefix('t').and_then(|s| s.strip_suffix(".meta"));
+            let Some(id_str) = meta_name else {
+                continue;
+            };
+            let tenant: TenantId = id_str
+                .parse()
+                .with_context(|| format!("corrupt tenant id in tensor name '{name}'"))?;
+            // the id must be CANONICAL: "t05.meta" and "t+5.meta" both
+            // parse to 5, which would let a tampered file smuggle in
+            // duplicate tenant records (and unvalidated filler tensors
+            // under the non-canonical prefix) while balancing the counts
+            if *name != format!("t{tenant}.meta") {
+                bail!("non-canonical tenant tensor name '{name}' (tampered checkpoint?)");
+            }
+            let meta = bundle.get_vec(name).expect("key comes from this bundle");
+            if meta.len() != META_LEN {
+                bail!("tenant {tenant}: corrupt meta ({} floats)", meta.len());
+            }
+            let version = read_u64(&meta[..4], "tenant version")?;
+            if version == 0 || version > next_version {
+                bail!(
+                    "tenant {tenant}: version {version} impossible under \
+                     persisted counter {next_version} (torn checkpoint?)"
+                );
+            }
+            let n_adapters = read_count(meta[4], "tenant adapter count")?;
+            if n_adapters != n_layers {
+                bail!(
+                    "tenant {tenant}: {n_adapters} adapters, manifest says {n_layers} per tenant"
+                );
+            }
+            let adapters = read_adapters(bundle, &format!("t{tenant}."), n_layers)
+                .with_context(|| format!("tenant {tenant}"))?;
+            tenants.push(TenantRecord {
+                snapshot: Arc::new(AdapterSnapshot {
+                    tenant,
+                    version,
+                    adapters,
+                    restored_from_micros: Some(captured_at_micros),
+                }),
+            });
+        }
+        if tenants.len() != n_tenants {
+            bail!(
+                "checkpoint holds {} tenants, manifest declares {n_tenants} (torn checkpoint?)",
+                tenants.len()
+            );
+        }
+        tenants.sort_unstable_by_key(|r| r.tenant());
+        Ok(Self { next_version, captured_at_micros, tenants })
+    }
+
+    /// Serialize to `.s2l` bytes (the migration wire payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_bundle().to_bytes()
+    }
+
+    /// Parse + validate `.s2l` bytes. See [`RegistryCheckpoint::from_bundle`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        Self::from_bundle(&TensorBundle::from_bytes(bytes)?)
+    }
+
+    /// Atomically persist to `path` (tmp + fsync + rename — a crash
+    /// mid-save leaves the previous checkpoint intact, never a torn
+    /// one). Validates first: an unloadable checkpoint is refused at
+    /// save time, not discovered at restore time.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        self.to_bundle()
+            .save(path)
+            .with_context(|| format!("save registry checkpoint {}", path.display()))
+    }
+
+    /// Load + fully validate the checkpoint at `path`.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_bundle(
+            &TensorBundle::load(path)
+                .with_context(|| format!("load registry checkpoint {}", path.display()))?,
+        )
+    }
+
+    /// Install this checkpoint into `reg`: each tenant at its EXACT
+    /// persisted version. A tenant is skipped when the live registry
+    /// already holds an equal-or-newer version OR a locally published
+    /// snapshot (version numbers reset across restarts, so adapters
+    /// trained after a crash are never clobbered by a pre-crash
+    /// checkpoint — see [`AdapterRegistry::restore`]). The global counter
+    /// is raised to the checkpoint's regardless, so every post-restore
+    /// publish outranks everything persisted. Returns the number of
+    /// tenants actually installed. Installation moves `Arc`s — no weight
+    /// copies.
+    pub fn restore_into(&self, reg: &AdapterRegistry) -> usize {
+        // floor first: even if every per-tenant install is superseded,
+        // future allocations must exceed the persisted counter
+        reg.raise_version_floor(self.next_version);
+        self.tenants
+            .iter()
+            .filter(|rec| reg.restore(Arc::clone(&rec.snapshot)))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    fn adapters(rng: &mut Rng) -> Vec<LoraAdapter> {
+        (0..3)
+            .map(|k| {
+                let n_in = [8, 12, 12][k];
+                let mut ad = LoraAdapter::new(rng, n_in, 2, 3);
+                for v in ad.wb.data.iter_mut() {
+                    *v = rng.normal();
+                }
+                ad
+            })
+            .collect()
+    }
+
+    fn populated(rng: &mut Rng, n: u64) -> AdapterRegistry {
+        let reg = AdapterRegistry::with_shards(4);
+        for t in 0..n {
+            reg.publish(t * 7 + 1, adapters(rng));
+        }
+        reg
+    }
+
+    #[test]
+    fn u64_limbs_are_bit_exact_at_the_extremes() {
+        for x in [0u64, 1, 65535, 65536, u32::MAX as u64, 1 << 40, u64::MAX, u64::MAX - 1] {
+            let mut v = Vec::new();
+            push_u64(&mut v, x);
+            assert_eq!(read_u64(&v, "probe").unwrap(), x, "{x} must roundtrip");
+        }
+        // corrupt limbs are typed errors
+        assert!(read_u64(&[0.5, 0.0, 0.0, 0.0], "p").is_err());
+        assert!(read_u64(&[-1.0, 0.0, 0.0, 0.0], "p").is_err());
+        assert!(read_u64(&[65536.0, 0.0, 0.0, 0.0], "p").is_err());
+        assert!(read_u64(&[f32::NAN, 0.0, 0.0, 0.0], "p").is_err());
+        assert!(read_u64(&[0.0, 0.0], "p").is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_bit_identical_through_bytes() {
+        let mut rng = Rng::new(1);
+        let reg = populated(&mut rng, 9);
+        let ck = RegistryCheckpoint::capture(&reg);
+        assert_eq!(ck.tenants.len(), 9);
+        assert_eq!(ck.n_layers(), 3);
+        assert!(ck.next_version >= ck.tenants.iter().map(|r| r.version()).max().unwrap());
+
+        let back = RegistryCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.next_version, ck.next_version);
+        assert_eq!(back.tenants.len(), ck.tenants.len());
+        assert_eq!(back.captured_at_micros, ck.captured_at_micros, "capture stamp survives");
+        for (a, b) in ck.tenants.iter().zip(&back.tenants) {
+            assert_eq!(a.tenant(), b.tenant());
+            assert_eq!(a.version(), b.version());
+            assert_eq!(
+                b.snapshot.restored_from_micros,
+                Some(ck.captured_at_micros),
+                "loaded records must carry the checkpoint's capture stamp"
+            );
+            for (x, y) in a.adapters().iter().zip(b.adapters()) {
+                assert_eq!(x.wa, y.wa, "weights must survive bit-identical");
+                assert_eq!(x.wb, y.wb);
+            }
+        }
+    }
+
+    #[test]
+    fn restore_reproduces_the_registry() {
+        let mut rng = Rng::new(2);
+        let reg = populated(&mut rng, 6);
+        // bump one tenant twice so versions are not all 1..n
+        reg.publish(8, adapters(&mut rng));
+        let ck = RegistryCheckpoint::capture(&reg);
+
+        let fresh = AdapterRegistry::with_shards(16); // different shard count: must not matter
+        assert_eq!(ck.restore_into(&fresh), ck.tenants.len());
+        assert_eq!(fresh.tenant_count(), reg.tenant_count());
+        for rec in &ck.tenants {
+            let snap = fresh.snapshot(rec.tenant()).unwrap();
+            assert_eq!(snap.version, rec.version(), "exact persisted version");
+            for (x, y) in rec.adapters().iter().zip(&snap.adapters) {
+                assert_eq!(x.wa, y.wa);
+                assert_eq!(x.wb, y.wb);
+            }
+        }
+        // post-restore publishes outrank everything persisted
+        let v = fresh.publish(999, adapters(&mut rng));
+        assert!(v > ck.next_version);
+        // restoring AGAIN is a no-op (idempotent)
+        assert_eq!(ck.restore_into(&fresh), 0);
+    }
+
+    #[test]
+    fn heterogeneous_fleets_are_refused_at_save_time() {
+        // `AdapterRegistry::publish` does not shape-check, so a raw
+        // registry CAN hold tenants with differing adapter counts — but
+        // such a fleet would serialize into a file `from_bundle` refuses
+        // to load (one manifest-wide n_layers). The save path must catch
+        // that up front instead of writing an unreadable "backup".
+        let mut rng = Rng::new(7);
+        let reg = AdapterRegistry::new();
+        reg.publish(1, adapters(&mut rng));
+        let mut short = adapters(&mut rng);
+        short.truncate(2);
+        reg.publish(2, short);
+        let ck = RegistryCheckpoint::capture(&reg);
+        let dir = std::env::temp_dir().join("s2l_persist_hetero");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.s2l");
+        let e = ck.save(&path).unwrap_err();
+        assert!(e.to_string().contains("heterogeneous"), "{e}");
+        assert!(!path.exists(), "unloadable checkpoint reached disk");
+    }
+
+    #[test]
+    fn empty_checkpoint_is_valid() {
+        let reg = AdapterRegistry::new();
+        let ck = RegistryCheckpoint::capture(&reg);
+        assert_eq!(ck.tenants.len(), 0);
+        let back = RegistryCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.tenants.len(), 0);
+        assert_eq!(back.restore_into(&AdapterRegistry::new()), 0);
+    }
+
+    #[test]
+    fn single_tenant_capture_is_the_migration_payload() {
+        let mut rng = Rng::new(3);
+        let reg = populated(&mut rng, 4);
+        assert!(RegistryCheckpoint::capture_tenant(&reg, 9999).is_none());
+        let ck = RegistryCheckpoint::capture_tenant(&reg, 8).unwrap();
+        assert_eq!(ck.tenants.len(), 1);
+        assert_eq!(ck.tenants[0].tenant(), 8);
+        let back = RegistryCheckpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.tenants[0].version(), ck.tenants[0].version());
+    }
+
+    #[test]
+    fn torn_and_tampered_checkpoints_are_typed_errors() {
+        let mut rng = Rng::new(4);
+        let reg = populated(&mut rng, 5);
+        let ck = RegistryCheckpoint::capture(&reg);
+        let bytes = ck.to_bytes();
+
+        // every torn prefix fails at SOME validation layer, never panics
+        for frac in [0usize, 1, 7, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                RegistryCheckpoint::from_bytes(&bytes[..frac]).is_err(),
+                "torn prefix {frac}/{} must be rejected",
+                bytes.len()
+            );
+        }
+
+        // a valid TensorBundle that is NOT a checkpoint
+        let mut not_ck = TensorBundle::default();
+        not_ck.insert_vec("w1", &[1.0, 2.0]);
+        let e = RegistryCheckpoint::from_bundle(&not_ck).unwrap_err();
+        assert!(e.to_string().contains("manifest"), "{e}");
+
+        // manifest declaring more tenants than the file carries
+        let mut bundle = ck.to_bundle();
+        let mut manifest = bundle.get_vec(MANIFEST).unwrap();
+        manifest[1] += 1.0; // tenant count low limb
+        bundle.insert_vec(MANIFEST, &manifest);
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("tensors, expected"), "{e}");
+
+        // an ADVERSARIAL tenant count (2^62 in a tiny file) must be a
+        // typed error before any allocation — never a capacity panic/OOM
+        let mut bundle = ck.to_bundle();
+        let mut manifest = bundle.get_vec(MANIFEST).unwrap();
+        (manifest[1], manifest[2], manifest[3], manifest[4]) = (0.0, 0.0, 0.0, 16384.0);
+        bundle.insert_vec(MANIFEST, &manifest);
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("impossible tenant count"), "{e}");
+
+        // a stray tensor the manifest cannot account for
+        let mut bundle = ck.to_bundle();
+        bundle.insert_vec("stowaway", &[0.0]);
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("tensors, expected"), "{e}");
+
+        // a tenant version above the persisted counter (a torn cut)
+        let mut bundle = ck.to_bundle();
+        let t0 = ck.tenants[0].tenant();
+        let mut meta = bundle.get_vec(&format!("t{t0}.meta")).unwrap();
+        meta[3] = 65535.0; // version high limb -> astronomically large
+        bundle.insert_vec(&format!("t{t0}.meta"), &meta);
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("impossible"), "{e}");
+
+        // a future format version
+        let mut bundle = ck.to_bundle();
+        let mut manifest = bundle.get_vec(MANIFEST).unwrap();
+        manifest[0] = (FORMAT_VERSION + 1) as f32;
+        bundle.insert_vec(MANIFEST, &manifest);
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("unsupported"), "{e}");
+
+        // rank-torn factor matrices
+        let mut bundle = ck.to_bundle();
+        bundle.insert(&format!("t{t0}.a0.wb"), Mat::zeros(5, 3));
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("rank mismatch"), "{e}");
+
+        // non-canonical tenant ids ("t08" parses to 8) could smuggle in
+        // duplicate tenant records plus unvalidated filler tensors while
+        // balancing every count — rejected by the canonical-name check
+        let mut bundle = ck.to_bundle();
+        let moved: Vec<String> = bundle
+            .tensors
+            .keys()
+            .filter(|k| k.starts_with(&format!("t{t0}.")))
+            .cloned()
+            .collect();
+        for old in moved {
+            let tensor = bundle.tensors.remove(&old).unwrap();
+            let renamed = old.replacen(&format!("t{t0}."), &format!("t0{t0}."), 1);
+            bundle.tensors.insert(renamed, tensor);
+        }
+        let e = RegistryCheckpoint::from_bundle(&bundle).unwrap_err();
+        assert!(e.to_string().contains("non-canonical"), "{e}");
+    }
+
+    #[test]
+    fn save_load_through_disk_is_atomic_and_clean() {
+        let mut rng = Rng::new(5);
+        let reg = populated(&mut rng, 3);
+        let ck = RegistryCheckpoint::capture(&reg);
+        let dir = std::env::temp_dir().join("s2l_persist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.s2l");
+        ck.save(&path).unwrap();
+        // overwrite with a GROWN registry: load must see old-complete or
+        // new-complete, and after save returns, the new one
+        reg.publish(500, adapters(&mut rng));
+        RegistryCheckpoint::capture(&reg).save(&path).unwrap();
+        let back = RegistryCheckpoint::load(&path).unwrap();
+        assert_eq!(back.tenants.len(), 4);
+        // a torn file ON DISK is rejected, not panicked on
+        let bytes = std::fs::read(&path).unwrap();
+        let torn = dir.join("torn.s2l");
+        std::fs::write(&torn, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(RegistryCheckpoint::load(&torn).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&torn).ok();
+    }
+}

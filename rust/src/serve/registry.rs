@@ -54,6 +54,14 @@ pub struct AdapterSnapshot {
     pub version: u64,
     /// Skip adapters, one per backbone layer (adapter k: N_k -> M_n).
     pub adapters: Vec<LoraAdapter>,
+    /// Provenance: `None` for snapshots published by live work in THIS
+    /// process ([`AdapterRegistry::publish`]); `Some(capture_micros)` for
+    /// snapshots installed from a checkpoint captured at that wall-clock
+    /// stamp. Version numbers reset across process restarts, so
+    /// [`AdapterRegistry::restore`] orders conflicting snapshots by
+    /// provenance (live > later-captured checkpoint > earlier-captured
+    /// checkpoint), never by raw version numbers alone.
+    pub restored_from_micros: Option<u64>,
 }
 
 impl AdapterSnapshot {
@@ -160,6 +168,7 @@ impl AdapterRegistry {
             tenant,
             version,
             adapters,
+            restored_from_micros: None,
         });
         let shard = self.shard(tenant);
         shard.writes.fetch_add(1, Ordering::Relaxed);
@@ -174,6 +183,76 @@ impl AdapterRegistry {
         }
         self.publishes.fetch_add(1, Ordering::Relaxed);
         version
+    }
+
+    /// Re-install a PERSISTED snapshot at its exact persisted version —
+    /// the restore half of `serve::persist`. Returns `true` if the
+    /// snapshot was installed, `false` if the registry kept what it has.
+    ///
+    /// Raw version numbers reset across process restarts, so conflicts
+    /// are ordered by PROVENANCE, not version (the decision runs under
+    /// the shard write lock, so a racing fine-tune publish cannot be
+    /// clobbered):
+    ///
+    /// * a LOCALLY PUBLISHED current snapshot always wins — a pre-crash
+    ///   checkpoint can carry a bigger number than adapters a tenant
+    ///   just retrained post-crash, and the retrain must survive;
+    /// * two checkpoint-installed snapshots are ordered by their
+    ///   checkpoints' capture stamps — the LATER-captured checkpoint is
+    ///   the newer truth even where its raw versions are smaller
+    ///   (restoring checkpoints out of order can never resurrect older
+    ///   weights); equal stamps (the same checkpoint re-applied) fall
+    ///   back to the version compare, making re-restore idempotent.
+    ///
+    /// Monotonicity of PUBLISHES is preserved on both axes:
+    /// * per tenant — the compare-and-install runs under the tenant's
+    ///   shard write lock, exactly like [`AdapterRegistry::publish`];
+    /// * globally — the version counter is raised to at least
+    ///   `snap.version` FIRST (`fetch_max`), so every post-restore
+    ///   publish allocates a version strictly greater than anything
+    ///   restored (this floor-raise happens even when the install is
+    ///   skipped, healing the version-domain reset going forward).
+    pub fn restore(&self, snap: Arc<AdapterSnapshot>) -> bool {
+        assert!(snap.version > 0, "published versions start at 1");
+        self.next_version.fetch_max(snap.version, Ordering::Relaxed);
+        let shard = self.shard(snap.tenant);
+        shard.writes.fetch_add(1, Ordering::Relaxed);
+        let mut map = shard.map.write().expect("registry shard poisoned");
+        let keep_current = map.get(&snap.tenant).is_some_and(|cur| {
+            match (cur.restored_from_micros, snap.restored_from_micros) {
+                // live-published state always beats checkpoint data
+                (None, _) => true,
+                // two checkpoints: later capture wins; same capture
+                // falls back to versions (idempotent re-restore)
+                (Some(cur_at), Some(new_at)) => {
+                    cur_at > new_at || (cur_at == new_at && cur.version >= snap.version)
+                }
+                // incoming carries live-provenance weights (in-memory
+                // capture -> restore_into migration): newer than any
+                // disk checkpoint
+                (Some(_), None) => false,
+            }
+        });
+        if keep_current {
+            false
+        } else {
+            map.insert(snap.tenant, snap);
+            true
+        }
+    }
+
+    /// Raise the global version counter to at least `v` without
+    /// installing anything — restoring a checkpoint's `next_version`
+    /// ensures post-restore publishes outrank every PERSISTED version,
+    /// even for tenants whose snapshots were rejected or absent.
+    pub fn raise_version_floor(&self, v: u64) {
+        self.next_version.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// The most recently allocated global version (0 = nothing published
+    /// yet). Every snapshot version ever handed out is ≤ this.
+    pub fn current_version(&self) -> u64 {
+        self.next_version.load(Ordering::Relaxed)
     }
 
     /// Latest snapshot for `tenant` (an `Arc` clone — O(1), never blocks
@@ -418,6 +497,104 @@ mod tests {
         }
         assert_eq!(reg.tenant_count(), 10);
         assert_eq!(reg.shard_tenants(0), (0..10u64).collect::<Vec<_>>());
+    }
+
+    /// A snapshot as loaded from a checkpoint captured at `at` micros.
+    fn persisted(
+        tenant: TenantId,
+        version: u64,
+        at: u64,
+        adapters: Vec<LoraAdapter>,
+    ) -> Arc<AdapterSnapshot> {
+        Arc::new(AdapterSnapshot { tenant, version, adapters, restored_from_micros: Some(at) })
+    }
+
+    #[test]
+    fn restore_installs_exact_versions_and_raises_the_floor() {
+        let reg = AdapterRegistry::new();
+        let mut rng = Rng::new(8);
+        assert_eq!(reg.current_version(), 0);
+        assert!(reg.restore(persisted(3, 41, 100, adapters(&mut rng))));
+        assert!(reg.restore(persisted(9, 7, 100, adapters(&mut rng))));
+        assert_eq!(reg.version(3), 41, "restored at the persisted version");
+        assert_eq!(reg.version(9), 7);
+        assert!(reg.current_version() >= 41);
+        // every post-restore publish outranks everything restored
+        let v = reg.publish(5, adapters(&mut rng));
+        assert!(v > 41, "publish after restore allocated {v}");
+        // within the SAME checkpoint stamp, a newer version replaces
+        assert!(reg.restore(persisted(9, 8, 100, adapters(&mut rng))));
+        assert_eq!(reg.version(9), 8);
+        // ...and an older one is an idempotent no-op
+        assert!(!reg.restore(persisted(9, 7, 100, adapters(&mut rng))));
+        assert_eq!(reg.version(9), 8);
+    }
+
+    #[test]
+    fn restore_never_clobbers_locally_published_adapters() {
+        let reg = AdapterRegistry::new();
+        let mut rng = Rng::new(9);
+        let stale = adapters(&mut rng);
+        let stale_marker = stale[0].wa.data[0];
+        let live = reg.publish(1, adapters(&mut rng));
+        // a checkpoint at the same version must be a no-op...
+        assert!(
+            !reg.restore(persisted(1, live, 100, stale.clone())),
+            "equal version reinstalled"
+        );
+        let snap = reg.snapshot(1).unwrap();
+        assert_eq!(snap.version, live);
+        assert_ne!(snap.adapters[0].wa.data[0], stale_marker);
+        // ...and so must a checkpoint with a BIGGER version: version
+        // numbers reset across restarts (the post-crash-retrain scenario:
+        // fresh counter, tenant retrains at v1, operator restores a
+        // pre-crash checkpoint claiming v41 — the retrain must survive)
+        assert!(!reg.restore(persisted(1, live + 40, 100, stale)));
+        let snap = reg.snapshot(1).unwrap();
+        assert_eq!(snap.version, live, "live-trained adapters were clobbered");
+        assert!(snap.restored_from_micros.is_none());
+        // the floor was still raised: the next publish heals the domain
+        assert!(reg.publish(1, adapters(&mut rng)) > live + 40);
+    }
+
+    #[test]
+    fn out_of_order_restores_cannot_resurrect_older_checkpoints() {
+        // crash #1: checkpoint A (pre-crash, high versions, EARLY stamp);
+        // revive, tenant retrains, checkpoint B (low versions, LATE
+        // stamp); crash #2. The operator restores A then B — and B must
+        // win despite its smaller raw version. Restoring B then A must
+        // ALSO leave B's weights live.
+        let mut rng = Rng::new(11);
+        let early = adapters(&mut rng);
+        let late = adapters(&mut rng);
+        let late_marker = late[0].wa.data[0];
+
+        // A (stamp 100, v41) then B (stamp 200, v1)
+        let reg = AdapterRegistry::new();
+        assert!(reg.restore(persisted(1, 41, 100, early.clone())));
+        assert!(reg.restore(persisted(1, 1, 200, late.clone())), "later capture must win");
+        let snap = reg.snapshot(1).unwrap();
+        assert_eq!((snap.version, snap.adapters[0].wa.data[0]), (1, late_marker));
+
+        // B (stamp 200, v1) then A (stamp 100, v41)
+        let reg = AdapterRegistry::new();
+        assert!(reg.restore(persisted(1, 1, 200, late)));
+        assert!(!reg.restore(persisted(1, 41, 100, early)), "stale checkpoint resurrected");
+        let snap = reg.snapshot(1).unwrap();
+        assert_eq!((snap.version, snap.adapters[0].wa.data[0]), (1, late_marker));
+        // the floor covers BOTH checkpoints either way
+        assert!(reg.publish(1, adapters(&mut rng)) > 41);
+    }
+
+    #[test]
+    fn version_floor_is_monotone() {
+        let reg = AdapterRegistry::new();
+        reg.raise_version_floor(100);
+        assert_eq!(reg.current_version(), 100);
+        reg.raise_version_floor(50); // lowering is a no-op
+        assert_eq!(reg.current_version(), 100);
+        let mut rng = Rng::new(10);
+        assert_eq!(reg.publish(1, adapters(&mut rng)), 101);
     }
 
     #[test]

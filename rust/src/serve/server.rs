@@ -38,6 +38,7 @@
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -51,10 +52,12 @@ use crate::model::{AdapterSet, Mlp};
 use crate::nn::lora::LoraAdapter;
 use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, QueueFull, MAX_RANK};
 use crate::serve::metrics::ServeMetrics;
+use crate::serve::persist::RegistryCheckpoint;
 use crate::serve::registry::{AdapterRegistry, TenantId};
 use crate::serve::scheduler::WorkerPool;
 use crate::tensor::ops::Backend;
 use crate::train::FineTuner;
+use crate::util::error::{anyhow, bail, Context, Result as S2lResult};
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 
@@ -151,6 +154,13 @@ pub enum Request {
     Feedback(Vec<f32>, usize),
     /// externally trained adapters (e.g. migrated from another node)
     SwapAdapters(Vec<LoraAdapter>),
+    /// checkpoint every tenant's published adapters + versions to disk
+    /// (crash-safe: see [`FleetServer::persist_to`]); the tenant id on
+    /// `handle` is ignored — this is a fleet-wide operation
+    SaveState(PathBuf),
+    /// install a checkpoint written by `SaveState` (see
+    /// [`FleetServer::restore_from`]); fleet-wide, tenant id ignored
+    RestoreState(PathBuf),
     Stats,
 }
 
@@ -165,6 +175,30 @@ pub enum RejectReason {
     RateLimited,
     /// the request itself is invalid (shape / label / adapter mismatch)
     Malformed(String),
+    /// a SaveState/RestoreState/migration operation failed (I/O error,
+    /// torn or incompatible checkpoint) — the serving state is untouched
+    PersistFailed(String),
+}
+
+/// Result of a successful [`FleetServer::persist_to`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PersistReport {
+    /// tenants captured in the checkpoint
+    pub tenants: usize,
+    /// serialized checkpoint size on disk
+    pub bytes: usize,
+}
+
+/// Result of a successful [`FleetServer::restore_from`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RestoreReport {
+    /// tenants carried by the checkpoint
+    pub tenants: usize,
+    /// tenants actually installed (the rest were already live at an
+    /// equal-or-newer version — restore never rolls a tenant backwards)
+    pub installed: usize,
+    /// highest per-tenant version in the checkpoint
+    pub max_version: u64,
 }
 
 /// Immediate response to `handle` (Predict/Feedback resolve later via
@@ -174,6 +208,10 @@ pub enum Response {
     /// queued into the micro-batch; the ticket reappears in a Completion
     Queued { ticket: u64 },
     Swapped { version: u64 },
+    /// fleet state checkpointed to disk
+    Persisted(PersistReport),
+    /// fleet state installed from a checkpoint
+    Restored(RestoreReport),
     Rejected(RejectReason),
     Stats(Box<ServerStats>),
 }
@@ -213,6 +251,10 @@ pub struct ServerStats {
     pub queue_bound: usize,
     /// adapter-registry shard count
     pub registry_shards: usize,
+    /// fleet checkpoints written (`persist_to` / `SaveState`)
+    pub persists: u64,
+    /// fleet checkpoints installed (`restore_from` / `RestoreState`)
+    pub restores: u64,
 }
 
 struct TenantState {
@@ -414,8 +456,96 @@ impl FleetServer {
                 }
                 Err(msg) => Response::Rejected(RejectReason::Malformed(msg)),
             },
+            Request::SaveState(path) => match self.persist_to(&path) {
+                Ok(report) => Response::Persisted(report),
+                Err(e) => Response::Rejected(RejectReason::PersistFailed(e.to_string())),
+            },
+            Request::RestoreState(path) => match self.restore_from(&path) {
+                Ok(report) => Response::Restored(report),
+                Err(e) => Response::Rejected(RejectReason::PersistFailed(e.to_string())),
+            },
             Request::Stats => Response::Stats(Box::new(self.stats())),
         }
+    }
+
+    /// Checkpoint the fleet's durable state — every tenant's published
+    /// adapters + version, plus the global version counter — to `path`,
+    /// atomically (tmp + fsync + rename: a crash mid-save leaves the
+    /// previous checkpoint intact, never a torn file). Serve-side scratch
+    /// (SkipCaches, drift windows, buckets) is deliberately NOT persisted:
+    /// it is cheap to rebuild and exactly what TTL eviction already drops.
+    pub fn persist_to(&mut self, path: &Path) -> S2lResult<PersistReport> {
+        let ck = RegistryCheckpoint::capture(&self.registry);
+        // unreachable through this server's own publishes (every path
+        // shape-checks against the one backbone), but a checkpoint that
+        // could not be loaded back must never reach disk
+        ck.validate()?;
+        let bytes = ck.to_bytes();
+        crate::model::io::atomic_write(path, &bytes)
+            .with_context(|| format!("persist fleet state to {}", path.display()))?;
+        self.metrics.persists += 1;
+        Ok(PersistReport { tenants: ck.tenants.len(), bytes: bytes.len() })
+    }
+
+    /// Install the checkpoint at `path`: every tenant is validated
+    /// against THIS backbone (the same shape/rank checks as
+    /// `SwapAdapters`) before anything is touched — a checkpoint from an
+    /// incompatible deployment is rejected whole. Each valid tenant is
+    /// re-published at a version ≥ its persisted one (exact when the
+    /// live registry has nothing newer), and post-restore publishes
+    /// outrank everything persisted, so per-tenant version monotonicity
+    /// survives the crash/restore boundary.
+    pub fn restore_from(&mut self, path: &Path) -> S2lResult<RestoreReport> {
+        let ck = RegistryCheckpoint::load(path)?;
+        for rec in &ck.tenants {
+            self.validate_adapters(rec.adapters())
+                .map_err(|msg| anyhow!("checkpoint tenant {}: {msg}", rec.tenant()))?;
+        }
+        let installed = ck.restore_into(&self.registry);
+        self.metrics.restores += 1;
+        self.metrics.tenants_restored += installed as u64;
+        Ok(RestoreReport {
+            tenants: ck.tenants.len(),
+            installed,
+            max_version: ck.tenants.iter().map(|r| r.version()).max().unwrap_or(0),
+        })
+    }
+
+    /// Export one tenant's published adapters as a validated migration
+    /// payload (`.s2l` bytes) for another node's [`FleetServer::import_tenant`].
+    pub fn export_tenant(&mut self, tenant: TenantId) -> S2lResult<Vec<u8>> {
+        let ck = RegistryCheckpoint::capture_tenant(&self.registry, tenant)
+            .with_context(|| format!("tenant {tenant} has no published adapters to export"))?;
+        self.metrics.exports += 1;
+        Ok(ck.to_bytes())
+    }
+
+    /// Install a migrated tenant from `export_tenant` bytes. The payload
+    /// runs the SAME validation as a `SwapAdapters` request (layer count,
+    /// shapes, serving rank limit) and is then published at a version
+    /// allocated by THIS node — migration is an ordinary publish here,
+    /// not a cross-node version splice, so local monotonicity is trivially
+    /// preserved. Returns the tenant id and its new local version.
+    pub fn import_tenant(&mut self, bytes: &[u8]) -> S2lResult<(TenantId, u64)> {
+        let ck = RegistryCheckpoint::from_bytes(bytes)?;
+        if ck.tenants.len() != 1 {
+            bail!(
+                "migration payload must hold exactly one tenant, got {}",
+                ck.tenants.len()
+            );
+        }
+        let rec = &ck.tenants[0];
+        self.validate_adapters(rec.adapters())
+            .map_err(|msg| anyhow!("imported tenant {}: {msg}", rec.tenant()))?;
+        let tick = self.pump_tick;
+        let st = self
+            .tenants
+            .entry(rec.tenant())
+            .or_insert_with(|| TenantState::new(&self.cfg, tick));
+        st.last_active_tick = tick;
+        let version = self.registry.publish(rec.tenant(), rec.adapters().to_vec());
+        self.metrics.imports += 1;
+        Ok((rec.tenant(), version))
     }
 
     fn validate_adapters(&self, adapters: &[LoraAdapter]) -> Result<(), String> {
@@ -733,6 +863,8 @@ impl FleetServer {
             queued: self.batcher.pending(),
             queue_bound: self.batcher.queue_bound(),
             registry_shards: self.registry.shard_count(),
+            persists: self.metrics.persists,
+            restores: self.metrics.restores,
         }
     }
 
@@ -1151,6 +1283,94 @@ mod tests {
         assert_eq!(done[0].adapter_version, version, "latest adapters served");
         assert_eq!(s.tenant_count(), 1, "tenant re-admitted");
         assert_eq!(s.tenant_feedbacks(5), 0, "fresh serve state after eviction");
+    }
+
+    #[test]
+    fn save_and_restore_requests_roundtrip_via_handle() {
+        let dir = std::env::temp_dir().join("s2l_server_persist");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.s2l");
+
+        let mut s = server(0);
+        let mut rng = Rng::new(21);
+        let ads: Vec<LoraAdapter> = [8usize, 12, 12]
+            .iter()
+            .map(|&n_in| LoraAdapter::new(&mut rng, n_in, 2, 3))
+            .collect();
+        let version = match s.handle(4, Request::SwapAdapters(ads)) {
+            Response::Swapped { version } => version,
+            other => panic!("{other:?}"),
+        };
+        match s.handle(0, Request::SaveState(path.clone())) {
+            Response::Persisted(report) => {
+                assert_eq!(report.tenants, 1);
+                assert!(report.bytes > 0);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // a FRESH server on the same backbone config picks the state up
+        let mut s2 = server(0);
+        assert_eq!(s2.tenant_version(4), 0);
+        match s2.handle(0, Request::RestoreState(path.clone())) {
+            Response::Restored(report) => {
+                assert_eq!(report.tenants, 1);
+                assert_eq!(report.installed, 1);
+                assert_eq!(report.max_version, version);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s2.tenant_version(4), version, "exact persisted version");
+        let stats = s2.stats();
+        assert_eq!((stats.persists, stats.restores), (0, 1));
+        assert_eq!(s.stats().persists, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn persist_failures_are_typed_not_panics() {
+        let mut s = server(0);
+        // unwritable path
+        match s.handle(0, Request::SaveState(PathBuf::from("/definitely/not/a/dir/x.s2l"))) {
+            Response::Rejected(RejectReason::PersistFailed(msg)) => {
+                assert!(msg.contains("persist"), "{msg}")
+            }
+            other => panic!("{other:?}"),
+        }
+        // missing checkpoint
+        match s.handle(0, Request::RestoreState(PathBuf::from("/no/such/checkpoint.s2l"))) {
+            Response::Rejected(RejectReason::PersistFailed(_)) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.stats().persists, 0);
+        assert_eq!(s.stats().restores, 0);
+    }
+
+    #[test]
+    fn export_import_runs_the_swap_validation() {
+        let mut a = server(0);
+        let mut rng = Rng::new(22);
+        let ads: Vec<LoraAdapter> = [8usize, 12, 12]
+            .iter()
+            .map(|&n_in| LoraAdapter::new(&mut rng, n_in, 2, 3))
+            .collect();
+        a.handle(11, Request::SwapAdapters(ads));
+        assert!(a.export_tenant(999).is_err(), "unknown tenant must not export");
+        let bytes = a.export_tenant(11).unwrap();
+
+        let mut b = server(0);
+        let (tenant, version) = b.import_tenant(&bytes).unwrap();
+        assert_eq!(tenant, 11);
+        assert!(version > 0);
+        // imported weights are bit-identical to the exported snapshot
+        let from_a = a.registry.snapshot(11).unwrap();
+        let from_b = b.registry.snapshot(11).unwrap();
+        for (x, y) in from_a.adapters.iter().zip(&from_b.adapters) {
+            assert_eq!(x.wa, y.wa);
+            assert_eq!(x.wb, y.wb);
+        }
+        // garbage payloads are typed errors
+        assert!(b.import_tenant(b"not an s2l file").is_err());
     }
 
     #[test]

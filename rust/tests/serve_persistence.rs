@@ -1,0 +1,580 @@
+//! Durable tenant state, end to end: a `FleetServer` populated with N
+//! tenants is persisted, DROPPED, and restored with bit-identical adapter
+//! weights, per-tenant versions ≥ their persisted values, and `Predict`
+//! results identical pre/post restore. Torn, overflowing, and tampered
+//! checkpoint files are rejected with typed errors — never a panic.
+//!
+//! The consistent-cut guarantee is stress-proved with `testkit::stress`:
+//! concurrent publishers (+ a remover simulating admin tenant deletion)
+//! race observer threads that capture checkpoints mid-churn; every
+//! captured (tenant, version) must be one that was ACTUALLY published,
+//! and restoring a captured cut must preserve version monotonicity for
+//! everything published afterwards. The `#[ignore]`-tagged long variant
+//! runs in CI's `stress` job (`cargo test --release -- --ignored`).
+
+use std::sync::Arc;
+
+use skip2lora::data::Dataset;
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::persist::RegistryCheckpoint;
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::serve::{FleetServer, RejectReason, Request, Response, ServeConfig, TenantId};
+use skip2lora::tensor::{ops::Backend, Mat};
+use skip2lora::testkit::stress::{self, StressConfig};
+use skip2lora::train::trainer::pretrain;
+use skip2lora::util::rng::Rng;
+
+fn clustered(seed: u64, n: usize, shift: f32) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 8);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..8 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + shift + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset { x, labels, n_classes: 3 }
+}
+
+fn backbone() -> Arc<Mlp> {
+    let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+    Arc::new(pretrain(cfg, &clustered(0, 120, 0.0), 50, 0.05, 1, Backend::Blocked))
+}
+
+fn server_on(bb: &Arc<Mlp>) -> FleetServer {
+    FleetServer::new(
+        Arc::clone(bb),
+        ServeConfig { batch_capacity: 16, ..Default::default() },
+    )
+}
+
+/// Distinct, non-trivial skip adapters (trained-looking: W_B randomized).
+fn trained_adapters(rng: &mut Rng) -> Vec<LoraAdapter> {
+    [8usize, 12, 12]
+        .iter()
+        .map(|&n_in| {
+            let mut ad = LoraAdapter::new(rng, n_in, 2, 3);
+            for v in ad.wb.data.iter_mut() {
+                *v = 0.2 * rng.normal();
+            }
+            ad
+        })
+        .collect()
+}
+
+/// One Predict round-trip: (prediction, adapter version served).
+fn predict_one(server: &mut FleetServer, tenant: TenantId, x: &[f32]) -> (usize, u64) {
+    match server.handle(tenant, Request::Predict(x.to_vec())) {
+        Response::Queued { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    let done = server.pump_until_drained();
+    assert_eq!(done.len(), 1);
+    (done[0].prediction, done[0].adapter_version)
+}
+
+// ---------------------------------------------------------------------
+// the acceptance scenario: persist, DROP, restore
+// ---------------------------------------------------------------------
+
+#[test]
+fn persisted_fleet_survives_a_server_drop_bit_identically() {
+    const N_TENANTS: u64 = 14;
+    let dir = std::env::temp_dir().join("s2l_persistence_accept");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.s2l");
+
+    let bb = backbone();
+    let mut server = server_on(&bb);
+    let mut rng = Rng::new(42);
+
+    // N tenants with distinct published adapters; some republished so the
+    // version sequence has per-tenant gaps
+    let mut persisted_version = vec![0u64; N_TENANTS as usize];
+    for t in 0..N_TENANTS {
+        for _round in 0..=(t % 3) {
+            match server.handle(t, Request::SwapAdapters(trained_adapters(&mut rng))) {
+                Response::Swapped { version } => persisted_version[t as usize] = version,
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    // pre-drop ground truth: predictions + weights per tenant
+    let probes: Vec<Vec<f32>> = (0..N_TENANTS)
+        .map(|t| clustered(100 + t, 1, 0.5).x.row(0).to_vec())
+        .collect();
+    let pre: Vec<(usize, u64)> = (0..N_TENANTS)
+        .map(|t| predict_one(&mut server, t, &probes[t as usize]))
+        .collect();
+    let pre_weights: Vec<Vec<Mat>> = (0..N_TENANTS)
+        .map(|t| {
+            let snap = server.registry.snapshot(t).unwrap();
+            snap.adapters.iter().flat_map(|a| [a.wa.clone(), a.wb.clone()]).collect()
+        })
+        .collect();
+
+    let report = server.persist_to(&path).unwrap();
+    assert_eq!(report.tenants, N_TENANTS as usize);
+    drop(server); // the crash
+
+    // a brand-new server process on the same deployed backbone
+    let mut revived = server_on(&bb);
+    assert_eq!(revived.registry.tenant_count(), 0, "fresh server is empty");
+    let report = revived.restore_from(&path).unwrap();
+    assert_eq!(report.tenants, N_TENANTS as usize);
+    assert_eq!(report.installed, N_TENANTS as usize);
+
+    for t in 0..N_TENANTS {
+        let ti = t as usize;
+        // versions ≥ persisted (exact, on a fresh registry)
+        assert!(
+            revived.tenant_version(t) >= persisted_version[ti],
+            "tenant {t}: version rolled back across restore"
+        );
+        // weights bit-identical
+        let snap = revived.registry.snapshot(t).unwrap();
+        let weights: Vec<Mat> = snap
+            .adapters
+            .iter()
+            .flat_map(|a| [a.wa.clone(), a.wb.clone()])
+            .collect();
+        assert_eq!(weights, pre_weights[ti], "tenant {t}: weights differ after restore");
+        // Predict identical pre/post restore, served at the same version
+        let (prediction, version) = predict_one(&mut revived, t, &probes[ti]);
+        assert_eq!((prediction, version), pre[ti], "tenant {t}: serving changed");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restore_never_rolls_back_a_live_fleet() {
+    let dir = std::env::temp_dir().join("s2l_persistence_monotone");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.s2l");
+
+    let bb = backbone();
+    let mut server = server_on(&bb);
+    let mut rng = Rng::new(7);
+    server.handle(1, Request::SwapAdapters(trained_adapters(&mut rng)));
+    server.persist_to(&path).unwrap();
+
+    // the fleet moves on AFTER the checkpoint
+    let newer = match server.handle(1, Request::SwapAdapters(trained_adapters(&mut rng))) {
+        Response::Swapped { version } => version,
+        other => panic!("{other:?}"),
+    };
+    let newer_weights = server.registry.snapshot(1).unwrap().adapters[0].wb.clone();
+
+    // restoring the OLD checkpoint into the live server must be a no-op
+    // for tenant 1 (monotonicity beats the stale checkpoint)...
+    let report = server.restore_from(&path).unwrap();
+    assert_eq!(report.installed, 0, "stale checkpoint must not reinstall");
+    assert_eq!(server.tenant_version(1), newer);
+    assert_eq!(server.registry.snapshot(1).unwrap().adapters[0].wb, newer_weights);
+
+    // ...and publishes after a restore still move forward
+    let next = match server.handle(1, Request::SwapAdapters(trained_adapters(&mut rng))) {
+        Response::Swapped { version } => version,
+        other => panic!("{other:?}"),
+    };
+    assert!(next > newer);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn post_crash_retraining_beats_a_stale_checkpoint() {
+    // version numbers reset with the process: a pre-crash checkpoint can
+    // claim BIGGER numbers than adapters a tenant just retrained after
+    // the restart. If the operator restores late, the retrain must
+    // survive — live training always beats checkpoint data.
+    let dir = std::env::temp_dir().join("s2l_persistence_crash_domain");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.s2l");
+
+    let bb = backbone();
+    let mut server = server_on(&bb);
+    let mut rng = Rng::new(19);
+    for _ in 0..5 {
+        server.handle(1, Request::SwapAdapters(trained_adapters(&mut rng)));
+    }
+    server.persist_to(&path).unwrap();
+    let pre_crash_version = server.tenant_version(1);
+    drop(server); // the crash — the version counter dies with it
+
+    // post-crash: the tenant reconnects and retrains BEFORE the operator
+    // gets around to restoring the checkpoint
+    let mut revived = server_on(&bb);
+    let retrained = trained_adapters(&mut rng);
+    let marker = retrained[0].wb.data[0];
+    match revived.handle(1, Request::SwapAdapters(retrained)) {
+        Response::Swapped { version } => {
+            assert!(version < pre_crash_version, "fresh counter restarts low")
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // the late restore must NOT clobber the freshly trained adapters,
+    // even though the checkpoint's version number is bigger
+    let report = revived.restore_from(&path).unwrap();
+    assert_eq!(report.tenants, 1);
+    assert_eq!(report.installed, 0, "stale checkpoint clobbered live work");
+    let live = revived.registry.snapshot(1).unwrap();
+    assert!(live.restored_from_micros.is_none(), "live publish lost its provenance");
+    assert_eq!(live.adapters[0].wb.data[0], marker, "retrained weights lost");
+
+    // and the restore still healed the version domain: the next publish
+    // outranks every pre-crash version
+    match revived.handle(1, Request::SwapAdapters(trained_adapters(&mut rng))) {
+        Response::Swapped { version } => assert!(version > pre_crash_version),
+        other => panic!("{other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn out_of_order_restores_keep_the_newest_checkpoint() {
+    // two crashes, two checkpoints: A (pre-crash, HIGH versions) then B
+    // (post-crash retrain, LOW versions but captured later). Whatever
+    // order the operator restores them in, B's weights must end up live
+    // — checkpoints are ordered by capture stamp, not raw version.
+    let dir = std::env::temp_dir().join("s2l_persistence_ooo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path_a, path_b) = (dir.join("a.s2l"), dir.join("b.s2l"));
+
+    let bb = backbone();
+    let mut s1 = server_on(&bb);
+    let mut rng = Rng::new(23);
+    for _ in 0..4 {
+        s1.handle(3, Request::SwapAdapters(trained_adapters(&mut rng)));
+    }
+    s1.persist_to(&path_a).unwrap();
+    drop(s1); // crash #1
+
+    let mut s2 = server_on(&bb);
+    let newest = trained_adapters(&mut rng);
+    let marker = newest[0].wb.data[0];
+    s2.handle(3, Request::SwapAdapters(newest));
+    s2.persist_to(&path_b).unwrap();
+    drop(s2); // crash #2
+
+    // restore A then B: the later-captured B replaces A
+    let mut s3 = server_on(&bb);
+    s3.restore_from(&path_a).unwrap();
+    s3.restore_from(&path_b).unwrap();
+    let live = s3.registry.snapshot(3).unwrap();
+    assert_eq!(live.adapters[0].wb.data[0], marker, "newest checkpoint lost");
+
+    // restore B then A: the stale A must not resurrect
+    let mut s4 = server_on(&bb);
+    s4.restore_from(&path_b).unwrap();
+    let report = s4.restore_from(&path_a).unwrap();
+    assert_eq!(report.installed, 0, "stale checkpoint resurrected");
+    let live = s4.registry.snapshot(3).unwrap();
+    assert_eq!(live.adapters[0].wb.data[0], marker);
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+}
+
+#[test]
+fn incompatible_checkpoints_are_rejected_whole() {
+    let dir = std::env::temp_dir().join("s2l_persistence_shape");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("wrong_shape.s2l");
+
+    // a checkpoint from a DIFFERENT deployment (6-wide input model)
+    let alien = AdapterRegistry::new();
+    let mut rng = Rng::new(9);
+    let ads: Vec<LoraAdapter> =
+        [6usize, 12, 12].iter().map(|&n| LoraAdapter::new(&mut rng, n, 2, 3)).collect();
+    alien.publish(5, ads);
+    RegistryCheckpoint::capture(&alien).save(&path).unwrap();
+
+    let bb = backbone();
+    let mut server = server_on(&bb);
+    let e = server.restore_from(&path).unwrap_err();
+    assert!(e.to_string().contains("tenant 5"), "{e}");
+    assert_eq!(server.registry.tenant_count(), 0, "rejected whole, nothing installed");
+
+    // same through the request front-end
+    match server.handle(0, Request::RestoreState(path.clone())) {
+        Response::Rejected(RejectReason::PersistFailed(msg)) => {
+            assert!(msg.contains("tenant 5"), "{msg}")
+        }
+        other => panic!("{other:?}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn torn_files_on_disk_are_typed_errors_never_panics() {
+    let dir = std::env::temp_dir().join("s2l_persistence_torn");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.s2l");
+
+    let bb = backbone();
+    let mut server = server_on(&bb);
+    let mut rng = Rng::new(11);
+    for t in 0..5u64 {
+        server.handle(t, Request::SwapAdapters(trained_adapters(&mut rng)));
+    }
+    server.persist_to(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // torn at every interesting boundary: header, manifest, mid-tensor
+    for cut in [0, 3, 9, 40, bytes.len() / 2, bytes.len() - 1] {
+        let torn = dir.join(format!("torn_{cut}.s2l"));
+        std::fs::write(&torn, &bytes[..cut]).unwrap();
+        let e = server.restore_from(&torn).unwrap_err();
+        let msg = e.to_string();
+        assert!(
+            msg.contains("truncated") || msg.contains("manifest") || msg.contains("magic"),
+            "cut {cut}: unexpected error {msg}"
+        );
+        std::fs::remove_file(&torn).ok();
+    }
+
+    // dimension-overflow header inside an otherwise plausible file
+    let overflow = dir.join("overflow.s2l");
+    let mut evil = Vec::new();
+    evil.extend_from_slice(b"S2L1");
+    evil.extend_from_slice(&1u32.to_le_bytes());
+    evil.extend_from_slice(&1u32.to_le_bytes());
+    evil.push(b'w');
+    evil.extend_from_slice(&u32::MAX.to_le_bytes());
+    evil.extend_from_slice(&u32::MAX.to_le_bytes());
+    std::fs::write(&overflow, &evil).unwrap();
+    let e = server.restore_from(&overflow).unwrap_err();
+    assert!(e.to_string().contains("overflow"), "{e}");
+
+    // the torn/overflowing files changed nothing
+    assert_eq!(server.registry.tenant_count(), 5);
+    std::fs::remove_file(&overflow).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------
+// migration: export_tenant -> import_tenant across servers
+// ---------------------------------------------------------------------
+
+#[test]
+fn tenant_migrates_between_nodes_with_identical_serving() {
+    let bb = backbone();
+    let mut node_a = server_on(&bb);
+    let mut node_b = server_on(&bb);
+    let mut rng = Rng::new(13);
+    node_a.handle(77, Request::SwapAdapters(trained_adapters(&mut rng)));
+
+    let probe = clustered(200, 1, 0.5).x.row(0).to_vec();
+    let (pred_a, _) = predict_one(&mut node_a, 77, &probe);
+
+    let payload = node_a.export_tenant(77).unwrap();
+    let (tenant, version) = node_b.import_tenant(&payload).unwrap();
+    assert_eq!(tenant, 77);
+    assert!(version > 0, "import allocates a local version");
+
+    let (pred_b, served_version) = predict_one(&mut node_b, 77, &probe);
+    assert_eq!(pred_b, pred_a, "migrated tenant must serve identically");
+    assert_eq!(served_version, version);
+
+    // a payload from an incompatible deployment fails the rank checks
+    let alien = AdapterRegistry::new();
+    let ads: Vec<LoraAdapter> =
+        [6usize, 12, 12].iter().map(|&n| LoraAdapter::new(&mut rng, n, 2, 3)).collect();
+    alien.publish(3, ads);
+    let bad = RegistryCheckpoint::capture_tenant(&alien, 3).unwrap().to_bytes();
+    assert!(node_b.import_tenant(&bad).is_err());
+
+    // a multi-tenant checkpoint is not a migration payload
+    node_a.handle(78, Request::SwapAdapters(trained_adapters(&mut rng)));
+    let two = RegistryCheckpoint::capture(&node_a.registry).to_bytes();
+    let e = node_b.import_tenant(&two).unwrap_err();
+    assert!(e.to_string().contains("exactly one"), "{e}");
+}
+
+// ---------------------------------------------------------------------
+// persistence interleaved with TTL eviction
+// ---------------------------------------------------------------------
+
+#[test]
+fn ttl_eviction_interleaved_with_checkpoints_loses_nothing() {
+    let dir = std::env::temp_dir().join("s2l_persistence_ttl");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fleet.s2l");
+
+    let bb = backbone();
+    let mut server = FleetServer::new(
+        Arc::clone(&bb),
+        ServeConfig { batch_capacity: 8, idle_ttl_pumps: Some(6), ..Default::default() },
+    );
+    let mut rng = Rng::new(17);
+    let mut versions = Vec::new();
+    for t in 0..6u64 {
+        match server.handle(t, Request::SwapAdapters(trained_adapters(&mut rng))) {
+            Response::Swapped { version } => versions.push(version),
+            other => panic!("{other:?}"),
+        }
+    }
+    // idle long enough that the TTL sweep evicts ALL serve-side state,
+    // interleaving checkpoints with the sweeps
+    for i in 0..30 {
+        server.pump();
+        if i % 7 == 0 {
+            server.persist_to(&path).unwrap();
+        }
+    }
+    assert_eq!(server.tenant_count(), 0, "serve scratch must be swept");
+    assert!(server.stats().evictions > 0);
+    server.persist_to(&path).unwrap();
+
+    // eviction dropped scratch, never registry state — the checkpoint
+    // carries every published tenant, and a fresh server restores them
+    let mut revived = server_on(&bb);
+    let report = revived.restore_from(&path).unwrap();
+    assert_eq!(report.tenants, 6);
+    for (t, &v) in versions.iter().enumerate() {
+        assert!(revived.tenant_version(t as u64) >= v, "tenant {t} lost by eviction");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------
+// stress: checkpoints are consistent cuts under concurrent churn
+// ---------------------------------------------------------------------
+
+/// Concurrent publishers + a remover race observers capturing
+/// checkpoints. Invariants on every captured cut:
+///
+/// * internal consistency: versions are 1..=next_version, tenants sorted
+///   and unique, full serialize/parse roundtrip survives;
+/// * every captured (tenant, version) was ACTUALLY allocated by some
+///   publisher (no blended/torn versions — checked post-run against the
+///   union of all publisher logs);
+/// * restoring the final capture preserves monotonicity: publishes into
+///   the restored registry outrank everything in the cut.
+fn checkpoint_consistent_cut(workers: usize, ops: usize, seed: u64) {
+    const TENANTS: usize = 10;
+    let registry = AdapterRegistry::with_shards(8);
+    let cfg = StressConfig { workers, ops, observers: 2, seed };
+
+    let report = stress::run(
+        &cfg,
+        &registry,
+        // workers: publish to random tenants, logging every allocated
+        // (tenant, version); worker 0 doubles as the remover (admin
+        // deletion racing the snapshot)
+        |mut ctx, reg: &AdapterRegistry| {
+            let mut log: Vec<(u64, u64)> = Vec::with_capacity(ctx.ops);
+            for op in 0..ctx.ops {
+                let t = ctx.rng.below(TENANTS) as u64;
+                if ctx.index == 0 && op % 17 == 5 {
+                    reg.remove(t);
+                    continue;
+                }
+                let ads: Vec<LoraAdapter> = (0..3)
+                    .map(|k| LoraAdapter::new(&mut ctx.rng, [8, 12, 12][k], 2, 3))
+                    .collect();
+                log.push((t, reg.publish(t, ads)));
+            }
+            log
+        },
+        // observers: capture checkpoints mid-churn, validate each cut's
+        // internal consistency, and keep the last few for post-run checks
+        |ctx, reg: &AdapterRegistry| {
+            let mut kept: Vec<RegistryCheckpoint> = Vec::new();
+            // capture-then-check so every observer keeps ≥ 1 cut even if
+            // the workers finish before this thread gets scheduled
+            loop {
+                let ck = RegistryCheckpoint::capture(reg);
+                for rec in &ck.tenants {
+                    assert!(
+                        rec.version() >= 1 && rec.version() <= ck.next_version,
+                        "observer {}: version {} outside 1..={} (seed {seed:#x})",
+                        ctx.index,
+                        rec.version(),
+                        ck.next_version
+                    );
+                }
+                assert!(
+                    ck.tenants.windows(2).all(|w| w[0].tenant() < w[1].tenant()),
+                    "cut not sorted/unique (seed {seed:#x})"
+                );
+                // the full wire roundtrip must survive a mid-churn cut
+                let back = RegistryCheckpoint::from_bytes(&ck.to_bytes())
+                    .expect("mid-churn checkpoint must serialize+validate");
+                assert_eq!(back.tenants.len(), ck.tenants.len());
+                if kept.len() >= 4 {
+                    kept.remove(0);
+                }
+                kept.push(ck);
+                if !ctx.workers_live() {
+                    break;
+                }
+            }
+            kept
+        },
+    );
+
+    // union of everything actually published
+    let mut published: Vec<std::collections::HashSet<u64>> =
+        vec![std::collections::HashSet::new(); TENANTS];
+    for log in &report.workers {
+        for &(t, v) in log {
+            published[t as usize].insert(v);
+        }
+    }
+    // every captured version exists in the publish log — a consistent
+    // cut can never contain a version nobody was allocated
+    let mut cuts = 0usize;
+    for kept in &report.observers {
+        for ck in kept {
+            cuts += 1;
+            for rec in &ck.tenants {
+                assert!(
+                    published[rec.tenant() as usize].contains(&rec.version()),
+                    "cut holds tenant {} @ v{} which was never published (seed {seed:#x})",
+                    rec.tenant(),
+                    rec.version()
+                );
+            }
+        }
+    }
+    assert!(cuts > 0, "observers never captured a checkpoint");
+
+    // final capture restores into a fresh registry; publishes after the
+    // restore outrank everything in the cut (monotonicity across restore)
+    let final_ck = RegistryCheckpoint::capture(&registry);
+    let fresh = AdapterRegistry::with_shards(2);
+    final_ck.restore_into(&fresh);
+    for rec in &final_ck.tenants {
+        assert_eq!(fresh.version(rec.tenant()), rec.version());
+    }
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let ads: Vec<LoraAdapter> =
+        (0..3).map(|k| LoraAdapter::new(&mut rng, [8, 12, 12][k], 2, 3)).collect();
+    let v = fresh.publish(0, ads);
+    assert!(
+        v > final_ck.next_version,
+        "post-restore publish {v} must outrank the persisted counter {}",
+        final_ck.next_version
+    );
+}
+
+#[test]
+fn checkpoints_are_consistent_cuts_under_churn() {
+    checkpoint_consistent_cut(4, 120, 0x5EED_CAFE);
+}
+
+/// Long-running version. CI `stress` job only
+/// (`cargo test --release -- --ignored`).
+#[test]
+#[ignore = "long-running stress; CI stress job runs it with --ignored"]
+fn stress_checkpoint_consistent_cut_long() {
+    for seed in 0..3u64 {
+        checkpoint_consistent_cut(8, 1500, 0xD00D_0000 + seed);
+    }
+}
