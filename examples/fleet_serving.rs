@@ -56,6 +56,11 @@ fn main() {
     let cfg = MlpConfig { dims: vec![8, 16, 16, 3], rank: 2, batch_norm: true };
     println!("pre-training the shared backbone...");
     let backbone = pretrain(cfg, &clustered(0, 240, 0.0), 60, 0.05, 1, Backend::Blocked);
+    // serving rides the default backend: packed-panel kernels, with the
+    // frozen backbone's panels packed once and reused by every flush,
+    // and the tenant-grouped zero-alloc fan-out (DESIGN.md §10)
+    assert_eq!(Backend::default(), Backend::Packed);
+    println!("serving backend: {:?} (tenant-grouped zero-alloc fan-out)", Backend::default());
 
     // 2. deploy behind the server: micro-batches of 64, 4 fine-tune
     //    workers, hardened request path (bounded queue + sharded registry;

@@ -1,22 +1,35 @@
 //! Microbenchmark: the tensor kernels on the paper's exact shapes
-//! (B=20, dims 256/561-96-96-3/6, LoRA rank 4), scalar vs blocked —
-//! the L3 hot-path roofline used by EXPERIMENTS.md §Perf.
+//! (B=20, dims 256/561-96-96-3/6, LoRA rank 4), scalar vs blocked vs
+//! packed — the L3 hot-path roofline used by EXPERIMENTS.md §Perf.
+//! Prints GFLOP/s per shape so kernel changes are comparable across PRs
+//! (the serving-shape numbers also land in `BENCH_serve.json` via
+//! `benches/serve_micro.rs`).
+//!
+//! Also benchmarks both Aᵀ·B forms the density probe arbitrates between:
+//! the skip-zero loop on post-ReLU (~50% zero) activations vs the dense
+//! register-tiled loop — the data behind gating the branchy variant on a
+//! probe instead of using it unconditionally.
 //!
 //! Run: `cargo bench --bench matmul_micro`
 
-use skip2lora::bench::Bencher;
-use skip2lora::tensor::{ops, ops::Backend, Mat};
+use skip2lora::bench::{report, Bencher};
+use skip2lora::tensor::{ops, ops::Backend, ops::PackedB, Mat};
 use skip2lora::util::rng::Rng;
 
 fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
     Mat::from_fn(r, c, |_, _| rng.normal())
 }
 
+/// ~50% exact zeros, the post-ReLU activation profile.
+fn relu_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal().max(0.0))
+}
+
 fn main() {
     let mut rng = Rng::new(0);
     let mut b = Bencher::from_env();
 
-    b.header("FC forward  y = xW + b  (paper shapes)");
+    b.header("FC forward  y = xW + b  (paper shapes; GFLOP/s in brackets)");
     for &(bb, n, m, label) in &[
         (20usize, 256usize, 96usize, "fan FC1 20x256x96"),
         (20, 561, 96, "har FC1 20x561x96"),
@@ -28,14 +41,36 @@ fn main() {
         let w = rand_mat(&mut rng, n, m);
         let bias = vec![0.1f32; m];
         let mut y = Mat::zeros(bb, m);
-        b.bench(&format!("{label} scalar"), || {
+        let shape = (bb, m, n);
+        let mut flops = Vec::new();
+        let r = b.bench(&format!("{label} scalar"), || {
             ops::matmul_bias(Backend::Scalar, &x, &w, &bias, &mut y);
             std::hint::black_box(&y);
         });
-        b.bench(&format!("{label} blocked"), || {
+        flops.push(("scalar", report::gflops(shape, r.mean_ns)));
+        let r = b.bench(&format!("{label} blocked"), || {
             ops::matmul_bias(Backend::Blocked, &x, &w, &bias, &mut y);
             std::hint::black_box(&y);
         });
+        flops.push(("blocked", report::gflops(shape, r.mean_ns)));
+        // packed with per-call (thread-local) packing — the dispatch path
+        let r = b.bench(&format!("{label} packed"), || {
+            ops::matmul_bias(Backend::Packed, &x, &w, &bias, &mut y);
+            std::hint::black_box(&y);
+        });
+        flops.push(("packed", report::gflops(shape, r.mean_ns)));
+        // packed with CACHED panels — the frozen-weight serving path
+        let mut pb = PackedB::new();
+        pb.pack(&w);
+        let r = b.bench(&format!("{label} packed(cached)"), || {
+            ops::matmul_packed_into(&x, &pb, &mut y);
+            ops::add_bias(&mut y, &bias);
+            std::hint::black_box(&y);
+        });
+        flops.push(("packed(cached)", report::gflops(shape, r.mean_ns)));
+        let line: Vec<String> =
+            flops.iter().map(|(k, g)| format!("{k} {g:.2}")).collect();
+        println!("    [GFLOP/s: {}]", line.join(", "));
     }
 
     b.header("backward kernels (Eq. 2 and Eq. 4 shapes)");
@@ -53,6 +88,51 @@ fn main() {
             ops::matmul_a_bt(Backend::Blocked, &gy, &w, &mut gx);
             std::hint::black_box(&gx);
         });
+        b.bench("gx = gy WT 20x96x256 packed", || {
+            ops::matmul_a_bt(Backend::Packed, &gy, &w, &mut gx);
+            std::hint::black_box(&gx);
+        });
+        let mut pwt = PackedB::new();
+        pwt.pack_transposed(&w);
+        b.bench("gx = gy WT 20x96x256 packed(cached)", || {
+            ops::matmul_packed_into(&gy, &pwt, &mut gx);
+            std::hint::black_box(&gx);
+        });
+    }
+
+    b.header("ATB density gating: skip-zero vs dense-tiled (gW = xT gy)");
+    {
+        // the satellite measurement: the skip-zero branch pays off on
+        // post-ReLU activations and LOSES on dense inputs (one
+        // data-dependent mispredict per element) — which is why the
+        // dispatcher probes density instead of always branching
+        let gy = rand_mat(&mut rng, 20, 96);
+        let mut gw = Mat::zeros(256, 96);
+        for (profile, x) in [
+            ("dense ", rand_mat(&mut rng, 20, 256)),
+            ("sparse", relu_mat(&mut rng, 20, 256)),
+        ] {
+            let r = b.bench(&format!("{profile} 20x256x96 skip-zero"), || {
+                ops::matmul_at_b_sparse(&x, &gy, &mut gw);
+                std::hint::black_box(&gw);
+            });
+            let skip_ns = r.mean_ns;
+            let r = b.bench(&format!("{profile} 20x256x96 dense-tiled"), || {
+                ops::matmul_at_b_tiled(&x, &gy, &mut gw);
+                std::hint::black_box(&gw);
+            });
+            let tiled_ns = r.mean_ns;
+            let r = b.bench(&format!("{profile} 20x256x96 probed"), || {
+                ops::matmul_at_b(Backend::Packed, &x, &gy, &mut gw);
+                std::hint::black_box(&gw);
+            });
+            println!(
+                "    [{}: skip-zero/dense-tiled = {:.2}x; probe overhead vs best = {:.2}x]",
+                profile.trim(),
+                skip_ns / tiled_ns,
+                r.mean_ns / skip_ns.min(tiled_ns),
+            );
+        }
     }
 
     b.header("LoRA adapter pair (rank 4): forward cost vs full FC");
@@ -65,6 +145,14 @@ fn main() {
         b.bench("lora fwd 20x256x4x3 blocked", || {
             ops::matmul(Backend::Blocked, &x, &wa, &mut ya);
             ops::matmul(Backend::Blocked, &ya, &wb, &mut yb);
+            std::hint::black_box(&yb);
+        });
+        // the serving fan-out's grouped form (accumulating GEMM pair)
+        b.bench("lora fwd 20x256x4x3 grouped-acc", || {
+            ya.fill(0.0);
+            yb.fill(0.0);
+            ops::matmul_acc(Backend::Packed, &x, &wa, &mut ya);
+            ops::matmul_acc(Backend::Packed, &ya, &wb, &mut yb);
             std::hint::black_box(&yb);
         });
     }

@@ -1,5 +1,8 @@
-//! Mini-criterion: the benchmark harness (no `criterion` crate offline).
+//! Mini-criterion: the benchmark harness (no `criterion` crate offline)
+//! plus the machine-readable `BENCH_serve.json` perf-baseline schema.
 
 pub mod harness;
+pub mod report;
 
 pub use harness::{BenchResult, Bencher};
+pub use report::{KernelBench, ServeBenchReport, ServePoint};

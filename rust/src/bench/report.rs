@@ -1,0 +1,354 @@
+//! Machine-readable perf baseline — the `BENCH_serve.json` schema.
+//!
+//! `benches/serve_micro.rs` emits one of these per run (rows/sec and
+//! ns/row for the mixed-tenant serve sweep in both fan-out modes,
+//! per-kernel GFLOP/s at the paper's and the fleet's shapes), CI's
+//! `bench-smoke` job uploads it as an artifact, and
+//! `skip2lora validate-bench` re-parses and schema-checks it — so every
+//! future perf PR has a trajectory to diff against instead of a wall of
+//! stdout. The format is this repo's own mini-JSON (`util::json`), and
+//! [`validate`] is the single source of truth for what "well-formed"
+//! means: the writer and the CI gate cannot drift apart.
+
+use std::path::Path;
+
+use crate::util::json::{self, arr, num, obj, s, Json};
+
+/// Schema tag checked by [`validate`]; bump on breaking layout changes.
+pub const SCHEMA: &str = "skip2lora/bench_serve/v1";
+
+/// One kernel measurement at a fixed GEMM shape.
+#[derive(Clone, Debug)]
+pub struct KernelBench {
+    /// e.g. "matmul packed 32x256x96"
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub mean_ns: f64,
+    /// 2·m·n·k / mean_ns (f32 multiply-adds = 2 flops)
+    pub gflops: f64,
+}
+
+impl KernelBench {
+    /// Build from a timed shape: GFLOP/s is derived, not hand-computed
+    /// at call sites.
+    pub fn from_timing(name: &str, (m, n, k): (usize, usize, usize), mean_ns: f64) -> Self {
+        Self { name: name.to_string(), m, n, k, mean_ns, gflops: gflops((m, n, k), mean_ns) }
+    }
+}
+
+/// GFLOP/s for an m×k · k×n GEMM measured at `mean_ns` per call.
+pub fn gflops((m, n, k): (usize, usize, usize), mean_ns: f64) -> f64 {
+    if mean_ns <= 0.0 {
+        return 0.0;
+    }
+    2.0 * (m as f64) * (n as f64) * (k as f64) / mean_ns
+}
+
+/// One point of the mixed-tenant serve sweep: a fixed (batch, distinct
+/// tenants) workload measured through one fan-out mode.
+#[derive(Clone, Debug)]
+pub struct ServePoint {
+    /// "grouped" (tenant-grouped zero-alloc flush, packed kernels) or
+    /// "per_row" (the pre-PR per-row reference on blocked kernels)
+    pub mode: String,
+    /// rows per flush
+    pub batch: usize,
+    /// distinct tenants per flush (batch/distinct = rows per tenant)
+    pub distinct_tenants: usize,
+    pub mean_ns_per_flush: f64,
+    pub ns_per_row: f64,
+    pub rows_per_sec: f64,
+}
+
+impl ServePoint {
+    pub fn from_timing(
+        mode: &str,
+        batch: usize,
+        distinct_tenants: usize,
+        mean_ns_per_flush: f64,
+    ) -> Self {
+        let ns_per_row = mean_ns_per_flush / batch.max(1) as f64;
+        Self {
+            mode: mode.to_string(),
+            batch,
+            distinct_tenants,
+            mean_ns_per_flush,
+            ns_per_row,
+            rows_per_sec: if ns_per_row > 0.0 { 1e9 / ns_per_row } else { 0.0 },
+        }
+    }
+}
+
+/// The whole report: metadata + kernel section + serve sweep + the
+/// headline grouped-vs-per-row speedups.
+#[derive(Clone, Debug, Default)]
+pub struct ServeBenchReport {
+    /// wall-clock capture stamp (seconds since the unix epoch)
+    pub created_unix_s: u64,
+    /// per-bench measurement budget the run used (ns)
+    pub budget_ns: u64,
+    pub kernels: Vec<KernelBench>,
+    pub serve: Vec<ServePoint>,
+    /// per-(batch, distinct) rows/sec ratios, grouped vs per_row
+    pub speedups: Vec<(String, f64)>,
+    /// geometric mean of `speedups` — the headline number
+    pub geomean_speedup: f64,
+}
+
+impl ServeBenchReport {
+    /// Derive `speedups`/`geomean_speedup` from the serve points by
+    /// pairing modes on (batch, distinct_tenants).
+    pub fn compute_speedups(&mut self) {
+        self.speedups.clear();
+        let mut log_sum = 0.0f64;
+        for g in self.serve.iter().filter(|p| p.mode == "grouped") {
+            if let Some(r) = self
+                .serve
+                .iter()
+                .find(|p| {
+                    p.mode == "per_row"
+                        && p.batch == g.batch
+                        && p.distinct_tenants == g.distinct_tenants
+                })
+            {
+                let ratio = g.rows_per_sec / r.rows_per_sec;
+                self.speedups
+                    .push((format!("B{}xT{}", g.batch, g.distinct_tenants), ratio));
+                log_sum += ratio.ln();
+            }
+        }
+        self.geomean_speedup = if self.speedups.is_empty() {
+            0.0
+        } else {
+            (log_sum / self.speedups.len() as f64).exp()
+        };
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", s(SCHEMA)),
+            ("created_unix_s", num(self.created_unix_s as f64)),
+            ("budget_ns", num(self.budget_ns as f64)),
+            (
+                "kernels",
+                arr(self
+                    .kernels
+                    .iter()
+                    .map(|kb| {
+                        obj(vec![
+                            ("name", s(&kb.name)),
+                            ("m", num(kb.m as f64)),
+                            ("n", num(kb.n as f64)),
+                            ("k", num(kb.k as f64)),
+                            ("mean_ns", num(kb.mean_ns)),
+                            ("gflops", num(kb.gflops)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "serve",
+                arr(self
+                    .serve
+                    .iter()
+                    .map(|p| {
+                        obj(vec![
+                            ("mode", s(&p.mode)),
+                            ("batch", num(p.batch as f64)),
+                            ("distinct_tenants", num(p.distinct_tenants as f64)),
+                            ("mean_ns_per_flush", num(p.mean_ns_per_flush)),
+                            ("ns_per_row", num(p.ns_per_row)),
+                            ("rows_per_sec", num(p.rows_per_sec)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "speedups",
+                arr(self
+                    .speedups
+                    .iter()
+                    .map(|(label, x)| obj(vec![("label", s(label)), ("speedup", num(*x))]))
+                    .collect()),
+            ),
+            ("geomean_speedup", num(self.geomean_speedup)),
+        ])
+    }
+
+    /// Serialize and write to `path` (plain write — bench artifacts are
+    /// regenerated wholesale, so checkpoint-grade atomicity is overkill).
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+fn finite_positive(j: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{ctx}: missing numeric '{key}'"))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(format!("{ctx}: '{key}' must be finite and > 0, got {v}"));
+    }
+    Ok(v)
+}
+
+/// Schema-check a parsed `BENCH_serve.json`. Returns the headline
+/// geomean speedup on success; any structural problem — wrong schema
+/// tag, empty sections, non-finite or non-positive numbers, missing
+/// grouped/per_row pairing — is a typed error, which is exactly what
+/// CI's `bench-smoke` job fails on.
+pub fn validate(j: &Json) -> Result<f64, String> {
+    match j.get("schema").and_then(Json::as_str) {
+        Some(tag) if tag == SCHEMA => {}
+        Some(tag) => return Err(format!("schema '{tag}', expected '{SCHEMA}'")),
+        None => return Err("missing 'schema' tag".to_string()),
+    }
+    finite_positive(j, "created_unix_s", "report")?;
+    finite_positive(j, "budget_ns", "report")?;
+    let kernels = j
+        .get("kernels")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'kernels' array")?;
+    if kernels.is_empty() {
+        return Err("'kernels' is empty".to_string());
+    }
+    for (i, kb) in kernels.iter().enumerate() {
+        let ctx = format!("kernels[{i}]");
+        kb.get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{ctx}: missing 'name'"))?;
+        finite_positive(kb, "mean_ns", &ctx)?;
+        finite_positive(kb, "gflops", &ctx)?;
+    }
+    let serve = j
+        .get("serve")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'serve' array")?;
+    let mut grouped = 0usize;
+    let mut per_row = 0usize;
+    for (i, p) in serve.iter().enumerate() {
+        let ctx = format!("serve[{i}]");
+        match p.get("mode").and_then(Json::as_str) {
+            Some("grouped") => grouped += 1,
+            Some("per_row") => per_row += 1,
+            Some(m) => return Err(format!("{ctx}: unknown mode '{m}'")),
+            None => return Err(format!("{ctx}: missing 'mode'")),
+        }
+        finite_positive(p, "batch", &ctx)?;
+        finite_positive(p, "distinct_tenants", &ctx)?;
+        finite_positive(p, "mean_ns_per_flush", &ctx)?;
+        finite_positive(p, "ns_per_row", &ctx)?;
+        finite_positive(p, "rows_per_sec", &ctx)?;
+    }
+    if grouped == 0 || per_row == 0 {
+        return Err(format!(
+            "serve sweep must cover both modes (grouped: {grouped}, per_row: {per_row})"
+        ));
+    }
+    let speedups = j
+        .get("speedups")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'speedups' array")?;
+    if speedups.is_empty() {
+        return Err("'speedups' is empty".to_string());
+    }
+    for (i, sp) in speedups.iter().enumerate() {
+        let ctx = format!("speedups[{i}]");
+        sp.get("label")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{ctx}: missing 'label'"))?;
+        finite_positive(sp, "speedup", &ctx)?;
+    }
+    finite_positive(j, "geomean_speedup", "report")
+}
+
+/// Read + parse + [`validate`] a report file.
+pub fn validate_file(path: &Path) -> Result<f64, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let parsed = json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+    validate(&parsed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ServeBenchReport {
+        let mut r = ServeBenchReport {
+            created_unix_s: 1_700_000_000,
+            budget_ns: 300_000_000,
+            kernels: vec![KernelBench::from_timing(
+                "matmul packed 32x256x96",
+                (32, 96, 256),
+                50_000.0,
+            )],
+            serve: vec![
+                ServePoint::from_timing("grouped", 32, 8, 400_000.0),
+                ServePoint::from_timing("per_row", 32, 8, 900_000.0),
+            ],
+            ..Default::default()
+        };
+        r.compute_speedups();
+        r
+    }
+
+    #[test]
+    fn roundtrips_through_the_writer_and_parser() {
+        let r = sample();
+        assert!((r.geomean_speedup - 2.25).abs() < 1e-9, "{}", r.geomean_speedup);
+        let text = r.to_json().to_string();
+        let parsed = json::parse(&text).expect("own output must parse");
+        let headline = validate(&parsed).expect("own output must validate");
+        assert!((headline - r.geomean_speedup).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gflops_is_derived_consistently() {
+        // 2*20*96*256 flops in 1µs = 983.04 GFLOP/s
+        let g = gflops((20, 96, 256), 1_000.0);
+        assert!((g - 983.04).abs() < 1e-6, "{g}");
+        assert_eq!(gflops((1, 1, 1), 0.0), 0.0, "zero time must not divide");
+    }
+
+    #[test]
+    fn validate_rejects_malformed_reports() {
+        let good = sample().to_json();
+        assert!(validate(&good).is_ok());
+        // wrong schema
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), Json::Str("nope/v0".into()));
+        }
+        assert!(validate(&j).unwrap_err().contains("schema"));
+        // empty kernels
+        let mut j = good.clone();
+        if let Json::Obj(m) = &mut j {
+            m.insert("kernels".into(), Json::Arr(vec![]));
+        }
+        assert!(validate(&j).unwrap_err().contains("kernels"));
+        // a NaN smuggled into a serve point
+        let mut r = sample();
+        r.serve[0].rows_per_sec = f64::NAN;
+        assert!(validate(&r.to_json()).is_err());
+        // one mode missing
+        let mut r = sample();
+        r.serve.retain(|p| p.mode == "grouped");
+        r.compute_speedups();
+        assert!(validate(&r.to_json()).unwrap_err().contains("both modes"));
+        // not json at all
+        assert!(json::parse("not json").is_err());
+    }
+
+    #[test]
+    fn speedup_pairing_matches_on_shape() {
+        let mut r = sample();
+        r.serve.push(ServePoint::from_timing("grouped", 16, 16, 100_000.0)); // unpaired
+        r.compute_speedups();
+        assert_eq!(r.speedups.len(), 1, "unpaired points must not fabricate ratios");
+        assert_eq!(r.speedups[0].0, "B32xT8");
+    }
+}

@@ -131,17 +131,28 @@ pub fn ablate_cache_size(cfg: &ExpConfig) -> Table {
     t
 }
 
-/// Backend ablation: scalar (Algorithm 2 verbatim) vs blocked kernels —
-/// the paper's with/without-Neon comparison.
+/// Backend ablation: scalar (Algorithm 2 verbatim) vs blocked vs packed
+/// kernels — the paper's with/without-Neon comparison, extended with the
+/// packed-panel register-tiled family (DESIGN.md §10).
 pub fn ablate_backend(cfg: &ExpConfig) -> Table {
     let ds = DatasetId::Damage1;
     let mut t = Table::new(
-        "Ablation: scalar vs blocked kernels (the paper's Neon on/off analogue, Damage1)",
-        &["method", "scalar train@batch (ms)", "blocked train@batch (ms)", "speedup"],
+        "Ablation: scalar vs blocked vs packed kernels (the paper's Neon on/off analogue, Damage1)",
+        &[
+            "method",
+            "scalar train@batch (ms)",
+            "blocked train@batch (ms)",
+            "packed train@batch (ms)",
+            "blocked speedup",
+            "packed speedup",
+        ],
     );
     for method in [Method::FtAll, Method::LoraAll, Method::SkipLora, Method::Skip2Lora] {
-        let mut ms = [0.0f64; 2];
-        for (bi, backend) in [Backend::Scalar, Backend::Blocked].iter().enumerate() {
+        let mut ms = [0.0f64; 3];
+        for (bi, backend) in [Backend::Scalar, Backend::Blocked, Backend::Packed]
+            .iter()
+            .enumerate()
+        {
             let sub = ExpConfig { backend: *backend, ..cfg.clone() };
             let bench = ds.benchmark(sub.seed);
             let backbone = accuracy::pretrain_backbone(ds, &bench, &sub, 0);
@@ -162,7 +173,9 @@ pub fn ablate_backend(cfg: &ExpConfig) -> Table {
             method.name().to_string(),
             format!("{:.3}", ms[0]),
             format!("{:.3}", ms[1]),
+            format!("{:.3}", ms[2]),
             format!("{:.2}x", ms[0] / ms[1].max(1e-9)),
+            format!("{:.2}x", ms[0] / ms[2].max(1e-9)),
         ]);
     }
     t

@@ -111,11 +111,15 @@ impl Mlp {
             ctx.x[0].row_mut(row).fill(0.0);
         }
         let n = self.n_layers();
+        let backend = ctx.backend;
         for k in 0..n {
+            // forward_cached: frozen weights pack once per context (the
+            // ctx.fc[k] version-stamped panel cache) — after the first
+            // batch a flush runs entirely on pre-packed panels
             if k == n - 1 {
-                self.fcs[k].forward(ctx.backend, &ctx.x[k], &mut ctx.c_n);
+                self.fcs[k].forward_cached(&mut ctx.fc[k], backend, &ctx.x[k], &mut ctx.c_n);
             } else {
-                self.fcs[k].forward(ctx.backend, &ctx.x[k], &mut ctx.h[k]);
+                self.fcs[k].forward_cached(&mut ctx.fc[k], backend, &ctx.x[k], &mut ctx.h[k]);
                 if self.bns.is_empty() {
                     activation::relu(&ctx.h[k], &mut ctx.x[k + 1]);
                 } else {

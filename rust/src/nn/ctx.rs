@@ -19,10 +19,15 @@
 //! `model::ExecCtx` aggregates one context per layer plus the
 //! batch-shaped activation workspaces.
 
+use crate::tensor::ops::PackedB;
 use crate::tensor::Mat;
 
 /// Scratch for one [`FcLayer`](crate::nn::fc::FcLayer): gradient buffers
-/// plus the cached `Wᵀ` for the Eq. 4 frozen-backward hot path.
+/// plus the version-stamped caches for the frozen hot paths — the `Wᵀ`
+/// transpose (Eq. 4 blocked backward) and the packed-panel forms of `W`
+/// (packed forward) and `Wᵀ` (packed backward). Frozen layers — the
+/// serving and fine-tuning common case — pay each transform once per
+/// context and then every micro-batch streams pre-packed panels.
 #[derive(Clone, Debug, Default)]
 pub struct FcCtx {
     /// ∂L/∂W (Eq. 2); sized on the first backward that computes it
@@ -33,6 +38,12 @@ pub struct FcCtx {
     /// layer's weight version so an update invalidates it implicitly
     wt: Option<Mat>,
     wt_version: u64,
+    /// packed panels of `W` for the packed forward (same version stamp)
+    pw: Option<PackedB>,
+    pw_version: u64,
+    /// packed panels of `Wᵀ` for the packed frozen backward
+    pwt: Option<PackedB>,
+    pwt_version: u64,
 }
 
 impl FcCtx {
@@ -63,11 +74,37 @@ impl FcCtx {
         self.wt.as_ref().unwrap()
     }
 
+    /// Cached packed panels of `w` at `version` for the packed forward
+    /// (`matmul_packed_into`), recomputing when the stamp is stale —
+    /// the serving hot path packs the frozen backbone ONCE and every
+    /// flush after that streams pre-packed panels.
+    pub(crate) fn packed_for(&mut self, w: &Mat, version: u64) -> &PackedB {
+        if self.pw.is_none() || self.pw_version != version {
+            let pb = self.pw.get_or_insert_with(PackedB::new);
+            pb.pack(w);
+            self.pw_version = version;
+        }
+        self.pw.as_ref().unwrap()
+    }
+
+    /// Cached packed panels of `wᵀ` at `version` for the packed frozen
+    /// backward (`gx = gy·Wᵀ` as a packed GEMM).
+    pub(crate) fn packed_wt_for(&mut self, w: &Mat, version: u64) -> &PackedB {
+        if self.pwt.is_none() || self.pwt_version != version {
+            let pb = self.pwt.get_or_insert_with(PackedB::new);
+            pb.pack_transposed(w);
+            self.pwt_version = version;
+        }
+        self.pwt.as_ref().unwrap()
+    }
+
     /// Heap floats currently held (tests / footprint diagnostics).
     pub fn heap_floats(&self) -> usize {
         self.gw.data.len()
             + self.gb.len()
             + self.wt.as_ref().map_or(0, |m| m.data.len())
+            + self.pw.as_ref().map_or(0, |p| p.heap_floats())
+            + self.pwt.as_ref().map_or(0, |p| p.heap_floats())
     }
 }
 
@@ -168,6 +205,37 @@ mod tests {
         assert!(fc.gw.data.iter().all(|&v| v == 7.0));
         fc.ensure_grads(5, 3); // new shape: re-allocated
         assert_eq!(fc.gw.shape(), (5, 3));
+    }
+
+    #[test]
+    fn packed_caches_track_weight_version() {
+        use crate::tensor::ops;
+
+        let mut fc = FcCtx::new();
+        let mut w = Mat::from_fn(16, 12, |i, j| (i * 12 + j) as f32 * 0.01);
+        let x = Mat::from_fn(3, 16, |i, j| (i + j) as f32 * 0.1);
+        let mut want = Mat::zeros(3, 12);
+        ops::matmul_naive(&x, &w, &mut want);
+        let mut got = Mat::zeros(3, 12);
+        ops::matmul_packed_into(&x, fc.packed_for(&w, 0), &mut got);
+        assert_eq!(want.data, got.data);
+        // same version: stale weights are invisible through the cache
+        *w.at_mut(0, 0) = 99.0;
+        let mut stale = Mat::zeros(3, 12);
+        ops::matmul_packed_into(&x, fc.packed_for(&w, 0), &mut stale);
+        assert_eq!(got.data, stale.data, "cache must serve the stamped panels");
+        // bumped version: repacked
+        let mut fresh = Mat::zeros(3, 12);
+        ops::matmul_packed_into(&x, fc.packed_for(&w, 1), &mut fresh);
+        assert_ne!(got.data, fresh.data);
+        // the transposed cache mirrors the naive A·Bᵀ oracle
+        let gy = Mat::from_fn(3, 12, |i, j| (i as f32 - j as f32) * 0.05);
+        let mut want_gx = Mat::zeros(3, 16);
+        ops::matmul_a_bt_naive(&gy, &w, &mut want_gx);
+        let mut got_gx = Mat::zeros(3, 16);
+        ops::matmul_packed_into(&gy, fc.packed_wt_for(&w, 1), &mut got_gx);
+        assert_eq!(want_gx.data, got_gx.data);
+        assert!(fc.heap_floats() > 0, "panel caches count toward the footprint");
     }
 
     #[test]

@@ -57,9 +57,28 @@ impl FcLayer {
     }
 
     /// Eq. 1 (pre-activation): y = x·W + b. Pure read of the parameters —
-    /// needs no context.
+    /// needs no context. Under `Backend::Packed` the weights are packed
+    /// into a thread-local scratch per call; hot loops over frozen
+    /// weights should use [`FcLayer::forward_cached`] instead so the
+    /// packing is paid once per weight version, not once per batch.
     pub fn forward(&self, backend: Backend, x: &Mat, y: &mut Mat) {
         ops::matmul_bias(backend, x, &self.w, &self.b, y);
+    }
+
+    /// Eq. 1 with the context's version-stamped packed-panel cache: the
+    /// frozen serving/fine-tuning hot path. Identical results to
+    /// [`FcLayer::forward`] (the packed kernel is bit-identical to the
+    /// naive oracle); the only difference is WHERE the packed panels
+    /// live. Falls back to `forward` for non-packed backends and for
+    /// layers too narrow to tile (one panel would be mostly padding).
+    pub fn forward_cached(&self, ctx: &mut FcCtx, backend: Backend, x: &Mat, y: &mut Mat) {
+        if backend == Backend::Packed && self.w.cols >= ops::NR {
+            let pw = ctx.packed_for(&self.w, self.version);
+            ops::matmul_packed_into(x, pw, y);
+            ops::add_bias(y, &self.b);
+        } else {
+            self.forward(backend, x, y);
+        }
     }
 
     /// Eq. 2-4, gated by the compute type. Gradients land in `ctx`; `gx`
@@ -85,15 +104,22 @@ impl FcLayer {
         }
         if ct.computes_gx() {
             let gx = gx.expect("compute type requires gx buffer");
-            // Eq. 4. Frozen layers (the fine-tuning common case) use the
-            // cached-transpose axpy-form matmul; trained layers would
-            // invalidate the cache every step, so they use the fused
-            // A·Bᵀ kernel directly.
-            if backend == Backend::Blocked && !ct.computes_gw() {
-                let wt = ctx.wt_for(&self.w, self.version);
-                ops::matmul_blocked(gy, wt, gx);
-            } else {
-                ops::matmul_a_bt(backend, gy, &self.w, gx);
+            // Eq. 4. Frozen layers (the fine-tuning common case) use a
+            // version-stamped cache — packed `Wᵀ` panels under `Packed`,
+            // the materialized transpose under `Blocked`; trained layers
+            // would invalidate the cache every step, so they use the
+            // fused A·Bᵀ kernel directly.
+            let frozen = !ct.computes_gw();
+            match backend {
+                Backend::Packed if frozen && self.w.rows >= ops::NR => {
+                    let pwt = ctx.packed_wt_for(&self.w, self.version);
+                    ops::matmul_packed_into(gy, pwt, gx);
+                }
+                Backend::Blocked if frozen => {
+                    let wt = ctx.wt_for(&self.w, self.version);
+                    ops::matmul_blocked(gy, wt, gx);
+                }
+                _ => ops::matmul_a_bt(backend, gy, &self.w, gx),
             }
         }
     }

@@ -74,6 +74,33 @@ impl LoraAdapter {
         }
     }
 
+    /// The serving fan-out's grouped form of the adapter pair: for a
+    /// contiguous sub-batch `x` (one tenant's gathered rows),
+    ///
+    /// ```text
+    /// ya = x · W_A          (overwrites ya's logical view)
+    /// y += ya · W_B
+    /// ```
+    ///
+    /// — two small GEMMs instead of one rank-r GEMV chain per row.
+    /// `ya` is caller-owned capacity-sized scratch; its logical view is
+    /// reshaped to `(x.rows, rank)` in place, so steady-state serving
+    /// allocates nothing. Both GEMMs go through [`ops::matmul_acc`],
+    /// whose accumulation order matches the per-row reference
+    /// (`serve::batcher::apply_skip_adapters_row`) element for element —
+    /// grouping rows moves ZERO ulps (bit-equivalence-tested in
+    /// `tests/kernel_equiv.rs`).
+    pub fn forward_grouped(&self, backend: Backend, x: &Mat, ya: &mut Mat, y: &mut Mat) {
+        assert_eq!(x.cols, self.n_in(), "adapter input width mismatch");
+        assert_eq!(y.cols, self.n_out(), "adapter output width mismatch");
+        assert_eq!(y.rows, x.rows);
+        let r = self.rank();
+        ya.set_logical(x.rows, r);
+        ya.data[..x.rows * r].fill(0.0);
+        ops::matmul_acc(backend, x, &self.wa, ya); // Eq. 7 over the group
+        ops::matmul_acc(backend, ya, &self.wb, y); // Eq. 8-9, accumulated
+    }
+
     /// Eq. 10-14, gated by compute type. Gradients land in `ctx` (which
     /// must have seen the matching `forward_accumulate`). Accumulates
     /// `gx += gx_A` when the type propagates (LoRA_ywx), so the
@@ -188,6 +215,25 @@ mod tests {
         ops::matmul_naive(&ya, &ad.wb, &mut want);
         for (a, b) in y.data.iter().zip(&want.data) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forward_grouped_matches_forward_accumulate() {
+        let mut rng = Rng::new(12);
+        let mut ad = LoraAdapter::new(&mut rng, 6, 2, 4);
+        ad.wb = Mat::from_fn(2, 4, |_, _| rng.normal());
+        let x = Mat::from_fn(5, 6, |_, _| rng.normal());
+        let mut want = Mat::from_fn(5, 4, |_, _| 0.5);
+        let mut got = want.clone();
+        let mut ctx = LoraCtx::new();
+        ad.forward_accumulate(&mut ctx, Backend::Scalar, &x, &mut want);
+        // oversized scratch (the serving buffer is capacity × MAX_RANK)
+        let mut ya = Mat::zeros(16, 32);
+        ad.forward_grouped(Backend::Packed, &x, &mut ya, &mut got);
+        assert_eq!(ya.shape(), (5, 2), "logical view reshaped to the group");
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
     }
 

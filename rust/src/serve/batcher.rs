@@ -24,19 +24,39 @@
 //! A lone request never waits indefinitely: [`MicroBatcher::pump`] flushes
 //! when the batch fills OR when the oldest queued request has aged past a
 //! configurable pump-count deadline. And the queue itself is BOUNDED:
-//! [`MicroBatcher::try_submit`] rejects with a typed [`QueueFull`] once
-//! `queue_bound` requests are waiting, so overload degrades into explicit
-//! back-pressure instead of unbounded memory growth.
+//! [`MicroBatcher::try_submit`] rejects with a typed
+//! [`SubmitError::QueueFull`] once `queue_bound` requests are waiting, so
+//! overload degrades into explicit back-pressure instead of unbounded
+//! memory growth.
+//!
+//! ## The zero-alloc tenant-grouped flush (DESIGN.md §10)
+//!
+//! [`MicroBatcher::flush`] fans a batch out by TENANT GROUP, not by row:
+//! rows are sorted by tenant (an index sort over a reusable `u32`
+//! buffer), each tenant's rows are gathered into contiguous sub-batch
+//! scratch, every skip adapter runs as TWO small GEMMs
+//! (`Ya = Xsub·W_A`, `logits_sub += Ya·W_B`) instead of per-row rank-r
+//! GEMV chains, and the group's logits scatter back. All scratch — the
+//! staged requests, the registry snapshot batch, the gather/sub-batch
+//! matrices, the logits staging — lives in capacity-sized buffers owned
+//! by the batcher, so a warm flush performs **zero heap allocations**
+//! (proved by the counting-allocator test in `tests/zero_alloc.rs`).
+//! Every kernel on the path preserves the per-row reference's
+//! accumulation order, so grouping moves zero ulps
+//! (`tests/kernel_equiv.rs`); the pre-grouping path survives as
+//! [`MicroBatcher::flush_reference`] — the correctness oracle and the
+//! `benches/serve_micro.rs` baseline.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::model::{ExecCtx, Mlp};
 use crate::nn::lora::LoraAdapter;
-use crate::serve::registry::{AdapterRegistry, TenantId};
+use crate::serve::registry::{AdapterRegistry, SnapshotBatch, TenantId};
 use crate::tensor::ops::Backend;
+use crate::tensor::Mat;
 
-/// Largest supported adapter rank for the stack-allocated head buffer.
+/// Largest supported adapter rank for the serving scratch buffers.
 /// `FleetServer::validate_adapters` rejects `SwapAdapters` requests above
 /// this, so an oversized set can never reach the serving loop's assert.
 pub const MAX_RANK: usize = 32;
@@ -49,20 +69,34 @@ pub const DEFAULT_FLUSH_DEADLINE: u64 = 2;
 /// growth and unbounded tail latency instead of a typed rejection.
 pub const DEFAULT_QUEUE_BOUND: usize = 1024;
 
-/// Typed back-pressure signal: the request queue is at its bound and the
-/// request was NOT enqueued. Callers surface this to the client (the
-/// `FleetServer` maps it to `Response::Rejected(RejectReason::QueueFull)`)
-/// rather than letting the queue grow without limit.
+/// Why [`MicroBatcher::try_submit`] turned a request away — typed, so a
+/// direct batcher user can react (back off vs fix the request) and so
+/// bad input can never panic the pump loop. The `FleetServer` maps these
+/// onto `RejectReason::{QueueFull, Malformed}`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct QueueFull {
-    /// the configured bound the queue is sitting at
-    pub bound: usize,
+pub enum SubmitError {
+    /// the request queue is at its configured bound and the request was
+    /// NOT enqueued — back-pressure, retry later
+    QueueFull {
+        /// the configured bound the queue is sitting at
+        bound: usize,
+    },
+    /// the request's feature width doesn't match the deployed backbone —
+    /// the request itself is malformed and a retry cannot succeed
+    WidthMismatch { expected: usize, got: usize },
 }
 
 /// Apply a tenant's skip-adapter set to one request row:
 /// `y += Σ_k (x^k · W_A_k) · W_B_k`. Read-only on the adapters (which
 /// hold weights and nothing else), so any number of rows can fan out from
 /// one immutable registry snapshot.
+///
+/// This is the PER-ROW REFERENCE: the serving hot path now applies
+/// adapters tenant-grouped ([`LoraAdapter::forward_grouped`] inside
+/// [`MicroBatcher::flush`]), which produces bit-identical logits — the
+/// grouped GEMMs keep this function's accumulation order element for
+/// element. Kept callable for the equivalence tests and as the
+/// `benches/serve_micro.rs` baseline ([`MicroBatcher::flush_reference`]).
 pub fn apply_skip_adapters_row(adapters: &[LoraAdapter], xs: &[&[f32]], y: &mut [f32]) {
     assert_eq!(adapters.len(), xs.len(), "one adapter per backbone layer");
     let mut ya = [0.0f32; MAX_RANK];
@@ -167,7 +201,10 @@ impl FrozenBackbone {
     }
 
     /// Per-layer activation rows for request `row` (inputs x^1..x^n) —
-    /// exactly what the tenant's skip adapters consume.
+    /// exactly what the tenant's skip adapters consume. Allocates a
+    /// `Vec` of slices per call: REFERENCE/BASELINE PATH ONLY — the hot
+    /// path gathers tenant groups into contiguous scratch instead
+    /// (`apply_adapters_grouped`).
     pub fn activations_row(&self, row: usize) -> Vec<&[f32]> {
         self.ctx.x.iter().map(|m| m.row(row)).collect()
     }
@@ -175,6 +212,49 @@ impl FrozenBackbone {
     /// Pre-adapter output row c^n for request `row`.
     pub fn c_n_row(&self, row: usize) -> &[f32] {
         self.ctx.c_n.row(row)
+    }
+
+    /// Stage the first `b` pre-adapter rows (c^n) into the context's
+    /// logits workspace, where the grouped fan-out accumulates adapter
+    /// deltas in place. One contiguous copy, no per-row `to_vec`.
+    fn stage_logits(&mut self, b: usize) {
+        let n_out = self.ctx.c_n.cols;
+        self.ctx.logits.data[..b * n_out].copy_from_slice(&self.ctx.c_n.data[..b * n_out]);
+    }
+
+    /// Apply one tenant's skip adapters to its gathered row group:
+    /// gather `rows` from each layer's activations into `xsub[k]`, run
+    /// the adapter pair as two sub-batch GEMMs, and scatter the group's
+    /// logits back. All buffers are capacity-sized and reshaped in
+    /// place — zero allocations.
+    fn apply_adapters_grouped(
+        &mut self,
+        rows: &[u32],
+        adapters: &[LoraAdapter],
+        xsub: &mut [Mat],
+        ya: &mut Mat,
+        logits_sub: &mut Mat,
+    ) {
+        let g = rows.len();
+        let n_out = self.ctx.logits.cols;
+        assert_eq!(adapters.len(), self.ctx.x.len(), "one adapter per backbone layer");
+        logits_sub.set_logical(g, n_out);
+        for (gi, &r) in rows.iter().enumerate() {
+            logits_sub.row_mut(gi).copy_from_slice(self.ctx.logits.row(r as usize));
+        }
+        for (k, ad) in adapters.iter().enumerate() {
+            assert!(ad.rank() <= MAX_RANK, "adapter rank {} exceeds MAX_RANK", ad.rank());
+            let xk = &self.ctx.x[k];
+            let xs = &mut xsub[k];
+            xs.set_logical(g, xk.cols);
+            for (gi, &r) in rows.iter().enumerate() {
+                xs.row_mut(gi).copy_from_slice(xk.row(r as usize));
+            }
+            ad.forward_grouped(self.ctx.backend, xs, ya, logits_sub);
+        }
+        for (gi, &r) in rows.iter().enumerate() {
+            self.ctx.logits.row_mut(r as usize).copy_from_slice(logits_sub.row(gi));
+        }
     }
 }
 
@@ -189,18 +269,63 @@ pub struct BatchRequest {
     pub label: Option<usize>,
 }
 
-/// One served request.
+/// One served request. Deliberately allocation-free to produce: the
+/// request features move back out ONLY for feedback requests (the only
+/// consumer — `FleetServer::apply_feedback`'s buffer push), and logits
+/// live in the batcher's staging matrix ([`MicroBatcher::last_logits`],
+/// indexed by `row`) instead of a per-response `Vec`.
 #[derive(Clone, Debug)]
 pub struct BatchResponse {
     pub tenant: TenantId,
     pub id: u64,
-    /// the request features, echoed back for feedback buffering
-    pub x: Vec<f32>,
+    /// this response's row in the flushed batch — indexes
+    /// [`MicroBatcher::last_logits`] until the next flush
+    pub row: usize,
+    /// the flush ordinal (`MicroBatcher::batches` at serve time) this
+    /// `row` belongs to — [`MicroBatcher::logits_for`] checks it, so a
+    /// response accumulated across multiple flushes (`flush_all`) can
+    /// never silently read another request's logits out of the reused
+    /// staging matrix
+    pub batch: u64,
+    /// the request features, moved back ONLY for feedback requests
+    /// (`label.is_some()`); `None` for plain predicts, whose `x` nobody
+    /// downstream reads
+    pub x: Option<Vec<f32>>,
     pub label: Option<usize>,
-    pub logits: Vec<f32>,
     pub prediction: usize,
     /// adapter version used (0 = bare backbone, no adapters published)
     pub adapter_version: u64,
+}
+
+/// Reusable scratch for the tenant-grouped fan-out: the row-order index,
+/// the per-layer sub-batch gather matrices, the rank workspace, and the
+/// group logits staging. Everything is capacity-sized at construction
+/// and reshaped in place per group (`Mat::set_logical`) — a warm flush
+/// never touches the allocator.
+struct FanoutScratch {
+    /// batch row indices, sorted by tenant before grouping
+    order: Vec<u32>,
+    /// xsub[k]: capacity × dims[k] gather buffer for layer k's inputs
+    xsub: Vec<Mat>,
+    /// capacity × MAX_RANK workspace for Ya = Xsub·W_A
+    ya: Mat,
+    /// capacity × n_out staging for the group's logits
+    logits_sub: Mat,
+}
+
+impl FanoutScratch {
+    fn new(dims: &[usize], capacity: usize) -> Self {
+        let n_out = *dims.last().expect("at least one layer");
+        Self {
+            order: Vec::with_capacity(capacity),
+            xsub: dims[..dims.len() - 1]
+                .iter()
+                .map(|&d| Mat::zeros(capacity, d))
+                .collect(),
+            ya: Mat::zeros(capacity, MAX_RANK),
+            logits_sub: Mat::zeros(capacity, n_out),
+        }
+    }
 }
 
 /// The micro-batching queue: requests from ANY tenant coalesce into one
@@ -219,6 +344,12 @@ pub struct MicroBatcher {
     pub batches: u64,
     /// total rows served
     pub rows: u64,
+    /// requests staged for the in-flight flush (reusable)
+    staged: Vec<BatchRequest>,
+    /// reusable registry batch-lookup scratch (one lock per shard)
+    snaps: SnapshotBatch,
+    /// reusable tenant-grouped fan-out scratch
+    fanout: FanoutScratch,
 }
 
 impl MicroBatcher {
@@ -246,6 +377,8 @@ impl MicroBatcher {
     ) -> Self {
         assert!(deadline_pumps > 0, "a zero deadline would never flush");
         assert!(queue_bound > 0, "a zero queue bound would reject everything");
+        let capacity = backbone.capacity();
+        let fanout = FanoutScratch::new(&backbone.model.config.dims, capacity);
         Self {
             backbone,
             registry,
@@ -255,6 +388,9 @@ impl MicroBatcher {
             pump_count: 0,
             batches: 0,
             rows: 0,
+            staged: Vec::with_capacity(capacity),
+            snaps: SnapshotBatch::new(),
+            fanout,
         }
     }
 
@@ -284,24 +420,31 @@ impl MicroBatcher {
         self.queue_bound
     }
 
-    /// Queue a request for the next flush, or reject it if the queue is
-    /// at its bound (back-pressure: the queue can NEVER exceed
-    /// `queue_bound`, so a load spike costs a typed rejection instead of
-    /// unbounded memory growth).
-    pub fn try_submit(&mut self, req: BatchRequest) -> Result<(), QueueFull> {
-        assert_eq!(req.x.len(), self.backbone.n_in(), "request width mismatch");
+    /// Queue a request for the next flush, or reject it with a typed
+    /// error: `QueueFull` when the bounded queue is at its limit
+    /// (back-pressure — the queue can NEVER exceed `queue_bound`, so a
+    /// load spike costs a rejection instead of unbounded memory growth)
+    /// or `WidthMismatch` when the features don't fit the backbone (a
+    /// direct batcher user's bad input must not panic the pump loop).
+    pub fn try_submit(&mut self, req: BatchRequest) -> Result<(), SubmitError> {
+        let expected = self.backbone.n_in();
+        if req.x.len() != expected {
+            return Err(SubmitError::WidthMismatch { expected, got: req.x.len() });
+        }
         if self.queue.len() >= self.queue_bound {
-            return Err(QueueFull { bound: self.queue_bound });
+            return Err(SubmitError::QueueFull { bound: self.queue_bound });
         }
         self.queue.push_back((req, self.pump_count));
         Ok(())
     }
 
-    /// Queue a request, panicking at the bound — for tests and benches
-    /// that size their load under the bound by construction.
+    /// Queue a request, panicking on rejection — for tests and benches
+    /// that size their load (and shape their requests) correctly by
+    /// construction.
     pub fn submit(&mut self, req: BatchRequest) {
-        self.try_submit(req)
-            .expect("micro-batch queue full (use try_submit for back-pressure)");
+        if let Err(e) = self.try_submit(req) {
+            panic!("submit rejected (use try_submit for typed handling): {e:?}");
+        }
     }
 
     /// Deadline-aware flush: serve a micro-batch only when the queue has
@@ -324,45 +467,136 @@ impl MicroBatcher {
     }
 
     /// Unconditional flush: serve up to `capacity` queued requests with
-    /// ONE backbone forward. Appends a response per request to `out`;
+    /// ONE backbone forward and a TENANT-GROUPED adapter fan-out.
+    /// Appends a response per request to `out` (original submit order);
     /// returns the batch size.
+    ///
+    /// Hot-path discipline: every buffer this touches is owned and
+    /// capacity-sized — a warm flush performs zero heap allocations
+    /// (`tests/zero_alloc.rs` proves it under a counting allocator), and
+    /// its logits are bit-identical to [`MicroBatcher::flush_reference`]
+    /// (`tests/kernel_equiv.rs`).
     pub fn flush(&mut self, out: &mut Vec<BatchResponse>) -> usize {
+        let b = self.stage_and_forward();
+        if b == 0 {
+            return 0;
+        }
+        // one registry lock acquisition per DISTINCT shard for the whole
+        // batch; rows from the same tenant share one snapshot
+        self.registry
+            .snapshot_many_into(self.staged.iter().map(|r| r.tenant), &mut self.snaps);
+        self.backbone.stage_logits(b);
+        // group rows by tenant: sort the row-index scratch, then walk runs
+        let FanoutScratch { order, xsub, ya, logits_sub } = &mut self.fanout;
+        order.clear();
+        order.extend(0..b as u32);
+        let staged = &self.staged;
+        order.sort_unstable_by_key(|&r| staged[r as usize].tenant);
+        let mut i = 0;
+        while i < b {
+            let tenant = self.staged[order[i] as usize].tenant;
+            let mut j = i + 1;
+            while j < b && self.staged[order[j] as usize].tenant == tenant {
+                j += 1;
+            }
+            if let Some(snap) = self.snaps.get(tenant) {
+                self.backbone.apply_adapters_grouped(
+                    &order[i..j],
+                    &snap.adapters,
+                    xsub,
+                    ya,
+                    logits_sub,
+                );
+            }
+            // tenants with nothing published serve the bare backbone
+            // logits already staged
+            i = j;
+        }
+        self.emit_responses(b, out);
+        b
+    }
+
+    /// The pre-grouping per-row fan-out, kept VERBATIM: one backbone
+    /// forward, then per row a logits `to_vec`, an activation-slice
+    /// `Vec`, and a rank-r GEMV chain ([`apply_skip_adapters_row`]).
+    /// This is (a) the reference `flush` is bit-equivalence-tested
+    /// against and (b) the baseline `benches/serve_micro.rs` measures
+    /// the tenant-grouped speedup from. Not for production use.
+    pub fn flush_reference(&mut self, out: &mut Vec<BatchResponse>) -> usize {
+        let b = self.stage_and_forward();
+        if b == 0 {
+            return 0;
+        }
+        self.registry
+            .snapshot_many_into(self.staged.iter().map(|r| r.tenant), &mut self.snaps);
+        for row in 0..b {
+            let mut logits = self.backbone.c_n_row(row).to_vec();
+            if let Some(snap) = self.snaps.get(self.staged[row].tenant) {
+                let xs = self.backbone.activations_row(row);
+                apply_skip_adapters_row(&snap.adapters, &xs, &mut logits);
+            }
+            self.backbone.ctx.logits.row_mut(row).copy_from_slice(&logits);
+        }
+        self.emit_responses(b, out);
+        b
+    }
+
+    /// Shared flush front half: move up to `capacity` queued requests
+    /// into the staging buffer, load their rows, run the ONE shared
+    /// frozen forward. Returns the batch size.
+    fn stage_and_forward(&mut self) -> usize {
         let b = self.queue.len().min(self.backbone.capacity());
         if b == 0 {
             return 0;
         }
-        let reqs: Vec<BatchRequest> = self.queue.drain(..b).map(|(r, _)| r).collect();
-        for (row, r) in reqs.iter().enumerate() {
+        self.staged.clear();
+        self.staged.extend(self.queue.drain(..b).map(|(r, _)| r));
+        for (row, r) in self.staged.iter().enumerate() {
             self.backbone.load_row(row, &r.x);
         }
         self.backbone.forward(b);
-        // one registry lock acquisition for the whole batch; rows from the
-        // same tenant share one snapshot
-        let snaps = self.registry.snapshot_many(reqs.iter().map(|r| r.tenant));
-        for (row, req) in reqs.into_iter().enumerate() {
-            let mut logits = self.backbone.c_n_row(row).to_vec();
-            let adapter_version = match snaps.get(&req.tenant) {
-                Some(snap) => {
-                    let xs = self.backbone.activations_row(row);
-                    apply_skip_adapters_row(&snap.adapters, &xs, &mut logits);
-                    snap.version
-                }
-                None => 0, // bare backbone until the tenant publishes
-            };
-            let prediction = argmax(&logits);
+        b
+    }
+
+    /// Shared flush back half: drain the staged requests into responses
+    /// (predictions read from the logits staging; `x` moves back only
+    /// for feedback requests) and bump the counters.
+    fn emit_responses(&mut self, b: usize, out: &mut Vec<BatchResponse>) {
+        self.batches += 1;
+        self.rows += b as u64;
+        for (row, req) in self.staged.drain(..).enumerate() {
+            let prediction = argmax(self.backbone.ctx.logits.row(row));
+            let adapter_version = self.snaps.get(req.tenant).map_or(0, |s| s.version);
+            let BatchRequest { tenant, id, x, label } = req;
             out.push(BatchResponse {
-                tenant: req.tenant,
-                id: req.id,
-                x: req.x,
-                label: req.label,
-                logits,
+                tenant,
+                id,
+                row,
+                batch: self.batches,
+                x: if label.is_some() { Some(x) } else { None },
+                label,
                 prediction,
                 adapter_version,
             });
         }
-        self.batches += 1;
-        self.rows += b as u64;
-        b
+    }
+
+    /// The logits of the most recent flush, row-indexed by
+    /// [`BatchResponse::row`]. ONLY valid for responses of that flush —
+    /// the staging matrix is reused, so responses accumulated across
+    /// multiple flushes (e.g. `flush_all`) must go through the checked
+    /// [`MicroBatcher::logits_for`] instead. `FleetServer` consumers
+    /// should read predictions off the responses.
+    pub fn last_logits(&self) -> &Mat {
+        &self.backbone.ctx.logits
+    }
+
+    /// Logits for `resp`, or `None` if a later flush has already reused
+    /// the staging matrix (the response's [`BatchResponse::batch`] stamp
+    /// no longer matches) — reading a stale row can never silently
+    /// return another request's logits.
+    pub fn logits_for(&self, resp: &BatchResponse) -> Option<&[f32]> {
+        (resp.batch == self.batches).then(|| self.backbone.ctx.logits.row(resp.row))
     }
 
     /// Flush until the queue is empty (multiple micro-batches if needed).
@@ -436,6 +670,10 @@ mod tests {
         }
         let mut batched = Vec::new();
         assert_eq!(batcher.flush(&mut batched), 5);
+        let batched_logits: Vec<Vec<f32>> = batched
+            .iter()
+            .map(|r| batcher.last_logits().row(r.row).to_vec())
+            .collect();
 
         for (t, x) in xs.iter().enumerate() {
             let mut solo = Vec::new();
@@ -446,7 +684,12 @@ mod tests {
                 label: None,
             });
             assert_eq!(batcher.flush(&mut solo), 1);
-            close(&batched[t].logits, &solo[0].logits, 1e-5);
+            // same kernels, row-independent: batched == solo EXACTLY
+            assert_eq!(
+                batched_logits[t],
+                batcher.last_logits().row(solo[0].row),
+                "tenant {t} drifted between batched and solo serving"
+            );
         }
     }
 
@@ -491,7 +734,7 @@ mod tests {
                 1,
             );
             let logits = tuner.predict_alloc(&Mat::from_vec(1, 6, x.clone()));
-            close(&out[t].logits, logits.row(0), 1e-4);
+            close(batcher.last_logits().row(out[t].row), logits.row(0), 1e-4);
             assert!(Arc::ptr_eq(batcher.shared_model(), &tuner.model));
         }
     }
@@ -504,12 +747,15 @@ mod tests {
         let fb = FrozenBackbone::new(backbone, Backend::Blocked, 8);
         let mut batcher = MicroBatcher::new(fb, registry);
         let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
-        batcher.submit(BatchRequest { tenant: 99, id: 1, x, label: Some(2) });
+        batcher.submit(BatchRequest { tenant: 99, id: 1, x: x.clone(), label: Some(2) });
+        batcher.submit(BatchRequest { tenant: 98, id: 2, x, label: None });
         let mut out = Vec::new();
-        assert_eq!(batcher.flush(&mut out), 1);
+        assert_eq!(batcher.flush(&mut out), 2);
         assert_eq!(out[0].adapter_version, 0, "no adapters published yet");
         assert_eq!(out[0].label, Some(2));
-        assert_eq!(out[0].logits.len(), 3);
+        assert!(out[0].x.is_some(), "feedback requests carry x back");
+        assert!(out[1].x.is_none(), "predicts do not echo x");
+        assert_eq!(batcher.last_logits().cols, 3);
         assert_eq!(batcher.flush(&mut out), 0, "queue drained");
     }
 
@@ -551,7 +797,8 @@ mod tests {
         batcher.flush(&mut out);
         assert!(out[0].adapter_version > 0);
         assert_eq!(out[1].adapter_version, 0);
-        close(&out[0].logits, &out[1].logits, 1e-7);
+        let logits = batcher.last_logits();
+        close(logits.row(out[0].row), logits.row(out[1].row), 1e-7);
     }
 
     #[test]
@@ -589,10 +836,11 @@ mod tests {
             let req = BatchRequest { tenant: i, id: i, x, label: None };
             match batcher.try_submit(req) {
                 Ok(()) => {}
-                Err(QueueFull { bound }) => {
+                Err(SubmitError::QueueFull { bound }) => {
                     assert_eq!(bound, 6);
                     rejected += 1;
                 }
+                Err(other) => panic!("unexpected rejection {other:?}"),
             }
             assert!(batcher.pending() <= batcher.queue_bound());
         }
@@ -604,6 +852,109 @@ mod tests {
         assert!(batcher
             .try_submit(BatchRequest { tenant: 0, id: 99, x, label: None })
             .is_ok());
+    }
+
+    #[test]
+    fn logits_for_rejects_rows_from_earlier_flushes() {
+        // the staging matrix is reused per flush: responses accumulated
+        // across flush_all must not silently read a later batch's logits
+        let mut rng = Rng::new(10);
+        let backbone = Mlp::new(&mut rng, cfg());
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Packed, 4);
+        let mut batcher = MicroBatcher::new(fb, registry);
+        for i in 0..6u64 {
+            let x: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            batcher.submit(BatchRequest { tenant: i, id: i, x, label: None });
+        }
+        let mut out = Vec::new();
+        assert_eq!(batcher.flush_all(&mut out), 6, "4 + 2 across two flushes");
+        // first-batch rows are stale (their staging was overwritten)...
+        for resp in &out[..4] {
+            assert!(batcher.logits_for(resp).is_none(), "stale row served");
+        }
+        // ...final-batch rows are live and match last_logits
+        for resp in &out[4..] {
+            let logits = batcher.logits_for(resp).expect("current batch is live");
+            assert_eq!(logits, batcher.last_logits().row(resp.row));
+            assert_eq!(argmax(logits), resp.prediction);
+        }
+    }
+
+    #[test]
+    fn width_mismatch_is_a_typed_rejection_not_a_panic() {
+        // a direct batcher user (no FleetServer validation in front) must
+        // not be able to crash the pump loop with a bad request
+        let mut rng = Rng::new(8);
+        let backbone = Mlp::new(&mut rng, cfg());
+        let registry = Arc::new(AdapterRegistry::new());
+        let fb = FrozenBackbone::new(backbone, Backend::Blocked, 4);
+        let mut batcher = MicroBatcher::new(fb, registry);
+        let bad = BatchRequest { tenant: 1, id: 1, x: vec![0.0; 4], label: None };
+        assert_eq!(
+            batcher.try_submit(bad),
+            Err(SubmitError::WidthMismatch { expected: 6, got: 4 })
+        );
+        assert_eq!(batcher.pending(), 0, "rejected request must not be queued");
+        // the pump loop stays healthy: a good request still serves
+        let good = BatchRequest { tenant: 1, id: 2, x: vec![0.0; 6], label: None };
+        assert!(batcher.try_submit(good).is_ok());
+        let mut out = Vec::new();
+        assert_eq!(batcher.flush(&mut out), 1);
+    }
+
+    #[test]
+    fn grouped_flush_is_bit_identical_to_the_per_row_reference() {
+        // the tentpole invariant, smoke-scale (the seeded multi-tenant
+        // sweep lives in tests/kernel_equiv.rs): same requests through
+        // flush() and flush_reference() → byte-identical logits
+        let mut rng = Rng::new(9);
+        let backbone = Arc::new(Mlp::new(&mut rng, cfg()));
+        let registry = Arc::new(AdapterRegistry::new());
+        for t in 0..3u64 {
+            let mut ads: Vec<LoraAdapter> = (0..3)
+                .map(|k| LoraAdapter::new(&mut rng, cfg().dims[k], 2, 3))
+                .collect();
+            for ad in ads.iter_mut() {
+                for v in ad.wb.data.iter_mut() {
+                    *v = 0.1 * rng.normal();
+                }
+            }
+            registry.publish(t, ads);
+        }
+        let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, 8);
+        let mut batcher = MicroBatcher::new(fb, Arc::clone(&registry));
+        // mixed multiplicities incl. an unpublished tenant (id 7)
+        let tenants = [0u64, 1, 0, 2, 7, 1, 0];
+        let xs: Vec<Vec<f32>> = (0..tenants.len())
+            .map(|_| (0..6).map(|_| rng.normal()).collect())
+            .collect();
+        let submit_all = |batcher: &mut MicroBatcher| {
+            for (i, (&t, x)) in tenants.iter().zip(&xs).enumerate() {
+                batcher.submit(BatchRequest { tenant: t, id: i as u64, x: x.clone(), label: None });
+            }
+        };
+        let mut grouped = Vec::new();
+        submit_all(&mut batcher);
+        assert_eq!(batcher.flush(&mut grouped), tenants.len());
+        let grouped_logits: Vec<Vec<f32>> = grouped
+            .iter()
+            .map(|r| batcher.last_logits().row(r.row).to_vec())
+            .collect();
+        let mut reference = Vec::new();
+        submit_all(&mut batcher);
+        assert_eq!(batcher.flush_reference(&mut reference), tenants.len());
+        for (g, r) in grouped.iter().zip(&reference) {
+            assert_eq!((g.tenant, g.id, g.prediction), (r.tenant, r.id, r.prediction));
+            assert_eq!(g.adapter_version, r.adapter_version);
+            let want = batcher.last_logits().row(r.row);
+            let got = &grouped_logits[g.row];
+            assert_eq!(
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "grouped fan-out moved ulps vs the per-row reference"
+            );
+        }
     }
 
     #[test]

@@ -100,10 +100,10 @@ pub mod registry;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher, QueueFull};
+pub use batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher, SubmitError};
 pub use metrics::{LatencyHistogram, ServeMetrics};
 pub use persist::{RegistryCheckpoint, TenantRecord};
-pub use registry::{AdapterRegistry, AdapterSnapshot, ShardStats, TenantId};
+pub use registry::{AdapterRegistry, AdapterSnapshot, ShardStats, SnapshotBatch, TenantId};
 pub use scheduler::{PoolStats, WorkerPool};
 pub use server::{
     Completion, FleetServer, PersistReport, RateLimit, RejectReason, Request, Response,

@@ -99,6 +99,39 @@ pub struct ShardStats {
     pub writes: u64,
 }
 
+/// Reusable scratch for [`AdapterRegistry::snapshot_many_into`] — the
+/// zero-alloc serving fan-out's registry read path. Owns the per-shard
+/// grouping vectors and the tenant → snapshot result map; both keep
+/// their capacity across calls, so a warm batch lookup allocates
+/// nothing.
+#[derive(Debug, Default)]
+pub struct SnapshotBatch {
+    /// tenants grouped by destination shard (scratch, cleared per call)
+    by_shard: Vec<Vec<TenantId>>,
+    /// the result of the most recent `snapshot_many_into`
+    map: HashMap<TenantId, Arc<AdapterSnapshot>>,
+}
+
+impl SnapshotBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot for `tenant` from the most recent batch lookup.
+    pub fn get(&self, tenant: TenantId) -> Option<&Arc<AdapterSnapshot>> {
+        self.map.get(&tenant)
+    }
+
+    /// Distinct tenants resolved by the most recent batch lookup.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 /// The registry: tenant -> latest published snapshot, sharded by
 /// tenant-id hash.
 #[derive(Debug)]
@@ -270,21 +303,42 @@ impl AdapterRegistry {
     }
 
     /// Latest snapshots for a batch of tenants with ONE read-lock
-    /// acquisition per DISTINCT shard touched — the serving fan-out path
-    /// (`MicroBatcher::flush`) uses this so a B-row micro-batch costs at
-    /// most `min(B, shard_count)` locks, not B. Missing tenants are
-    /// simply absent from the result.
+    /// acquisition per DISTINCT shard touched — so a B-row micro-batch
+    /// costs at most `min(B, shard_count)` locks, not B. Allocating
+    /// convenience wrapper over [`AdapterRegistry::snapshot_many_into`];
+    /// the serving fan-out (`MicroBatcher::flush`) uses the `_into` form
+    /// with a batcher-owned [`SnapshotBatch`] so the steady state is
+    /// allocation-free. Missing tenants are simply absent.
     pub fn snapshot_many(
         &self,
         tenants: impl IntoIterator<Item = TenantId>,
     ) -> HashMap<TenantId, Arc<AdapterSnapshot>> {
+        let mut batch = SnapshotBatch::new();
+        self.snapshot_many_into(tenants, &mut batch);
+        batch.map
+    }
+
+    /// [`AdapterRegistry::snapshot_many`] into caller-owned scratch:
+    /// after the first call with a given tenant-set size, subsequent
+    /// calls allocate nothing (the shard-grouping vectors and the result
+    /// map keep their capacity; `Arc` clones never allocate).
+    pub fn snapshot_many_into(
+        &self,
+        tenants: impl IntoIterator<Item = TenantId>,
+        batch: &mut SnapshotBatch,
+    ) {
+        batch.map.clear();
         // group by shard first, then lock each touched shard exactly once
-        let mut by_shard: Vec<Vec<TenantId>> = vec![Vec::new(); self.shards.len()];
-        for t in tenants {
-            by_shard[self.shard_of(t)].push(t);
+        if batch.by_shard.len() != self.shards.len() {
+            batch.by_shard.resize_with(self.shards.len(), Vec::new);
         }
-        let mut out = HashMap::new();
-        for (shard, wanted) in self.shards.iter().zip(&by_shard) {
+        for v in batch.by_shard.iter_mut() {
+            v.clear();
+        }
+        for t in tenants {
+            batch.by_shard[self.shard_of(t)].push(t);
+        }
+        for (shard, wanted) in self.shards.iter().zip(&batch.by_shard) {
             if wanted.is_empty() {
                 continue;
             }
@@ -292,11 +346,10 @@ impl AdapterRegistry {
             let map = shard.map.read().expect("registry shard poisoned");
             for &t in wanted {
                 if let Some(snap) = map.get(&t) {
-                    out.entry(t).or_insert_with(|| Arc::clone(snap));
+                    batch.map.entry(t).or_insert_with(|| Arc::clone(snap));
                 }
             }
         }
-        out
     }
 
     /// Latest published version for `tenant` (0 = never published).
@@ -486,6 +539,33 @@ mod tests {
         for (t, snap) in &snaps {
             assert_eq!(snap.tenant, *t);
         }
+    }
+
+    #[test]
+    fn snapshot_many_into_reuses_scratch_and_matches_the_allocating_form() {
+        let reg = AdapterRegistry::with_shards(4);
+        let mut rng = Rng::new(12);
+        for t in 0..24u64 {
+            reg.publish(t, adapters(&mut rng));
+        }
+        let want = reg.snapshot_many((0..30u64).chain([3, 3]));
+        let mut batch = SnapshotBatch::new();
+        reg.snapshot_many_into((0..30u64).chain([3, 3]), &mut batch);
+        assert_eq!(batch.len(), want.len());
+        for (t, snap) in &want {
+            let got = batch.get(*t).expect("tenant resolved");
+            assert!(Arc::ptr_eq(got, snap), "same published Arc");
+        }
+        assert!(batch.get(999).is_none());
+        // a repeat call with the same shape reuses both the map and the
+        // shard-grouping vectors (capacities already sufficient)
+        reg.snapshot_many_into((0..30u64).chain([3, 3]), &mut batch);
+        assert_eq!(batch.len(), 24);
+        // publish-version visibility: a new publish shows on the NEXT call
+        let v = reg.publish(3, adapters(&mut rng));
+        reg.snapshot_many_into([3u64], &mut batch);
+        assert_eq!(batch.get(3).unwrap().version, v);
+        assert_eq!(batch.len(), 1, "stale entries cleared per call");
     }
 
     #[test]

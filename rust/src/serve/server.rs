@@ -50,7 +50,7 @@ use crate::method::Method;
 use crate::model::mlp::AdapterTopology;
 use crate::model::{AdapterSet, Mlp};
 use crate::nn::lora::LoraAdapter;
-use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, QueueFull, MAX_RANK};
+use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, SubmitError, MAX_RANK};
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::persist::RegistryCheckpoint;
 use crate::serve::registry::{AdapterRegistry, TenantId};
@@ -131,7 +131,9 @@ impl Default for ServeConfig {
             rate_limit: None,
             idle_ttl_pumps: None,
             registry_shards: crate::serve::registry::DEFAULT_SHARDS,
-            backend: Backend::Blocked,
+            // Packed: the frozen backbone's panels are packed once per
+            // serving context and reused by every flush
+            backend: Backend::default(),
             window: 30,
             accuracy_threshold: 0.75,
             buffer_target: 60,
@@ -607,10 +609,15 @@ impl FleetServer {
                 self.next_ticket = id;
                 Ok(id)
             }
-            Err(QueueFull { bound }) => {
+            Err(SubmitError::QueueFull { bound }) => {
                 self.metrics.queue_rejections += 1;
                 Err(RejectReason::QueueFull { bound })
             }
+            // unreachable through `handle` (it width-checks first), but a
+            // batcher-level rejection must still map to a typed response
+            Err(SubmitError::WidthMismatch { expected, got }) => Err(RejectReason::Malformed(
+                format!("expected {expected} features, got {got}"),
+            )),
         }
     }
 
@@ -649,7 +656,11 @@ impl FleetServer {
                 adapter_version: resp.adapter_version,
             });
             if let Some(label) = resp.label {
-                self.apply_feedback(resp.tenant, resp.x, label, correct.unwrap());
+                // feedback responses carry the request features back by
+                // move (the only path that needs them — predicts don't
+                // pay the echo)
+                let x = resp.x.expect("feedback response echoes x");
+                self.apply_feedback(resp.tenant, x, label, correct.unwrap());
             }
         }
         out
@@ -1101,7 +1112,7 @@ mod tests {
             other => panic!("expected rejection, got {other:?}"),
         }
         // oversized rank must be rejected up front, not panic the
-        // serving loop later (apply_skip_adapters_row's MAX_RANK assert)
+        // serving loop later (the grouped fan-out's MAX_RANK assert)
         let huge_rank: Vec<LoraAdapter> = [8usize, 12, 12]
             .iter()
             .map(|&n_in| LoraAdapter::new(&mut rng, n_in, MAX_RANK + 1, 3))

@@ -72,6 +72,22 @@ impl Mat {
         self.data.iter_mut().for_each(|x| *x = v);
     }
 
+    /// Reinterpret this matrix's allocation as a smaller logical view
+    /// (`rows` × `cols` must fit the existing buffer) WITHOUT touching
+    /// the allocation — how capacity-sized serving scratch (sub-batch
+    /// gathers, rank workspaces) is resized per flush with zero
+    /// allocations. Contents of the logical region are left as-is;
+    /// anything beyond it becomes unreachable until the next reshape.
+    pub fn set_logical(&mut self, rows: usize, cols: usize) {
+        assert!(
+            rows * cols <= self.data.len(),
+            "logical view {rows}x{cols} exceeds buffer of {} floats",
+            self.data.len()
+        );
+        self.rows = rows;
+        self.cols = cols;
+    }
+
     /// Transposed copy (cold path only; hot paths use the fused
     /// `matmul_at_b` / `matmul_a_bt` kernels instead of materializing
     /// transposes).
@@ -125,5 +141,24 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn set_logical_reshapes_without_reallocating() {
+        let mut m = Mat::zeros(8, 4);
+        let ptr = m.data.as_ptr();
+        m.set_logical(3, 4);
+        assert_eq!(m.shape(), (3, 4));
+        m.row_mut(2).fill(1.0);
+        m.set_logical(2, 6); // different cols, same buffer
+        assert_eq!(m.shape(), (2, 6));
+        m.set_logical(8, 4);
+        assert_eq!(m.data.as_ptr(), ptr, "reshape must never reallocate");
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_logical_rejects_overflowing_views() {
+        Mat::zeros(2, 2).set_logical(3, 2);
     }
 }

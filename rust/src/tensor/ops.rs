@@ -7,25 +7,53 @@
 //! * `matmul_a_bt`   : C = A·Bᵀ       — Eq. 4 (gx = gy·Wᵀ), Eq. 11, 13
 //!
 //! Each has a `_naive` scalar form (Algorithm 2's triple loop — the paper's
-//! non-SIMD baseline) and a blocked/unrolled form the compiler vectorizes
+//! non-SIMD baseline), a blocked/unrolled form, and (for the GEMM-shaped
+//! variants) a packed-panel register-tiled form the compiler vectorizes
 //! (the `-mfpu=neon` stand-in). `Backend` selects between them at runtime,
 //! mirroring the paper's with/without-Neon measurements.
+//!
+//! ## The packed family (DESIGN.md §10)
+//!
+//! [`PackedB`] stores the RHS in [`NR`]-wide column panels laid out
+//! k-major, so the micro-kernel streams one contiguous `NR`-float line
+//! per k step and accumulates an `MR×NR` register tile — full-width FMAs
+//! from the stable-Rust autovectorizer, no intrinsics. Packing is a pure
+//! layout transform, so it can be done ONCE for weights that never change
+//! (the frozen serving backbone caches its packed panels in
+//! [`FcCtx`](crate::nn::ctx::FcCtx)); one-shot calls go through a
+//! thread-local scratch panel buffer instead of allocating.
+//!
+//! Every packed/tiled kernel accumulates each output element one product
+//! at a time in ascending-k order — the exact order of the `_naive`
+//! oracles — so `Packed` results are **bit-identical** to `Scalar`
+//! (property-tested in `tests/kernel_equiv.rs`), which is what lets the
+//! serving fan-out regroup rows freely without moving a single ulp.
+
+use std::cell::RefCell;
 
 use super::Mat;
 
 /// Kernel selection: `Scalar` = Algorithm 2 verbatim; `Blocked` =
-/// register-tiled + unrolled (auto-vectorized) hot path.
+/// unrolled axpy loops (auto-vectorized); `Packed` (default) = packed
+/// panels + `MR`×`NR` register tiles, falling back to `Blocked` on
+/// shapes too small to tile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
     Scalar,
     Blocked,
+    Packed,
 }
 
 impl Default for Backend {
     fn default() -> Self {
-        Backend::Blocked
+        Backend::Packed
     }
 }
+
+/// Register-tile height (rows of A per micro-kernel step).
+pub const MR: usize = 4;
+/// Register-tile width == packed panel width (columns of B per panel).
+pub const NR: usize = 8;
 
 // ---------------------------------------------------------------------------
 // C = A (R x K) · B (K x C) [+ bias]
@@ -85,10 +113,226 @@ pub fn matmul_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// packed-panel register-tiled GEMM
+// ---------------------------------------------------------------------------
+
+/// The RHS of a GEMM repacked into cache-friendly column panels: panel
+/// `p` holds columns `[p*NR, min((p+1)*NR, n))` laid out k-major, so
+/// element `(k, lane)` of panel `p` lives at `p*k*NR + k_idx*NR + lane`.
+/// Tail lanes of a ragged last panel are zero-padded (the micro-kernel
+/// computes them and the store step discards them).
+///
+/// Packing is a pure function of the matrix contents, so frozen weights
+/// pack ONCE per version ([`FcCtx::packed_for`](crate::nn::ctx::FcCtx))
+/// and every micro-batch flush reuses the panels; `pack` reuses the
+/// existing allocation, so a long-lived `PackedB` is allocation-free in
+/// steady state.
+#[derive(Clone, Debug, Default)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    panels: Vec<f32>,
+}
+
+impl PackedB {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Logical shape of the packed matrix (k rows × n cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// Heap floats held (panel storage incl. zero-padding).
+    pub fn heap_floats(&self) -> usize {
+        self.panels.len()
+    }
+
+    fn reset(&mut self, k: usize, n: usize) {
+        self.k = k;
+        self.n = n;
+        let len = n.div_ceil(NR) * k * NR;
+        self.panels.clear();
+        self.panels.resize(len, 0.0); // pad lanes must read as zero
+    }
+
+    /// Pack `b` (k × n) into NR-wide column panels.
+    pub fn pack(&mut self, b: &Mat) {
+        self.reset(b.rows, b.cols);
+        let (k, n) = (self.k, self.n);
+        for p in 0..n.div_ceil(NR) {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &mut self.panels[p * k * NR..(p + 1) * k * NR];
+            for (ki, line) in panel.chunks_exact_mut(NR).enumerate() {
+                line[..w].copy_from_slice(&b.data[ki * n + j0..ki * n + j0 + w]);
+            }
+        }
+    }
+
+    /// Pack `bᵀ` — i.e. treat `b` (n × k, row-major) as the k × n RHS.
+    /// Lane `l` of panel `p` is row `p*NR + l` of `b`, which turns the
+    /// row-dot-row `A·Bᵀ` into the same streaming micro-kernel as plain
+    /// `A·B` (the transpose is paid once, at pack time).
+    pub fn pack_transposed(&mut self, b: &Mat) {
+        self.reset(b.cols, b.rows);
+        let (k, n) = (self.k, self.n);
+        for p in 0..n.div_ceil(NR) {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &mut self.panels[p * k * NR..(p + 1) * k * NR];
+            for l in 0..w {
+                let brow = b.row(j0 + l);
+                for ki in 0..k {
+                    panel[ki * NR + l] = brow[ki];
+                }
+            }
+        }
+    }
+}
+
+/// `out = a · b` where `b` was packed by [`PackedB::pack`] (or is `bᵀ`
+/// packed by [`PackedB::pack_transposed`]). The micro-kernel holds an
+/// `MR×NR` f32 accumulator tile in registers and, per k step, broadcasts
+/// `MR` A-values against one contiguous `NR`-float panel line — the loop
+/// shape the stable-Rust autovectorizer turns into full-width FMAs.
+///
+/// Accumulation order per output element is ascending-k, one product at
+/// a time (both the `MR`-row body and the 1-row tail), so the result is
+/// bit-identical to `matmul_naive`.
+pub fn matmul_packed_into(a: &Mat, pb: &PackedB, out: &mut Mat) {
+    let (k, n) = pb.shape();
+    assert_eq!(a.cols, k, "packed panel k mismatch");
+    assert_eq!((out.rows, out.cols), (a.rows, n));
+    let np = n.div_ceil(NR);
+    let mut i = 0;
+    while i + MR <= a.rows {
+        let a0 = a.row(i);
+        let a1 = a.row(i + 1);
+        let a2 = a.row(i + 2);
+        let a3 = a.row(i + 3);
+        for p in 0..np {
+            let panel = &pb.panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            // zip chain: bounds-check elision + vectorization, and the
+            // per-element sum order stays ascending-k / one-at-a-time
+            for ((((line, &v0), &v1), &v2), &v3) in
+                panel.chunks_exact(NR).zip(a0).zip(a1).zip(a2).zip(a3)
+            {
+                for l in 0..NR {
+                    acc[0][l] += v0 * line[l];
+                    acc[1][l] += v1 * line[l];
+                    acc[2][l] += v2 * line[l];
+                    acc[3][l] += v3 * line[l];
+                }
+            }
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            for (m, accrow) in acc.iter().enumerate() {
+                out.data[(i + m) * n + j0..(i + m) * n + j0 + w]
+                    .copy_from_slice(&accrow[..w]);
+            }
+        }
+        i += MR;
+    }
+    while i < a.rows {
+        let arow = a.row(i);
+        for p in 0..np {
+            let panel = &pb.panels[p * k * NR..(p + 1) * k * NR];
+            let mut acc = [0.0f32; NR];
+            for (line, &v) in panel.chunks_exact(NR).zip(arow) {
+                for l in 0..NR {
+                    acc[l] += v * line[l];
+                }
+            }
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            out.data[i * n + j0..i * n + j0 + w].copy_from_slice(&acc[..w]);
+        }
+        i += 1;
+    }
+}
+
+thread_local! {
+    /// One-shot packed calls reuse this scratch panel buffer, so even
+    /// call sites without a long-lived cache (training loops dispatching
+    /// through `Backend::Packed`) stay allocation-free once warm.
+    static PACK_SCRATCH: RefCell<PackedB> = RefCell::new(PackedB::new());
+}
+
+/// `out = a·b`, packing `b` on the fly into the thread-local scratch.
+/// Prefer [`matmul_packed_into`] with a cached [`PackedB`] when `b` is
+/// reused across calls (frozen weights).
+pub fn matmul_packed(a: &Mat, b: &Mat, out: &mut Mat) {
+    PACK_SCRATCH.with(|s| {
+        let mut pb = s.borrow_mut();
+        pb.pack(b);
+        matmul_packed_into(a, &pb, out);
+    });
+}
+
 pub fn matmul(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
     match backend {
         Backend::Scalar => matmul_naive(a, b, out),
         Backend::Blocked => matmul_blocked(a, b, out),
+        // panels narrower than one tile can't amortize the pack pass
+        Backend::Packed if b.cols < NR => matmul_blocked(a, b, out),
+        Backend::Packed => matmul_packed(a, b, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// out += A·B (accumulating GEMM — the serving fan-out's adapter pair)
+// ---------------------------------------------------------------------------
+
+/// `out += a·b`, scalar form. Ascending-k, one product at a time per
+/// output element — the accumulation order every variant preserves.
+pub fn matmul_acc_naive(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for m in 0..n {
+            let mut acc = out.data[i * n + m];
+            for (ki, &av) in arow.iter().enumerate() {
+                acc += av * b.data[ki * n + m];
+            }
+            out.data[i * n + m] = acc;
+        }
+    }
+}
+
+/// `out += a·b`, vectorized axpy form. Identical per-element op order to
+/// `matmul_acc_naive` (k ascending, one product per step), so the two
+/// are bit-identical — the j-vectorization only parallelizes across
+/// independent output elements. Used for the rank-r adapter GEMMs where
+/// `k` is tiny and an `MR×NR` tile would be all padding.
+pub fn matmul_acc_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (ki, &av) in arow.iter().enumerate() {
+            let brow = &b.data[ki * n..(ki + 1) * n];
+            for (o, &v) in orow.iter_mut().zip(brow) {
+                *o += av * v;
+            }
+        }
+    }
+}
+
+/// `out += a·b` — every backend keeps the naive accumulation order (see
+/// `matmul_acc_blocked`), which is what makes the tenant-grouped serving
+/// fan-out bit-identical to the per-row reference.
+pub fn matmul_acc(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
+    match backend {
+        Backend::Scalar => matmul_acc_naive(a, b, out),
+        Backend::Blocked | Backend::Packed => matmul_acc_blocked(a, b, out),
     }
 }
 
@@ -116,35 +360,48 @@ pub fn matmul_at_b_naive(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
-/// Blocked Aᵀ·B: accumulate rank-1 updates row-by-row of A/B; inner loop
-/// contiguous over B's columns.
-pub fn matmul_at_b_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
+/// Sample size for `probe_is_sparse`: ≥ 1/4 zeros in a strided
+/// 64-element sample routes `matmul_at_b` to the skip-zero form.
+const DENSITY_PROBE_SAMPLES: usize = 64;
+
+/// Cheap strided density probe over `a`'s elements. The branchy
+/// skip-zero Aᵀ·B loop wins on post-ReLU activations (~50% exact zeros)
+/// but every `an == 0.0` test on DENSE data is a data-dependent branch
+/// the predictor loses on — so the probe, not the call site, decides.
+/// O(64) reads per call vs O(rows·n·m) kernel work.
+fn probe_is_sparse(a: &Mat) -> bool {
+    let len = a.data.len();
+    if len == 0 {
+        return false;
+    }
+    let sample = DENSITY_PROBE_SAMPLES.min(len);
+    let stride = (len / sample).max(1);
+    let mut zeros = 0usize;
+    let mut seen = 0usize;
+    let mut i = 0usize;
+    while i < len && seen < sample {
+        zeros += (a.data[i] == 0.0) as usize;
+        seen += 1;
+        i += stride;
+    }
+    zeros * 4 >= seen
+}
+
+/// Skip-zero Aᵀ·B: rank-1 updates row-by-row, branching past zero
+/// A-entries. The right kernel for post-ReLU activations (Eq. 2's
+/// `gW = xᵀ·gy` where x is ~50% exact zeros) and a mispredict farm on
+/// dense inputs — use `matmul_at_b` and let the density probe route.
+pub fn matmul_at_b_sparse(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.rows, b.rows);
     assert_eq!((out.rows, out.cols), (a.cols, b.cols));
     let m = b.cols;
     out.data.iter_mut().for_each(|x| *x = 0.0);
-    if m <= 8 {
-        // rank-sized RHS (LoRA gW_A = xᵀ·gx_B): branchless — the m-wide
-        // update is cheaper than a data-dependent branch, and the whole
-        // (n, m) row pair is contiguous, so this vectorizes as
-        // out[n*m..][j] += a[i][n] * b[i][j].
-        for i in 0..a.rows {
-            let arow = a.row(i);
-            let brow = b.row(i);
-            for (ochunk, &an) in out.data.chunks_exact_mut(m).zip(arow) {
-                for (o, &v) in ochunk.iter_mut().zip(brow) {
-                    *o += an * v;
-                }
-            }
-        }
-        return;
-    }
     for i in 0..a.rows {
         let arow = a.row(i);
         let brow = b.row(i);
         for (n, &an) in arow.iter().enumerate() {
             if an == 0.0 {
-                continue; // post-ReLU activations are ~50% zero
+                continue;
             }
             let orow = &mut out.data[n * m..(n + 1) * m];
             for (o, &v) in orow.iter_mut().zip(brow) {
@@ -154,10 +411,84 @@ pub fn matmul_at_b_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
+/// Dense register-tiled Aᵀ·B: 4 output rows per pass over each B row, so
+/// `brow` is read once per 4 rank-1 updates and there is no
+/// data-dependent branching. Per-element accumulation stays ascending-i
+/// one-at-a-time — bit-identical to `matmul_at_b_naive`.
+pub fn matmul_at_b_tiled(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
+    let (nn, m) = (a.cols, b.cols);
+    out.data.iter_mut().for_each(|x| *x = 0.0);
+    let mut n0 = 0;
+    while n0 + 4 <= nn {
+        let block = &mut out.data[n0 * m..(n0 + 4) * m];
+        let (r0, rest) = block.split_at_mut(m);
+        let (r1, rest) = rest.split_at_mut(m);
+        let (r2, r3) = rest.split_at_mut(m);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let (v0, v1, v2, v3) = (arow[n0], arow[n0 + 1], arow[n0 + 2], arow[n0 + 3]);
+            let brow = b.row(i);
+            for ((((o0, o1), o2), o3), &v) in
+                r0.iter_mut().zip(r1.iter_mut()).zip(r2.iter_mut()).zip(r3.iter_mut()).zip(brow)
+            {
+                *o0 += v0 * v;
+                *o1 += v1 * v;
+                *o2 += v2 * v;
+                *o3 += v3 * v;
+            }
+        }
+        n0 += 4;
+    }
+    while n0 < nn {
+        let orow = &mut out.data[n0 * m..(n0 + 1) * m];
+        for i in 0..a.rows {
+            let an = a.data[i * nn + n0];
+            let brow = b.row(i);
+            for (o, &v) in orow.iter_mut().zip(brow) {
+                *o += an * v;
+            }
+        }
+        n0 += 1;
+    }
+}
+
+/// Blocked/packed Aᵀ·B: a rank-sized RHS takes the contiguous branchless
+/// small-m path; otherwise the density probe picks the skip-zero form
+/// (post-ReLU activation gradients) or the dense 4-row tile.
+pub fn matmul_at_b_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols));
+    let m = b.cols;
+    if m <= 8 {
+        // rank-sized RHS (LoRA gW_A = xᵀ·gx_B): branchless — the m-wide
+        // update is cheaper than a data-dependent branch, and the whole
+        // (n, m) row pair is contiguous, so this vectorizes as
+        // out[n*m..][j] += a[i][n] * b[i][j].
+        out.data.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let brow = b.row(i);
+            for (ochunk, &an) in out.data.chunks_exact_mut(m).zip(arow) {
+                for (o, &v) in ochunk.iter_mut().zip(brow) {
+                    *o += an * v;
+                }
+            }
+        }
+    } else if probe_is_sparse(a) {
+        matmul_at_b_sparse(a, b, out);
+    } else {
+        matmul_at_b_tiled(a, b, out);
+    }
+}
+
 pub fn matmul_at_b(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
     match backend {
         Backend::Scalar => matmul_at_b_naive(a, b, out),
-        Backend::Blocked => matmul_at_b_blocked(a, b, out),
+        // Aᵀ·B reads both operands row-contiguously already, so there is
+        // no packing to cache — Packed and Blocked share the tiled form
+        Backend::Blocked | Backend::Packed => matmul_at_b_blocked(a, b, out),
     }
 }
 
@@ -245,10 +576,26 @@ pub fn matmul_a_bt_blocked(a: &Mat, b: &Mat, out: &mut Mat) {
     }
 }
 
+/// Packed A·Bᵀ: pack `bᵀ` into panels (paying the transpose once, at
+/// pack time) and run the same `MR`×`NR` micro-kernel as plain GEMM —
+/// bit-identical to `matmul_a_bt_naive`. For the frozen-weight hot path
+/// (`gx = gy·Wᵀ`), prefer a cached
+/// [`FcCtx::packed_wt_for`](crate::nn::ctx::FcCtx) + [`matmul_packed_into`].
+pub fn matmul_a_bt_packed(a: &Mat, b: &Mat, out: &mut Mat) {
+    PACK_SCRATCH.with(|s| {
+        let mut pb = s.borrow_mut();
+        pb.pack_transposed(b);
+        matmul_packed_into(a, &pb, out);
+    });
+}
+
 pub fn matmul_a_bt(backend: Backend, a: &Mat, b: &Mat, out: &mut Mat) {
     match backend {
         Backend::Scalar => matmul_a_bt_naive(a, b, out),
         Backend::Blocked => matmul_a_bt_blocked(a, b, out),
+        // fewer B rows than one tile width can't amortize the pack pass
+        Backend::Packed if b.rows < NR => matmul_a_bt_blocked(a, b, out),
+        Backend::Packed => matmul_a_bt_packed(a, b, out),
     }
 }
 
@@ -448,5 +795,147 @@ mod tests {
         let mut p = vec![1.0, 2.0];
         sgd_step(&mut p, &[0.5, -0.5], 0.1);
         assert_eq!(p, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn packed_matmul_is_bit_identical_to_naive() {
+        // the packed micro-kernel keeps the naive ascending-k one-product
+        // accumulation order per element, so equality is EXACT — this is
+        // the contract the serving fan-out's regrouping relies on
+        let mut rng = Rng::new(20);
+        for &(r, k, c) in &[
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),      // exactly one MR×NR tile
+            (5, 9, 11),     // every tail path at once
+            (3, 5, 7),
+            (20, 256, 96),  // paper FC1
+            (32, 96, 96),   // fleet FC2
+            (20, 96, 3),    // ragged last panel narrower than NR
+            (7, 13, 17),
+        ] {
+            let a = rand_mat(&mut rng, r, k);
+            let b = rand_mat(&mut rng, k, c);
+            let mut want = Mat::zeros(r, c);
+            matmul_naive(&a, &b, &mut want);
+            let mut pb = PackedB::new();
+            pb.pack(&b);
+            let mut got = Mat::zeros(r, c);
+            matmul_packed_into(&a, &pb, &mut got);
+            assert_eq!(want.data, got.data, "packed != naive at {r}x{k}x{c}");
+            let mut via_dispatch = Mat::zeros(r, c);
+            matmul(Backend::Packed, &a, &b, &mut via_dispatch);
+            assert_close(&want, &via_dispatch, 1e-6); // may route to blocked on tiny c
+        }
+    }
+
+    #[test]
+    fn packed_handles_degenerate_shapes() {
+        let mut pb = PackedB::new();
+        for &(r, k, c) in &[(0usize, 5usize, 7usize), (3, 0, 7), (3, 5, 0), (0, 0, 0)] {
+            let a = Mat::zeros(r, k);
+            let b = Mat::zeros(k, c);
+            pb.pack(&b);
+            let mut out = Mat::zeros(r, c);
+            matmul_packed_into(&a, &pb, &mut out); // must not panic
+            assert!(out.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn packed_reuses_its_allocation() {
+        let mut rng = Rng::new(21);
+        let big = rand_mat(&mut rng, 64, 32);
+        let small = rand_mat(&mut rng, 8, 8);
+        let mut pb = PackedB::new();
+        pb.pack(&big);
+        let cap = pb.panels.capacity();
+        pb.pack(&small);
+        pb.pack(&big);
+        assert_eq!(pb.panels.capacity(), cap, "repack must not reallocate");
+    }
+
+    #[test]
+    fn a_bt_packed_is_bit_identical_to_naive() {
+        let mut rng = Rng::new(22);
+        for &(bsz, m, n) in &[(1usize, 1usize, 8usize), (20, 3, 256), (20, 96, 96), (6, 11, 9)] {
+            let a = rand_mat(&mut rng, bsz, m);
+            let b = rand_mat(&mut rng, n, m);
+            let mut want = Mat::zeros(bsz, n);
+            matmul_a_bt_naive(&a, &b, &mut want);
+            let mut got = Mat::zeros(bsz, n);
+            matmul_a_bt_packed(&a, &b, &mut got);
+            assert_eq!(want.data, got.data, "a_bt packed != naive at {bsz}x{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn at_b_tiled_and_sparse_match_naive() {
+        let mut rng = Rng::new(23);
+        for &(bsz, n, m) in &[(20usize, 256usize, 96usize), (5, 6, 9), (20, 96, 96), (3, 4, 12)] {
+            let dense = rand_mat(&mut rng, bsz, n);
+            let mut sparse = rand_mat(&mut rng, bsz, n);
+            for v in sparse.data.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0; // post-ReLU shape: ~50% exact zeros
+                }
+            }
+            let b = rand_mat(&mut rng, bsz, m);
+            for a in [&dense, &sparse] {
+                let mut want = Mat::zeros(n, m);
+                matmul_at_b_naive(a, &b, &mut want);
+                let mut tiled = Mat::zeros(n, m);
+                matmul_at_b_tiled(a, &b, &mut tiled);
+                assert_eq!(want.data, tiled.data, "tiled != naive (ascending-i order)");
+                let mut sp = Mat::zeros(n, m);
+                matmul_at_b_sparse(a, &b, &mut sp);
+                assert_close(&want, &sp, 1e-6);
+                let mut routed = Mat::zeros(n, m);
+                matmul_at_b(Backend::Packed, a, &b, &mut routed);
+                assert_close(&want, &routed, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn density_probe_routes_by_zero_fraction() {
+        let mut rng = Rng::new(24);
+        let dense = rand_mat(&mut rng, 20, 96);
+        assert!(!probe_is_sparse(&dense));
+        let mut sparse = rand_mat(&mut rng, 20, 96);
+        for v in sparse.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        assert!(probe_is_sparse(&sparse));
+        assert!(!probe_is_sparse(&Mat::zeros(0, 0)), "empty mat must not probe sparse");
+    }
+
+    #[test]
+    fn matmul_acc_accumulates_in_naive_order() {
+        let mut rng = Rng::new(25);
+        for &(r, k, c) in &[(1usize, 1usize, 1usize), (4, 2, 3), (8, 4, 6), (5, 32, 3)] {
+            let a = rand_mat(&mut rng, r, k);
+            let b = rand_mat(&mut rng, k, c);
+            let init = rand_mat(&mut rng, r, c);
+            let mut want = init.clone();
+            matmul_acc_naive(&a, &b, &mut want);
+            for backend in [Backend::Scalar, Backend::Blocked, Backend::Packed] {
+                let mut got = init.clone();
+                matmul_acc(backend, &a, &b, &mut got);
+                assert_eq!(want.data, got.data, "acc order drifted on {backend:?}");
+            }
+            // and it really accumulates: acc(init) - init == plain matmul
+            let mut plain = Mat::zeros(r, c);
+            matmul_naive(&a, &b, &mut plain);
+            for ((w, i0), p) in want.data.iter().zip(&init.data).zip(&plain.data) {
+                assert!((w - i0 - p).abs() <= 1e-5 * (1.0 + p.abs()), "{w} vs {} + {p}", i0);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_default_backend() {
+        assert_eq!(Backend::default(), Backend::Packed);
     }
 }

@@ -1,0 +1,71 @@
+//! Counting allocator — the proof instrument behind the zero-alloc
+//! serving claim (no `dhat`/`stats_alloc` crate offline).
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! allocation event (alloc / alloc_zeroed / realloc; deallocs are free
+//! and deliberately NOT counted — returning memory is not a hot-path
+//! sin). It is NOT installed globally by the library: a test binary that
+//! wants to assert allocation behavior opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: skip2lora::testkit::CountingAlloc = skip2lora::testkit::CountingAlloc;
+//! ```
+//!
+//! and measures deltas around the code under test (see
+//! `tests/zero_alloc.rs`, which proves `MicroBatcher::flush` performs
+//! zero allocations after warm-up). The counter is process-global and
+//! relaxed-atomic; tests that need an exact delta must not run
+//! concurrently with other allocating tests in the same binary.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Allocation events since process start (only meaningful in a binary
+/// that installed [`CountingAlloc`] as its `#[global_allocator]`).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// A `GlobalAlloc` that counts allocation events and forwards to the
+/// system allocator. See the module docs for the opt-in pattern.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // growth in place still hits the allocator's slow path — count it
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_monotone_and_readable() {
+        // this binary does NOT install the counting allocator, so the
+        // counter just reads as a stable value here; the behavioral
+        // assertions live in tests/zero_alloc.rs where it IS installed
+        let a = allocations();
+        let b = allocations();
+        assert!(b >= a);
+    }
+}

@@ -1,9 +1,13 @@
 //! Property-based testing substrate (no `proptest` crate offline),
-//! seeded multi-thread stress driver (no `loom`/`shuttle`), plus
+//! seeded multi-thread stress driver (no `loom`/`shuttle`), a counting
+//! allocator for zero-alloc proofs (no `stats_alloc`), plus
 //! compile-time marker-trait assertions (no `static_assertions` crate).
 
+pub mod alloc_counter;
 pub mod prop;
 pub mod stress;
+
+pub use alloc_counter::CountingAlloc;
 
 /// Compile-time assertion that `T: Send + Sync` — monomorphizing this
 /// function IS the check, so a regression (e.g. someone re-introducing a

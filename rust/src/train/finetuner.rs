@@ -322,7 +322,12 @@ impl FineTuner {
     /// Mirrors `Mlp::forward_frozen` (the serving path) layer by layer —
     /// this copy exists only to attribute per-layer timings to the
     /// Table 2 phase buckets and to allocate per-miss-batch outputs;
-    /// keep the two in lockstep (including the no-BN fallback).
+    /// keep the two in lockstep (including the no-BN fallback). One
+    /// deliberate divergence: `forward_frozen` packs frozen weights into
+    /// its context's panel cache (`FcLayer::forward_cached`) while this
+    /// alloc path uses the plain `forward` (thread-local pack scratch) —
+    /// the packed kernel is bit-identical either way, only the panels'
+    /// home differs.
     fn frozen_forward_alloc(&self, x_in: &Mat, timer: &mut PhaseTimer) -> (Vec<Mat>, Mat) {
         let n = self.n_layers();
         let dims = &self.model.config.dims;

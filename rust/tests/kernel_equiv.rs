@@ -1,0 +1,284 @@
+//! Kernel-equivalence property tests: the packed/tiled kernel family vs
+//! the naive oracles over randomized and degenerate shapes, plus the
+//! serving tentpole invariant — the tenant-grouped fan-out is
+//! BIT-IDENTICAL to the per-row reference under a seeded multi-tenant
+//! flush.
+//!
+//! The strong form of the contract: every packed/tiled kernel preserves
+//! the naive per-element accumulation order (ascending k, one product at
+//! a time), so equality below is `assert_eq!` on the raw f32 bits, not a
+//! tolerance — which is exactly what lets `MicroBatcher::flush` regroup
+//! rows by tenant without changing a single served logit.
+
+use std::sync::Arc;
+
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::tensor::ops::{self, Backend, PackedB, NR};
+use skip2lora::tensor::Mat;
+use skip2lora::testkit::prop::{check, gen, PropConfig};
+use skip2lora::util::rng::Rng;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Shapes that stress every tile boundary: empty dims, single elements,
+/// exact multiples of MR/NR, off-by-one around them, and the
+/// capacity-padded serve shapes (rows ≥ the real batch).
+fn adversarial_dims(rng: &mut Rng) -> (usize, usize, usize) {
+    let pick = |rng: &mut Rng| -> usize {
+        match gen::usize_in(rng, 0, 6) {
+            0 => 0,
+            1 => 1,
+            2 => gen::usize_in(rng, 2, 5),       // below one tile
+            3 => gen::usize_in(rng, 7, 10),      // around NR
+            4 => 8 * gen::usize_in(rng, 1, 4),   // exact tile multiples
+            _ => gen::usize_in(rng, 11, 40),     // past one tile, ragged
+        }
+    };
+    (pick(rng), pick(rng), pick(rng))
+}
+
+#[test]
+fn packed_matmul_matches_naive_bitwise_over_degenerate_shapes() {
+    check("packed == naive (bits)", PropConfig { cases: 200, ..Default::default() }, |rng| {
+        let (r, k, c) = adversarial_dims(rng);
+        let a = gen::mat(rng, r, k);
+        let b = gen::mat(rng, k, c);
+        let mut want = Mat::zeros(r, c);
+        ops::matmul_naive(&a, &b, &mut want);
+        let mut pb = PackedB::new();
+        pb.pack(&b);
+        let mut got = Mat::zeros(r, c);
+        ops::matmul_packed_into(&a, &pb, &mut got);
+        if bits(&want.data) != bits(&got.data) {
+            return Err(format!("packed != naive at {r}x{k}x{c}"));
+        }
+        // dispatch may legitimately route tiny shapes to blocked — that
+        // path only needs tolerance-level agreement
+        let mut routed = Mat::zeros(r, c);
+        ops::matmul(Backend::Packed, &a, &b, &mut routed);
+        for (w, g) in want.data.iter().zip(&routed.data) {
+            if (w - g).abs() > 1e-4 * (1.0 + w.abs()) {
+                return Err(format!("dispatch drifted at {r}x{k}x{c}: {w} vs {g}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_a_bt_and_tiled_at_b_match_naive_bitwise() {
+    check("aᵀb / abᵀ tiled == naive", PropConfig { cases: 150, ..Default::default() }, |rng| {
+        let (bsz, n, m) = adversarial_dims(rng);
+        // Aᵀ·B: mix dense and post-ReLU-sparse LHS (the probe's domain)
+        let a = if gen::usize_in(rng, 0, 2) == 0 {
+            gen::mat(rng, bsz, n)
+        } else {
+            gen::sparse_mat(rng, bsz, n, 0.5)
+        };
+        let b = gen::mat(rng, bsz, m);
+        let mut want = Mat::zeros(n, m);
+        ops::matmul_at_b_naive(&a, &b, &mut want);
+        let mut tiled = Mat::zeros(n, m);
+        ops::matmul_at_b_tiled(&a, &b, &mut tiled);
+        if bits(&want.data) != bits(&tiled.data) {
+            return Err(format!("at_b tiled != naive at {bsz}x{n}x{m}"));
+        }
+        // the skip-zero form changes only the order of SKIPPED zero
+        // terms — tolerance, since ±0 products are elided
+        let mut sparse = Mat::zeros(n, m);
+        ops::matmul_at_b_sparse(&a, &b, &mut sparse);
+        for (w, g) in want.data.iter().zip(&sparse.data) {
+            if (w - g).abs() > 1e-4 * (1.0 + w.abs()) {
+                return Err(format!("at_b sparse drifted: {w} vs {g}"));
+            }
+        }
+        // A·Bᵀ through pack_transposed
+        let x = gen::mat(rng, bsz, m);
+        let w2 = gen::mat(rng, n, m);
+        let mut want2 = Mat::zeros(bsz, n);
+        ops::matmul_a_bt_naive(&x, &w2, &mut want2);
+        let mut got2 = Mat::zeros(bsz, n);
+        ops::matmul_a_bt_packed(&x, &w2, &mut got2);
+        if bits(&want2.data) != bits(&got2.data) {
+            return Err(format!("a_bt packed != naive at {bsz}x{m}x{n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn matmul_acc_matches_naive_bitwise() {
+    check("matmul_acc == naive (bits)", PropConfig { cases: 100, ..Default::default() }, |rng| {
+        let (r, k, c) = adversarial_dims(rng);
+        let a = gen::mat(rng, r, k);
+        let b = gen::mat(rng, k, c);
+        let init = gen::mat(rng, r, c);
+        let mut want = init.clone();
+        ops::matmul_acc_naive(&a, &b, &mut want);
+        for backend in [Backend::Blocked, Backend::Packed] {
+            let mut got = init.clone();
+            ops::matmul_acc(backend, &a, &b, &mut got);
+            if bits(&want.data) != bits(&got.data) {
+                return Err(format!("acc {backend:?} != naive at {r}x{k}x{c}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn capacity_padded_serve_shapes_are_row_stable() {
+    // the serving contract behind partial flushes: a row's result must
+    // not depend on how many OTHER rows ride in the (capacity-padded)
+    // batch — checked at the kernel level across MR-block vs tail paths
+    let cfg = PropConfig { cases: 80, ..Default::default() };
+    check("row results are batch-size invariant", cfg, |rng| {
+        let k = gen::usize_in(rng, 1, 40);
+        let c = gen::usize_in(rng, NR, 40);
+        let rows = gen::usize_in(rng, 1, 12);
+        let b = gen::mat(rng, k, c);
+        let mut pb = PackedB::new();
+        pb.pack(&b);
+        let a = gen::mat(rng, rows, k);
+        let mut full = Mat::zeros(rows, c);
+        ops::matmul_packed_into(&a, &pb, &mut full);
+        for i in 0..rows {
+            let solo = Mat::from_vec(1, k, a.row(i).to_vec());
+            let mut out = Mat::zeros(1, c);
+            ops::matmul_packed_into(&solo, &pb, &mut out);
+            if bits(out.row(0)) != bits(full.row(i)) {
+                return Err(format!("row {i}/{rows} depends on its batch context"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the serving tentpole invariant
+// ---------------------------------------------------------------------------
+
+fn serve_cfg() -> MlpConfig {
+    MlpConfig { dims: vec![12, 16, 16, 4], rank: 3, batch_norm: true }
+}
+
+fn publish_fleet(rng: &mut Rng, registry: &AdapterRegistry, tenants: u64) {
+    let cfg = serve_cfg();
+    for t in 0..tenants {
+        let mut ads: Vec<LoraAdapter> = (0..3)
+            .map(|k| LoraAdapter::new(rng, cfg.dims[k], 3, 4))
+            .collect();
+        for ad in ads.iter_mut() {
+            for v in ad.wb.data.iter_mut() {
+                *v = 0.15 * rng.normal();
+            }
+        }
+        registry.publish(t, ads);
+    }
+}
+
+fn flush_logits(batcher: &MicroBatcher, out: &[BatchResponse]) -> Vec<(u64, Vec<u32>)> {
+    out.iter()
+        .map(|r| (r.id, bits(batcher.logits_for(r).expect("rows of the latest flush"))))
+        .collect()
+}
+
+#[test]
+fn grouped_fanout_is_bit_identical_to_per_row_reference_under_seeded_flushes() {
+    // the acceptance invariant: seeded multi-tenant traffic (mixed group
+    // sizes, unknown tenants, partial batches) served by the grouped
+    // zero-alloc flush is byte-identical to the per-row reference AND to
+    // one-request-at-a-time serving
+    let mut rng = Rng::new(0xF1E1D);
+    let backbone = Arc::new(Mlp::new(&mut rng, serve_cfg()));
+    let registry = Arc::new(AdapterRegistry::new());
+    publish_fleet(&mut rng, &registry, 6);
+
+    let capacity = 16usize;
+    let grouped_fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
+    let mut grouped = MicroBatcher::new(grouped_fb, Arc::clone(&registry));
+    let reference_fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
+    let mut reference = MicroBatcher::new(reference_fb, Arc::clone(&registry));
+    let solo_fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
+    let mut solo = MicroBatcher::new(solo_fb, Arc::clone(&registry));
+
+    for round in 0..12u64 {
+        // seeded traffic: batch sizes 1..=capacity, tenants 0..8 (6 and 7
+        // have nothing published → bare backbone rows inside the batch)
+        let b = 1 + (rng.next_u64() % capacity as u64) as usize;
+        let reqs: Vec<BatchRequest> = (0..b)
+            .map(|i| BatchRequest {
+                tenant: rng.next_u64() % 8,
+                id: round * 100 + i as u64,
+                x: (0..12).map(|_| rng.normal()).collect(),
+                label: (i % 3 == 0).then_some((i % 4).min(3)),
+            })
+            .collect();
+
+        let mut out_g = Vec::new();
+        for r in reqs.iter().cloned() {
+            grouped.submit(r);
+        }
+        assert_eq!(grouped.flush(&mut out_g), b);
+        let logits_g = flush_logits(&grouped, &out_g);
+
+        let mut out_r = Vec::new();
+        for r in reqs.iter().cloned() {
+            reference.submit(r);
+        }
+        assert_eq!(reference.flush_reference(&mut out_r), b);
+        let logits_r = flush_logits(&reference, &out_r);
+        assert_eq!(logits_g, logits_r, "round {round}: grouped != per-row reference");
+        for (g, r) in out_g.iter().zip(&out_r) {
+            assert_eq!(g.prediction, r.prediction);
+            assert_eq!(g.adapter_version, r.adapter_version);
+            assert_eq!(g.x, r.x, "x echo policy must match");
+        }
+
+        // and against one-at-a-time serving (regrouping must be invisible)
+        for (req, (id, want)) in reqs.iter().zip(&logits_g) {
+            let mut out_s = Vec::new();
+            solo.submit(req.clone());
+            assert_eq!(solo.flush(&mut out_s), 1);
+            assert_eq!(req.id, *id);
+            assert_eq!(
+                &bits(solo.logits_for(&out_s[0]).expect("just flushed")),
+                want,
+                "round {round}: solo serving of request {id} drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn grouped_fanout_handles_degenerate_adapter_shapes() {
+    // rank-0 adapters and 0-row groups must flow through the grouped
+    // GEMMs without panicking (k=0 / 0-row mats are legal kernel inputs)
+    let mut rng = Rng::new(77);
+    let cfg = serve_cfg();
+    let backbone = Arc::new(Mlp::new(&mut rng, cfg.clone()));
+    let registry = Arc::new(AdapterRegistry::new());
+    let ads: Vec<LoraAdapter> = (0..3)
+        .map(|k| LoraAdapter::new(&mut rng, cfg.dims[k], 0, 4)) // rank 0
+        .collect();
+    registry.publish(1, ads);
+    let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, 4);
+    let mut batcher = MicroBatcher::new(fb, registry);
+    let x: Vec<f32> = (0..12).map(|_| rng.normal()).collect();
+    batcher.submit(BatchRequest { tenant: 1, id: 0, x: x.clone(), label: None });
+    batcher.submit(BatchRequest { tenant: 2, id: 1, x, label: None });
+    let mut out = Vec::new();
+    assert_eq!(batcher.flush(&mut out), 2);
+    // rank-0 adapters are an exact no-op: both rows saw the bare backbone
+    assert_eq!(
+        bits(batcher.last_logits().row(out[0].row)),
+        bits(batcher.last_logits().row(out[1].row)),
+    );
+    assert!(out[0].adapter_version > 0);
+    assert_eq!(out[1].adapter_version, 0);
+}

@@ -398,7 +398,7 @@ fn batched_serving_matches_independent_per_tenant_models() {
             1,
         );
         let want = solo.predict_alloc(&Mat::from_vec(1, 10, x.clone()));
-        for (a, b) in out[t].logits.iter().zip(want.row(0)) {
+        for (a, b) in batcher.last_logits().row(out[t].row).iter().zip(want.row(0)) {
             assert!(
                 (a - b).abs() < 1e-4,
                 "tenant {t}: batched {a} vs independent {b}"
@@ -434,7 +434,9 @@ fn republish_changes_only_that_tenant() {
         }
         let mut out = Vec::new();
         batcher.flush(&mut out);
-        out.into_iter().map(|r| r.logits).collect()
+        out.iter()
+            .map(|r| batcher.logits_for(r).expect("single flush: rows are live").to_vec())
+            .collect()
     };
 
     let before = serve_all(&mut batcher);

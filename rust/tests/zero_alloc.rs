@@ -1,0 +1,116 @@
+//! The zero-alloc serving proof: with a counting allocator installed as
+//! this binary's global allocator, a warm `MicroBatcher::flush` must
+//! perform EXACTLY zero heap allocations — every buffer on the hot path
+//! (request staging, registry snapshot batch, tenant-group gathers, rank
+//! workspace, logits staging, packed weight panels, response vector) is
+//! preallocated and reused.
+//!
+//! Kept to a single #[test] on purpose: the counter is process-global,
+//! so a second allocating test running concurrently in this binary would
+//! turn the exact-zero assertion flaky.
+
+use std::sync::Arc;
+
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::tensor::ops::Backend;
+use skip2lora::testkit::{alloc_counter, CountingAlloc};
+use skip2lora::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn cfg() -> MlpConfig {
+    MlpConfig { dims: vec![16, 24, 24, 5], rank: 4, batch_norm: true }
+}
+
+#[test]
+fn warm_flush_performs_zero_allocations() {
+    let mut rng = Rng::new(0xA110C);
+    let cfg = cfg();
+    let backbone = Arc::new(Mlp::new(&mut rng, cfg.clone()));
+    let registry = Arc::new(AdapterRegistry::new());
+    // 5 published tenants with non-trivial adapters; tenant 9 stays bare
+    for t in 0..5u64 {
+        let mut ads: Vec<LoraAdapter> = (0..3)
+            .map(|k| LoraAdapter::new(&mut rng, cfg.dims[k], 4, 5))
+            .collect();
+        for ad in ads.iter_mut() {
+            for v in ad.wb.data.iter_mut() {
+                *v = 0.1 * rng.normal();
+            }
+        }
+        registry.publish(t, ads);
+    }
+
+    let capacity = 8usize;
+    let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
+    let mut batcher = MicroBatcher::new(fb, Arc::clone(&registry));
+
+    // the measured flush must cover every hot-path branch: tenant groups
+    // of size 1 and 3, a bare (unpublished) tenant, and feedback rows
+    // (whose x moves back out — a move, not an allocation)
+    let tenants = [0u64, 1, 0, 2, 9, 1, 0, 3];
+    let labels = [None, Some(1), None, None, Some(0), None, Some(4), None];
+    let make_requests = |rng: &mut Rng| -> Vec<BatchRequest> {
+        tenants
+            .iter()
+            .zip(labels)
+            .enumerate()
+            .map(|(i, (&tenant, label))| BatchRequest {
+                tenant,
+                id: i as u64,
+                x: (0..16).map(|_| rng.normal()).collect(),
+                label,
+            })
+            .collect()
+    };
+
+    let mut out = Vec::with_capacity(capacity);
+    // warm-up: sizes every reusable buffer (staging, snapshot batch,
+    // gather scratch, packed panels, the VecDeque ring, `out`)
+    for _ in 0..3 {
+        for req in make_requests(&mut rng) {
+            batcher.try_submit(req).expect("under the bound by construction");
+        }
+        out.clear();
+        assert_eq!(batcher.flush(&mut out), tenants.len());
+    }
+
+    // measured round: requests are built and queued BEFORE the window —
+    // submit-side allocation (the request's own x vector) is the
+    // caller's, the flush itself owns everything else
+    let reqs = make_requests(&mut rng);
+    for req in reqs {
+        batcher.try_submit(req).expect("under the bound");
+    }
+    out.clear();
+
+    let before = alloc_counter::allocations();
+    let served = batcher.flush(&mut out);
+    let after = alloc_counter::allocations();
+
+    assert_eq!(served, tenants.len());
+    assert_eq!(out.len(), tenants.len());
+    assert_eq!(
+        after - before,
+        0,
+        "warm flush allocated {} time(s) — the zero-alloc steady state regressed",
+        after - before
+    );
+
+    // sanity: the instrument actually counts (a fresh Vec must register)
+    let before = alloc_counter::allocations();
+    let probe: Vec<u8> = Vec::with_capacity(1024);
+    std::hint::black_box(&probe);
+    let after = alloc_counter::allocations();
+    assert!(after > before, "counting allocator is not installed/working");
+
+    // responses carried the feedback x's back by move, predicts carry none
+    for (resp, label) in out.iter().zip(labels) {
+        assert_eq!(resp.label, label);
+        assert_eq!(resp.x.is_some(), label.is_some());
+    }
+}
