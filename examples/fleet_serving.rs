@@ -249,6 +249,35 @@ fn main() {
         "all {} drifted tenants serve IDENTICAL predictions at their persisted versions",
         probe_tenants.len()
     );
+
+    // 6. observability finale (DESIGN.md §11): pull the revived server's
+    //    full obs snapshot through the request API, self-validate it
+    //    against the skip2lora/obs/v1 schema, and write it where CI's
+    //    obs-smoke job picks it up as an artifact.
+    let obs_path =
+        std::env::var("SKIP2LORA_OBS_JSON").unwrap_or_else(|_| "OBS_snapshot.json".to_string());
+    let snap = match revived.handle(0, Request::Observe) {
+        Response::Observed(snap) => *snap,
+        other => panic!("unexpected response to Observe: {other:?}"),
+    };
+    let json = snap.to_json();
+    let ticks = skip2lora::obs::snapshot::validate(&json)
+        .expect("own obs snapshot must satisfy skip2lora/obs/v1");
+    std::fs::write(&obs_path, json.to_string()).expect("write obs snapshot");
+    let covered = snap.flush_stages.sum_stage_ns() as f64
+        / snap.flush_stages.total_ns().max(1) as f64;
+    println!(
+        "obs: {} pump ticks, {} trace events ({} dropped), stage coverage {:.0}% -> {obs_path}",
+        ticks,
+        snap.trace.recorded,
+        snap.trace.dropped,
+        covered * 100.0
+    );
+    assert!(
+        snap.trace.recorded > 0,
+        "revived server traffic must leave a trace"
+    );
+
     revived.shutdown();
     std::fs::remove_file(&snapshot_path).ok();
     println!("OK");

@@ -28,10 +28,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
-use skip2lora::bench::{report, Bencher, KernelBench, ServeBenchReport, ServePoint};
+use skip2lora::bench::{report, Bencher, KernelBench, ObsOverhead, ServeBenchReport, ServePoint};
 use skip2lora::method::Method;
 use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::obs::trace::FlightRecorder;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::persist::RegistryCheckpoint;
 use skip2lora::serve::registry::AdapterRegistry;
@@ -362,6 +363,56 @@ fn main() {
         }
     }
     rep.compute_speedups();
+
+    b.header("observability tax: grouped flush with tracing off vs on");
+    {
+        // same workload, same kernels — the only variable is whether the
+        // flight recorder + per-stage timers are live (DESIGN.md §11's
+        // "one branch when off, zero heap allocs when on" claim, priced)
+        let (batch, distinct) = (32usize, 8usize);
+        let mut timings = [0.0f64; 2];
+        for (slot, tracing_on) in [(0usize, false), (1, true)] {
+            let frozen = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, batch);
+            let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+            batcher.set_stage_timing(tracing_on);
+            let mut recorder = FlightRecorder::new(4096, tracing_on);
+            let mut out = Vec::with_capacity(batch);
+            let mut round = 0usize;
+            let label = if tracing_on { "on " } else { "off" };
+            let r = b.bench(&format!("tracing {label} B={batch:>2} tenants={distinct:>2}"), || {
+                out.clear();
+                for i in 0..batch {
+                    let t = ((round * 31 + (i % distinct) * 17) % n_tenants) as u64;
+                    batcher.submit(BatchRequest {
+                        tenant: t,
+                        id: i as u64,
+                        x: requests[(round + i) % n_tenants].clone(),
+                        label: None,
+                    });
+                }
+                round += 1;
+                let served = if tracing_on {
+                    batcher.flush_traced(&mut out, Some(&mut recorder))
+                } else {
+                    batcher.flush(&mut out)
+                };
+                std::hint::black_box(served);
+            });
+            timings[slot] = r.mean_ns;
+            if tracing_on {
+                assert!(!recorder.is_empty(), "traced flushes must record events");
+                assert_eq!(recorder.dropped() + recorder.len() as u64, recorder.recorded());
+            }
+        }
+        let o = ObsOverhead::from_timings(timings[0], timings[1]);
+        rep.obs_overhead = Some(o);
+        println!(
+            "tracing overhead: {:.0} -> {:.0} ns/flush ({:+.1}%)",
+            o.off_ns_per_flush,
+            o.on_ns_per_flush,
+            o.overhead_frac * 100.0
+        );
+    }
 
     println!("\ngrouped-vs-per-row rows/sec speedup per workload:");
     for (label, x) in &rep.speedups {

@@ -81,6 +81,30 @@ impl ServePoint {
     }
 }
 
+/// Observability tax: the same grouped flush timed with the flight
+/// recorder + stage timers off vs on (DESIGN.md §11). Tracks that the
+/// "zero-alloc, one branch when off" claim stays cheap in practice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ObsOverhead {
+    /// mean ns/flush with stage timers off and no recorder
+    pub off_ns_per_flush: f64,
+    /// mean ns/flush with stage timers on and a live recorder
+    pub on_ns_per_flush: f64,
+    /// (on - off) / off — may be slightly negative (measurement noise)
+    pub overhead_frac: f64,
+}
+
+impl ObsOverhead {
+    pub fn from_timings(off_ns_per_flush: f64, on_ns_per_flush: f64) -> Self {
+        let overhead_frac = if off_ns_per_flush > 0.0 {
+            (on_ns_per_flush - off_ns_per_flush) / off_ns_per_flush
+        } else {
+            0.0
+        };
+        Self { off_ns_per_flush, on_ns_per_flush, overhead_frac }
+    }
+}
+
 /// The whole report: metadata + kernel section + serve sweep + the
 /// headline grouped-vs-per-row speedups.
 #[derive(Clone, Debug, Default)]
@@ -95,6 +119,8 @@ pub struct ServeBenchReport {
     pub speedups: Vec<(String, f64)>,
     /// geometric mean of `speedups` — the headline number
     pub geomean_speedup: f64,
+    /// tracing-on vs tracing-off flush cost, when the run measured it
+    pub obs_overhead: Option<ObsOverhead>,
 }
 
 impl ServeBenchReport {
@@ -127,7 +153,7 @@ impl ServeBenchReport {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("schema", s(SCHEMA)),
             ("created_unix_s", num(self.created_unix_s as f64)),
             ("budget_ns", num(self.budget_ns as f64)),
@@ -174,7 +200,18 @@ impl ServeBenchReport {
                     .collect()),
             ),
             ("geomean_speedup", num(self.geomean_speedup)),
-        ])
+        ];
+        if let Some(o) = &self.obs_overhead {
+            fields.push((
+                "obs_overhead",
+                obj(vec![
+                    ("off_ns_per_flush", num(o.off_ns_per_flush)),
+                    ("on_ns_per_flush", num(o.on_ns_per_flush)),
+                    ("overhead_frac", num(o.overhead_frac)),
+                ]),
+            ));
+        }
+        obj(fields)
     }
 
     /// Serialize and write to `path` (plain write — bench artifacts are
@@ -262,6 +299,20 @@ pub fn validate(j: &Json) -> Result<f64, String> {
             .ok_or_else(|| format!("{ctx}: missing 'label'"))?;
         finite_positive(sp, "speedup", &ctx)?;
     }
+    if let Some(o) = j.get("obs_overhead") {
+        let ctx = "obs_overhead";
+        finite_positive(o, "off_ns_per_flush", ctx)?;
+        finite_positive(o, "on_ns_per_flush", ctx)?;
+        let frac = o
+            .get("overhead_frac")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{ctx}: missing numeric 'overhead_frac'"))?;
+        // the fraction may legitimately be slightly negative (noise), but
+        // never non-finite
+        if !frac.is_finite() {
+            return Err(format!("{ctx}: 'overhead_frac' must be finite, got {frac}"));
+        }
+    }
     finite_positive(j, "geomean_speedup", "report")
 }
 
@@ -341,6 +392,34 @@ mod tests {
         assert!(validate(&r.to_json()).unwrap_err().contains("both modes"));
         // not json at all
         assert!(json::parse("not json").is_err());
+    }
+
+    #[test]
+    fn obs_overhead_roundtrips_and_rejects_nan() {
+        // absent section is fine — older reports stay valid
+        let without = sample();
+        assert!(validate(&without.to_json()).is_ok());
+        assert!(without.to_json().get("obs_overhead").is_none());
+
+        let mut r = sample();
+        r.obs_overhead = Some(ObsOverhead::from_timings(400_000.0, 410_000.0));
+        let o = r.obs_overhead.unwrap();
+        assert!((o.overhead_frac - 0.025).abs() < 1e-12, "{}", o.overhead_frac);
+        let parsed = json::parse(&r.to_json().to_string()).unwrap();
+        assert!(validate(&parsed).is_ok());
+        let sec = parsed.get("obs_overhead").expect("section present");
+        assert!((sec.get("on_ns_per_flush").and_then(Json::as_f64).unwrap() - 410_000.0).abs() < 1e-6);
+
+        // a NaN fraction must fail validation
+        let mut r = sample();
+        r.obs_overhead = Some(ObsOverhead {
+            off_ns_per_flush: 1.0,
+            on_ns_per_flush: 1.0,
+            overhead_frac: f64::NAN,
+        });
+        assert!(validate(&r.to_json()).unwrap_err().contains("overhead_frac"));
+        // zero-time off side is degenerate, not a crash
+        assert_eq!(ObsOverhead::from_timings(0.0, 5.0).overhead_frac, 0.0);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod experiments;
 pub mod method;
 pub mod model;
 pub mod nn;
+pub mod obs;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -1,0 +1,66 @@
+//! Observability: zero-alloc flight recorder, per-stage latency
+//! attribution, and mergeable fleet telemetry (DESIGN.md §11).
+//!
+//! The paper's headline claim is a *time breakdown* (Tables 6/7: the
+//! skip-cache removes the forward-recompute share of fine-tuning), so the
+//! serving plane must be able to say *where* time goes, not just how much
+//! of it passed. Three layers, all std-only:
+//!
+//! - [`trace`] — a fixed-capacity ring buffer of typed events
+//!   ([`trace::FlightRecorder`]), dual-stamped with the deterministic
+//!   pump-tick clock and a monotonic-ns clock. Recording is copy-only
+//!   into preallocated storage: zero heap allocation on the hot path,
+//!   overwrite-oldest on overflow with an explicit drop counter.
+//! - [`stages`] — fixed-array per-stage flush timers
+//!   ([`stages::FlushStages`]: staging / backbone forward / snapshot /
+//!   gather / adapter fan-out / scatter / emit) and a bounded
+//!   heavy-hitter per-tenant rollup table ([`stages::TenantRollups`]).
+//!   No `BTreeMap` here on purpose — `util::timer::PhaseTimer` allocates
+//!   per entry and stays on the cold training path.
+//! - [`snapshot`] — [`snapshot::ObsSnapshot`], the `skip2lora/obs/v1`
+//!   JSON export (hand-rolled via `util::json`, same discipline as
+//!   `bench::report`), reachable via `Request::Observe`,
+//!   `FleetServer::obs_snapshot()`, and the `skip2lora obs-dump` /
+//!   `validate-obs` CLI pair.
+//!
+//! The gating invariant (proved by `tests/zero_alloc.rs`): a warm flush
+//! with the recorder AND the stage timers enabled performs exactly zero
+//! heap allocations.
+
+pub mod snapshot;
+pub mod stages;
+pub mod trace;
+
+pub use snapshot::ObsSnapshot;
+pub use stages::{FlushStage, FlushStages, TenantRollups, TenantSlot};
+pub use trace::{Event, EventKind, FlightRecorder};
+
+/// Observability knobs carried by `ServeConfig`. Everything defaults to
+/// ON because the instrumented paths are allocation-free and cost a few
+/// `Instant` reads per flush; turning a layer off reduces its hot-path
+/// cost to a single branch.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsConfig {
+    /// per-stage flush timers in the micro-batcher (fixed-array
+    /// accumulators; two monotonic clock reads per stage)
+    pub stage_timers: bool,
+    /// flight recorder on/off
+    pub trace: bool,
+    /// ring capacity in events; the oldest event is overwritten on
+    /// overflow and every overwrite bumps the visible drop counter
+    pub trace_capacity: usize,
+    /// heavy-hitter rollup table size (top-K tenants, space-saving
+    /// replacement — bounded regardless of fleet size)
+    pub top_tenants: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            stage_timers: true,
+            trace: true,
+            trace_capacity: 1024,
+            top_tenants: 16,
+        }
+    }
+}

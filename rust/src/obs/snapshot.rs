@@ -1,0 +1,673 @@
+//! `ObsSnapshot`: the mergeable, machine-readable observability export
+//! (schema `skip2lora/obs/v1`), hand-rolled through `util::json` with the
+//! same writer/validator discipline as `bench::report`.
+//!
+//! One snapshot carries everything a fleet operator (or a future
+//! multi-node aggregator, ROADMAP item 3) needs: the full `ServeMetrics`
+//! including raw histogram bucket arrays (so snapshots from different
+//! nodes can be merged bit-exactly), the per-stage flush attribution, the
+//! paper-style fine-tune stage breakdown, the flight-recorder tail, the
+//! bounded heavy-hitter tenant table, and the per-shard / per-worker
+//! stats the registry and scheduler already collect.
+//!
+//! `validate` is the gate CI runs over every emitted snapshot: schema tag,
+//! finite non-negative numbers, non-empty mandatory sections, percentile ≤
+//! recorded max (the tail-fix invariant), and stage sums reconciling with
+//! flush totals.
+
+use std::path::Path;
+
+use crate::obs::stages::{FlushStage, FlushStages, TenantSlot};
+use crate::obs::trace::{Event, EventKind, RecorderSummary};
+use crate::serve::metrics::{LatencyHistogram, ServeMetrics};
+use crate::serve::registry::ShardStats;
+use crate::serve::scheduler::PoolStats;
+use crate::util::json::{arr, num, obj, parse, s, Json};
+
+pub const SCHEMA: &str = "skip2lora/obs/v1";
+
+/// Worker-pool view carried by a snapshot (None when the server runs
+/// fine-tunes inline).
+#[derive(Clone, Debug)]
+pub struct WorkerSnapshot {
+    pub stats: PoolStats,
+    /// per-worker deque depths at snapshot time (ROADMAP item 1's
+    /// per-lane visibility hook)
+    pub queue_depths: Vec<usize>,
+}
+
+/// Everything observable about a `FleetServer` at one instant. Built on
+/// the cold path (clones + allocating summaries); the hot path only ever
+/// touches the fixed-size structures this snapshot copies from.
+#[derive(Clone, Debug)]
+pub struct ObsSnapshot {
+    /// deterministic clock: pumps executed so far
+    pub pump_ticks: u64,
+    /// tenants with live serve-side state
+    pub tenants_live: usize,
+    /// requests waiting in the micro-batch queue
+    pub queued: usize,
+    pub metrics: ServeMetrics,
+    pub flush_stages: FlushStages,
+    pub trace: RecorderSummary,
+    /// heavy-hitter table, sorted by requests descending
+    pub tenants: Vec<TenantSlot>,
+    pub shards: Vec<ShardStats>,
+    pub workers: Option<WorkerSnapshot>,
+}
+
+fn hist_json(h: &LatencyHistogram) -> Json {
+    obj(vec![
+        ("count", num(h.count() as f64)),
+        ("mean_ms", num(h.mean_ms())),
+        ("std_ms", num(h.std_ms())),
+        ("p50_ms", num(h.percentile_ms(50.0))),
+        ("p95_ms", num(h.percentile_ms(95.0))),
+        ("p99_ms", num(h.percentile_ms(99.0))),
+        ("max_ms", num(h.max_ms())),
+        // raw bucket counts: the mergeable representation (log2 buckets)
+        (
+            "buckets",
+            arr(h.bucket_counts().iter().map(|&c| num(c as f64)).collect()),
+        ),
+    ])
+}
+
+fn event_json(e: &Event) -> Json {
+    let mut fields = vec![
+        ("seq", num(e.seq as f64)),
+        ("tick", num(e.tick as f64)),
+        ("mono_ns", num(e.mono_ns as f64)),
+        ("kind", s(e.kind.name())),
+    ];
+    match e.kind {
+        EventKind::Admitted { tenant }
+        | EventKind::FinetuneStart { tenant }
+        | EventKind::Evicted { tenant } => {
+            fields.push(("tenant", num(tenant as f64)));
+        }
+        EventKind::Queued { tenant, ticket } => {
+            fields.push(("tenant", num(tenant as f64)));
+            fields.push(("ticket", num(ticket as f64)));
+        }
+        EventKind::FlushStart { pending } => {
+            fields.push(("pending", num(pending as f64)));
+        }
+        EventKind::FlushEnd { rows, ns } => {
+            fields.push(("rows", num(rows as f64)));
+            fields.push(("ns", num(ns as f64)));
+        }
+        EventKind::FanoutTenant { tenant, rows } => {
+            fields.push(("tenant", num(tenant as f64)));
+            fields.push(("rows", num(rows as f64)));
+        }
+        EventKind::FinetuneEnd { tenant, ns } => {
+            fields.push(("tenant", num(tenant as f64)));
+            fields.push(("ns", num(ns as f64)));
+        }
+        EventKind::CacheHit { tenant, count } | EventKind::CacheMiss { tenant, count } => {
+            fields.push(("tenant", num(tenant as f64)));
+            fields.push(("count", num(count as f64)));
+        }
+        EventKind::Persisted { tenants } | EventKind::Restored { tenants } => {
+            fields.push(("tenants", num(tenants as f64)));
+        }
+    }
+    obj(fields)
+}
+
+impl ObsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        let fs = &self.flush_stages;
+        let t = &self.trace;
+        let total = fs.total_ns();
+        obj(vec![
+            ("schema", s(SCHEMA)),
+            ("pump_ticks", num(self.pump_ticks as f64)),
+            ("tenants_live", num(self.tenants_live as f64)),
+            ("queued", num(self.queued as f64)),
+            (
+                "serve",
+                obj(vec![
+                    ("predicts", num(m.predicts as f64)),
+                    ("feedbacks", num(m.feedbacks as f64)),
+                    ("swaps", num(m.swaps as f64)),
+                    ("queue_rejections", num(m.queue_rejections as f64)),
+                    ("rate_limited", num(m.rate_limited as f64)),
+                    ("evictions", num(m.evictions as f64)),
+                    ("adaptations", num(m.adaptations as f64)),
+                    ("finetune_panics", num(m.finetune_panics as f64)),
+                    ("batches", num(m.batches as f64)),
+                    ("batched_rows", num(m.batched_rows as f64)),
+                    ("finetune_cache_hits", num(m.finetune_cache_hits as f64)),
+                    ("finetune_cache_misses", num(m.finetune_cache_misses as f64)),
+                    ("persists", num(m.persists as f64)),
+                    ("restores", num(m.restores as f64)),
+                    ("tenants_restored", num(m.tenants_restored as f64)),
+                    ("exports", num(m.exports as f64)),
+                    ("imports", num(m.imports as f64)),
+                    ("pump_ticks", num(m.pump_ticks as f64)),
+                    ("rows_per_batch", num(m.rows_per_batch())),
+                    // the deterministic throughput form (satellite 1)
+                    ("rows_per_pump", num(m.rows_per_pump())),
+                    ("finetune_cache_hit_rate", num(m.finetune_cache_hit_rate())),
+                    ("batch_forward", hist_json(&m.batch_forward)),
+                    ("finetune", hist_json(&m.finetune)),
+                ]),
+            ),
+            // paper Tables 6/7 taxonomy: where fine-tune wall-clock goes
+            (
+                "finetune_stages",
+                obj(vec![
+                    ("forward_ns", num(m.finetune_forward_ns as f64)),
+                    ("backward_ns", num(m.finetune_backward_ns as f64)),
+                    ("update_ns", num(m.finetune_update_ns as f64)),
+                    ("cache_mgmt_ns", num(m.finetune_cache_ns as f64)),
+                ]),
+            ),
+            (
+                "flush_stages",
+                obj(vec![
+                    ("enabled", Json::Bool(fs.enabled())),
+                    ("flushes", num(fs.flushes() as f64)),
+                    ("total_ns", num(total as f64)),
+                    (
+                        "stages",
+                        arr(FlushStage::ALL
+                            .iter()
+                            .map(|&st| {
+                                let ns = fs.stage_ns(st);
+                                let frac = if total > 0 {
+                                    ns as f64 / total as f64
+                                } else {
+                                    0.0
+                                };
+                                obj(vec![
+                                    ("name", s(st.name())),
+                                    ("ns", num(ns as f64)),
+                                    ("frac", num(frac)),
+                                ])
+                            })
+                            .collect()),
+                    ),
+                ]),
+            ),
+            (
+                "trace",
+                obj(vec![
+                    ("enabled", Json::Bool(t.enabled)),
+                    ("capacity", num(t.capacity as f64)),
+                    ("recorded", num(t.recorded as f64)),
+                    ("dropped", num(t.dropped as f64)),
+                    (
+                        "counts",
+                        Json::Obj(
+                            t.counts
+                                .iter()
+                                .map(|&(k, v)| (k.to_string(), num(v as f64)))
+                                .collect(),
+                        ),
+                    ),
+                    ("tail", arr(t.tail.iter().map(event_json).collect())),
+                ]),
+            ),
+            (
+                "tenants",
+                arr(self
+                    .tenants
+                    .iter()
+                    .map(|sl| {
+                        obj(vec![
+                            ("tenant", num(sl.tenant as f64)),
+                            ("requests", num(sl.requests as f64)),
+                            ("cache_hits", num(sl.cache_hits as f64)),
+                            ("cache_misses", num(sl.cache_misses as f64)),
+                            ("cache_hit_rate", num(sl.cache_hit_rate())),
+                            ("finetunes", num(sl.finetunes as f64)),
+                            ("finetune_mean_ms", num(sl.finetune_mean_ms())),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "shards",
+                arr(self
+                    .shards
+                    .iter()
+                    .map(|sh| {
+                        obj(vec![
+                            ("tenants", num(sh.tenants as f64)),
+                            ("reads", num(sh.reads as f64)),
+                            ("writes", num(sh.writes as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            (
+                "workers",
+                match &self.workers {
+                    Some(w) => obj(vec![
+                        ("workers", num(w.stats.workers as f64)),
+                        ("submitted", num(w.stats.submitted as f64)),
+                        ("executed", num(w.stats.executed as f64)),
+                        ("steals", num(w.stats.steals as f64)),
+                        ("panics", num(w.stats.panics as f64)),
+                        (
+                            "queue_depths",
+                            arr(w.queue_depths.iter().map(|&d| num(d as f64)).collect()),
+                        ),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+fn finite_nonneg(j: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{ctx}: missing numeric '{key}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!(
+            "{ctx}: '{key}' must be finite and >= 0, got {v}"
+        ));
+    }
+    Ok(v)
+}
+
+fn check_histogram(j: &Json, key: &str, ctx: &str) -> Result<(), String> {
+    let h = j
+        .get(key)
+        .ok_or_else(|| format!("{ctx}: missing histogram '{key}'"))?;
+    let hctx = format!("{ctx}.{key}");
+    finite_nonneg(h, "count", &hctx)?;
+    finite_nonneg(h, "mean_ms", &hctx)?;
+    finite_nonneg(h, "std_ms", &hctx)?;
+    let max_ms = finite_nonneg(h, "max_ms", &hctx)?;
+    for p in ["p50_ms", "p95_ms", "p99_ms"] {
+        let v = finite_nonneg(h, p, &hctx)?;
+        // satellite 2's invariant: no percentile may exceed the recorded
+        // max (within fp noise) now that the tail returns max_ns
+        if v > max_ms * (1.0 + 1e-9) + 1e-12 {
+            return Err(format!("{hctx}: {p}={v} exceeds max_ms={max_ms}"));
+        }
+    }
+    let buckets = h
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{hctx}: missing 'buckets' array"))?;
+    if buckets.is_empty() {
+        return Err(format!("{hctx}: 'buckets' must not be empty"));
+    }
+    for (i, b) in buckets.iter().enumerate() {
+        let v = b
+            .as_f64()
+            .ok_or_else(|| format!("{hctx}: bucket[{i}] not numeric"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{hctx}: bucket[{i}]={v} invalid"));
+        }
+    }
+    Ok(())
+}
+
+/// Validate a parsed snapshot. Returns `pump_ticks` as the headline
+/// number on success.
+pub fn validate(j: &Json) -> Result<f64, String> {
+    let schema = j
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing 'schema'")?;
+    if schema != SCHEMA {
+        return Err(format!("schema mismatch: got '{schema}', want '{SCHEMA}'"));
+    }
+    let pump_ticks = finite_nonneg(j, "pump_ticks", "snapshot")?;
+    finite_nonneg(j, "tenants_live", "snapshot")?;
+    finite_nonneg(j, "queued", "snapshot")?;
+
+    let serve = j.get("serve").ok_or("missing 'serve' section")?;
+    for key in [
+        "predicts",
+        "feedbacks",
+        "swaps",
+        "queue_rejections",
+        "rate_limited",
+        "evictions",
+        "adaptations",
+        "finetune_panics",
+        "batches",
+        "batched_rows",
+        "finetune_cache_hits",
+        "finetune_cache_misses",
+        "persists",
+        "restores",
+        "tenants_restored",
+        "exports",
+        "imports",
+        "pump_ticks",
+        "rows_per_batch",
+        "rows_per_pump",
+        "finetune_cache_hit_rate",
+    ] {
+        finite_nonneg(serve, key, "serve")?;
+    }
+    check_histogram(serve, "batch_forward", "serve")?;
+    check_histogram(serve, "finetune", "serve")?;
+
+    let ft = j
+        .get("finetune_stages")
+        .ok_or("missing 'finetune_stages' section")?;
+    for key in ["forward_ns", "backward_ns", "update_ns", "cache_mgmt_ns"] {
+        finite_nonneg(ft, key, "finetune_stages")?;
+    }
+
+    let fs = j
+        .get("flush_stages")
+        .ok_or("missing 'flush_stages' section")?;
+    finite_nonneg(fs, "flushes", "flush_stages")?;
+    let total = finite_nonneg(fs, "total_ns", "flush_stages")?;
+    let stages = fs
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or("flush_stages: missing 'stages' array")?;
+    if stages.is_empty() {
+        return Err("flush_stages: 'stages' must not be empty".into());
+    }
+    let mut stage_sum = 0.0;
+    for (i, st) in stages.iter().enumerate() {
+        let ctx = format!("flush_stages.stages[{i}]");
+        if st.get("name").and_then(Json::as_str).is_none() {
+            return Err(format!("{ctx}: missing 'name'"));
+        }
+        stage_sum += finite_nonneg(st, "ns", &ctx)?;
+        finite_nonneg(st, "frac", &ctx)?;
+    }
+    // stages are disjoint sub-spans of the measured flush totals: their
+    // sum cannot meaningfully exceed the total (tolerance for clock
+    // rounding across many short spans)
+    if stage_sum > total * 1.05 + 50_000.0 {
+        return Err(format!(
+            "flush_stages: stage sum {stage_sum}ns exceeds total {total}ns"
+        ));
+    }
+
+    let tr = j.get("trace").ok_or("missing 'trace' section")?;
+    let capacity = finite_nonneg(tr, "capacity", "trace")?;
+    if capacity < 1.0 {
+        return Err(format!("trace: capacity {capacity} < 1"));
+    }
+    finite_nonneg(tr, "recorded", "trace")?;
+    finite_nonneg(tr, "dropped", "trace")?;
+    tr.get("counts")
+        .and_then(Json::as_obj)
+        .ok_or("trace: missing 'counts' object")?;
+    let tail = tr
+        .get("tail")
+        .and_then(Json::as_arr)
+        .ok_or("trace: missing 'tail' array")?;
+    let mut prev_seq = -1.0f64;
+    for (i, e) in tail.iter().enumerate() {
+        let ctx = format!("trace.tail[{i}]");
+        let seq = finite_nonneg(e, "seq", &ctx)?;
+        finite_nonneg(e, "tick", &ctx)?;
+        finite_nonneg(e, "mono_ns", &ctx)?;
+        if e.get("kind").and_then(Json::as_str).is_none() {
+            return Err(format!("{ctx}: missing 'kind'"));
+        }
+        if seq <= prev_seq {
+            return Err(format!("{ctx}: seq {seq} not strictly increasing"));
+        }
+        prev_seq = seq;
+    }
+
+    let tenants = j
+        .get("tenants")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'tenants' array")?;
+    for (i, sl) in tenants.iter().enumerate() {
+        let ctx = format!("tenants[{i}]");
+        finite_nonneg(sl, "tenant", &ctx)?;
+        finite_nonneg(sl, "requests", &ctx)?;
+        finite_nonneg(sl, "cache_hit_rate", &ctx)?;
+        finite_nonneg(sl, "finetune_mean_ms", &ctx)?;
+    }
+
+    let shards = j
+        .get("shards")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'shards' array")?;
+    if shards.is_empty() {
+        return Err("'shards' must not be empty (the registry always has shards)".into());
+    }
+    for (i, sh) in shards.iter().enumerate() {
+        let ctx = format!("shards[{i}]");
+        finite_nonneg(sh, "tenants", &ctx)?;
+        finite_nonneg(sh, "reads", &ctx)?;
+        finite_nonneg(sh, "writes", &ctx)?;
+    }
+
+    match j.get("workers") {
+        None => return Err("missing 'workers' (object or null)".into()),
+        Some(Json::Null) => {}
+        Some(w) => {
+            let n = finite_nonneg(w, "workers", "workers")?;
+            finite_nonneg(w, "submitted", "workers")?;
+            finite_nonneg(w, "executed", "workers")?;
+            finite_nonneg(w, "steals", "workers")?;
+            finite_nonneg(w, "panics", "workers")?;
+            let depths = w
+                .get("queue_depths")
+                .and_then(Json::as_arr)
+                .ok_or("workers: missing 'queue_depths' array")?;
+            if depths.len() != n as usize {
+                return Err(format!(
+                    "workers: queue_depths has {} entries for {} workers",
+                    depths.len(),
+                    n
+                ));
+            }
+        }
+    }
+
+    Ok(pump_ticks)
+}
+
+/// Parse + validate raw snapshot text (the `validate-obs` CLI entry).
+pub fn validate_text(text: &str) -> Result<f64, String> {
+    let j = parse(text).map_err(|e| format!("JSON parse error: {e}"))?;
+    validate(&j)
+}
+
+pub fn validate_file(path: impl AsRef<Path>) -> Result<f64, String> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    validate_text(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::stages::TenantRollups;
+    use crate::obs::trace::FlightRecorder;
+
+    fn sample_snapshot() -> ObsSnapshot {
+        let mut metrics = ServeMetrics::new();
+        metrics.predicts = 40;
+        metrics.feedbacks = 10;
+        metrics.batches = 5;
+        metrics.batched_rows = 50;
+        metrics.pump_ticks = 12;
+        metrics.adaptations = 2;
+        metrics.finetune_cache_hits = 30;
+        metrics.finetune_cache_misses = 10;
+        metrics.finetune_forward_ns = 1_000_000;
+        metrics.finetune_backward_ns = 2_000_000;
+        metrics.finetune_update_ns = 500_000;
+        for ns in [40_000u64, 55_000, 70_000, 90_000, 120_000] {
+            metrics.batch_forward.record_ns(ns);
+        }
+        metrics.finetune.record_ns(3_500_000);
+        metrics.finetune.record_ns(4_100_000);
+
+        let mut flush_stages = FlushStages::new(true);
+        flush_stages.add_ns(FlushStage::Staging, 20_000);
+        flush_stages.add_ns(FlushStage::BackboneForward, 250_000);
+        flush_stages.add_ns(FlushStage::Snapshot, 8_000);
+        flush_stages.add_ns(FlushStage::Gather, 15_000);
+        flush_stages.add_ns(FlushStage::AdapterFanout, 60_000);
+        flush_stages.add_ns(FlushStage::Scatter, 9_000);
+        flush_stages.add_ns(FlushStage::Emit, 5_000);
+        flush_stages.finish_flush_ns(375_000);
+
+        let mut rec = FlightRecorder::new(128, true);
+        rec.set_tick(1);
+        rec.record(EventKind::Admitted { tenant: 3 });
+        rec.record(EventKind::Queued { tenant: 3, ticket: 1 });
+        rec.set_tick(2);
+        rec.record(EventKind::FlushStart { pending: 1 });
+        rec.record(EventKind::FanoutTenant { tenant: 3, rows: 1 });
+        rec.record(EventKind::FlushEnd { rows: 1, ns: 75_000 });
+        rec.record(EventKind::FinetuneStart { tenant: 3 });
+        rec.record(EventKind::FinetuneEnd {
+            tenant: 3,
+            ns: 3_500_000,
+        });
+        rec.record(EventKind::CacheHit { tenant: 3, count: 30 });
+        rec.record(EventKind::Persisted { tenants: 4 });
+        rec.record(EventKind::Restored { tenants: 4 });
+
+        let mut rollups = TenantRollups::new(8);
+        for _ in 0..40 {
+            rollups.bump_request(3);
+        }
+        rollups.record_finetune(3, 3_500_000, 30, 10);
+
+        ObsSnapshot {
+            pump_ticks: 12,
+            tenants_live: 4,
+            queued: 0,
+            metrics,
+            flush_stages,
+            trace: rec.summary(),
+            tenants: rollups.top(),
+            shards: vec![
+                ShardStats {
+                    tenants: 2,
+                    reads: 100,
+                    writes: 4,
+                },
+                ShardStats {
+                    tenants: 2,
+                    reads: 90,
+                    writes: 3,
+                },
+            ],
+            workers: Some(WorkerSnapshot {
+                stats: PoolStats {
+                    workers: 2,
+                    submitted: 2,
+                    executed: 2,
+                    steals: 0,
+                    panics: 0,
+                },
+                queue_depths: vec![0, 0],
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrips_and_validates() {
+        let snap = sample_snapshot();
+        let j = snap.to_json();
+        let ticks = validate(&j).expect("sample snapshot must validate");
+        assert_eq!(ticks, 12.0);
+        // text round trip (what the CLI pipe sees)
+        let back = validate_text(&j.to_string()).unwrap();
+        assert_eq!(back, 12.0);
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_nan() {
+        let snap = sample_snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema".into(), s("skip2lora/obs/v0"));
+        }
+        assert!(validate(&j).unwrap_err().contains("schema mismatch"));
+
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("pump_ticks".into(), num(f64::NAN));
+        }
+        assert!(validate(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_sections_and_missing_keys() {
+        let snap = sample_snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(fs)) = m.get_mut("flush_stages") {
+                fs.insert("stages".into(), arr(vec![]));
+            }
+        }
+        assert!(validate(&j).unwrap_err().contains("must not be empty"));
+
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("shards".into(), arr(vec![]));
+        }
+        assert!(validate(&j).is_err());
+
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("serve");
+        }
+        assert!(validate(&j).unwrap_err().contains("serve"));
+    }
+
+    #[test]
+    fn rejects_percentile_above_max() {
+        let snap = sample_snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(serve)) = m.get_mut("serve") {
+                if let Some(Json::Obj(h)) = serve.get_mut("batch_forward") {
+                    h.insert("p99_ms".into(), num(1e9));
+                }
+            }
+        }
+        assert!(validate(&j).unwrap_err().contains("exceeds max_ms"));
+    }
+
+    #[test]
+    fn rejects_stage_sum_exceeding_total() {
+        let snap = sample_snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(fs)) = m.get_mut("flush_stages") {
+                fs.insert("total_ns".into(), num(1000.0));
+            }
+        }
+        assert!(validate(&j).unwrap_err().contains("exceeds total"));
+    }
+
+    #[test]
+    fn rejects_mismatched_worker_depths() {
+        let snap = sample_snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(w)) = m.get_mut("workers") {
+                w.insert("queue_depths".into(), arr(vec![num(0.0)]));
+            }
+        }
+        assert!(validate(&j).unwrap_err().contains("queue_depths"));
+        // workers: null is fine (inline fine-tunes)
+        let mut snap2 = sample_snapshot();
+        snap2.workers = None;
+        assert!(validate(&snap2.to_json()).is_ok());
+    }
+}

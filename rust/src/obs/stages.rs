@@ -1,0 +1,408 @@
+//! Per-stage latency attribution for the serving flush path, plus the
+//! bounded heavy-hitter per-tenant rollup table.
+//!
+//! `util::timer::PhaseTimer` is BTreeMap-backed and allocates on first
+//! touch of each phase — fine for the training loop, unusable inside the
+//! zero-alloc flush. `FlushStages` is its hot-path sibling: a fixed array
+//! of accumulators indexed by a stage enum, two monotonic clock reads per
+//! stage, one branch when disabled.
+//!
+//! The stage taxonomy mirrors what actually happens in
+//! `MicroBatcher::flush` so the paper-style breakdown (Tables 6/7 do this
+//! for fine-tuning) exists for serving too: where do a flush's
+//! microseconds go?
+
+use std::time::Instant;
+
+/// Number of flush stages (`FlushStage` variants).
+pub const FLUSH_STAGES: usize = 7;
+
+/// One stage of a micro-batch flush.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushStage {
+    /// copy queued requests into the staging area + input row loads
+    Staging = 0,
+    /// the single shared frozen-backbone forward over the whole batch
+    BackboneForward = 1,
+    /// registry snapshot of every distinct tenant's adapter set
+    Snapshot = 2,
+    /// tenant-group ordering + gathering rows/logits into group scratch
+    Gather = 3,
+    /// grouped LoRA adapter forward (the per-tenant delta)
+    AdapterFanout = 4,
+    /// scattering group logits back into batch order
+    Scatter = 5,
+    /// building responses (feedback x moves back out)
+    Emit = 6,
+}
+
+impl FlushStage {
+    pub const ALL: [FlushStage; FLUSH_STAGES] = [
+        FlushStage::Staging,
+        FlushStage::BackboneForward,
+        FlushStage::Snapshot,
+        FlushStage::Gather,
+        FlushStage::AdapterFanout,
+        FlushStage::Scatter,
+        FlushStage::Emit,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FlushStage::Staging => "staging",
+            FlushStage::BackboneForward => "backbone_forward",
+            FlushStage::Snapshot => "snapshot",
+            FlushStage::Gather => "gather",
+            FlushStage::AdapterFanout => "adapter_fanout",
+            FlushStage::Scatter => "scatter",
+            FlushStage::Emit => "emit",
+        }
+    }
+}
+
+/// Fixed-array stage accumulators. Allocation-free by construction; the
+/// per-flush total is measured with the SAME clock as the stages, so the
+/// stage sum reconciles against the total (and against the
+/// `batch_forward` histogram the server records from it).
+#[derive(Clone, Debug)]
+pub struct FlushStages {
+    enabled: bool,
+    acc_ns: [u64; FLUSH_STAGES],
+    flushes: u64,
+    total_ns: u64,
+    last_total_ns: u64,
+}
+
+impl FlushStages {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            acc_ns: [0; FLUSH_STAGES],
+            flushes: 0,
+            total_ns: 0,
+            last_total_ns: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+    }
+
+    /// Open a stage (or whole-flush) span. The disabled cost is exactly
+    /// this one branch.
+    #[inline]
+    pub fn span(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span into a stage's accumulator. No-op when the span was
+    /// opened disabled.
+    #[inline]
+    pub fn add(&mut self, stage: FlushStage, span: Option<Instant>) {
+        if let Some(t0) = span {
+            self.add_ns(stage, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Direct nanosecond injection (merging, tests).
+    #[inline]
+    pub fn add_ns(&mut self, stage: FlushStage, ns: u64) {
+        self.acc_ns[stage as usize] += ns;
+    }
+
+    /// Close the whole-flush span: records the flush total and makes it
+    /// available via `last_total_ns`.
+    #[inline]
+    pub fn finish_flush(&mut self, span: Option<Instant>) {
+        if let Some(t0) = span {
+            self.finish_flush_ns(t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Direct-injection form of `finish_flush` (merging, tests).
+    pub fn finish_flush_ns(&mut self, ns: u64) {
+        self.last_total_ns = ns;
+        self.total_ns += ns;
+        self.flushes += 1;
+    }
+
+    pub fn stage_ns(&self, stage: FlushStage) -> u64 {
+        self.acc_ns[stage as usize]
+    }
+
+    /// Sum of all stage accumulators — by construction ≤ `total_ns` up to
+    /// clock rounding (stages are disjoint sub-spans of the flush span).
+    pub fn sum_stage_ns(&self) -> u64 {
+        self.acc_ns.iter().sum()
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// The most recent flush's measured total, if stage timing is on and
+    /// at least one flush completed. The server records THIS into the
+    /// `batch_forward` histogram so stage sums and the histogram agree.
+    pub fn last_total_ns(&self) -> Option<u64> {
+        if self.enabled && self.flushes > 0 {
+            Some(self.last_total_ns)
+        } else {
+            None
+        }
+    }
+
+    /// Associative fleet aggregation: sums accumulators, totals and flush
+    /// counts (the `last_total_ns` of `self` is kept — it is a local,
+    /// non-mergeable notion).
+    pub fn merge(&mut self, other: &FlushStages) {
+        for (a, b) in self.acc_ns.iter_mut().zip(other.acc_ns.iter()) {
+            *a += b;
+        }
+        self.flushes += other.flushes;
+        self.total_ns += other.total_ns;
+    }
+}
+
+/// One row of the heavy-hitter table. Plain `Copy` data so snapshots can
+/// clone the table without touching the originals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantSlot {
+    pub tenant: u64,
+    /// requests accepted into the batch queue (space-saving upper bound
+    /// after a slot takeover — see `TenantRollups`)
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub finetunes: u64,
+    pub finetune_ns: u64,
+}
+
+impl TenantSlot {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn finetune_mean_ms(&self) -> f64 {
+        if self.finetunes == 0 {
+            0.0
+        } else {
+            self.finetune_ns as f64 / self.finetunes as f64 / 1e6
+        }
+    }
+}
+
+/// Bounded top-K per-tenant rollups — the "which tenants dominate, which
+/// are cache-cold" table, with memory fixed at construction no matter how
+/// many tenants the fleet serves.
+///
+/// Replacement is space-saving (Metwally et al.): when the table is full
+/// a new tenant takes over the slot with the fewest requests and INHERITS
+/// that count as an upper bound, so a genuine heavy hitter cannot be
+/// churned out by a stream of singletons. Counts are therefore exact
+/// while distinct tenants ≤ K and upper bounds beyond that.
+#[derive(Clone, Debug)]
+pub struct TenantRollups {
+    slots: Vec<TenantSlot>,
+    k: usize,
+}
+
+impl TenantRollups {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "rollup table needs at least one slot");
+        Self {
+            slots: Vec::with_capacity(k),
+            k,
+        }
+    }
+
+    fn slot_mut(&mut self, tenant: u64) -> &mut TenantSlot {
+        if let Some(i) = self.slots.iter().position(|s| s.tenant == tenant) {
+            return &mut self.slots[i];
+        }
+        if self.slots.len() < self.k {
+            self.slots.push(TenantSlot {
+                tenant,
+                ..TenantSlot::default()
+            });
+            let last = self.slots.len() - 1;
+            return &mut self.slots[last];
+        }
+        let mut victim = 0usize;
+        let mut fewest = u64::MAX;
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.requests < fewest {
+                victim = i;
+                fewest = s.requests;
+            }
+        }
+        // the newcomer inherits the evicted request count (upper-bound
+        // semantics); the other stats restart, they are not comparable
+        self.slots[victim] = TenantSlot {
+            tenant,
+            requests: fewest,
+            ..TenantSlot::default()
+        };
+        &mut self.slots[victim]
+    }
+
+    /// A request from `tenant` entered the batch queue.
+    pub fn bump_request(&mut self, tenant: u64) {
+        self.slot_mut(tenant).requests += 1;
+    }
+
+    /// A fine-tune for `tenant` completed.
+    pub fn record_finetune(&mut self, tenant: u64, ns: u64, hits: u64, misses: u64) {
+        let s = self.slot_mut(tenant);
+        s.finetunes += 1;
+        s.finetune_ns += ns;
+        s.cache_hits += hits;
+        s.cache_misses += misses;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn slots(&self) -> &[TenantSlot] {
+        &self.slots
+    }
+
+    /// Slots sorted by request count descending (allocates — snapshot
+    /// path only; ties broken by tenant id for determinism).
+    pub fn top(&self) -> Vec<TenantSlot> {
+        let mut v = self.slots.clone();
+        v.sort_by(|a, b| b.requests.cmp(&a.requests).then(a.tenant.cmp(&b.tenant)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_accumulators_and_totals() {
+        let mut fs = FlushStages::new(true);
+        fs.add_ns(FlushStage::Staging, 100);
+        fs.add_ns(FlushStage::BackboneForward, 700);
+        fs.add_ns(FlushStage::Gather, 150);
+        fs.finish_flush_ns(1000);
+        assert_eq!(fs.sum_stage_ns(), 950);
+        assert_eq!(fs.total_ns(), 1000);
+        assert_eq!(fs.flushes(), 1);
+        assert_eq!(fs.last_total_ns(), Some(1000));
+        assert_eq!(fs.stage_ns(FlushStage::BackboneForward), 700);
+        assert_eq!(fs.stage_ns(FlushStage::Emit), 0);
+    }
+
+    #[test]
+    fn disabled_spans_cost_nothing_and_record_nothing() {
+        let mut fs = FlushStages::new(false);
+        let t = fs.span();
+        assert!(t.is_none());
+        fs.add(FlushStage::Staging, t);
+        fs.finish_flush(t);
+        assert_eq!(fs.sum_stage_ns(), 0);
+        assert_eq!(fs.flushes(), 0);
+        assert_eq!(fs.last_total_ns(), None);
+    }
+
+    #[test]
+    fn live_spans_measure_something() {
+        let mut fs = FlushStages::new(true);
+        let t0 = fs.span();
+        let t = fs.span();
+        let mut acc = 0u64;
+        for i in 0..10_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        fs.add(FlushStage::AdapterFanout, t);
+        fs.finish_flush(t0);
+        assert!(fs.stage_ns(FlushStage::AdapterFanout) > 0);
+        assert!(fs.total_ns() >= fs.stage_ns(FlushStage::AdapterFanout));
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = FlushStages::new(true);
+        let mut b = FlushStages::new(true);
+        a.add_ns(FlushStage::Staging, 10);
+        a.finish_flush_ns(30);
+        b.add_ns(FlushStage::Staging, 5);
+        b.add_ns(FlushStage::Scatter, 7);
+        b.finish_flush_ns(20);
+        b.finish_flush_ns(25);
+        a.merge(&b);
+        assert_eq!(a.stage_ns(FlushStage::Staging), 15);
+        assert_eq!(a.stage_ns(FlushStage::Scatter), 7);
+        assert_eq!(a.flushes(), 3);
+        assert_eq!(a.total_ns(), 75);
+    }
+
+    #[test]
+    fn all_stage_names_are_distinct() {
+        for (i, a) in FlushStage::ALL.iter().enumerate() {
+            assert_eq!(*a as usize, i);
+            for b in FlushStage::ALL.iter().skip(i + 1) {
+                assert_ne!(a.name(), b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn rollups_stay_bounded_and_keep_heavy_hitters() {
+        let mut r = TenantRollups::new(4);
+        // tenant 99 is the heavy hitter
+        for _ in 0..100 {
+            r.bump_request(99);
+        }
+        // a stream of singletons cannot evict it
+        for t in 0..50u64 {
+            r.bump_request(t);
+        }
+        assert_eq!(r.len(), 4);
+        let top = r.top();
+        assert_eq!(top[0].tenant, 99);
+        assert_eq!(top[0].requests, 100);
+        // every slot's count is an upper bound ≥ 1
+        assert!(top.iter().all(|s| s.requests >= 1));
+    }
+
+    #[test]
+    fn rollups_attribute_finetunes() {
+        let mut r = TenantRollups::new(8);
+        r.bump_request(5);
+        r.record_finetune(5, 4_000_000, 30, 10);
+        r.record_finetune(5, 2_000_000, 20, 0);
+        let s = r.slots().iter().find(|s| s.tenant == 5).unwrap();
+        assert_eq!(s.finetunes, 2);
+        assert!((s.finetune_mean_ms() - 3.0).abs() < 1e-9);
+        assert!((s.cache_hit_rate() - 50.0 / 60.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,341 @@
+//! Flight recorder: a fixed-capacity ring buffer of typed serving events.
+//!
+//! Built for postmortems on devices that cannot afford a logging stack:
+//! every event is a fixed-size `Copy` struct written into storage that was
+//! allocated once at construction, so recording on the hot path performs
+//! zero heap allocations. When the ring is full the oldest event is
+//! overwritten and a per-recorder drop counter is bumped — truncation is
+//! visible, never silent.
+//!
+//! Events carry a **dual clock**: the deterministic pump-tick counter
+//! (reproducible across runs with the same traffic) and monotonic
+//! nanoseconds since the recorder's epoch (for real latency forensics).
+
+use std::time::Instant;
+
+/// Number of distinct event kinds (`EventKind` variants). Kept in sync by
+/// `EventKind::index`, which is exhaustively matched.
+pub const EVENT_KINDS: usize = 12;
+
+/// Wire names for each kind, indexed by `EventKind::index()`.
+pub const KIND_NAMES: [&str; EVENT_KINDS] = [
+    "admitted",
+    "queued",
+    "flush_start",
+    "flush_end",
+    "fanout_tenant",
+    "finetune_start",
+    "finetune_end",
+    "cache_hit",
+    "cache_miss",
+    "evicted",
+    "persisted",
+    "restored",
+];
+
+/// What happened. Payloads are fixed-size scalars only — an `EventKind`
+/// is `Copy` and recording one never touches the heap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// request passed admission control (token bucket)
+    Admitted { tenant: u64 },
+    /// request entered the bounded micro-batch queue
+    Queued { tenant: u64, ticket: u64 },
+    /// a flush began with this many requests pending
+    FlushStart { pending: u32 },
+    /// a flush served `rows` rows in `ns` nanoseconds
+    FlushEnd { rows: u32, ns: u64 },
+    /// one tenant group inside a flush (grouped adapter fan-out)
+    FanoutTenant { tenant: u64, rows: u32 },
+    /// a fine-tune job was launched for this tenant
+    FinetuneStart { tenant: u64 },
+    /// a fine-tune job completed after `ns` nanoseconds
+    FinetuneEnd { tenant: u64, ns: u64 },
+    /// skip-cache hits observed by a completed fine-tune
+    CacheHit { tenant: u64, count: u32 },
+    /// skip-cache misses (frozen forwards actually recomputed)
+    CacheMiss { tenant: u64, count: u32 },
+    /// idle tenant's serve-side state evicted (TTL policy)
+    Evicted { tenant: u64 },
+    /// fleet checkpoint written, covering this many tenants
+    Persisted { tenants: u32 },
+    /// fleet checkpoint installed, (re-)installing this many tenants
+    Restored { tenants: u32 },
+}
+
+impl EventKind {
+    /// Dense index into `KIND_NAMES` / per-kind counters.
+    pub fn index(&self) -> usize {
+        match self {
+            EventKind::Admitted { .. } => 0,
+            EventKind::Queued { .. } => 1,
+            EventKind::FlushStart { .. } => 2,
+            EventKind::FlushEnd { .. } => 3,
+            EventKind::FanoutTenant { .. } => 4,
+            EventKind::FinetuneStart { .. } => 5,
+            EventKind::FinetuneEnd { .. } => 6,
+            EventKind::CacheHit { .. } => 7,
+            EventKind::CacheMiss { .. } => 8,
+            EventKind::Evicted { .. } => 9,
+            EventKind::Persisted { .. } => 10,
+            EventKind::Restored { .. } => 11,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        KIND_NAMES[self.index()]
+    }
+}
+
+/// One recorded event: global sequence number + dual clock + payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// total-order sequence number (never wraps in practice: u64)
+    pub seq: u64,
+    /// deterministic pump-tick clock at record time
+    pub tick: u64,
+    /// monotonic nanoseconds since the recorder's construction
+    pub mono_ns: u64,
+    pub kind: EventKind,
+}
+
+/// The ring buffer itself. All storage is allocated in `new`; `record`
+/// is copy-only (one branch when disabled).
+#[derive(Clone, Debug)]
+pub struct FlightRecorder {
+    enabled: bool,
+    capacity: usize,
+    buf: Vec<Event>,
+    /// index of the OLDEST event once the ring is full (next overwrite)
+    head: usize,
+    seq: u64,
+    dropped: u64,
+    counts: [u64; EVENT_KINDS],
+    tick: u64,
+    epoch: Instant,
+}
+
+impl FlightRecorder {
+    /// Preallocate a ring of `capacity` events. `capacity` must be ≥ 1.
+    pub fn new(capacity: usize, enabled: bool) -> Self {
+        assert!(capacity >= 1, "flight recorder capacity must be >= 1");
+        Self {
+            enabled,
+            capacity,
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            seq: 0,
+            dropped: 0,
+            counts: [0; EVENT_KINDS],
+            tick: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+    }
+
+    /// Advance the deterministic clock (called once per server pump).
+    #[inline]
+    pub fn set_tick(&mut self, tick: u64) {
+        self.tick = tick;
+    }
+
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Record one event. Zero heap allocation: within capacity the push
+    /// lands in preallocated storage; at capacity the oldest slot is
+    /// overwritten in place and `dropped` is bumped.
+    #[inline]
+    pub fn record(&mut self, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let e = Event {
+            seq: self.seq,
+            tick: self.tick,
+            mono_ns: self.epoch.elapsed().as_nanos() as u64,
+            kind,
+        };
+        self.seq += 1;
+        self.counts[kind.index()] += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded (held + overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events overwritten because the ring was full. Nonzero means the
+    /// tail in `events_in_order` is a truncated history.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Per-kind totals over the recorder's whole lifetime (not just the
+    /// events still held).
+    pub fn kind_count(&self, kind_index: usize) -> u64 {
+        self.counts[kind_index]
+    }
+
+    /// Held events, oldest first.
+    pub fn events_in_order(&self) -> impl Iterator<Item = &Event> {
+        let (older, newer) = if self.buf.len() < self.capacity {
+            (&self.buf[..], &self.buf[..0])
+        } else {
+            (&self.buf[self.head..], &self.buf[..self.head])
+        };
+        older.iter().chain(newer.iter())
+    }
+
+    /// Allocating summary for snapshots/reports (cold path only).
+    pub fn summary(&self) -> RecorderSummary {
+        let held = self.len();
+        let skip = held.saturating_sub(SUMMARY_TAIL);
+        RecorderSummary {
+            enabled: self.enabled,
+            capacity: self.capacity,
+            recorded: self.seq,
+            dropped: self.dropped,
+            counts: KIND_NAMES
+                .iter()
+                .zip(self.counts.iter())
+                .map(|(&name, &n)| (name, n))
+                .collect(),
+            tail: self.events_in_order().skip(skip).copied().collect(),
+        }
+    }
+}
+
+/// Cap on how many trailing events a `RecorderSummary` carries: enough
+/// for a postmortem tail, small enough for a JSON snapshot.
+pub const SUMMARY_TAIL: usize = 64;
+
+/// Cold-path view of a recorder for `ObsSnapshot` (allocates; never built
+/// on the flush path).
+#[derive(Clone, Debug)]
+pub struct RecorderSummary {
+    pub enabled: bool,
+    pub capacity: usize,
+    /// total events ever recorded
+    pub recorded: u64,
+    /// events lost to ring overwrite
+    pub dropped: u64,
+    /// lifetime per-kind totals, in `KIND_NAMES` order
+    pub counts: Vec<(&'static str, u64)>,
+    /// the newest held events, oldest first, at most `SUMMARY_TAIL`
+    pub tail: Vec<Event>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_with_dual_clock() {
+        let mut r = FlightRecorder::new(8, true);
+        r.set_tick(3);
+        r.record(EventKind::Admitted { tenant: 7 });
+        r.set_tick(4);
+        r.record(EventKind::Queued { tenant: 7, ticket: 1 });
+        let evs: Vec<&Event> = r.events_in_order().collect();
+        assert_eq!(evs.len(), 2);
+        assert_eq!((evs[0].seq, evs[0].tick), (0, 3));
+        assert_eq!((evs[1].seq, evs[1].tick), (1, 4));
+        assert!(evs[1].mono_ns >= evs[0].mono_ns);
+        assert_eq!(evs[0].kind, EventKind::Admitted { tenant: 7 });
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.recorded(), 2);
+    }
+
+    #[test]
+    fn overwrites_oldest_and_counts_drops() {
+        let mut r = FlightRecorder::new(4, true);
+        for t in 0..10u64 {
+            r.record(EventKind::Evicted { tenant: t });
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.recorded(), 10);
+        let seqs: Vec<u64> = r.events_in_order().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "keeps the newest, oldest first");
+        // lifetime per-kind counts survive overwrite
+        assert_eq!(r.kind_count(EventKind::Evicted { tenant: 0 }.index()), 10);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = FlightRecorder::new(4, false);
+        r.record(EventKind::FlushStart { pending: 5 });
+        assert!(r.is_empty());
+        assert_eq!(r.recorded(), 0);
+        r.set_enabled(true);
+        r.record(EventKind::FlushStart { pending: 5 });
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn kind_names_align_with_indices() {
+        let kinds = [
+            EventKind::Admitted { tenant: 0 },
+            EventKind::Queued { tenant: 0, ticket: 0 },
+            EventKind::FlushStart { pending: 0 },
+            EventKind::FlushEnd { rows: 0, ns: 0 },
+            EventKind::FanoutTenant { tenant: 0, rows: 0 },
+            EventKind::FinetuneStart { tenant: 0 },
+            EventKind::FinetuneEnd { tenant: 0, ns: 0 },
+            EventKind::CacheHit { tenant: 0, count: 0 },
+            EventKind::CacheMiss { tenant: 0, count: 0 },
+            EventKind::Evicted { tenant: 0 },
+            EventKind::Persisted { tenants: 0 },
+            EventKind::Restored { tenants: 0 },
+        ];
+        assert_eq!(kinds.len(), EVENT_KINDS);
+        for (i, k) in kinds.iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert_eq!(k.name(), KIND_NAMES[i]);
+        }
+    }
+
+    #[test]
+    fn summary_caps_tail_and_keeps_totals() {
+        let mut r = FlightRecorder::new(256, true);
+        for t in 0..100u64 {
+            r.record(EventKind::Admitted { tenant: t });
+        }
+        let s = r.summary();
+        assert_eq!(s.recorded, 100);
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.tail.len(), SUMMARY_TAIL);
+        assert_eq!(s.tail.last().unwrap().seq, 99);
+        let admitted = s.counts.iter().find(|(n, _)| *n == "admitted").unwrap();
+        assert_eq!(admitted.1, 100);
+    }
+}

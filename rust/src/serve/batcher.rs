@@ -46,12 +46,24 @@
 //! (`tests/kernel_equiv.rs`); the pre-grouping path survives as
 //! [`MicroBatcher::flush_reference`] — the correctness oracle and the
 //! `benches/serve_micro.rs` baseline.
+//!
+//! ## Observability (DESIGN.md §11)
+//!
+//! The flush decomposes into [`FlushStage`] spans (staging → backbone
+//! forward → snapshot → gather → adapter fan-out → scatter → emit),
+//! accumulated in the batcher's [`FlushStages`] fixed arrays, and
+//! [`MicroBatcher::flush_traced`] additionally records
+//! `FlushStart`/`FanoutTenant`/`FlushEnd` events into a caller-owned
+//! [`FlightRecorder`]. Both are allocation-free: the zero-alloc proof in
+//! `tests/zero_alloc.rs` runs with BOTH enabled.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::model::{ExecCtx, Mlp};
 use crate::nn::lora::LoraAdapter;
+use crate::obs::stages::{FlushStage, FlushStages};
+use crate::obs::trace::{EventKind, FlightRecorder};
 use crate::serve::registry::{AdapterRegistry, SnapshotBatch, TenantId};
 use crate::tensor::ops::Backend;
 use crate::tensor::Mat;
@@ -227,6 +239,7 @@ impl FrozenBackbone {
     /// the adapter pair as two sub-batch GEMMs, and scatter the group's
     /// logits back. All buffers are capacity-sized and reshaped in
     /// place — zero allocations.
+    #[allow(clippy::too_many_arguments)]
     fn apply_adapters_grouped(
         &mut self,
         rows: &[u32],
@@ -234,27 +247,36 @@ impl FrozenBackbone {
         xsub: &mut [Mat],
         ya: &mut Mat,
         logits_sub: &mut Mat,
+        stages: &mut FlushStages,
     ) {
         let g = rows.len();
         let n_out = self.ctx.logits.cols;
         assert_eq!(adapters.len(), self.ctx.x.len(), "one adapter per backbone layer");
+        let t = stages.span();
         logits_sub.set_logical(g, n_out);
         for (gi, &r) in rows.iter().enumerate() {
             logits_sub.row_mut(gi).copy_from_slice(self.ctx.logits.row(r as usize));
         }
+        stages.add(FlushStage::Gather, t);
         for (k, ad) in adapters.iter().enumerate() {
             assert!(ad.rank() <= MAX_RANK, "adapter rank {} exceeds MAX_RANK", ad.rank());
             let xk = &self.ctx.x[k];
             let xs = &mut xsub[k];
+            let t = stages.span();
             xs.set_logical(g, xk.cols);
             for (gi, &r) in rows.iter().enumerate() {
                 xs.row_mut(gi).copy_from_slice(xk.row(r as usize));
             }
+            stages.add(FlushStage::Gather, t);
+            let t = stages.span();
             ad.forward_grouped(self.ctx.backend, xs, ya, logits_sub);
+            stages.add(FlushStage::AdapterFanout, t);
         }
+        let t = stages.span();
         for (gi, &r) in rows.iter().enumerate() {
             self.ctx.logits.row_mut(r as usize).copy_from_slice(logits_sub.row(gi));
         }
+        stages.add(FlushStage::Scatter, t);
     }
 }
 
@@ -350,6 +372,8 @@ pub struct MicroBatcher {
     snaps: SnapshotBatch,
     /// reusable tenant-grouped fan-out scratch
     fanout: FanoutScratch,
+    /// per-stage flush attribution (fixed arrays — allocation-free)
+    stages: FlushStages,
 }
 
 impl MicroBatcher {
@@ -391,7 +415,19 @@ impl MicroBatcher {
             staged: Vec::with_capacity(capacity),
             snaps: SnapshotBatch::new(),
             fanout,
+            stages: FlushStages::new(true),
         }
+    }
+
+    /// Per-stage flush timers (read-only view).
+    pub fn stages(&self) -> &FlushStages {
+        &self.stages
+    }
+
+    /// Toggle stage timing. On (the default) costs two monotonic clock
+    /// reads per stage into fixed arrays; off costs one branch per site.
+    pub fn set_stage_timing(&mut self, enabled: bool) {
+        self.stages.set_enabled(enabled);
     }
 
     pub fn capacity(&self) -> usize {
@@ -453,6 +489,15 @@ impl MicroBatcher {
     /// within a bounded number of pumps instead of waiting for a full
     /// batch that may never form. Returns the rows served (possibly 0).
     pub fn pump(&mut self, out: &mut Vec<BatchResponse>) -> usize {
+        self.pump_traced(out, None)
+    }
+
+    /// `pump` with an optional flight recorder for the flush events.
+    pub fn pump_traced(
+        &mut self,
+        out: &mut Vec<BatchResponse>,
+        trace: Option<&mut FlightRecorder>,
+    ) -> usize {
         self.pump_count += 1;
         let Some(&(_, oldest)) = self.queue.front() else {
             return 0;
@@ -460,7 +505,7 @@ impl MicroBatcher {
         let full = self.queue.len() >= self.backbone.capacity();
         let expired = self.pump_count.saturating_sub(oldest) >= self.deadline_pumps;
         if full || expired {
-            self.flush(out)
+            self.flush_traced(out, trace)
         } else {
             0
         }
@@ -477,21 +522,49 @@ impl MicroBatcher {
     /// its logits are bit-identical to [`MicroBatcher::flush_reference`]
     /// (`tests/kernel_equiv.rs`).
     pub fn flush(&mut self, out: &mut Vec<BatchResponse>) -> usize {
-        let b = self.stage_and_forward();
-        if b == 0 {
+        self.flush_traced(out, None)
+    }
+
+    /// `flush` with an optional flight recorder: records
+    /// `FlushStart { pending }`, one `FanoutTenant { tenant, rows }` per
+    /// tenant group, and `FlushEnd { rows, ns }` — all copy-only into the
+    /// recorder's preallocated ring, so the zero-alloc guarantee holds
+    /// with tracing on.
+    pub fn flush_traced(
+        &mut self,
+        out: &mut Vec<BatchResponse>,
+        mut trace: Option<&mut FlightRecorder>,
+    ) -> usize {
+        if self.queue.is_empty() {
             return 0;
         }
+        // the whole-flush span: the stage spans below are disjoint
+        // sub-intervals of it, measured by the same clock, so their sum
+        // reconciles against this total (and against the server's
+        // batch_forward histogram, which records exactly this value)
+        let t_flush = self.stages.span();
+        if let Some(rec) = trace.as_deref_mut() {
+            rec.record(EventKind::FlushStart { pending: self.queue.len() as u32 });
+        }
+        let b = self.stage_and_forward(true);
+        debug_assert!(b > 0, "non-empty queue must stage at least one row");
         // one registry lock acquisition per DISTINCT shard for the whole
         // batch; rows from the same tenant share one snapshot
+        let t = self.stages.span();
         self.registry
             .snapshot_many_into(self.staged.iter().map(|r| r.tenant), &mut self.snaps);
+        self.stages.add(FlushStage::Snapshot, t);
+        let t = self.stages.span();
         self.backbone.stage_logits(b);
+        self.stages.add(FlushStage::Staging, t);
         // group rows by tenant: sort the row-index scratch, then walk runs
         let FanoutScratch { order, xsub, ya, logits_sub } = &mut self.fanout;
+        let t = self.stages.span();
         order.clear();
         order.extend(0..b as u32);
         let staged = &self.staged;
         order.sort_unstable_by_key(|&r| staged[r as usize].tenant);
+        self.stages.add(FlushStage::Gather, t);
         let mut i = 0;
         while i < b {
             let tenant = self.staged[order[i] as usize].tenant;
@@ -506,13 +579,26 @@ impl MicroBatcher {
                     xsub,
                     ya,
                     logits_sub,
+                    &mut self.stages,
                 );
             }
             // tenants with nothing published serve the bare backbone
             // logits already staged
+            if let Some(rec) = trace.as_deref_mut() {
+                rec.record(EventKind::FanoutTenant { tenant, rows: (j - i) as u32 });
+            }
             i = j;
         }
+        let t = self.stages.span();
         self.emit_responses(b, out);
+        self.stages.add(FlushStage::Emit, t);
+        self.stages.finish_flush(t_flush);
+        if let Some(rec) = trace.as_deref_mut() {
+            rec.record(EventKind::FlushEnd {
+                rows: b as u32,
+                ns: self.stages.last_total_ns().unwrap_or(0),
+            });
+        }
         b
     }
 
@@ -523,7 +609,7 @@ impl MicroBatcher {
     /// against and (b) the baseline `benches/serve_micro.rs` measures
     /// the tenant-grouped speedup from. Not for production use.
     pub fn flush_reference(&mut self, out: &mut Vec<BatchResponse>) -> usize {
-        let b = self.stage_and_forward();
+        let b = self.stage_and_forward(false);
         if b == 0 {
             return 0;
         }
@@ -543,18 +629,25 @@ impl MicroBatcher {
 
     /// Shared flush front half: move up to `capacity` queued requests
     /// into the staging buffer, load their rows, run the ONE shared
-    /// frozen forward. Returns the batch size.
-    fn stage_and_forward(&mut self) -> usize {
+    /// frozen forward. Returns the batch size. `timed` attributes the
+    /// staging and forward spans (the traced flush passes true; the
+    /// reference flush stays unattributed so its stage sums can never
+    /// outgrow a flush total it doesn't record).
+    fn stage_and_forward(&mut self, timed: bool) -> usize {
         let b = self.queue.len().min(self.backbone.capacity());
         if b == 0 {
             return 0;
         }
+        let t = if timed { self.stages.span() } else { None };
         self.staged.clear();
         self.staged.extend(self.queue.drain(..b).map(|(r, _)| r));
         for (row, r) in self.staged.iter().enumerate() {
             self.backbone.load_row(row, &r.x);
         }
+        self.stages.add(FlushStage::Staging, t);
+        let t = if timed { self.stages.span() } else { None };
         self.backbone.forward(b);
+        self.stages.add(FlushStage::BackboneForward, t);
         b
     }
 

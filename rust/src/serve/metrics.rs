@@ -63,22 +63,52 @@ impl LatencyHistogram {
     }
 
     /// Approximate p-th percentile (0..=100) in ms: the upper bound of the
-    /// bucket where the cumulative count crosses p.
+    /// bucket where the cumulative count crosses p — except when that
+    /// bucket is the one holding the recorded maximum, where the true
+    /// value cannot exceed `max_ns`, so the recorded maximum is returned
+    /// instead of a bound up to 2x above it. Consequence: no percentile
+    /// ever exceeds `max_ms()`.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
         let target = (p / 100.0 * total as f64).ceil().max(1.0) as u64;
+        let highest = self.buckets.iter().rposition(|&c| c > 0).unwrap_or(0);
         let mut cum = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
             cum += c;
             if cum >= target {
+                if i == highest {
+                    return self.max_ms();
+                }
                 let upper_ns = 1u64 << (i + 1).min(63);
                 return upper_ns as f64 / 1e6;
             }
         }
         self.max_ms()
+    }
+
+    /// Raw per-bucket counts — the mergeable representation carried by
+    /// `obs/v1` snapshots.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// The exact recorded maximum in nanoseconds.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Associative merge: after it, `self` is bit-exact in counts and max
+    /// (and within fp rounding in mean/σ) to a histogram that recorded
+    /// both sample streams.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.stats.merge(&other.stats);
+        self.max_ns = self.max_ns.max(other.max_ns);
     }
 
     /// One-line summary for reports.
@@ -134,6 +164,16 @@ pub struct ServeMetrics {
     /// single-tenant migration payloads exported / imported
     pub exports: u64,
     pub imports: u64,
+    /// server pumps executed — the deterministic clock denominator for
+    /// `rows_per_pump` (carried in obs snapshots; wall-clock-free)
+    pub pump_ticks: u64,
+    /// fine-tune wall-clock by stage, summed over completed jobs (the
+    /// paper's Tables 6/7 taxonomy: the skip-cache win is `forward_ns`
+    /// shrinking while `backward_ns`/`update_ns` stay put)
+    pub finetune_forward_ns: u64,
+    pub finetune_backward_ns: u64,
+    pub finetune_update_ns: u64,
+    pub finetune_cache_ns: u64,
     started: Instant,
 }
 
@@ -159,6 +199,11 @@ impl Default for ServeMetrics {
             tenants_restored: 0,
             exports: 0,
             imports: 0,
+            pump_ticks: 0,
+            finetune_forward_ns: 0,
+            finetune_backward_ns: 0,
+            finetune_update_ns: 0,
+            finetune_cache_ns: 0,
             started: Instant::now(),
         }
     }
@@ -183,7 +228,9 @@ impl ServeMetrics {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Served rows per wall-clock second since creation.
+    /// Served rows per wall-clock second since creation. Wall-clock
+    /// denominators count idle time and vary run to run — tests and
+    /// snapshots should prefer the deterministic `rows_per_pump`.
     pub fn throughput_rps(&self) -> f64 {
         let dt = self.uptime_secs();
         if dt <= 0.0 {
@@ -191,6 +238,48 @@ impl ServeMetrics {
         } else {
             self.batched_rows as f64 / dt
         }
+    }
+
+    /// Deterministic throughput: rows served per pump tick. Same inputs →
+    /// same value, independent of host speed or idle gaps, so it is the
+    /// form tests assert on and obs snapshots carry.
+    pub fn rows_per_pump(&self) -> f64 {
+        if self.pump_ticks == 0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / self.pump_ticks as f64
+        }
+    }
+
+    /// Associative fleet aggregation (ROADMAP item 3): sums every counter
+    /// and merges both histograms; the result reads as if one server had
+    /// seen both traffic streams. `self`'s construction instant is kept —
+    /// wall-clock uptime is a local notion and deliberately not merged.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.batch_forward.merge(&other.batch_forward);
+        self.finetune.merge(&other.finetune);
+        self.predicts += other.predicts;
+        self.feedbacks += other.feedbacks;
+        self.swaps += other.swaps;
+        self.queue_rejections += other.queue_rejections;
+        self.rate_limited += other.rate_limited;
+        self.evictions += other.evictions;
+        self.adaptations += other.adaptations;
+        self.finetune_panics += other.finetune_panics;
+        self.batches += other.batches;
+        self.batched_rows += other.batched_rows;
+        self.finetune_cache_hits += other.finetune_cache_hits;
+        self.finetune_cache_misses += other.finetune_cache_misses;
+        self.persists += other.persists;
+        self.restores += other.restores;
+        self.tenants_restored += other.tenants_restored;
+        self.exports += other.exports;
+        self.imports += other.imports;
+        self.pump_ticks += other.pump_ticks;
+        self.finetune_forward_ns += other.finetune_forward_ns;
+        self.finetune_backward_ns += other.finetune_backward_ns;
+        self.finetune_update_ns += other.finetune_update_ns;
+        self.finetune_cache_ns += other.finetune_cache_ns;
     }
 
     /// Fraction of fine-tune frozen forwards served from Skip-Caches.
@@ -206,7 +295,7 @@ impl ServeMetrics {
     /// Multi-line human report.
     pub fn report(&self) -> String {
         format!(
-            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  admission: {} queue-full, {} rate-limited, {} idle evictions\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n  persist  : {} saves, {} restores ({} tenants installed), {} exports, {} imports\n",
+            "serve metrics\n  requests : {} predict, {} feedback, {} swap\n  admission: {} queue-full, {} rate-limited, {} idle evictions\n  batching : {} batches, {} rows, {:.1} rows/batch, {:.0} rows/s, {:.2} rows/pump over {} ticks\n  batch fwd: {}\n  adapt    : {} fine-tunes ({} isolated panics), {}\n  skipcache: {:.0}% hit rate across fine-tunes ({} hits / {} misses)\n  persist  : {} saves, {} restores ({} tenants installed), {} exports, {} imports\n",
             self.predicts,
             self.feedbacks,
             self.swaps,
@@ -217,6 +306,8 @@ impl ServeMetrics {
             self.batched_rows,
             self.rows_per_batch(),
             self.throughput_rps(),
+            self.rows_per_pump(),
+            self.pump_ticks,
             self.batch_forward.summary(),
             self.adaptations,
             self.finetune_panics,
@@ -266,11 +357,39 @@ mod tests {
     }
 
     #[test]
+    fn percentile_tail_never_exceeds_recorded_max() {
+        let mut h = LatencyHistogram::new();
+        // all three land in the [2^19, 2^20) bucket, whose upper bound
+        // (1_048_576 ns) would overreport the true 1.0ms max
+        for ns in [700_000u64, 800_000, 1_000_000] {
+            h.record_ns(ns);
+        }
+        for p in [50.0, 95.0, 99.0, 100.0] {
+            let v = h.percentile_ms(p);
+            assert!(
+                (v - h.max_ms()).abs() < 1e-12,
+                "p{p} = {v} must equal max {} when the target bucket holds the max",
+                h.max_ms()
+            );
+        }
+        // a percentile landing BELOW the max bucket keeps the upper-bound
+        // semantics (here: the 1_000ns sample's bucket tops out at 1024ns)
+        h.record_ns(1_000);
+        let p25 = h.percentile_ms(25.0);
+        assert!((p25 - 0.001024).abs() < 1e-12, "{p25}");
+        assert!(h.percentile_ms(99.0) <= h.max_ms() + 1e-12);
+    }
+
+    #[test]
     fn serve_metrics_rollups() {
         let mut m = ServeMetrics::new();
         m.batches = 4;
         m.batched_rows = 64;
         assert!((m.rows_per_batch() - 16.0).abs() < 1e-12);
+        // the deterministic throughput form: exact, wall-clock-free
+        m.pump_ticks = 8;
+        assert!((m.rows_per_pump() - 8.0).abs() < 1e-12);
+        assert_eq!(m.rows_per_pump(), m.batched_rows as f64 / m.pump_ticks as f64);
         m.batch_forward.record_ns(5_000);
         m.queue_rejections = 3;
         m.rate_limited = 2;
@@ -280,6 +399,7 @@ mod tests {
         m.tenants_restored = 7;
         let r = m.report();
         assert!(r.contains("16.0 rows/batch"), "{r}");
+        assert!(r.contains("8.00 rows/pump over 8 ticks"), "{r}");
         assert!(r.contains("n=1"), "{r}");
         assert!(r.contains("3 queue-full, 2 rate-limited, 1 idle evictions"), "{r}");
         assert!(

@@ -89,6 +89,16 @@
 //! println!("{}", server.metrics.report());
 //! ```
 //!
+//! Every pump is OBSERVABLE ([`crate::obs`], DESIGN.md §11): a
+//! fixed-capacity flight recorder traces the request lifecycle
+//! (admit → queue → flush → fan-out → fine-tune → evict/persist) with
+//! zero heap allocations on the hot path, flushes decompose into
+//! per-stage timers mirroring the paper's Tables 6/7 attribution, and
+//! `Request::Observe` returns a mergeable
+//! [`crate::obs::ObsSnapshot`] (`skip2lora/obs/v1` JSON) for fleet-wide
+//! aggregation — `skip2lora obs-dump | skip2lora validate-obs` smoke-tests
+//! the whole pipe in CI.
+//!
 //! The end-to-end story (100+ drifting tenants, per-tenant recovery, no
 //! cross-tenant interference) runs as
 //! `cargo run --release --example fleet_serving`.

@@ -50,6 +50,10 @@ use crate::method::Method;
 use crate::model::mlp::AdapterTopology;
 use crate::model::{AdapterSet, Mlp};
 use crate::nn::lora::LoraAdapter;
+use crate::obs::snapshot::{ObsSnapshot, WorkerSnapshot};
+use crate::obs::stages::TenantRollups;
+use crate::obs::trace::{EventKind, FlightRecorder};
+use crate::obs::ObsConfig;
 use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, SubmitError, MAX_RANK};
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::persist::RegistryCheckpoint;
@@ -120,6 +124,9 @@ pub struct ServeConfig {
     /// instead of training, exercising the panic-isolation path. 0 (the
     /// default) disables injection.
     pub inject_adapt_panics: u64,
+    /// observability layer (flight recorder, per-stage flush timers,
+    /// heavy-hitter rollups — DESIGN.md §11); defaults to fully on
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeConfig {
@@ -143,6 +150,7 @@ impl Default for ServeConfig {
             seed: 7,
             workers: 0,
             inject_adapt_panics: 0,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -164,6 +172,10 @@ pub enum Request {
     /// [`FleetServer::restore_from`]); fleet-wide, tenant id ignored
     RestoreState(PathBuf),
     Stats,
+    /// read-only observability snapshot (`skip2lora/obs/v1`: mergeable
+    /// metrics, per-stage flush attribution, flight-recorder tail —
+    /// DESIGN.md §11); fleet-wide, tenant id ignored
+    Observe,
 }
 
 /// Why a request was turned away — typed so clients can react correctly
@@ -216,6 +228,9 @@ pub enum Response {
     Restored(RestoreReport),
     Rejected(RejectReason),
     Stats(Box<ServerStats>),
+    /// the full observability snapshot (boxed — it carries histograms,
+    /// the recorder tail and the rollup table)
+    Observed(Box<ObsSnapshot>),
 }
 
 /// A served Predict/Feedback request.
@@ -304,6 +319,12 @@ struct AdaptResult {
     train_secs: f64,
     cache_hits: u64,
     cache_misses: u64,
+    /// per-stage wall-clock over the whole job (the paper's Tables 6/7
+    /// taxonomy), extracted from the job's `PhaseTimer`
+    forward_ns: u64,
+    backward_ns: u64,
+    update_ns: u64,
+    cache_ns: u64,
 }
 
 /// What a fine-tune job reports back: success, or an isolated panic.
@@ -332,6 +353,11 @@ pub struct FleetServer {
     /// Token-bucket refills and the idle-TTL sweep both run on it, so
     /// admission/eviction behavior is exactly replayable in tests.
     pump_tick: u64,
+    /// flight recorder: preallocated ring of typed events, dual-stamped
+    /// on (pump_tick, monotonic ns); zero-alloc on the hot path
+    recorder: FlightRecorder,
+    /// bounded heavy-hitter per-tenant rollups (top-K table)
+    rollups: TenantRollups,
 }
 
 impl FleetServer {
@@ -358,12 +384,15 @@ impl FleetServer {
         let registry = Arc::new(AdapterRegistry::with_shards(cfg.registry_shards));
         let frozen =
             FrozenBackbone::new(Arc::clone(&backbone), cfg.backend, cfg.batch_capacity);
-        let batcher = MicroBatcher::with_limits(
+        let mut batcher = MicroBatcher::with_limits(
             frozen,
             Arc::clone(&registry),
             cfg.flush_deadline_pumps,
             cfg.queue_bound,
         );
+        batcher.set_stage_timing(cfg.obs.stage_timers);
+        let recorder = FlightRecorder::new(cfg.obs.trace_capacity, cfg.obs.trace);
+        let rollups = TenantRollups::new(cfg.obs.top_tenants);
         let pool = (cfg.workers > 0).then(|| WorkerPool::new(cfg.workers));
         let (results_tx, results_rx) = mpsc::channel();
         Self {
@@ -378,6 +407,8 @@ impl FleetServer {
             metrics: ServeMetrics::new(),
             next_ticket: 0,
             pump_tick: 0,
+            recorder,
+            rollups,
         }
     }
 
@@ -467,6 +498,7 @@ impl FleetServer {
                 Err(e) => Response::Rejected(RejectReason::PersistFailed(e.to_string())),
             },
             Request::Stats => Response::Stats(Box::new(self.stats())),
+            Request::Observe => Response::Observed(Box::new(self.obs_snapshot())),
         }
     }
 
@@ -486,6 +518,7 @@ impl FleetServer {
         crate::model::io::atomic_write(path, &bytes)
             .with_context(|| format!("persist fleet state to {}", path.display()))?;
         self.metrics.persists += 1;
+        self.recorder.record(EventKind::Persisted { tenants: ck.tenants.len() as u32 });
         Ok(PersistReport { tenants: ck.tenants.len(), bytes: bytes.len() })
     }
 
@@ -506,6 +539,7 @@ impl FleetServer {
         let installed = ck.restore_into(&self.registry);
         self.metrics.restores += 1;
         self.metrics.tenants_restored += installed as u64;
+        self.recorder.record(EventKind::Restored { tenants: installed as u32 });
         Ok(RestoreReport {
             tenants: ck.tenants.len(),
             installed,
@@ -603,10 +637,16 @@ impl FleetServer {
             }
             st.bucket_tokens -= 1.0;
         }
+        // past the bucket: the request is ADMITTED (the bounded queue may
+        // still reject it, which the trace then shows as admitted-but-
+        // never-queued — exactly the back-pressure signature)
+        self.recorder.record(EventKind::Admitted { tenant });
         let id = self.next_ticket + 1;
         match self.batcher.try_submit(BatchRequest { tenant, id, x, label }) {
             Ok(()) => {
                 self.next_ticket = id;
+                self.recorder.record(EventKind::Queued { tenant, ticket: id });
+                self.rollups.bump_request(tenant);
                 Ok(id)
             }
             Err(SubmitError::QueueFull { bound }) => {
@@ -632,15 +672,27 @@ impl FleetServer {
     /// launch). Returns the served requests.
     pub fn pump(&mut self) -> Vec<Completion> {
         self.pump_tick += 1;
+        self.metrics.pump_ticks += 1;
+        self.recorder.set_tick(self.pump_tick);
         self.drain_adapt_results();
         self.evict_idle();
         let mut responses = Vec::new();
         let t0 = Instant::now();
-        let n = self.batcher.pump(&mut responses);
+        // disjoint-field borrow: the batcher writes flush events straight
+        // into the server's recorder with no intermediate buffer
+        let n = self.batcher.pump_traced(&mut responses, Some(&mut self.recorder));
         if n > 0 {
-            self.metrics
-                .batch_forward
-                .record_ns(t0.elapsed().as_nanos() as u64);
+            // with stage timing on, record the flush's OWN measured span —
+            // the same total the per-stage timers decompose, so stage sums
+            // reconcile against this histogram (tests/obs_subsystem.rs
+            // holds them within 5%); with timing off, fall back to the
+            // pump-side wall clock
+            let flush_ns = self
+                .batcher
+                .stages()
+                .last_total_ns()
+                .unwrap_or_else(|| t0.elapsed().as_nanos() as u64);
+            self.metrics.batch_forward.record_ns(flush_ns);
             self.metrics.batches += 1;
             self.metrics.batched_rows += n as u64;
         }
@@ -695,8 +747,15 @@ impl FleetServer {
         }
         let tick = self.pump_tick;
         let before = self.tenants.len();
-        self.tenants.retain(|_, st| {
-            st.cache.is_none() || tick.saturating_sub(st.last_active_tick) < ttl
+        // borrow split: `retain` holds the tenants map, the closure takes
+        // only the recorder — disjoint fields of self
+        let recorder = &mut self.recorder;
+        self.tenants.retain(|&tenant, st| {
+            let keep = st.cache.is_none() || tick.saturating_sub(st.last_active_tick) < ttl;
+            if !keep {
+                recorder.record(EventKind::Evicted { tenant });
+            }
+            keep
         });
         self.metrics.evictions += (before - self.tenants.len()) as u64;
     }
@@ -735,6 +794,7 @@ impl FleetServer {
         // fault injection: the first `inject_adapt_panics` jobs fail
         let inject_panic = self.metrics.adaptations < self.cfg.inject_adapt_panics;
         self.metrics.adaptations += 1;
+        self.recorder.record(EventKind::FinetuneStart { tenant });
 
         // pointer clone of the SHARED backbone — never a weight copy;
         // Skip2-LoRA is a frozen-backbone method, so the job only ever
@@ -781,6 +841,32 @@ impl FleetServer {
                     self.metrics.finetune.record_secs(res.train_secs);
                     self.metrics.finetune_cache_hits += res.cache_hits;
                     self.metrics.finetune_cache_misses += res.cache_misses;
+                    // paper Tables 6/7: accumulate the job's stage split
+                    self.metrics.finetune_forward_ns += res.forward_ns;
+                    self.metrics.finetune_backward_ns += res.backward_ns;
+                    self.metrics.finetune_update_ns += res.update_ns;
+                    self.metrics.finetune_cache_ns += res.cache_ns;
+                    let job_ns = (res.train_secs.max(0.0) * 1e9) as u64;
+                    self.recorder
+                        .record(EventKind::FinetuneEnd { tenant: res.tenant, ns: job_ns });
+                    if res.cache_hits > 0 {
+                        self.recorder.record(EventKind::CacheHit {
+                            tenant: res.tenant,
+                            count: res.cache_hits.min(u32::MAX as u64) as u32,
+                        });
+                    }
+                    if res.cache_misses > 0 {
+                        self.recorder.record(EventKind::CacheMiss {
+                            tenant: res.tenant,
+                            count: res.cache_misses.min(u32::MAX as u64) as u32,
+                        });
+                    }
+                    self.rollups.record_finetune(
+                        res.tenant,
+                        job_ns,
+                        res.cache_hits,
+                        res.cache_misses,
+                    );
                     if let Some(st) = self.tenants.get_mut(&res.tenant) {
                         st.cache = Some(res.cache);
                         st.last_adapt_accuracy = res.acc_after;
@@ -879,6 +965,35 @@ impl FleetServer {
         }
     }
 
+    /// Assemble the full observability snapshot (schema
+    /// `skip2lora/obs/v1`): mergeable `ServeMetrics` with raw histogram
+    /// buckets, per-stage flush attribution, the paper-style fine-tune
+    /// stage split, the flight-recorder summary, the bounded heavy-hitter
+    /// tenant table, per-shard registry stats and per-worker queue depths.
+    /// Cold path: clones and allocates freely; the hot path only ever
+    /// wrote into the fixed-size structures this copies from.
+    pub fn obs_snapshot(&self) -> ObsSnapshot {
+        ObsSnapshot {
+            pump_ticks: self.pump_tick,
+            tenants_live: self.tenants.len(),
+            queued: self.batcher.pending(),
+            metrics: self.metrics.clone(),
+            flush_stages: self.batcher.stages().clone(),
+            trace: self.recorder.summary(),
+            tenants: self.rollups.top(),
+            shards: self.registry.shard_stats(),
+            workers: self.pool.as_ref().map(|p| WorkerSnapshot {
+                stats: p.stats(),
+                queue_depths: p.queue_depths(),
+            }),
+        }
+    }
+
+    /// Direct read access to the flight recorder (tests, debuggers).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
     /// Quiesce and shut the worker pool down.
     pub fn shutdown(mut self) -> ServerStats {
         self.quiesce();
@@ -929,6 +1044,7 @@ fn run_finetune(
     // publish the trained weights: the adapter struct is weights-only, so
     // the registry snapshot footprint is exactly param_count() floats
     registry.publish(tenant, tuner.adapters.adapters);
+    use crate::train::finetuner::{PH_BACKWARD, PH_CACHE, PH_FORWARD, PH_UPDATE};
     AdaptResult {
         tenant,
         cache_hits: cache.stats().hits - hits0,
@@ -936,6 +1052,10 @@ fn run_finetune(
         cache,
         acc_after,
         train_secs: t0.elapsed().as_secs_f64(),
+        forward_ns: timer.total_ns(PH_FORWARD) as u64,
+        backward_ns: timer.total_ns(PH_BACKWARD) as u64,
+        update_ns: timer.total_ns(PH_UPDATE) as u64,
+        cache_ns: timer.total_ns(PH_CACHE) as u64,
     }
 }
 

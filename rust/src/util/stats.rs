@@ -69,6 +69,28 @@ impl Welford {
             (self.m2 / (self.n - 1) as f64).sqrt()
         }
     }
+
+    /// Parallel combination (Chan et al.): after the merge, `self` holds
+    /// the moments it would have if every sample pushed into `other` had
+    /// been pushed here too, up to floating-point rounding. Associative —
+    /// the fleet-aggregation primitive behind `ServeMetrics::merge`
+    /// (DESIGN.md §11).
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let na = self.n as f64;
+        let nb = other.n as f64;
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.mean += delta * nb / n;
+        self.n += other.n;
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +114,33 @@ mod tests {
         }
         assert!((w.mean() - mean(&xs)).abs() < 1e-12);
         assert!((w.std_dev() - std_dev(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_matches_pushing_all() {
+        let xs = [1.0, 2.5, 3.5, 10.0, -4.0, 0.25, 7.75];
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let (mut a, mut b) = (Welford::default(), Welford::default());
+        for &x in &xs[..3] {
+            a.push(x);
+        }
+        for &x in &xs[3..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.n(), whole.n());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.std_dev() - whole.std_dev()).abs() < 1e-12);
+        // merging an empty accumulator is the identity, both ways
+        let mut e = Welford::default();
+        e.merge(&whole);
+        assert!((e.mean() - whole.mean()).abs() < 1e-12);
+        let before = whole.mean();
+        whole.merge(&Welford::default());
+        assert_eq!(whole.mean(), before);
     }
 
     #[test]

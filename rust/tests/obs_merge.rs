@@ -1,0 +1,194 @@
+//! Merge-law property tests for the fleet-telemetry primitives
+//! (DESIGN.md §11): merging per-node `LatencyHistogram` / `Welford` /
+//! `ServeMetrics` accumulators must reproduce the single-stream result —
+//! counts and maxima bit-exactly, floating-point moments to within
+//! rounding — and must be associative, because fleet aggregation happens
+//! in whatever order snapshots arrive.
+
+use skip2lora::serve::metrics::{LatencyHistogram, ServeMetrics};
+use skip2lora::util::rng::Rng;
+use skip2lora::util::stats::Welford;
+
+/// Latency-shaped samples spanning many histogram buckets: a log-uniform
+/// body (1µs..16ms) plus occasional extreme outliers into the tail.
+fn latency_samples(seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.below(50) == 0 {
+                // rare outlier: 100ms..1s, exercises the max-bucket path
+                rng.range(100_000_000, 1_000_000_000) as u64
+            } else {
+                // log-uniform over ~14 buckets
+                let exp = rng.uniform(10.0, 24.0);
+                2f64.powf(exp as f64) as u64
+            }
+        })
+        .collect()
+}
+
+fn hist_of(samples: &[u64]) -> LatencyHistogram {
+    let mut h = LatencyHistogram::new();
+    for &ns in samples {
+        h.record_ns(ns);
+    }
+    h
+}
+
+#[test]
+fn histogram_merge_equals_single_stream() {
+    for seed in [1u64, 42, 0xBEEF, 7_777_777] {
+        let samples = latency_samples(seed, 500);
+        let whole = hist_of(&samples);
+        // several split points, including degenerate ones
+        for split in [0usize, 1, 250, 499, 500] {
+            let mut a = hist_of(&samples[..split]);
+            let b = hist_of(&samples[split..]);
+            a.merge(&b);
+            // discrete state is bit-exact
+            assert_eq!(a.count(), whole.count(), "seed {seed} split {split}");
+            assert_eq!(a.max_ns(), whole.max_ns(), "seed {seed} split {split}");
+            assert_eq!(a.bucket_counts(), whole.bucket_counts(), "seed {seed} split {split}");
+            // every percentile is derived from buckets + max, so it must
+            // agree exactly once those do
+            for p in [50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(a.percentile_ms(p), whole.percentile_ms(p), "p{p}");
+            }
+            // moments agree to rounding
+            assert!((a.mean_ms() - whole.mean_ms()).abs() < 1e-9, "seed {seed}");
+            assert!((a.std_ms() - whole.std_ms()).abs() < 1e-9, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn histogram_merge_is_associative() {
+    let samples = latency_samples(99, 600);
+    let (s1, s2, s3) = (&samples[..200], &samples[200..350], &samples[350..]);
+    // (a ⊕ b) ⊕ c
+    let mut left = hist_of(s1);
+    left.merge(&hist_of(s2));
+    left.merge(&hist_of(s3));
+    // a ⊕ (b ⊕ c)
+    let mut bc = hist_of(s2);
+    bc.merge(&hist_of(s3));
+    let mut right = hist_of(s1);
+    right.merge(&bc);
+    assert_eq!(left.count(), right.count());
+    assert_eq!(left.max_ns(), right.max_ns());
+    assert_eq!(left.bucket_counts(), right.bucket_counts());
+    assert!((left.mean_ms() - right.mean_ms()).abs() < 1e-9);
+    assert!((left.std_ms() - right.std_ms()).abs() < 1e-9);
+}
+
+#[test]
+fn histogram_merge_empty_is_identity() {
+    let samples = latency_samples(5, 100);
+    let whole = hist_of(&samples);
+    // empty ⊕ x == x
+    let mut left = LatencyHistogram::new();
+    left.merge(&whole);
+    assert_eq!(left.count(), whole.count());
+    assert_eq!(left.bucket_counts(), whole.bucket_counts());
+    assert_eq!(left.max_ns(), whole.max_ns());
+    // x ⊕ empty == x
+    let mut right = whole.clone();
+    right.merge(&LatencyHistogram::new());
+    assert_eq!(right.count(), whole.count());
+    assert_eq!(right.bucket_counts(), whole.bucket_counts());
+    assert_eq!(right.max_ns(), whole.max_ns());
+    assert!((right.mean_ms() - whole.mean_ms()).abs() < 1e-12);
+}
+
+#[test]
+fn welford_merge_property_many_seeds_and_splits() {
+    for seed in [3u64, 17, 1234, 0xDEAD] {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<f64> = (0..400).map(|_| rng.normal_ms(5.0, 3.0) as f64).collect();
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.push(x);
+        }
+        for split in [0usize, 1, 100, 399, 400] {
+            let (mut a, mut b) = (Welford::default(), Welford::default());
+            for &x in &xs[..split] {
+                a.push(x);
+            }
+            for &x in &xs[split..] {
+                b.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.n(), whole.n());
+            assert!((a.mean() - whole.mean()).abs() < 1e-9, "seed {seed} split {split}");
+            assert!((a.std_dev() - whole.std_dev()).abs() < 1e-9, "seed {seed} split {split}");
+        }
+    }
+}
+
+/// Drive two independent `ServeMetrics` with seeded synthetic traffic,
+/// merge, and check the counter books balance against a single-stream
+/// control.
+#[test]
+fn serve_metrics_merge_balances_the_books() {
+    let drive = |m: &mut ServeMetrics, seed: u64, events: usize| {
+        let mut rng = Rng::new(seed);
+        for _ in 0..events {
+            match rng.below(8) {
+                0 => m.predicts += 1,
+                1 => m.feedbacks += 1,
+                2 => m.queue_rejections += 1,
+                3 => m.adaptations += 1,
+                4 => m.finetune_cache_hits += 2,
+                5 => m.finetune_cache_misses += 1,
+                6 => {
+                    m.batches += 1;
+                    m.batched_rows += rng.below(32) as u64 + 1;
+                    m.pump_ticks += 1;
+                    m.batch_forward.record_ns(rng.range(10_000, 10_000_000) as u64);
+                }
+                _ => {
+                    m.finetune.record_secs(rng.uniform(0.001, 0.05) as f64);
+                    m.finetune_forward_ns += rng.below(1_000_000) as u64;
+                    m.finetune_backward_ns += rng.below(2_000_000) as u64;
+                    m.finetune_update_ns += rng.below(500_000) as u64;
+                    m.finetune_cache_ns += rng.below(100_000) as u64;
+                }
+            }
+        }
+    };
+
+    // control: one node that saw ALL the traffic (same seeds, same order
+    // per stream — counters are order-insensitive sums)
+    let mut whole = ServeMetrics::new();
+    drive(&mut whole, 111, 300);
+    drive(&mut whole, 222, 500);
+
+    let mut a = ServeMetrics::new();
+    drive(&mut a, 111, 300);
+    let mut b = ServeMetrics::new();
+    drive(&mut b, 222, 500);
+    a.merge(&b);
+
+    assert_eq!(a.predicts, whole.predicts);
+    assert_eq!(a.feedbacks, whole.feedbacks);
+    assert_eq!(a.queue_rejections, whole.queue_rejections);
+    assert_eq!(a.adaptations, whole.adaptations);
+    assert_eq!(a.finetune_cache_hits, whole.finetune_cache_hits);
+    assert_eq!(a.finetune_cache_misses, whole.finetune_cache_misses);
+    assert_eq!(a.batches, whole.batches);
+    assert_eq!(a.batched_rows, whole.batched_rows);
+    assert_eq!(a.pump_ticks, whole.pump_ticks);
+    assert_eq!(a.finetune_forward_ns, whole.finetune_forward_ns);
+    assert_eq!(a.finetune_backward_ns, whole.finetune_backward_ns);
+    assert_eq!(a.finetune_update_ns, whole.finetune_update_ns);
+    assert_eq!(a.finetune_cache_ns, whole.finetune_cache_ns);
+    // histograms rode along
+    assert_eq!(a.batch_forward.count(), whole.batch_forward.count());
+    assert_eq!(a.batch_forward.bucket_counts(), whole.batch_forward.bucket_counts());
+    assert_eq!(a.finetune.count(), whole.finetune.count());
+    assert_eq!(a.finetune.max_ns(), whole.finetune.max_ns());
+    // derived views agree exactly (same integer inputs)
+    assert_eq!(a.rows_per_batch(), whole.rows_per_batch());
+    assert_eq!(a.rows_per_pump(), whole.rows_per_pump());
+    assert_eq!(a.finetune_cache_hit_rate(), whole.finetune_cache_hit_rate());
+}

@@ -1,0 +1,281 @@
+//! End-to-end observability tests (DESIGN.md §11): the per-stage flush
+//! attribution must reconcile against the measured flush total, the
+//! `Request::Observe` snapshot must satisfy its own `skip2lora/obs/v1`
+//! validator, pump-denominated throughput must be exactly deterministic,
+//! the bounded tenant rollup table must keep heavy hitters, the flight
+//! recorder's overwrite policy must surface drops, and a real
+//! drift-triggered fine-tune must land its forward/backward/update
+//! attribution (the paper's Tables 6/7 decomposition).
+
+use std::sync::Arc;
+
+use skip2lora::data::Dataset;
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::obs::snapshot;
+use skip2lora::obs::ObsConfig;
+use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
+use skip2lora::tensor::ops::Backend;
+use skip2lora::tensor::Mat;
+use skip2lora::train::trainer::pretrain;
+use skip2lora::util::rng::Rng;
+
+/// Same 3-cluster synthetic data the serve unit tests use.
+fn clustered(seed: u64, n: usize, shift: f32) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 8);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..8 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + shift + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset { x, labels, n_classes: 3 }
+}
+
+fn serve_config(workers: usize, obs: ObsConfig) -> ServeConfig {
+    ServeConfig {
+        batch_capacity: 16,
+        window: 20,
+        accuracy_threshold: 0.7,
+        buffer_target: 45,
+        epochs: 30,
+        lr: 0.05,
+        train_batch: 15,
+        workers,
+        obs,
+        ..Default::default()
+    }
+}
+
+fn pretrained_server(workers: usize, obs: ObsConfig) -> FleetServer {
+    let cfg = MlpConfig { dims: vec![8, 12, 12, 3], rank: 2, batch_norm: true };
+    let backbone = pretrain(cfg, &clustered(0, 120, 0.0), 50, 0.05, 1, Backend::Blocked);
+    FleetServer::new(backbone, serve_config(workers, obs))
+}
+
+fn drive(server: &mut FleetServer, tenant: u64, data: &Dataset, feedback: bool) {
+    for i in 0..data.len() {
+        let x = data.x.row(i).to_vec();
+        let req = if feedback {
+            Request::Feedback(x, data.labels[i])
+        } else {
+            Request::Predict(x)
+        };
+        match server.handle(tenant, req) {
+            Response::Queued { .. } => {}
+            other => panic!("unexpected response {other:?}"),
+        }
+        if server.queued() >= server.config().batch_capacity {
+            server.pump();
+        }
+    }
+    server.pump_until_drained();
+}
+
+/// The acceptance criterion: the seven flush stage timers must decompose
+/// the measured flush total — their sum lands within 5% of it. Uses a
+/// backbone big enough (96-96-96-6) that real GEMM work dwarfs the
+/// inter-span gaps the stage timers cannot see.
+#[test]
+fn flush_stage_sum_reconciles_with_flush_total() {
+    let mut rng = Rng::new(0x57A6E5);
+    let cfg = MlpConfig { dims: vec![96, 96, 96, 6], rank: 4, batch_norm: true };
+    let backbone = Arc::new(Mlp::new(&mut rng, cfg.clone()));
+    let registry = Arc::new(AdapterRegistry::new());
+    for t in 0..8u64 {
+        let ads: Vec<LoraAdapter> = (0..3)
+            .map(|k| LoraAdapter::new(&mut rng, cfg.dims[k], 4, 6))
+            .collect();
+        registry.publish(t, ads);
+    }
+    let capacity = 32usize;
+    let frozen = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
+    let mut batcher = MicroBatcher::new(frozen, Arc::clone(&registry));
+
+    let mut out = Vec::with_capacity(capacity);
+    for round in 0..30usize {
+        for i in 0..capacity {
+            batcher.submit(BatchRequest {
+                tenant: ((round + i) % 8) as u64,
+                id: i as u64,
+                x: (0..96).map(|_| rng.normal()).collect(),
+                label: None,
+            });
+        }
+        out.clear();
+        assert_eq!(batcher.flush(&mut out), capacity);
+    }
+
+    let st = batcher.stages();
+    assert_eq!(st.flushes(), 30);
+    assert!(st.last_total_ns().is_some());
+    let (sum, total) = (st.sum_stage_ns(), st.total_ns());
+    assert!(total > 0);
+    assert!(
+        sum as f64 >= 0.95 * total as f64 && sum as f64 <= 1.02 * total as f64,
+        "stage sum {sum} ns does not reconcile with flush total {total} ns \
+         ({:.1}% coverage; acceptance band is 95-102%)",
+        100.0 * sum as f64 / total as f64
+    );
+}
+
+#[test]
+fn observe_roundtrip_satisfies_own_validator() {
+    let mut s = pretrained_server(0, ObsConfig::default());
+    for t in 0..5u64 {
+        drive(&mut s, t, &clustered(40 + t, 30, 0.0), t % 2 == 0);
+    }
+    // exercise the persistence events so the snapshot covers them too
+    let ck = std::env::temp_dir().join("obs_subsystem_roundtrip.s2l");
+    s.persist_to(&ck).expect("persist");
+    s.restore_from(&ck).expect("restore");
+    std::fs::remove_file(&ck).ok();
+
+    let snap = match s.handle(0, Request::Observe) {
+        Response::Observed(snap) => *snap,
+        other => panic!("unexpected response {other:?}"),
+    };
+    let json = snap.to_json();
+    let ticks = snapshot::validate(&json).expect("own snapshot must validate");
+    assert_eq!(ticks as u64, snap.pump_ticks);
+    assert!(snap.pump_ticks > 0);
+    assert_eq!(snap.tenants_live, 5);
+    assert!(!snap.shards.is_empty());
+    assert!(snap.trace.recorded > 0, "traffic must leave a trace");
+    // the parse side of the CLI pipe accepts the serialized form too
+    assert!(snapshot::validate_text(&json.to_string()).is_ok());
+}
+
+/// Satellite: throughput accounting is pump-denominated and therefore
+/// exactly reproducible — two identical servers driven identically report
+/// bit-identical rows_per_pump, and the quotient is exactly
+/// batched_rows / pump_ticks (no wall-clock in the denominator).
+#[test]
+fn rows_per_pump_is_exactly_deterministic() {
+    let run = || {
+        let mut s = pretrained_server(0, ObsConfig::default());
+        for t in 0..4u64 {
+            drive(&mut s, t, &clustered(70 + t, 25, 0.0), false);
+        }
+        (
+            s.metrics.pump_ticks,
+            s.metrics.batched_rows,
+            s.metrics.rows_per_pump(),
+        )
+    };
+    let (ticks_a, rows_a, rpp_a) = run();
+    let (ticks_b, rows_b, rpp_b) = run();
+    assert!(ticks_a > 0 && rows_a > 0);
+    assert_eq!((ticks_a, rows_a), (ticks_b, rows_b), "identical runs must agree");
+    assert_eq!(rpp_a, rpp_b, "rows_per_pump must be bit-identical across runs");
+    assert_eq!(rpp_a, rows_a as f64 / ticks_a as f64, "exact quotient, no wall-clock");
+    // empty metrics divide to zero, not NaN
+    assert_eq!(skip2lora::serve::ServeMetrics::new().rows_per_pump(), 0.0);
+}
+
+#[test]
+fn tenant_rollups_stay_bounded_and_keep_the_heavy_hitter() {
+    let obs = ObsConfig { top_tenants: 4, ..Default::default() };
+    let mut s = pretrained_server(0, obs);
+    // 11 singleton tenants try to churn the table while tenant 99 stays hot
+    let heavy = clustered(5, 40, 0.0);
+    drive(&mut s, 99, &heavy, false);
+    for t in 0..11u64 {
+        drive(&mut s, t, &clustered(200 + t, 4, 0.0), false);
+    }
+    drive(&mut s, 99, &heavy, false);
+
+    let snap = s.obs_snapshot();
+    assert!(snap.tenants.len() <= 4, "rollup table exceeded its bound");
+    let top = &snap.tenants[0];
+    assert_eq!(top.tenant, 99, "heavy hitter churned out of the rollup table");
+    assert!(top.requests >= 80, "space-saving bound must cover the true count");
+}
+
+#[test]
+fn trace_ring_overwrites_oldest_and_counts_drops() {
+    let obs = ObsConfig { trace_capacity: 8, ..Default::default() };
+    let mut s = pretrained_server(0, obs);
+    drive(&mut s, 1, &clustered(9, 40, 0.0), false);
+
+    let snap = s.obs_snapshot();
+    assert_eq!(snap.trace.capacity, 8);
+    assert!(snap.trace.recorded > 8, "workload must overflow the tiny ring");
+    assert!(snap.trace.dropped > 0, "overwrites must be visible, not silent");
+    assert_eq!(
+        snap.trace.dropped + snap.trace.tail.len() as u64,
+        snap.trace.recorded,
+        "held + dropped must account for every event"
+    );
+    // the tail is the newest events, in order
+    for w in snap.trace.tail.windows(2) {
+        assert!(w[1].seq == w[0].seq + 1, "tail must be seq-contiguous");
+    }
+    // and the full snapshot still validates with a saturated ring
+    assert!(snapshot::validate(&snap.to_json()).is_ok());
+}
+
+#[test]
+fn stage_timing_off_costs_one_branch_but_batch_forward_still_records() {
+    let obs = ObsConfig { stage_timers: false, trace: false, ..Default::default() };
+    let mut s = pretrained_server(0, obs);
+    drive(&mut s, 3, &clustered(11, 30, 0.0), false);
+
+    let snap = s.obs_snapshot();
+    assert!(!snap.flush_stages.enabled());
+    assert_eq!(snap.flush_stages.total_ns(), 0, "disabled timers must not measure");
+    assert_eq!(snap.flush_stages.sum_stage_ns(), 0);
+    assert_eq!(snap.trace.recorded, 0, "disabled recorder must not record");
+    // the pump-side wall-clock fallback keeps the latency histogram alive
+    assert!(snap.metrics.batch_forward.count() > 0);
+    assert!(snapshot::validate(&snap.to_json()).is_ok());
+}
+
+/// The paper's Tables 6/7 decomposition, live: a drift-triggered
+/// fine-tune must attribute its wall-clock to cached-forward / backward /
+/// update, and the rollups + trace must carry the tenant's story.
+#[test]
+fn finetune_attribution_reaches_metrics_rollups_and_trace() {
+    let mut s = pretrained_server(0, ObsConfig::default());
+    drive(&mut s, 0, &clustered(20, 60, 0.0), true); // control stays clean
+    drive(&mut s, 1, &clustered(21, 300, 2.5), true); // hard drift
+    s.quiesce();
+    assert!(s.tenant_adaptations(1) >= 1, "drifted tenant must adapt");
+
+    let m = &s.metrics;
+    assert!(m.finetune_forward_ns > 0, "cached-forward time not attributed");
+    assert!(m.finetune_backward_ns > 0, "backward time not attributed");
+    assert!(m.finetune_update_ns > 0, "update time not attributed");
+    // Skip2-LoRA's whole point: backward + update exist, and the forward
+    // side rides the skip-cache rather than recomputing the backbone
+    assert!(m.finetune.count() >= 1);
+
+    let snap = s.obs_snapshot();
+    let slot = snap
+        .tenants
+        .iter()
+        .find(|t| t.tenant == 1)
+        .expect("drifted tenant must be in the rollups");
+    assert!(slot.finetunes >= 1);
+    assert!(slot.finetune_ns > 0);
+    assert!(slot.cache_hits + slot.cache_misses > 0, "cache activity must roll up");
+
+    let count_of = |name: &str| -> u64 {
+        snap.trace
+            .counts
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map_or(0, |&(_, c)| c)
+    };
+    assert!(count_of("finetune_start") >= 1);
+    assert!(count_of("finetune_end") >= 1);
+    assert!(count_of("flush_start") >= 1);
+    assert_eq!(count_of("flush_start"), count_of("flush_end"));
+    assert!(snapshot::validate(&snap.to_json()).is_ok());
+}

@@ -5,6 +5,11 @@
 //! workspace, logits staging, packed weight panels, response vector) is
 //! preallocated and reused.
 //!
+//! Since PR 6 the measured flush runs with FULL OBSERVABILITY LIVE: the
+//! per-stage timers enabled and a flight recorder attached. The trace
+//! ring is preallocated and events are plain `Copy` structs, so tracing
+//! must not cost a single allocation either (DESIGN.md §11).
+//!
 //! Kept to a single #[test] on purpose: the counter is process-global,
 //! so a second allocating test running concurrently in this binary would
 //! turn the exact-zero assertion flaky.
@@ -13,6 +18,7 @@ use std::sync::Arc;
 
 use skip2lora::model::{Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::obs::trace::FlightRecorder;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::registry::AdapterRegistry;
 use skip2lora::tensor::ops::Backend;
@@ -48,6 +54,11 @@ fn warm_flush_performs_zero_allocations() {
     let capacity = 8usize;
     let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
     let mut batcher = MicroBatcher::new(fb, Arc::clone(&registry));
+    // full observability stays ON for the measured round: stage timers
+    // plus a live flight recorder whose ring is sized to hold every event
+    // this test emits (no overwrites — dropped must stay 0)
+    batcher.set_stage_timing(true);
+    let mut recorder = FlightRecorder::new(256, true);
 
     // the measured flush must cover every hot-path branch: tenant groups
     // of size 1 and 3, a bare (unpublished) tenant, and feedback rows
@@ -76,7 +87,7 @@ fn warm_flush_performs_zero_allocations() {
             batcher.try_submit(req).expect("under the bound by construction");
         }
         out.clear();
-        assert_eq!(batcher.flush(&mut out), tenants.len());
+        assert_eq!(batcher.flush_traced(&mut out, Some(&mut recorder)), tenants.len());
     }
 
     // measured round: requests are built and queued BEFORE the window —
@@ -89,7 +100,7 @@ fn warm_flush_performs_zero_allocations() {
     out.clear();
 
     let before = alloc_counter::allocations();
-    let served = batcher.flush(&mut out);
+    let served = batcher.flush_traced(&mut out, Some(&mut recorder));
     let after = alloc_counter::allocations();
 
     assert_eq!(served, tenants.len());
@@ -97,9 +108,18 @@ fn warm_flush_performs_zero_allocations() {
     assert_eq!(
         after - before,
         0,
-        "warm flush allocated {} time(s) — the zero-alloc steady state regressed",
+        "warm flush (with stage timers + flight recorder live) allocated {} time(s) — \
+         the zero-alloc steady state regressed",
         after - before
     );
+
+    // the observability layer actually observed: 4 flushes timed, events
+    // recorded (FlushStart + per-group FanoutTenant + FlushEnd each), and
+    // the preallocated ring never overflowed
+    assert_eq!(batcher.stages().flushes(), 4);
+    assert!(batcher.stages().sum_stage_ns() > 0, "stage timers recorded nothing");
+    assert!(!recorder.is_empty(), "flight recorder captured no events");
+    assert_eq!(recorder.dropped(), 0, "trace ring overflowed — capacity undersized");
 
     // sanity: the instrument actually counts (a fresh Vec must register)
     let before = alloc_counter::allocations();
