@@ -1,0 +1,190 @@
+//! Multi-node fleet serving over loopback TCP (DESIGN.md §12): three
+//! `NodeServer`s behind one rendezvous-hashing `FleetRouter`, live
+//! drifting tenants, and a mid-traffic node decommission — the victim's
+//! tenants drain-and-migrate to the survivors and serving continues with
+//! IDENTICAL predictions, because Skip2-LoRA adapters are pure data
+//! under one frozen shared backbone.
+//!
+//! Finale: every surviving node's `skip2lora/obs/v1` snapshot is pulled
+//! over the wire and folded into ONE fleet document via the
+//! property-tested merge laws (`obs::fleet`), self-validated, and
+//! written where CI's fleet-smoke job picks it up
+//! (`SKIP2LORA_OBS_JSON`, default `OBS_fleet.json`) — then gated again
+//! with `skip2lora validate-obs`.
+//!
+//! Run: `cargo run --release --example fleet_multinode`
+
+use skip2lora::data::Dataset;
+use skip2lora::fleet::FleetRouter;
+use skip2lora::model::MlpConfig;
+use skip2lora::net::{Admission, NodeServer};
+use skip2lora::serve::{FleetServer, ServeConfig};
+use skip2lora::tensor::{ops::Backend, Mat};
+use skip2lora::train::trainer::pretrain;
+use skip2lora::util::rng::Rng;
+
+const N_NODES: usize = 3;
+const N_TENANTS: u64 = 30;
+const ROUNDS: usize = 36;
+const PROBES: usize = 12;
+
+fn clustered(seed: u64, n: usize, shift: f32) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 8);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..8 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + shift + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset { x, labels, n_classes: 3 }
+}
+
+fn drifted(t: u64) -> bool {
+    t % 3 != 0
+}
+
+fn main() {
+    // 1. ONE pre-trained frozen backbone for the whole fleet
+    let cfg = MlpConfig { dims: vec![8, 16, 16, 3], rank: 2, batch_norm: true };
+    let backbone = pretrain(cfg, &clustered(0, 150, 0.0), 60, 0.05, 1, Backend::Blocked);
+    let serve_cfg = ServeConfig {
+        batch_capacity: 16,
+        window: 20,
+        accuracy_threshold: 0.7,
+        buffer_target: 30,
+        epochs: 20,
+        lr: 0.05,
+        train_batch: 15,
+        workers: 0, // inline fine-tunes: the pump clock owns all execution
+        ..Default::default()
+    };
+
+    // 2. three wire-served nodes on ephemeral loopback ports + a router
+    let mut nodes: Vec<Option<NodeServer>> = (0..N_NODES)
+        .map(|_| {
+            Some(
+                NodeServer::spawn(
+                    FleetServer::new(backbone.clone(), serve_cfg.clone()),
+                    "127.0.0.1:0",
+                )
+                .expect("spawn node"),
+            )
+        })
+        .collect();
+    let mut router = FleetRouter::new();
+    for (i, n) in nodes.iter().enumerate() {
+        let addr = n.as_ref().unwrap().addr().to_string();
+        router.add_node(&format!("node{i}"), &addr).expect("connect node");
+        println!("node{i} listening on {addr}");
+    }
+
+    // 3. per-tenant labelled streams; 2/3 of tenants drift, triggering
+    //    per-tenant fine-tunes on whichever node rendezvous chose
+    let streams: Vec<Dataset> = (0..N_TENANTS)
+        .map(|t| clustered(1000 + t, ROUNDS, if drifted(t) { 2.5 } else { 0.0 }))
+        .collect();
+    let mut admitted = 0u64;
+    let mut completed = 0u64;
+    let mut sends = 0usize;
+    for round in 0..ROUNDS {
+        for t in 0..N_TENANTS {
+            let x = streams[t as usize].x.row(round).to_vec();
+            let label = streams[t as usize].labels[round] as u32;
+            match router.feedback(t, x, label).expect("wire feedback") {
+                Admission::Queued { .. } => admitted += 1,
+                Admission::Rejected(r) => panic!("unexpected rejection: {r:?}"),
+            }
+            sends += 1;
+            if sends % 16 == 0 {
+                completed += router.pump_all().expect("pump").len() as u64;
+            }
+        }
+    }
+    completed += router.pump_drain_all().expect("flush").len() as u64;
+    println!("phase 1: {admitted} requests admitted, {completed} completed across {N_NODES} nodes");
+
+    // 4. pre-kill probe predictions for every tenant (Predicts carry no
+    //    label, so they change NO adaptation state)
+    let probes = clustered(777, PROBES, 1.0);
+    let mut before = vec![Vec::new(); N_TENANTS as usize];
+    for t in 0..N_TENANTS {
+        for p in 0..PROBES {
+            match router.predict(t, probes.x.row(p).to_vec()).expect("probe") {
+                Admission::Queued { .. } => admitted += 1,
+                other => panic!("{other:?}"),
+            }
+            let done = router.pump_drain_all().expect("probe pump");
+            assert_eq!(done.len(), 1);
+            completed += 1;
+            before[t as usize].push(done[0].prediction);
+        }
+    }
+
+    // 5. decommission node 1 MID-TRAFFIC: drain (admissions close with a
+    //    typed rejection, the queue flushes, fine-tunes join), then each
+    //    of its tenants' published adapters export/import to the
+    //    rendezvous successor, which allocates the version
+    let victim = 1usize;
+    let victim_tenants = router.tenants_on(victim);
+    let report = router.decommission(victim).expect("decommission");
+    completed += report.drained.completions.len() as u64;
+    println!(
+        "decommissioned node1: {} tenants migrated, {} stateless re-homes, {} drained completions",
+        report.migrated.len(),
+        report.skipped.len(),
+        report.drained.completions.len()
+    );
+    let dead = nodes[victim].take().unwrap().shutdown();
+    assert_eq!(dead.queued(), 0, "drain left requests behind");
+
+    // 6. serving CONTINUES: identical predictions for every tenant,
+    //    including every tenant that just moved hosts
+    for t in 0..N_TENANTS {
+        for p in 0..PROBES {
+            match router.predict(t, probes.x.row(p).to_vec()).expect("probe") {
+                Admission::Queued { .. } => admitted += 1,
+                other => panic!("{other:?}"),
+            }
+            let done = router.pump_drain_all().expect("probe pump");
+            assert_eq!(done.len(), 1);
+            completed += 1;
+            assert_eq!(
+                done[0].prediction, before[t as usize][p],
+                "tenant {t} probe {p}: prediction changed across the migration"
+            );
+        }
+    }
+    assert_eq!(completed, admitted, "books must balance: nothing accepted was lost");
+    println!(
+        "all {N_TENANTS} tenants ({} migrated) serve IDENTICAL predictions on {} survivors; \
+         books balance at {admitted} requests",
+        victim_tenants.len(),
+        router.alive_count()
+    );
+
+    // 7. observability finale: fold every survivor's wire snapshot into
+    //    one fleet document, self-validate, and write for CI
+    let obs_path =
+        std::env::var("SKIP2LORA_OBS_JSON").unwrap_or_else(|_| "OBS_fleet.json".to_string());
+    let merged = router.fleet_obs().expect("fleet obs merge");
+    let ticks = skip2lora::obs::snapshot::validate(&merged)
+        .expect("fleet-merged snapshot must satisfy skip2lora/obs/v1");
+    std::fs::write(&obs_path, merged.to_string()).expect("write fleet obs");
+    let skew = router.skew().expect("skew probe");
+    println!(
+        "fleet obs: {} merged pump ticks over {} nodes, per-node tenants {:?}, skew {:.2} -> {obs_path}",
+        ticks,
+        router.alive_count(),
+        skew.per_node_tenants,
+        skew.max_over_mean
+    );
+
+    for n in nodes.into_iter().flatten() {
+        n.shutdown();
+    }
+    println!("OK");
+}

@@ -28,14 +28,18 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
-use skip2lora::bench::{report, Bencher, KernelBench, ObsOverhead, ServeBenchReport, ServePoint};
+use skip2lora::bench::{
+    report, Bencher, KernelBench, ObsOverhead, ServeBenchReport, ServePoint, WireOverhead,
+};
 use skip2lora::method::Method;
 use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
+use skip2lora::net::{wire, Admission, NodeClient, NodeServer, WireRequest};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::obs::trace::FlightRecorder;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
 use skip2lora::serve::persist::RegistryCheckpoint;
 use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
 use skip2lora::tensor::ops::{self, Backend, PackedB};
 use skip2lora::tensor::Mat;
 use skip2lora::train::FineTuner;
@@ -411,6 +415,74 @@ fn main() {
             o.off_ns_per_flush,
             o.on_ns_per_flush,
             o.overhead_frac * 100.0
+        );
+    }
+
+    b.header("network edge tax: in-process serve vs loopback TCP (DESIGN.md §12)");
+    {
+        // Same FleetServer, same workload — submit one Predict, pump one
+        // completion — the only variable is whether requests cross the
+        // `skip2lora/wire/v1` loopback edge. Prices the serve-node
+        // deployment question: what does putting the wire in front of a
+        // node cost per request, and how much of that is the codec vs
+        // the kernel (syscalls + TCP_NODELAY round trips)?
+        let edge_cfg = ServeConfig { batch_capacity: 1, workers: 0, ..Default::default() };
+        let x0: Vec<f32> = (0..cfg.n_in()).map(|_| rng.normal()).collect();
+
+        let mut local = FleetServer::new(Arc::clone(&backbone), edge_cfg.clone());
+        let mut t = 0u64;
+        let r = b.bench("in-process   (submit+pump)", || {
+            t = (t + 7) % 32;
+            match local.handle(t, Request::Predict(x0.clone())) {
+                Response::Queued { .. } => {}
+                other => panic!("unexpected response: {other:?}"),
+            }
+            std::hint::black_box(local.pump().len());
+        });
+        let in_process_ns = r.mean_ns;
+
+        let node = NodeServer::spawn(
+            FleetServer::new(Arc::clone(&backbone), edge_cfg),
+            "127.0.0.1:0",
+        )
+        .expect("spawn bench node");
+        let mut client =
+            NodeClient::connect(&node.addr().to_string()).expect("connect bench node");
+        let mut t = 0u64;
+        let r = b.bench("loopback TCP (submit+pump)", || {
+            t = (t + 7) % 32;
+            match client.predict(t, x0.clone()).expect("wire predict") {
+                Admission::Queued { .. } => {}
+                other => panic!("unexpected admission: {other:?}"),
+            }
+            std::hint::black_box(client.pump().expect("wire pump").len());
+        });
+        let loopback_ns = r.mean_ns;
+        drop(client);
+        node.shutdown();
+
+        // codec alone: encode/decode a Predict frame at the model's
+        // input width, no sockets involved
+        let req = WireRequest::Predict { tenant: 7, x: x0.clone() };
+        let r = b.bench("encode Predict frame", || {
+            std::hint::black_box(wire::encode_request(&req).len());
+        });
+        let encode_ns = r.mean_ns;
+        let body = wire::encode_request(&req);
+        let r = b.bench("decode Predict frame", || {
+            std::hint::black_box(wire::decode_request(&body).expect("decode"));
+        });
+        let decode_ns = r.mean_ns;
+
+        let w = WireOverhead::from_timings(in_process_ns, loopback_ns, encode_ns, decode_ns);
+        rep.wire_overhead = Some(w);
+        println!(
+            "wire tax: {:.0} -> {:.0} ns/request ({:+.1}%); codec {:.0}/{:.0} ns encode/decode",
+            w.in_process_ns_per_req,
+            w.loopback_ns_per_req,
+            w.overhead_frac * 100.0,
+            w.encode_ns_per_frame,
+            w.decode_ns_per_frame
         );
     }
 

@@ -5,4 +5,4 @@ pub mod harness;
 pub mod report;
 
 pub use harness::{BenchResult, Bencher};
-pub use report::{KernelBench, ObsOverhead, ServeBenchReport, ServePoint};
+pub use report::{KernelBench, ObsOverhead, ServeBenchReport, ServePoint, WireOverhead};

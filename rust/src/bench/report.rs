@@ -105,6 +105,46 @@ impl ObsOverhead {
     }
 }
 
+/// Network-edge tax (DESIGN.md §12): the same Predict→pump→Completion
+/// exchange timed in-process vs over a loopback-TCP `NodeServer`, plus
+/// the raw frame codec cost. Quantifies what the `skip2lora/wire/v1`
+/// protocol adds on top of the serving plane it carries.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireOverhead {
+    /// mean ns per request served via direct `FleetServer::handle`+pump
+    pub in_process_ns_per_req: f64,
+    /// mean ns per request served via `NodeClient` over loopback TCP
+    pub loopback_ns_per_req: f64,
+    /// (loopback - in_process) / in_process
+    pub overhead_frac: f64,
+    /// mean ns to encode one Predict request frame
+    pub encode_ns_per_frame: f64,
+    /// mean ns to decode one Predict request frame
+    pub decode_ns_per_frame: f64,
+}
+
+impl WireOverhead {
+    pub fn from_timings(
+        in_process_ns_per_req: f64,
+        loopback_ns_per_req: f64,
+        encode_ns_per_frame: f64,
+        decode_ns_per_frame: f64,
+    ) -> Self {
+        let overhead_frac = if in_process_ns_per_req > 0.0 {
+            (loopback_ns_per_req - in_process_ns_per_req) / in_process_ns_per_req
+        } else {
+            0.0
+        };
+        Self {
+            in_process_ns_per_req,
+            loopback_ns_per_req,
+            overhead_frac,
+            encode_ns_per_frame,
+            decode_ns_per_frame,
+        }
+    }
+}
+
 /// The whole report: metadata + kernel section + serve sweep + the
 /// headline grouped-vs-per-row speedups.
 #[derive(Clone, Debug, Default)]
@@ -121,6 +161,8 @@ pub struct ServeBenchReport {
     pub geomean_speedup: f64,
     /// tracing-on vs tracing-off flush cost, when the run measured it
     pub obs_overhead: Option<ObsOverhead>,
+    /// loopback-TCP vs in-process serve cost, when the run measured it
+    pub wire_overhead: Option<WireOverhead>,
 }
 
 impl ServeBenchReport {
@@ -208,6 +250,18 @@ impl ServeBenchReport {
                     ("off_ns_per_flush", num(o.off_ns_per_flush)),
                     ("on_ns_per_flush", num(o.on_ns_per_flush)),
                     ("overhead_frac", num(o.overhead_frac)),
+                ]),
+            ));
+        }
+        if let Some(w) = &self.wire_overhead {
+            fields.push((
+                "wire_overhead",
+                obj(vec![
+                    ("in_process_ns_per_req", num(w.in_process_ns_per_req)),
+                    ("loopback_ns_per_req", num(w.loopback_ns_per_req)),
+                    ("overhead_frac", num(w.overhead_frac)),
+                    ("encode_ns_per_frame", num(w.encode_ns_per_frame)),
+                    ("decode_ns_per_frame", num(w.decode_ns_per_frame)),
                 ]),
             ));
         }
@@ -309,6 +363,22 @@ pub fn validate(j: &Json) -> Result<f64, String> {
             .ok_or_else(|| format!("{ctx}: missing numeric 'overhead_frac'"))?;
         // the fraction may legitimately be slightly negative (noise), but
         // never non-finite
+        if !frac.is_finite() {
+            return Err(format!("{ctx}: 'overhead_frac' must be finite, got {frac}"));
+        }
+    }
+    if let Some(w) = j.get("wire_overhead") {
+        let ctx = "wire_overhead";
+        finite_positive(w, "in_process_ns_per_req", ctx)?;
+        finite_positive(w, "loopback_ns_per_req", ctx)?;
+        finite_positive(w, "encode_ns_per_frame", ctx)?;
+        finite_positive(w, "decode_ns_per_frame", ctx)?;
+        let frac = w
+            .get("overhead_frac")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{ctx}: missing numeric 'overhead_frac'"))?;
+        // loopback should cost MORE than in-process, but validation only
+        // rejects what cannot be a measurement at all
         if !frac.is_finite() {
             return Err(format!("{ctx}: 'overhead_frac' must be finite, got {frac}"));
         }
@@ -420,6 +490,46 @@ mod tests {
         assert!(validate(&r.to_json()).unwrap_err().contains("overhead_frac"));
         // zero-time off side is degenerate, not a crash
         assert_eq!(ObsOverhead::from_timings(0.0, 5.0).overhead_frac, 0.0);
+    }
+
+    #[test]
+    fn wire_overhead_roundtrips_and_rejects_nan() {
+        // absent section is fine — reports from in-process-only runs stay valid
+        let without = sample();
+        assert!(validate(&without.to_json()).is_ok());
+        assert!(without.to_json().get("wire_overhead").is_none());
+
+        let mut r = sample();
+        r.wire_overhead = Some(WireOverhead::from_timings(50_000.0, 75_000.0, 800.0, 650.0));
+        let w = r.wire_overhead.unwrap();
+        assert!((w.overhead_frac - 0.5).abs() < 1e-12, "{}", w.overhead_frac);
+        let parsed = json::parse(&r.to_json().to_string()).unwrap();
+        assert!(validate(&parsed).is_ok());
+        let sec = parsed.get("wire_overhead").expect("section present");
+        assert!(
+            (sec.get("loopback_ns_per_req").and_then(Json::as_f64).unwrap() - 75_000.0).abs()
+                < 1e-6
+        );
+        assert!(
+            (sec.get("decode_ns_per_frame").and_then(Json::as_f64).unwrap() - 650.0).abs() < 1e-6
+        );
+
+        // a NaN fraction must fail validation
+        let mut r = sample();
+        r.wire_overhead = Some(WireOverhead {
+            in_process_ns_per_req: 1.0,
+            loopback_ns_per_req: 1.0,
+            overhead_frac: f64::NAN,
+            encode_ns_per_frame: 1.0,
+            decode_ns_per_frame: 1.0,
+        });
+        assert!(validate(&r.to_json()).unwrap_err().contains("overhead_frac"));
+        // a non-positive timing must fail validation too
+        let mut r = sample();
+        r.wire_overhead = Some(WireOverhead::from_timings(50_000.0, 75_000.0, 0.0, 650.0));
+        assert!(validate(&r.to_json()).unwrap_err().contains("encode_ns_per_frame"));
+        // zero-time in-process side is degenerate, not a crash
+        assert_eq!(WireOverhead::from_timings(0.0, 5.0, 1.0, 1.0).overhead_frac, 0.0);
     }
 
     #[test]

@@ -1,0 +1,26 @@
+//! # fleet — multi-node routing, aggregation, and live migration
+//! (DESIGN.md §12)
+//!
+//! The serving plane (`serve::FleetServer`) runs one node; the network
+//! edge (`net::NodeServer`) puts it on a socket; this layer fronts N of
+//! them as one fleet:
+//!
+//! * **Routing** ([`router::FleetRouter`]): rendezvous (HRW) hashing
+//!   assigns each tenant a home node with zero coordination state, and a
+//!   node loss moves only that node's tenants. Explicit migrations are
+//!   recorded as placement overrides.
+//! * **Aggregation**: per-node `skip2lora/obs/v1` snapshots fold into
+//!   one fleet document through the property-tested merge laws in
+//!   [`crate::obs::fleet`]; skew detection reads per-node registry
+//!   shard stats out of the same snapshots.
+//! * **Migration**: drain-and-migrate — drain the source (admissions
+//!   close with typed `Draining` rejections, fine-tunes join), export
+//!   the tenant's validated adapter checkpoint, import on the
+//!   destination (which allocates the version), resume the source.
+//!   Because adapters are pure data under a frozen shared backbone,
+//!   post-migration predictions are BIT-IDENTICAL to an unmoved oracle
+//!   (`tests/fleet_multinode.rs`).
+
+pub mod router;
+
+pub use router::{FleetRouter, MigrationReport, SkewReport};

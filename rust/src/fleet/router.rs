@@ -1,0 +1,435 @@
+//! [`FleetRouter`] — tenant-affine routing across N wire-connected
+//! nodes, with live drain-and-migrate rebalancing (DESIGN.md §12).
+//!
+//! Placement is RENDEZVOUS (highest-random-weight) hashing: every
+//! (tenant, node) pair gets a score from one domain-separated SplitMix64
+//! step — the same finalizer the adapter registry uses for shard
+//! routing — and the tenant lives on the alive node with the highest
+//! score. HRW gives the two properties a fleet needs with zero state:
+//! every router instance agrees on placement without coordination, and
+//! when a node dies only ITS tenants move (no global reshuffle).
+//! Explicit migrations are recorded in a small override map consulted
+//! before the hash, so a rebalanced tenant stays where it was put.
+//!
+//! Migration is drain-and-migrate, in this order, and nothing else:
+//!
+//! 1. `Drain` the source node — admissions close (`Draining` rejections
+//!    are typed, so callers re-route or retry), the queue flushes, every
+//!    in-flight fine-tune JOINS. Nothing accepted is ever lost.
+//! 2. `ExportTenant` on the source — a validated checkpoint payload of
+//!    the tenant's published adapters (post-join, so it contains the
+//!    freshest weights).
+//! 3. `ImportTenant` on the destination — the DESTINATION allocates the
+//!    version (its registry's version counter is authoritative there;
+//!    cross-node version continuity is explicitly not a goal).
+//! 4. `Resume` the source (unless it is being decommissioned) and record
+//!    the placement override.
+//!
+//! Because adapters are pure data under a frozen shared backbone
+//! (Skip2-LoRA's split), step 3 makes the destination serve
+//! BIT-IDENTICAL predictions to what the source would have served —
+//! `tests/fleet_multinode.rs` proves this against an unkilled oracle.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::net::{Admission, NodeClient};
+use crate::obs::fleet::merge_texts;
+use crate::serve::server::{Completion, DrainReport};
+use crate::serve::TenantId;
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// One routed node: a live wire connection plus its routing identity.
+struct Node {
+    name: String,
+    addr: String,
+    client: NodeClient,
+    alive: bool,
+}
+
+/// What a [`FleetRouter::decommission`] did.
+#[derive(Debug, Default)]
+pub struct MigrationReport {
+    /// the source node's drain report (books-balancing evidence)
+    pub drained: DrainReport,
+    /// (tenant, destination node index, version allocated there)
+    pub migrated: Vec<(TenantId, usize, u64)>,
+    /// tenants that had NO published adapters — nothing to move; their
+    /// next request is served by the rendezvous successor from the
+    /// frozen backbone, exactly like a brand-new tenant
+    pub skipped: Vec<TenantId>,
+}
+
+/// Per-node load summary derived from each node's observability
+/// snapshot (registry shard stats summed per node).
+#[derive(Clone, Debug)]
+pub struct SkewReport {
+    /// live registry tenants per node (dead nodes report 0)
+    pub per_node_tenants: Vec<u64>,
+    /// max load over mean load across ALIVE nodes; 1.0 is perfectly
+    /// balanced, large values mean a hot node
+    pub max_over_mean: f64,
+}
+
+/// Routes tenants over N `NodeServer`s speaking `skip2lora/wire/v1`.
+pub struct FleetRouter {
+    nodes: Vec<Node>,
+    /// explicit placements (migrations) consulted before the hash
+    placements: BTreeMap<TenantId, usize>,
+    /// every tenant this router has admitted traffic for — the working
+    /// set a decommission must relocate
+    seen: BTreeSet<TenantId>,
+}
+
+impl FleetRouter {
+    pub fn new() -> Self {
+        Self {
+            nodes: Vec::new(),
+            placements: BTreeMap::new(),
+            seen: BTreeSet::new(),
+        }
+    }
+
+    /// Connect (and handshake) a node; returns its index.
+    pub fn add_node(&mut self, name: &str, addr: &str) -> Result<usize> {
+        let client = NodeClient::connect(addr)
+            .with_context(|| format!("router: connect node '{name}' at {addr}"))?;
+        self.nodes.push(Node {
+            name: name.to_string(),
+            addr: addr.to_string(),
+            client,
+            alive: true,
+        });
+        Ok(self.nodes.len() - 1)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count()
+    }
+
+    pub fn node_name(&self, idx: usize) -> &str {
+        &self.nodes[idx].name
+    }
+
+    pub fn node_addr(&self, idx: usize) -> &str {
+        &self.nodes[idx].addr
+    }
+
+    pub fn is_alive(&self, idx: usize) -> bool {
+        self.nodes[idx].alive
+    }
+
+    /// Tenants this router has admitted traffic for that currently
+    /// route to `idx` — the set a decommission of `idx` must move.
+    pub fn tenants_on(&self, idx: usize) -> Vec<TenantId> {
+        self.seen
+            .iter()
+            .copied()
+            .filter(|&t| self.route(t) == Some(idx))
+            .collect()
+    }
+
+    /// Rendezvous score for (tenant, node) — one domain-separated
+    /// SplitMix64 step, the registry's shard-routing finalizer.
+    fn score(tenant: TenantId, node: usize) -> u64 {
+        SplitMix64::new(tenant ^ (node as u64).rotate_left(32) ^ 0x5AF3_2EAD_BEEF_CAFE).next_u64()
+    }
+
+    /// Where `tenant` lives: explicit placement if one was recorded,
+    /// otherwise the alive node with the highest rendezvous score.
+    /// `None` only when no node is alive.
+    pub fn route(&self, tenant: TenantId) -> Option<usize> {
+        if let Some(&idx) = self.placements.get(&tenant) {
+            if self.nodes[idx].alive {
+                return Some(idx);
+            }
+        }
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.alive)
+            .max_by_key(|(i, _)| Self::score(tenant, *i))
+            .map(|(i, _)| i)
+    }
+
+    fn routed_client(&mut self, tenant: TenantId) -> Result<(usize, &mut NodeClient)> {
+        let idx = match self.route(tenant) {
+            Some(idx) => idx,
+            None => bail!("no alive node to route tenant {tenant}"),
+        };
+        Ok((idx, &mut self.nodes[idx].client))
+    }
+
+    /// Route a Predict to the tenant's node.
+    pub fn predict(&mut self, tenant: TenantId, x: Vec<f32>) -> Result<Admission> {
+        self.seen.insert(tenant);
+        let (_, client) = self.routed_client(tenant)?;
+        client.predict(tenant, x)
+    }
+
+    /// Route a Feedback to the tenant's node.
+    pub fn feedback(&mut self, tenant: TenantId, x: Vec<f32>, label: u32) -> Result<Admission> {
+        self.seen.insert(tenant);
+        let (_, client) = self.routed_client(tenant)?;
+        client.feedback(tenant, x, label)
+    }
+
+    /// Advance every alive node's pump clock one tick; completions from
+    /// all nodes, in node order (deterministic given deterministic
+    /// per-node behavior).
+    pub fn pump_all(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        for node in self.nodes.iter_mut().filter(|n| n.alive) {
+            out.extend(node.client.pump()?);
+        }
+        Ok(out)
+    }
+
+    /// Pump every alive node until its queue is empty.
+    pub fn pump_drain_all(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        for node in self.nodes.iter_mut().filter(|n| n.alive) {
+            out.extend(node.client.pump_drain()?);
+        }
+        Ok(out)
+    }
+
+    /// Total queued requests across alive nodes.
+    pub fn queue_depth_total(&mut self) -> Result<usize> {
+        let mut total = 0;
+        for node in self.nodes.iter_mut().filter(|n| n.alive) {
+            total += node.client.queue_depth()?;
+        }
+        Ok(total)
+    }
+
+    /// Pull every alive node's `skip2lora/obs/v1` snapshot and fold them
+    /// into ONE valid fleet document via the property-tested merge laws
+    /// (`obs::fleet`). The result re-validates against the schema.
+    pub fn fleet_obs(&mut self) -> Result<Json> {
+        let mut texts = Vec::new();
+        for node in self.nodes.iter_mut().filter(|n| n.alive) {
+            texts.push(node.client.observe()?);
+        }
+        if texts.is_empty() {
+            bail!("no alive node to observe");
+        }
+        merge_texts(&texts).context("fleet obs merge")
+    }
+
+    /// Per-node load from each node's own observability snapshot: the
+    /// registry shard stats (`shards[].tenants`) summed per node. Dead
+    /// nodes report 0 and are excluded from the mean.
+    pub fn skew(&mut self) -> Result<SkewReport> {
+        let mut per_node = vec![0u64; self.nodes.len()];
+        for idx in 0..self.nodes.len() {
+            if !self.nodes[idx].alive {
+                continue;
+            }
+            let text = self.nodes[idx].client.observe()?;
+            let doc = Json::parse(&text)
+                .with_context(|| format!("node '{}' observe parse", self.nodes[idx].name))?;
+            let shards = doc
+                .get("shards")
+                .and_then(|s| s.as_arr())
+                .with_context(|| format!("node '{}' snapshot missing shards", self.nodes[idx].name))?;
+            per_node[idx] = shards
+                .iter()
+                .filter_map(|sh| sh.get("tenants").and_then(|t| t.as_f64()))
+                .sum::<f64>() as u64;
+        }
+        let alive: Vec<u64> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.alive)
+            .map(|(i, _)| per_node[i])
+            .collect();
+        let mean = alive.iter().sum::<u64>() as f64 / alive.len().max(1) as f64;
+        let max = alive.iter().copied().max().unwrap_or(0) as f64;
+        Ok(SkewReport {
+            per_node_tenants: per_node,
+            max_over_mean: if mean > 0.0 { max / mean } else { 1.0 },
+        })
+    }
+
+    /// Move one tenant from its current node to `dst`: drain source →
+    /// export → import on destination (which allocates the version) →
+    /// resume source → record the placement. Returns the version the
+    /// destination published.
+    pub fn migrate_tenant(&mut self, tenant: TenantId, dst: usize) -> Result<u64> {
+        if !self.nodes[dst].alive {
+            bail!("cannot migrate tenant {tenant} to dead node '{}'", self.nodes[dst].name);
+        }
+        let src = match self.route(tenant) {
+            Some(idx) => idx,
+            None => bail!("no alive node currently owns tenant {tenant}"),
+        };
+        if src == dst {
+            bail!("tenant {tenant} already lives on node '{}'", self.nodes[dst].name);
+        }
+        // 1. drain: closes admissions and JOINS in-flight fine-tunes, so
+        //    the export below carries the freshest published adapters
+        let _drained = self.nodes[src].client.drain()?;
+        // 2-3. export from source, import on destination; on any failure
+        //    the source is resumed so a botched migration never leaves a
+        //    healthy node refusing traffic
+        let moved = (|| -> Result<u64> {
+            let bytes = self.nodes[src].client.export_tenant(tenant)?;
+            let (imported, version) = self.nodes[dst].client.import_tenant(bytes)?;
+            if imported != tenant {
+                bail!("import returned tenant {imported}, expected {tenant}");
+            }
+            Ok(version)
+        })();
+        // 4. the source keeps serving its OTHER tenants
+        self.nodes[src].client.resume()?;
+        let version = moved?;
+        self.placements.insert(tenant, dst);
+        Ok(version)
+    }
+
+    /// Gracefully remove a node: drain it (every accepted request
+    /// completes, every fine-tune joins), migrate each of its tenants to
+    /// its rendezvous successor among the surviving nodes, and mark it
+    /// dead. The caller can then `NodeServer::shutdown` the process.
+    pub fn decommission(&mut self, idx: usize) -> Result<MigrationReport> {
+        if !self.nodes[idx].alive {
+            bail!("node '{}' is already dead", self.nodes[idx].name);
+        }
+        if self.alive_count() < 2 {
+            bail!("cannot decommission the last alive node");
+        }
+        let tenants = self.tenants_on(idx);
+        let mut report = MigrationReport {
+            drained: self.nodes[idx].client.drain()?,
+            migrated: Vec::new(),
+            skipped: Vec::new(),
+        };
+        // mark dead FIRST so route() already answers with the successor;
+        // the wire connection stays usable for the exports below
+        self.nodes[idx].alive = false;
+        for tenant in tenants {
+            let dst = match self.route(tenant) {
+                Some(d) => d,
+                None => bail!("no surviving node for tenant {tenant}"),
+            };
+            let bytes = match self.nodes[idx].client.export_tenant(tenant) {
+                Ok(b) => b,
+                // a tenant that never published adapters has no state
+                // worth moving — rendezvous re-homes it statelessly
+                Err(e) if e.to_string().contains("no published adapters") => {
+                    report.skipped.push(tenant);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            let (imported, version) = self.nodes[dst].client.import_tenant(bytes)?;
+            if imported != tenant {
+                bail!("import returned tenant {imported}, expected {tenant}");
+            }
+            self.placements.insert(tenant, dst);
+            report.migrated.push((tenant, dst, version));
+        }
+        Ok(report)
+    }
+
+    /// One skew-driven rebalance step: if `skew().max_over_mean` exceeds
+    /// `threshold`, drain-and-migrate the smallest-id router-tracked
+    /// tenant off the hottest node onto the coldest and return it.
+    /// `Ok(None)` means the fleet is already within threshold (or the
+    /// hot node has no movable tenant). Callers loop until `None` for a
+    /// full rebalance.
+    pub fn rebalance_once(&mut self, threshold: f64) -> Result<Option<(TenantId, usize)>> {
+        let report = self.skew()?;
+        if report.max_over_mean <= threshold {
+            return Ok(None);
+        }
+        let alive = |i: &usize| self.nodes[*i].alive;
+        let hot = match (0..self.nodes.len())
+            .filter(alive)
+            .max_by_key(|&i| report.per_node_tenants[i])
+        {
+            Some(i) => i,
+            None => return Ok(None),
+        };
+        let cold = match (0..self.nodes.len())
+            .filter(alive)
+            .min_by_key(|&i| report.per_node_tenants[i])
+        {
+            Some(i) if i != hot => i,
+            _ => return Ok(None),
+        };
+        let tenant = match self.tenants_on(hot).into_iter().next() {
+            Some(t) => t,
+            None => return Ok(None),
+        };
+        self.migrate_tenant(tenant, cold)?;
+        Ok(Some((tenant, cold)))
+    }
+}
+
+impl Default for FleetRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Routing-only views for the hash properties (no sockets needed):
+    /// HRW over `n` alive nodes with `dead` marked dead.
+    fn hrw(tenant: TenantId, n: usize, dead: &[usize]) -> Option<usize> {
+        (0..n)
+            .filter(|i| !dead.contains(i))
+            .max_by_key(|&i| FleetRouter::score(tenant, i))
+    }
+
+    #[test]
+    fn rendezvous_spreads_tenants() {
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for t in 0..4000u64 {
+            counts[hrw(t, n, &[]).unwrap()] += 1;
+        }
+        let (min, max) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        // a uniform hash over 4 nodes x 4000 tenants stays well within
+        // 2x of perfectly even — catches a broken/degenerate finalizer
+        assert!(min > 500 && max < 2000, "skewed spread: {counts:?}");
+    }
+
+    #[test]
+    fn killing_a_node_moves_only_its_tenants() {
+        let n = 4;
+        let dead = 2;
+        let mut moved = 0;
+        for t in 0..4000u64 {
+            let before = hrw(t, n, &[]).unwrap();
+            let after = hrw(t, n, &[dead]).unwrap();
+            if before != dead {
+                assert_eq!(before, after, "tenant {t} moved needlessly");
+            } else {
+                assert_ne!(after, dead);
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "dead node owned no tenants?");
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        for t in (0..1000u64).step_by(7) {
+            assert_eq!(hrw(t, 5, &[1]), hrw(t, 5, &[1]));
+        }
+    }
+}

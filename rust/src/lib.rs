@@ -12,8 +12,10 @@ pub mod data;
 pub mod device;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod method;
 pub mod model;
+pub mod net;
 pub mod nn;
 pub mod obs;
 pub mod report;

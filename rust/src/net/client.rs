@@ -1,0 +1,202 @@
+//! [`NodeClient`] — a blocking `skip2lora/wire/v1` client.
+//!
+//! One client drives one connection, strictly request→response:
+//! [`NodeClient::connect`] performs the `Hello`/`HelloOk` handshake (a
+//! version-mismatched or non-skip2lora peer fails HERE, with a typed
+//! error), after which every method writes one frame and reads exactly
+//! one frame back. There is no receive thread and no correlation state —
+//! the protocol's strict alternation makes the client this simple, and
+//! keeps the pump clock under the caller's control.
+//!
+//! Typed-surface convention: data-plane admissions return [`Admission`]
+//! (queued vs typed [`RejectReason`] — both are normal outcomes a router
+//! must branch on), while transport faults and server-side failures
+//! (`WireResponse::Error`) surface as `Err`.
+
+use std::net::TcpStream;
+
+use crate::nn::lora::LoraAdapter;
+use crate::serve::server::{Completion, DrainReport, RejectReason};
+use crate::serve::TenantId;
+use crate::util::error::{bail, Context, Result};
+
+use super::wire::{
+    read_response, write_request, WireRequest, WireResponse, WIRE_VERSION,
+};
+
+/// Outcome of a Predict/Feedback admission attempt — mirrors the
+/// serving plane's `Queued`/`Rejected` split.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Admission {
+    Queued { ticket: u64 },
+    Rejected(RejectReason),
+}
+
+/// A connected, handshaken wire client for one node.
+pub struct NodeClient {
+    stream: TcpStream,
+}
+
+impl NodeClient {
+    /// Connect and handshake. Fails with a typed error if the peer is
+    /// not a `skip2lora/wire/v1` server at exactly [`WIRE_VERSION`].
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect to node at {addr}"))?;
+        stream.set_nodelay(true).context("set TCP_NODELAY")?;
+        let mut client = Self { stream };
+        match client.rpc(&WireRequest::Hello {
+            version: WIRE_VERSION,
+        })? {
+            WireResponse::HelloOk { version } if version == WIRE_VERSION => Ok(client),
+            WireResponse::HelloOk { version } => {
+                bail!("server answered hello at wire version {version}, expected {WIRE_VERSION}")
+            }
+            WireResponse::Error { msg } => bail!("handshake rejected: {msg}"),
+            other => bail!("unexpected handshake response {other:?}"),
+        }
+    }
+
+    /// One raw request→response exchange. The building block every
+    /// typed method below uses; public for tests and tooling that want
+    /// to speak frames directly.
+    pub fn rpc(&mut self, req: &WireRequest) -> Result<WireResponse> {
+        write_request(&mut self.stream, req)?;
+        read_response(&mut self.stream)
+    }
+
+    pub fn predict(&mut self, tenant: TenantId, x: Vec<f32>) -> Result<Admission> {
+        match self.rpc(&WireRequest::Predict { tenant, x })? {
+            WireResponse::Queued { ticket } => Ok(Admission::Queued { ticket }),
+            WireResponse::Rejected(reason) => Ok(Admission::Rejected(reason)),
+            other => bail!("unexpected response to Predict: {other:?}"),
+        }
+    }
+
+    pub fn feedback(&mut self, tenant: TenantId, x: Vec<f32>, label: u32) -> Result<Admission> {
+        match self.rpc(&WireRequest::Feedback { tenant, x, label })? {
+            WireResponse::Queued { ticket } => Ok(Admission::Queued { ticket }),
+            WireResponse::Rejected(reason) => Ok(Admission::Rejected(reason)),
+            other => bail!("unexpected response to Feedback: {other:?}"),
+        }
+    }
+
+    /// Install externally trained adapters; returns the new published
+    /// version, or the typed rejection (shape/rank mismatch).
+    pub fn swap_adapters(
+        &mut self,
+        tenant: TenantId,
+        adapters: Vec<LoraAdapter>,
+    ) -> Result<std::result::Result<u64, RejectReason>> {
+        match self.rpc(&WireRequest::SwapAdapters { tenant, adapters })? {
+            WireResponse::Swapped { version } => Ok(Ok(version)),
+            WireResponse::Rejected(reason) => Ok(Err(reason)),
+            other => bail!("unexpected response to SwapAdapters: {other:?}"),
+        }
+    }
+
+    /// Advance the node's pump clock one tick; returns what completed.
+    pub fn pump(&mut self) -> Result<Vec<Completion>> {
+        match self.rpc(&WireRequest::Pump)? {
+            WireResponse::Completions(cs) => {
+                Ok(cs.into_iter().map(|c| c.into_completion()).collect())
+            }
+            other => bail!("unexpected response to Pump: {other:?}"),
+        }
+    }
+
+    /// Pump until the node's queue is empty; returns every completion.
+    pub fn pump_drain(&mut self) -> Result<Vec<Completion>> {
+        match self.rpc(&WireRequest::PumpDrain)? {
+            WireResponse::Completions(cs) => {
+                Ok(cs.into_iter().map(|c| c.into_completion()).collect())
+            }
+            other => bail!("unexpected response to PumpDrain: {other:?}"),
+        }
+    }
+
+    pub fn queue_depth(&mut self) -> Result<usize> {
+        match self.rpc(&WireRequest::QueueDepth)? {
+            WireResponse::QueueDepthOk { queued } => Ok(queued as usize),
+            other => bail!("unexpected response to QueueDepth: {other:?}"),
+        }
+    }
+
+    /// The node's `skip2lora/obs/v1` snapshot as JSON text — feed N of
+    /// these into `obs::fleet::merge_texts` for the fleet view.
+    pub fn observe(&mut self) -> Result<String> {
+        match self.rpc(&WireRequest::Observe)? {
+            WireResponse::Observed { json } => Ok(json),
+            other => bail!("unexpected response to Observe: {other:?}"),
+        }
+    }
+
+    /// Checkpoint the node's registry to a path ON THE NODE'S HOST;
+    /// returns (tenants, bytes).
+    pub fn save_state(&mut self, path: &str) -> Result<(u64, u64)> {
+        match self.rpc(&WireRequest::SaveState { path: path.into() })? {
+            WireResponse::Persisted { tenants, bytes } => Ok((tenants, bytes)),
+            WireResponse::Rejected(reason) => bail!("SaveState rejected: {reason:?}"),
+            other => bail!("unexpected response to SaveState: {other:?}"),
+        }
+    }
+
+    /// Install a checkpoint from the node's host filesystem; returns
+    /// (tenants, installed, max_version).
+    pub fn restore_state(&mut self, path: &str) -> Result<(u64, u64, u64)> {
+        match self.rpc(&WireRequest::RestoreState { path: path.into() })? {
+            WireResponse::Restored {
+                tenants,
+                installed,
+                max_version,
+            } => Ok((tenants, installed, max_version)),
+            WireResponse::Rejected(reason) => bail!("RestoreState rejected: {reason:?}"),
+            other => bail!("unexpected response to RestoreState: {other:?}"),
+        }
+    }
+
+    /// Pull one tenant's published adapters as a validated checkpoint
+    /// payload — the source half of a migration.
+    pub fn export_tenant(&mut self, tenant: TenantId) -> Result<Vec<u8>> {
+        match self.rpc(&WireRequest::ExportTenant { tenant })? {
+            WireResponse::TenantExported { bytes } => Ok(bytes),
+            WireResponse::Error { msg } => bail!("ExportTenant failed: {msg}"),
+            other => bail!("unexpected response to ExportTenant: {other:?}"),
+        }
+    }
+
+    /// Install an exported tenant payload — the destination half of a
+    /// migration. The destination allocates the version.
+    pub fn import_tenant(&mut self, bytes: Vec<u8>) -> Result<(TenantId, u64)> {
+        match self.rpc(&WireRequest::ImportTenant { bytes })? {
+            WireResponse::TenantImported { tenant, version } => Ok((tenant, version)),
+            WireResponse::Error { msg } => bail!("ImportTenant failed: {msg}"),
+            other => bail!("unexpected response to ImportTenant: {other:?}"),
+        }
+    }
+
+    /// Close admissions and flush the node (see `FleetServer::drain`);
+    /// the report lets the caller balance the books.
+    pub fn drain(&mut self) -> Result<DrainReport> {
+        match self.rpc(&WireRequest::Drain)? {
+            WireResponse::Drained {
+                queued_at_start,
+                finetunes_joined,
+                completions,
+            } => Ok(DrainReport {
+                queued_at_start: queued_at_start as usize,
+                finetunes_joined: finetunes_joined as usize,
+                completions: completions.into_iter().map(|c| c.into_completion()).collect(),
+            }),
+            other => bail!("unexpected response to Drain: {other:?}"),
+        }
+    }
+
+    /// Re-open admissions after a drain.
+    pub fn resume(&mut self) -> Result<()> {
+        match self.rpc(&WireRequest::Resume)? {
+            WireResponse::Resumed => Ok(()),
+            other => bail!("unexpected response to Resume: {other:?}"),
+        }
+    }
+}

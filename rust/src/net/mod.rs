@@ -1,0 +1,29 @@
+//! # net — the dependency-free TCP serving edge (DESIGN.md §12)
+//!
+//! Everything a `FleetServer` can do in-process, over a socket: the
+//! `skip2lora/wire/v1` protocol ([`wire`]: versioned `Hello` handshake,
+//! `u32`-length-prefixed frames, bounded sizes, typed decode errors with
+//! the same trust-nothing discipline as the `.s2l` parser), a threaded
+//! std-only server ([`server::NodeServer`]) and a blocking client
+//! ([`client::NodeClient`]).
+//!
+//! Design rule: the protocol is strictly request→response and the PUMP
+//! CLOCK crosses the wire as explicit `Pump`/`PumpDrain` frames. The
+//! server never pushes, never batches on a timer, never owns time — so
+//! a driver (the fleet router, a test, an example) gets the exact same
+//! deterministic micro-batching semantics over TCP that it gets calling
+//! `FleetServer::pump()` directly, and bit-identity is checkable across
+//! the network boundary.
+//!
+//! The fleet layer ([`crate::fleet`]) builds on this: N `NodeServer`s +
+//! rendezvous routing + drain-and-migrate tenant movement.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{Admission, NodeClient};
+pub use server::NodeServer;
+pub use wire::{
+    WireCompletion, WireRequest, WireResponse, MAX_FRAME_BYTES, WIRE_VERSION,
+};

@@ -1,0 +1,302 @@
+//! [`NodeServer`] — the TCP serving edge for one [`FleetServer`].
+//!
+//! A `NodeServer` owns the fleet server behind an `Arc<Mutex>`, binds a
+//! listener (port 0 works: the kernel picks, [`NodeServer::addr`] tells),
+//! and answers `skip2lora/wire/v1` frames from any number of concurrent
+//! connections. Every connection must open with a valid `Hello`
+//! handshake; anything else — wrong magic, wrong version, malformed
+//! frame — gets a typed [`WireResponse::Error`], never a panic or a
+//! silent close.
+//!
+//! Concurrency model: the accept loop and each connection run on plain
+//! `std::thread`s, all checking one shared stop flag through short read
+//! timeouts — no async runtime, no dependencies. Requests serialize
+//! through the `Mutex`, which matches the serving plane's design: the
+//! expensive work (backbone forwards, fine-tunes) already happens on the
+//! batcher/worker-pool threads inside `FleetServer`; the lock only
+//! covers enqueue/pump bookkeeping. Crucially the PUMP CLOCK stays with
+//! whichever client drives `Pump`/`PumpDrain`, so a driver controls
+//! batching determinism over the wire exactly as it would in-process.
+//!
+//! [`NodeServer::shutdown`] stops the accept loop, joins every
+//! connection thread, and hands the inner [`FleetServer`] back — this is
+//! how the multi-node tests "kill" a node and how a decommissioned
+//! node's state can be inspected after its tenants have migrated away.
+
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::serve::server::{FleetServer, Request, Response};
+use crate::util::error::{anyhow, Context, Result};
+
+use super::wire::{
+    decode_request, write_response, WireRequest, WireResponse, MAX_FRAME_BYTES, WIRE_VERSION,
+};
+
+/// How long a blocked read waits before re-checking the stop flag.
+const POLL: Duration = Duration::from_millis(25);
+
+/// One fleet-server node listening on a TCP address.
+pub struct NodeServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    server: Arc<Mutex<FleetServer>>,
+    accept_thread: JoinHandle<()>,
+}
+
+impl NodeServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `server` over the wire protocol.
+    pub fn spawn(server: FleetServer, addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind node listener on {addr}"))?;
+        let addr = listener
+            .local_addr()
+            .context("read bound listener address")?;
+        listener
+            .set_nonblocking(true)
+            .context("set listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = Arc::new(Mutex::new(server));
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let server = Arc::clone(&server);
+            thread::spawn(move || accept_loop(listener, stop, server))
+        };
+        Ok(Self {
+            addr,
+            stop,
+            server,
+            accept_thread,
+        })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Run `f` against the inner server directly — for local drivers and
+    /// tests that want in-process access (oracle comparisons) while the
+    /// network edge is live. Serializes with wire requests via the same
+    /// mutex, so it cannot observe a half-applied frame.
+    pub fn with_server<R>(&self, f: impl FnOnce(&mut FleetServer) -> R) -> R {
+        f(&mut self.server.lock().expect("node server mutex poisoned"))
+    }
+
+    /// Stop accepting, join every connection thread, and return the
+    /// inner [`FleetServer`] (adapters, metrics and all). In-flight
+    /// frames finish first — the stop flag is only checked between
+    /// frames — so no response is ever torn mid-write.
+    pub fn shutdown(self) -> FleetServer {
+        let NodeServer {
+            stop,
+            server,
+            accept_thread,
+            ..
+        } = self;
+        stop.store(true, Ordering::SeqCst);
+        let _ = accept_thread.join();
+        // the accept loop joined every connection thread before exiting,
+        // so ours is the last strong reference
+        match Arc::try_unwrap(server) {
+            Ok(m) => m.into_inner().expect("node server mutex poisoned"),
+            Err(_) => unreachable!("all connection threads were joined"),
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, server: Arc<Mutex<FleetServer>>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(POLL));
+                let stop = Arc::clone(&stop);
+                let server = Arc::clone(&server);
+                conns.push(thread::spawn(move || {
+                    let _ = serve_connection(stream, stop, server);
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => thread::sleep(Duration::from_millis(1)),
+            // a failed accept (e.g. listener torn down) only ends the loop
+            Err(_) => break,
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Read one length-prefixed frame, waking every [`POLL`] to honor the
+/// stop flag. `Ok(None)` means clean EOF before a frame started, or
+/// stop. A connection dying MID-frame is an error, like a torn file.
+fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(anyhow!("connection closed mid length-prefix"));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) => return Err(anyhow!("read frame length: {e}")),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 {
+        return Err(anyhow!("zero-length wire frame"));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(anyhow!(
+            "announced frame of {len} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})"
+        ));
+    }
+    let mut body = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match stream.read(&mut body[got..]) {
+            Ok(0) => return Err(anyhow!("connection closed mid frame body")),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) => return Err(anyhow!("read frame body: {e}")),
+        }
+    }
+    Ok(Some(body))
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    stop: Arc<AtomicBool>,
+    server: Arc<Mutex<FleetServer>>,
+) -> Result<()> {
+    // handshake: the FIRST frame must be a well-formed Hello at our
+    // version — anything else is answered with a typed Error and the
+    // connection is closed
+    let first = match read_frame_stoppable(&mut stream, &stop)? {
+        Some(body) => body,
+        None => return Ok(()),
+    };
+    match decode_request(&first) {
+        Ok(WireRequest::Hello { version }) if version == WIRE_VERSION => {
+            write_response(
+                &mut stream,
+                &WireResponse::HelloOk {
+                    version: WIRE_VERSION,
+                },
+            )?;
+        }
+        Ok(WireRequest::Hello { version }) => {
+            write_response(
+                &mut stream,
+                &WireResponse::Error {
+                    msg: format!("wire version mismatch: client v{version}, server v{WIRE_VERSION}"),
+                },
+            )?;
+            return Ok(());
+        }
+        Ok(other) => {
+            write_response(
+                &mut stream,
+                &WireResponse::Error {
+                    msg: format!("expected Hello as first frame, got {other:?}"),
+                },
+            )?;
+            return Ok(());
+        }
+        Err(e) => {
+            write_response(&mut stream, &WireResponse::Error { msg: e.to_string() })?;
+            return Ok(());
+        }
+    }
+
+    loop {
+        let body = match read_frame_stoppable(&mut stream, &stop)? {
+            Some(body) => body,
+            None => return Ok(()),
+        };
+        let resp = match decode_request(&body) {
+            // the framing survived, only this frame's content is bad —
+            // answer with a typed error and keep the connection
+            Err(e) => WireResponse::Error { msg: e.to_string() },
+            Ok(WireRequest::Hello { .. }) => WireResponse::Error {
+                msg: "duplicate Hello: the handshake already completed".into(),
+            },
+            Ok(req) => dispatch(&server, req),
+        };
+        write_response(&mut stream, &resp)?;
+    }
+}
+
+/// Map one wire request onto the serving plane. The mutex is held only
+/// for the duration of the call — the pump clock advances exactly once
+/// per `Pump` frame, whoever sends it.
+fn dispatch(server: &Mutex<FleetServer>, req: WireRequest) -> WireResponse {
+    let mut s = server.lock().expect("node server mutex poisoned");
+    match req {
+        WireRequest::Hello { .. } => unreachable!("handled by serve_connection"),
+        WireRequest::Predict { tenant, x } => from_response(s.handle(tenant, Request::Predict(x))),
+        WireRequest::Feedback { tenant, x, label } => {
+            from_response(s.handle(tenant, Request::Feedback(x, label as usize)))
+        }
+        WireRequest::SwapAdapters { tenant, adapters } => {
+            from_response(s.handle(tenant, Request::SwapAdapters(adapters)))
+        }
+        WireRequest::Observe => WireResponse::Observed {
+            json: s.obs_snapshot().to_json().to_string(),
+        },
+        WireRequest::SaveState { path } => {
+            from_response(s.handle(0, Request::SaveState(PathBuf::from(path))))
+        }
+        WireRequest::RestoreState { path } => {
+            from_response(s.handle(0, Request::RestoreState(PathBuf::from(path))))
+        }
+        WireRequest::ExportTenant { tenant } => match s.export_tenant(tenant) {
+            Ok(bytes) => WireResponse::TenantExported { bytes },
+            Err(e) => WireResponse::Error { msg: e.to_string() },
+        },
+        WireRequest::ImportTenant { bytes } => match s.import_tenant(&bytes) {
+            Ok((tenant, version)) => WireResponse::TenantImported { tenant, version },
+            Err(e) => WireResponse::Error { msg: e.to_string() },
+        },
+        WireRequest::Drain => WireResponse::drained(&s.drain()),
+        WireRequest::Pump => WireResponse::completions(&s.pump()),
+        WireRequest::PumpDrain => WireResponse::completions(&s.pump_until_drained()),
+        WireRequest::QueueDepth => WireResponse::QueueDepthOk {
+            queued: s.queued() as u64,
+        },
+        WireRequest::Resume => {
+            s.resume_admissions();
+            WireResponse::Resumed
+        }
+    }
+}
+
+/// Serving-plane [`Response`] → wire frame. `Stats`/`Observed` carry
+/// in-process-only payloads and are reached through their dedicated
+/// wire frames instead, so they cannot appear here.
+fn from_response(resp: Response) -> WireResponse {
+    match resp {
+        Response::Queued { ticket } => WireResponse::Queued { ticket },
+        Response::Rejected(reason) => WireResponse::Rejected(reason),
+        Response::Swapped { version } => WireResponse::Swapped { version },
+        Response::Persisted(r) => WireResponse::persisted(&r),
+        Response::Restored(r) => WireResponse::restored(&r),
+        Response::Stats(_) | Response::Observed(_) => WireResponse::Error {
+            msg: "internal: response has a dedicated wire frame".into(),
+        },
+    }
+}

@@ -1,0 +1,963 @@
+//! The `skip2lora/wire/v1` frame codec — a dependency-free, versioned,
+//! length-prefixed binary protocol for driving a [`FleetServer`] over a
+//! byte stream (DESIGN.md §12).
+//!
+//! Layout (little-endian) of one frame on the wire:
+//!
+//! ```text
+//!   u32 len | u8 tag | payload (len - 1 bytes)
+//! ```
+//!
+//! `len` covers the tag byte plus the payload and is bounded by
+//! [`MAX_FRAME_BYTES`]; a peer announcing a larger frame is rejected
+//! BEFORE any allocation happens. Connections open with a
+//! [`WireRequest::Hello`] carrying the `S2LW` magic and
+//! [`WIRE_VERSION`], answered by [`WireResponse::HelloOk`] — a client
+//! speaking a different protocol (or a different version of this one) is
+//! turned away with a typed error at the handshake, not garbage later.
+//!
+//! The protocol is strictly request→response: the server NEVER pushes an
+//! unsolicited frame. Predict/Feedback only enqueue (answered by
+//! `Queued`); completions are pulled with explicit `Pump` / `PumpDrain`
+//! frames, which keeps the deterministic pump clock in the *driver's*
+//! hands — the property every bit-identity test in this repo leans on.
+//!
+//! Decoding trusts nothing: same discipline as `model/io.rs`
+//! (`TensorBundle::from_bytes`). Every read is bounds-checked through one
+//! cursor, all size math is `checked_*`, trailing bytes after a complete
+//! frame are an error, unknown tags are an error with the tag value, and
+//! nothing in this module can panic on adversarial input
+//! (`tests/net_wire.rs` sweeps every truncation point of every frame).
+
+use std::io::{Read, Write};
+
+use crate::nn::lora::LoraAdapter;
+use crate::serve::server::{Completion, DrainReport, PersistReport, RejectReason, RestoreReport};
+use crate::serve::TenantId;
+use crate::tensor::Mat;
+use crate::util::error::{bail, Context, Result};
+
+/// First bytes of every `Hello` payload — identifies the protocol itself.
+pub const MAGIC: &[u8; 4] = b"S2LW";
+
+/// Protocol version carried in the `Hello`/`HelloOk` handshake. Bump on
+/// any incompatible frame change; a server rejects mismatched clients
+/// with a typed [`WireResponse::Error`].
+pub const WIRE_VERSION: u16 = 1;
+
+/// Hard cap on `len` (tag + payload). Generous enough for a full-fleet
+/// `ImportTenant` checkpoint or an `Observed` snapshot, small enough
+/// that a hostile length prefix cannot drive a multi-GiB allocation.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+// request tags (0x01..=0x7F)
+const T_HELLO: u8 = 0x01;
+const T_PREDICT: u8 = 0x02;
+const T_FEEDBACK: u8 = 0x03;
+const T_SWAP: u8 = 0x04;
+const T_OBSERVE: u8 = 0x05;
+const T_SAVE: u8 = 0x06;
+const T_RESTORE: u8 = 0x07;
+const T_EXPORT: u8 = 0x08;
+const T_IMPORT: u8 = 0x09;
+const T_DRAIN: u8 = 0x0A;
+const T_PUMP: u8 = 0x0B;
+const T_PUMP_DRAIN: u8 = 0x0C;
+const T_QUEUE_DEPTH: u8 = 0x0D;
+const T_RESUME: u8 = 0x0E;
+
+// response tags (0x81..=0xFF)
+const T_HELLO_OK: u8 = 0x81;
+const T_QUEUED: u8 = 0x82;
+const T_REJECTED: u8 = 0x83;
+const T_SWAPPED: u8 = 0x84;
+const T_OBSERVED: u8 = 0x85;
+const T_PERSISTED: u8 = 0x86;
+const T_RESTORED: u8 = 0x87;
+const T_EXPORTED: u8 = 0x88;
+const T_IMPORTED: u8 = 0x89;
+const T_DRAINED: u8 = 0x8A;
+const T_COMPLETIONS: u8 = 0x8B;
+const T_QUEUE_DEPTH_OK: u8 = 0x8C;
+const T_RESUMED: u8 = 0x8D;
+const T_ERROR: u8 = 0xFF;
+
+// reject-reason codes inside a `Rejected` payload
+const R_QUEUE_FULL: u8 = 1;
+const R_RATE_LIMITED: u8 = 2;
+const R_MALFORMED: u8 = 3;
+const R_PERSIST_FAILED: u8 = 4;
+const R_DRAINING: u8 = 5;
+
+/// A client→server frame. One-to-one with the subset of
+/// [`crate::serve::Request`] that makes sense over a wire, plus the
+/// handshake, migration, drain, and explicit pump-clock frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireRequest {
+    /// protocol handshake: magic + version; MUST be the first frame
+    Hello { version: u16 },
+    Predict { tenant: TenantId, x: Vec<f32> },
+    Feedback { tenant: TenantId, x: Vec<f32>, label: u32 },
+    SwapAdapters { tenant: TenantId, adapters: Vec<LoraAdapter> },
+    /// pull the node's `skip2lora/obs/v1` snapshot (returned as JSON text)
+    Observe,
+    SaveState { path: String },
+    RestoreState { path: String },
+    /// serialize one tenant's published adapters for migration
+    ExportTenant { tenant: TenantId },
+    /// install a tenant checkpoint produced by `ExportTenant` elsewhere
+    ImportTenant { bytes: Vec<u8> },
+    /// close admissions, flush the queue, join fine-tunes
+    Drain,
+    /// advance the deterministic pump clock by one tick
+    Pump,
+    /// pump until the queue is empty
+    PumpDrain,
+    /// how many requests are waiting (lets a driver pace its pumps)
+    QueueDepth,
+    /// re-open admissions after a `Drain`
+    Resume,
+}
+
+/// A served request as it crosses the wire — field-for-field the serving
+/// plane's [`Completion`], with explicit option encoding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireCompletion {
+    pub tenant: TenantId,
+    pub ticket: u64,
+    pub prediction: u32,
+    pub label: Option<u32>,
+    pub correct: Option<bool>,
+    pub adapter_version: u64,
+}
+
+impl From<&Completion> for WireCompletion {
+    fn from(c: &Completion) -> Self {
+        Self {
+            tenant: c.tenant,
+            ticket: c.ticket,
+            prediction: c.prediction as u32,
+            label: c.label.map(|l| l as u32),
+            correct: c.correct,
+            adapter_version: c.adapter_version,
+        }
+    }
+}
+
+impl WireCompletion {
+    /// Back to the serving plane's type (the router hands these to code
+    /// that cannot tell local from remote completions).
+    pub fn into_completion(self) -> Completion {
+        Completion {
+            tenant: self.tenant,
+            ticket: self.ticket,
+            prediction: self.prediction as usize,
+            label: self.label.map(|l| l as usize),
+            correct: self.correct,
+            adapter_version: self.adapter_version,
+        }
+    }
+}
+
+/// A server→client frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    HelloOk { version: u16 },
+    Queued { ticket: u64 },
+    /// typed end-to-end: the client gets back the same [`RejectReason`]
+    /// the serving plane produced, so a router can react per-variant
+    /// (re-route on `Draining`, back off on `QueueFull`, …)
+    Rejected(RejectReason),
+    Swapped { version: u64 },
+    /// the node's `skip2lora/obs/v1` snapshot as JSON text
+    Observed { json: String },
+    Persisted { tenants: u64, bytes: u64 },
+    Restored { tenants: u64, installed: u64, max_version: u64 },
+    TenantExported { bytes: Vec<u8> },
+    TenantImported { tenant: TenantId, version: u64 },
+    Drained {
+        queued_at_start: u64,
+        finetunes_joined: u64,
+        completions: Vec<WireCompletion>,
+    },
+    Completions(Vec<WireCompletion>),
+    QueueDepthOk { queued: u64 },
+    Resumed,
+    /// any server-side failure that is not a typed rejection
+    Error { msg: String },
+}
+
+impl WireResponse {
+    pub fn persisted(r: &PersistReport) -> Self {
+        WireResponse::Persisted {
+            tenants: r.tenants as u64,
+            bytes: r.bytes as u64,
+        }
+    }
+
+    pub fn restored(r: &RestoreReport) -> Self {
+        WireResponse::Restored {
+            tenants: r.tenants as u64,
+            installed: r.installed as u64,
+            max_version: r.max_version,
+        }
+    }
+
+    pub fn drained(r: &DrainReport) -> Self {
+        WireResponse::Drained {
+            queued_at_start: r.queued_at_start as u64,
+            finetunes_joined: r.finetunes_joined as u64,
+            completions: r.completions.iter().map(WireCompletion::from).collect(),
+        }
+    }
+
+    pub fn completions(cs: &[Completion]) -> Self {
+        WireResponse::Completions(cs.iter().map(WireCompletion::from).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encoding
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+    put_u32(buf, b.len() as u32);
+    buf.extend_from_slice(b);
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_bytes(buf, s.as_bytes());
+}
+
+fn put_floats(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(buf, xs.len() as u32);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_adapters(buf: &mut Vec<u8>, adapters: &[LoraAdapter]) {
+    put_u32(buf, adapters.len() as u32);
+    for a in adapters {
+        // (n_in, rank, n_out) then wa row-major, wb row-major — the
+        // dims pin both shapes, so the float counts are implied
+        put_u32(buf, a.wa.rows as u32);
+        put_u32(buf, a.wa.cols as u32);
+        put_u32(buf, a.wb.cols as u32);
+        for v in &a.wa.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &a.wb.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+fn put_completion(buf: &mut Vec<u8>, c: &WireCompletion) {
+    put_u64(buf, c.tenant);
+    put_u64(buf, c.ticket);
+    put_u32(buf, c.prediction);
+    match c.label {
+        None => buf.push(0),
+        Some(l) => {
+            buf.push(1);
+            put_u32(buf, l);
+        }
+    }
+    // 0 = absent, 1 = Some(false), 2 = Some(true)
+    buf.push(match c.correct {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    });
+    put_u64(buf, c.adapter_version);
+}
+
+fn put_completions(buf: &mut Vec<u8>, cs: &[WireCompletion]) {
+    put_u32(buf, cs.len() as u32);
+    for c in cs {
+        put_completion(buf, c);
+    }
+}
+
+/// Encode a request as `tag + payload` (no length prefix — that is the
+/// stream layer's job, see [`write_frame`]).
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match req {
+        WireRequest::Hello { version } => {
+            buf.push(T_HELLO);
+            buf.extend_from_slice(MAGIC);
+            put_u16(&mut buf, *version);
+        }
+        WireRequest::Predict { tenant, x } => {
+            buf.push(T_PREDICT);
+            put_u64(&mut buf, *tenant);
+            put_floats(&mut buf, x);
+        }
+        WireRequest::Feedback { tenant, x, label } => {
+            buf.push(T_FEEDBACK);
+            put_u64(&mut buf, *tenant);
+            put_floats(&mut buf, x);
+            put_u32(&mut buf, *label);
+        }
+        WireRequest::SwapAdapters { tenant, adapters } => {
+            buf.push(T_SWAP);
+            put_u64(&mut buf, *tenant);
+            put_adapters(&mut buf, adapters);
+        }
+        WireRequest::Observe => buf.push(T_OBSERVE),
+        WireRequest::SaveState { path } => {
+            buf.push(T_SAVE);
+            put_str(&mut buf, path);
+        }
+        WireRequest::RestoreState { path } => {
+            buf.push(T_RESTORE);
+            put_str(&mut buf, path);
+        }
+        WireRequest::ExportTenant { tenant } => {
+            buf.push(T_EXPORT);
+            put_u64(&mut buf, *tenant);
+        }
+        WireRequest::ImportTenant { bytes } => {
+            buf.push(T_IMPORT);
+            put_bytes(&mut buf, bytes);
+        }
+        WireRequest::Drain => buf.push(T_DRAIN),
+        WireRequest::Pump => buf.push(T_PUMP),
+        WireRequest::PumpDrain => buf.push(T_PUMP_DRAIN),
+        WireRequest::QueueDepth => buf.push(T_QUEUE_DEPTH),
+        WireRequest::Resume => buf.push(T_RESUME),
+    }
+    buf
+}
+
+/// Encode a response as `tag + payload`.
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match resp {
+        WireResponse::HelloOk { version } => {
+            buf.push(T_HELLO_OK);
+            put_u16(&mut buf, *version);
+        }
+        WireResponse::Queued { ticket } => {
+            buf.push(T_QUEUED);
+            put_u64(&mut buf, *ticket);
+        }
+        WireResponse::Rejected(reason) => {
+            buf.push(T_REJECTED);
+            match reason {
+                RejectReason::QueueFull { bound } => {
+                    buf.push(R_QUEUE_FULL);
+                    put_u64(&mut buf, *bound as u64);
+                }
+                RejectReason::RateLimited => buf.push(R_RATE_LIMITED),
+                RejectReason::Malformed(msg) => {
+                    buf.push(R_MALFORMED);
+                    put_str(&mut buf, msg);
+                }
+                RejectReason::PersistFailed(msg) => {
+                    buf.push(R_PERSIST_FAILED);
+                    put_str(&mut buf, msg);
+                }
+                RejectReason::Draining => buf.push(R_DRAINING),
+            }
+        }
+        WireResponse::Swapped { version } => {
+            buf.push(T_SWAPPED);
+            put_u64(&mut buf, *version);
+        }
+        WireResponse::Observed { json } => {
+            buf.push(T_OBSERVED);
+            put_str(&mut buf, json);
+        }
+        WireResponse::Persisted { tenants, bytes } => {
+            buf.push(T_PERSISTED);
+            put_u64(&mut buf, *tenants);
+            put_u64(&mut buf, *bytes);
+        }
+        WireResponse::Restored {
+            tenants,
+            installed,
+            max_version,
+        } => {
+            buf.push(T_RESTORED);
+            put_u64(&mut buf, *tenants);
+            put_u64(&mut buf, *installed);
+            put_u64(&mut buf, *max_version);
+        }
+        WireResponse::TenantExported { bytes } => {
+            buf.push(T_EXPORTED);
+            put_bytes(&mut buf, bytes);
+        }
+        WireResponse::TenantImported { tenant, version } => {
+            buf.push(T_IMPORTED);
+            put_u64(&mut buf, *tenant);
+            put_u64(&mut buf, *version);
+        }
+        WireResponse::Drained {
+            queued_at_start,
+            finetunes_joined,
+            completions,
+        } => {
+            buf.push(T_DRAINED);
+            put_u64(&mut buf, *queued_at_start);
+            put_u64(&mut buf, *finetunes_joined);
+            put_completions(&mut buf, completions);
+        }
+        WireResponse::Completions(cs) => {
+            buf.push(T_COMPLETIONS);
+            put_completions(&mut buf, cs);
+        }
+        WireResponse::QueueDepthOk { queued } => {
+            buf.push(T_QUEUE_DEPTH_OK);
+            put_u64(&mut buf, *queued);
+        }
+        WireResponse::Resumed => buf.push(T_RESUMED),
+        WireResponse::Error { msg } => {
+            buf.push(T_ERROR);
+            put_str(&mut buf, msg);
+        }
+    }
+    buf
+}
+
+// ---------------------------------------------------------------------------
+// decoding
+
+/// Bounds-checked cursor over one frame body — the `model/io.rs` `take`
+/// discipline (`n > len - p`, which cannot overflow because `p <= len`)
+/// packaged for a protocol with many frame shapes. Every decode error is
+/// a typed `Error`; nothing here panics on adversarial bytes.
+struct Rd<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, p: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.b.len() - self.p {
+            bail!(
+                "truncated wire frame: need {n} bytes at offset {}, have {}",
+                self.p,
+                self.b.len() - self.p
+            );
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    /// u32 length + raw bytes; the length is validated against the
+    /// remaining frame BEFORE any allocation.
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let raw = self.bytes()?;
+        String::from_utf8(raw.to_vec()).context("non-UTF-8 string in wire frame")
+    }
+
+    /// u32 count + count f32s. The byte size is computed CHECKED and
+    /// validated against the remaining frame before the vector is built,
+    /// so a hostile count can neither wrap the math nor drive an
+    /// oversized allocation.
+    fn floats(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let nbytes = n
+            .checked_mul(4)
+            .with_context(|| format!("float count {n} overflows byte math"))?;
+        let raw = self.take(nbytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn exact_floats(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let nbytes = n
+            .checked_mul(4)
+            .with_context(|| format!("{what}: float count {n} overflows byte math"))?;
+        let raw = self.take(nbytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn adapters(&mut self) -> Result<Vec<LoraAdapter>> {
+        let count = self.u32()? as usize;
+        let mut out = Vec::new();
+        for i in 0..count {
+            let n_in = self.u32()? as usize;
+            let rank = self.u32()? as usize;
+            let n_out = self.u32()? as usize;
+            let wa_len = n_in
+                .checked_mul(rank)
+                .with_context(|| format!("adapter {i}: wa dims {n_in}x{rank} overflow"))?;
+            let wb_len = rank
+                .checked_mul(n_out)
+                .with_context(|| format!("adapter {i}: wb dims {rank}x{n_out} overflow"))?;
+            let wa = self.exact_floats(wa_len, "adapter wa")?;
+            let wb = self.exact_floats(wb_len, "adapter wb")?;
+            out.push(LoraAdapter {
+                wa: Mat::from_vec(n_in, rank, wa),
+                wb: Mat::from_vec(rank, n_out, wb),
+            });
+        }
+        Ok(out)
+    }
+
+    fn completion(&mut self) -> Result<WireCompletion> {
+        let tenant = self.u64()?;
+        let ticket = self.u64()?;
+        let prediction = self.u32()?;
+        let label = match self.u8()? {
+            0 => None,
+            1 => Some(self.u32()?),
+            other => bail!("bad label presence byte {other} in completion"),
+        };
+        let correct = match self.u8()? {
+            0 => None,
+            1 => Some(false),
+            2 => Some(true),
+            other => bail!("bad correctness byte {other} in completion"),
+        };
+        let adapter_version = self.u64()?;
+        Ok(WireCompletion {
+            tenant,
+            ticket,
+            prediction,
+            label,
+            correct,
+            adapter_version,
+        })
+    }
+
+    fn completions(&mut self) -> Result<Vec<WireCompletion>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::new();
+        for _ in 0..n {
+            out.push(self.completion()?);
+        }
+        Ok(out)
+    }
+
+    /// A complete frame must consume every byte — trailing garbage means
+    /// a confused (or malicious) peer, and is rejected like truncation.
+    fn finish(&self) -> Result<()> {
+        if self.p != self.b.len() {
+            bail!(
+                "trailing bytes in wire frame: {} consumed, {} present",
+                self.p,
+                self.b.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Decode one request frame body (`tag + payload`, no length prefix).
+pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
+    let mut rd = Rd::new(body);
+    let tag = rd.u8().context("empty wire frame")?;
+    let req = match tag {
+        T_HELLO => {
+            let magic = rd.take(4)?;
+            if magic != MAGIC {
+                bail!("bad hello magic {magic:?}: not a skip2lora/wire peer");
+            }
+            WireRequest::Hello { version: rd.u16()? }
+        }
+        T_PREDICT => WireRequest::Predict {
+            tenant: rd.u64()?,
+            x: rd.floats()?,
+        },
+        T_FEEDBACK => WireRequest::Feedback {
+            tenant: rd.u64()?,
+            x: rd.floats()?,
+            label: rd.u32()?,
+        },
+        T_SWAP => WireRequest::SwapAdapters {
+            tenant: rd.u64()?,
+            adapters: rd.adapters()?,
+        },
+        T_OBSERVE => WireRequest::Observe,
+        T_SAVE => WireRequest::SaveState { path: rd.string()? },
+        T_RESTORE => WireRequest::RestoreState { path: rd.string()? },
+        T_EXPORT => WireRequest::ExportTenant { tenant: rd.u64()? },
+        T_IMPORT => WireRequest::ImportTenant {
+            bytes: rd.bytes()?.to_vec(),
+        },
+        T_DRAIN => WireRequest::Drain,
+        T_PUMP => WireRequest::Pump,
+        T_PUMP_DRAIN => WireRequest::PumpDrain,
+        T_QUEUE_DEPTH => WireRequest::QueueDepth,
+        T_RESUME => WireRequest::Resume,
+        other => bail!("unknown request frame tag 0x{other:02X}"),
+    };
+    rd.finish()?;
+    Ok(req)
+}
+
+/// Decode one response frame body (`tag + payload`, no length prefix).
+pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
+    let mut rd = Rd::new(body);
+    let tag = rd.u8().context("empty wire frame")?;
+    let resp = match tag {
+        T_HELLO_OK => WireResponse::HelloOk { version: rd.u16()? },
+        T_QUEUED => WireResponse::Queued { ticket: rd.u64()? },
+        T_REJECTED => {
+            let code = rd.u8()?;
+            let reason = match code {
+                R_QUEUE_FULL => RejectReason::QueueFull {
+                    bound: rd.u64()? as usize,
+                },
+                R_RATE_LIMITED => RejectReason::RateLimited,
+                R_MALFORMED => RejectReason::Malformed(rd.string()?),
+                R_PERSIST_FAILED => RejectReason::PersistFailed(rd.string()?),
+                R_DRAINING => RejectReason::Draining,
+                other => bail!("unknown reject-reason code {other}"),
+            };
+            WireResponse::Rejected(reason)
+        }
+        T_SWAPPED => WireResponse::Swapped { version: rd.u64()? },
+        T_OBSERVED => WireResponse::Observed { json: rd.string()? },
+        T_PERSISTED => WireResponse::Persisted {
+            tenants: rd.u64()?,
+            bytes: rd.u64()?,
+        },
+        T_RESTORED => WireResponse::Restored {
+            tenants: rd.u64()?,
+            installed: rd.u64()?,
+            max_version: rd.u64()?,
+        },
+        T_EXPORTED => WireResponse::TenantExported {
+            bytes: rd.bytes()?.to_vec(),
+        },
+        T_IMPORTED => WireResponse::TenantImported {
+            tenant: rd.u64()?,
+            version: rd.u64()?,
+        },
+        T_DRAINED => WireResponse::Drained {
+            queued_at_start: rd.u64()?,
+            finetunes_joined: rd.u64()?,
+            completions: rd.completions()?,
+        },
+        T_COMPLETIONS => WireResponse::Completions(rd.completions()?),
+        T_QUEUE_DEPTH_OK => WireResponse::QueueDepthOk { queued: rd.u64()? },
+        T_RESUMED => WireResponse::Resumed,
+        T_ERROR => WireResponse::Error { msg: rd.string()? },
+        other => bail!("unknown response frame tag 0x{other:02X}"),
+    };
+    rd.finish()?;
+    Ok(resp)
+}
+
+// ---------------------------------------------------------------------------
+// stream layer
+
+/// Write one length-prefixed frame. `body` is `tag + payload` as
+/// produced by [`encode_request`] / [`encode_response`].
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    if body.is_empty() {
+        bail!("refusing to write an empty wire frame");
+    }
+    if body.len() > MAX_FRAME_BYTES {
+        bail!(
+            "frame of {} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})",
+            body.len()
+        );
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .context("write frame length")?;
+    w.write_all(body).context("write frame body")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame body. The announced length is bounds-
+/// checked (non-zero, ≤ [`MAX_FRAME_BYTES`]) BEFORE the body allocation,
+/// so a hostile prefix cannot drive an oversized allocation; a stream
+/// that ends mid-frame is a typed error.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("read frame length")?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 {
+        bail!("zero-length wire frame");
+    }
+    if len > MAX_FRAME_BYTES {
+        bail!("announced frame of {len} bytes exceeds MAX_FRAME_BYTES ({MAX_FRAME_BYTES})");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .with_context(|| format!("read {len}-byte frame body"))?;
+    Ok(body)
+}
+
+/// [`encode_request`] + [`write_frame`].
+pub fn write_request(w: &mut impl Write, req: &WireRequest) -> Result<()> {
+    write_frame(w, &encode_request(req))
+}
+
+/// [`read_frame`] + [`decode_request`].
+pub fn read_request(r: &mut impl Read) -> Result<WireRequest> {
+    decode_request(&read_frame(r)?)
+}
+
+/// [`encode_response`] + [`write_frame`].
+pub fn write_response(w: &mut impl Write, resp: &WireResponse) -> Result<()> {
+    write_frame(w, &encode_response(resp))
+}
+
+/// [`read_frame`] + [`decode_response`].
+pub fn read_response(r: &mut impl Read) -> Result<WireResponse> {
+    decode_response(&read_frame(r)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_completion() -> WireCompletion {
+        WireCompletion {
+            tenant: 42,
+            ticket: 7,
+            prediction: 2,
+            label: Some(1),
+            correct: Some(false),
+            adapter_version: 9,
+        }
+    }
+
+    fn all_requests() -> Vec<WireRequest> {
+        let adapter = LoraAdapter {
+            wa: Mat::from_vec(3, 2, vec![0.5, -1.0, 2.0, 0.25, -0.125, 8.0]),
+            wb: Mat::from_vec(2, 4, vec![1.0; 8]),
+        };
+        vec![
+            WireRequest::Hello {
+                version: WIRE_VERSION,
+            },
+            WireRequest::Predict {
+                tenant: 3,
+                x: vec![0.1, -0.5, 1e9],
+            },
+            WireRequest::Feedback {
+                tenant: u64::MAX,
+                x: vec![],
+                label: 2,
+            },
+            WireRequest::SwapAdapters {
+                tenant: 17,
+                adapters: vec![adapter.clone(), adapter],
+            },
+            WireRequest::Observe,
+            WireRequest::SaveState {
+                path: "/tmp/ck.s2l".into(),
+            },
+            WireRequest::RestoreState {
+                path: "relative/ck.s2l".into(),
+            },
+            WireRequest::ExportTenant { tenant: 99 },
+            WireRequest::ImportTenant {
+                bytes: vec![1, 2, 3, 255, 0],
+            },
+            WireRequest::Drain,
+            WireRequest::Pump,
+            WireRequest::PumpDrain,
+            WireRequest::QueueDepth,
+            WireRequest::Resume,
+        ]
+    }
+
+    fn all_responses() -> Vec<WireResponse> {
+        vec![
+            WireResponse::HelloOk {
+                version: WIRE_VERSION,
+            },
+            WireResponse::Queued { ticket: 1234 },
+            WireResponse::Rejected(RejectReason::QueueFull { bound: 1024 }),
+            WireResponse::Rejected(RejectReason::RateLimited),
+            WireResponse::Rejected(RejectReason::Malformed("dim 7 != 8".into())),
+            WireResponse::Rejected(RejectReason::PersistFailed("torn file".into())),
+            WireResponse::Rejected(RejectReason::Draining),
+            WireResponse::Swapped { version: 5 },
+            WireResponse::Observed {
+                json: "{\"schema\":\"skip2lora/obs/v1\"}".into(),
+            },
+            WireResponse::Persisted {
+                tenants: 3,
+                bytes: 4096,
+            },
+            WireResponse::Restored {
+                tenants: 3,
+                installed: 2,
+                max_version: 11,
+            },
+            WireResponse::TenantExported {
+                bytes: vec![83, 50, 76, 49],
+            },
+            WireResponse::TenantImported {
+                tenant: 42,
+                version: 6,
+            },
+            WireResponse::Drained {
+                queued_at_start: 2,
+                finetunes_joined: 1,
+                completions: vec![sample_completion()],
+            },
+            WireResponse::Completions(vec![
+                sample_completion(),
+                WireCompletion {
+                    label: None,
+                    correct: None,
+                    ..sample_completion()
+                },
+                WireCompletion {
+                    correct: Some(true),
+                    ..sample_completion()
+                },
+            ]),
+            WireResponse::QueueDepthOk { queued: 77 },
+            WireResponse::Resumed,
+            WireResponse::Error {
+                msg: "tenant 5 has no published adapters".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_request_roundtrips() {
+        for req in all_requests() {
+            let body = encode_request(&req);
+            let back = decode_request(&body).unwrap_or_else(|e| panic!("{req:?}: {e}"));
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        for resp in all_responses() {
+            let body = encode_response(&resp);
+            let back = decode_response(&body).unwrap_or_else(|e| panic!("{resp:?}: {e}"));
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_the_stream_layer() {
+        let mut stream = Vec::new();
+        for req in all_requests() {
+            write_request(&mut stream, &req).unwrap();
+        }
+        for resp in all_responses() {
+            write_response(&mut stream, &resp).unwrap();
+        }
+        let mut r = stream.as_slice();
+        for req in all_requests() {
+            assert_eq!(read_request(&mut r).unwrap(), req);
+        }
+        for resp in all_responses() {
+            assert_eq!(read_response(&mut r).unwrap(), resp);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn adapter_floats_are_bit_exact() {
+        let wa = vec![f32::MIN_POSITIVE, -0.0, 1.0e-38, 3.5];
+        let req = WireRequest::SwapAdapters {
+            tenant: 1,
+            adapters: vec![LoraAdapter {
+                wa: Mat::from_vec(2, 2, wa.clone()),
+                wb: Mat::from_vec(2, 1, vec![f32::MAX, f32::MIN]),
+            }],
+        };
+        match decode_request(&encode_request(&req)).unwrap() {
+            WireRequest::SwapAdapters { adapters, .. } => {
+                for (a, b) in adapters[0].wa.data.iter().zip(wa.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        for req in all_requests() {
+            let mut body = encode_request(&req);
+            body.push(0);
+            assert!(
+                decode_request(&body).is_err(),
+                "{req:?} accepted a trailing byte"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&(u32::MAX).to_le_bytes());
+        stream.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut stream.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("MAX_FRAME_BYTES"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_frame_is_rejected() {
+        let stream = 0u32.to_le_bytes();
+        assert!(read_frame(&mut stream.as_slice()).is_err());
+    }
+
+    #[test]
+    fn hostile_float_count_cannot_wrap_byte_math() {
+        // Predict frame claiming u32::MAX floats with a 4-byte body: the
+        // checked_mul/take pair must reject it, not wrap or allocate
+        let mut body = vec![T_PREDICT];
+        put_u64(&mut body, 1);
+        put_u32(&mut body, u32::MAX);
+        body.extend_from_slice(&[0u8; 4]);
+        assert!(decode_request(&body).is_err());
+    }
+}

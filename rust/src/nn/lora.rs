@@ -19,7 +19,7 @@ use crate::nn::ctx::LoraCtx;
 use crate::tensor::{ops, ops::Backend, Mat};
 use crate::util::rng::Rng;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LoraAdapter {
     pub wa: Mat, // (n_in, rank)
     pub wb: Mat, // (rank, n_out)

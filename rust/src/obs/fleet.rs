@@ -1,0 +1,653 @@
+//! Fleet-level snapshot aggregation: fold N per-node `skip2lora/obs/v1`
+//! documents into ONE valid `skip2lora/obs/v1` document (ROADMAP item 3).
+//!
+//! The router receives each node's `ObsSnapshot` as JSON over the wire
+//! (`Observe` frame), so the fold happens at the JSON layer — but it does
+//! NOT re-derive statistics ad hoc. The histogram sections are lifted back
+//! into real [`LatencyHistogram`] values via `from_parts` (the exported
+//! representation — bucket counts, max, Welford moments — is lossless by
+//! design) and combined with the SAME property-tested merge laws the
+//! in-process path uses (`LatencyHistogram::merge`, Chan's parallel
+//! Welford combination), then re-serialized through the same
+//! `snapshot::hist_json` writer. Consequences, by construction rather
+//! than by re-proof:
+//!
+//! - every counter in the merged doc is the exact sum of the per-node
+//!   counters (u64 sums, no fp drift),
+//! - merged mean/std match a single server that saw all streams (up to fp
+//!   rounding),
+//! - percentile ≤ max holds on the merged doc because percentiles are
+//!   recomputed from merged buckets, never averaged.
+//!
+//! Derived ratios (`rows_per_batch`, `cache_hit_rate`, stage `frac`, …)
+//! are recomputed from the summed numerators/denominators — averaging
+//! ratios across nodes with different traffic volumes would be wrong.
+//! Flight-recorder tails are concatenated in node order with reassigned
+//! sequence numbers so the fleet tail keeps the strictly-increasing-seq
+//! invariant the validator enforces.
+
+use crate::obs::snapshot::{self, hist_json, SCHEMA};
+use crate::serve::metrics::LatencyHistogram;
+use crate::util::json::{arr, num, obj, parse, s, Json};
+use crate::util::stats::Welford;
+
+/// Raw (non-derived) counters of the `serve` section, summed exactly.
+const SERVE_COUNTERS: [&str; 18] = [
+    "predicts",
+    "feedbacks",
+    "swaps",
+    "queue_rejections",
+    "rate_limited",
+    "evictions",
+    "adaptations",
+    "finetune_panics",
+    "batches",
+    "batched_rows",
+    "finetune_cache_hits",
+    "finetune_cache_misses",
+    "persists",
+    "restores",
+    "tenants_restored",
+    "exports",
+    "imports",
+    "pump_ticks",
+];
+
+fn getf(j: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{ctx}: missing numeric '{key}'"))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(format!("{ctx}: '{key}' must be finite and >= 0, got {v}"));
+    }
+    Ok(v)
+}
+
+fn ratio(numer: f64, denom: f64) -> f64 {
+    if denom == 0.0 {
+        0.0
+    } else {
+        numer / denom
+    }
+}
+
+/// Invert `snapshot::hist_json`: rebuild the mergeable histogram from its
+/// exported section. The export is lossless (raw buckets + max + moments),
+/// so `hist_json(&hist_from_json(h)?) == h` up to fp formatting.
+fn hist_from_json(h: &Json, ctx: &str) -> Result<LatencyHistogram, String> {
+    let count = getf(h, "count", ctx)? as u64;
+    let mean_ns = getf(h, "mean_ms", ctx)? * 1e6;
+    let std_ns = getf(h, "std_ms", ctx)? * 1e6;
+    let max_ns = (getf(h, "max_ms", ctx)? * 1e6).round() as u64;
+    let buckets_j = h
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{ctx}: missing 'buckets' array"))?;
+    let mut buckets = Vec::with_capacity(buckets_j.len());
+    let mut bucket_sum = 0u64;
+    for (i, b) in buckets_j.iter().enumerate() {
+        let v = b
+            .as_f64()
+            .filter(|v| v.is_finite() && *v >= 0.0)
+            .ok_or_else(|| format!("{ctx}: bucket[{i}] invalid"))?;
+        buckets.push(v as u64);
+        bucket_sum += v as u64;
+    }
+    if bucket_sum != count {
+        return Err(format!(
+            "{ctx}: bucket counts sum to {bucket_sum} but count is {count}"
+        ));
+    }
+    // std_dev used the (n-1)-denominator sample form, so m2 = std²·(n-1)
+    let m2 = std_ns * std_ns * count.saturating_sub(1) as f64;
+    Ok(LatencyHistogram::from_parts(
+        &buckets,
+        max_ns,
+        Welford::from_parts(count, mean_ns, m2),
+    ))
+}
+
+fn merged_hist(docs: &[Json], section: &str, key: &str) -> Result<Json, String> {
+    let mut acc = LatencyHistogram::new();
+    for (i, d) in docs.iter().enumerate() {
+        let ctx = format!("doc[{i}].{section}.{key}");
+        let h = d
+            .get(section)
+            .and_then(|sct| sct.get(key))
+            .ok_or_else(|| format!("{ctx}: missing histogram"))?;
+        acc.merge(&hist_from_json(h, &ctx)?);
+    }
+    Ok(hist_json(&acc))
+}
+
+/// Sum one numeric key across all docs, descending into `section` when
+/// given (`None` sums a top-level key).
+fn sum_key(docs: &[Json], section: Option<&str>, key: &str) -> Result<f64, String> {
+    let mut total = 0.0;
+    for (i, d) in docs.iter().enumerate() {
+        let (j, ctx) = match section {
+            Some(sct) => (
+                d.get(sct)
+                    .ok_or_else(|| format!("doc[{i}]: missing '{sct}' section"))?,
+                format!("doc[{i}].{sct}"),
+            ),
+            None => (d, format!("doc[{i}]")),
+        };
+        total += getf(j, key, &ctx)?;
+    }
+    Ok(total)
+}
+
+/// Merge N parsed `skip2lora/obs/v1` documents into one. The result is
+/// itself a valid `skip2lora/obs/v1` document (callers can — and
+/// `merge_texts` does — re-run `snapshot::validate` over it), with every
+/// counter equal to the sum of the per-node counters and every derived
+/// ratio recomputed from the sums.
+pub fn merge_docs(docs: &[Json]) -> Result<Json, String> {
+    if docs.is_empty() {
+        return Err("fleet merge needs at least one snapshot".into());
+    }
+    for (i, d) in docs.iter().enumerate() {
+        let schema = d
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("doc[{i}]: missing 'schema'"))?;
+        if schema != SCHEMA {
+            return Err(format!(
+                "doc[{i}]: schema mismatch: got '{schema}', want '{SCHEMA}'"
+            ));
+        }
+    }
+
+    // --- serve: exact counter sums, derived ratios recomputed ---
+    let mut serve: Vec<(&str, Json)> = Vec::new();
+    let counter = |key: &str| sum_key(docs, Some("serve"), key);
+    let batches = counter("batches")?;
+    let batched_rows = counter("batched_rows")?;
+    let pump_ticks_m = counter("pump_ticks")?;
+    let hits = counter("finetune_cache_hits")?;
+    let misses = counter("finetune_cache_misses")?;
+    for key in SERVE_COUNTERS {
+        serve.push((key, num(sum_key(docs, Some("serve"), key)?)));
+    }
+    serve.push(("rows_per_batch", num(ratio(batched_rows, batches))));
+    serve.push(("rows_per_pump", num(ratio(batched_rows, pump_ticks_m))));
+    serve.push(("finetune_cache_hit_rate", num(ratio(hits, hits + misses))));
+    serve.push(("batch_forward", merged_hist(docs, "serve", "batch_forward")?));
+    serve.push(("finetune", merged_hist(docs, "serve", "finetune")?));
+
+    // --- finetune_stages: plain ns sums ---
+    let mut ft: Vec<(&str, Json)> = Vec::new();
+    for key in ["forward_ns", "backward_ns", "update_ns", "cache_mgmt_ns"] {
+        ft.push((key, num(sum_key(docs, Some("finetune_stages"), key)?)));
+    }
+
+    // --- flush_stages: ns summed per stage name, fracs recomputed ---
+    let mut fs_enabled = false;
+    let mut fs_flushes = 0.0;
+    let mut fs_total = 0.0;
+    let mut stage_order: Vec<String> = Vec::new();
+    let mut stage_ns: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    for (i, d) in docs.iter().enumerate() {
+        let fs = d
+            .get("flush_stages")
+            .ok_or_else(|| format!("doc[{i}]: missing 'flush_stages'"))?;
+        fs_enabled |= matches!(fs.get("enabled"), Some(Json::Bool(true)));
+        fs_flushes += getf(fs, "flushes", &format!("doc[{i}].flush_stages"))?;
+        fs_total += getf(fs, "total_ns", &format!("doc[{i}].flush_stages"))?;
+        let stages = fs
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("doc[{i}].flush_stages: missing 'stages'"))?;
+        for (k, st) in stages.iter().enumerate() {
+            let ctx = format!("doc[{i}].flush_stages.stages[{k}]");
+            let name = st
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{ctx}: missing 'name'"))?;
+            let ns = getf(st, "ns", &ctx)?;
+            if !stage_ns.contains_key(name) {
+                stage_order.push(name.to_string());
+            }
+            *stage_ns.entry(name.to_string()).or_insert(0.0) += ns;
+        }
+    }
+    let stages_json = arr(stage_order
+        .iter()
+        .map(|name| {
+            let ns = stage_ns[name];
+            obj(vec![
+                ("name", s(name)),
+                ("ns", num(ns)),
+                ("frac", num(ratio(ns, fs_total))),
+            ])
+        })
+        .collect());
+
+    // --- trace: counts summed, tails concatenated with reassigned seqs ---
+    let mut tr_enabled = false;
+    let mut tr_capacity = 0.0;
+    let mut tr_recorded = 0.0;
+    let mut tr_dropped = 0.0;
+    let mut tr_counts: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+    let mut tail: Vec<Json> = Vec::new();
+    for (i, d) in docs.iter().enumerate() {
+        let tr = d
+            .get("trace")
+            .ok_or_else(|| format!("doc[{i}]: missing 'trace'"))?;
+        let ctx = format!("doc[{i}].trace");
+        tr_enabled |= matches!(tr.get("enabled"), Some(Json::Bool(true)));
+        tr_capacity += getf(tr, "capacity", &ctx)?;
+        tr_recorded += getf(tr, "recorded", &ctx)?;
+        tr_dropped += getf(tr, "dropped", &ctx)?;
+        let counts = tr
+            .get("counts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| format!("{ctx}: missing 'counts'"))?;
+        for (k, v) in counts {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| format!("{ctx}.counts.{k}: not numeric"))?;
+            *tr_counts.entry(k.clone()).or_insert(0.0) += v;
+        }
+        let node_tail = tr
+            .get("tail")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{ctx}: missing 'tail'"))?;
+        for e in node_tail {
+            // per-node seqs restart at 0, so the fleet tail reassigns them
+            // (node order, then within-node order) to stay strictly
+            // increasing; a "node" field preserves provenance
+            let mut fields = e
+                .as_obj()
+                .ok_or_else(|| format!("{ctx}: tail event not an object"))?
+                .clone();
+            fields.insert("seq".into(), num(tail.len() as f64));
+            fields.insert("node".into(), num(i as f64));
+            tail.push(Json::Obj(fields));
+        }
+    }
+
+    // --- tenants: heavy-hitter rows merged by tenant id ---
+    struct Slot {
+        requests: f64,
+        hits: f64,
+        misses: f64,
+        finetunes: f64,
+        finetune_ms_sum: f64,
+    }
+    let mut slots: std::collections::BTreeMap<u64, Slot> = std::collections::BTreeMap::new();
+    for (i, d) in docs.iter().enumerate() {
+        let rows = d
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("doc[{i}]: missing 'tenants'"))?;
+        for (k, row) in rows.iter().enumerate() {
+            let ctx = format!("doc[{i}].tenants[{k}]");
+            let tenant = getf(row, "tenant", &ctx)? as u64;
+            let finetunes = getf(row, "finetunes", &ctx)?;
+            let sl = slots.entry(tenant).or_insert(Slot {
+                requests: 0.0,
+                hits: 0.0,
+                misses: 0.0,
+                finetunes: 0.0,
+                finetune_ms_sum: 0.0,
+            });
+            sl.requests += getf(row, "requests", &ctx)?;
+            sl.hits += getf(row, "cache_hits", &ctx)?;
+            sl.misses += getf(row, "cache_misses", &ctx)?;
+            sl.finetunes += finetunes;
+            // mean·count recovers the per-node ms sum, so the merged mean
+            // is traffic-weighted rather than a mean of means
+            sl.finetune_ms_sum += getf(row, "finetune_mean_ms", &ctx)? * finetunes;
+        }
+    }
+    let mut tenant_rows: Vec<(u64, Slot)> = slots.into_iter().collect();
+    tenant_rows.sort_by(|a, b| {
+        b.1.requests
+            .partial_cmp(&a.1.requests)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let tenants_json = arr(tenant_rows
+        .iter()
+        .map(|(t, sl)| {
+            obj(vec![
+                ("tenant", num(*t as f64)),
+                ("requests", num(sl.requests)),
+                ("cache_hits", num(sl.hits)),
+                ("cache_misses", num(sl.misses)),
+                ("cache_hit_rate", num(ratio(sl.hits, sl.hits + sl.misses))),
+                ("finetunes", num(sl.finetunes)),
+                ("finetune_mean_ms", num(ratio(sl.finetune_ms_sum, sl.finetunes))),
+            ])
+        })
+        .collect());
+
+    // --- shards: concatenated (node boundaries stay visible for skew) ---
+    let mut shards: Vec<Json> = Vec::new();
+    for (i, d) in docs.iter().enumerate() {
+        let node_shards = d
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("doc[{i}]: missing 'shards'"))?;
+        shards.extend(node_shards.iter().cloned());
+    }
+
+    // --- workers: summed over nodes that run pools; depths concatenated ---
+    let mut any_workers = false;
+    let (mut w_n, mut w_sub, mut w_exec, mut w_steals, mut w_panics) =
+        (0.0, 0.0, 0.0, 0.0, 0.0);
+    let mut depths: Vec<Json> = Vec::new();
+    for (i, d) in docs.iter().enumerate() {
+        match d.get("workers") {
+            None => return Err(format!("doc[{i}]: missing 'workers'")),
+            Some(Json::Null) => {}
+            Some(w) => {
+                let ctx = format!("doc[{i}].workers");
+                any_workers = true;
+                w_n += getf(w, "workers", &ctx)?;
+                w_sub += getf(w, "submitted", &ctx)?;
+                w_exec += getf(w, "executed", &ctx)?;
+                w_steals += getf(w, "steals", &ctx)?;
+                w_panics += getf(w, "panics", &ctx)?;
+                let node_depths = w
+                    .get("queue_depths")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("{ctx}: missing 'queue_depths'"))?;
+                depths.extend(node_depths.iter().cloned());
+            }
+        }
+    }
+    let workers_json = if any_workers {
+        obj(vec![
+            ("workers", num(w_n)),
+            ("submitted", num(w_sub)),
+            ("executed", num(w_exec)),
+            ("steals", num(w_steals)),
+            ("panics", num(w_panics)),
+            ("queue_depths", arr(depths)),
+        ])
+    } else {
+        Json::Null
+    };
+
+    Ok(obj(vec![
+        ("schema", s(SCHEMA)),
+        // extra fleet-only field; the validator ignores unknown keys
+        ("nodes", num(docs.len() as f64)),
+        ("pump_ticks", num(sum_key(docs, None, "pump_ticks")?)),
+        ("tenants_live", num(sum_key(docs, None, "tenants_live")?)),
+        ("queued", num(sum_key(docs, None, "queued")?)),
+        ("serve", obj(serve)),
+        ("finetune_stages", obj(ft)),
+        (
+            "flush_stages",
+            obj(vec![
+                ("enabled", Json::Bool(fs_enabled)),
+                ("flushes", num(fs_flushes)),
+                ("total_ns", num(fs_total)),
+                ("stages", stages_json),
+            ]),
+        ),
+        (
+            "trace",
+            obj(vec![
+                ("enabled", Json::Bool(tr_enabled)),
+                ("capacity", num(tr_capacity)),
+                ("recorded", num(tr_recorded)),
+                ("dropped", num(tr_dropped)),
+                (
+                    "counts",
+                    Json::Obj(tr_counts.into_iter().map(|(k, v)| (k, num(v))).collect()),
+                ),
+                ("tail", arr(tail)),
+            ]),
+        ),
+        ("tenants", tenants_json),
+        ("shards", arr(shards)),
+        ("workers", workers_json),
+    ]))
+}
+
+/// Parse per-node snapshot texts (what `Observe` frames carry), merge
+/// them, and re-validate the merged document against the full
+/// `skip2lora/obs/v1` gate before returning it — a fleet snapshot that
+/// would not pass `skip2lora validate-obs` is a bug here, not downstream.
+pub fn merge_texts<S: AsRef<str>>(texts: &[S]) -> Result<Json, String> {
+    let mut docs = Vec::with_capacity(texts.len());
+    for (i, t) in texts.iter().enumerate() {
+        docs.push(parse(t.as_ref()).map_err(|e| format!("doc[{i}]: JSON parse error: {e}"))?);
+    }
+    let merged = merge_docs(&docs)?;
+    snapshot::validate(&merged).map_err(|e| format!("merged snapshot invalid: {e}"))?;
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::snapshot::{ObsSnapshot, WorkerSnapshot};
+    use crate::obs::stages::{FlushStage, FlushStages, TenantRollups};
+    use crate::obs::trace::{EventKind, FlightRecorder};
+    use crate::serve::metrics::ServeMetrics;
+    use crate::serve::registry::ShardStats;
+    use crate::serve::scheduler::PoolStats;
+
+    /// A small synthetic per-node snapshot; `k` skews every number so two
+    /// nodes are distinguishable.
+    fn node_snapshot(k: u64) -> ObsSnapshot {
+        let mut metrics = ServeMetrics::new();
+        metrics.predicts = 10 + k;
+        metrics.feedbacks = 5 + k;
+        metrics.batches = 2 + k;
+        metrics.batched_rows = 20 + 3 * k;
+        metrics.pump_ticks = 4 + k;
+        metrics.adaptations = k;
+        metrics.finetune_cache_hits = 6 * k;
+        metrics.finetune_cache_misses = 2 * k;
+        metrics.finetune_forward_ns = 1_000 * k;
+        metrics.finetune_backward_ns = 2_000 * k;
+        for i in 0..(3 + k) {
+            metrics.batch_forward.record_ns(10_000 + 7_000 * k + 1_000 * i);
+        }
+        if k > 0 {
+            metrics.finetune.record_ns(2_000_000 + 500_000 * k);
+        }
+
+        let mut flush_stages = FlushStages::new(true);
+        flush_stages.add_ns(FlushStage::Staging, 1_000 + 100 * k);
+        flush_stages.add_ns(FlushStage::BackboneForward, 50_000 + 5_000 * k);
+        flush_stages.add_ns(FlushStage::Emit, 500);
+        flush_stages.finish_flush_ns(60_000 + 5_500 * k);
+
+        let mut rec = FlightRecorder::new(64, true);
+        rec.set_tick(1);
+        rec.record(EventKind::Admitted { tenant: k });
+        rec.record(EventKind::Queued { tenant: k, ticket: 1 });
+        rec.record(EventKind::FlushStart { pending: 1 });
+        rec.record(EventKind::FlushEnd { rows: 1, ns: 60_000 });
+
+        let mut rollups = TenantRollups::new(8);
+        for _ in 0..(10 + k) {
+            rollups.bump_request(7); // shared tenant across nodes
+        }
+        for _ in 0..k {
+            rollups.bump_request(100 + k); // node-local tenant
+        }
+        if k > 0 {
+            rollups.record_finetune(7, 2_000_000 * k, 6 * k, 2 * k);
+        }
+
+        ObsSnapshot {
+            pump_ticks: 4 + k,
+            tenants_live: 2,
+            queued: 0,
+            metrics,
+            flush_stages,
+            trace: rec.summary(),
+            tenants: rollups.top(),
+            shards: vec![ShardStats { tenants: 1 + k as usize, reads: 30 * (k + 1), writes: k }],
+            workers: if k % 2 == 0 {
+                None
+            } else {
+                Some(WorkerSnapshot {
+                    stats: PoolStats {
+                        workers: 2,
+                        submitted: k,
+                        executed: k,
+                        steals: 0,
+                        panics: 0,
+                    },
+                    queue_depths: vec![0, 0],
+                })
+            },
+        }
+    }
+
+    #[test]
+    fn merged_doc_validates_and_counters_sum() {
+        let texts: Vec<String> = (0..3u64)
+            .map(|k| node_snapshot(k).to_json().to_string())
+            .collect();
+        let merged = merge_texts(&texts).expect("merge + validate");
+        // schema gate ran inside merge_texts; spot-check the sums
+        let serve = merged.get("serve").unwrap();
+        let sum =
+            |key: &str| -> f64 { (0..3u64).map(|k| node_snapshot(k).metrics_field(key)).sum() };
+        for key in SERVE_COUNTERS {
+            assert_eq!(
+                serve.get(key).unwrap().as_f64().unwrap(),
+                sum(key),
+                "counter '{key}' must be the exact per-node sum"
+            );
+        }
+        assert_eq!(merged.get("nodes").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(
+            merged.get("pump_ticks").unwrap().as_f64().unwrap(),
+            (4 + 5 + 6) as f64
+        );
+        // shards concatenated: one per node here
+        assert_eq!(merged.get("shards").unwrap().as_arr().unwrap().len(), 3);
+        // exactly one node ran a pool (k=1): sums pass through
+        let w = merged.get("workers").unwrap();
+        assert_eq!(w.get("workers").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(w.get("queue_depths").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn merged_histogram_matches_in_process_merge_laws() {
+        let snaps: Vec<ObsSnapshot> = (0..3u64).map(node_snapshot).collect();
+        let texts: Vec<String> = snaps.iter().map(|sn| sn.to_json().to_string()).collect();
+        let merged = merge_texts(&texts).unwrap();
+
+        // oracle: the in-process merge law over the same histograms
+        let mut oracle = LatencyHistogram::new();
+        for sn in &snaps {
+            oracle.merge(&sn.metrics.batch_forward);
+        }
+        let got = merged.get("serve").unwrap().get("batch_forward").unwrap();
+        assert_eq!(got.get("count").unwrap().as_f64().unwrap(), oracle.count() as f64);
+        let mean = got.get("mean_ms").unwrap().as_f64().unwrap();
+        assert!((mean - oracle.mean_ms()).abs() < 1e-9 * oracle.mean_ms().max(1.0), "{mean}");
+        let std = got.get("std_ms").unwrap().as_f64().unwrap();
+        assert!((std - oracle.std_ms()).abs() < 1e-6 * oracle.std_ms().max(1.0), "{std}");
+        for p in ["p50_ms", "p95_ms", "p99_ms"] {
+            let v = got.get(p).unwrap().as_f64().unwrap();
+            let max = got.get("max_ms").unwrap().as_f64().unwrap();
+            assert!(v <= max * (1.0 + 1e-9) + 1e-12, "{p}={v} > max {max}");
+        }
+        // bucket-wise exactness
+        let got_buckets = got.get("buckets").unwrap().as_arr().unwrap();
+        for (i, &c) in oracle.bucket_counts().iter().enumerate() {
+            assert_eq!(got_buckets[i].as_f64().unwrap(), c as f64, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn tenant_rows_merge_by_id_and_resort() {
+        let texts: Vec<String> = (0..3u64)
+            .map(|k| node_snapshot(k).to_json().to_string())
+            .collect();
+        let merged = merge_texts(&texts).unwrap();
+        let rows = merged.get("tenants").unwrap().as_arr().unwrap();
+        // tenant 7 appears on every node and must lead with summed requests
+        let first = &rows[0];
+        assert_eq!(first.get("tenant").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(
+            first.get("requests").unwrap().as_f64().unwrap(),
+            (10 + 11 + 12) as f64
+        );
+        // weighted fine-tune mean: only k=1,2 contribute (k fine-tunes each)
+        let finetunes = first.get("finetunes").unwrap().as_f64().unwrap();
+        assert_eq!(finetunes, 3.0);
+    }
+
+    #[test]
+    fn fleet_tail_reassigns_seqs_strictly_increasing() {
+        let texts: Vec<String> = (0..2u64)
+            .map(|k| node_snapshot(k).to_json().to_string())
+            .collect();
+        let merged = merge_texts(&texts).unwrap();
+        let tail = merged.get("trace").unwrap().get("tail").unwrap().as_arr().unwrap();
+        assert!(!tail.is_empty());
+        let mut prev = -1.0;
+        for e in tail {
+            let seq = e.get("seq").unwrap().as_f64().unwrap();
+            assert!(seq > prev, "fleet tail seq must be strictly increasing");
+            prev = seq;
+            assert!(e.get("node").is_some(), "fleet tail keeps node provenance");
+        }
+    }
+
+    #[test]
+    fn rejects_mixed_schemas_and_corrupt_buckets() {
+        let good = node_snapshot(0).to_json().to_string();
+        let bad_schema = good.replace("skip2lora/obs/v1", "skip2lora/obs/v0");
+        assert!(merge_texts(&[good.clone(), bad_schema]).unwrap_err().contains("schema"));
+        assert!(merge_texts::<String>(&[]).is_err());
+        // bucket sum ≠ count is caught at lift time, not propagated
+        let j = parse(&good).unwrap();
+        let mut m = match j {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        if let Some(Json::Obj(serve)) = m.get_mut("serve") {
+            if let Some(Json::Obj(h)) = serve.get_mut("batch_forward") {
+                h.insert("count".into(), num(9_999.0));
+            }
+        }
+        let err = merge_docs(&[Json::Obj(m)]).unwrap_err();
+        assert!(err.contains("bucket counts sum"), "{err}");
+    }
+
+    impl ObsSnapshot {
+        /// test helper: read a serve counter back out of the struct by the
+        /// JSON key name, so the sum assertions stay table-driven
+        fn metrics_field(&self, key: &str) -> f64 {
+            let m = &self.metrics;
+            (match key {
+                "predicts" => m.predicts,
+                "feedbacks" => m.feedbacks,
+                "swaps" => m.swaps,
+                "queue_rejections" => m.queue_rejections,
+                "rate_limited" => m.rate_limited,
+                "evictions" => m.evictions,
+                "adaptations" => m.adaptations,
+                "finetune_panics" => m.finetune_panics,
+                "batches" => m.batches,
+                "batched_rows" => m.batched_rows,
+                "finetune_cache_hits" => m.finetune_cache_hits,
+                "finetune_cache_misses" => m.finetune_cache_misses,
+                "persists" => m.persists,
+                "restores" => m.restores,
+                "tenants_restored" => m.tenants_restored,
+                "exports" => m.exports,
+                "imports" => m.imports,
+                "pump_ticks" => m.pump_ticks,
+                other => panic!("unknown counter {other}"),
+            }) as f64
+        }
+    }
+}

@@ -22,11 +22,16 @@
 //!   `bench::report`), reachable via `Request::Observe`,
 //!   `FleetServer::obs_snapshot()`, and the `skip2lora obs-dump` /
 //!   `validate-obs` CLI pair.
+//! - [`fleet`] — the multi-node fold (DESIGN.md §12): N per-node
+//!   `skip2lora/obs/v1` documents merged into ONE valid document via the
+//!   same property-tested merge laws, counters summed exactly, ratios
+//!   recomputed, percentiles re-derived from merged buckets.
 //!
 //! The gating invariant (proved by `tests/zero_alloc.rs`): a warm flush
 //! with the recorder AND the stage timers enabled performs exactly zero
 //! heap allocations.
 
+pub mod fleet;
 pub mod snapshot;
 pub mod stages;
 pub mod trace;

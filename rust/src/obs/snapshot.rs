@@ -56,7 +56,11 @@ pub struct ObsSnapshot {
     pub workers: Option<WorkerSnapshot>,
 }
 
-fn hist_json(h: &LatencyHistogram) -> Json {
+/// Histogram section writer, shared with the fleet aggregator
+/// (`obs::fleet`) so a merged histogram re-serializes through exactly the
+/// same percentile logic — the percentile ≤ max invariant holds by
+/// construction on merged documents too.
+pub fn hist_json(h: &LatencyHistogram) -> Json {
     obj(vec![
         ("count", num(h.count() as f64)),
         ("mean_ms", num(h.mean_ms())),

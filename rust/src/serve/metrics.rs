@@ -95,6 +95,25 @@ impl LatencyHistogram {
         &self.buckets
     }
 
+    /// Rebuild a histogram from its exported representation (bucket
+    /// counts + max + Welford moments) — how the fleet aggregator turns a
+    /// `skip2lora/obs/v1` histogram section back into a mergeable value.
+    /// Bucket slices shorter than the fixed width are zero-padded; longer
+    /// ones are rejected by the caller's validation, never truncated here.
+    pub fn from_parts(bucket_counts: &[u64], max_ns: u64, stats: Welford) -> Self {
+        let mut buckets = [0u64; BUCKETS];
+        for (dst, src) in buckets.iter_mut().zip(bucket_counts.iter()) {
+            *dst = *src;
+        }
+        Self { buckets, stats, max_ns }
+    }
+
+    /// The Welford moments backing mean/std — exported so the fleet
+    /// aggregator can round-trip them through [`LatencyHistogram::from_parts`].
+    pub fn stats(&self) -> &Welford {
+        &self.stats
+    }
+
     /// The exact recorded maximum in nanoseconds.
     pub fn max_ns(&self) -> u64 {
         self.max_ns

@@ -116,6 +116,6 @@ pub use persist::{RegistryCheckpoint, TenantRecord};
 pub use registry::{AdapterRegistry, AdapterSnapshot, ShardStats, SnapshotBatch, TenantId};
 pub use scheduler::{PoolStats, WorkerPool};
 pub use server::{
-    Completion, FleetServer, PersistReport, RateLimit, RejectReason, Request, Response,
-    RestoreReport, ServeConfig, ServerStats,
+    Completion, DrainReport, FleetServer, PersistReport, RateLimit, RejectReason, Request,
+    Response, RestoreReport, ServeConfig, ServerStats,
 };

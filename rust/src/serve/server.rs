@@ -192,6 +192,25 @@ pub enum RejectReason {
     /// a SaveState/RestoreState/migration operation failed (I/O error,
     /// torn or incompatible checkpoint) — the serving state is untouched
     PersistFailed(String),
+    /// the server is draining ([`FleetServer::drain`]): admissions are
+    /// closed so the queue can only shrink; route to another node (the
+    /// fleet router does) or retry after `resume_admissions`
+    Draining,
+}
+
+/// Result of a [`FleetServer::drain`]: what was in flight when admissions
+/// closed, and every completion the drain flushed out — so callers can
+/// balance the books (nothing accepted is ever lost across a drain).
+#[derive(Debug, Default)]
+pub struct DrainReport {
+    /// requests still queued when the drain began — all of them appear in
+    /// `completions`
+    pub queued_at_start: usize,
+    /// fine-tune jobs in flight when the drain began, all joined before
+    /// the drain returned
+    pub finetunes_joined: usize,
+    /// every request the drain served while emptying the queue
+    pub completions: Vec<Completion>,
 }
 
 /// Result of a successful [`FleetServer::persist_to`].
@@ -358,6 +377,9 @@ pub struct FleetServer {
     recorder: FlightRecorder,
     /// bounded heavy-hitter per-tenant rollups (top-K table)
     rollups: TenantRollups,
+    /// admissions closed ([`FleetServer::drain`]): Predict/Feedback get a
+    /// typed `Rejected(Draining)` until `resume_admissions`
+    draining: bool,
 }
 
 impl FleetServer {
@@ -409,6 +431,7 @@ impl FleetServer {
             pump_tick: 0,
             recorder,
             rollups,
+            draining: false,
         }
     }
 
@@ -436,6 +459,9 @@ impl FleetServer {
     pub fn handle(&mut self, tenant: TenantId, req: Request) -> Response {
         match req {
             Request::Predict(x) => {
+                if self.draining {
+                    return Response::Rejected(RejectReason::Draining);
+                }
                 if x.len() != self.n_in() {
                     return Response::Rejected(RejectReason::Malformed(format!(
                         "expected {} features, got {}",
@@ -452,6 +478,9 @@ impl FleetServer {
                 }
             }
             Request::Feedback(x, label) => {
+                if self.draining {
+                    return Response::Rejected(RejectReason::Draining);
+                }
                 if x.len() != self.n_in() {
                     return Response::Rejected(RejectReason::Malformed(format!(
                         "expected {} features, got {}",
@@ -914,6 +943,39 @@ impl FleetServer {
         }
     }
 
+    /// Graceful drain: close admissions (new Predict/Feedback get a typed
+    /// `Rejected(Draining)`), flush EVERY queued request out of the
+    /// batcher, and join every in-flight fine-tune job. Nothing accepted
+    /// before the drain is lost — the flushed completions come back in
+    /// the report so callers can balance the books. The server stays
+    /// fully alive afterwards (admin ops, export/import, Observe all
+    /// work); `resume_admissions` re-opens the data plane. Used by both
+    /// the network edge (node decommission) and the migration path
+    /// (drain-before-export, so a tenant can never lose a queued request
+    /// to a mid-flight move).
+    pub fn drain(&mut self) -> DrainReport {
+        self.draining = true;
+        let queued_at_start = self.queued();
+        let finetunes_joined = self.tenants.values().filter(|st| st.cache.is_none()).count();
+        let completions = self.pump_until_drained();
+        // join fine-tunes launched before OR during the flush (feedback
+        // completions can still trigger adaptation on the way out)
+        self.quiesce();
+        DrainReport { queued_at_start, finetunes_joined, completions }
+    }
+
+    /// Re-open admissions after a [`FleetServer::drain`] — the migration
+    /// path drains, exports the moving tenant, then resumes the (still
+    /// running) source node for its remaining tenants.
+    pub fn resume_admissions(&mut self) {
+        self.draining = false;
+    }
+
+    /// Is the server currently refusing Predict/Feedback admissions?
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
     pub fn tenant_count(&self) -> usize {
         self.tenants.len()
     }
@@ -1284,6 +1346,74 @@ mod tests {
         let stats = s.stats();
         assert_eq!(stats.queue_rejections, 0);
         assert_eq!(stats.rate_limited, 0);
+    }
+
+    #[test]
+    fn drain_closes_admissions_and_loses_nothing() {
+        let mut s = server(0);
+        // stage traffic but do NOT pump: everything sits in the queue
+        let data = clustered(60, 24, 0.0);
+        for i in 0..data.len() {
+            match s.handle(2, Request::Feedback(data.x.row(i).to_vec(), data.labels[i])) {
+                Response::Queued { .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(s.queued(), 24);
+        let report = s.drain();
+        assert_eq!(report.queued_at_start, 24);
+        assert_eq!(report.completions.len(), 24, "every accepted request must be served");
+        assert_eq!(s.queued(), 0);
+        assert!(!s.any_adapting());
+        // data plane closed: typed rejection, not a drop or a panic
+        match s.handle(2, Request::Predict(data.x.row(0).to_vec())) {
+            Response::Rejected(RejectReason::Draining) => {}
+            other => panic!("expected Draining rejection, got {other:?}"),
+        }
+        match s.handle(2, Request::Feedback(data.x.row(0).to_vec(), 0)) {
+            Response::Rejected(RejectReason::Draining) => {}
+            other => panic!("expected Draining rejection, got {other:?}"),
+        }
+        // admin plane stays open mid-drain (migration/observability path)
+        match s.handle(0, Request::Observe) {
+            Response::Observed(_) => {}
+            other => panic!("{other:?}"),
+        }
+        // books balance: everything admitted was completed, rejections typed
+        assert_eq!(s.metrics.feedbacks, 24);
+        assert!(s.is_draining());
+        // resume re-opens the data plane for the remaining tenants
+        s.resume_admissions();
+        match s.handle(2, Request::Predict(data.x.row(0).to_vec())) {
+            Response::Queued { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.pump_until_drained().len(), 1);
+    }
+
+    #[test]
+    fn drain_joins_inflight_finetunes() {
+        let mut s = server(2);
+        let drifted = clustered(61, 300, 2.5);
+        for i in 0..drifted.len() {
+            match s.handle(4, Request::Feedback(drifted.x.row(i).to_vec(), drifted.labels[i]))
+            {
+                Response::Queued { .. } => {}
+                other => panic!("{other:?}"),
+            }
+            if s.queued() >= s.config().batch_capacity {
+                s.pump();
+            }
+        }
+        let report = s.drain();
+        assert!(!s.any_adapting(), "drain must join in-flight fine-tune jobs");
+        assert!(s.tenant_adaptations(4) >= 1);
+        assert!(s.tenant_version(4) > 0, "joined fine-tune published its adapters");
+        // the drain flushed the residual queue; nothing admitted was lost
+        assert_eq!(s.metrics.feedbacks, drifted.len() as u64);
+        assert_eq!(s.queued(), 0);
+        drop(report);
+        s.shutdown();
     }
 
     #[test]

@@ -70,6 +70,20 @@ impl Welford {
         }
     }
 
+    /// Rebuild an accumulator from previously exported moments — the
+    /// fleet aggregator's path back from a `skip2lora/obs/v1` histogram
+    /// (which carries n, mean and std) to a mergeable `Welford`.
+    /// `m2 = std² · (n-1)` inverts [`Welford::std_dev`] exactly.
+    pub fn from_parts(n: u64, mean: f64, m2: f64) -> Self {
+        Self { n, mean, m2 }
+    }
+
+    /// The raw second central moment sum (∑(x-mean)²) — what
+    /// [`Welford::from_parts`] round-trips.
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
     /// Parallel combination (Chan et al.): after the merge, `self` holds
     /// the moments it would have if every sample pushed into `other` had
     /// been pushed here too, up to floating-point rounding. Associative —

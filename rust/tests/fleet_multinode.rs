@@ -1,0 +1,343 @@
+//! Multi-node fleet over loopback TCP: rendezvous routing, a mid-traffic
+//! node decommission with live tenant migration, and the acceptance
+//! criteria from DESIGN.md §12 —
+//!
+//! * post-migration serving is BIT-IDENTICAL to an unkilled in-process
+//!   oracle fed the same per-tenant streams,
+//! * the books balance: completions == admissions − typed rejections,
+//!   nothing accepted is ever lost (including requests queued on the
+//!   victim node at the moment it is decommissioned),
+//! * the fleet-merged observability document validates and its counters
+//!   equal the sum of the per-node snapshots.
+
+use skip2lora::data::Dataset;
+use skip2lora::fleet::FleetRouter;
+use skip2lora::model::MlpConfig;
+use skip2lora::net::{Admission, NodeClient, NodeServer};
+use skip2lora::obs::snapshot::validate as validate_obs;
+use skip2lora::serve::server::RejectReason;
+use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
+use skip2lora::tensor::ops::Backend;
+use skip2lora::tensor::Mat;
+use skip2lora::train::trainer::pretrain;
+use skip2lora::util::json::Json;
+use skip2lora::util::rng::Rng;
+
+const N_TENANTS: u64 = 9;
+/// feedback rounds per tenant — enough past `buffer_target` that every
+/// drifted tenant fine-tunes and PUBLISHES before the node dies, so the
+/// migration has real trained state to move
+const ROUNDS: usize = 36;
+const PROBES: usize = 20;
+
+fn clustered(seed: u64, n: usize, shift: f32) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 8);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..8 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + shift + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset {
+        x,
+        labels,
+        n_classes: 3,
+    }
+}
+
+fn serve_config() -> ServeConfig {
+    ServeConfig {
+        batch_capacity: 16,
+        window: 20,
+        accuracy_threshold: 0.7,
+        buffer_target: 30,
+        epochs: 20,
+        lr: 0.05,
+        train_batch: 15,
+        // inline fine-tunes: the pump clock fully determines execution,
+        // which is what makes the cross-placement oracle comparison exact
+        workers: 0,
+        ..Default::default()
+    }
+}
+
+fn new_server(backbone: &skip2lora::model::Mlp) -> FleetServer {
+    FleetServer::new(backbone.clone(), serve_config())
+}
+
+fn drifted(t: u64) -> bool {
+    t % 3 != 0
+}
+
+/// Tenant t's private stream: drifted for 2 of every 3 tenants so that
+/// fine-tunes actually trigger and migrated state MATTERS.
+fn tenant_stream(t: u64) -> Dataset {
+    let shift = if drifted(t) { 2.5 } else { 0.0 };
+    clustered(1000 + t, ROUNDS, shift)
+}
+
+#[test]
+fn kill_migrate_and_serve_bit_identical_with_balanced_books() {
+    let cfg = MlpConfig {
+        dims: vec![8, 12, 12, 3],
+        rank: 2,
+        batch_norm: true,
+    };
+    let backbone = pretrain(cfg, &clustered(0, 120, 0.0), 50, 0.05, 1, Backend::Blocked);
+
+    // three wire-served nodes + the unkilled in-process oracle
+    let mut nodes = Vec::new();
+    for _ in 0..3 {
+        nodes.push(Some(
+            NodeServer::spawn(new_server(&backbone), "127.0.0.1:0").unwrap(),
+        ));
+    }
+    let mut oracle = new_server(&backbone);
+
+    let mut router = FleetRouter::new();
+    for (i, n) in nodes.iter().enumerate() {
+        router
+            .add_node(&format!("node{i}"), &n.as_ref().unwrap().addr().to_string())
+            .unwrap();
+    }
+    assert_eq!(router.alive_count(), 3);
+
+    let streams: Vec<Dataset> = (0..N_TENANTS).map(tenant_stream).collect();
+
+    let mut admitted = 0u64; // fleet admissions (Queued responses)
+    let mut completed = 0u64; // fleet completions, wherever they surface
+    let mut sends = 0usize;
+
+    // ---- phase 1: labelled feedback across the healthy 3-node fleet;
+    // the oracle sees the IDENTICAL per-tenant streams and pump cadence
+    for round in 0..ROUNDS {
+        for t in 0..N_TENANTS {
+            let x = streams[t as usize].x.row(round).to_vec();
+            let label = streams[t as usize].labels[round];
+            match router.feedback(t, x.clone(), label as u32).unwrap() {
+                Admission::Queued { .. } => admitted += 1,
+                Admission::Rejected(r) => panic!("unexpected rejection: {r:?}"),
+            }
+            match oracle.handle(t, Request::Feedback(x, label)) {
+                Response::Queued { .. } => {}
+                other => panic!("oracle rejected: {other:?}"),
+            }
+            sends += 1;
+            if sends % 16 == 0 {
+                completed += router.pump_all().unwrap().len() as u64;
+                oracle.pump();
+            }
+        }
+    }
+    completed += router.pump_drain_all().unwrap().len() as u64;
+    oracle.pump_until_drained();
+
+    // drifted tenants must have actually published trained adapters —
+    // otherwise the migration below would be moving nothing. Version
+    // NUMBERS are per-server (globally monotone counters), but the
+    // per-tenant adaptation count is placement-independent.
+    for t in 0..N_TENANTS {
+        let idx = router.route(t).unwrap();
+        let (fleet_v, fleet_rounds) = nodes[idx]
+            .as_ref()
+            .unwrap()
+            .with_server(|s| (s.tenant_version(t), s.tenant_adaptations(t)));
+        assert_eq!(
+            fleet_rounds,
+            oracle.tenant_adaptations(t),
+            "tenant {t}: fleet and oracle disagree on adaptation count"
+        );
+        if drifted(t) {
+            assert!(fleet_v > 0, "drifted tenant {t} never published");
+            assert!(oracle.tenant_version(t) > 0);
+        }
+    }
+
+    // ---- kill node 1 mid-traffic. First stage some unpumped Predicts
+    // on the victim so the drain has real in-flight work to flush —
+    // proving "zero lost accepted requests" through the migration.
+    let victim = 1usize;
+    let victim_tenants = router.tenants_on(victim);
+    assert!(
+        !victim_tenants.is_empty(),
+        "rendezvous placed no tenants on the victim?"
+    );
+    let mut staged = 0u64;
+    for &t in &victim_tenants {
+        match router.predict(t, streams[t as usize].x.row(0).to_vec()).unwrap() {
+            Admission::Queued { .. } => {
+                admitted += 1;
+                staged += 1;
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    let report = router.decommission(victim).unwrap();
+    assert_eq!(report.drained.queued_at_start as u64, staged);
+    assert_eq!(report.drained.completions.len() as u64, staged);
+    completed += report.drained.completions.len() as u64;
+    assert!(!router.is_alive(victim));
+    assert_eq!(router.alive_count(), 2);
+
+    // exactly the drifted victims migrated; clean ones had no published
+    // adapters and re-home statelessly
+    let expect_moved: Vec<u64> = victim_tenants.iter().copied().filter(|&t| drifted(t)).collect();
+    let moved: Vec<u64> = report.migrated.iter().map(|&(t, _, _)| t).collect();
+    assert_eq!(moved, expect_moved, "unexpected migration set");
+    assert!(!moved.is_empty(), "no drifted tenant lived on the victim");
+    for &(tenant, dst, version) in &report.migrated {
+        assert!(router.is_alive(dst));
+        assert_ne!(dst, victim);
+        assert!(version > 0, "tenant {tenant}: import allocated no version");
+    }
+    let skipped: Vec<u64> =
+        victim_tenants.iter().copied().filter(|&t| !drifted(t)).collect();
+    assert_eq!(report.skipped, skipped);
+
+    // the drained node answers with a TYPED rejection, not a hang/panic
+    let victim_addr = nodes[victim].as_ref().unwrap().addr().to_string();
+    let mut direct = NodeClient::connect(&victim_addr).unwrap();
+    match direct.predict(victim_tenants[0], streams[0].x.row(0).to_vec()) {
+        Ok(Admission::Rejected(RejectReason::Draining)) => {}
+        other => panic!("expected typed Draining rejection, got {other:?}"),
+    }
+    drop(direct);
+
+    // actually kill it: shutdown returns the inner server, whose queue
+    // must be empty (the drain completed everything it had accepted)
+    let dead = nodes[victim].take().unwrap().shutdown();
+    assert_eq!(dead.queued(), 0, "drain left requests behind");
+    assert!(dead.is_draining());
+
+    // ---- phase 2: serving CONTINUES through the router — predictions
+    // for every tenant, bit-identical to the oracle that never lost a
+    // node. Predicts are label-free, so neither side's adaptation state
+    // advances and the comparison is pure.
+    let probes = clustered(777, PROBES, 1.0);
+    for t in 0..N_TENANTS {
+        for p in 0..PROBES {
+            let x = probes.x.row(p).to_vec();
+            match router.predict(t, x.clone()).unwrap() {
+                Admission::Queued { .. } => admitted += 1,
+                other => panic!("probe rejected: {other:?}"),
+            }
+            let done = router.pump_drain_all().unwrap();
+            assert_eq!(done.len(), 1);
+            completed += 1;
+            let fleet_pred = done[0].prediction;
+
+            match oracle.handle(t, Request::Predict(x)) {
+                Response::Queued { .. } => {}
+                other => panic!("oracle probe rejected: {other:?}"),
+            }
+            let oracle_done = oracle.pump_until_drained();
+            assert_eq!(oracle_done.len(), 1);
+            assert_eq!(
+                fleet_pred, oracle_done[0].prediction,
+                "tenant {t} probe {p}: fleet diverged from the unkilled oracle"
+            );
+
+            // migrated tenants are served by a SURVIVING node
+            let serving = router.route(t).unwrap();
+            assert!(router.is_alive(serving));
+        }
+    }
+
+    // ---- books balance: every accepted request completed exactly once
+    assert_eq!(
+        admitted,
+        (N_TENANTS as usize * ROUNDS) as u64 + staged + (N_TENANTS as usize * PROBES) as u64
+    );
+    assert_eq!(
+        completed, admitted,
+        "completions must equal admissions (zero lost, zero duplicated)"
+    );
+
+    for n in nodes.into_iter().flatten() {
+        n.shutdown();
+    }
+    oracle.shutdown();
+}
+
+#[test]
+fn fleet_merged_obs_validates_and_counters_sum_over_the_wire() {
+    let cfg = MlpConfig {
+        dims: vec![8, 12, 12, 3],
+        rank: 2,
+        batch_norm: true,
+    };
+    let backbone = pretrain(cfg, &clustered(0, 120, 0.0), 50, 0.05, 1, Backend::Blocked);
+
+    let mut nodes = Vec::new();
+    for _ in 0..3 {
+        nodes.push(NodeServer::spawn(new_server(&backbone), "127.0.0.1:0").unwrap());
+    }
+    let mut router = FleetRouter::new();
+    for (i, n) in nodes.iter().enumerate() {
+        router
+            .add_node(&format!("node{i}"), &n.addr().to_string())
+            .unwrap();
+    }
+
+    // spread real traffic so every node has non-trivial counters
+    for t in 0..12u64 {
+        let data = tenant_stream(t);
+        for i in 0..16 {
+            let x = data.x.row(i).to_vec();
+            match router.feedback(t, x, data.labels[i] as u32).unwrap() {
+                Admission::Queued { .. } => {}
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+    router.pump_drain_all().unwrap();
+
+    // per-node snapshots, straight off the wire
+    let mut per_node = Vec::new();
+    for n in &nodes {
+        let mut c = NodeClient::connect(&n.addr().to_string()).unwrap();
+        per_node.push(c.observe().unwrap());
+    }
+
+    // the router's merged fleet document re-validates against the schema
+    let merged = router.fleet_obs().unwrap();
+    validate_obs(&merged).expect("fleet-merged document must validate");
+
+    // counters in the merged document equal the SUM over nodes
+    let count = |doc: &Json, key: &str| -> f64 {
+        doc.get("serve")
+            .and_then(|s| s.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("missing serve.{key}"))
+    };
+    for key in ["feedbacks", "predicts", "batches", "batched_rows", "adaptations"] {
+        let sum: f64 = per_node
+            .iter()
+            .map(|t| count(&Json::parse(t).unwrap(), key))
+            .sum();
+        assert_eq!(
+            count(&merged, key),
+            sum,
+            "fleet serve.{key} must be the exact per-node sum"
+        );
+    }
+    assert_eq!(
+        merged.get("nodes").and_then(|v| v.as_f64()),
+        Some(3.0),
+        "merged document records the node count"
+    );
+
+    // the skew probe sees every node's registry population
+    let skew = router.skew().unwrap();
+    assert_eq!(skew.per_node_tenants.len(), 3);
+    assert!(skew.max_over_mean >= 1.0);
+
+    for n in nodes {
+        n.shutdown();
+    }
+}

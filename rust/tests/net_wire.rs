@@ -1,0 +1,469 @@
+//! Adversarial tests for the `skip2lora/wire/v1` protocol: every hostile
+//! byte sequence must produce a TYPED error (or a typed rejection), never
+//! a panic, a hang, or a silent mis-parse. Same contract the `.s2l`
+//! parser holds (`model/io.rs`), applied to the network boundary — plus
+//! live handshake checks against a real `NodeServer` over loopback.
+
+use skip2lora::net::wire::{
+    decode_request, decode_response, encode_request, encode_response, read_frame, read_response,
+    write_frame, write_request, WireCompletion, WireRequest, WireResponse, MAGIC, MAX_FRAME_BYTES,
+    WIRE_VERSION,
+};
+use skip2lora::net::NodeServer;
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::serve::server::RejectReason;
+use skip2lora::serve::{FleetServer, ServeConfig};
+use skip2lora::tensor::Mat;
+
+// ---------------------------------------------------------------------------
+// codec corpus
+
+fn request_corpus() -> Vec<WireRequest> {
+    let adapter = LoraAdapter {
+        wa: Mat::from_vec(4, 2, vec![0.5; 8]),
+        wb: Mat::from_vec(2, 3, vec![-1.25; 6]),
+    };
+    vec![
+        WireRequest::Hello {
+            version: WIRE_VERSION,
+        },
+        WireRequest::Predict {
+            tenant: 11,
+            x: vec![1.0, 2.0, 3.0, 4.0],
+        },
+        WireRequest::Feedback {
+            tenant: 0,
+            x: vec![0.25; 8],
+            label: 1,
+        },
+        WireRequest::SwapAdapters {
+            tenant: 3,
+            adapters: vec![adapter],
+        },
+        WireRequest::Observe,
+        WireRequest::SaveState {
+            path: "/tmp/fleet.s2l".into(),
+        },
+        WireRequest::RestoreState {
+            path: "/tmp/fleet.s2l".into(),
+        },
+        WireRequest::ExportTenant { tenant: 5 },
+        WireRequest::ImportTenant {
+            bytes: b"S2L1....".to_vec(),
+        },
+        WireRequest::Drain,
+        WireRequest::Pump,
+        WireRequest::PumpDrain,
+        WireRequest::QueueDepth,
+        WireRequest::Resume,
+    ]
+}
+
+fn response_corpus() -> Vec<WireResponse> {
+    let c = WireCompletion {
+        tenant: 9,
+        ticket: 100,
+        prediction: 1,
+        label: Some(2),
+        correct: Some(true),
+        adapter_version: 3,
+    };
+    vec![
+        WireResponse::HelloOk {
+            version: WIRE_VERSION,
+        },
+        WireResponse::Queued { ticket: 1 },
+        WireResponse::Rejected(RejectReason::QueueFull { bound: 64 }),
+        WireResponse::Rejected(RejectReason::Malformed("bad dim".into())),
+        WireResponse::Rejected(RejectReason::Draining),
+        WireResponse::Swapped { version: 2 },
+        WireResponse::Observed {
+            json: "{\"a\":1}".into(),
+        },
+        WireResponse::Persisted {
+            tenants: 1,
+            bytes: 128,
+        },
+        WireResponse::Restored {
+            tenants: 1,
+            installed: 1,
+            max_version: 4,
+        },
+        WireResponse::TenantExported {
+            bytes: vec![0, 1, 2],
+        },
+        WireResponse::TenantImported {
+            tenant: 9,
+            version: 5,
+        },
+        WireResponse::Drained {
+            queued_at_start: 1,
+            finetunes_joined: 0,
+            completions: vec![c.clone()],
+        },
+        WireResponse::Completions(vec![c]),
+        WireResponse::QueueDepthOk { queued: 0 },
+        WireResponse::Resumed,
+        WireResponse::Error { msg: "boom".into() },
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// truncation sweeps — EVERY strict prefix of every frame must fail typed
+
+#[test]
+fn every_request_prefix_is_rejected_not_panicked() {
+    for req in request_corpus() {
+        let body = encode_request(&req);
+        for cut in 0..body.len() {
+            let r = decode_request(&body[..cut]);
+            assert!(r.is_err(), "{req:?} decoded from a {cut}-byte prefix");
+        }
+        assert!(decode_request(&body).is_ok(), "{req:?} full frame failed");
+    }
+}
+
+#[test]
+fn every_response_prefix_is_rejected_not_panicked() {
+    for resp in response_corpus() {
+        let body = encode_response(&resp);
+        for cut in 0..body.len() {
+            let r = decode_response(&body[..cut]);
+            assert!(r.is_err(), "{resp:?} decoded from a {cut}-byte prefix");
+        }
+        assert!(decode_response(&body).is_ok(), "{resp:?} full frame failed");
+    }
+}
+
+#[test]
+fn every_stream_prefix_is_rejected_not_panicked() {
+    // truncation at the STREAM layer: cut mid-length-prefix and mid-body
+    for req in request_corpus() {
+        let mut stream = Vec::new();
+        write_request(&mut stream, &req).unwrap();
+        for cut in 0..stream.len() {
+            let r = read_frame(&mut &stream[..cut]);
+            assert!(r.is_err(), "{req:?} stream prefix {cut} accepted");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hostile frames
+
+#[test]
+fn trailing_bytes_after_any_frame_are_rejected() {
+    for req in request_corpus() {
+        let mut body = encode_request(&req);
+        body.extend_from_slice(&[0xAB, 0xCD]);
+        assert!(decode_request(&body).is_err(), "{req:?} took trailing bytes");
+    }
+    for resp in response_corpus() {
+        let mut body = encode_response(&resp);
+        body.push(0xEE);
+        assert!(
+            decode_response(&body).is_err(),
+            "{resp:?} took trailing bytes"
+        );
+    }
+}
+
+#[test]
+fn unknown_frame_tags_are_typed_errors() {
+    // 0x00 is never assigned; 0x40 unused request; 0xC0 unused response
+    for tag in [0x00u8, 0x40, 0x7F] {
+        let err = decode_request(&[tag]).unwrap_err().to_string();
+        assert!(err.contains("unknown request frame tag"), "{err}");
+    }
+    for tag in [0x00u8, 0xC0, 0xFE] {
+        let err = decode_response(&[tag]).unwrap_err().to_string();
+        assert!(err.contains("unknown response frame tag"), "{err}");
+    }
+}
+
+#[test]
+fn oversized_and_zero_length_prefixes_are_rejected() {
+    let mut s = Vec::new();
+    s.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(read_frame(&mut s.as_slice())
+        .unwrap_err()
+        .to_string()
+        .contains("MAX_FRAME_BYTES"));
+
+    let over = (MAX_FRAME_BYTES as u32) + 1;
+    let mut s = Vec::new();
+    s.extend_from_slice(&over.to_le_bytes());
+    assert!(read_frame(&mut s.as_slice()).is_err());
+
+    let s = 0u32.to_le_bytes();
+    assert!(read_frame(&mut s.as_slice())
+        .unwrap_err()
+        .to_string()
+        .contains("zero-length"));
+}
+
+#[test]
+fn writer_refuses_oversized_and_empty_frames() {
+    let mut sink = Vec::new();
+    assert!(write_frame(&mut sink, &[]).is_err());
+    let huge = vec![0u8; MAX_FRAME_BYTES + 1];
+    assert!(write_frame(&mut sink, &huge).is_err());
+    assert!(sink.is_empty(), "a refused frame must write NOTHING");
+}
+
+#[test]
+fn hostile_counts_cannot_wrap_or_overallocate() {
+    // Predict claiming u32::MAX floats in a tiny frame
+    let mut body = vec![0x02u8];
+    body.extend_from_slice(&1u64.to_le_bytes());
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    body.extend_from_slice(&[0u8; 8]);
+    assert!(decode_request(&body).is_err());
+
+    // SwapAdapters with dims whose product overflows usize on 32-bit
+    // and whose byte count overflows even on 64-bit
+    let mut body = vec![0x04u8];
+    body.extend_from_slice(&1u64.to_le_bytes()); // tenant
+    body.extend_from_slice(&1u32.to_le_bytes()); // 1 adapter
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // n_in
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+    body.extend_from_slice(&u32::MAX.to_le_bytes()); // n_out
+    assert!(decode_request(&body).is_err());
+
+    // ImportTenant announcing more payload bytes than the frame holds
+    let mut body = vec![0x09u8];
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    body.extend_from_slice(&[7u8; 3]);
+    assert!(decode_request(&body).is_err());
+}
+
+#[test]
+fn corrupt_option_bytes_in_completions_are_rejected() {
+    let good = WireResponse::Completions(vec![WireCompletion {
+        tenant: 1,
+        ticket: 2,
+        prediction: 0,
+        label: None,
+        correct: None,
+        adapter_version: 0,
+    }]);
+    let body = encode_response(&good);
+    // completion layout: tag(1) count(4) tenant(8) ticket(8) pred(4)
+    // label-presence(1) correct(1) version(8)
+    let label_presence = 1 + 4 + 8 + 8 + 4;
+    for bad in [2u8, 0xFF] {
+        let mut b = body.clone();
+        b[label_presence] = bad;
+        assert!(decode_response(&b).is_err(), "presence byte {bad} accepted");
+    }
+    let correct_byte = label_presence + 1;
+    for bad in [3u8, 0xFF] {
+        let mut b = body.clone();
+        b[correct_byte] = bad;
+        assert!(decode_response(&b).is_err(), "correct byte {bad} accepted");
+    }
+}
+
+#[test]
+fn non_utf8_strings_are_rejected() {
+    // SaveState with invalid UTF-8 path bytes
+    let mut body = vec![0x06u8];
+    body.extend_from_slice(&2u32.to_le_bytes());
+    body.extend_from_slice(&[0xFF, 0xFE]);
+    let err = decode_request(&body).unwrap_err().to_string();
+    assert!(err.contains("non-UTF-8"), "{err}");
+}
+
+#[test]
+fn bad_hello_magic_is_rejected() {
+    let mut body = vec![0x01u8];
+    body.extend_from_slice(b"NOPE");
+    body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    let err = decode_request(&body).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+    // and the genuine magic still parses
+    let mut body = vec![0x01u8];
+    body.extend_from_slice(MAGIC);
+    body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    assert!(decode_request(&body).is_ok());
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    // deterministic xorshift garbage, many lengths — decoding must
+    // always return (Ok or Err), never panic or loop
+    let mut state = 0x1234_5678_9ABC_DEF0u64;
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for len in 0..200usize {
+        let mut bytes = vec![0u8; len];
+        for b in bytes.iter_mut() {
+            *b = next() as u8;
+        }
+        let _ = decode_request(&bytes);
+        let _ = decode_response(&bytes);
+        let _ = read_frame(&mut bytes.as_slice());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// live handshake behavior (loopback, tiny backbone)
+
+fn tiny_server() -> FleetServer {
+    use skip2lora::data::Dataset;
+    use skip2lora::model::MlpConfig;
+    use skip2lora::tensor::ops::Backend;
+    use skip2lora::train::trainer::pretrain;
+
+    let x = Mat::from_vec(4, 4, vec![0.1; 16]);
+    let data = Dataset {
+        x,
+        labels: vec![0, 1, 0, 1],
+        n_classes: 2,
+    };
+    let cfg = MlpConfig {
+        dims: vec![4, 6, 2],
+        rank: 1,
+        batch_norm: false,
+    };
+    let backbone = pretrain(cfg, &data, 5, 0.05, 1, Backend::Blocked);
+    FleetServer::new(
+        backbone,
+        ServeConfig {
+            workers: 0,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn version_mismatch_handshake_is_refused_with_a_typed_error() {
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write_request(
+        &mut stream,
+        &WireRequest::Hello {
+            version: WIRE_VERSION + 1,
+        },
+    )
+    .unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Error { msg } => assert!(msg.contains("version mismatch"), "{msg}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+    drop(stream);
+    node.shutdown();
+}
+
+#[test]
+fn first_frame_must_be_hello() {
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write_request(&mut stream, &WireRequest::QueueDepth).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Error { msg } => assert!(msg.contains("Hello"), "{msg}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+    drop(stream);
+    node.shutdown();
+}
+
+#[test]
+fn duplicate_hello_is_refused_but_connection_survives() {
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let hello = WireRequest::Hello {
+        version: WIRE_VERSION,
+    };
+    write_request(&mut stream, &hello).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::HelloOk { version } => assert_eq!(version, WIRE_VERSION),
+        other => panic!("{other:?}"),
+    }
+    // a second Hello is a protocol error...
+    write_request(&mut stream, &hello).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Error { msg } => assert!(msg.contains("duplicate Hello"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // ...but framing survived, so the connection keeps working
+    write_request(&mut stream, &WireRequest::QueueDepth).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::QueueDepthOk { queued } => assert_eq!(queued, 0),
+        other => panic!("{other:?}"),
+    }
+    drop(stream);
+    node.shutdown();
+}
+
+#[test]
+fn malformed_frame_mid_session_gets_typed_error_and_session_continues() {
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write_request(
+        &mut stream,
+        &WireRequest::Hello {
+            version: WIRE_VERSION,
+        },
+    )
+    .unwrap();
+    let _ = read_response(&mut stream).unwrap();
+
+    // well-framed but undecodable: unknown tag inside a valid frame
+    write_frame(&mut stream, &[0x40u8, 1, 2, 3]).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Error { msg } => assert!(msg.contains("unknown request"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // truncated payload inside a valid frame
+    write_frame(&mut stream, &[0x02u8, 0, 0]).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Error { msg } => assert!(msg.contains("truncated"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // the session still serves real frames afterwards
+    write_request(&mut stream, &WireRequest::QueueDepth).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::QueueDepthOk { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    drop(stream);
+    node.shutdown();
+}
+
+#[test]
+fn interleaved_connections_do_not_cross_frames() {
+    // two clients alternating requests against one node: responses must
+    // pair with the requesting connection, never leak across
+    use skip2lora::net::NodeClient;
+
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+    let mut a = NodeClient::connect(&addr).unwrap();
+    let mut b = NodeClient::connect(&addr).unwrap();
+    for i in 0..10u64 {
+        match a.predict(i, vec![0.1, 0.2, 0.3, 0.4]).unwrap() {
+            skip2lora::net::Admission::Queued { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(b.queue_depth().unwrap(), (i + 1) as usize);
+    }
+    let done = a.pump_drain().unwrap();
+    assert_eq!(done.len(), 10);
+    assert_eq!(b.queue_depth().unwrap(), 0);
+    drop(a);
+    drop(b);
+    node.shutdown();
+}
