@@ -29,7 +29,8 @@ use std::sync::Arc;
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use skip2lora::bench::{
-    report, Bencher, KernelBench, ObsOverhead, ServeBenchReport, ServePoint, WireOverhead,
+    report, Bencher, KernelBench, LaneScaling, ObsOverhead, ServeBenchReport, ServePoint,
+    WireOverhead,
 };
 use skip2lora::method::Method;
 use skip2lora::model::{AdapterSet, Mlp, MlpConfig};
@@ -37,6 +38,7 @@ use skip2lora::net::{wire, Admission, NodeClient, NodeServer, WireRequest};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::obs::trace::FlightRecorder;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::lanes::{AffinityTracker, LaneFlush, LaneSet};
 use skip2lora::serve::persist::RegistryCheckpoint;
 use skip2lora::serve::registry::AdapterRegistry;
 use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
@@ -484,6 +486,79 @@ fn main() {
             w.encode_ns_per_frame,
             w.decode_ns_per_frame
         );
+    }
+
+    b.header("lane scaling: the same mixed-tenant round at 1/2/4/8 lanes (DESIGN.md §13)");
+    {
+        // One round = submit ROWS seeded requests (tenant-hash routed)
+        // and drain every lane. Bit-identity makes the comparison fair by
+        // construction — every width serves byte-identical logits
+        // (tests/serve_lanes.rs proves it), so the only variable is the
+        // flush parallelism.
+        const ROWS: usize = 64;
+        let lane_capacity = 16usize;
+        let mut timings: Vec<(usize, f64)> = Vec::new();
+        let mut out = Vec::with_capacity(ROWS);
+        let mut flush_log: Vec<LaneFlush> = Vec::new();
+        for &n_lanes in &[1usize, 2, 4, 8] {
+            let mut lanes = LaneSet::new(n_lanes, 64, false, |_| {
+                let frozen =
+                    FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, lane_capacity);
+                MicroBatcher::with_limits(frozen, Arc::clone(&registry), 1, 4096)
+            });
+            let mut round = 0usize;
+            let r = b.bench(&format!("lanes={n_lanes} (B={ROWS} round)"), || {
+                for i in 0..ROWS {
+                    let t = ((round * 31 + i * 17) % n_tenants) as u64;
+                    lanes
+                        .try_submit(BatchRequest {
+                            tenant: t,
+                            id: i as u64,
+                            x: requests[(round + i) % n_tenants].clone(),
+                            label: None,
+                        })
+                        .expect("bench bound is ample");
+                }
+                round += 1;
+                let mut served = 0usize;
+                while lanes.pending() > 0 {
+                    out.clear();
+                    lanes.pump(&mut out, &mut flush_log, None);
+                    served += out.len();
+                }
+                assert_eq!(served, ROWS);
+                std::hint::black_box(served);
+            });
+            timings.push((n_lanes, r.mean_ns));
+        }
+
+        // placement affinity over a seeded fine-tune sequence: hot
+        // tenants re-adapt repeatedly, so every placement after a
+        // tenant's first is a pin hit (the policy `FleetServer` runs via
+        // `pinned_worker` + `WorkerPool::submit_to`)
+        let mut tracker = AffinityTracker::new(2);
+        let mut pins: Vec<Option<usize>> = vec![None; 64];
+        let mut prng = Rng::new(0xAFF1);
+        for _ in 0..512 {
+            let t = prng.below(64);
+            let (worker, _) = tracker.place(t as u64, pins[t]);
+            pins[t] = Some(worker);
+        }
+        let l = LaneScaling::from_timings(ROWS, &timings, tracker.hits(), tracker.misses());
+        println!("lane scaling (rows/sec, speedup vs single lane):");
+        for p in &l.points {
+            println!(
+                "  lanes={:<2} {:>12.0} rows/s  {:>5.2}x",
+                p.lanes, p.rows_per_sec, p.speedup_vs_single
+            );
+        }
+        println!(
+            "affinity: {} hits / {} misses ({:.1}% hit rate, 2 workers, 64 hot tenants)",
+            l.affinity_hits,
+            l.affinity_misses,
+            l.affinity_hit_rate * 100.0
+        );
+        rep.lane_scaling = Some(l);
     }
 
     println!("\ngrouped-vs-per-row rows/sec speedup per workload:");

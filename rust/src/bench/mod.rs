@@ -5,4 +5,6 @@ pub mod harness;
 pub mod report;
 
 pub use harness::{BenchResult, Bencher};
-pub use report::{KernelBench, ObsOverhead, ServeBenchReport, ServePoint, WireOverhead};
+pub use report::{
+    KernelBench, LanePoint, LaneScaling, ObsOverhead, ServeBenchReport, ServePoint, WireOverhead,
+};

@@ -145,6 +145,77 @@ impl WireOverhead {
     }
 }
 
+/// One point of the lane-scaling sweep (DESIGN.md §13): the same seeded
+/// mixed-tenant round served through a `LaneSet` of this width.
+#[derive(Clone, Debug)]
+pub struct LanePoint {
+    /// lane count (power of two; 1 = the single-lane baseline)
+    pub lanes: usize,
+    /// mean ns per full round (submit stream + drain all lanes)
+    pub mean_ns_per_round: f64,
+    pub rows_per_sec: f64,
+    /// this width's rows/sec over the 1-lane point's (1.0 at lanes=1)
+    pub speedup_vs_single: f64,
+}
+
+/// The lane-scaling section: throughput at 1/2/4/8 lanes plus the
+/// fine-tune placement-affinity hit rate measured on a live
+/// `FleetServer`. Optional like [`ObsOverhead`] — present only when the
+/// bench run measured it.
+#[derive(Clone, Debug, Default)]
+pub struct LaneScaling {
+    pub points: Vec<LanePoint>,
+    pub affinity_hits: u64,
+    pub affinity_misses: u64,
+    /// hits / (hits + misses); 0 when no placements happened
+    pub affinity_hit_rate: f64,
+}
+
+impl LaneScaling {
+    /// Build from per-width round timings (`(lanes, mean_ns_per_round)`,
+    /// must include width 1) over a workload of `rows` rows per round.
+    pub fn from_timings(
+        rows: usize,
+        timings: &[(usize, f64)],
+        affinity_hits: u64,
+        affinity_misses: u64,
+    ) -> Self {
+        let single = timings
+            .iter()
+            .find(|(l, _)| *l == 1)
+            .map(|&(_, ns)| ns)
+            .expect("lane sweep must include the single-lane baseline");
+        let points = timings
+            .iter()
+            .map(|&(lanes, mean_ns_per_round)| LanePoint {
+                lanes,
+                mean_ns_per_round,
+                rows_per_sec: if mean_ns_per_round > 0.0 {
+                    rows as f64 * 1e9 / mean_ns_per_round
+                } else {
+                    0.0
+                },
+                speedup_vs_single: if mean_ns_per_round > 0.0 {
+                    single / mean_ns_per_round
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        let placements = affinity_hits + affinity_misses;
+        Self {
+            points,
+            affinity_hits,
+            affinity_misses,
+            affinity_hit_rate: if placements > 0 {
+                affinity_hits as f64 / placements as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
 /// The whole report: metadata + kernel section + serve sweep + the
 /// headline grouped-vs-per-row speedups.
 #[derive(Clone, Debug, Default)]
@@ -163,6 +234,8 @@ pub struct ServeBenchReport {
     pub obs_overhead: Option<ObsOverhead>,
     /// loopback-TCP vs in-process serve cost, when the run measured it
     pub wire_overhead: Option<WireOverhead>,
+    /// multi-lane flush throughput + affinity hit rate, when measured
+    pub lane_scaling: Option<LaneScaling>,
 }
 
 impl ServeBenchReport {
@@ -262,6 +335,31 @@ impl ServeBenchReport {
                     ("overhead_frac", num(w.overhead_frac)),
                     ("encode_ns_per_frame", num(w.encode_ns_per_frame)),
                     ("decode_ns_per_frame", num(w.decode_ns_per_frame)),
+                ]),
+            ));
+        }
+        if let Some(l) = &self.lane_scaling {
+            fields.push((
+                "lane_scaling",
+                obj(vec![
+                    (
+                        "points",
+                        arr(l
+                            .points
+                            .iter()
+                            .map(|p| {
+                                obj(vec![
+                                    ("lanes", num(p.lanes as f64)),
+                                    ("mean_ns_per_round", num(p.mean_ns_per_round)),
+                                    ("rows_per_sec", num(p.rows_per_sec)),
+                                    ("speedup_vs_single", num(p.speedup_vs_single)),
+                                ])
+                            })
+                            .collect()),
+                    ),
+                    ("affinity_hits", num(l.affinity_hits as f64)),
+                    ("affinity_misses", num(l.affinity_misses as f64)),
+                    ("affinity_hit_rate", num(l.affinity_hit_rate)),
                 ]),
             ));
         }
@@ -381,6 +479,54 @@ pub fn validate(j: &Json) -> Result<f64, String> {
         // rejects what cannot be a measurement at all
         if !frac.is_finite() {
             return Err(format!("{ctx}: 'overhead_frac' must be finite, got {frac}"));
+        }
+    }
+    if let Some(l) = j.get("lane_scaling") {
+        let ctx = "lane_scaling";
+        let points = l
+            .get("points")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{ctx}: missing 'points' array"))?;
+        if points.is_empty() {
+            return Err(format!("{ctx}: 'points' is empty"));
+        }
+        let mut has_single = false;
+        for (i, p) in points.iter().enumerate() {
+            let pctx = format!("{ctx}.points[{i}]");
+            let lanes = finite_positive(p, "lanes", &pctx)?;
+            if lanes as u64 == 1 {
+                has_single = true;
+            }
+            if !(lanes as u64).is_power_of_two() {
+                return Err(format!("{pctx}: 'lanes' must be a power of two, got {lanes}"));
+            }
+            finite_positive(p, "mean_ns_per_round", &pctx)?;
+            finite_positive(p, "rows_per_sec", &pctx)?;
+            finite_positive(p, "speedup_vs_single", &pctx)?;
+        }
+        if !has_single {
+            return Err(format!(
+                "{ctx}: sweep must include the lanes=1 baseline point"
+            ));
+        }
+        // hits/misses are counts (zero is legal); the rate is a fraction
+        for key in ["affinity_hits", "affinity_misses"] {
+            let v = l
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{ctx}: missing numeric '{key}'"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{ctx}: '{key}' must be finite and >= 0, got {v}"));
+            }
+        }
+        let rate = l
+            .get("affinity_hit_rate")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{ctx}: missing numeric 'affinity_hit_rate'"))?;
+        if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+            return Err(format!(
+                "{ctx}: 'affinity_hit_rate' must be in [0, 1], got {rate}"
+            ));
         }
     }
     finite_positive(j, "geomean_speedup", "report")
@@ -539,5 +685,78 @@ mod tests {
         r.compute_speedups();
         assert_eq!(r.speedups.len(), 1, "unpaired points must not fabricate ratios");
         assert_eq!(r.speedups[0].0, "B32xT8");
+    }
+
+    #[test]
+    fn lane_scaling_roundtrips_and_rejects_bad_sections() {
+        // absent section is fine — single-lane-only runs stay valid
+        let without = sample();
+        assert!(validate(&without.to_json()).is_ok());
+        assert!(without.to_json().get("lane_scaling").is_none());
+
+        let mut r = sample();
+        let timings = [(1usize, 800_000.0), (2, 430_000.0), (4, 240_000.0), (8, 150_000.0)];
+        r.lane_scaling = Some(LaneScaling::from_timings(64, &timings, 30, 10));
+        {
+            let l = r.lane_scaling.as_ref().unwrap();
+            assert_eq!(l.points.len(), 4);
+            assert!((l.points[0].speedup_vs_single - 1.0).abs() < 1e-12);
+            assert!((l.points[2].speedup_vs_single - 800.0 / 240.0).abs() < 1e-12);
+            assert!((l.affinity_hit_rate - 0.75).abs() < 1e-12);
+            assert!((l.points[0].rows_per_sec - 64.0 * 1e9 / 800_000.0).abs() < 1e-6);
+        }
+        let parsed = json::parse(&r.to_json().to_string()).unwrap();
+        validate(&parsed).expect("lane_scaling section must self-validate");
+        let sec = parsed.get("lane_scaling").expect("section present");
+        assert_eq!(
+            sec.get("points").and_then(Json::as_arr).unwrap().len(),
+            4
+        );
+        assert!(
+            (sec.get("affinity_hit_rate").and_then(Json::as_f64).unwrap() - 0.75).abs() < 1e-12
+        );
+
+        // empty points
+        let mut r = sample();
+        r.lane_scaling = Some(LaneScaling::from_timings(64, &[(1, 800_000.0)], 0, 0));
+        r.lane_scaling.as_mut().unwrap().points.clear();
+        assert!(validate(&r.to_json()).unwrap_err().contains("points"));
+        // missing the lanes=1 baseline
+        let mut r = sample();
+        r.lane_scaling = Some(LaneScaling::from_timings(
+            64,
+            &[(1, 800_000.0), (2, 430_000.0)],
+            0,
+            0,
+        ));
+        r.lane_scaling.as_mut().unwrap().points.remove(0);
+        assert!(validate(&r.to_json()).unwrap_err().contains("lanes=1"));
+        // non-power-of-two lane width
+        let mut r = sample();
+        let mut l = LaneScaling::from_timings(64, &[(1, 800_000.0)], 0, 0);
+        l.points.push(LanePoint {
+            lanes: 3,
+            mean_ns_per_round: 300_000.0,
+            rows_per_sec: 1.0,
+            speedup_vs_single: 1.0,
+        });
+        r.lane_scaling = Some(l);
+        assert!(validate(&r.to_json()).unwrap_err().contains("power of two"));
+        // a NaN rate must fail
+        let mut r = sample();
+        let mut l = LaneScaling::from_timings(64, &[(1, 800_000.0)], 0, 0);
+        l.affinity_hit_rate = f64::NAN;
+        r.lane_scaling = Some(l);
+        assert!(validate(&r.to_json()).unwrap_err().contains("affinity_hit_rate"));
+        // a rate out of [0, 1] must fail
+        let mut r = sample();
+        let mut l = LaneScaling::from_timings(64, &[(1, 800_000.0)], 1, 1);
+        l.affinity_hit_rate = 1.5;
+        r.lane_scaling = Some(l);
+        assert!(validate(&r.to_json()).unwrap_err().contains("affinity_hit_rate"));
+        // zero placements: rate is 0, counts are 0 — still valid
+        let mut r = sample();
+        r.lane_scaling = Some(LaneScaling::from_timings(64, &[(1, 800_000.0)], 0, 0));
+        validate(&r.to_json()).expect("zero placements are legal");
     }
 }

@@ -32,7 +32,7 @@ use crate::util::json::{arr, num, obj, parse, s, Json};
 use crate::util::stats::Welford;
 
 /// Raw (non-derived) counters of the `serve` section, summed exactly.
-const SERVE_COUNTERS: [&str; 18] = [
+const SERVE_COUNTERS: [&str; 20] = [
     "predicts",
     "feedbacks",
     "swaps",
@@ -51,6 +51,8 @@ const SERVE_COUNTERS: [&str; 18] = [
     "exports",
     "imports",
     "pump_ticks",
+    "affinity_hits",
+    "affinity_misses",
 ];
 
 fn getf(j: &Json, key: &str, ctx: &str) -> Result<f64, String> {
@@ -373,7 +375,32 @@ pub fn merge_docs(docs: &[Json]) -> Result<Json, String> {
         Json::Null
     };
 
-    Ok(obj(vec![
+    // --- lanes: concatenated with reassigned lane indices and node
+    // provenance — but ONLY when every doc carries a lane section. A
+    // mixed fleet (some multi-lane nodes, some single-lane) would break
+    // the validator's Σ-lane-flushes == serve.batches cross-check, so the
+    // merged doc falls back to the merged-only view instead. ---
+    let all_have_lanes = docs.iter().all(|d| d.get("lanes").is_some());
+    let mut lane_rows: Vec<Json> = Vec::new();
+    if all_have_lanes {
+        for (i, d) in docs.iter().enumerate() {
+            let rows = d
+                .get("lanes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("doc[{i}]: 'lanes' must be an array"))?;
+            for e in rows {
+                let mut fields = e
+                    .as_obj()
+                    .ok_or_else(|| format!("doc[{i}]: lane row not an object"))?
+                    .clone();
+                fields.insert("lane".into(), num(lane_rows.len() as f64));
+                fields.insert("node".into(), num(i as f64));
+                lane_rows.push(Json::Obj(fields));
+            }
+        }
+    }
+
+    let mut top = vec![
         ("schema", s(SCHEMA)),
         // extra fleet-only field; the validator ignores unknown keys
         ("nodes", num(docs.len() as f64)),
@@ -408,7 +435,11 @@ pub fn merge_docs(docs: &[Json]) -> Result<Json, String> {
         ("tenants", tenants_json),
         ("shards", arr(shards)),
         ("workers", workers_json),
-    ]))
+    ];
+    if all_have_lanes && !lane_rows.is_empty() {
+        top.push(("lanes", arr(lane_rows)));
+    }
+    Ok(obj(top))
 }
 
 /// Parse per-node snapshot texts (what `Observe` frames carry), merge
@@ -428,7 +459,7 @@ pub fn merge_texts<S: AsRef<str>>(texts: &[S]) -> Result<Json, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::obs::snapshot::{ObsSnapshot, WorkerSnapshot};
+    use crate::obs::snapshot::{LaneSnapshot, ObsSnapshot, WorkerSnapshot};
     use crate::obs::stages::{FlushStage, FlushStages, TenantRollups};
     use crate::obs::trace::{EventKind, FlightRecorder};
     use crate::serve::metrics::ServeMetrics;
@@ -503,7 +534,44 @@ mod tests {
                     queue_depths: vec![0, 0],
                 })
             },
+            lanes: vec![],
         }
+    }
+
+    /// `node_snapshot(k)` plus a 2-lane section whose rows reconcile with
+    /// the node's merged books (flushes sum to `batches`, rows to
+    /// `batched_rows`, queued to 0).
+    fn node_snapshot_with_lanes(k: u64) -> ObsSnapshot {
+        let mut snap = node_snapshot(k);
+        snap.lanes = vec![
+            LaneSnapshot {
+                lane: 0,
+                admitted: 10 + 2 * k,
+                completed: 10 + 2 * k,
+                queued: 0,
+                flushes: 1 + k,
+                rows: 10 + 3 * k,
+                stage_sum_ns: 40_000,
+                total_ns: 60_000,
+                recorded: 4,
+                dropped: 0,
+            },
+            LaneSnapshot {
+                lane: 1,
+                admitted: 10 + k,
+                completed: 10 + k,
+                queued: 0,
+                flushes: 1,
+                rows: 10,
+                stage_sum_ns: 11_500 + 5_600 * k,
+                total_ns: 5_500 * k,
+                recorded: 2,
+                dropped: 0,
+            },
+        ];
+        // keep lane 1's stage-sum inside the per-lane gate
+        snap.lanes[1].stage_sum_ns = snap.lanes[1].total_ns;
+        snap
     }
 
     #[test]
@@ -602,6 +670,38 @@ mod tests {
     }
 
     #[test]
+    fn lane_sections_concatenate_with_node_provenance() {
+        let texts: Vec<String> = (0..2u64)
+            .map(|k| node_snapshot_with_lanes(k).to_json().to_string())
+            .collect();
+        // merge_texts re-validates: the merged doc passes the lane-aware
+        // cross-checks (Σ flushes == serve.batches etc.) by construction
+        let merged = merge_texts(&texts).expect("lane-bearing fleet must merge");
+        let rows = merged.get("lanes").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4, "2 nodes × 2 lanes");
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.get("lane").unwrap().as_f64().unwrap(), i as f64);
+            assert_eq!(
+                row.get("node").unwrap().as_f64().unwrap(),
+                (i / 2) as f64,
+                "lane rows keep node provenance"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_fleet_drops_lanes_but_still_validates() {
+        // one multi-lane node, one single-lane node: the merged doc must
+        // omit 'lanes' (the Σ cross-checks could not hold) yet validate
+        let texts = vec![
+            node_snapshot_with_lanes(1).to_json().to_string(),
+            node_snapshot(0).to_json().to_string(),
+        ];
+        let merged = merge_texts(&texts).expect("mixed fleet must merge");
+        assert!(merged.get("lanes").is_none());
+    }
+
+    #[test]
     fn rejects_mixed_schemas_and_corrupt_buckets() {
         let good = node_snapshot(0).to_json().to_string();
         let bad_schema = good.replace("skip2lora/obs/v1", "skip2lora/obs/v0");
@@ -646,6 +746,8 @@ mod tests {
                 "exports" => m.exports,
                 "imports" => m.imports,
                 "pump_ticks" => m.pump_ticks,
+                "affinity_hits" => m.affinity_hits,
+                "affinity_misses" => m.affinity_misses,
                 other => panic!("unknown counter {other}"),
             }) as f64
         }

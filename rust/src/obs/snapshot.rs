@@ -36,6 +36,28 @@ pub struct WorkerSnapshot {
     pub queue_depths: Vec<usize>,
 }
 
+/// One serving lane's books and attribution (`serve::lanes::LaneSet`).
+/// The validator holds every lane to the same discipline as the merged
+/// totals: balanced books (`completed + queued == admitted`) and the
+/// stage-sum ≤ 1.05·total gate, plus cross-checks that the lane rows sum
+/// to the fleet-level counters.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneSnapshot {
+    pub lane: usize,
+    pub admitted: u64,
+    pub completed: u64,
+    pub queued: usize,
+    /// this lane's `MicroBatcher::batches`
+    pub flushes: u64,
+    /// this lane's `MicroBatcher::rows`
+    pub rows: u64,
+    pub stage_sum_ns: u64,
+    pub total_ns: u64,
+    /// this lane's flight-recorder books
+    pub recorded: u64,
+    pub dropped: u64,
+}
+
 /// Everything observable about a `FleetServer` at one instant. Built on
 /// the cold path (clones + allocating summaries); the hot path only ever
 /// touches the fixed-size structures this snapshot copies from.
@@ -54,6 +76,9 @@ pub struct ObsSnapshot {
     pub tenants: Vec<TenantSlot>,
     pub shards: Vec<ShardStats>,
     pub workers: Option<WorkerSnapshot>,
+    /// per-lane books; EMPTY for the legacy single-lane config, so
+    /// single-lane documents are byte-identical to pre-lane ones
+    pub lanes: Vec<LaneSnapshot>,
 }
 
 /// Histogram section writer, shared with the fleet aggregator
@@ -74,6 +99,21 @@ pub fn hist_json(h: &LatencyHistogram) -> Json {
             "buckets",
             arr(h.bucket_counts().iter().map(|&c| num(c as f64)).collect()),
         ),
+    ])
+}
+
+fn lane_json(l: &LaneSnapshot) -> Json {
+    obj(vec![
+        ("lane", num(l.lane as f64)),
+        ("admitted", num(l.admitted as f64)),
+        ("completed", num(l.completed as f64)),
+        ("queued", num(l.queued as f64)),
+        ("flushes", num(l.flushes as f64)),
+        ("rows", num(l.rows as f64)),
+        ("stage_sum_ns", num(l.stage_sum_ns as f64)),
+        ("total_ns", num(l.total_ns as f64)),
+        ("recorded", num(l.recorded as f64)),
+        ("dropped", num(l.dropped as f64)),
     ])
 }
 
@@ -126,7 +166,7 @@ impl ObsSnapshot {
         let fs = &self.flush_stages;
         let t = &self.trace;
         let total = fs.total_ns();
-        obj(vec![
+        let mut fields = vec![
             ("schema", s(SCHEMA)),
             ("pump_ticks", num(self.pump_ticks as f64)),
             ("tenants_live", num(self.tenants_live as f64)),
@@ -152,6 +192,8 @@ impl ObsSnapshot {
                     ("exports", num(m.exports as f64)),
                     ("imports", num(m.imports as f64)),
                     ("pump_ticks", num(m.pump_ticks as f64)),
+                    ("affinity_hits", num(m.affinity_hits as f64)),
+                    ("affinity_misses", num(m.affinity_misses as f64)),
                     ("rows_per_batch", num(m.rows_per_batch())),
                     // the deterministic throughput form (satellite 1)
                     ("rows_per_pump", num(m.rows_per_pump())),
@@ -265,7 +307,14 @@ impl ObsSnapshot {
                     None => Json::Null,
                 },
             ),
-        ])
+        ];
+        // per-lane rows only exist for multi-lane servers; omitting the
+        // key entirely keeps single-lane documents byte-identical to the
+        // pre-lane schema (and legacy documents valid)
+        if !self.lanes.is_empty() {
+            fields.push(("lanes", arr(self.lanes.iter().map(lane_json).collect())));
+        }
+        obj(fields)
     }
 }
 
@@ -351,6 +400,8 @@ pub fn validate(j: &Json) -> Result<f64, String> {
         "exports",
         "imports",
         "pump_ticks",
+        "affinity_hits",
+        "affinity_misses",
         "rows_per_batch",
         "rows_per_pump",
         "finetune_cache_hit_rate",
@@ -475,6 +526,64 @@ pub fn validate(j: &Json) -> Result<f64, String> {
         }
     }
 
+    // 'lanes' is optional (absent on single-lane and legacy documents);
+    // when present, every lane row must self-validate AND the rows must
+    // reconcile with the merged top-level books — the lane-aware twin of
+    // the queue_depths == workers and stage-sum gates above
+    if let Some(lanes) = j.get("lanes") {
+        let lanes = lanes
+            .as_arr()
+            .ok_or("'lanes' must be an array when present")?;
+        if lanes.is_empty() {
+            return Err("'lanes' must not be empty when present".into());
+        }
+        let (mut queued_sum, mut flush_sum, mut rows_sum) = (0.0, 0.0, 0.0);
+        for (i, l) in lanes.iter().enumerate() {
+            let ctx = format!("lanes[{i}]");
+            finite_nonneg(l, "lane", &ctx)?;
+            let admitted = finite_nonneg(l, "admitted", &ctx)?;
+            let completed = finite_nonneg(l, "completed", &ctx)?;
+            let lane_queued = finite_nonneg(l, "queued", &ctx)?;
+            flush_sum += finite_nonneg(l, "flushes", &ctx)?;
+            rows_sum += finite_nonneg(l, "rows", &ctx)?;
+            let stage_sum = finite_nonneg(l, "stage_sum_ns", &ctx)?;
+            let lane_total = finite_nonneg(l, "total_ns", &ctx)?;
+            finite_nonneg(l, "recorded", &ctx)?;
+            finite_nonneg(l, "dropped", &ctx)?;
+            // balanced books: nothing a lane admitted is ever lost
+            if completed + lane_queued != admitted {
+                return Err(format!(
+                    "{ctx}: unbalanced books: completed {completed} + queued {lane_queued} != admitted {admitted}"
+                ));
+            }
+            // the stage-sum gate, applied per lane instance
+            if stage_sum > lane_total * 1.05 + 50_000.0 {
+                return Err(format!(
+                    "{ctx}: stage sum {stage_sum}ns exceeds total {lane_total}ns"
+                ));
+            }
+            queued_sum += lane_queued;
+        }
+        let queued = finite_nonneg(j, "queued", "snapshot")?;
+        if queued_sum != queued {
+            return Err(format!(
+                "lanes: queued sum {queued_sum} != snapshot queued {queued}"
+            ));
+        }
+        let batches = finite_nonneg(serve, "batches", "serve")?;
+        if flush_sum != batches {
+            return Err(format!(
+                "lanes: flush sum {flush_sum} != serve.batches {batches}"
+            ));
+        }
+        let batched_rows = finite_nonneg(serve, "batched_rows", "serve")?;
+        if rows_sum != batched_rows {
+            return Err(format!(
+                "lanes: rows sum {rows_sum} != serve.batched_rows {batched_rows}"
+            ));
+        }
+    }
+
     Ok(pump_ticks)
 }
 
@@ -579,7 +688,41 @@ mod tests {
                 },
                 queue_depths: vec![0, 0],
             }),
+            lanes: vec![],
         }
+    }
+
+    /// Sample with a consistent 2-lane section: flushes sum to
+    /// serve.batches (5), rows to batched_rows (50), queued to 0.
+    fn sample_snapshot_with_lanes() -> ObsSnapshot {
+        let mut snap = sample_snapshot();
+        snap.lanes = vec![
+            LaneSnapshot {
+                lane: 0,
+                admitted: 30,
+                completed: 30,
+                queued: 0,
+                flushes: 3,
+                rows: 30,
+                stage_sum_ns: 100_000,
+                total_ns: 200_000,
+                recorded: 9,
+                dropped: 0,
+            },
+            LaneSnapshot {
+                lane: 1,
+                admitted: 20,
+                completed: 20,
+                queued: 0,
+                flushes: 2,
+                rows: 20,
+                stage_sum_ns: 80_000,
+                total_ns: 175_000,
+                recorded: 6,
+                dropped: 0,
+            },
+        ];
+        snap
     }
 
     #[test]
@@ -673,5 +816,72 @@ mod tests {
         let mut snap2 = sample_snapshot();
         snap2.workers = None;
         assert!(validate(&snap2.to_json()).is_ok());
+    }
+
+    #[test]
+    fn single_lane_document_omits_lanes_key() {
+        let j = sample_snapshot().to_json();
+        assert!(
+            j.get("lanes").is_none(),
+            "empty lane section must not serialize — legacy docs stay byte-identical"
+        );
+        validate(&j).unwrap();
+    }
+
+    #[test]
+    fn multi_lane_document_roundtrips_and_validates() {
+        let j = sample_snapshot_with_lanes().to_json();
+        assert!(j.get("lanes").and_then(Json::as_arr).is_some());
+        assert_eq!(validate(&j).unwrap(), 12.0);
+        let back = validate_text(&j.to_string()).unwrap();
+        assert_eq!(back, 12.0);
+    }
+
+    #[test]
+    fn rejects_unbalanced_lane_books() {
+        let mut snap = sample_snapshot_with_lanes();
+        snap.lanes[1].completed = 19; // lose a request
+        let err = validate(&snap.to_json()).unwrap_err();
+        assert!(err.contains("unbalanced books"), "{err}");
+    }
+
+    #[test]
+    fn rejects_per_lane_stage_sum_exceeding_total() {
+        let mut snap = sample_snapshot_with_lanes();
+        snap.lanes[0].stage_sum_ns = 10_000_000;
+        let err = validate(&snap.to_json()).unwrap_err();
+        assert!(err.contains("lanes[0]") && err.contains("exceeds total"), "{err}");
+    }
+
+    #[test]
+    fn rejects_lane_rows_disagreeing_with_merged_books() {
+        // flushes no longer sum to serve.batches
+        let mut snap = sample_snapshot_with_lanes();
+        snap.lanes[0].flushes = 4;
+        let err = validate(&snap.to_json()).unwrap_err();
+        assert!(err.contains("serve.batches"), "{err}");
+
+        // rows no longer sum to serve.batched_rows
+        let mut snap = sample_snapshot_with_lanes();
+        snap.lanes[0].rows = 31;
+        let err = validate(&snap.to_json()).unwrap_err();
+        assert!(err.contains("batched_rows"), "{err}");
+
+        // queued no longer sums to the snapshot's queued
+        let mut snap = sample_snapshot_with_lanes();
+        snap.lanes[0].queued = 1;
+        snap.lanes[0].admitted = 31;
+        let err = validate(&snap.to_json()).unwrap_err();
+        assert!(err.contains("snapshot queued"), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_lanes_array() {
+        let mut j = sample_snapshot().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("lanes".into(), arr(vec![]));
+        }
+        let err = validate(&j).unwrap_err();
+        assert!(err.contains("'lanes' must not be empty"), "{err}");
     }
 }

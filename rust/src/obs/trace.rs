@@ -254,6 +254,39 @@ pub struct RecorderSummary {
     pub tail: Vec<Event>,
 }
 
+impl RecorderSummary {
+    /// Associative merge for multi-lane snapshots (`serve::lanes`): the
+    /// result reads as one recorder that observed every lane's stream.
+    /// Books sum (`capacity`/`recorded`/`dropped`), per-kind counts sum
+    /// by index (both sides are always built in `KIND_NAMES` order), and
+    /// the tails are interleaved on the deterministic pump-tick clock —
+    /// stable-sorted so equal ticks keep lane order, truncated to the
+    /// newest [`SUMMARY_TAIL`] events, with sequence numbers reassigned
+    /// `0..len` so the validator's strictly-increasing gate holds.
+    pub fn merge(&mut self, other: &RecorderSummary) {
+        self.enabled |= other.enabled;
+        self.capacity += other.capacity;
+        self.recorded += other.recorded;
+        self.dropped += other.dropped;
+        if self.counts.is_empty() {
+            self.counts = other.counts.clone();
+        } else {
+            debug_assert_eq!(self.counts.len(), other.counts.len());
+            for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+                debug_assert_eq!(a.0, b.0, "count rows are always in KIND_NAMES order");
+                a.1 += b.1;
+            }
+        }
+        self.tail.extend_from_slice(&other.tail);
+        self.tail.sort_by_key(|e| e.tick);
+        let skip = self.tail.len().saturating_sub(SUMMARY_TAIL);
+        self.tail.drain(..skip);
+        for (i, e) in self.tail.iter_mut().enumerate() {
+            e.seq = i as u64;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

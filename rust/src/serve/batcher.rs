@@ -492,6 +492,19 @@ impl MicroBatcher {
         self.pump_traced(out, None)
     }
 
+    /// Would the NEXT [`MicroBatcher::pump`] flush? Evaluates the same
+    /// fullness-or-deadline predicate `pump_traced` will apply after it
+    /// advances the pump clock, without side effects — the multi-lane
+    /// driver uses this to decide whether a tick is worth fanning out to
+    /// scoped threads (`serve::lanes`).
+    pub fn flush_due(&self) -> bool {
+        let Some(&(_, oldest)) = self.queue.front() else {
+            return false;
+        };
+        self.queue.len() >= self.backbone.capacity()
+            || (self.pump_count + 1).saturating_sub(oldest) >= self.deadline_pumps
+    }
+
     /// `pump` with an optional flight recorder for the flush events.
     pub fn pump_traced(
         &mut self,

@@ -186,6 +186,11 @@ pub struct ServeMetrics {
     /// server pumps executed — the deterministic clock denominator for
     /// `rows_per_pump` (carried in obs snapshots; wall-clock-free)
     pub pump_ticks: u64,
+    /// fine-tune placements that reused the tenant's pinned worker (the
+    /// cache-affinity hint; see `serve::lanes::AffinityTracker`)
+    pub affinity_hits: u64,
+    /// placements with no valid pin (cold tenant or shrunk pool)
+    pub affinity_misses: u64,
     /// fine-tune wall-clock by stage, summed over completed jobs (the
     /// paper's Tables 6/7 taxonomy: the skip-cache win is `forward_ns`
     /// shrinking while `backward_ns`/`update_ns` stay put)
@@ -219,6 +224,8 @@ impl Default for ServeMetrics {
             exports: 0,
             imports: 0,
             pump_ticks: 0,
+            affinity_hits: 0,
+            affinity_misses: 0,
             finetune_forward_ns: 0,
             finetune_backward_ns: 0,
             finetune_update_ns: 0,
@@ -295,6 +302,8 @@ impl ServeMetrics {
         self.exports += other.exports;
         self.imports += other.imports;
         self.pump_ticks += other.pump_ticks;
+        self.affinity_hits += other.affinity_hits;
+        self.affinity_misses += other.affinity_misses;
         self.finetune_forward_ns += other.finetune_forward_ns;
         self.finetune_backward_ns += other.finetune_backward_ns;
         self.finetune_update_ns += other.finetune_update_ns;

@@ -103,7 +103,17 @@
 //! cross-tenant interference) runs as
 //! `cargo run --release --example fleet_serving`.
 
+//! Multi-lane flush ([`lanes`], DESIGN.md §13): the server shards its
+//! micro-batcher into `ServeConfig::lanes` tenant-hash-routed lanes —
+//! same SplitMix64 discipline as the registry shards — flushed in
+//! parallel under `std::thread::scope` and drained in lane order.
+//! Row-independent flush kernels make the N-lane output byte-identical
+//! to single-lane (`tests/serve_lanes.rs` proves it under adversarial
+//! schedules), and fine-tune jobs are pinned to the worker whose cache
+//! last touched the tenant's adapters ([`lanes::AffinityTracker`]).
+
 pub mod batcher;
+pub mod lanes;
 pub mod metrics;
 pub mod persist;
 pub mod registry;
@@ -111,6 +121,9 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchRequest, BatchResponse, FrozenBackbone, MicroBatcher, SubmitError};
+pub use lanes::{
+    lane_of, AffinityTracker, CachePadded, LaneBooks, LaneFlush, LaneSet, WorkerAffinity,
+};
 pub use metrics::{LatencyHistogram, ServeMetrics};
 pub use persist::{RegistryCheckpoint, TenantRecord};
 pub use registry::{AdapterRegistry, AdapterSnapshot, ShardStats, SnapshotBatch, TenantId};

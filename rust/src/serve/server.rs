@@ -55,6 +55,7 @@ use crate::obs::stages::TenantRollups;
 use crate::obs::trace::{EventKind, FlightRecorder};
 use crate::obs::ObsConfig;
 use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher, SubmitError, MAX_RANK};
+use crate::serve::lanes::{AffinityTracker, LaneFlush, LaneSet};
 use crate::serve::metrics::ServeMetrics;
 use crate::serve::persist::RegistryCheckpoint;
 use crate::serve::registry::{AdapterRegistry, TenantId};
@@ -120,6 +121,12 @@ pub struct ServeConfig {
     pub seed: u64,
     /// fine-tune worker threads; 0 = run jobs inline inside `pump`
     pub workers: usize,
+    /// serving lanes (DESIGN.md §13): the data plane is sharded into this
+    /// many tenant-hash-routed `MicroBatcher` lanes, flushed in parallel
+    /// on scoped threads when more than one is due. Must be a power of
+    /// two; 1 (the default) is the legacy single-lane path, bit-identical
+    /// in behavior AND in its obs document.
+    pub lanes: usize,
     /// Fault injection (chaos/testing): the first N fine-tune jobs panic
     /// instead of training, exercising the panic-isolation path. 0 (the
     /// default) disables injection.
@@ -149,6 +156,7 @@ impl Default for ServeConfig {
             train_batch: 20,
             seed: 7,
             workers: 0,
+            lanes: 1,
             inject_adapt_panics: 0,
             obs: ObsConfig::default(),
         }
@@ -309,6 +317,9 @@ struct TenantState {
     bucket_tokens: f64,
     /// pump tick of the last lazy bucket refill
     bucket_tick: u64,
+    /// the worker whose cache last ran this tenant's fine-tune — the
+    /// affinity pin for the next job (`serve::lanes::AffinityTracker`)
+    pinned_worker: Option<usize>,
 }
 
 impl TenantState {
@@ -324,6 +335,7 @@ impl TenantState {
             // a fresh (or re-admitted) tenant starts with a full bucket
             bucket_tokens: cfg.rate_limit.map_or(0.0, |rl| rl.burst),
             bucket_tick: tick,
+            pinned_worker: None,
         }
     }
 }
@@ -361,9 +373,13 @@ pub struct FleetServer {
     /// layer API makes `Mlp: Sync`, so nobody ever clones the weights.
     backbone: Arc<Mlp>,
     pub registry: Arc<AdapterRegistry>,
-    batcher: MicroBatcher,
+    /// the data plane: N tenant-hash-routed `MicroBatcher` lanes (1 =
+    /// the legacy single-lane path, exactly)
+    lanes: LaneSet,
     tenants: HashMap<TenantId, TenantState>,
     pool: Option<WorkerPool>,
+    /// fine-tune placement pinning (Some iff `pool` is Some)
+    affinity: Option<AffinityTracker>,
     results_tx: mpsc::Sender<AdaptMsg>,
     results_rx: mpsc::Receiver<AdaptMsg>,
     pub metrics: ServeMetrics,
@@ -380,6 +396,9 @@ pub struct FleetServer {
     /// admissions closed ([`FleetServer::drain`]): Predict/Feedback get a
     /// typed `Rejected(Draining)` until `resume_admissions`
     draining: bool,
+    /// reusable per-pump flush log (which lanes flushed, rows, ns) — kept
+    /// warm so `pump` does not allocate it every tick
+    flush_log: Vec<LaneFlush>,
 }
 
 impl FleetServer {
@@ -402,28 +421,38 @@ impl FleetServer {
                 rl.tokens_per_pump
             );
         }
+        assert!(
+            cfg.lanes >= 1 && cfg.lanes.is_power_of_two(),
+            "lanes must be a power of two >= 1 (got {})",
+            cfg.lanes
+        );
         let backbone: Arc<Mlp> = backbone.into();
         let registry = Arc::new(AdapterRegistry::with_shards(cfg.registry_shards));
-        let frozen =
-            FrozenBackbone::new(Arc::clone(&backbone), cfg.backend, cfg.batch_capacity);
-        let mut batcher = MicroBatcher::with_limits(
-            frozen,
-            Arc::clone(&registry),
-            cfg.flush_deadline_pumps,
-            cfg.queue_bound,
-        );
-        batcher.set_stage_timing(cfg.obs.stage_timers);
+        let lanes = LaneSet::new(cfg.lanes, cfg.obs.trace_capacity, cfg.obs.trace, |_| {
+            let frozen =
+                FrozenBackbone::new(Arc::clone(&backbone), cfg.backend, cfg.batch_capacity);
+            let mut batcher = MicroBatcher::with_limits(
+                frozen,
+                Arc::clone(&registry),
+                cfg.flush_deadline_pumps,
+                cfg.queue_bound,
+            );
+            batcher.set_stage_timing(cfg.obs.stage_timers);
+            batcher
+        });
         let recorder = FlightRecorder::new(cfg.obs.trace_capacity, cfg.obs.trace);
         let rollups = TenantRollups::new(cfg.obs.top_tenants);
         let pool = (cfg.workers > 0).then(|| WorkerPool::new(cfg.workers));
+        let affinity = (cfg.workers > 0).then(|| AffinityTracker::new(cfg.workers));
         let (results_tx, results_rx) = mpsc::channel();
         Self {
             cfg,
             backbone,
             registry,
-            batcher,
+            lanes,
             tenants: HashMap::new(),
             pool,
+            affinity,
             results_tx,
             results_rx,
             metrics: ServeMetrics::new(),
@@ -432,6 +461,7 @@ impl FleetServer {
             recorder,
             rollups,
             draining: false,
+            flush_log: Vec::new(),
         }
     }
 
@@ -446,11 +476,11 @@ impl FleetServer {
     }
 
     pub fn n_in(&self) -> usize {
-        self.batcher.n_in()
+        self.lanes.n_in()
     }
 
     pub fn n_classes(&self) -> usize {
-        self.batcher.n_out()
+        self.lanes.n_out()
     }
 
     /// Handle one front-end request. Predict/Feedback run the admission
@@ -671,7 +701,7 @@ impl FleetServer {
         // never-queued — exactly the back-pressure signature)
         self.recorder.record(EventKind::Admitted { tenant });
         let id = self.next_ticket + 1;
-        match self.batcher.try_submit(BatchRequest { tenant, id, x, label }) {
+        match self.lanes.try_submit(BatchRequest { tenant, id, x, label }) {
             Ok(()) => {
                 self.next_ticket = id;
                 self.recorder.record(EventKind::Queued { tenant, ticket: id });
@@ -690,9 +720,9 @@ impl FleetServer {
         }
     }
 
-    /// Requests queued but not yet served.
+    /// Requests queued but not yet served (all lanes).
     pub fn queued(&self) -> usize {
-        self.batcher.pending()
+        self.lanes.pending()
     }
 
     /// Drain finished fine-tune jobs, sweep idle tenants past their TTL,
@@ -703,28 +733,30 @@ impl FleetServer {
         self.pump_tick += 1;
         self.metrics.pump_ticks += 1;
         self.recorder.set_tick(self.pump_tick);
+        self.lanes.set_tick(self.pump_tick);
         self.drain_adapt_results();
         self.evict_idle();
         let mut responses = Vec::new();
         let t0 = Instant::now();
-        // disjoint-field borrow: the batcher writes flush events straight
-        // into the server's recorder with no intermediate buffer
-        let n = self.batcher.pump_traced(&mut responses, Some(&mut self.recorder));
-        if n > 0 {
-            // with stage timing on, record the flush's OWN measured span —
+        // one pump over every lane: the single-lane path traces its flush
+        // events straight into the server's recorder (disjoint-field
+        // borrow, byte-identical to the pre-lane behavior); multi-lane
+        // sets trace per lane and merge at snapshot time
+        let mut flush_log = std::mem::take(&mut self.flush_log);
+        self.lanes
+            .pump(&mut responses, &mut flush_log, Some(&mut self.recorder));
+        for f in &flush_log {
+            // with stage timing on, record each flush's OWN measured span —
             // the same total the per-stage timers decompose, so stage sums
             // reconcile against this histogram (tests/obs_subsystem.rs
             // holds them within 5%); with timing off, fall back to the
             // pump-side wall clock
-            let flush_ns = self
-                .batcher
-                .stages()
-                .last_total_ns()
-                .unwrap_or_else(|| t0.elapsed().as_nanos() as u64);
+            let flush_ns = f.ns.unwrap_or_else(|| t0.elapsed().as_nanos() as u64);
             self.metrics.batch_forward.record_ns(flush_ns);
             self.metrics.batches += 1;
-            self.metrics.batched_rows += n as u64;
+            self.metrics.batched_rows += f.rows as u64;
         }
+        self.flush_log = flush_log;
         let mut out = Vec::with_capacity(responses.len());
         for resp in responses {
             let correct = resp.label.map(|l| resp.prediction == l);
@@ -820,6 +852,7 @@ impl FleetServer {
         st.detector.reset();
         let round = st.adaptations;
         st.adaptations += 1;
+        let pinned = st.pinned_worker;
         // fault injection: the first `inject_adapt_panics` jobs fail
         let inject_panic = self.metrics.adaptations < self.cfg.inject_adapt_panics;
         self.metrics.adaptations += 1;
@@ -855,7 +888,28 @@ impl FleetServer {
             let _ = tx.send(msg);
         };
         match &self.pool {
-            Some(pool) => pool.submit(job),
+            Some(pool) => {
+                // cache-affinity placement (DESIGN.md §13): send the job
+                // back to the worker whose cache last touched this
+                // tenant's adapters; idle siblings may still steal it, so
+                // this is a placement hint and hits/misses count intent.
+                // NOTE: only field-disjoint accesses below — `pool`
+                // borrows self.pool for the whole arm.
+                let tracker = self
+                    .affinity
+                    .as_mut()
+                    .expect("affinity tracker exists whenever a pool does");
+                let (worker, hit) = tracker.place(tenant, pinned);
+                if hit {
+                    self.metrics.affinity_hits += 1;
+                } else {
+                    self.metrics.affinity_misses += 1;
+                }
+                if let Some(st) = self.tenants.get_mut(&tenant) {
+                    st.pinned_worker = Some(worker);
+                }
+                pool.submit_to(worker, job);
+            }
             None => {
                 job();
                 self.drain_adapt_results();
@@ -1012,15 +1066,15 @@ impl FleetServer {
             publishes: self.registry.publishes(),
             adaptations: self.metrics.adaptations,
             finetune_panics: self.metrics.finetune_panics,
-            batches: self.batcher.batches,
-            rows: self.batcher.rows,
+            batches: self.lanes.total_batches(),
+            rows: self.lanes.total_rows(),
             rows_per_batch: self.metrics.rows_per_batch(),
             adapter_bytes: self.registry.total_adapter_bytes(),
             queue_rejections: self.metrics.queue_rejections,
             rate_limited: self.metrics.rate_limited,
             evictions: self.metrics.evictions,
-            queued: self.batcher.pending(),
-            queue_bound: self.batcher.queue_bound(),
+            queued: self.lanes.pending(),
+            queue_bound: self.lanes.queue_bound_total(),
             registry_shards: self.registry.shard_count(),
             persists: self.metrics.persists,
             restores: self.metrics.restores,
@@ -1035,19 +1089,32 @@ impl FleetServer {
     /// Cold path: clones and allocates freely; the hot path only ever
     /// wrote into the fixed-size structures this copies from.
     pub fn obs_snapshot(&self) -> ObsSnapshot {
+        // Multi-lane: stages fold across lanes under the PR-6 merge laws
+        // and the per-lane flight recorders merge into the control
+        // recorder's summary; single-lane is byte-identical to the
+        // pre-lane document (no `lanes` key, control recorder only).
+        let mut trace = self.recorder.summary();
+        if self.lanes.n_lanes() > 1 {
+            self.lanes.merge_trace_into(&mut trace);
+        }
         ObsSnapshot {
             pump_ticks: self.pump_tick,
             tenants_live: self.tenants.len(),
-            queued: self.batcher.pending(),
+            queued: self.lanes.pending(),
             metrics: self.metrics.clone(),
-            flush_stages: self.batcher.stages().clone(),
-            trace: self.recorder.summary(),
+            flush_stages: self.lanes.stages_merged(),
+            trace,
             tenants: self.rollups.top(),
             shards: self.registry.shard_stats(),
             workers: self.pool.as_ref().map(|p| WorkerSnapshot {
                 stats: p.stats(),
                 queue_depths: p.queue_depths(),
             }),
+            lanes: if self.lanes.n_lanes() > 1 {
+                self.lanes.snapshots()
+            } else {
+                Vec::new()
+            },
         }
     }
 
@@ -1220,7 +1287,7 @@ mod tests {
         assert_eq!(s.tenant_version(0), 0);
 
         // the fine-tune shared the batcher's backbone by pointer
-        assert!(Arc::ptr_eq(s.shared_backbone(), s.batcher.shared_model()));
+        assert!(Arc::ptr_eq(s.shared_backbone(), s.lanes.shared_model()));
 
         // post-adaptation: tenant 1 classifies its drifted distribution
         let probe = clustered(22, 60, 2.5);

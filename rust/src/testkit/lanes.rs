@@ -1,0 +1,326 @@
+//! Deterministic lane-interleaving replay harness (DESIGN.md §13).
+//!
+//! The multi-lane flush plane ([`crate::serve::lanes`]) claims that
+//! serving is **bit-identical** no matter how many lanes the stream is
+//! sharded over: every flush-path kernel computes each output row solely
+//! from its own input row with a fixed accumulation order, so
+//! repartitioning the stream into different micro-batches cannot change
+//! any request's logits. This module turns that claim into a replayable
+//! experiment: feed the SAME seeded request stream through lane sets of
+//! different widths under *forced adversarial schedules* (flush lanes
+//! out of order, at random, or mid-fill) and compare the captured logits
+//! byte for byte.
+//!
+//! Capture discipline: a response's logits row lives in its lane's
+//! staging matrix only until that lane flushes again, so the harness
+//! snapshots `f32::to_bits` for every fresh response immediately after
+//! each drive step, keyed by `(tenant, id)` — the one identity that is
+//! stable across lane widths (row/batch indices are partition-dependent
+//! by construction).
+//!
+//! Every replay also self-checks the serving books (`completed + queued
+//! == admitted`, per lane and in total — nothing admitted is ever lost
+//! or double-served) and the stage-attribution gate (per-lane stage sums
+//! must reconcile against measured flush totals).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::model::Mlp;
+use crate::nn::lora::LoraAdapter;
+use crate::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use crate::serve::lanes::{LaneBooks, LaneFlush, LaneSet};
+use crate::serve::registry::AdapterRegistry;
+use crate::tensor::ops::Backend;
+use crate::util::rng::Rng;
+
+/// How the replay drives the lane set between submission chunks.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    /// The production path: one `LaneSet::pump` per step (deadline and
+    /// capacity decide which lanes flush; multi-lane pumps go parallel).
+    PumpAll,
+    /// Adversarial: force-flush lanes in this explicit order, one lane
+    /// per step, cycling — exercises partial batches and stale-logits
+    /// hazards that the deadline policy would never produce.
+    LaneOrder(Vec<usize>),
+    /// Adversarial: a seeded coin decides each step between a production
+    /// pump and a force-flush of a random lane.
+    Seeded(u64),
+}
+
+/// One replay configuration: lane width, batcher shape, and schedule.
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    /// power of two, >= 1
+    pub n_lanes: usize,
+    /// per-lane micro-batch capacity
+    pub capacity: usize,
+    /// flush a partial batch once its oldest request waited this many pumps
+    pub deadline_pumps: u64,
+    pub backend: Backend,
+    /// requests submitted between consecutive schedule steps
+    pub submit_chunk: usize,
+    pub schedule: Schedule,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        Self {
+            n_lanes: 1,
+            capacity: 8,
+            deadline_pumps: 2,
+            backend: Backend::Blocked,
+            submit_chunk: 3,
+            schedule: Schedule::PumpAll,
+        }
+    }
+}
+
+/// What one replay produced. `logits` is the byte-exact serving record:
+/// `(tenant, id) -> f32::to_bits` of the response's logits row.
+#[derive(Clone, Debug)]
+pub struct ReplayResult {
+    pub logits: BTreeMap<(u64, u64), Vec<u32>>,
+    pub books: Vec<LaneBooks>,
+    /// total flushes across lanes
+    pub flushes: u64,
+    /// total served rows across lanes
+    pub rows: u64,
+    pub stage_sum_ns: u64,
+    pub total_ns: u64,
+}
+
+/// Publish per-tenant adapters with the given ranks (`rank = 0` is a
+/// legal degenerate adapter — the fan-out must serve it as the bare
+/// backbone). Tenants absent from `ranks` stay unpublished and are
+/// served the frozen backbone directly.
+pub fn publish_adapters(
+    registry: &AdapterRegistry,
+    rng: &mut Rng,
+    dims: &[usize],
+    ranks: &[(u64, usize)],
+) {
+    let n_out = *dims.last().expect("dims non-empty");
+    for &(tenant, rank) in ranks {
+        let mut ads: Vec<LoraAdapter> = dims[..dims.len() - 1]
+            .iter()
+            .map(|&n_in| LoraAdapter::new(rng, n_in, rank, n_out))
+            .collect();
+        // non-trivial second factor so distinct tenants produce distinct
+        // logits (fresh adapters init wb to zero)
+        for ad in ads.iter_mut() {
+            for v in ad.wb.data.iter_mut() {
+                *v = 0.1 * rng.normal();
+            }
+        }
+        registry.publish(tenant, ads);
+    }
+}
+
+/// A deterministic request stream: `n` requests with ids `1..=n`,
+/// tenants drawn seeded from `tenants` (multiplicities arise naturally),
+/// inputs seeded per request. Same seed -> byte-identical stream.
+pub fn seeded_stream(seed: u64, n: usize, n_in: usize, tenants: &[u64]) -> Vec<BatchRequest> {
+    assert!(!tenants.is_empty(), "stream needs at least one tenant");
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| BatchRequest {
+            tenant: tenants[rng.below(tenants.len())],
+            id: i as u64 + 1,
+            x: (0..n_in).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+            label: None,
+        })
+        .collect()
+}
+
+/// Capture the logits of every response appended to `out` since the last
+/// capture. Must run after EVERY drive step: a lane's staging matrix is
+/// overwritten by its next flush.
+fn capture(
+    lanes: &LaneSet,
+    out: &[crate::serve::batcher::BatchResponse],
+    consumed: &mut usize,
+    logits: &mut BTreeMap<(u64, u64), Vec<u32>>,
+) {
+    for resp in &out[*consumed..] {
+        let row = lanes
+            .logits_for(resp)
+            .expect("a just-flushed response must have live logits");
+        let bits: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+        let prev = logits.insert((resp.tenant, resp.id), bits);
+        assert!(prev.is_none(), "request ({}, {}) served twice", resp.tenant, resp.id);
+    }
+    *consumed = out.len();
+}
+
+/// Replay `stream` through a fresh lane set against the shared backbone
+/// and registry. Panics (with context) if the books ever unbalance, a
+/// request is double-served, logits go stale before capture, the drain
+/// fails to converge, or stage attribution exceeds the measured totals.
+pub fn replay(
+    backbone: &Arc<Mlp>,
+    registry: &Arc<AdapterRegistry>,
+    stream: &[BatchRequest],
+    cfg: &ReplayConfig,
+) -> ReplayResult {
+    let mut lanes = LaneSet::new(cfg.n_lanes, 64, true, |_| {
+        let frozen = FrozenBackbone::new(Arc::clone(backbone), cfg.backend, cfg.capacity);
+        let mut b =
+            MicroBatcher::with_limits(frozen, Arc::clone(registry), cfg.deadline_pumps, 4096);
+        b.set_stage_timing(true);
+        b
+    });
+    let mut out = Vec::new();
+    let mut flush_log: Vec<LaneFlush> = Vec::new();
+    let mut logits = BTreeMap::new();
+    let mut consumed = 0usize;
+    let mut sched_rng = match cfg.schedule {
+        Schedule::Seeded(seed) => Some(Rng::new(seed)),
+        _ => None,
+    };
+    let mut order_cursor = 0usize;
+
+    let chunk = cfg.submit_chunk.max(1);
+    for batch in stream.chunks(chunk) {
+        for req in batch {
+            lanes
+                .try_submit(req.clone())
+                .expect("replay queue bound is sized to never reject");
+        }
+        match &cfg.schedule {
+            Schedule::PumpAll => {
+                lanes.pump(&mut out, &mut flush_log, None);
+            }
+            Schedule::LaneOrder(order) => {
+                assert!(!order.is_empty(), "LaneOrder schedule needs lanes");
+                let lane = order[order_cursor % order.len()] % cfg.n_lanes;
+                order_cursor += 1;
+                lanes.flush_lane(lane, &mut out);
+            }
+            Schedule::Seeded(_) => {
+                let rng = sched_rng.as_mut().expect("seeded schedule has an rng");
+                if rng.below(10) < 7 {
+                    lanes.pump(&mut out, &mut flush_log, None);
+                } else {
+                    let lane = rng.below(cfg.n_lanes);
+                    lanes.flush_lane(lane, &mut out);
+                }
+            }
+        }
+        capture(&lanes, &out, &mut consumed, &mut logits);
+        assert!(lanes.balanced(), "books unbalanced mid-replay: {:?}", lanes.books());
+    }
+
+    // drain: flush one lane at a time, capturing between flushes so no
+    // lane overwrites its staging matrix before we read it
+    let mut spins = 0;
+    while lanes.pending() > 0 {
+        for lane in 0..cfg.n_lanes {
+            if lanes.pending_lane(lane) > 0 {
+                lanes.flush_lane(lane, &mut out);
+                capture(&lanes, &out, &mut consumed, &mut logits);
+            }
+        }
+        spins += 1;
+        assert!(spins < 10_000, "drain did not converge");
+    }
+
+    // closing the books: everything admitted was served exactly once
+    assert!(lanes.balanced(), "books unbalanced after drain: {:?}", lanes.books());
+    assert_eq!(lanes.total_admitted(), stream.len() as u64);
+    assert_eq!(lanes.total_completed(), stream.len() as u64);
+    assert_eq!(logits.len(), stream.len(), "every request must be captured once");
+
+    // stage attribution must reconcile against the measured flush totals
+    let merged = lanes.stages_merged();
+    let (stage_sum_ns, total_ns) = (merged.sum_stage_ns(), merged.total_ns());
+    assert!(
+        stage_sum_ns as f64 <= total_ns as f64 * 1.05 + 50_000.0 * cfg.n_lanes as f64,
+        "stage sum {stage_sum_ns}ns exceeds flush total {total_ns}ns"
+    );
+
+    ReplayResult {
+        logits,
+        books: lanes.books(),
+        flushes: lanes.total_batches(),
+        rows: lanes.total_rows(),
+        stage_sum_ns,
+        total_ns,
+    }
+}
+
+/// Assert two replays served byte-identical logits to every request.
+/// Flush counts legitimately differ across widths/schedules; the served
+/// bytes must not.
+pub fn assert_parity(a: &ReplayResult, b: &ReplayResult) {
+    assert_eq!(a.rows, b.rows, "replays served different row counts");
+    assert_eq!(
+        a.logits.keys().collect::<Vec<_>>(),
+        b.logits.keys().collect::<Vec<_>>(),
+        "replays served different request sets"
+    );
+    for (key, bits_a) in &a.logits {
+        let bits_b = &b.logits[key];
+        assert_eq!(
+            bits_a, bits_b,
+            "logits for (tenant, id) = {key:?} differ between lane configurations"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::MlpConfig;
+
+    fn fixture() -> (Arc<Mlp>, Arc<AdapterRegistry>) {
+        let mut rng = Rng::new(0xBEEF);
+        let backbone = Arc::new(Mlp::new(
+            &mut rng,
+            MlpConfig { dims: vec![6, 8, 8, 3], rank: 2, batch_norm: true },
+        ));
+        let registry = Arc::new(AdapterRegistry::new());
+        publish_adapters(&registry, &mut rng, &[6, 8, 8, 3], &[(0, 2), (1, 2), (2, 0)]);
+        (backbone, registry)
+    }
+
+    #[test]
+    fn seeded_stream_is_reproducible() {
+        let a = seeded_stream(7, 50, 6, &[0, 1, 2, 9]);
+        let b = seeded_stream(7, 50, 6, &[0, 1, 2, 9]);
+        assert_eq!(a.len(), 50);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!((ra.tenant, ra.id), (rb.tenant, rb.id));
+            assert_eq!(ra.x, rb.x);
+        }
+        let c = seeded_stream(8, 50, 6, &[0, 1, 2, 9]);
+        assert!(
+            a.iter().zip(&c).any(|(ra, rc)| ra.x != rc.x || ra.tenant != rc.tenant),
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn replay_closes_books_and_captures_every_request() {
+        let (backbone, registry) = fixture();
+        let stream = seeded_stream(11, 37, 6, &[0, 1, 2, 9]);
+        let r = replay(&backbone, &registry, &stream, &ReplayConfig::default());
+        assert_eq!(r.rows, 37);
+        assert_eq!(r.logits.len(), 37);
+        for b in &r.books {
+            assert_eq!(b.completed + b.queued as u64, b.admitted);
+            assert_eq!(b.queued, 0);
+        }
+    }
+
+    #[test]
+    fn same_config_replays_are_bit_identical() {
+        let (backbone, registry) = fixture();
+        let stream = seeded_stream(13, 24, 6, &[0, 1, 2]);
+        let cfg = ReplayConfig { n_lanes: 2, ..Default::default() };
+        let a = replay(&backbone, &registry, &stream, &cfg);
+        let b = replay(&backbone, &registry, &stream, &cfg);
+        assert_parity(&a, &b);
+    }
+}

@@ -1,9 +1,12 @@
 //! Property-based testing substrate (no `proptest` crate offline),
 //! seeded multi-thread stress driver (no `loom`/`shuttle`), a counting
-//! allocator for zero-alloc proofs (no `stats_alloc`), plus
-//! compile-time marker-trait assertions (no `static_assertions` crate).
+//! allocator for zero-alloc proofs (no `stats_alloc`), a deterministic
+//! lane-interleaving replay harness for multi-lane flush parity
+//! ([`lanes`]), plus compile-time marker-trait assertions (no
+//! `static_assertions` crate).
 
 pub mod alloc_counter;
+pub mod lanes;
 pub mod prop;
 pub mod stress;
 

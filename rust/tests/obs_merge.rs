@@ -5,6 +5,8 @@
 //! rounding — and must be associative, because fleet aggregation happens
 //! in whatever order snapshots arrive.
 
+use skip2lora::obs::stages::{FlushStage, FlushStages};
+use skip2lora::obs::trace::{EventKind, FlightRecorder, RecorderSummary, SUMMARY_TAIL};
 use skip2lora::serve::metrics::{LatencyHistogram, ServeMetrics};
 use skip2lora::util::rng::Rng;
 use skip2lora::util::stats::Welford;
@@ -191,4 +193,168 @@ fn serve_metrics_merge_balances_the_books() {
     assert_eq!(a.rows_per_batch(), whole.rows_per_batch());
     assert_eq!(a.rows_per_pump(), whole.rows_per_pump());
     assert_eq!(a.finetune_cache_hit_rate(), whole.finetune_cache_hit_rate());
+}
+
+// ---------------------------------------------------------------------
+// lane-fold merge laws (DESIGN.md §13): `ObsSnapshot` for a multi-lane
+// server folds per-lane `FlushStages` and `RecorderSummary` instances
+// into one document, so both merges must be associative with the empty
+// lane as identity — lanes aggregate in whatever order the fold visits.
+// ---------------------------------------------------------------------
+
+/// Seeded synthetic stage attribution, as if a lane had timed `flushes`
+/// flushes.
+fn stages_of(seed: u64, flushes: usize) -> FlushStages {
+    let mut rng = Rng::new(seed);
+    let mut st = FlushStages::new(true);
+    for _ in 0..flushes {
+        let mut total = 0u64;
+        for stage in FlushStage::ALL {
+            let ns = rng.range(1_000, 500_000) as u64;
+            st.add_ns(stage, ns);
+            total += ns;
+        }
+        // measured flush total: stage sum plus untimed slack
+        st.finish_flush_ns(total + rng.below(10_000) as u64);
+    }
+    st
+}
+
+fn assert_stages_eq(a: &FlushStages, b: &FlushStages) {
+    assert_eq!(a.flushes(), b.flushes());
+    assert_eq!(a.total_ns(), b.total_ns());
+    for stage in FlushStage::ALL {
+        assert_eq!(a.stage_ns(stage), b.stage_ns(stage), "stage {}", stage.name());
+    }
+    assert_eq!(a.sum_stage_ns(), b.sum_stage_ns());
+}
+
+#[test]
+fn flush_stages_lane_fold_is_associative_with_empty_identity() {
+    let (a, b, c) = (stages_of(1, 5), stages_of(2, 3), stages_of(3, 8));
+    // (a ⊕ b) ⊕ c
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    // a ⊕ (b ⊕ c)
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+    assert_stages_eq(&left, &right);
+    // an idle lane is the identity on both sides
+    let empty = FlushStages::new(true);
+    let mut le = a.clone();
+    le.merge(&empty);
+    assert_stages_eq(&le, &a);
+    let mut re = FlushStages::new(true);
+    re.merge(&a);
+    assert_stages_eq(&re, &a);
+    // the fold reads as one lane that timed every flush
+    assert_eq!(left.flushes(), 16);
+    assert_eq!(
+        left.total_ns(),
+        a.total_ns() + b.total_ns() + c.total_ns(),
+        "lane totals must sum exactly"
+    );
+}
+
+/// A recorder that traced `n` flush cycles at distinct pump ticks,
+/// offset so interleaved lanes produce a genuinely shuffled merge order.
+fn lane_recorder(capacity: usize, n: usize, tick0: u64, tick_step: u64) -> FlightRecorder {
+    let mut r = FlightRecorder::new(capacity, true);
+    for i in 0..n {
+        r.set_tick(tick0 + i as u64 * tick_step);
+        r.record(EventKind::FlushStart { pending: 4 });
+        r.record(EventKind::FanoutTenant { tenant: i as u64, rows: 2 });
+        r.record(EventKind::FlushEnd { rows: 4, ns: 1_000 });
+    }
+    r
+}
+
+fn assert_summary_books(s: &RecorderSummary) {
+    // counts carry the full kind taxonomy in wire order, and the tail is
+    // a valid validator input: bounded, seqs strictly increasing,
+    // tick-ordered (the deterministic merge clock)
+    assert_eq!(s.counts.len(), 12);
+    assert!(s.tail.len() <= SUMMARY_TAIL);
+    for pair in s.tail.windows(2) {
+        assert!(pair[1].seq > pair[0].seq, "seqs must stay strictly increasing");
+        assert!(pair[1].tick >= pair[0].tick, "tail must be tick-ordered");
+    }
+    let total: u64 = s.counts.iter().map(|(_, n)| n).sum();
+    assert_eq!(total, s.recorded, "per-kind counts must sum to recorded");
+}
+
+#[test]
+fn recorder_summary_lane_merge_sums_books_and_interleaves_tails() {
+    // three lanes with interleaved tick histories, all under SUMMARY_TAIL
+    let lanes = [
+        lane_recorder(64, 5, 0, 3),
+        lane_recorder(64, 4, 1, 3),
+        lane_recorder(64, 6, 2, 3),
+    ];
+    let mut acc = lanes[0].summary();
+    for lane in &lanes[1..] {
+        acc.merge(&lane.summary());
+    }
+    assert_eq!(acc.capacity, 192);
+    assert_eq!(acc.recorded, (5 + 4 + 6) * 3);
+    assert_eq!(acc.dropped, 0);
+    assert_eq!(acc.tail.len(), 45);
+    assert_summary_books(&acc);
+    // per-kind counts sum by name across lanes
+    for (k, (name, n)) in acc.counts.iter().enumerate() {
+        let want: u64 = lanes.iter().map(|l| l.summary().counts[k].1).sum();
+        assert_eq!(*n, want, "kind {name}");
+    }
+}
+
+#[test]
+fn recorder_summary_merge_is_associative_under_the_tail_cap() {
+    let (a, b, c) = (
+        lane_recorder(64, 6, 0, 5).summary(),
+        lane_recorder(64, 5, 1, 5).summary(),
+        lane_recorder(64, 7, 2, 5).summary(),
+    );
+    // 18 cycles * 3 events = 54 < SUMMARY_TAIL, so no truncation and the
+    // merge must be exactly associative
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+    assert_eq!(left.capacity, right.capacity);
+    assert_eq!(left.recorded, right.recorded);
+    assert_eq!(left.dropped, right.dropped);
+    assert_eq!(left.counts, right.counts);
+    assert_eq!(left.tail.len(), right.tail.len());
+    for (le, re) in left.tail.iter().zip(right.tail.iter()) {
+        assert_eq!((le.seq, le.tick, le.kind), (re.seq, re.tick, re.kind));
+    }
+    assert_summary_books(&left);
+}
+
+#[test]
+fn recorder_summary_merge_truncates_to_newest_ticks_visibly() {
+    // two long-history lanes: merged tail must keep the NEWEST ticks and
+    // stay bounded, while the books still count everything ever recorded
+    let a = lane_recorder(256, 30, 0, 2).summary();
+    let b = lane_recorder(256, 30, 1, 2).summary();
+    let mut acc = a.clone();
+    acc.merge(&b);
+    assert_eq!(acc.recorded, 180);
+    assert_eq!(acc.tail.len(), SUMMARY_TAIL);
+    assert_summary_books(&acc);
+    // reference model: stable-sort the concatenated tails by tick (lane
+    // order preserved on ties) and keep the newest SUMMARY_TAIL — the
+    // merged tail must be exactly that suffix
+    let mut reference: Vec<_> = a.tail.iter().chain(b.tail.iter()).copied().collect();
+    reference.sort_by_key(|e| e.tick);
+    let suffix = &reference[reference.len() - SUMMARY_TAIL..];
+    for (got, want) in acc.tail.iter().zip(suffix) {
+        assert_eq!((got.tick, got.kind), (want.tick, want.kind));
+    }
 }

@@ -1,0 +1,387 @@
+//! Lane-parity proof suite (DESIGN.md §13): serving through N
+//! tenant-hash-routed lanes must be **byte-identical** to single-lane
+//! serving for every request — under the production pump schedule AND
+//! under forced adversarial schedules (out-of-order force-flushes,
+//! seeded pump/flush coin flips, deadline-starved partial batches).
+//!
+//! The harness is `testkit::lanes`: one seeded stream replayed through
+//! lane sets of width 1/2/4/8; logits captured as `f32::to_bits` per
+//! `(tenant, id)` immediately after every flush; books
+//! (`completed + queued == admitted`) audited per lane at every step.
+//!
+//! The final section is a `testkit::stress` scenario: concurrent
+//! publishers churn adapter versions while lane sets pump on observer
+//! threads — per-tenant `adapter_version` monotonicity must survive lane
+//! routing (a lane must never serve an older snapshot after a newer one).
+
+use std::sync::Arc;
+
+use skip2lora::model::{Mlp, MlpConfig};
+use skip2lora::nn::lora::LoraAdapter;
+use skip2lora::obs::snapshot;
+use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::lanes::LaneSet;
+use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
+use skip2lora::tensor::ops::Backend;
+use skip2lora::testkit::lanes::{
+    assert_parity, publish_adapters, replay, seeded_stream, ReplayConfig, Schedule,
+};
+use skip2lora::testkit::stress::{self, StressConfig};
+use skip2lora::util::rng::Rng;
+
+const DIMS: [usize; 4] = [10, 14, 14, 4];
+
+/// Backbone + registry with a deliberately mixed tenant population:
+/// rank-4 personalized tenants (0,1,2,5), rank-0 degenerate adapters
+/// (3,8), and unpublished tenants (7,11) served the bare backbone.
+fn fixture() -> (Arc<Mlp>, Arc<AdapterRegistry>) {
+    let mut rng = Rng::new(0x1A7E5);
+    let backbone = Arc::new(Mlp::new(
+        &mut rng,
+        MlpConfig { dims: DIMS.to_vec(), rank: 4, batch_norm: true },
+    ));
+    let registry = Arc::new(AdapterRegistry::new());
+    publish_adapters(
+        &registry,
+        &mut rng,
+        &DIMS,
+        &[(0, 4), (1, 4), (2, 4), (5, 4), (3, 0), (8, 0)],
+    );
+    (backbone, registry)
+}
+
+const TENANTS: [u64; 8] = [0, 1, 2, 3, 5, 7, 8, 11];
+
+// ---------------------------------------------------------------------
+// tentpole: N-lane == 1-lane, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn n_lane_serving_is_bit_identical_to_single_lane() {
+    let (backbone, registry) = fixture();
+    for seed in [3u64, 0xFEED, 91] {
+        let stream = seeded_stream(seed, 96, DIMS[0], &TENANTS);
+        let baseline = replay(
+            &backbone,
+            &registry,
+            &stream,
+            &ReplayConfig { n_lanes: 1, ..Default::default() },
+        );
+        for n_lanes in [2usize, 4, 8] {
+            let wide = replay(
+                &backbone,
+                &registry,
+                &stream,
+                &ReplayConfig { n_lanes, ..Default::default() },
+            );
+            assert_parity(&baseline, &wide);
+        }
+    }
+}
+
+#[test]
+fn adversarial_schedules_cannot_break_parity() {
+    let (backbone, registry) = fixture();
+    let stream = seeded_stream(0xD15C0, 80, DIMS[0], &TENANTS);
+    let baseline = replay(
+        &backbone,
+        &registry,
+        &stream,
+        &ReplayConfig { n_lanes: 1, ..Default::default() },
+    );
+    // force-flush lanes in hostile orders: reverse, one-lane-starves,
+    // and a pair of seeded coin-flip schedules
+    let schedules = [
+        Schedule::LaneOrder(vec![3, 2, 1, 0]),
+        Schedule::LaneOrder(vec![0, 0, 0, 1, 2, 3]),
+        Schedule::Seeded(0xC01),
+        Schedule::Seeded(0xC02),
+    ];
+    for schedule in schedules {
+        for n_lanes in [2usize, 4] {
+            let adversarial = replay(
+                &backbone,
+                &registry,
+                &stream,
+                &ReplayConfig {
+                    n_lanes,
+                    submit_chunk: 2,
+                    schedule: schedule.clone(),
+                    ..Default::default()
+                },
+            );
+            assert_parity(&baseline, &adversarial);
+        }
+    }
+}
+
+#[test]
+fn deadline_starved_partial_batches_keep_parity() {
+    let (backbone, registry) = fixture();
+    // capacity far above the stream rate: only the deadline can flush,
+    // so every batch is partial and lane fill levels diverge wildly
+    let stream = seeded_stream(0xAB, 30, DIMS[0], &TENANTS);
+    let cfg = |n_lanes| ReplayConfig {
+        n_lanes,
+        capacity: 64,
+        deadline_pumps: 3,
+        submit_chunk: 1,
+        ..Default::default()
+    };
+    let baseline = replay(&backbone, &registry, &stream, &cfg(1));
+    for n_lanes in [2usize, 4, 8] {
+        assert_parity(&baseline, &replay(&backbone, &registry, &stream, &cfg(n_lanes)));
+    }
+}
+
+#[test]
+fn backend_choice_is_orthogonal_to_lane_parity() {
+    let (backbone, registry) = fixture();
+    let stream = seeded_stream(0x5EED, 48, DIMS[0], &TENANTS);
+    for backend in [Backend::Scalar, Backend::Blocked, Backend::Packed] {
+        let one = replay(
+            &backbone,
+            &registry,
+            &stream,
+            &ReplayConfig { n_lanes: 1, backend, ..Default::default() },
+        );
+        let four = replay(
+            &backbone,
+            &registry,
+            &stream,
+            &ReplayConfig { n_lanes: 4, backend, ..Default::default() },
+        );
+        assert_parity(&one, &four);
+    }
+}
+
+// ---------------------------------------------------------------------
+// degenerate tenants: rank-0 adapters and unpublished tenants
+// ---------------------------------------------------------------------
+
+#[test]
+fn rank_zero_adapter_serves_exactly_the_bare_backbone() {
+    let (backbone, registry) = fixture();
+    // tenant 3 has a published rank-0 adapter; tenant 7 is unpublished.
+    // Both must produce byte-identical logits for the same input, on
+    // every lane width.
+    let mut rng = Rng::new(9);
+    let xs: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..DIMS[0]).map(|_| rng.uniform(-1.0, 1.0)).collect())
+        .collect();
+    for n_lanes in [1usize, 4] {
+        let mut lanes = LaneSet::new(n_lanes, 16, false, |_| {
+            let frozen = FrozenBackbone::new(Arc::clone(&backbone), Backend::Blocked, 4);
+            MicroBatcher::with_limits(frozen, Arc::clone(&registry), 1, 1024)
+        });
+        let mut bits_rank0 = Vec::new();
+        let mut bits_unpub = Vec::new();
+        for (tenant, bits) in [(3u64, &mut bits_rank0), (7u64, &mut bits_unpub)] {
+            for (i, x) in xs.iter().enumerate() {
+                let mut out = Vec::new();
+                lanes
+                    .try_submit(BatchRequest {
+                        tenant,
+                        id: i as u64 + 1,
+                        x: x.clone(),
+                        label: None,
+                    })
+                    .unwrap();
+                lanes.flush_lane(lanes.lane_of(tenant), &mut out);
+                assert_eq!(out.len(), 1);
+                let row = lanes.logits_for(&out[0]).expect("fresh logits");
+                bits.push(row.iter().map(|v| v.to_bits()).collect::<Vec<u32>>());
+            }
+        }
+        assert_eq!(
+            bits_rank0, bits_unpub,
+            "rank-0 adapter must serve the bare backbone ({n_lanes} lanes)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// FleetServer integration: lanes behind the full admission pipeline
+// ---------------------------------------------------------------------
+
+fn serve_cfg(lanes: usize) -> ServeConfig {
+    let mut cfg = ServeConfig {
+        batch_capacity: 8,
+        workers: 0,
+        lanes,
+        ..Default::default()
+    };
+    cfg.obs.stage_timers = true;
+    cfg
+}
+
+#[test]
+fn fleet_server_predictions_match_across_lane_widths() {
+    let (backbone, _) = fixture();
+    let mut rng = Rng::new(0xF00D);
+    let reqs: Vec<(u64, Vec<f32>)> = (0..60)
+        .map(|i| {
+            let tenant = TENANTS[rng.below(TENANTS.len())];
+            let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let _ = i;
+            (tenant, x)
+        })
+        .collect();
+    let run = |lanes: usize| {
+        let mut s = FleetServer::new((*backbone).clone(), serve_cfg(lanes));
+        for (tenant, x) in &reqs {
+            match s.handle(*tenant, Request::Predict(x.clone())) {
+                Response::Queued { .. } => {}
+                other => panic!("admission failed: {other:?}"),
+            }
+        }
+        let mut done: Vec<_> = s
+            .pump_until_drained()
+            .into_iter()
+            .map(|c| (c.tenant, c.ticket, c.prediction))
+            .collect();
+        done.sort();
+        let stats = s.stats();
+        assert_eq!(stats.queued, 0);
+        assert_eq!(stats.rows, reqs.len() as u64);
+        done
+    };
+    let baseline = run(1);
+    for lanes in [2usize, 4] {
+        assert_eq!(baseline, run(lanes), "{lanes}-lane fleet serving diverged");
+    }
+}
+
+#[test]
+fn multi_lane_obs_snapshot_self_validates() {
+    let (backbone, _) = fixture();
+    let mut s = FleetServer::new((*backbone).clone(), serve_cfg(4));
+    let mut rng = Rng::new(5);
+    for i in 0..40u64 {
+        let tenant = TENANTS[rng.below(TENANTS.len())];
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        match s.handle(tenant, Request::Predict(x)) {
+            Response::Queued { .. } => {}
+            other => panic!("req {i}: {other:?}"),
+        }
+    }
+    let _ = s.pump_until_drained();
+    let snap = s.obs_snapshot();
+    assert_eq!(snap.lanes.len(), 4, "a 4-lane server must expose 4 lane rows");
+    let json = snap.to_json();
+    snapshot::validate(&json).expect("multi-lane snapshot must self-validate");
+    // per-lane books close and roll up to the fleet counters
+    let (mut admitted, mut completed, mut rows) = (0u64, 0u64, 0u64);
+    for l in &snap.lanes {
+        assert_eq!(l.completed + l.queued as u64, l.admitted, "lane {} books", l.lane);
+        admitted += l.admitted;
+        completed += l.completed;
+        rows += l.rows;
+    }
+    assert_eq!(admitted, 40);
+    assert_eq!(completed, 40);
+    assert_eq!(rows, snap.metrics.batched_rows);
+    // single-lane server emits the legacy document: no lanes key at all
+    let s1 = FleetServer::new((*backbone).clone(), serve_cfg(1));
+    let legacy = s1.obs_snapshot();
+    assert!(legacy.lanes.is_empty());
+    assert!(!legacy.to_json().to_string().contains("\"lanes\""));
+    snapshot::validate(&legacy.to_json()).expect("legacy snapshot still validates");
+}
+
+// ---------------------------------------------------------------------
+// stress: publishers churn versions while lanes pump
+// ---------------------------------------------------------------------
+
+/// Concurrent publishers bump adapter versions for a small tenant set
+/// while observer threads each drive their OWN lane set over the shared
+/// registry. Every observer asserts per-tenant `adapter_version`
+/// monotonicity across its served responses — lane routing must never
+/// reorder a tenant's snapshot history.
+#[test]
+fn adapter_versions_stay_monotone_per_tenant_while_lanes_pump() {
+    const N_TENANTS: u64 = 6;
+    let mut rng = Rng::new(0x57_AE55);
+    let backbone = Arc::new(Mlp::new(
+        &mut rng,
+        MlpConfig { dims: DIMS.to_vec(), rank: 4, batch_norm: true },
+    ));
+    let registry = Arc::new(AdapterRegistry::with_shards(4));
+    let shared = (Arc::clone(&backbone), Arc::clone(&registry));
+    let cfg = StressConfig { workers: 3, ops: 60, observers: 2, seed: 0x1A7E };
+
+    let report = stress::run(
+        &cfg,
+        &shared,
+        // publishers: churn adapter versions for the shared tenant set
+        |mut ctx, (_, reg): &(Arc<Mlp>, Arc<AdapterRegistry>)| {
+            let mut published = 0u64;
+            for _ in 0..ctx.ops {
+                let t = ctx.rng.below(N_TENANTS as usize) as u64;
+                let ads: Vec<LoraAdapter> = DIMS[..DIMS.len() - 1]
+                    .iter()
+                    .map(|&n_in| LoraAdapter::new(&mut ctx.rng, n_in, 4, DIMS[3]))
+                    .collect();
+                reg.publish(t, ads);
+                published += 1;
+            }
+            published
+        },
+        // observers: each owns a 4-lane set and pumps while churn runs
+        |mut ctx, (bb, reg): &(Arc<Mlp>, Arc<AdapterRegistry>)| {
+            let mut lanes = LaneSet::new(4, 32, true, |_| {
+                let frozen = FrozenBackbone::new(Arc::clone(bb), Backend::Blocked, 4);
+                MicroBatcher::with_limits(frozen, Arc::clone(reg), 2, 4096)
+            });
+            let mut last_version = vec![0u64; N_TENANTS as usize];
+            let mut out = Vec::new();
+            let mut flushes = Vec::new();
+            let mut served = 0u64;
+            let mut id = 0u64;
+            while ctx.workers_live() {
+                for _ in 0..4 {
+                    id += 1;
+                    let t = ctx.rng.below(N_TENANTS as usize) as u64;
+                    let x: Vec<f32> =
+                        (0..DIMS[0]).map(|_| ctx.rng.uniform(-1.0, 1.0)).collect();
+                    let _ = lanes.try_submit(BatchRequest { tenant: t, id, x, label: None });
+                }
+                out.clear();
+                lanes.pump(&mut out, &mut flushes, None);
+                for resp in &out {
+                    let slot = &mut last_version[resp.tenant as usize];
+                    assert!(
+                        resp.adapter_version >= *slot,
+                        "tenant {}: version {} < previously served {}",
+                        resp.tenant,
+                        resp.adapter_version,
+                        *slot
+                    );
+                    *slot = resp.adapter_version;
+                    served += 1;
+                }
+                assert!(lanes.balanced(), "lane books unbalanced under churn");
+            }
+            // publishers are gone: drain the stragglers deterministically
+            // (pump would wait out the deadline; flush_all won't)
+            out.clear();
+            lanes.flush_all(&mut out);
+            for resp in &out {
+                let slot = &mut last_version[resp.tenant as usize];
+                assert!(resp.adapter_version >= *slot, "stale snapshot after drain");
+                *slot = resp.adapter_version;
+                served += 1;
+            }
+            assert_eq!(lanes.pending(), 0);
+            assert!(lanes.balanced(), "final lane books unbalanced");
+            served
+        },
+    );
+
+    assert_eq!(report.workers.iter().sum::<u64>(), 3 * 60);
+    assert!(
+        report.observers.iter().all(|&served| served > 0),
+        "every observer must have served rows during churn"
+    );
+}

@@ -20,6 +20,7 @@ use skip2lora::model::{Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::obs::trace::FlightRecorder;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
+use skip2lora::serve::lanes::LaneSet;
 use skip2lora::serve::registry::AdapterRegistry;
 use skip2lora::tensor::ops::Backend;
 use skip2lora::testkit::{alloc_counter, CountingAlloc};
@@ -133,4 +134,78 @@ fn warm_flush_performs_zero_allocations() {
         assert_eq!(resp.label, label);
         assert_eq!(resp.x.is_some(), label.is_some());
     }
+
+    // ------------------------------------------------------------------
+    // per-lane zero-alloc (DESIGN.md §13): the SAME guarantee must hold
+    // for every lane of a multi-lane set — each lane owns its own
+    // scratch, stage timers, and flight recorder, all live during the
+    // measured flush. (The parallel drive's thread spawn is the
+    // documented cost of going wide; the per-lane flush path itself
+    // must stay allocation-free, which is what `flush_lane` measures.)
+    // ------------------------------------------------------------------
+    let mut lanes = LaneSet::new(2, 256, true, |_| {
+        let fb = FrozenBackbone::new(Arc::clone(&backbone), Backend::Packed, capacity);
+        let mut b = MicroBatcher::new(fb, Arc::clone(&registry));
+        b.set_stage_timing(true);
+        b
+    });
+    // tenants 0..3 + bare 9 hash across both lanes; assert both see work
+    let mut lane_out = Vec::with_capacity(2 * capacity);
+    for round in 0..3 {
+        for req in make_requests(&mut rng) {
+            lanes.try_submit(req).expect("lane queue bound is ample");
+        }
+        if round == 0 {
+            assert!(
+                (0..2).all(|l| lanes.pending_lane(l) > 0),
+                "fixture tenants must exercise BOTH lanes"
+            );
+        }
+        lane_out.clear();
+        // warm each lane's staging, gather scratch, packed panels, ring
+        while lanes.pending() > 0 {
+            for l in 0..2 {
+                if lanes.pending_lane(l) > 0 {
+                    lanes.flush_lane(l, &mut lane_out);
+                }
+            }
+        }
+    }
+
+    for req in make_requests(&mut rng) {
+        lanes.try_submit(req).expect("under the bound");
+    }
+    lane_out.clear();
+    for lane in 0..2 {
+        let queued = lanes.pending_lane(lane);
+        assert!(queued > 0, "lane {lane} has nothing to flush");
+        let before = alloc_counter::allocations();
+        let served = lanes.flush_lane(lane, &mut lane_out);
+        let after = alloc_counter::allocations();
+        assert_eq!(served, queued);
+        assert_eq!(
+            after - before,
+            0,
+            "lane {lane} warm flush (stage timers + per-lane recorder live) \
+             allocated {} time(s)",
+            after - before
+        );
+        assert!(!lanes.recorder(lane).is_empty(), "lane {lane} recorder captured nothing");
+        assert_eq!(lanes.recorder(lane).dropped(), 0, "lane {lane} trace ring overflowed");
+        assert!(lanes.batcher(lane).stages().sum_stage_ns() > 0);
+    }
+    assert!(lanes.balanced(), "lane books must close after the measured round");
+
+    // the lane-merge fold is fixed-array arithmetic — merging warm stage
+    // snapshots must not allocate either (fleet aggregation runs hot)
+    let mut acc = lanes.batcher(0).stages().clone();
+    let before = alloc_counter::allocations();
+    acc.merge(lanes.batcher(1).stages());
+    let after = alloc_counter::allocations();
+    assert_eq!(after - before, 0, "FlushStages::merge allocated on warm snapshots");
+    assert_eq!(
+        acc.flushes(),
+        lanes.total_batches(),
+        "merged fold must count every lane flush"
+    );
 }
