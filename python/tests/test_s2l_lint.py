@@ -1,0 +1,79 @@
+"""Pytest wiring for the s2l-lint static-analysis gate (stdlib-only —
+no jax/hypothesis, so this file runs even on a bare python3).
+
+Three contracts:
+  1. `--self-test` passes: every rule R1–R7 fires on its fixture and
+     stays silent on the hardened twin.
+  2. The repo tree lints CLEAN (exit 0) — the same gate CI runs. Any
+     finding here is a regression against an invariant the crate has
+     already proven (decode hardening, zero-alloc flush, determinism,
+     panic-free request paths).
+  3. The emitted `LINT_report.json` matches schema `skip2lora/lint/v1`
+     structurally — the shape `skip2lora validate-lint` (the Rust twin)
+     enforces.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+TOOL = os.path.join(REPO, "tools", "s2l-lint")
+
+
+def _run(*args):
+    return subprocess.run(
+        [sys.executable, TOOL, *args],
+        capture_output=True, text=True, cwd=REPO,
+    )
+
+
+def test_self_test_proves_every_rule_fires():
+    proc = _run("--self-test")
+    assert proc.returncode == 0, f"self-test failed:\n{proc.stdout}\n{proc.stderr}"
+    assert "0 failure(s)" in proc.stdout
+
+
+def test_repo_tree_lints_clean(tmp_path):
+    report = tmp_path / "LINT_report.json"
+    proc = _run("--report", str(report))
+    assert proc.returncode == 0, f"tree has lint findings:\n{proc.stdout}\n{proc.stderr}"
+    doc = json.loads(report.read_text())
+    assert doc["schema"] == "skip2lora/lint/v1"
+    assert doc["summary"]["clean"] is True
+    assert doc["summary"]["findings"] == 0
+    assert doc["findings"] == []
+
+
+def test_report_schema_matches_validate_lint_twin(tmp_path):
+    report = tmp_path / "LINT_report.json"
+    proc = _run("--report", str(report))
+    assert proc.returncode == 0
+    doc = json.loads(report.read_text())
+    # the exact fields rust/src/report/lint.rs::validate requires
+    assert doc["tool"]["name"] == "s2l-lint"
+    assert isinstance(doc["files_scanned"], int) and doc["files_scanned"] > 0
+    rule_ids = [r["id"] for r in doc["rules"]]
+    assert rule_ids == ["R1", "R2", "R3", "R4", "R5", "R6", "R7"]
+    for r in doc["rules"]:
+        assert r["findings"] >= 0 and r["allowed"] >= 0
+    assert sum(r["findings"] for r in doc["rules"]) == doc["summary"]["findings"]
+    assert sum(r["allowed"] for r in doc["rules"]) == doc["summary"]["allowed"]
+    for site in doc["allowed"]:
+        assert site["rule"] in rule_ids
+        assert site["path"] and site["line"] > 0
+        # every sanctioned site must carry a non-empty reason — an
+        # annotation without a why is itself a finding-in-waiting
+        assert site["reason"].strip(), f"annotation without reason at {site}"
+
+
+def test_annotated_allow_sites_are_reported_not_hidden(tmp_path):
+    report = tmp_path / "LINT_report.json"
+    _run("--report", str(report))
+    doc = json.loads(report.read_text())
+    # the tree carries sanctioned sites (encode-side width casts, mutex
+    # poisoning panics, take()-guarded indexing) — they must surface in
+    # the `allowed` section rather than silently vanish
+    assert doc["summary"]["allowed"] > 0
+    assert len(doc["allowed"]) == doc["summary"]["allowed"]

@@ -58,12 +58,12 @@ impl TensorBundle {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());  // s2l-lint: allow(cast) reason=encode-side width; .s2l caps counts/dims at u32 and in-memory tensors never exceed that
         for (name, m) in &self.tensors {
-            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());  // s2l-lint: allow(cast) reason=encode-side width; .s2l caps counts/dims at u32 and in-memory tensors never exceed that
             buf.extend_from_slice(name.as_bytes());
-            buf.extend_from_slice(&(m.rows as u32).to_le_bytes());
-            buf.extend_from_slice(&(m.cols as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.rows as u32).to_le_bytes());  // s2l-lint: allow(cast) reason=encode-side width; .s2l caps counts/dims at u32 and in-memory tensors never exceed that
+            buf.extend_from_slice(&(m.cols as u32).to_le_bytes());  // s2l-lint: allow(cast) reason=encode-side width; .s2l caps counts/dims at u32 and in-memory tensors never exceed that
             for v in &m.data {
                 buf.extend_from_slice(&v.to_le_bytes());
             }
@@ -102,18 +102,25 @@ impl TensorBundle {
             let s = take(p, 4)?;
             Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
         };
+        // every length/count/dim field goes through try_from, never `as`:
+        // a 16-bit usize target would otherwise wrap a hostile header
+        // into a tiny in-bounds value
+        let len_at = |p: &mut usize| -> Result<usize> {
+            let v = u32_at(p)?;
+            usize::try_from(v).with_context(|| format!("length {v} does not fit in usize"))
+        };
 
         if take(&mut p, 4)? != MAGIC {
             bail!("bad magic: not a .s2l file");
         }
-        let n = u32_at(&mut p)? as usize;
+        let n = len_at(&mut p)?;
         let mut out = TensorBundle::default();
         for _ in 0..n {
-            let name_len = u32_at(&mut p)? as usize;
+            let name_len = len_at(&mut p)?;
             let name = String::from_utf8(take(&mut p, name_len)?.to_vec())
                 .context("bad tensor name")?;
-            let rows = u32_at(&mut p)? as usize;
-            let cols = u32_at(&mut p)? as usize;
+            let rows = len_at(&mut p)?;
+            let cols = len_at(&mut p)?;
             // a corrupt header can claim dims whose byte count wraps
             // usize in release builds, sailing PAST the truncation check
             // with a tiny wrapped value — do the size math checked and

@@ -86,6 +86,7 @@ impl NodeServer {
     /// network edge is live. Serializes with wire requests via the same
     /// mutex, so it cannot observe a half-applied frame.
     pub fn with_server<R>(&self, f: impl FnOnce(&mut FleetServer) -> R) -> R {
+        // s2l-lint: allow(panic) reason=poisoned mutex means a peer thread crashed; propagating is policy
         f(&mut self.server.lock().expect("node server mutex poisoned"))
     }
 
@@ -105,8 +106,8 @@ impl NodeServer {
         // the accept loop joined every connection thread before exiting,
         // so ours is the last strong reference
         match Arc::try_unwrap(server) {
-            Ok(m) => m.into_inner().expect("node server mutex poisoned"),
-            Err(_) => unreachable!("all connection threads were joined"),
+            Ok(m) => m.into_inner().expect("node server mutex poisoned"),  // s2l-lint: allow(panic) reason=poisoned mutex means a peer thread crashed; propagating is policy
+            Err(_) => unreachable!("all connection threads were joined"),  // s2l-lint: allow(panic) reason=Arc::try_unwrap cannot fail after join()
         }
     }
 }
@@ -245,9 +246,10 @@ fn serve_connection(
 /// for the duration of the call — the pump clock advances exactly once
 /// per `Pump` frame, whoever sends it.
 fn dispatch(server: &Mutex<FleetServer>, req: WireRequest) -> WireResponse {
+    // s2l-lint: allow(panic) reason=poisoned mutex means a peer thread crashed; propagating is policy
     let mut s = server.lock().expect("node server mutex poisoned");
     match req {
-        WireRequest::Hello { .. } => unreachable!("handled by serve_connection"),
+        WireRequest::Hello { .. } => unreachable!("handled by serve_connection"),  // s2l-lint: allow(panic) reason=serve_connection consumes Hello before dispatch
         WireRequest::Predict { tenant, x } => from_response(s.handle(tenant, Request::Predict(x))),
         WireRequest::Feedback { tenant, x, label } => {
             from_response(s.handle(tenant, Request::Feedback(x, label as usize)))

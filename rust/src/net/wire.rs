@@ -136,8 +136,8 @@ impl From<&Completion> for WireCompletion {
         Self {
             tenant: c.tenant,
             ticket: c.ticket,
-            prediction: c.prediction as u32,
-            label: c.label.map(|l| l as u32),
+            prediction: c.prediction as u32,  // s2l-lint: allow(cast) reason=class index, bounded by n_classes
+            label: c.label.map(|l| l as u32),  // s2l-lint: allow(cast) reason=class index, bounded by n_classes
             correct: c.correct,
             adapter_version: c.adapter_version,
         }
@@ -151,8 +151,8 @@ impl WireCompletion {
         Completion {
             tenant: self.tenant,
             ticket: self.ticket,
-            prediction: self.prediction as usize,
-            label: self.label.map(|l| l as usize),
+            prediction: self.prediction as usize,  // s2l-lint: allow(cast) reason=u32 to usize widening on our targets
+            label: self.label.map(|l| l as usize),  // s2l-lint: allow(cast) reason=u32 to usize widening on our targets
             correct: self.correct,
             adapter_version: self.adapter_version,
         }
@@ -232,7 +232,7 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
 }
 
 fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
-    put_u32(buf, b.len() as u32);
+    put_u32(buf, b.len() as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
     buf.extend_from_slice(b);
 }
 
@@ -241,20 +241,20 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
 }
 
 fn put_floats(buf: &mut Vec<u8>, xs: &[f32]) {
-    put_u32(buf, xs.len() as u32);
+    put_u32(buf, xs.len() as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
 }
 
 fn put_adapters(buf: &mut Vec<u8>, adapters: &[LoraAdapter]) {
-    put_u32(buf, adapters.len() as u32);
+    put_u32(buf, adapters.len() as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
     for a in adapters {
         // (n_in, rank, n_out) then wa row-major, wb row-major — the
         // dims pin both shapes, so the float counts are implied
-        put_u32(buf, a.wa.rows as u32);
-        put_u32(buf, a.wa.cols as u32);
-        put_u32(buf, a.wb.cols as u32);
+        put_u32(buf, a.wa.rows as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
+        put_u32(buf, a.wa.cols as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
+        put_u32(buf, a.wb.cols as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
         for v in &a.wa.data {
             buf.extend_from_slice(&v.to_le_bytes());
         }
@@ -285,7 +285,7 @@ fn put_completion(buf: &mut Vec<u8>, c: &WireCompletion) {
 }
 
 fn put_completions(buf: &mut Vec<u8>, cs: &[WireCompletion]) {
-    put_u32(buf, cs.len() as u32);
+    put_u32(buf, cs.len() as u32);  // s2l-lint: allow(cast) reason=encode side; in-process size, frame bounded by MAX_FRAME_BYTES
     for c in cs {
         put_completion(buf, c);
     }
@@ -469,25 +469,33 @@ impl<'a> Rd<'a> {
 
     fn u16(&mut self) -> Result<u16> {
         let s = self.take(2)?;
-        Ok(u16::from_le_bytes([s[0], s[1]]))
+        Ok(u16::from_le_bytes([s[0], s[1]]))  // s2l-lint: allow(index) reason=fixed offsets into a take(N)-guarded slice
     }
 
     fn u32(&mut self) -> Result<u32> {
         let s = self.take(4)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))  // s2l-lint: allow(index) reason=fixed offsets into a take(N)-guarded slice
+    }
+
+    /// A u32 length/count field decoded to usize via `try_from`, never
+    /// `as`: on a 16-bit usize target a hostile length would otherwise
+    /// wrap into a small in-bounds value and desynchronize the frame.
+    fn len(&mut self) -> Result<usize> {
+        let v = self.u32()?;
+        usize::try_from(v).with_context(|| format!("length {v} does not fit in usize"))
     }
 
     fn u64(&mut self) -> Result<u64> {
         let s = self.take(8)?;
         Ok(u64::from_le_bytes([
-            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],  // s2l-lint: allow(index) reason=take(8) guarantees length
         ]))
     }
 
     /// u32 length + raw bytes; the length is validated against the
     /// remaining frame BEFORE any allocation.
     fn bytes(&mut self) -> Result<&'a [u8]> {
-        let n = self.u32()? as usize;
+        let n = self.len()?;
         self.take(n)
     }
 
@@ -501,14 +509,14 @@ impl<'a> Rd<'a> {
     /// so a hostile count can neither wrap the math nor drive an
     /// oversized allocation.
     fn floats(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
+        let n = self.len()?;
         let nbytes = n
             .checked_mul(4)
             .with_context(|| format!("float count {n} overflows byte math"))?;
         let raw = self.take(nbytes)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))  // s2l-lint: allow(index) reason=chunks_exact(4) guarantees length
             .collect())
     }
 
@@ -519,17 +527,17 @@ impl<'a> Rd<'a> {
         let raw = self.take(nbytes)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))  // s2l-lint: allow(index) reason=chunks_exact(4) guarantees length
             .collect())
     }
 
     fn adapters(&mut self) -> Result<Vec<LoraAdapter>> {
-        let count = self.u32()? as usize;
+        let count = self.len()?;
         let mut out = Vec::new();
         for i in 0..count {
-            let n_in = self.u32()? as usize;
-            let rank = self.u32()? as usize;
-            let n_out = self.u32()? as usize;
+            let n_in = self.len()?;
+            let rank = self.len()?;
+            let n_out = self.len()?;
             let wa_len = n_in
                 .checked_mul(rank)
                 .with_context(|| format!("adapter {i}: wa dims {n_in}x{rank} overflow"))?;
@@ -573,7 +581,7 @@ impl<'a> Rd<'a> {
     }
 
     fn completions(&mut self) -> Result<Vec<WireCompletion>> {
-        let n = self.u32()? as usize;
+        let n = self.len()?;
         let mut out = Vec::new();
         for _ in 0..n {
             out.push(self.completion()?);
@@ -649,7 +657,11 @@ pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
             let code = rd.u8()?;
             let reason = match code {
                 R_QUEUE_FULL => RejectReason::QueueFull {
-                    bound: rd.u64()? as usize,
+                    bound: {
+                        let b = rd.u64()?;
+                        usize::try_from(b)
+                            .with_context(|| format!("queue bound {b} does not fit in usize"))?
+                    },
                 },
                 R_RATE_LIMITED => RejectReason::RateLimited,
                 R_MALFORMED => RejectReason::Malformed(rd.string()?),
@@ -707,8 +719,8 @@ pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
             body.len()
         );
     }
-    w.write_all(&(body.len() as u32).to_le_bytes())
-        .context("write frame length")?;
+    let len = u32::try_from(body.len()).context("frame length does not fit in u32")?;
+    w.write_all(&len.to_le_bytes()).context("write frame length")?;
     w.write_all(body).context("write frame body")?;
     w.flush().context("flush frame")?;
     Ok(())
@@ -721,7 +733,7 @@ pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
 pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
     r.read_exact(&mut len_buf).context("read frame length")?;
-    let len = u32::from_le_bytes(len_buf) as usize;
+    let len = usize::try_from(u32::from_le_bytes(len_buf)).context("frame length does not fit in usize")?;
     if len == 0 {
         bail!("zero-length wire frame");
     }

@@ -1,0 +1,221 @@
+//! Crate-side twin of the `tools/s2l-lint` report writer — the
+//! `LINT_report.json` schema (`skip2lora/lint/v1`).
+//!
+//! The lint engine itself is stdlib Python so it runs in toolchain-less
+//! containers, but the REPORT format is owned here, exactly like
+//! `BENCH_serve.json` (`bench::report`) and obs snapshots
+//! (`obs::snapshot`): CI's `static-analysis` job runs the linter, then
+//! pipes the artifact through `skip2lora validate-lint` so writer and
+//! gate cannot drift apart. Any field the Python writer adds must be
+//! added to [`validate`] in the same PR.
+
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// Schema tag checked by [`validate`]; bump on breaking layout changes.
+pub const SCHEMA: &str = "skip2lora/lint/v1";
+
+/// The rule ids the engine must report on, in order. A report missing a
+/// rule (or inventing one) is malformed — rule coverage is part of the
+/// contract, not a formatting detail.
+pub const RULE_IDS: [&str; 7] = ["R1", "R2", "R3", "R4", "R5", "R6", "R7"];
+
+fn count(j: &Json, key: &str, ctx: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("{ctx}: missing or non-integer '{key}'"))
+}
+
+fn text<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a str, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{ctx}: missing '{key}'"))
+}
+
+fn site(j: &Json, ctx: &str, payload_key: &str) -> Result<String, String> {
+    let rule = text(j, "rule", ctx)?;
+    if !RULE_IDS.contains(&rule) {
+        return Err(format!("{ctx}: unknown rule '{rule}'"));
+    }
+    let path = text(j, "path", ctx)?;
+    if path.is_empty() {
+        return Err(format!("{ctx}: empty 'path'"));
+    }
+    count(j, "line", ctx)?;
+    j.get("class")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("{ctx}: missing 'class'"))?;
+    // findings carry 'message', allowed sites carry 'reason' — and a
+    // sanctioned site without a stated reason is not sanctioned
+    let payload = text(j, payload_key, ctx)?;
+    if payload.trim().is_empty() {
+        return Err(format!("{ctx}: empty '{payload_key}'"));
+    }
+    Ok(rule.to_string())
+}
+
+/// Schema-check one lint report. Returns `(findings, allowed)` totals on
+/// success; the CALLER decides whether findings are fatal (CI runs the
+/// linter first, so validate normally sees a clean report).
+pub fn validate(j: &Json) -> Result<(usize, usize), String> {
+    match j.get("schema").and_then(Json::as_str) {
+        Some(tag) if tag == SCHEMA => {}
+        Some(tag) => return Err(format!("schema '{tag}', expected '{SCHEMA}'")),
+        None => return Err("missing 'schema' tag".to_string()),
+    }
+    let tool = j.get("tool").ok_or("missing 'tool'")?;
+    if text(tool, "name", "tool")? != "s2l-lint" {
+        return Err("tool.name must be 's2l-lint'".to_string());
+    }
+    text(tool, "version", "tool")?;
+    let files = count(j, "files_scanned", "report")?;
+    if files == 0 {
+        return Err("files_scanned is 0 — the scan found no tree".to_string());
+    }
+
+    let rules = j.get("rules").and_then(Json::as_arr).ok_or("missing 'rules' array")?;
+    if rules.len() != RULE_IDS.len() {
+        return Err(format!("{} rule entries, expected {}", rules.len(), RULE_IDS.len()));
+    }
+    let mut rule_findings = 0usize;
+    let mut rule_allowed = 0usize;
+    for (i, r) in rules.iter().enumerate() {
+        let ctx = format!("rules[{i}]");
+        let id = text(r, "id", &ctx)?;
+        if id != RULE_IDS[i] {
+            return Err(format!("{ctx}: id '{id}', expected '{}'", RULE_IDS[i]));
+        }
+        text(r, "name", &ctx)?;
+        rule_findings += count(r, "findings", &ctx)?;
+        rule_allowed += count(r, "allowed", &ctx)?;
+    }
+
+    let findings = j.get("findings").and_then(Json::as_arr).ok_or("missing 'findings' array")?;
+    for (i, f) in findings.iter().enumerate() {
+        site(f, &format!("findings[{i}]"), "message")?;
+    }
+    let allowed = j.get("allowed").and_then(Json::as_arr).ok_or("missing 'allowed' array")?;
+    for (i, a) in allowed.iter().enumerate() {
+        site(a, &format!("allowed[{i}]"), "reason")?;
+    }
+
+    let summary = j.get("summary").ok_or("missing 'summary'")?;
+    let n_findings = count(summary, "findings", "summary")?;
+    let n_allowed = count(summary, "allowed", "summary")?;
+    if n_findings != findings.len() {
+        return Err(format!(
+            "summary.findings {n_findings} != findings array len {}",
+            findings.len()
+        ));
+    }
+    if n_allowed != allowed.len() {
+        return Err(format!(
+            "summary.allowed {n_allowed} != allowed array len {}",
+            allowed.len()
+        ));
+    }
+    if n_findings != rule_findings || n_allowed != rule_allowed {
+        return Err(format!(
+            "per-rule totals ({rule_findings} findings, {rule_allowed} allowed) \
+             disagree with summary ({n_findings}, {n_allowed})"
+        ));
+    }
+    match summary.get("clean") {
+        Some(Json::Bool(c)) => {
+            if *c != (n_findings == 0) {
+                return Err(format!(
+                    "summary.clean is {c} but findings count is {n_findings}"
+                ));
+            }
+        }
+        _ => return Err("summary: missing boolean 'clean'".to_string()),
+    }
+    Ok((n_findings, n_allowed))
+}
+
+/// Read + parse + [`validate`] a lint report file.
+pub fn validate_file(path: &Path) -> Result<(usize, usize), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let parsed = json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+    validate(&parsed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn good_report() -> String {
+        let rules: Vec<String> = RULE_IDS
+            .iter()
+            .map(|id| {
+                format!(
+                    r#"{{"id": "{id}", "name": "x", "findings": 0, "allowed": {}}}"#,
+                    if *id == "R4" { 1 } else { 0 }
+                )
+            })
+            .collect();
+        format!(
+            r#"{{
+  "schema": "{SCHEMA}",
+  "tool": {{"name": "s2l-lint", "version": "1"}},
+  "files_scanned": 109,
+  "rules": [{}],
+  "findings": [],
+  "allowed": [
+    {{"rule": "R4", "path": "rust/src/net/wire.rs", "line": 12,
+      "class": "cast", "reason": "encode side"}}
+  ],
+  "summary": {{"findings": 0, "allowed": 1, "clean": true}}
+}}"#,
+            rules.join(", ")
+        )
+    }
+
+    #[test]
+    fn accepts_well_formed_report() {
+        let j = json::parse(&good_report()).unwrap();
+        assert_eq!(validate(&j), Ok((0, 1)));
+    }
+
+    #[test]
+    fn rejects_wrong_schema_and_missing_fields() {
+        let j = json::parse(&good_report().replace("lint/v1", "lint/v2")).unwrap();
+        assert!(validate(&j).unwrap_err().contains("schema"));
+        let j = json::parse(&good_report().replace(r#""files_scanned": 109,"#, "")).unwrap();
+        assert!(validate(&j).unwrap_err().contains("files_scanned"));
+    }
+
+    #[test]
+    fn rejects_inconsistent_totals() {
+        // summary says clean but per-rule totals disagree
+        let text = good_report().replace(
+            r#""id": "R4", "name": "x", "findings": 0, "allowed": 1"#,
+            r#""id": "R4", "name": "x", "findings": 0, "allowed": 2"#,
+        );
+        let j = json::parse(&text).unwrap();
+        assert!(validate(&j).unwrap_err().contains("disagree"));
+    }
+
+    #[test]
+    fn rejects_allowed_site_without_reason() {
+        let text = good_report().replace(r#""reason": "encode side""#, r#""reason": "  ""#);
+        let j = json::parse(&text).unwrap();
+        assert!(validate(&j).unwrap_err().contains("reason"));
+    }
+
+    #[test]
+    fn rejects_clean_flag_contradicting_findings() {
+        let text = good_report()
+            .replace(r#""findings": [],"#,
+                     r#""findings": [{"rule": "R7", "path": "x.rs", "line": 3,
+                        "class": "panic", "message": "unwrap on request path"}],"#)
+            .replace(r#""summary": {"findings": 0, "allowed": 1, "clean": true}"#,
+                     r#""summary": {"findings": 1, "allowed": 1, "clean": true}"#);
+        let j = json::parse(&text).unwrap();
+        // per-rule totals also disagree now, but the clean/totals check
+        // must reject regardless of which inconsistency trips first
+        assert!(validate(&j).is_err());
+    }
+}

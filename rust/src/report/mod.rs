@@ -6,6 +6,8 @@ use std::fmt::Write as _;
 
 use crate::util::json::{arr, obj, s, Json};
 
+pub mod lint;
+
 #[derive(Clone, Debug, Default)]
 pub struct Table {
     pub title: String,

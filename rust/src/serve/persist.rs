@@ -100,7 +100,7 @@ fn read_count(v: f32, what: &str) -> Result<usize> {
     if !(v.is_finite() && v.fract() == 0.0 && (0.0..=16_777_216.0).contains(&v)) {
         bail!("{what}: not a valid count ({v})");
     }
-    Ok(v as usize)
+    Ok(v as usize)  // s2l-lint: allow(cast) reason=f32 has no TryFrom; v is range-validated above
 }
 
 /// One tenant's persisted state, wrapping the immutable registry
@@ -266,7 +266,9 @@ impl RegistryCheckpoint {
         if fmt != FORMAT_VERSION {
             bail!("unsupported checkpoint format v{fmt} (this build reads v{FORMAT_VERSION})");
         }
-        let n_tenants = read_u64(&manifest[1..5], "manifest tenant count")? as usize;
+        let n_tenants_u64 = read_u64(&manifest[1..5], "manifest tenant count")?;
+        let n_tenants = usize::try_from(n_tenants_u64)
+            .with_context(|| format!("tenant count {n_tenants_u64} does not fit in usize"))?;
         let next_version = read_u64(&manifest[5..9], "manifest next_version")?;
         let n_layers = read_count(manifest[9], "manifest n_layers")?;
         let captured_at_micros = read_u64(&manifest[10..14], "manifest capture stamp")?;
@@ -307,6 +309,7 @@ impl RegistryCheckpoint {
             if *name != format!("t{tenant}.meta") {
                 bail!("non-canonical tenant tensor name '{name}' (tampered checkpoint?)");
             }
+            // s2l-lint: allow(panic) reason=key enumerated from this very bundle above
             let meta = bundle.get_vec(name).expect("key comes from this bundle");
             if meta.len() != META_LEN {
                 bail!("tenant {tenant}: corrupt meta ({} floats)", meta.len());

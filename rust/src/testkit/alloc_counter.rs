@@ -18,6 +18,10 @@
 //! relaxed-atomic; tests that need an exact delta must not run
 //! concurrently with other allocating tests in the same binary.
 
+// the one sanctioned unsafe island: GlobalAlloc is an unsafe trait, and
+// a counting allocator cannot exist without implementing it
+#![allow(unsafe_code)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -19,6 +19,14 @@ pub enum Json {
 }
 
 impl Json {
+    /// Associated-fn form of the module-level [`parse`]. Call sites in
+    /// `fleet::router` and the multinode tests use `Json::parse(..)`;
+    /// without this wrapper that path does not resolve (caught by
+    /// s2l-lint R2 — the tree had never been through a compiler).
+    pub fn parse(input: &str) -> Result<Json, String> {
+        parse(input)
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),

@@ -20,8 +20,9 @@ use skip2lora::model::{Mlp, MlpConfig};
 use skip2lora::nn::lora::LoraAdapter;
 use skip2lora::obs::snapshot;
 use skip2lora::serve::batcher::{BatchRequest, FrozenBackbone, MicroBatcher};
-use skip2lora::serve::lanes::LaneSet;
+use skip2lora::serve::lanes::{lane_of, LaneSet};
 use skip2lora::serve::registry::AdapterRegistry;
+use skip2lora::serve::server::RejectReason;
 use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
 use skip2lora::tensor::ops::Backend;
 use skip2lora::testkit::lanes::{
@@ -288,6 +289,84 @@ fn multi_lane_obs_snapshot_self_validates() {
     assert!(legacy.lanes.is_empty());
     assert!(!legacy.to_json().to_string().contains("\"lanes\""));
     snapshot::validate(&legacy.to_json()).expect("legacy snapshot still validates");
+}
+
+// ---------------------------------------------------------------------
+// drain × lanes: closing admissions while several lanes sit flush-due
+// ---------------------------------------------------------------------
+
+/// The graceful drain (§12) meeting the multi-lane flush path (§13):
+/// with ≥2 lanes holding full, flush-due batches at drain time, every
+/// queued request on every lane must come back in the drain report, every
+/// lane's books must close, admissions must reject with the typed
+/// `Draining` reason, and `resume_admissions` must restore service on
+/// the same lanes.
+#[test]
+fn drain_with_multiple_flush_due_lanes_balances_every_lane() {
+    let (backbone, _) = fixture();
+    let mut s = FleetServer::new((*backbone).clone(), serve_cfg(4));
+
+    // three tenants routed to three DISTINCT lanes, found via the same
+    // SplitMix64 routing the LaneSet uses
+    let mut tenants: Vec<u64> = Vec::new();
+    let mut lanes_hit = std::collections::HashSet::new();
+    for t in 0u64..64 {
+        if lanes_hit.insert(lane_of(t, 4)) {
+            tenants.push(t);
+        }
+        if tenants.len() == 3 {
+            break;
+        }
+    }
+    assert_eq!(tenants.len(), 3, "64 tenant ids must cover 3 of 4 lanes");
+
+    // fill each tenant's lane exactly to batch capacity (serve_cfg sets
+    // batch_capacity = 8), so all three lanes are flush-due when the
+    // drain begins
+    let mut rng = Rng::new(0xD12A);
+    let mut submitted = 0usize;
+    for &t in &tenants {
+        for _ in 0..8 {
+            let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            match s.handle(t, Request::Predict(x)) {
+                Response::Queued { .. } => submitted += 1,
+                other => panic!("admission failed: {other:?}"),
+            }
+        }
+    }
+    let before = s.obs_snapshot();
+    let loaded = before.lanes.iter().filter(|l| l.queued > 0).count();
+    assert!(loaded >= 2, "setup must leave >=2 lanes loaded, got {loaded}");
+
+    let report = s.drain();
+    assert_eq!(report.queued_at_start, submitted);
+    assert_eq!(report.completions.len(), submitted, "drain lost requests");
+
+    // every lane's books close: nothing queued, completed == admitted
+    let snap = s.obs_snapshot();
+    assert_eq!(snap.lanes.len(), 4);
+    for l in &snap.lanes {
+        assert_eq!(l.queued, 0, "lane {} still queued after drain", l.lane);
+        assert_eq!(l.completed, l.admitted, "lane {} books", l.lane);
+    }
+
+    // admissions are closed with the typed reason...
+    let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    match s.handle(tenants[0], Request::Predict(x.clone())) {
+        Response::Rejected(RejectReason::Draining) => {}
+        other => panic!("drained server must reject with Draining, got {other:?}"),
+    }
+
+    // ...and resume_admissions restores service on the same lanes
+    s.resume_admissions();
+    match s.handle(tenants[0], Request::Predict(x)) {
+        Response::Queued { .. } => {}
+        other => panic!("resumed server must admit, got {other:?}"),
+    }
+    let done = s.pump_until_drained();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].tenant, tenants[0]);
+    assert_eq!(s.stats().queued, 0);
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,63 @@
+"""s2l-lint CLI — `python3 tools/s2l-lint [--root DIR] [--report PATH]
+[--self-test]`.
+
+Exit codes: 0 clean, 1 findings (or self-test failures), 2 usage/internal
+error. Stdlib-only on purpose: this is the static-analysis gate that must
+run in containers with no Rust toolchain (see DESIGN.md §14).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from rules import LintConfig, RULES, discover, run_all  # noqa: E402
+from report import build_report, render_human, write_report  # noqa: E402
+
+
+def repo_root_from_tool():
+    # tools/s2l-lint/__main__.py -> repo root is two levels up
+    return os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="s2l-lint",
+        description="skip2lora static-analysis gate (stdlib-only, toolchain-free)")
+    ap.add_argument("--root", default=None,
+                    help="repo root to scan (default: inferred from tool location)")
+    ap.add_argument("--report", default=None,
+                    help="write LINT_report.json (schema skip2lora/lint/v1) here")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the per-rule fixture suite instead of scanning the tree")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-finding output, print only the summary line")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        import selftest
+        return selftest.run(verbose=not args.quiet)
+
+    root = os.path.abspath(args.root) if args.root else repo_root_from_tool()
+    if not os.path.isdir(root):
+        print(f"s2l-lint: root {root} is not a directory", file=sys.stderr)
+        return 2
+
+    cfg = LintConfig()
+    crate = discover(root, cfg)
+    findings, allowed = run_all(crate, cfg)
+
+    if args.report:
+        write_report(args.report,
+                     build_report(findings, allowed, len(crate.files), RULES))
+
+    text = render_human(findings, allowed, len(crate.files))
+    print(text.splitlines()[-1] if args.quiet else text)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+pub fn f(a: u32) -> u32 {
+    a.wrapping_add(1)
+}

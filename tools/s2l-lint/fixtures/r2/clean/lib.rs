@@ -1,0 +1,16 @@
+pub struct Thing;
+
+pub enum Pair {
+    Two(u32, u32),
+}
+
+pub fn add(a: u32, b: u32) -> u32 {
+    a.wrapping_add(b)
+}
+
+use crate::Thing as TheThing;
+
+pub fn call_sites() -> (Pair, u32) {
+    let _t = TheThing;
+    (Pair::Two(1, 2), crate::add(1, 2))
+}

@@ -1,0 +1,16 @@
+pub struct Thing;
+
+pub enum Pair {
+    Two(u32, u32),
+}
+
+pub fn add(a: u32, b: u32) -> u32 {
+    a.wrapping_add(b)
+}
+
+use crate::missing::Gone;
+
+pub fn call_sites() -> u32 {
+    let _p = Pair::Two(1, 2, 3);
+    crate::add(1, 2, 3)
+}

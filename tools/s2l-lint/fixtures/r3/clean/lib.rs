@@ -1,0 +1,20 @@
+pub enum Reason {
+    Full,
+    Empty,
+    Late,
+}
+
+pub fn name(r: &Reason) -> &'static str {
+    match r {
+        Reason::Full => "full",
+        Reason::Empty => "empty",
+        Reason::Late => "late",
+    }
+}
+
+pub fn terse(r: &Reason) -> &'static str {
+    match r {
+        Reason::Full => "full",
+        _ => "other",
+    }
+}

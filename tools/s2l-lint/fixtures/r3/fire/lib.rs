@@ -1,0 +1,12 @@
+pub enum Reason {
+    Full,
+    Empty,
+    Late,
+}
+
+pub fn name(r: &Reason) -> &'static str {
+    match r {
+        Reason::Full => "full",
+        Reason::Empty => "empty",
+    }
+}

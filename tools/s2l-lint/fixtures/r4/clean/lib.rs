@@ -1,0 +1,8 @@
+pub fn decode(bytes: &[u8]) -> Result<(usize, u8), String> {
+    if bytes.len() < 2 {
+        return Err("truncated".to_string());
+    }
+    let n_items = usize::from(bytes[0]);
+    let total = n_items.checked_mul(4).ok_or("overflow")?;
+    Ok((total, bytes[1]))
+}

@@ -1,0 +1,5 @@
+pub fn decode(bytes: &[u8]) -> (usize, u8) {
+    let n_items = bytes[0] as usize;
+    let total = n_items * 4;
+    (total, bytes[1])
+}

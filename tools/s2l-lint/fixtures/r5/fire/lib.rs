@@ -1,0 +1,4 @@
+pub fn hot_flush(out: &mut Vec<f32>, src: &[f32]) {
+    let staged = src.to_vec();
+    out.extend_from_slice(&staged);
+}

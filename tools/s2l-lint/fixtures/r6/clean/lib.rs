@@ -1,0 +1,3 @@
+pub fn stamp(pump_tick: u64) -> u64 {
+    pump_tick
+}

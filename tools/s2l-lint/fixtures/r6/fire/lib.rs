@@ -1,0 +1,6 @@
+use std::time::Instant;
+
+pub fn stamp() -> u128 {
+    let t = Instant::now();
+    t.elapsed().as_nanos()
+}

@@ -1,0 +1,6 @@
+pub fn reply(q: &[u64]) -> Result<u64, String> {
+    match q.first() {
+        Some(v) => Ok(*v),
+        None => Err("empty queue".to_string()),
+    }
+}

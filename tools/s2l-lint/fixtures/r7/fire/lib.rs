@@ -1,0 +1,7 @@
+pub fn reply(q: &[u64]) -> u64 {
+    let first = q.first().unwrap();
+    if *first == 0 {
+        panic!("empty ticket");
+    }
+    *first
+}

@@ -1,0 +1,235 @@
+"""Rust lexer for s2l-lint — comment/string/lifetime-aware tokenization.
+
+Stdlib-only by design: this runs in containers that have no Rust
+toolchain (and historically no third-party Python packages either), so
+the whole analysis engine leans on this one hand-rolled lexer instead of
+tree-sitter/syn. It is NOT a full Rust lexer — it is exactly the subset
+the rules need:
+
+* comments stripped (line, nested block), but `// s2l-lint:` annotation
+  comments are captured per line before stripping;
+* string/char literals tokenized opaquely (regular, raw `r#"..."#`,
+  byte, byte-raw) so rule regexes can never fire on doc text or string
+  payloads;
+* lifetimes (`'a`) distinguished from char literals (`'a'`);
+* multi-char operators kept whole where rules care (`::`, `=>`, `->`,
+  `..=`, `..`) and split where they would confuse bracket balance;
+* brace/paren/bracket balance tracked with line numbers, mismatches
+  reported as structural diagnostics (rule R1).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+IDENT_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+# loose number: covers ints, floats, hex/oct/bin, type suffixes, exponents.
+# The lookahead keeps `0..b` lexing as NUM(0) PUNCT(..) IDENT(b).
+NUM_RE = re.compile(
+    r"0[xXoObB][0-9a-fA-F_]+[a-zA-Z0-9_]*"
+    r"|[0-9][0-9_]*(?:\.(?![.a-zA-Z_])[0-9_]*)?(?:[eE][+-]?[0-9_]+)?[a-zA-Z0-9_]*"
+)
+# longest-match first. `<<`/`>>` are deliberately split into single `<`/`>`
+# tokens: the lexer has no type context, and angle balance matters more to
+# the rules (turbofish arg skipping) than shift operators do.
+PUNCTS = [
+    "..=", "...", "<<=", ">>=",
+    "::", "->", "=>", "..", "==", "!=", "<=", ">=", "&&", "||",
+    "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+    "#!",
+]
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+ANNOTATION_RE = re.compile(
+    r"//\s*s2l-lint:\s*allow\(([a-z_-]+)\)(?:\s+reason=(.*))?$"
+)
+
+
+@dataclass
+class Tok:
+    kind: str  # IDENT | NUM | STR | CHAR | LIFETIME | PUNCT
+    text: str
+    line: int  # 1-based
+    col: int   # 0-based
+
+    def __repr__(self):  # compact for debugging
+        return f"{self.kind}:{self.text}@{self.line}"
+
+
+@dataclass
+class Annotation:
+    line: int
+    cls: str       # alloc | cast | arith | index | clock | panic
+    reason: str
+    standalone: bool  # comment is the whole line -> applies to next line
+
+
+@dataclass
+class LexResult:
+    tokens: list = field(default_factory=list)
+    annotations: list = field(default_factory=list)
+    # structural diagnostics: (line, message)
+    diagnostics: list = field(default_factory=list)
+    n_lines: int = 0
+
+
+def lex(src: str) -> LexResult:
+    out = LexResult()
+    toks = out.tokens
+    i, n = 0, len(src)
+    line = 1
+    line_start = 0
+    bracket_stack = []  # (char, line)
+
+    def diag(ln, msg):
+        out.diagnostics.append((ln, msg))
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            line_start = i
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+
+        # ---- comments -------------------------------------------------
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = src.find("\n", i)
+            if j == -1:
+                j = n
+            comment = src[i:j].rstrip()
+            m = ANNOTATION_RE.search(comment)
+            if m:
+                standalone = src[line_start:i].strip() == ""
+                out.annotations.append(
+                    Annotation(line, m.group(1), (m.group(2) or "").strip(), standalone)
+                )
+            i = j
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if src[j] == "\n":
+                        line += 1
+                        line_start = j + 1
+                    j += 1
+            if depth:
+                diag(line, "unterminated block comment")
+            i = j
+            continue
+
+        # ---- raw / byte strings --------------------------------------
+        m = re.match(r"b?r(#*)\"", src[i:])
+        if m:
+            hashes = m.group(1)
+            body_at = i + m.end()
+            terminator = '"' + hashes
+            j = src.find(terminator, body_at)
+            if j == -1:
+                diag(line, "unterminated raw string")
+                i = n
+                continue
+            text = src[i : j + len(terminator)]
+            toks.append(Tok("STR", text, line, i - line_start))
+            line += text.count("\n")
+            if "\n" in text:
+                line_start = i + text.rfind("\n") + 1
+            i = j + len(terminator)
+            continue
+        if c == '"' or (c == "b" and i + 1 < n and src[i + 1] == '"'):
+            j = i + (2 if c == "b" else 1)
+            start_line = line
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == '"':
+                    j += 1
+                    break
+                if src[j] == "\n":
+                    line += 1
+                    line_start = j + 1
+                j += 1
+            else:
+                diag(start_line, "unterminated string literal")
+            toks.append(Tok("STR", src[i:j], start_line, i - line_start))
+            i = j
+            continue
+
+        # ---- char literal vs lifetime --------------------------------
+        if c == "'":
+            # 'x' or '\n' or '\u{..}' => char literal; otherwise lifetime
+            m = re.match(r"'(\\u\{[0-9a-fA-F_]+\}|\\.|[^'\\\n])'", src[i:])
+            if m:
+                toks.append(Tok("CHAR", m.group(0), line, i - line_start))
+                i += m.end()
+                continue
+            m = re.match(r"'(_|[A-Za-z][A-Za-z0-9_]*)", src[i:])
+            if m:
+                toks.append(Tok("LIFETIME", m.group(0), line, i - line_start))
+                i += m.end()
+                continue
+            diag(line, "stray single quote")
+            i += 1
+            continue
+
+        # ---- identifiers / numbers -----------------------------------
+        m = IDENT_RE.match(src, i)
+        if m and not c.isdigit():
+            # b"..." / br"..." handled above; plain ident here
+            toks.append(Tok("IDENT", m.group(0), line, i - line_start))
+            i = m.end()
+            continue
+        m = NUM_RE.match(src, i)
+        if m:
+            toks.append(Tok("NUM", m.group(0), line, i - line_start))
+            i = m.end()
+            continue
+
+        # ---- punctuation ---------------------------------------------
+        for p in PUNCTS:
+            if src.startswith(p, i):
+                toks.append(Tok("PUNCT", p, line, i - line_start))
+                i += len(p)
+                break
+        else:
+            toks.append(Tok("PUNCT", c, line, i - line_start))
+            if c in OPEN:
+                bracket_stack.append((c, line))
+            elif c in CLOSE:
+                if not bracket_stack:
+                    diag(line, f"unmatched '{c}'")
+                else:
+                    opener, oline = bracket_stack.pop()
+                    if OPEN[opener] != c:
+                        diag(line, f"'{opener}' (line {oline}) closed by '{c}'")
+            i += 1
+
+    for opener, oline in bracket_stack:
+        diag(oline, f"unclosed '{opener}'")
+    out.n_lines = line
+    return out
+
+
+def allow_map(result: LexResult) -> dict:
+    """Map line -> {cls: reason} of effective `// s2l-lint: allow(...)`
+    annotations. A standalone annotation comment applies to the NEXT
+    line; a trailing annotation applies to its own line."""
+    allows = {}
+    for a in result.annotations:
+        target = a.line + 1 if a.standalone else a.line
+        allows.setdefault(target, {})[a.cls] = a.reason
+    return allows

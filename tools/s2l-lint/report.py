@@ -1,0 +1,69 @@
+"""LINT_report.json emission — schema `skip2lora/lint/v1`.
+
+Follows the repo's writer/validator-twin discipline: this writer is
+mirrored by `skip2lora validate-lint` (rust/src/report/lint.rs), which
+owns the schema on the crate side exactly like `validate-bench` owns
+`skip2lora/bench_serve/v1` and `validate-obs` owns `skip2lora/obs/v1`.
+Any field added here must be added to the twin in the same PR.
+"""
+
+from __future__ import annotations
+
+import json
+
+SCHEMA = "skip2lora/lint/v1"
+TOOL_VERSION = "1"
+
+
+def build_report(findings, allowed, n_files, rules):
+    per_rule = []
+    for rid, name, _fn in rules:
+        per_rule.append({
+            "id": rid,
+            "name": name,
+            "findings": sum(1 for f in findings if f.rule == rid),
+            "allowed": sum(1 for f in allowed if f.rule == rid),
+        })
+    return {
+        "schema": SCHEMA,
+        "tool": {"name": "s2l-lint", "version": TOOL_VERSION},
+        "files_scanned": n_files,
+        "rules": per_rule,
+        "findings": [
+            {
+                "rule": f.rule, "path": f.path, "line": f.line,
+                "class": f.cls or "", "message": f.message,
+            }
+            for f in findings
+        ],
+        "allowed": [
+            {
+                "rule": f.rule, "path": f.path, "line": f.line,
+                "class": f.cls or "", "reason": f.reason,
+            }
+            for f in allowed
+        ],
+        "summary": {
+            "findings": len(findings),
+            "allowed": len(allowed),
+            "clean": len(findings) == 0,
+        },
+    }
+
+
+def write_report(path, report):
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=2, sort_keys=False)
+        f.write("\n")
+
+
+def render_human(findings, allowed, n_files):
+    lines = []
+    for f in findings:
+        cls = f"/{f.cls}" if f.cls else ""
+        lines.append(f"{f.path}:{f.line}: [{f.rule}{cls}] {f.message}")
+    lines.append(
+        f"s2l-lint: {n_files} files scanned, {len(findings)} finding(s), "
+        f"{len(allowed)} annotated-allowed site(s)"
+    )
+    return "\n".join(lines)

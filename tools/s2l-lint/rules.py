@@ -1,0 +1,712 @@
+"""Rule registry for s2l-lint — R1..R7 over the indexed crate.
+
+Each rule returns `Finding`s. A finding with a non-None `cls` can be
+suppressed by a `// s2l-lint: allow(<cls>) reason=…` annotation on its
+line (or a standalone annotation on the line above); suppressed findings
+are reported separately as "allowed" so sanctioned sites stay visible in
+`LINT_report.json` instead of vanishing.
+
+Rules are deliberately conservative where full type inference would be
+needed (documented per-rule in DESIGN.md §14): they encode exactly the
+manual static cross-checks PRs 1–8 were verified with, so a finding is a
+reviewable claim, not noise.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass, field
+
+from rustindex import Crate, count_call_args
+
+
+@dataclass
+class Finding:
+    rule: str      # "R1".."R7"
+    path: str
+    line: int
+    message: str
+    cls: str | None = None  # annotation class that may suppress it
+    reason: str = ""        # filled in when suppressed
+
+
+@dataclass
+class LintConfig:
+    src_prefix: str = "rust/src"
+    scope_dirs: tuple = ("rust/src", "rust/tests", "rust/benches", "examples")
+    decode_files: tuple = (
+        "rust/src/model/io.rs",
+        "rust/src/net/wire.rs",
+        "rust/src/serve/persist.rs",
+    )
+    # (file, owner-or-None, fn name): the proven-zero-alloc hot paths
+    zero_alloc_fns: tuple = (
+        ("rust/src/serve/batcher.rs", "MicroBatcher", "flush"),
+        ("rust/src/serve/batcher.rs", "MicroBatcher", "flush_traced"),
+        ("rust/src/serve/batcher.rs", "MicroBatcher", "stage_and_forward"),
+        ("rust/src/serve/batcher.rs", "FrozenBackbone", "apply_adapters_grouped"),
+        ("rust/src/serve/lanes.rs", None, "flush_lane"),
+        ("rust/src/obs/stages.rs", "FlushStages", "merge"),
+        ("rust/src/obs/trace.rs", "FlightRecorder", "record"),
+    )
+    deterministic_files: tuple = (
+        "rust/src/net/wire.rs",
+        "rust/src/testkit/lanes.rs",
+        "rust/src/testkit/stress.rs",
+        "rust/src/serve/registry.rs",
+    )
+    panic_files: tuple = (
+        "rust/src/net/wire.rs",
+        "rust/src/net/server.rs",
+        "rust/src/net/client.rs",
+        "rust/src/serve/persist.rs",
+    )
+    exhaustive_enums: tuple = (
+        "RejectReason", "Request", "Response", "EventKind", "SubmitError",
+        "WireRequest", "WireResponse",
+    )
+    check_cargo: bool = True
+
+
+# allocation constructs R5 hunts for inside registered zero-alloc fns.
+# Token sequences; "!" marks a macro bang, "::" a path separator.
+ALLOC_SEQS = [
+    ("Vec", "::", "new"), ("Vec", "::", "with_capacity"),
+    ("Box", "::", "new"), ("String", "::", "new"), ("String", "::", "from"),
+    ("vec", "!"), ("format", "!"),
+    ("to_vec",), ("to_owned",), ("to_string",), ("clone",), ("collect",),
+]
+
+CLOCK_SEQS = [
+    ("Instant", "::", "now"),
+    ("SystemTime",),
+    ("available_parallelism",),
+    ("num_cpus",),
+]
+
+# `as <T>` targets R4 treats as lossy. Widening/float targets
+# (u64/i64/u128/f32/f64) are exempt by design.
+NARROW_CAST_TARGETS = {"usize", "u8", "u16", "u32", "i8", "i16", "i32", "isize"}
+
+LEN_NAME_RE = re.compile(
+    r"^(len|n|count|rows|cols|rank|bytes|size|depth|cap|dim|width|height|"
+    r"total|limbs?|num[a-z0-9_]*|n_[a-z0-9_]*)$"
+    r"|_(len|count|size|bytes|rows|cols)$"
+    r"|^(len|size|count)_"
+)
+
+# method names legitimately called in qualified form on types we index,
+# supplied by derives/std traits rather than inherent impls.
+DERIVED_METHOD_ALLOWLIST = {
+    "clone", "fmt", "default", "from", "into", "try_from", "try_into",
+    "eq", "ne", "cmp", "partial_cmp", "hash", "drop", "to_owned",
+    "from_str", "as_ref", "as_mut", "borrow", "deref",
+}
+
+
+def _seq_at(toks, i, seq):
+    """Do tokens starting at i spell out `seq` (texts)?"""
+    if i + len(seq) > len(toks):
+        return False
+    return all(toks[i + k].text == s for k, s in enumerate(seq))
+
+
+def _fn_at(fi, line):
+    best = None
+    for fn in fi.fns:
+        a, b = fn.body_span
+        if a <= line <= b and (best is None or a > best.body_span[0]):
+            best = fn
+    return best
+
+
+def _fn_has_bound_guard(fi, fn):
+    """Heuristic: the fn body contains a comparison against a length-like
+    value — the `if n > bytes.len() - *p { return Err(...) }` discipline.
+    Used to exempt guarded slice indexing / index arithmetic."""
+    a, b = fn.body_toks
+    toks = fi.toks
+    for i in range(a, b):
+        t = toks[i]
+        if t.kind == "PUNCT" and t.text in ("<", ">", "<=", ">=", "==", "!="):
+            lo, hi = max(a, i - 6), min(b, i + 7)
+            for j in range(lo, hi):
+                if toks[j].kind == "IDENT" and LEN_NAME_RE.match(toks[j].text):
+                    return True
+    return False
+
+
+def _in_scope(cfg, rel):
+    return any(rel == d or rel.startswith(d + "/") for d in cfg.scope_dirs)
+
+
+# ---------------------------------------------------------------------------
+# R1 — structural integrity
+
+
+def rule_r1(crate: Crate, cfg: LintConfig):
+    out = []
+    for rel, fi in sorted(crate.files.items()):
+        for line, msg in fi.diagnostics:
+            out.append(Finding("R1", rel, line, f"structural: {msg}"))
+        # mod declaration <-> file existence (src tree only; inline mods
+        # and #[cfg(test)] mod tests carry their own bodies)
+        if rel.startswith(cfg.src_prefix):
+            fname = os.path.basename(rel)
+            child_dir = os.path.dirname(rel) if fname in ("lib.rs", "mod.rs", "main.rs") else rel[:-3]
+            for name, _pub, inline, line in fi.mods:
+                if inline:
+                    continue
+                cands = [f"{child_dir}/{name}.rs".lstrip("/"),
+                         f"{child_dir}/{name}/mod.rs".lstrip("/")]
+                if not any(os.path.isfile(os.path.join(crate.root, c)) for c in cands):
+                    out.append(Finding(
+                        "R1", rel, line,
+                        f"`mod {name};` has no backing file ({cands[0]} or .../mod.rs)"))
+    if cfg.check_cargo:
+        out.extend(_check_cargo(crate))
+    return out
+
+
+_CARGO_PATH_RE = re.compile(r'^\s*path\s*=\s*"([^"]+)"', re.M)
+_CARGO_MEMBERS_RE = re.compile(r"members\s*=\s*\[([^\]]*)\]", re.S)
+
+
+def _check_cargo(crate: Crate):
+    out = []
+    root_manifest = os.path.join(crate.root, "Cargo.toml")
+    if os.path.isfile(root_manifest):
+        with open(root_manifest, encoding="utf-8") as f:
+            text = f.read()
+        m = _CARGO_MEMBERS_RE.search(text)
+        if m:
+            for mm in re.finditer(r'"([^"]+)"', m.group(1)):
+                member = mm.group(1)
+                if not os.path.isfile(os.path.join(crate.root, member, "Cargo.toml")):
+                    out.append(Finding(
+                        "R1", "Cargo.toml", text[: m.start()].count("\n") + 1,
+                        f"workspace member `{member}` has no Cargo.toml"))
+    crate_manifest = os.path.join(crate.root, "rust", "Cargo.toml")
+    if os.path.isfile(crate_manifest):
+        with open(crate_manifest, encoding="utf-8") as f:
+            text = f.read()
+        for m in _CARGO_PATH_RE.finditer(text):
+            p = m.group(1)
+            if not os.path.isfile(os.path.join(crate.root, "rust", p)):
+                out.append(Finding(
+                    "R1", "rust/Cargo.toml", text[: m.start()].count("\n") + 1,
+                    f"manifest path `{p}` does not exist"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R2 — symbol resolution (use-imports + qualified call arity)
+
+
+def _crate_symbol_tables(crate: Crate, cfg: LintConfig):
+    enums = {}       # name -> EnumDef (src tree)
+    methods = {}     # (owner, name) -> FnDef
+    for rel, fi in crate.files.items():
+        if not rel.startswith(cfg.src_prefix):
+            continue
+        for name, ed in fi.enums.items():
+            enums.setdefault(name, ed)
+        for fn in fi.fns:
+            if fn.owner:
+                methods.setdefault((fn.owner, fn.name), fn)
+    return enums, methods
+
+
+def rule_r2(crate: Crate, cfg: LintConfig):
+    out = []
+    if () not in crate.modules:
+        return out  # no crate root (fixture without lib.rs): nothing to resolve
+    enums, methods = _crate_symbol_tables(crate, cfg)
+
+    for rel, fi in sorted(crate.files.items()):
+        in_src = rel.startswith(cfg.src_prefix)
+        frm = crate.module_of_file(rel) if in_src else ()
+        if frm is None:
+            frm = ()
+        # (a) use-tree resolution for crate-internal imports
+        for tree in fi.uses:
+            for segs, leaf in tree.leaves:
+                if not segs:
+                    continue
+                head = segs[0]
+                if head == "skip2lora":
+                    segs = ["crate"] + segs[1:]
+                elif head not in ("crate",) and not (in_src and head in ("self", "super")):
+                    continue
+                kind = crate.resolve_name(frm, segs, leaf)
+                if kind is None:
+                    out.append(Finding(
+                        "R2", rel, tree.line,
+                        f"unresolved import `{'::'.join(segs + [leaf] if leaf != '*' else segs + ['*'])}`"))
+        # (b) qualified call sites: Path::leaf( ... )
+        out.extend(_qualified_calls(crate, cfg, rel, fi, frm, enums, methods))
+    return out
+
+
+def _qualified_calls(crate, cfg, rel, fi, frm, enums, methods):
+    out = []
+    toks = fi.toks
+    i = 0
+    n = len(toks)
+    while i < n:
+        t = toks[i]
+        if t.kind != "IDENT" or (i > 0 and toks[i - 1].kind == "PUNCT" and toks[i - 1].text in (".", "::")):
+            i += 1
+            continue
+        # collect a path a::b::c
+        segs = [t.text]
+        j = i + 1
+        while j + 1 < n and toks[j].kind == "PUNCT" and toks[j].text == "::":
+            if toks[j + 1].kind == "PUNCT" and toks[j + 1].text == "<":
+                # turbofish: skip the generic run, path continues after
+                k = j + 1
+                depth = 0
+                while k < n:
+                    if toks[k].text == "<":
+                        depth += 1
+                    elif toks[k].text == ">":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    k += 1
+                j = k + 1
+                continue
+            if toks[j + 1].kind != "IDENT":
+                break
+            segs.append(toks[j + 1].text)
+            j += 2
+        if len(segs) < 2 or not (j < n and toks[j].kind == "PUNCT" and toks[j].text == "("):
+            i = j if j > i else i + 1
+            continue
+        leaf = segs[-1]
+        base = segs[:-1]
+        argc, _end = count_call_args(toks, j)
+        line = t.line
+        checked = False
+        if base[0] in ("crate", "skip2lora") or (rel.startswith(cfg.src_prefix) and base[0] in ("self", "super")):
+            path = ["crate"] + base[1:] if base[0] == "skip2lora" else base
+            kind = crate.resolve_name(frm, path, leaf)
+            if kind is None:
+                out.append(Finding(
+                    "R2", rel, line, f"unresolved path `{'::'.join(segs)}`"))
+                checked = True
+            elif kind == "variant":
+                checked = True
+                ed = enums.get(base[-1])
+                if ed:
+                    _check_variant_arity(out, rel, line, ed, leaf, argc)
+            elif kind == "fn":
+                checked = True
+                m = crate.resolve_module(frm, path)
+                if m is not None and m in crate.modules:
+                    deffile = crate.files[crate.modules[m]]
+                    for fnd in deffile.fns:
+                        if fnd.name == leaf and fnd.owner is None:
+                            if argc >= 0 and argc != fnd.n_params:
+                                out.append(Finding(
+                                    "R2", rel, line,
+                                    f"`{'::'.join(segs)}` takes {fnd.n_params} "
+                                    f"args, called with {argc}"))
+                            break
+        if not checked and len(base) == 1 and base[0] in enums:
+            ed = enums[base[0]]
+            if leaf in ed.variants:
+                _check_variant_arity(out, rel, line, ed, leaf, argc)
+            elif (base[0], leaf) in methods:
+                fn = methods[(base[0], leaf)]
+                expected = fn.n_params + (1 if fn.has_self else 0)
+                if argc >= 0 and argc != expected:
+                    out.append(Finding(
+                        "R2", rel, line,
+                        f"`{base[0]}::{leaf}` takes {expected} args, called with {argc}"))
+            elif leaf not in DERIVED_METHOD_ALLOWLIST:
+                out.append(Finding(
+                    "R2", rel, line,
+                    f"`{base[0]}::{leaf}` is neither a variant nor an indexed method of `{base[0]}`"))
+        elif not checked and len(base) == 1 and (base[0], leaf) in methods:
+            fn = methods[(base[0], leaf)]
+            expected = fn.n_params + (1 if fn.has_self else 0)
+            if argc >= 0 and argc != expected:
+                out.append(Finding(
+                    "R2", rel, line,
+                    f"`{base[0]}::{leaf}` takes {expected} args, called with {argc}"))
+        i = j
+    return out
+
+
+def _check_variant_arity(out, rel, line, ed, leaf, argc):
+    kind, arity = ed.variants[leaf]
+    if kind == "tuple" and argc >= 0 and argc != arity:
+        out.append(Finding(
+            "R2", rel, line,
+            f"variant `{ed.name}::{leaf}` has {arity} fields, constructed with {argc}"))
+
+
+# ---------------------------------------------------------------------------
+# R3 — enum-exhaustiveness sweep
+
+
+def rule_r3(crate: Crate, cfg: LintConfig):
+    out = []
+    enums, _ = _crate_symbol_tables(crate, cfg)
+    registry = {name: enums[name] for name in cfg.exhaustive_enums if name in enums}
+    # fixture mode: no src tree — register every enum defined anywhere
+    if not registry:
+        for fi in crate.files.values():
+            for name, ed in fi.enums.items():
+                if name in cfg.exhaustive_enums:
+                    registry.setdefault(name, ed)
+    for rel, fi in sorted(crate.files.items()):
+        for site in fi.matches:
+            for ename, ed in registry.items():
+                hit = _match_targets_enum(site, ename, ed)
+                if not hit:
+                    continue
+                covered, has_wildcard = _coverage(site, ename, ed)
+                if has_wildcard:
+                    continue
+                missing = [v for v in ed.variants if v not in covered]
+                if missing:
+                    out.append(Finding(
+                        "R3", rel, site.line,
+                        f"match on `{ename}` misses variant(s) "
+                        f"{', '.join(missing)} and has no wildcard arm"))
+    return out
+
+
+def _alternatives(arm):
+    """Split one arm pattern on top-level `|` (or-patterns)."""
+    alts, cur, depth = [], [], 0
+    for t in arm:
+        if t.kind == "PUNCT":
+            if t.text in ("(", "[", "{"):
+                depth += 1
+            elif t.text in (")", "]", "}"):
+                depth -= 1
+            elif t.text == "|" and depth == 0:
+                if cur:
+                    alts.append(cur)
+                cur = []
+                continue
+        cur.append(t)
+    if cur:
+        alts.append(cur)
+    return alts
+
+
+def _alt_head(alt):
+    """Leading tokens of an alternative with `&`/`ref`/`mut` stripped —
+    the position where a direct `E::V` pattern must sit."""
+    k = 0
+    while k < len(alt) and (
+        (alt[k].kind == "PUNCT" and alt[k].text == "&")
+        or (alt[k].kind == "IDENT" and alt[k].text in ("ref", "mut", "box"))
+    ):
+        k += 1
+    return alt[k:]
+
+
+def _match_targets_enum(site, ename, ed):
+    """The match is OVER enum E only if some alternative's pattern BEGINS
+    with `E::Variant` — `Ok(E::V)` nested inside another enum's payload
+    does not make the site exhaustiveness-checked for E."""
+    for arm in site.arms:
+        for alt in _alternatives(arm):
+            h = _alt_head(alt)
+            if (len(h) >= 3 and h[0].kind == "IDENT" and h[0].text == ename
+                    and h[1].text == "::" and h[2].kind == "IDENT"
+                    and h[2].text in ed.variants):
+                return True
+    return False
+
+
+def _coverage(site, ename, ed):
+    covered = set()
+    has_wildcard = False
+    for arm in site.arms:
+        for alt in _alternatives(arm):
+            h = _alt_head(alt)
+            if len(h) == 1 and h[0].kind == "PUNCT" and h[0].text == "_":
+                has_wildcard = True
+                continue
+            if (len(h) == 1 and h[0].kind == "IDENT"
+                    and h[0].text not in ed.variants):
+                has_wildcard = True  # binding pattern `other =>`
+                continue
+            if (len(h) >= 3 and h[0].kind == "IDENT" and h[0].text == ename
+                    and h[1].text == "::" and h[2].kind == "IDENT"
+                    and h[2].text in ed.variants):
+                covered.add(h[2].text)
+    return covered, has_wildcard
+
+
+# ---------------------------------------------------------------------------
+# R4 — decode hardening
+
+
+def rule_r4(crate: Crate, cfg: LintConfig):
+    out = []
+    for rel in cfg.decode_files:
+        fi = crate.files.get(rel)
+        if fi is None:
+            continue
+        out.extend(_scan_hardening(fi, rule="R4", check_casts=True,
+                                   check_arith=True, check_index=True))
+    return out
+
+
+def _line_has_checked_math(toks, i):
+    line = toks[i].line
+    lo = i
+    while lo > 0 and toks[lo - 1].line == line:
+        lo -= 1
+    hi = i
+    while hi + 1 < len(toks) and toks[hi + 1].line == line:
+        hi += 1
+    for k in range(lo, hi + 1):
+        t = toks[k]
+        if t.kind == "IDENT" and (
+            t.text.startswith("checked_") or t.text.startswith("saturating_")
+            or t.text.startswith("wrapping_")
+        ):
+            return True
+    return False
+
+
+def _scan_hardening(fi, rule, check_casts, check_arith, check_index):
+    out = []
+    toks = fi.toks
+    n = len(toks)
+    in_use_until = -1  # token index; skip `as` renames inside use items
+    for i, t in enumerate(toks):
+        if fi.in_test_span(t.line):
+            continue
+        if t.kind == "IDENT" and t.text == "use" and i >= in_use_until:
+            j = i
+            while j < n and not (toks[j].kind == "PUNCT" and toks[j].text == ";"):
+                j += 1
+            in_use_until = j
+            continue
+        if i < in_use_until:
+            continue
+
+        if check_casts and t.kind == "IDENT" and t.text == "as" and i + 1 < n:
+            tgt = toks[i + 1]
+            if tgt.kind == "IDENT" and tgt.text in NARROW_CAST_TARGETS and i > 0:
+                prev = toks[i - 1]
+                if prev.kind in ("IDENT", "NUM") or (
+                    prev.kind == "PUNCT" and prev.text in (")", "]", "?")
+                ):
+                    out.append(Finding(
+                        rule, fi.path, t.line,
+                        f"lossy `as {tgt.text}` cast on decode path — use "
+                        f"`{tgt.text}::try_from(..)` with a typed error",
+                        cls="cast"))
+
+        if check_arith and t.kind == "PUNCT" and t.text in ("*", "+") and 0 < i < n - 1:
+            prev, nxt = toks[i - 1], toks[i + 1]
+            binary = prev.kind in ("IDENT", "NUM") or (
+                prev.kind == "PUNCT" and prev.text in (")", "]"))
+            if binary:
+                names = [x.text for x in toks[max(0, i - 3): i + 4] if x.kind == "IDENT"]
+                if any(LEN_NAME_RE.match(x) for x in names):
+                    if not _line_has_checked_math(toks, i):
+                        fn = _fn_at(fi, t.line)
+                        if not (fn and _fn_has_bound_guard(fi, fn)):
+                            out.append(Finding(
+                                rule, fi.path, t.line,
+                                f"unchecked `{t.text}` on length-typed value — "
+                                f"use checked_{'mul' if t.text == '*' else 'add'}",
+                                cls="arith"))
+
+        if check_index and t.kind == "PUNCT" and t.text == "[" and i > 0:
+            prev = toks[i - 1]
+            if prev.kind == "IDENT" or (prev.kind == "PUNCT" and prev.text in (")", "]")):
+                if prev.kind == "IDENT" and prev.text in ("impl", "dyn", "mut", "in"):
+                    continue
+                fn = _fn_at(fi, t.line)
+                if fn and _fn_has_bound_guard(fi, fn):
+                    continue
+                out.append(Finding(
+                    rule, fi.path, t.line,
+                    "slice indexing without a bound guard in the enclosing fn "
+                    "— use .get()/guarded take()",
+                    cls="index"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R5 — zero-alloc discipline
+
+
+def rule_r5(crate: Crate, cfg: LintConfig):
+    out = []
+    regs = list(cfg.zero_alloc_fns)
+    # fixture mode convention: any fn named hot_* is a registered hot path
+    for rel, fi in crate.files.items():
+        for fn in fi.fns:
+            if fn.name.startswith("hot_"):
+                regs.append((rel, fn.owner, fn.name))
+    seen = set()
+    for rel, owner, name in regs:
+        key = (rel, owner, name)
+        if key in seen:
+            continue
+        seen.add(key)
+        fi = crate.files.get(rel)
+        if fi is None:
+            out.append(Finding(
+                "R5", rel, 0,
+                f"registered zero-alloc fn `{name}` — file not found"))
+            continue
+        fns = [f for f in fi.fns if f.name == name and (owner is None or f.owner == owner)]
+        if not fns:
+            out.append(Finding(
+                "R5", rel, 0,
+                f"registered zero-alloc fn `{(owner + '::') if owner else ''}{name}` "
+                f"not found — update the s2l-lint registry if it moved"))
+            continue
+        for fn in fns:
+            a, b = fn.body_toks
+            toks = fi.toks
+            i = a
+            while i < b:
+                for seq in ALLOC_SEQS:
+                    if _seq_at(toks, i, seq):
+                        # method-position constructs must be method calls
+                        if len(seq) == 1 and not (
+                            i > 0 and toks[i - 1].kind == "PUNCT" and toks[i - 1].text == "."
+                        ):
+                            continue
+                        out.append(Finding(
+                            "R5", fi.path, toks[i].line,
+                            f"allocation construct `{''.join(seq)}` inside "
+                            f"proven-zero-alloc fn `{fn.name}`",
+                            cls="alloc"))
+                        break
+                i += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R6 — determinism
+
+
+def rule_r6(crate: Crate, cfg: LintConfig):
+    out = []
+    for rel in cfg.deterministic_files:
+        fi = crate.files.get(rel)
+        if fi is None:
+            continue
+        toks = fi.toks
+        for i, t in enumerate(toks):
+            if fi.in_test_span(t.line) or t.kind != "IDENT":
+                continue
+            for seq in CLOCK_SEQS:
+                if _seq_at(toks, i, seq):
+                    out.append(Finding(
+                        "R6", rel, t.line,
+                        f"nondeterministic source `{''.join(seq)}` in a "
+                        f"deterministic module — route through the pump clock",
+                        cls="clock"))
+                    break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R7 — panic paths
+
+
+def rule_r7(crate: Crate, cfg: LintConfig):
+    out = []
+    for rel in cfg.panic_files:
+        fi = crate.files.get(rel)
+        if fi is None:
+            continue
+        toks = fi.toks
+        n = len(toks)
+        for i, t in enumerate(toks):
+            if fi.in_test_span(t.line):
+                continue
+            if t.kind == "IDENT" and t.text in ("unwrap", "expect"):
+                if (i > 0 and toks[i - 1].kind == "PUNCT" and toks[i - 1].text == "."
+                        and i + 1 < n and toks[i + 1].text == "("):
+                    out.append(Finding(
+                        "R7", rel, t.line,
+                        f"`.{t.text}()` on a serve/net request path — return a "
+                        f"typed error instead",
+                        cls="panic"))
+            elif t.kind == "IDENT" and t.text in ("panic", "unreachable", "todo", "unimplemented"):
+                if i + 1 < n and toks[i + 1].kind == "PUNCT" and toks[i + 1].text == "!":
+                    out.append(Finding(
+                        "R7", rel, t.line,
+                        f"`{t.text}!` on a serve/net request path",
+                        cls="panic"))
+        # direct indexing in panic-scoped files that are not decode files
+        # (decode files get the same check from R4)
+        if rel not in cfg.decode_files:
+            for f in _scan_hardening(fi, rule="R7", check_casts=False,
+                                     check_arith=False, check_index=True):
+                out.append(f)
+    return out
+
+
+RULES = [
+    ("R1", "structural", rule_r1),
+    ("R2", "symbols", rule_r2),
+    ("R3", "enum-exhaustiveness", rule_r3),
+    ("R4", "decode-hardening", rule_r4),
+    ("R5", "zero-alloc", rule_r5),
+    ("R6", "determinism", rule_r6),
+    ("R7", "panic-path", rule_r7),
+]
+
+
+def run_all(crate: Crate, cfg: LintConfig):
+    """Run every rule; split raw findings into (findings, allowed) using
+    each file's `// s2l-lint: allow(...)` annotations."""
+    findings, allowed = [], []
+    seen = set()
+    for _rid, _name, fn in RULES:
+        for f in fn(crate, cfg):
+            key = (f.rule, f.path, f.line, f.cls, f.message)
+            if key in seen:
+                continue
+            seen.add(key)
+            fi = crate.files.get(f.path)
+            if f.cls and fi is not None:
+                reason = fi.allows.get(f.line, {}).get(f.cls)
+                if reason is not None:
+                    f.reason = reason or "(no reason given)"
+                    allowed.append(f)
+                    continue
+            findings.append(f)
+    key = lambda f: (f.path, f.line, f.rule)
+    findings.sort(key=key)
+    allowed.sort(key=key)
+    return findings, allowed
+
+
+def discover(root: str, cfg: LintConfig):
+    """Build the Crate: every .rs file under the scope dirs."""
+    crate = Crate(root)
+    rels = []
+    for d in cfg.scope_dirs:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    full = os.path.join(dirpath, fn)
+                    rels.append(os.path.relpath(full, root).replace(os.sep, "/"))
+    for rel in sorted(rels):
+        crate.add_file(rel)
+    crate.build_module_tree(cfg.src_prefix)
+    return crate

@@ -1,0 +1,832 @@
+"""Crate indexer for s2l-lint — items, modules, impls, matches, imports.
+
+Builds, from lexed token streams only, the structural model the rules
+query:
+
+* per-file: `mod` declarations, item definitions (fn/struct/enum/const/
+  static/trait/type/macro_rules), impl blocks with their methods, enum
+  variants with payload arity, `use` trees, `match` sites with parsed
+  arm patterns, `#[cfg(test)] mod` line spans, fn body line spans;
+* crate-wide: a module tree rooted at `lib.rs` with per-module
+  namespaces (including `pub use` re-exports), and a resolver for
+  `crate::a::b::C` paths.
+
+Token-stream parsing keeps this honest in a toolchain-less container:
+everything here is what a reviewer doing the PR 3–8 "manual static
+cross-check" did by grep, made systematic.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+from lexer import lex, allow_map, OPEN, CLOSE
+
+
+@dataclass
+class FnDef:
+    name: str
+    owner: str | None      # impl type name, None for free fns
+    trait_impl: str | None  # trait name when defined in `impl Trait for T`
+    is_pub: bool
+    has_self: bool
+    n_params: int          # excluding self
+    line: int
+    body_span: tuple       # (first_line, last_line) of the body incl braces
+    body_toks: tuple       # (start_index, end_index) into file tokens
+
+
+@dataclass
+class EnumDef:
+    name: str
+    is_pub: bool
+    line: int
+    # variant name -> ("unit" | "tuple" | "struct", payload_arity)
+    variants: dict = field(default_factory=dict)
+
+
+@dataclass
+class MatchSite:
+    line: int
+    # list of arm patterns, each a list of Tok
+    arms: list = field(default_factory=list)
+
+
+@dataclass
+class UseTree:
+    line: int
+    # list of (segments, leaf_alias) — one entry per imported leaf;
+    # a glob import has leaf "*"
+    leaves: list = field(default_factory=list)
+
+
+@dataclass
+class FileInfo:
+    path: str              # repo-relative, "/" separators
+    toks: list = field(default_factory=list)
+    allows: dict = field(default_factory=dict)
+    diagnostics: list = field(default_factory=list)
+    n_lines: int = 0
+    mods: list = field(default_factory=list)        # (name, is_pub, inline, line)
+    fns: list = field(default_factory=list)         # [FnDef]
+    enums: dict = field(default_factory=dict)       # name -> EnumDef
+    structs: dict = field(default_factory=dict)     # name -> (is_pub, line)
+    consts: dict = field(default_factory=dict)
+    traits: dict = field(default_factory=dict)
+    types: dict = field(default_factory=dict)
+    macros: dict = field(default_factory=dict)      # macro_rules! names
+    uses: list = field(default_factory=list)        # [UseTree]
+    reexports: list = field(default_factory=list)   # pub use: [(segments, leaf, line)]
+    matches: list = field(default_factory=list)     # [MatchSite]
+    test_spans: list = field(default_factory=list)  # [(first_line, last_line)]
+
+    def in_test_span(self, line: int) -> bool:
+        return any(a <= line <= b for a, b in self.test_spans)
+
+
+KEYWORDS_NOT_ITEMS = {"if", "while", "for", "loop", "match", "return", "let"}
+
+
+def _find_matching(toks, i, open_ch):
+    """Index of the token matching the opener at toks[i]."""
+    close_ch = OPEN[open_ch]
+    depth = 0
+    j = i
+    while j < len(toks):
+        t = toks[j]
+        if t.kind == "PUNCT":
+            if t.text == open_ch:
+                depth += 1
+            elif t.text == close_ch:
+                depth -= 1
+                if depth == 0:
+                    return j
+        j += 1
+    return len(toks) - 1
+
+
+def _skip_angles(toks, i):
+    """toks[i] is '<': skip a balanced generic-argument run."""
+    depth = 0
+    j = i
+    while j < len(toks):
+        t = toks[j]
+        if t.kind == "PUNCT":
+            if t.text == "<":
+                depth += 1
+            elif t.text == ">":
+                depth -= 1
+                if depth == 0:
+                    return j + 1
+            elif t.text in ("(", "{", ";"):
+                # generics never contain these at depth 0 in type position;
+                # bail out rather than scan the whole file on a misparse
+                return j
+        j += 1
+    return j
+
+
+def count_call_args(toks, open_idx):
+    """toks[open_idx] is '(' of a call — count top-level arguments.
+
+    Skips closure parameter pipes (`|a, b|`) and turbofish generic runs
+    so their commas don't inflate the count. Returns (argc, close_idx),
+    argc = -1 when the scan hit something it cannot count safely."""
+    j = open_idx + 1
+    depth = 0
+    argc = 0
+    saw_tok = False
+    end = _find_matching(toks, open_idx, "(")
+    while j < end:
+        t = toks[j]
+        if t.kind == "PUNCT" and t.text in OPEN:
+            j = _find_matching(toks, j, t.text) + 1
+            saw_tok = True
+            continue
+        if t.kind == "PUNCT" and t.text == "|":
+            # closure params: skip to the matching pipe on this level
+            k = j + 1
+            while k < end:
+                tk = toks[k]
+                if tk.kind == "PUNCT" and tk.text == "|":
+                    break
+                if tk.kind == "PUNCT" and tk.text in OPEN:
+                    k = _find_matching(toks, k, tk.text)
+                k += 1
+            j = k + 1
+            saw_tok = True
+            continue
+        if t.kind == "PUNCT" and t.text == "<":
+            j = _skip_angles(toks, j)
+            saw_tok = True
+            continue
+        if t.kind == "PUNCT" and t.text == ",":
+            argc += 1
+            saw_tok = True
+            j += 1
+            continue
+        saw_tok = True
+        j += 1
+    if not saw_tok:
+        return 0, end
+    # trailing comma doesn't add an argument
+    last = toks[end - 1]
+    if last.kind == "PUNCT" and last.text == ",":
+        return argc, end
+    return argc + 1, end
+
+
+def _count_fn_params(toks, open_idx):
+    """Parameter count for the fn signature parens at toks[open_idx].
+    Returns (has_self, n_params_excluding_self)."""
+    end = _find_matching(toks, open_idx, "(")
+    j = open_idx + 1
+    has_self = False
+    # detect a leading self param: `self` | `&self` | `&mut self` | `&'a self`
+    k = j
+    while k < end and (
+        (toks[k].kind == "PUNCT" and toks[k].text in ("&", ":")) or
+        toks[k].kind == "LIFETIME" or
+        (toks[k].kind == "IDENT" and toks[k].text == "mut")
+    ):
+        k += 1
+    if k < end and toks[k].kind == "IDENT" and toks[k].text == "self":
+        has_self = True
+        # move past `self` and its trailing comma if any
+        k += 1
+        if k < end and toks[k].kind == "PUNCT" and toks[k].text == ",":
+            k += 1
+        j = k
+    # count top-level commas among the remaining params
+    n = 0
+    saw = False
+    while j < end:
+        t = toks[j]
+        if t.kind == "PUNCT" and t.text in OPEN:
+            j = _find_matching(toks, j, t.text) + 1
+            saw = True
+            continue
+        if t.kind == "PUNCT" and t.text == "<":
+            j = _skip_angles(toks, j)
+            saw = True
+            continue
+        if t.kind == "PUNCT" and t.text == ",":
+            n += 1
+            saw = True
+            j += 1
+            continue
+        saw = True
+        j += 1
+    if not saw:
+        return has_self, 0
+    last = toks[end - 1]
+    if last.kind == "PUNCT" and last.text == ",":
+        return has_self, n
+    return has_self, n + 1
+
+
+def _impl_owner(toks, impl_idx, brace_idx):
+    """Type name an `impl ... {` block attaches methods to, and the trait
+    name for `impl Trait for Type`."""
+    j = impl_idx + 1
+    if j < brace_idx and toks[j].kind == "PUNCT" and toks[j].text == "<":
+        j = _skip_angles(toks, j)
+    head = toks[j:brace_idx]
+    trait_name = None
+    for_pos = None
+    depth = 0
+    for k, t in enumerate(head):
+        if t.kind == "PUNCT" and t.text == "<":
+            depth += 1
+        elif t.kind == "PUNCT" and t.text == ">":
+            depth -= 1
+        elif depth == 0 and t.kind == "IDENT" and t.text == "for":
+            for_pos = k
+            break
+    if for_pos is not None:
+        # trait path is the last IDENT before `for` at depth 0
+        for t in head[:for_pos]:
+            if t.kind == "IDENT":
+                trait_name = t.text  # keeps the final segment via overwrite
+        head = head[for_pos + 1 :]
+    owner = None
+    for t in head:
+        if t.kind == "IDENT" and t.text not in ("where", "dyn", "mut"):
+            owner = t.text  # path segments overwrite: `a::b::Type` -> Type
+        elif t.kind == "PUNCT" and t.text == "<":
+            break
+        elif t.kind == "IDENT" and t.text == "where":
+            break
+    return owner, trait_name
+
+
+def _parse_use(toks, use_idx):
+    """Parse one `use ...;` starting at the `use` token. Returns UseTree."""
+    tree = UseTree(line=toks[use_idx].line)
+    j = use_idx + 1
+
+    def walk(j, prefix):
+        segs = list(prefix)
+        while j < len(toks):
+            t = toks[j]
+            if t.kind == "IDENT" and t.text == "as" and segs:
+                # `x as alias`: the resolution target is x; skip the alias
+                if segs:
+                    tree.leaves.append((segs[:-1], segs[-1]))
+                return j + 2
+            elif t.kind == "IDENT":
+                segs.append(t.text)
+                j += 1
+            elif t.kind == "PUNCT" and t.text == "::":
+                j += 1
+            elif t.kind == "PUNCT" and t.text == "{":
+                end = _find_matching(toks, j, "{")
+                k = j + 1
+                while k < end:
+                    k = walk(k, segs)
+                    if k < end and toks[k].kind == "PUNCT" and toks[k].text == ",":
+                        k += 1
+                return end + 1
+            elif t.kind == "PUNCT" and t.text == "*":
+                tree.leaves.append((segs, "*"))
+                return j + 1
+            else:
+                break
+        if segs:
+            tree.leaves.append((segs[:-1], segs[-1]))
+        return j
+
+    # handle `as` rename: walk() treats it leaf-level
+    k = j
+    depth = 0
+    while k < len(toks):
+        t = toks[k]
+        if t.kind == "PUNCT" and t.text == "{":
+            depth += 1
+        elif t.kind == "PUNCT" and t.text == "}":
+            depth -= 1
+        elif t.kind == "PUNCT" and t.text == ";" and depth == 0:
+            break
+        k += 1
+    walk(j, [])
+    return tree, k + 1
+
+
+def _parse_match_arms(toks, match_idx):
+    """toks[match_idx] is the `match` keyword. Returns MatchSite or None
+    (None for `match` in macro/expression positions we can't parse)."""
+    # find the `{` opening the arms: first `{` at paren/bracket depth 0
+    # that isn't a struct-literal... heuristic: scan forward, skipping
+    # balanced (), []; the first top-level `{` is the arm block (struct
+    # literals in scrutinee position are written with parens in idiomatic
+    # code; acceptable imprecision).
+    j = match_idx + 1
+    depth = 0
+    while j < len(toks):
+        t = toks[j]
+        if t.kind == "PUNCT":
+            if t.text in ("(", "["):
+                j = _find_matching(toks, j, t.text) + 1
+                continue
+            if t.text == "{":
+                break
+            if t.text in (";", "}"):
+                return None
+        j += 1
+    if j >= len(toks):
+        return None
+    end = _find_matching(toks, j, "{")
+    site = MatchSite(line=toks[match_idx].line)
+    k = j + 1
+    arm_start = k
+    while k < end:
+        t = toks[k]
+        if t.kind == "PUNCT" and t.text in OPEN:
+            k = _find_matching(toks, k, t.text) + 1
+            continue
+        if t.kind == "PUNCT" and t.text == "=>":
+            pattern = toks[arm_start:k]
+            # strip a guard: `pat if cond =>`
+            for g, gt in enumerate(pattern):
+                if gt.kind == "IDENT" and gt.text == "if":
+                    pattern = pattern[:g]
+                    break
+            site.arms.append(pattern)
+            # skip the arm body: either a block { } or tokens to the next
+            # top-level comma
+            k += 1
+            if k < end and toks[k].kind == "PUNCT" and toks[k].text == "{":
+                k = _find_matching(toks, k, "{") + 1
+                if k < end and toks[k].kind == "PUNCT" and toks[k].text == ",":
+                    k += 1
+            else:
+                while k < end:
+                    t2 = toks[k]
+                    if t2.kind == "PUNCT" and t2.text in OPEN:
+                        k = _find_matching(toks, k, t2.text) + 1
+                        continue
+                    if t2.kind == "PUNCT" and t2.text == ",":
+                        k += 1
+                        break
+                    if t2.kind == "IDENT" and t2.text == "match":
+                        # nested match in a non-block arm body: parse it
+                        # separately via the main scan; skip past it here
+                        nested = _parse_match_arms(toks, k)
+                        k += 1
+                        continue
+                    k += 1
+            arm_start = k
+            continue
+        k += 1
+    return site
+
+
+def parse_file(path: str, rel: str) -> FileInfo:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    lx = lex(src)
+    fi = FileInfo(path=rel, toks=lx.tokens, allows=allow_map(lx),
+                  diagnostics=lx.diagnostics, n_lines=lx.n_lines)
+    toks = fi.toks
+    i = 0
+    pub_pending = False
+    # stack of (kind, owner, trait, end_tok_idx) for impl/mod-test scoping
+    impl_stack = []
+
+    def current_impl():
+        for kind, owner, trait, end in reversed(impl_stack):
+            if kind == "impl":
+                return owner, trait
+        return None, None
+
+    def item_position(idx):
+        """True when toks[idx] sits where an item can start — filters out
+        `impl Trait` in type position, `match` as a field name, etc."""
+        j = idx - 1
+        while j >= 0 and toks[j].kind == "IDENT" and toks[j].text in ("pub", "unsafe", "default", "const", "async"):
+            j -= 1
+        if j < 0:
+            return True
+        t = toks[j]
+        if t.kind == "PUNCT" and t.text in ("{", "}", ";", "]", ")"):
+            return True
+        return False
+
+    while i < len(toks):
+        while impl_stack and i > impl_stack[-1][3]:
+            impl_stack.pop()
+        t = toks[i]
+        if t.kind != "IDENT":
+            if t.kind == "PUNCT" and t.text == "#":
+                # attribute: #[...] — detect #[cfg(test)] mod spans
+                if i + 1 < len(toks) and toks[i + 1].text == "[":
+                    a_end = _find_matching(toks, i + 1, "[")
+                    attr = "".join(x.text for x in toks[i + 2 : a_end])
+                    if attr == "cfg(test)":
+                        # next item should be `mod name {` (or a fn)
+                        j = a_end + 1
+                        # skip further attributes
+                        while j + 1 < len(toks) and toks[j].text == "#" and toks[j + 1].text == "[":
+                            j = _find_matching(toks, j + 1, "[") + 1
+                        if j < len(toks) and toks[j].kind == "IDENT" and toks[j].text in ("mod", "pub"):
+                            k = j
+                            while k < len(toks) and not (toks[k].kind == "PUNCT" and toks[k].text in ("{", ";")):
+                                k += 1
+                            if k < len(toks) and toks[k].text == "{":
+                                k_end = _find_matching(toks, k, "{")
+                                fi.test_spans.append((toks[j].line, toks[k_end].line))
+                                i = k_end + 1
+                                continue
+                    i = a_end + 1
+                    continue
+            pub_pending = False
+            i += 1
+            continue
+
+        w = t.text
+        if w == "pub":
+            pub_pending = True
+            # skip pub(crate) / pub(super)
+            if i + 1 < len(toks) and toks[i + 1].text == "(":
+                i = _find_matching(toks, i + 1, "(") + 1
+            else:
+                i += 1
+            continue
+
+        if w == "use":
+            tree, nxt = _parse_use(toks, i)
+            if pub_pending:
+                for segs, leaf in tree.leaves:
+                    fi.reexports.append((segs, leaf, tree.line))
+            else:
+                fi.uses.append(tree)
+            pub_pending = False
+            i = nxt
+            continue
+
+        if w == "mod":
+            if i + 1 < len(toks) and toks[i + 1].kind == "IDENT":
+                name = toks[i + 1].text
+                if i + 2 < len(toks) and toks[i + 2].text == ";":
+                    fi.mods.append((name, pub_pending, False, t.line))
+                    i += 3
+                elif i + 2 < len(toks) and toks[i + 2].text == "{":
+                    fi.mods.append((name, pub_pending, True, t.line))
+                    i += 3
+                else:
+                    i += 2
+            else:
+                i += 1
+            pub_pending = False
+            continue
+
+        if w == "impl":
+            if not item_position(i):
+                i += 1
+                continue
+            j = i + 1
+            depth = 0
+            while j < len(toks):
+                tj = toks[j]
+                if tj.kind == "PUNCT":
+                    if tj.text == "<":
+                        depth += 1
+                    elif tj.text == ">":
+                        depth -= 1
+                    elif tj.text == "{" and depth <= 0:
+                        break
+                    elif tj.text == ";":
+                        break
+                j += 1
+            if j < len(toks) and toks[j].text == "{":
+                owner, trait = _impl_owner(toks, i, j)
+                end = _find_matching(toks, j, "{")
+                impl_stack.append(("impl", owner, trait, end))
+                i = j + 1
+            else:
+                i = j + 1
+            pub_pending = False
+            continue
+
+        if w == "fn":
+            if i + 1 < len(toks) and toks[i + 1].kind == "IDENT":
+                name = toks[i + 1].text
+                # find the signature parens
+                j = i + 2
+                if j < len(toks) and toks[j].text == "<":
+                    j = _skip_angles(toks, j)
+                if j < len(toks) and toks[j].text == "(":
+                    has_self, n_params = _count_fn_params(toks, j)
+                    p_end = _find_matching(toks, j, "(")
+                    # body: first `{` after the signature (skip where/-> )
+                    k = p_end + 1
+                    while k < len(toks) and not (
+                        toks[k].kind == "PUNCT" and toks[k].text in ("{", ";")
+                    ):
+                        if toks[k].kind == "PUNCT" and toks[k].text == "<":
+                            k = _skip_angles(toks, k)
+                            continue
+                        if toks[k].kind == "PUNCT" and toks[k].text == "(":
+                            k = _find_matching(toks, k, "(") + 1
+                            continue
+                        k += 1
+                    if k < len(toks) and toks[k].text == "{":
+                        b_end = _find_matching(toks, k, "{")
+                        owner, trait = current_impl()
+                        fi.fns.append(FnDef(
+                            name=name, owner=owner, trait_impl=trait,
+                            is_pub=pub_pending, has_self=has_self,
+                            n_params=n_params, line=t.line,
+                            body_span=(toks[k].line, toks[b_end].line),
+                            body_toks=(k, b_end),
+                        ))
+                        i = k + 1
+                    else:
+                        i = k + 1
+                else:
+                    i += 2
+            else:
+                i += 1
+            pub_pending = False
+            continue
+
+        if w == "enum":
+            if i + 1 < len(toks) and toks[i + 1].kind == "IDENT":
+                name = toks[i + 1].text
+                j = i + 2
+                if j < len(toks) and toks[j].text == "<":
+                    j = _skip_angles(toks, j)
+                if j < len(toks) and toks[j].text == "{":
+                    end = _find_matching(toks, j, "{")
+                    ed = EnumDef(name=name, is_pub=pub_pending, line=t.line)
+                    k = j + 1
+                    while k < end:
+                        tk = toks[k]
+                        if tk.kind == "PUNCT" and tk.text == "#":
+                            if k + 1 < end and toks[k + 1].text == "[":
+                                k = _find_matching(toks, k + 1, "[") + 1
+                                continue
+                        if tk.kind == "IDENT":
+                            vname = tk.text
+                            if k + 1 < end and toks[k + 1].text == "(":
+                                p_end = _find_matching(toks, k + 1, "(")
+                                argc, _ = count_call_args(toks, k + 1)
+                                ed.variants[vname] = ("tuple", argc)
+                                k = p_end + 1
+                            elif k + 1 < end and toks[k + 1].text == "{":
+                                p_end = _find_matching(toks, k + 1, "{")
+                                ed.variants[vname] = ("struct", 0)
+                                k = p_end + 1
+                            else:
+                                ed.variants[vname] = ("unit", 0)
+                                k += 1
+                            # skip to the next comma at this level
+                            while k < end and not (toks[k].kind == "PUNCT" and toks[k].text == ","):
+                                if toks[k].kind == "PUNCT" and toks[k].text in OPEN:
+                                    k = _find_matching(toks, k, toks[k].text)
+                                k += 1
+                            k += 1
+                            continue
+                        k += 1
+                    fi.enums[name] = ed
+                    i = end + 1
+                else:
+                    i += 2
+            else:
+                i += 1
+            pub_pending = False
+            continue
+
+        if w in ("struct", "trait", "const", "static", "type"):
+            if i + 1 < len(toks) and toks[i + 1].kind == "IDENT":
+                name = toks[i + 1].text
+                target = {
+                    "struct": fi.structs, "trait": fi.traits,
+                    "const": fi.consts, "static": fi.consts, "type": fi.types,
+                }[w]
+                target[name] = (pub_pending, t.line)
+            i += 2
+            pub_pending = False
+            continue
+
+        if w == "macro_rules" and i + 2 < len(toks) and toks[i + 1].text == "!":
+            if toks[i + 2].kind == "IDENT":
+                fi.macros[toks[i + 2].text] = (True, t.line)
+            i += 3
+            continue
+
+        if w == "match":
+            # `match` as a struct field name etc.: require it NOT preceded
+            # by `.` or `::`
+            prev = toks[i - 1] if i > 0 else None
+            if not (prev and prev.kind == "PUNCT" and prev.text in (".", "::")):
+                site = _parse_match_arms(toks, i)
+                if site and site.arms:
+                    fi.matches.append(site)
+            i += 1
+            pub_pending = False
+            continue
+
+        pub_pending = False
+        i += 1
+
+    return fi
+
+
+# ---------------------------------------------------------------------------
+# crate model
+
+
+class Crate:
+    """Module tree + namespaces for `rust/src`, with auxiliary file sets
+    (tests/benches/examples) indexed but outside the module tree."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self.files: dict[str, FileInfo] = {}   # rel path -> FileInfo
+        self.modules: dict[tuple, str] = {}    # module path tuple -> rel file
+        self.aux: list[str] = []               # rel paths of tests/benches/examples
+
+    def add_file(self, rel: str):
+        fi = parse_file(os.path.join(self.root, rel), rel)
+        self.files[rel] = fi
+        return fi
+
+    def build_module_tree(self, src_prefix="rust/src"):
+        lib = f"{src_prefix}/lib.rs".lstrip("/")
+        if lib not in self.files:
+            return
+        self.modules[()] = lib
+        self._walk_mods((), lib, src_prefix)
+        main = f"{src_prefix}/main.rs".lstrip("/")
+        if main in self.files:
+            self.modules[("main",)] = main
+
+    def _walk_mods(self, mpath, rel, src_prefix):
+        fi = self.files.get(rel)
+        if not fi:
+            return
+        base_dir = os.path.dirname(rel)
+        fname = os.path.basename(rel)
+        # `mod x;` in lib.rs/mod.rs resolves next to the file; in foo.rs it
+        # resolves under foo/
+        if fname in ("lib.rs", "mod.rs", "main.rs"):
+            child_dir = base_dir
+        else:
+            child_dir = rel[:-3]  # strip .rs
+        for name, _pub, inline, _line in fi.mods:
+            if inline:
+                continue
+            for cand in (f"{child_dir}/{name}.rs".lstrip("/"),
+                         f"{child_dir}/{name}/mod.rs".lstrip("/")):
+                if cand in self.files:
+                    child = mpath + (name,)
+                    self.modules[child] = cand
+                    self._walk_mods(child, cand, src_prefix)
+                    break
+
+    def module_of_file(self, rel):
+        for mpath, f in self.modules.items():
+            if f == rel:
+                return mpath
+        return None
+
+    def namespace(self, mpath, _depth=0):
+        """Names defined in module `mpath`: dict name -> kind."""
+        rel = self.modules.get(mpath)
+        ns = {}
+        if rel is None or _depth > 6:
+            return ns
+        fi = self.files[rel]
+        for name, _pub, _inline, _line in fi.mods:
+            ns[name] = "mod"
+        for fn in fi.fns:
+            if fn.owner is None:
+                ns[fn.name] = "fn"
+        for name in fi.enums:
+            ns[name] = "enum"
+        for name in fi.structs:
+            ns[name] = "struct"
+        for name in fi.consts:
+            ns[name] = "const"
+        for name in fi.traits:
+            ns[name] = "trait"
+        for name in fi.types:
+            ns[name] = "type"
+        for name in fi.macros:
+            ns[name] = "macro"
+        for segs, leaf, _line in fi.reexports:
+            if leaf == "*":
+                target = self.resolve_module(mpath, segs)
+                if target is not None:
+                    for n, k in self.namespace(target, _depth + 1).items():
+                        ns.setdefault(n, k)
+            else:
+                ns[leaf] = "reexport"
+        return ns
+
+    def resolve_module(self, frm, segs):
+        """Resolve a module path (no leaf) relative to module `frm`."""
+        if not segs:
+            return frm
+        if segs[0] in ("crate",):
+            cur = ()
+            segs = segs[1:]
+        elif segs[0] == "self":
+            cur = frm
+            segs = segs[1:]
+        elif segs[0] == "super":
+            cur = frm[:-1] if frm else ()
+            segs = segs[1:]
+        else:
+            # relative: child of frm, else crate root (2018 extern-ish)
+            if frm + (segs[0],) in self.modules:
+                cur = frm
+            elif (segs[0],) in self.modules:
+                cur = ()
+            else:
+                return None
+        for s in segs:
+            if s == "super":
+                cur = cur[:-1] if cur else ()
+                continue
+            nxt = cur + (s,)
+            if nxt in self.modules:
+                cur = nxt
+            else:
+                return None
+        return cur
+
+    def resolve_name(self, frm, segs, leaf, _depth=0):
+        """Does `segs::leaf` (module path + item) resolve from module
+        `frm`? Returns the kind string or None. Also accepts `leaf`
+        being a module itself, or an associated item of a type
+        (`Type::method`, `Enum::Variant`) for 1-level type paths."""
+        if _depth > 6:
+            return None
+        if leaf in ("*", "self"):
+            return "glob" if self.resolve_module(frm, segs) is not None else None
+        m = self.resolve_module(frm, segs)
+        if m is not None:
+            if m + (leaf,) in self.modules:
+                return "mod"
+            ns = self.namespace(m)
+            if leaf in ns:
+                if ns[leaf] == "reexport":
+                    return self._chase_reexport(m, leaf, _depth)
+                return ns[leaf]
+        # maybe the last seg is a TYPE and leaf an associated item/variant
+        if segs:
+            tm = self.resolve_module(frm, segs[:-1])
+            tname = segs[-1]
+            if tm is not None:
+                owner_file = self._file_defining(tm, tname, _depth)
+                if owner_file is not None:
+                    fi = self.files[owner_file]
+                    if tname in fi.enums and leaf in fi.enums[tname].variants:
+                        return "variant"
+                    for fn in fi.fns:
+                        if fn.owner == tname and fn.name == leaf:
+                            return "method"
+                    # associated consts on impls are rare here; accept
+                    # constants declared inside impl blocks conservatively
+                    return "assoc?"
+        return None
+
+    def _chase_reexport(self, m, leaf, _depth):
+        fi = self.files[self.modules[m]]
+        for segs, l, _line in fi.reexports:
+            if l == leaf:
+                return self.resolve_name(m, segs, leaf, _depth + 1) or "reexport"
+            if l == "*":
+                t = self.resolve_module(m, segs)
+                if t is not None:
+                    r = self.resolve_name(t, [], leaf, _depth + 1)
+                    if r:
+                        return r
+        return "reexport"
+
+    def _file_defining(self, m, tname, _depth=0):
+        """File where type `tname` (struct/enum) visible in module `m` is
+        DEFINED, chasing re-exports."""
+        if _depth > 6:
+            return None
+        rel = self.modules.get(m)
+        if rel is None:
+            return None
+        fi = self.files[rel]
+        if tname in fi.enums or tname in fi.structs:
+            return rel
+        for segs, leaf, _line in fi.reexports:
+            if leaf == tname:
+                t = self.resolve_module(m, segs)
+                if t is not None:
+                    return self._file_defining(t, tname, _depth + 1)
+            if leaf == "*":
+                t = self.resolve_module(m, segs)
+                if t is not None:
+                    r = self._file_defining(t, tname, _depth + 1)
+                    if r:
+                        return r
+        return None

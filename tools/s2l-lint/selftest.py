@@ -1,0 +1,91 @@
+"""Fixture self-test — proves every rule FIRES where it must and stays
+SILENT where it must not.
+
+Layout: `fixtures/<rule>/fire/` (a minimal crate plus `expected.json`
+golden findings) and `fixtures/<rule>/clean/` (the hardened twin that
+must lint clean). Each fixture is analyzed as its own single-file crate
+with a fixture config: every file is a decode/deterministic/panic-scoped
+file, `hot_`-prefixed fns are registered zero-alloc paths, and `Reason`
+is the registered exhaustive enum — so fixtures exercise the rules
+without referencing repo paths.
+
+`expected.json` is a list of `{"rule": .., "path": .., "line": ..}`
+records compared EXACTLY (as a multiset) against what the engine emits —
+a rule that drifts off its fixture line is a self-test failure, not a
+fuzzy match.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from rules import LintConfig, discover, run_all
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)), "fixtures")
+ALL_RULES = ("R1", "R2", "R3", "R4", "R5", "R6", "R7")
+
+
+def fixture_config() -> LintConfig:
+    return LintConfig(
+        src_prefix="",
+        scope_dirs=("",),
+        decode_files=("lib.rs",),
+        zero_alloc_fns=(),           # `hot_*` naming convention registers
+        deterministic_files=("lib.rs",),
+        panic_files=("lib.rs",),
+        exhaustive_enums=("Reason",),
+        check_cargo=False,
+    )
+
+
+def _lint_dir(root):
+    cfg = fixture_config()
+    crate = discover(root, cfg)
+    return run_all(crate, cfg)
+
+
+def run(verbose=True):
+    failures = []
+    fired = set()
+    n_cases = 0
+    for rule_dir in sorted(os.listdir(FIXTURES)):
+        base = os.path.join(FIXTURES, rule_dir)
+        if not os.path.isdir(base):
+            continue
+        fire_dir = os.path.join(base, "fire")
+        clean_dir = os.path.join(base, "clean")
+
+        findings, _allowed = _lint_dir(fire_dir)
+        n_cases += 1
+        with open(os.path.join(fire_dir, "expected.json"), encoding="utf-8") as f:
+            expected = json.load(f)
+        got = sorted((x.rule, x.path, x.line) for x in findings)
+        want = sorted((e["rule"], e["path"], e["line"]) for e in expected)
+        if got != want:
+            failures.append(
+                f"{rule_dir}/fire: expected {want}, got {got} "
+                f"({'; '.join(f'{x.path}:{x.line} [{x.rule}] {x.message}' for x in findings) or 'nothing'})"
+            )
+        fired.update(x.rule for x in findings)
+
+        findings, _allowed = _lint_dir(clean_dir)
+        n_cases += 1
+        if findings:
+            failures.append(
+                f"{rule_dir}/clean: expected 0 findings, got "
+                + "; ".join(f"{x.path}:{x.line} [{x.rule}] {x.message}" for x in findings)
+            )
+
+    for rid in ALL_RULES:
+        if rid not in fired:
+            failures.append(f"coverage: no fixture fires {rid}")
+
+    if verbose:
+        for msg in failures:
+            print(f"self-test FAIL: {msg}")
+        print(
+            f"s2l-lint --self-test: {n_cases} fixture crates, "
+            f"{len(ALL_RULES)} rules, {len(failures)} failure(s)"
+        )
+    return 1 if failures else 0
