@@ -465,7 +465,7 @@ fn main() {
 
         // codec alone: encode/decode a Predict frame at the model's
         // input width, no sockets involved
-        let req = WireRequest::Predict { tenant: 7, x: x0.clone() };
+        let req = WireRequest::Predict { tenant: 7, x: x0.clone(), req_id: 0 };
         let r = b.bench("encode Predict frame", || {
             std::hint::black_box(wire::encode_request(&req).len());
         });

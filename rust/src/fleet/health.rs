@@ -1,0 +1,412 @@
+//! Per-node health state machine for the fleet plane (DESIGN.md §15).
+//!
+//! Every node moves through `Alive → Suspect(strikes) → Dead`, driven
+//! exclusively by RPC outcomes the router reports ([`HealthBoard::on_success`],
+//! [`HealthBoard::on_failure`]) and explicit probes — never by wall
+//! clock. All backoff is measured in PUMP TICKS (the router's
+//! deterministic clock): a suspect node's next probe is scheduled at
+//! `tick + backoff_ticks · 2^(strikes-1)` (capped), so a chaos scenario
+//! replays the exact same transition sequence from the same seed. That
+//! determinism is enforced mechanically — this file is registered under
+//! s2l-lint R6 (no wall-clock sources) and R7 (panic-free).
+//!
+//! State semantics:
+//!
+//! - `Alive` — routable. Successes keep it here.
+//! - `Suspect` — NOT routable (its tenants re-route to their rendezvous
+//!   successor); probed on the backoff schedule, one success returns it
+//!   to `Alive` and its tenants route home. Each failure adds a strike.
+//! - `Dead` — terminal for routing. `dead_after_strikes` accumulated
+//!   strikes, an exhausted per-RPC retry budget, or an explicit
+//!   decommission gets here; only an explicit [`HealthBoard::revive`]
+//!   (operator action) leaves it. Terminality is load-bearing for the
+//!   at-most-once story: a zombie admission parked on a dead node can
+//!   never complete behind the router's back.
+//!
+//! Every transition is appended to an event log and every retry /
+//! reconnect / failover bumps a counter — both surface in the
+//! `fleet_health` obs section and both are bit-identical across reruns.
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// The three health states (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    Alive,
+    Suspect,
+    Dead,
+}
+
+impl NodeState {
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Alive => "alive",
+            NodeState::Suspect => "suspect",
+            NodeState::Dead => "dead",
+        }
+    }
+}
+
+/// Tuning for the state machine. All tick-denominated.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthPolicy {
+    /// strikes accumulated (across failures and failed probes) before a
+    /// suspect node is declared dead
+    pub dead_after_strikes: u32,
+    /// base probe backoff in pump ticks; doubles per strike, capped at
+    /// 64× so a long-suspect node is still probed eventually
+    pub backoff_ticks: u64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        Self {
+            dead_after_strikes: 3,
+            backoff_ticks: 4,
+        }
+    }
+}
+
+/// One recorded transition — the replayable audit trail.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthEvent {
+    pub tick: u64,
+    pub node: usize,
+    pub from: NodeState,
+    pub to: NodeState,
+    pub cause: String,
+}
+
+/// Monotonic fault-plane counters; summable across routers (the obs
+/// merge law for `fleet_health` adds them field-wise).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HealthCounters {
+    /// same-node retries of retryable transport faults
+    pub rpc_retries: u64,
+    /// reconnect-and-rehandshake attempts
+    pub reconnects: u64,
+    /// admissions re-routed to a rendezvous successor
+    pub failovers: u64,
+    /// lightweight probes sent to suspect nodes
+    pub probes: u64,
+    pub probe_failures: u64,
+    /// suspect → alive transitions (probe or in-call recovery)
+    pub recoveries: u64,
+    pub deaths: u64,
+    /// tenants re-installed from checkpoint after a node death
+    pub recovered_tenants: u64,
+    /// background rebalance migrations triggered by the pump cadence
+    pub rebalances: u64,
+}
+
+#[derive(Clone, Debug)]
+struct NodeHealth {
+    state: NodeState,
+    strikes: u32,
+    next_probe_tick: u64,
+}
+
+/// The fleet's health ledger: one state machine per node plus the
+/// shared event log and counters.
+#[derive(Clone, Debug)]
+pub struct HealthBoard {
+    nodes: Vec<NodeHealth>,
+    policy: HealthPolicy,
+    events: Vec<HealthEvent>,
+    pub counters: HealthCounters,
+}
+
+impl HealthBoard {
+    pub fn new(policy: HealthPolicy) -> Self {
+        Self {
+            nodes: Vec::new(),
+            policy,
+            events: Vec::new(),
+            counters: HealthCounters::default(),
+        }
+    }
+
+    /// Register one more node (index = registration order, matching the
+    /// router's node vector). New nodes start `Alive`.
+    pub fn add_node(&mut self) -> usize {
+        self.nodes.push(NodeHealth {
+            state: NodeState::Alive,
+            strikes: 0,
+            next_probe_tick: 0,
+        });
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Unknown indices read as `Dead` — the conservative answer.
+    pub fn state(&self, node: usize) -> NodeState {
+        self.nodes.get(node).map_or(NodeState::Dead, |n| n.state)
+    }
+
+    pub fn strikes(&self, node: usize) -> u32 {
+        self.nodes.get(node).map_or(0, |n| n.strikes)
+    }
+
+    /// Only `Alive` nodes take traffic; `Suspect` waits for a probe.
+    pub fn is_routable(&self, node: usize) -> bool {
+        self.state(node) == NodeState::Alive
+    }
+
+    /// Should this node be probed at `tick`? (Suspect and past its
+    /// backoff deadline.)
+    pub fn probe_due(&self, node: usize, tick: u64) -> bool {
+        self.nodes
+            .get(node)
+            .map_or(false, |n| n.state == NodeState::Suspect && tick >= n.next_probe_tick)
+    }
+
+    fn transition(&mut self, node: usize, tick: u64, to: NodeState, cause: &str) {
+        let Some(n) = self.nodes.get_mut(node) else {
+            return;
+        };
+        if n.state == to {
+            return;
+        }
+        let from = n.state;
+        n.state = to;
+        match to {
+            NodeState::Alive => {
+                n.strikes = 0;
+                n.next_probe_tick = 0;
+                self.counters.recoveries += 1;
+            }
+            NodeState::Suspect => {}
+            NodeState::Dead => self.counters.deaths += 1,
+        }
+        self.events.push(HealthEvent {
+            tick,
+            node,
+            from,
+            to,
+            cause: cause.to_string(),
+        });
+    }
+
+    /// An RPC (or probe) against `node` succeeded: suspect nodes recover
+    /// to `Alive`; dead nodes stay dead (terminal — see module docs).
+    pub fn on_success(&mut self, node: usize, tick: u64) {
+        if self.state(node) == NodeState::Suspect {
+            self.transition(node, tick, NodeState::Alive, "probe/rpc success");
+        }
+    }
+
+    /// A retryable fault against `node`: adds a strike, moves
+    /// Alive→Suspect, schedules the next probe with exponential
+    /// (tick-denominated) backoff, and declares death past the strike
+    /// budget. Returns the state after the strike.
+    pub fn on_failure(&mut self, node: usize, tick: u64, cause: &str) -> NodeState {
+        let dead_after = self.policy.dead_after_strikes;
+        let backoff = self.policy.backoff_ticks.max(1);
+        let Some(n) = self.nodes.get_mut(node) else {
+            return NodeState::Dead;
+        };
+        if n.state == NodeState::Dead {
+            return NodeState::Dead;
+        }
+        n.strikes = n.strikes.saturating_add(1);
+        let strikes = n.strikes;
+        // backoff · 2^(strikes-1), capped at 64× base
+        let factor = 1u64 << strikes.saturating_sub(1).min(6);
+        n.next_probe_tick = tick.saturating_add(backoff.saturating_mul(factor));
+        if strikes >= dead_after {
+            self.transition(node, tick, NodeState::Dead, cause);
+            NodeState::Dead
+        } else {
+            self.transition(node, tick, NodeState::Suspect, cause);
+            NodeState::Suspect
+        }
+    }
+
+    /// Unconditional death (decommission, retry budget exhausted).
+    pub fn mark_dead(&mut self, node: usize, tick: u64, cause: &str) {
+        self.transition(node, tick, NodeState::Dead, cause);
+    }
+
+    /// Operator-initiated resurrection — the only exit from `Dead`.
+    pub fn revive(&mut self, node: usize, tick: u64) {
+        if self.state(node) == NodeState::Dead {
+            self.transition(node, tick, NodeState::Alive, "operator revive");
+        }
+    }
+
+    pub fn events(&self) -> &[HealthEvent] {
+        &self.events
+    }
+
+    /// The `fleet_health` obs section (validated by
+    /// `obs::snapshot::validate`, merged by `obs::fleet::merge_docs`).
+    pub fn to_json(&self, tick: u64, node_names: &[String]) -> Json {
+        let nodes = arr(self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                obj(vec![
+                    ("name", s(node_names.get(i).map_or("", |x| x.as_str()))),
+                    ("state", s(n.state.name())),
+                    ("strikes", num(f64::from(n.strikes))),
+                ])
+            })
+            .collect());
+        let c = &self.counters;
+        let counters = obj(vec![
+            ("rpc_retries", num(c.rpc_retries as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("reconnects", num(c.reconnects as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("failovers", num(c.failovers as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("probes", num(c.probes as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("probe_failures", num(c.probe_failures as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("recoveries", num(c.recoveries as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("deaths", num(c.deaths as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("recovered_tenants", num(c.recovered_tenants as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+            ("rebalances", num(c.rebalances as f64)),  // s2l-lint: allow(cast) reason=counter to f64 for JSON, exact below 2^53
+        ]);
+        let transitions = arr(self
+            .events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("tick", num(e.tick as f64)),  // s2l-lint: allow(cast) reason=tick to f64 for JSON, exact below 2^53
+                    ("node", num(e.node as f64)),  // s2l-lint: allow(cast) reason=index to f64 for JSON, exact below 2^53
+                    ("from", s(e.from.name())),
+                    ("to", s(e.to.name())),
+                    ("cause", s(&e.cause)),
+                ])
+            })
+            .collect());
+        obj(vec![
+            ("tick", num(tick as f64)),  // s2l-lint: allow(cast) reason=tick to f64 for JSON, exact below 2^53
+            ("nodes", nodes),
+            ("counters", counters),
+            ("transitions", transitions),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board(n: usize) -> HealthBoard {
+        let mut b = HealthBoard::new(HealthPolicy::default());
+        for _ in 0..n {
+            b.add_node();
+        }
+        b
+    }
+
+    #[test]
+    fn strikes_walk_alive_suspect_dead() {
+        let mut b = board(2);
+        assert_eq!(b.state(0), NodeState::Alive);
+        assert_eq!(b.on_failure(0, 10, "rpc timeout"), NodeState::Suspect);
+        assert_eq!(b.strikes(0), 1);
+        assert!(!b.is_routable(0));
+        assert!(b.is_routable(1), "other nodes unaffected");
+        assert_eq!(b.on_failure(0, 11, "rpc timeout"), NodeState::Suspect);
+        assert_eq!(b.on_failure(0, 12, "rpc timeout"), NodeState::Dead);
+        assert_eq!(b.counters.deaths, 1);
+        // dead is terminal under both success and failure
+        b.on_success(0, 13);
+        assert_eq!(b.state(0), NodeState::Dead);
+        assert_eq!(b.on_failure(0, 14, "late fault"), NodeState::Dead);
+        assert_eq!(b.counters.deaths, 1, "no double-death event");
+    }
+
+    #[test]
+    fn success_recovers_suspect_and_resets_strikes() {
+        let mut b = board(1);
+        b.on_failure(0, 5, "cut mid-frame");
+        b.on_failure(0, 6, "cut mid-frame");
+        b.on_success(0, 9);
+        assert_eq!(b.state(0), NodeState::Alive);
+        assert_eq!(b.strikes(0), 0);
+        assert_eq!(b.counters.recoveries, 1);
+        // the strike clock restarts: three MORE failures to die
+        b.on_failure(0, 10, "x");
+        b.on_failure(0, 11, "x");
+        assert_eq!(b.state(0), NodeState::Suspect);
+    }
+
+    #[test]
+    fn probe_backoff_is_exponential_in_ticks() {
+        let mut b = HealthBoard::new(HealthPolicy {
+            dead_after_strikes: 10,
+            backoff_ticks: 4,
+        });
+        b.add_node();
+        b.on_failure(0, 100, "stall");
+        assert!(!b.probe_due(0, 103), "strike 1: backoff 4 ticks");
+        assert!(b.probe_due(0, 104));
+        b.on_failure(0, 104, "stall");
+        assert!(!b.probe_due(0, 111), "strike 2: backoff 8 ticks");
+        assert!(b.probe_due(0, 112));
+        b.on_failure(0, 112, "stall");
+        assert!(b.probe_due(0, 112 + 16), "strike 3: backoff 16 ticks");
+        // cap: strikes beyond 7 stay at 64× base
+        for t in 0..20 {
+            b.on_failure(0, 200 + t, "stall");
+        }
+        assert!(b.probe_due(0, 219 + 4 * 64));
+        assert!(!b.probe_due(0, 219 + 4 * 64 - 1));
+    }
+
+    #[test]
+    fn dead_nodes_are_never_probed_and_revive_is_explicit() {
+        let mut b = board(1);
+        for t in 0..3 {
+            b.on_failure(0, t, "x");
+        }
+        assert_eq!(b.state(0), NodeState::Dead);
+        assert!(!b.probe_due(0, u64::MAX));
+        b.revive(0, 50);
+        assert_eq!(b.state(0), NodeState::Alive);
+        assert_eq!(b.strikes(0), 0);
+    }
+
+    #[test]
+    fn event_log_replays_bit_identically() {
+        let run = || {
+            let mut b = board(3);
+            b.on_failure(1, 3, "refused");
+            b.on_failure(1, 4, "refused");
+            b.on_success(1, 9);
+            b.on_failure(2, 10, "cut mid-frame");
+            b.mark_dead(2, 11, "retry budget exhausted");
+            b.counters.failovers += 1;
+            b
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.counters, b.counters);
+        let names = vec!["n0".to_string(), "n1".into(), "n2".into()];
+        assert_eq!(
+            a.to_json(11, &names).to_string(),
+            b.to_json(11, &names).to_string(),
+            "fleet_health section is bit-identical across reruns"
+        );
+    }
+
+    #[test]
+    fn out_of_range_nodes_read_dead_and_mutate_nothing() {
+        let mut b = board(1);
+        assert_eq!(b.state(9), NodeState::Dead);
+        assert!(!b.is_routable(9));
+        assert_eq!(b.on_failure(9, 0, "x"), NodeState::Dead);
+        b.on_success(9, 0);
+        b.mark_dead(9, 0, "x");
+        assert!(b.events().is_empty());
+        assert_eq!(b.counters.deaths, 0);
+    }
+}

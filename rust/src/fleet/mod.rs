@@ -20,7 +20,19 @@
 //!   Because adapters are pure data under a frozen shared backbone,
 //!   post-migration predictions are BIT-IDENTICAL to an unmoved oracle
 //!   (`tests/fleet_multinode.rs`).
+//! * **Fault tolerance** ([`health`] + the router's retry/failover
+//!   path, DESIGN.md §15): a per-node Alive → Suspect → Dead state
+//!   machine driven by RPC outcomes and tick-scheduled probes; retryable
+//!   transport faults are retried (reconnect-and-rehandshake) up to a
+//!   budget, then the node is declared dead and admissions fail over to
+//!   the rendezvous successor with at-most-once semantics, recovering
+//!   the dead node's tenants from the latest checkpoint. Proven under
+//!   seeded fault injection in `tests/fleet_chaos.rs`.
 
+pub mod health;
 pub mod router;
 
-pub use router::{FleetRouter, MigrationReport, SkewReport};
+pub use health::{HealthBoard, HealthCounters, HealthEvent, HealthPolicy, NodeState};
+pub use router::{
+    FleetRouter, MigrationReport, RebalanceConfig, RouterConfig, SkewReport,
+};

@@ -1,15 +1,34 @@
 //! [`FleetRouter`] — tenant-affine routing across N wire-connected
-//! nodes, with live drain-and-migrate rebalancing (DESIGN.md §12).
+//! nodes, with live drain-and-migrate rebalancing and a fault-tolerant
+//! data plane (DESIGN.md §12, §15).
 //!
 //! Placement is RENDEZVOUS (highest-random-weight) hashing: every
 //! (tenant, node) pair gets a score from one domain-separated SplitMix64
 //! step — the same finalizer the adapter registry uses for shard
-//! routing — and the tenant lives on the alive node with the highest
+//! routing — and the tenant lives on the routable node with the highest
 //! score. HRW gives the two properties a fleet needs with zero state:
 //! every router instance agrees on placement without coordination, and
 //! when a node dies only ITS tenants move (no global reshuffle).
 //! Explicit migrations are recorded in a small override map consulted
 //! before the hash, so a rebalanced tenant stays where it was put.
+//!
+//! Fault tolerance (PR 10): "routable" means `Alive` on the
+//! [`HealthBoard`] — a per-node Alive → Suspect → Dead machine driven by
+//! RPC outcomes plus tick-scheduled probes. `predict`/`feedback` retry
+//! retryable transport faults against the same node (reconnecting as
+//! needed) up to `ClientConfig::max_retries`; past the budget the node
+//! is declared dead and the admission FAILS OVER to the rendezvous
+//! successor, after a best-effort re-install of the latest checkpoint
+//! (`RouterConfig::recovery_checkpoint`) on the survivors — safe because
+//! restore provenance never overwrites newer live state (DESIGN.md §10).
+//!
+//! At-most-once: every admission draws a fresh `req_id` and keeps it
+//! across same-node retries AND cross-node failover, so a retry after an
+//! ambiguous outcome (response lost mid-frame after the server already
+//! queued) replays the recorded admission from the server's dedupe log
+//! instead of double-admitting. Cross-node the guarantee holds because
+//! `Dead` is terminal: a zombie admission parked on a dead node's queue
+//! is never pumped by this router again.
 //!
 //! Migration is drain-and-migrate, in this order, and nothing else:
 //!
@@ -28,11 +47,13 @@
 //! Because adapters are pure data under a frozen shared backbone
 //! (Skip2-LoRA's split), step 3 makes the destination serve
 //! BIT-IDENTICAL predictions to what the source would have served —
-//! `tests/fleet_multinode.rs` proves this against an unkilled oracle.
+//! `tests/fleet_multinode.rs` proves this against an unkilled oracle,
+//! and `tests/fleet_chaos.rs` proves it under seeded fault injection.
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::net::{Admission, NodeClient};
+use crate::fleet::health::{HealthBoard, HealthPolicy, NodeState};
+use crate::net::{Admission, ClientConfig, ClientError, NodeClient};
 use crate::obs::fleet::merge_texts;
 use crate::serve::server::{Completion, DrainReport};
 use crate::serve::TenantId;
@@ -45,7 +66,66 @@ struct Node {
     name: String,
     addr: String,
     client: NodeClient,
-    alive: bool,
+}
+
+/// Background rebalance cadence (checked from [`FleetRouter::pump_all`]).
+///
+/// Hysteresis: a migration triggers only when `skew().max_over_mean`
+/// exceeds `high_watermark`, and the step then targets `low_watermark` —
+/// so a fleet hovering at the threshold does not flap. `cooldown_ticks`
+/// suppresses further migrations after one fires (migrations drain the
+/// source; back-to-back drains would stall the data plane).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RebalanceConfig {
+    /// consider rebalancing every N pump ticks; 0 disables
+    pub every_ticks: u64,
+    /// trigger when max/mean load exceeds this
+    pub high_watermark: f64,
+    /// rebalance step targets this ratio once triggered
+    pub low_watermark: f64,
+    /// pump ticks to wait after a migration before the next
+    pub cooldown_ticks: u64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        Self {
+            every_ticks: 8,
+            high_watermark: 2.0,
+            low_watermark: 1.5,
+            cooldown_ticks: 16,
+        }
+    }
+}
+
+/// Fleet-plane configuration: per-node client hardening, health policy,
+/// optional background rebalancing, and optional checkpoint recovery.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterConfig {
+    /// timeouts/retries/credentials for every node connection; its
+    /// `client_id` keys the at-most-once dedupe log (nonzero by default
+    /// here — routers want the guarantee)
+    pub client: ClientConfig,
+    pub health: HealthPolicy,
+    /// `Some` wires `rebalance_once` onto the pump cadence
+    pub rebalance: Option<RebalanceConfig>,
+    /// checkpoint path (on the NODES' host filesystem) re-installed on
+    /// survivors when a node is declared dead mid-traffic
+    pub recovery_checkpoint: Option<String>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            client: ClientConfig {
+                client_id: 1,
+                ..ClientConfig::default()
+            },
+            health: HealthPolicy::default(),
+            rebalance: None,
+            recovery_checkpoint: None,
+        }
+    }
 }
 
 /// What a [`FleetRouter::decommission`] did.
@@ -65,14 +145,22 @@ pub struct MigrationReport {
 /// snapshot (registry shard stats summed per node).
 #[derive(Clone, Debug)]
 pub struct SkewReport {
-    /// live registry tenants per node (dead nodes report 0)
+    /// live registry tenants per node (non-routable nodes report 0)
     pub per_node_tenants: Vec<u64>,
-    /// max load over mean load across ALIVE nodes; 1.0 is perfectly
+    /// max load over mean load across ROUTABLE nodes; 1.0 is perfectly
     /// balanced, large values mean a hot node
     pub max_over_mean: f64,
 }
 
-/// Routes tenants over N `NodeServer`s speaking `skip2lora/wire/v1`.
+/// How one same-node admission attempt sequence ended (internal).
+enum AdmitFail {
+    /// retry budget exhausted — the node was declared dead; fail over
+    NodeDown,
+    /// non-retryable (protocol violation, typed server failure)
+    Fatal(ClientError),
+}
+
+/// Routes tenants over N `NodeServer`s speaking `skip2lora/wire`.
 pub struct FleetRouter {
     nodes: Vec<Node>,
     /// explicit placements (migrations) consulted before the hash
@@ -80,28 +168,45 @@ pub struct FleetRouter {
     /// every tenant this router has admitted traffic for — the working
     /// set a decommission must relocate
     seen: BTreeSet<TenantId>,
+    cfg: RouterConfig,
+    health: HealthBoard,
+    /// the router's deterministic clock: +1 per `pump_all`
+    tick: u64,
+    /// at-most-once handle source; 0 is reserved for "no dedupe"
+    next_req_id: u64,
+    last_rebalance_tick: u64,
 }
 
 impl FleetRouter {
     pub fn new() -> Self {
+        Self::with_config(RouterConfig::default())
+    }
+
+    pub fn with_config(cfg: RouterConfig) -> Self {
+        let health = HealthBoard::new(cfg.health.clone());
         Self {
             nodes: Vec::new(),
             placements: BTreeMap::new(),
             seen: BTreeSet::new(),
+            cfg,
+            health,
+            tick: 0,
+            next_req_id: 1,
+            last_rebalance_tick: 0,
         }
     }
 
     /// Connect (and handshake) a node; returns its index.
     pub fn add_node(&mut self, name: &str, addr: &str) -> Result<usize> {
-        let client = NodeClient::connect(addr)
+        let client = NodeClient::connect_with(addr, self.cfg.client.clone())
+            .map_err(|e| crate::util::error::Error::from(e))
             .with_context(|| format!("router: connect node '{name}' at {addr}"))?;
         self.nodes.push(Node {
             name: name.to_string(),
             addr: addr.to_string(),
             client,
-            alive: true,
         });
-        Ok(self.nodes.len() - 1)
+        Ok(self.health.add_node())
     }
 
     pub fn node_count(&self) -> usize {
@@ -109,7 +214,9 @@ impl FleetRouter {
     }
 
     pub fn alive_count(&self) -> usize {
-        self.nodes.iter().filter(|n| n.alive).count()
+        (0..self.nodes.len())
+            .filter(|&i| self.health.is_routable(i))
+            .count()
     }
 
     pub fn node_name(&self, idx: usize) -> &str {
@@ -120,8 +227,44 @@ impl FleetRouter {
         &self.nodes[idx].addr
     }
 
+    /// Not `Dead` — `Suspect` nodes count as alive (they may recover).
     pub fn is_alive(&self, idx: usize) -> bool {
-        self.nodes[idx].alive
+        self.health.state(idx) != NodeState::Dead
+    }
+
+    pub fn node_state(&self, idx: usize) -> NodeState {
+        self.health.state(idx)
+    }
+
+    /// The health ledger (states, counters, transition log).
+    pub fn health(&self) -> &HealthBoard {
+        &self.health
+    }
+
+    /// The router's pump-tick clock (advances once per [`Self::pump_all`]).
+    pub fn current_tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Install (or remove) the background rebalance cadence at runtime —
+    /// operators typically enable it only after warm-up traffic has
+    /// populated the registries the skew probe reads.
+    pub fn set_rebalance(&mut self, rb: Option<RebalanceConfig>) {
+        self.cfg.rebalance = rb;
+    }
+
+    /// Operator-initiated resurrection of a dead node: reconnect, then
+    /// mark alive so rendezvous routes its tenants home again.
+    pub fn revive(&mut self, idx: usize) -> Result<()> {
+        if self.health.state(idx) != NodeState::Dead {
+            bail!("node '{}' is not dead", self.node_name(idx));
+        }
+        let Some(node) = self.nodes.get_mut(idx) else {
+            bail!("no node at index {idx}");
+        };
+        node.client.reconnect().map_err(crate::util::error::Error::from)?;
+        self.health.revive(idx, self.tick);
+        Ok(())
     }
 
     /// Tenants this router has admitted traffic for that currently
@@ -140,115 +283,324 @@ impl FleetRouter {
         SplitMix64::new(tenant ^ (node as u64).rotate_left(32) ^ 0x5AF3_2EAD_BEEF_CAFE).next_u64()
     }
 
-    /// Where `tenant` lives: explicit placement if one was recorded,
-    /// otherwise the alive node with the highest rendezvous score.
-    /// `None` only when no node is alive.
+    /// Where `tenant` lives: explicit placement if one was recorded (and
+    /// its node is routable), otherwise the routable node with the
+    /// highest rendezvous score. `None` only when no node is routable.
     pub fn route(&self, tenant: TenantId) -> Option<usize> {
         if let Some(&idx) = self.placements.get(&tenant) {
-            if self.nodes[idx].alive {
+            if self.health.is_routable(idx) {
                 return Some(idx);
             }
         }
-        self.nodes
-            .iter()
-            .enumerate()
-            .filter(|(_, n)| n.alive)
-            .max_by_key(|(i, _)| Self::score(tenant, *i))
-            .map(|(i, _)| i)
+        (0..self.nodes.len())
+            .filter(|&i| self.health.is_routable(i))
+            .max_by_key(|&i| Self::score(tenant, i))
     }
 
-    fn routed_client(&mut self, tenant: TenantId) -> Result<(usize, &mut NodeClient)> {
-        let idx = match self.route(tenant) {
-            Some(idx) => idx,
-            None => bail!("no alive node to route tenant {tenant}"),
-        };
-        Ok((idx, &mut self.nodes[idx].client))
-    }
-
-    /// Route a Predict to the tenant's node.
+    /// Route a Predict to the tenant's node, with retry + failover.
     pub fn predict(&mut self, tenant: TenantId, x: Vec<f32>) -> Result<Admission> {
-        self.seen.insert(tenant);
-        let (_, client) = self.routed_client(tenant)?;
-        client.predict(tenant, x)
+        self.admit(tenant, x, None)
     }
 
-    /// Route a Feedback to the tenant's node.
+    /// Route a Feedback to the tenant's node, with retry + failover.
     pub fn feedback(&mut self, tenant: TenantId, x: Vec<f32>, label: u32) -> Result<Admission> {
-        self.seen.insert(tenant);
-        let (_, client) = self.routed_client(tenant)?;
-        client.feedback(tenant, x, label)
+        self.admit(tenant, x, Some(label))
     }
 
-    /// Advance every alive node's pump clock one tick; completions from
-    /// all nodes, in node order (deterministic given deterministic
-    /// per-node behavior).
-    pub fn pump_all(&mut self) -> Result<Vec<Completion>> {
-        let mut out = Vec::new();
-        for node in self.nodes.iter_mut().filter(|n| n.alive) {
-            out.extend(node.client.pump()?);
+    /// The shared admission path. One `req_id` for the whole call — all
+    /// same-node retries and cross-node failovers reuse it, which is
+    /// what keeps an ambiguous outcome at-most-once (module docs).
+    fn admit(&mut self, tenant: TenantId, x: Vec<f32>, label: Option<u32>) -> Result<Admission> {
+        self.seen.insert(tenant);
+        let req_id = self.next_req_id;
+        self.next_req_id += 1;
+        // hop bound: each failed hop kills a node, so at most node_count
+        // hops before the fleet is provably out of capacity
+        for _hop in 0..self.nodes.len().max(1) {
+            let Some(idx) = self.route(tenant) else {
+                bail!("no routable node for tenant {tenant}");
+            };
+            match self.try_admit_on(idx, tenant, &x, label, req_id) {
+                Ok(adm) => {
+                    self.health.on_success(idx, self.tick);
+                    return Ok(adm);
+                }
+                Err(AdmitFail::Fatal(e)) => {
+                    return Err(crate::util::error::Error::from(e))
+                        .with_context(|| format!("admission on node '{}'", self.node_name(idx)));
+                }
+                Err(AdmitFail::NodeDown) => {
+                    // the node was declared dead inside try_admit_on;
+                    // best-effort state recovery, then re-route
+                    self.health.counters.failovers += 1;
+                    self.recover_after_death();
+                }
+            }
         }
+        bail!("no surviving node admitted tenant {tenant}'s request");
+    }
+
+    /// Up to `1 + max_retries` attempts against ONE node, reconnecting
+    /// a poisoned connection before each retry. Every retryable fault
+    /// strikes the health board; budget exhaustion declares the node
+    /// dead (the caller fails over).
+    fn try_admit_on(
+        &mut self,
+        idx: usize,
+        tenant: TenantId,
+        x: &[f32],
+        label: Option<u32>,
+        req_id: u64,
+    ) -> std::result::Result<Admission, AdmitFail> {
+        let budget = self.cfg.client.max_retries;
+        for attempt in 0..=budget {
+            // reconnect-and-rehandshake a connection poisoned by an
+            // earlier transport fault (same client_id, so the dedupe
+            // log still recognizes our req_id)
+            let reconnect_failed = {
+                let Some(node) = self.nodes.get_mut(idx) else {
+                    return Err(AdmitFail::NodeDown);
+                };
+                if node.client.is_broken() {
+                    self.health.counters.reconnects += 1;
+                    match node.client.reconnect() {
+                        Ok(()) => false,
+                        Err(e) if e.is_retryable() => true,
+                        Err(e) => return Err(AdmitFail::Fatal(e)),
+                    }
+                } else {
+                    false
+                }
+            };
+            if reconnect_failed {
+                self.health.on_failure(idx, self.tick, "reconnect failed");
+                if attempt < budget {
+                    self.health.counters.rpc_retries += 1;
+                }
+                continue;
+            }
+            let res = {
+                let Some(node) = self.nodes.get_mut(idx) else {
+                    return Err(AdmitFail::NodeDown);
+                };
+                match label {
+                    None => node.client.predict_req(tenant, x.to_vec(), req_id),
+                    Some(l) => node.client.feedback_req(tenant, x.to_vec(), l, req_id),
+                }
+            };
+            match res {
+                Ok(adm) => return Ok(adm),
+                Err(e) if e.is_retryable() => {
+                    // cause strings are FIXED (no io error text): the
+                    // fleet_health transition log must replay
+                    // bit-identically across runs of the same scenario
+                    self.health.on_failure(idx, self.tick, "rpc transport fault");
+                    if attempt < budget {
+                        self.health.counters.rpc_retries += 1;
+                    }
+                }
+                Err(e) => return Err(AdmitFail::Fatal(e)),
+            }
+        }
+        self.health
+            .mark_dead(idx, self.tick, "rpc retry budget exhausted");
+        Err(AdmitFail::NodeDown)
+    }
+
+    /// Best-effort checkpoint recovery after a death: re-install the
+    /// configured checkpoint on every routable node. Safe to apply
+    /// broadly — restore provenance (DESIGN.md §10) never replaces newer
+    /// live adapters, so survivors only gain tenants they lack (the dead
+    /// node's), at the freshest checkpointed weights.
+    fn recover_after_death(&mut self) {
+        let Some(path) = self.cfg.recovery_checkpoint.clone() else {
+            return;
+        };
+        for idx in 0..self.nodes.len() {
+            if !self.health.is_routable(idx) {
+                continue;
+            }
+            let res = {
+                let Some(node) = self.nodes.get_mut(idx) else {
+                    continue;
+                };
+                node.client.restore_state(&path)
+            };
+            match res {
+                Ok((_tenants, installed, _max_version)) => {
+                    self.health.counters.recovered_tenants += installed;
+                }
+                Err(e) if e.is_retryable() => {
+                    self.health.on_failure(idx, self.tick, "recovery restore fault");
+                }
+                // a missing/invalid checkpoint is not the node's fault;
+                // recovery stays best-effort
+                Err(_) => {}
+            }
+        }
+    }
+
+    /// Probe every suspect node whose tick-backoff expired: reconnect if
+    /// needed, then the cheapest RPC (`QueueDepth`). One success returns
+    /// the node to `Alive` (its tenants route home); failures strike.
+    fn probe_suspects(&mut self) {
+        for idx in 0..self.nodes.len() {
+            if !self.health.probe_due(idx, self.tick) {
+                continue;
+            }
+            self.health.counters.probes += 1;
+            let res = {
+                let Some(node) = self.nodes.get_mut(idx) else {
+                    continue;
+                };
+                if node.client.is_broken() {
+                    self.health.counters.reconnects += 1;
+                    node.client.reconnect().and_then(|()| node.client.queue_depth())
+                } else {
+                    node.client.queue_depth()
+                }
+            };
+            match res {
+                Ok(_) => self.health.on_success(idx, self.tick),
+                Err(_) => {
+                    self.health.counters.probe_failures += 1;
+                    self.health.on_failure(idx, self.tick, "probe failed");
+                }
+            }
+        }
+    }
+
+    /// Advance the fleet one pump tick: probe due suspects, pump every
+    /// routable node, then run the background rebalance cadence.
+    /// Completions come back in node order (deterministic given
+    /// deterministic per-node behavior). A node failing its pump is
+    /// struck (and skipped this tick), not fatal — the health machine
+    /// and the next ticks' probes own its fate.
+    pub fn pump_all(&mut self) -> Result<Vec<Completion>> {
+        self.tick += 1;
+        self.probe_suspects();
+        let mut out = Vec::new();
+        for idx in 0..self.nodes.len() {
+            if !self.health.is_routable(idx) {
+                continue;
+            }
+            let res = {
+                // routable ⇒ idx in range; get_mut keeps this panic-free
+                let Some(node) = self.nodes.get_mut(idx) else {
+                    continue;
+                };
+                node.client.pump()
+            };
+            match res {
+                Ok(cs) => out.extend(cs),
+                Err(e) if e.is_retryable() => {
+                    self.health.on_failure(idx, self.tick, "pump transport fault");
+                }
+                Err(e) => return Err(crate::util::error::Error::from(e)),
+            }
+        }
+        self.maybe_rebalance()?;
         Ok(out)
     }
 
-    /// Pump every alive node until its queue is empty.
+    /// Pump every routable node until its queue is empty.
     pub fn pump_drain_all(&mut self) -> Result<Vec<Completion>> {
         let mut out = Vec::new();
-        for node in self.nodes.iter_mut().filter(|n| n.alive) {
-            out.extend(node.client.pump_drain()?);
+        for idx in 0..self.nodes.len() {
+            if !self.health.is_routable(idx) {
+                continue;
+            }
+            let Some(node) = self.nodes.get_mut(idx) else {
+                continue;
+            };
+            out.extend(
+                node.client
+                    .pump_drain()
+                    .map_err(crate::util::error::Error::from)?,
+            );
         }
         Ok(out)
     }
 
-    /// Total queued requests across alive nodes.
+    /// Total queued requests across routable nodes.
     pub fn queue_depth_total(&mut self) -> Result<usize> {
         let mut total = 0;
-        for node in self.nodes.iter_mut().filter(|n| n.alive) {
-            total += node.client.queue_depth()?;
+        for idx in 0..self.nodes.len() {
+            if !self.health.is_routable(idx) {
+                continue;
+            }
+            let Some(node) = self.nodes.get_mut(idx) else {
+                continue;
+            };
+            total += node
+                .client
+                .queue_depth()
+                .map_err(crate::util::error::Error::from)?;
         }
         Ok(total)
     }
 
-    /// Pull every alive node's `skip2lora/obs/v1` snapshot and fold them
+    /// Pull every routable node's `skip2lora/obs/v1` snapshot, fold them
     /// into ONE valid fleet document via the property-tested merge laws
-    /// (`obs::fleet`). The result re-validates against the schema.
+    /// (`obs::fleet`), and attach this router's `fleet_health` section
+    /// (states, counters, transition log — see `fleet/health.rs`).
     pub fn fleet_obs(&mut self) -> Result<Json> {
         let mut texts = Vec::new();
-        for node in self.nodes.iter_mut().filter(|n| n.alive) {
-            texts.push(node.client.observe()?);
+        for idx in 0..self.nodes.len() {
+            if !self.health.is_routable(idx) {
+                continue;
+            }
+            let Some(node) = self.nodes.get_mut(idx) else {
+                continue;
+            };
+            texts.push(
+                node.client
+                    .observe()
+                    .map_err(crate::util::error::Error::from)?,
+            );
         }
         if texts.is_empty() {
-            bail!("no alive node to observe");
+            bail!("no routable node to observe");
         }
-        merge_texts(&texts).context("fleet obs merge")
+        let mut merged = merge_texts(&texts).context("fleet obs merge")?;
+        let names: Vec<String> = self.nodes.iter().map(|n| n.name.clone()).collect();
+        if let Json::Obj(m) = &mut merged {
+            m.insert(
+                "fleet_health".to_string(),
+                self.health.to_json(self.tick, &names),
+            );
+        }
+        Ok(merged)
     }
 
     /// Per-node load from each node's own observability snapshot: the
-    /// registry shard stats (`shards[].tenants`) summed per node. Dead
-    /// nodes report 0 and are excluded from the mean.
+    /// registry shard stats (`shards[].tenants`) summed per node.
+    /// Non-routable nodes report 0 and are excluded from the mean.
     pub fn skew(&mut self) -> Result<SkewReport> {
         let mut per_node = vec![0u64; self.nodes.len()];
         for idx in 0..self.nodes.len() {
-            if !self.nodes[idx].alive {
+            if !self.health.is_routable(idx) {
                 continue;
             }
-            let text = self.nodes[idx].client.observe()?;
-            let doc = Json::parse(&text)
-                .with_context(|| format!("node '{}' observe parse", self.nodes[idx].name))?;
+            let name = self.nodes[idx].name.clone();
+            let text = self.nodes[idx]
+                .client
+                .observe()
+                .map_err(crate::util::error::Error::from)?;
+            let doc =
+                Json::parse(&text).with_context(|| format!("node '{name}' observe parse"))?;
             let shards = doc
                 .get("shards")
                 .and_then(|s| s.as_arr())
-                .with_context(|| format!("node '{}' snapshot missing shards", self.nodes[idx].name))?;
+                .with_context(|| format!("node '{name}' snapshot missing shards"))?;
             per_node[idx] = shards
                 .iter()
                 .filter_map(|sh| sh.get("tenants").and_then(|t| t.as_f64()))
                 .sum::<f64>() as u64;
         }
-        let alive: Vec<u64> = self
-            .nodes
-            .iter()
-            .enumerate()
-            .filter(|(_, n)| n.alive)
-            .map(|(i, _)| per_node[i])
+        let alive: Vec<u64> = (0..self.nodes.len())
+            .filter(|&i| self.health.is_routable(i))
+            .map(|i| per_node[i])
             .collect();
         let mean = alive.iter().sum::<u64>() as f64 / alive.len().max(1) as f64;
         let max = alive.iter().copied().max().unwrap_or(0) as f64;
@@ -263,32 +615,47 @@ impl FleetRouter {
     /// resume source → record the placement. Returns the version the
     /// destination published.
     pub fn migrate_tenant(&mut self, tenant: TenantId, dst: usize) -> Result<u64> {
-        if !self.nodes[dst].alive {
-            bail!("cannot migrate tenant {tenant} to dead node '{}'", self.nodes[dst].name);
+        if !self.health.is_routable(dst) {
+            bail!(
+                "cannot migrate tenant {tenant} to non-routable node '{}'",
+                self.nodes[dst].name
+            );
         }
         let src = match self.route(tenant) {
             Some(idx) => idx,
-            None => bail!("no alive node currently owns tenant {tenant}"),
+            None => bail!("no routable node currently owns tenant {tenant}"),
         };
         if src == dst {
             bail!("tenant {tenant} already lives on node '{}'", self.nodes[dst].name);
         }
         // 1. drain: closes admissions and JOINS in-flight fine-tunes, so
         //    the export below carries the freshest published adapters
-        let _drained = self.nodes[src].client.drain()?;
+        let _drained = self.nodes[src]
+            .client
+            .drain()
+            .map_err(crate::util::error::Error::from)?;
         // 2-3. export from source, import on destination; on any failure
         //    the source is resumed so a botched migration never leaves a
         //    healthy node refusing traffic
         let moved = (|| -> Result<u64> {
-            let bytes = self.nodes[src].client.export_tenant(tenant)?;
-            let (imported, version) = self.nodes[dst].client.import_tenant(bytes)?;
+            let bytes = self.nodes[src]
+                .client
+                .export_tenant(tenant)
+                .map_err(crate::util::error::Error::from)?;
+            let (imported, version) = self.nodes[dst]
+                .client
+                .import_tenant(bytes)
+                .map_err(crate::util::error::Error::from)?;
             if imported != tenant {
                 bail!("import returned tenant {imported}, expected {tenant}");
             }
             Ok(version)
         })();
         // 4. the source keeps serving its OTHER tenants
-        self.nodes[src].client.resume()?;
+        self.nodes[src]
+            .client
+            .resume()
+            .map_err(crate::util::error::Error::from)?;
         let version = moved?;
         self.placements.insert(tenant, dst);
         Ok(version)
@@ -299,7 +666,7 @@ impl FleetRouter {
     /// its rendezvous successor among the surviving nodes, and mark it
     /// dead. The caller can then `NodeServer::shutdown` the process.
     pub fn decommission(&mut self, idx: usize) -> Result<MigrationReport> {
-        if !self.nodes[idx].alive {
+        if self.health.state(idx) == NodeState::Dead {
             bail!("node '{}' is already dead", self.nodes[idx].name);
         }
         if self.alive_count() < 2 {
@@ -307,13 +674,16 @@ impl FleetRouter {
         }
         let tenants = self.tenants_on(idx);
         let mut report = MigrationReport {
-            drained: self.nodes[idx].client.drain()?,
+            drained: self.nodes[idx]
+                .client
+                .drain()
+                .map_err(crate::util::error::Error::from)?,
             migrated: Vec::new(),
             skipped: Vec::new(),
         };
         // mark dead FIRST so route() already answers with the successor;
         // the wire connection stays usable for the exports below
-        self.nodes[idx].alive = false;
+        self.health.mark_dead(idx, self.tick, "decommission");
         for tenant in tenants {
             let dst = match self.route(tenant) {
                 Some(d) => d,
@@ -327,9 +697,12 @@ impl FleetRouter {
                     report.skipped.push(tenant);
                     continue;
                 }
-                Err(e) => return Err(e),
+                Err(e) => return Err(crate::util::error::Error::from(e)),
             };
-            let (imported, version) = self.nodes[dst].client.import_tenant(bytes)?;
+            let (imported, version) = self.nodes[dst]
+                .client
+                .import_tenant(bytes)
+                .map_err(crate::util::error::Error::from)?;
             if imported != tenant {
                 bail!("import returned tenant {imported}, expected {tenant}");
             }
@@ -350,16 +723,16 @@ impl FleetRouter {
         if report.max_over_mean <= threshold {
             return Ok(None);
         }
-        let alive = |i: &usize| self.nodes[*i].alive;
+        let routable = |i: &usize| self.health.is_routable(*i);
         let hot = match (0..self.nodes.len())
-            .filter(alive)
+            .filter(routable)
             .max_by_key(|&i| report.per_node_tenants[i])
         {
             Some(i) => i,
             None => return Ok(None),
         };
         let cold = match (0..self.nodes.len())
-            .filter(alive)
+            .filter(routable)
             .min_by_key(|&i| report.per_node_tenants[i])
         {
             Some(i) if i != hot => i,
@@ -371,6 +744,31 @@ impl FleetRouter {
         };
         self.migrate_tenant(tenant, cold)?;
         Ok(Some((tenant, cold)))
+    }
+
+    /// The background cadence: every `every_ticks` pump ticks (and past
+    /// any cooldown), trigger a single rebalance step when skew exceeds
+    /// the high watermark. See [`RebalanceConfig`] for the hysteresis.
+    fn maybe_rebalance(&mut self) -> Result<()> {
+        let Some(rb) = self.cfg.rebalance.clone() else {
+            return Ok(());
+        };
+        if rb.every_ticks == 0 || self.tick % rb.every_ticks != 0 {
+            return Ok(());
+        }
+        if self.last_rebalance_tick > 0
+            && self.tick.saturating_sub(self.last_rebalance_tick) < rb.cooldown_ticks
+        {
+            return Ok(());
+        }
+        if self.skew()?.max_over_mean <= rb.high_watermark {
+            return Ok(());
+        }
+        if self.rebalance_once(rb.low_watermark)?.is_some() {
+            self.health.counters.rebalances += 1;
+            self.last_rebalance_tick = self.tick;
+        }
+        Ok(())
     }
 }
 

@@ -1,4 +1,4 @@
-//! [`NodeClient`] — a blocking `skip2lora/wire/v1` client.
+//! [`NodeClient`] — a blocking, fault-hardened `skip2lora/wire` client.
 //!
 //! One client drives one connection, strictly request→response:
 //! [`NodeClient::connect`] performs the `Hello`/`HelloOk` handshake (a
@@ -8,20 +8,40 @@
 //! the protocol's strict alternation makes the client this simple, and
 //! keeps the pump clock under the caller's control.
 //!
+//! Unattended-edge hardening (DESIGN.md §15): every socket operation is
+//! bounded by [`ClientConfig`] timeouts (`TcpStream::connect_timeout`,
+//! `set_read_timeout`, `set_write_timeout`), so a peer that dies mid-read
+//! can stall a call for at most `rpc_timeout` — never hang it. Errors
+//! split into a taxonomy callers can branch on:
+//!
+//! - [`ClientError::Transport`] — the socket failed (refused, reset, cut
+//!   mid-frame, timed out). Carries `retryable`: the request may not have
+//!   been executed, so a retry (after [`NodeClient::reconnect`]) is
+//!   reasonable — with the SAME `req_id` when the outcome was ambiguous,
+//!   so the server's admission-dedupe log keeps it at-most-once.
+//! - [`ClientError::Protocol`] — the peer violated `skip2lora/wire`
+//!   (garbage frame, wrong version, unauthorized). Retrying cannot help.
+//! - [`ClientError::Server`] — the server executed the request and
+//!   reported failure (`WireResponse::Error`). Not a transport fault.
+//!
+//! A transport fault poisons the connection (a half-read frame cannot be
+//! resynchronized); further calls fail fast with a retryable error until
+//! [`NodeClient::reconnect`] re-dials and re-handshakes.
+//!
 //! Typed-surface convention: data-plane admissions return [`Admission`]
 //! (queued vs typed [`RejectReason`] — both are normal outcomes a router
-//! must branch on), while transport faults and server-side failures
-//! (`WireResponse::Error`) surface as `Err`.
+//! must branch on), while faults surface as `Err(ClientError)`.
 
-use std::net::TcpStream;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use crate::nn::lora::LoraAdapter;
 use crate::serve::server::{Completion, DrainReport, RejectReason};
 use crate::serve::TenantId;
-use crate::util::error::{bail, Context, Result};
 
 use super::wire::{
-    read_response, write_request, WireRequest, WireResponse, WIRE_VERSION,
+    decode_response, encode_request, WireRequest, WireResponse, MAX_FRAME_BYTES, WIRE_VERSION,
 };
 
 /// Outcome of a Predict/Feedback admission attempt — mirrors the
@@ -32,53 +52,296 @@ pub enum Admission {
     Rejected(RejectReason),
 }
 
+/// A socket-layer fault. `retryable` means the request may simply not
+/// have reached (or not have answered from) the peer — reconnecting and
+/// retrying is reasonable; `false` means the fault is structural (bad
+/// address, refused credentials at the socket layer) and retrying the
+/// same way cannot help.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportError {
+    pub retryable: bool,
+    pub msg: String,
+}
+
+/// The client-side error taxonomy (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientError {
+    Transport(TransportError),
+    Protocol(String),
+    Server(String),
+}
+
+impl ClientError {
+    fn transport(retryable: bool, msg: impl Into<String>) -> Self {
+        ClientError::Transport(TransportError {
+            retryable,
+            msg: msg.into(),
+        })
+    }
+
+    fn io(ctx: &str, e: &std::io::Error) -> Self {
+        // every io fault on an established flow is worth one retry: the
+        // taxonomy distinguishes "socket broke" from "peer is insane",
+        // not transient from permanent — the health machine does that
+        Self::transport(true, format!("{ctx}: {e}"))
+    }
+
+    /// Should a caller reconnect-and-retry this request?
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ClientError::Transport(t) if t.retryable)
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Transport(t) => write!(
+                f,
+                "transport error ({}): {}",
+                if t.retryable { "retryable" } else { "fatal" },
+                t.msg
+            ),
+            ClientError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+            ClientError::Server(msg) => write!(f, "server error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Per-call result alias for the client surface.
+pub type ClientResult<T> = std::result::Result<T, ClientError>;
+
+/// Socket-level hardening knobs plus the handshake credentials.
+///
+/// `backoff_ticks` is deliberately a PUMP-TICK count, not a duration:
+/// the fleet health machine (`fleet/health.rs`) schedules probe retries
+/// of suspect nodes on the deterministic pump clock, so recovery replays
+/// bit-identically in tests — wall-clock backoff would not.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientConfig {
+    /// bound on `TcpStream::connect` (refused/black-holed dials)
+    pub connect_timeout: Duration,
+    /// bound on every request→response exchange (read + write timeouts)
+    pub rpc_timeout: Duration,
+    /// per-RPC retry budget a router may spend on retryable faults
+    /// against the SAME node before failing over
+    pub max_retries: u32,
+    /// pump ticks a suspect node waits before its next probe
+    pub backoff_ticks: u64,
+    /// shared-secret presented in the `Hello`; must match the server's
+    pub token: Option<String>,
+    /// logical client identity for admission dedupe; 0 opts out
+    pub client_id: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(5),
+            rpc_timeout: Duration::from_secs(5),
+            max_retries: 2,
+            backoff_ticks: 4,
+            token: None,
+            client_id: 0,
+        }
+    }
+}
+
 /// A connected, handshaken wire client for one node.
 pub struct NodeClient {
     stream: TcpStream,
+    addr: String,
+    cfg: ClientConfig,
+    /// set on any transport fault: a half-exchanged connection cannot be
+    /// resynchronized, so calls fail fast until `reconnect`
+    broken: bool,
 }
 
 impl NodeClient {
-    /// Connect and handshake. Fails with a typed error if the peer is
-    /// not a `skip2lora/wire/v1` server at exactly [`WIRE_VERSION`].
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream =
-            TcpStream::connect(addr).with_context(|| format!("connect to node at {addr}"))?;
-        stream.set_nodelay(true).context("set TCP_NODELAY")?;
-        let mut client = Self { stream };
-        match client.rpc(&WireRequest::Hello {
+    /// Connect and handshake with default [`ClientConfig`]. Fails with a
+    /// typed error if the peer is not a `skip2lora/wire` server at
+    /// exactly [`WIRE_VERSION`].
+    pub fn connect(addr: &str) -> ClientResult<Self> {
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect and handshake with explicit timeouts and credentials.
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> ClientResult<Self> {
+        let stream = dial(addr, &cfg)?;
+        let mut client = Self {
+            stream,
+            addr: addr.to_string(),
+            cfg,
+            broken: false,
+        };
+        client.handshake()?;
+        Ok(client)
+    }
+
+    /// Drop the (possibly poisoned) connection, re-dial, re-handshake.
+    /// The config — including `client_id`, which keys the server's
+    /// admission-dedupe log — carries over, so a retry after reconnect
+    /// can safely reuse an ambiguous request's `req_id`.
+    pub fn reconnect(&mut self) -> ClientResult<()> {
+        self.stream = dial(&self.addr, &self.cfg)?;
+        self.broken = false;
+        self.handshake()
+    }
+
+    /// Has a transport fault poisoned this connection?
+    pub fn is_broken(&self) -> bool {
+        self.broken
+    }
+
+    pub fn config(&self) -> &ClientConfig {
+        &self.cfg
+    }
+
+    fn handshake(&mut self) -> ClientResult<()> {
+        let hello = WireRequest::Hello {
             version: WIRE_VERSION,
-        })? {
-            WireResponse::HelloOk { version } if version == WIRE_VERSION => Ok(client),
-            WireResponse::HelloOk { version } => {
-                bail!("server answered hello at wire version {version}, expected {WIRE_VERSION}")
+            token: self.cfg.token.clone(),
+            client_id: self.cfg.client_id,
+        };
+        match self.rpc(&hello)? {
+            WireResponse::HelloOk { version } if version == WIRE_VERSION => Ok(()),
+            WireResponse::HelloOk { version } => Err(ClientError::Protocol(format!(
+                "server answered hello at wire version {version}, expected {WIRE_VERSION}"
+            ))),
+            WireResponse::Unauthorized => Err(ClientError::Server(
+                "handshake unauthorized: wrong or missing auth token".into(),
+            )),
+            WireResponse::Busy { limit } => Err(ClientError::transport(
+                true,
+                format!("server at connection cap ({limit})"),
+            )),
+            WireResponse::Error { msg } => {
+                Err(ClientError::Server(format!("handshake rejected: {msg}")))
             }
-            WireResponse::Error { msg } => bail!("handshake rejected: {msg}"),
-            other => bail!("unexpected handshake response {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected handshake response {other:?}"
+            ))),
         }
     }
 
-    /// One raw request→response exchange. The building block every
-    /// typed method below uses; public for tests and tooling that want
-    /// to speak frames directly.
-    pub fn rpc(&mut self, req: &WireRequest) -> Result<WireResponse> {
-        write_request(&mut self.stream, req)?;
-        read_response(&mut self.stream)
+    /// One raw request→response exchange, bounded by `rpc_timeout` on
+    /// both directions. The building block every typed method below
+    /// uses; public for tests and tooling that want to speak frames
+    /// directly.
+    pub fn rpc(&mut self, req: &WireRequest) -> ClientResult<WireResponse> {
+        if self.broken {
+            return Err(ClientError::transport(
+                true,
+                "connection poisoned by an earlier transport fault; reconnect first",
+            ));
+        }
+        let body = encode_request(req);
+        if let Err(e) = self.write_frame_raw(&body) {
+            self.broken = true;
+            return Err(e);
+        }
+        let resp_body = match self.read_frame_raw() {
+            Ok(b) => b,
+            Err(e) => {
+                self.broken = true;
+                return Err(e);
+            }
+        };
+        // decode failures are NOT transport faults: the socket delivered
+        // a complete frame, its contents were nonsense
+        decode_response(&resp_body).map_err(|e| ClientError::Protocol(e.to_string()))
     }
 
-    pub fn predict(&mut self, tenant: TenantId, x: Vec<f32>) -> Result<Admission> {
-        match self.rpc(&WireRequest::Predict { tenant, x })? {
+    fn write_frame_raw(&mut self, body: &[u8]) -> ClientResult<()> {
+        if body.is_empty() || body.len() > MAX_FRAME_BYTES {
+            return Err(ClientError::Protocol(format!(
+                "refusing to write a {}-byte frame (max {MAX_FRAME_BYTES})",
+                body.len()
+            )));
+        }
+        let len = u32::try_from(body.len())
+            .map_err(|_| ClientError::Protocol("frame length does not fit in u32".into()))?;
+        self.stream
+            .write_all(&len.to_le_bytes())
+            .map_err(|e| ClientError::io("write frame length", &e))?;
+        self.stream
+            .write_all(body)
+            .map_err(|e| ClientError::io("write frame body", &e))?;
+        self.stream
+            .flush()
+            .map_err(|e| ClientError::io("flush frame", &e))
+    }
+
+    fn read_frame_raw(&mut self) -> ClientResult<Vec<u8>> {
+        let mut len_buf = [0u8; 4];
+        self.stream
+            .read_exact(&mut len_buf)
+            .map_err(|e| ClientError::io("read frame length", &e))?;
+        let len = usize::try_from(u32::from_le_bytes(len_buf))
+            .map_err(|_| ClientError::Protocol("frame length does not fit in usize".into()))?;
+        if len == 0 || len > MAX_FRAME_BYTES {
+            return Err(ClientError::Protocol(format!(
+                "announced frame of {len} bytes outside (0, {MAX_FRAME_BYTES}]"
+            )));
+        }
+        let mut body = vec![0u8; len];
+        self.stream
+            .read_exact(&mut body)
+            .map_err(|e| ClientError::io("read frame body", &e))?;
+        Ok(body)
+    }
+
+    fn admission(resp: WireResponse, what: &str) -> ClientResult<Admission> {
+        match resp {
             WireResponse::Queued { ticket } => Ok(Admission::Queued { ticket }),
             WireResponse::Rejected(reason) => Ok(Admission::Rejected(reason)),
-            other => bail!("unexpected response to Predict: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to {what}: {other:?}"
+            ))),
         }
     }
 
-    pub fn feedback(&mut self, tenant: TenantId, x: Vec<f32>, label: u32) -> Result<Admission> {
-        match self.rpc(&WireRequest::Feedback { tenant, x, label })? {
-            WireResponse::Queued { ticket } => Ok(Admission::Queued { ticket }),
-            WireResponse::Rejected(reason) => Ok(Admission::Rejected(reason)),
-            other => bail!("unexpected response to Feedback: {other:?}"),
-        }
+    pub fn predict(&mut self, tenant: TenantId, x: Vec<f32>) -> ClientResult<Admission> {
+        self.predict_req(tenant, x, 0)
+    }
+
+    /// `Predict` with an explicit `req_id` (the at-most-once handle). A
+    /// retry of an ambiguous outcome MUST pass the same `req_id`.
+    pub fn predict_req(
+        &mut self,
+        tenant: TenantId,
+        x: Vec<f32>,
+        req_id: u64,
+    ) -> ClientResult<Admission> {
+        let resp = self.rpc(&WireRequest::Predict { tenant, x, req_id })?;
+        Self::admission(resp, "Predict")
+    }
+
+    pub fn feedback(
+        &mut self,
+        tenant: TenantId,
+        x: Vec<f32>,
+        label: u32,
+    ) -> ClientResult<Admission> {
+        self.feedback_req(tenant, x, label, 0)
+    }
+
+    /// `Feedback` with an explicit `req_id` (the at-most-once handle).
+    pub fn feedback_req(
+        &mut self,
+        tenant: TenantId,
+        x: Vec<f32>,
+        label: u32,
+        req_id: u64,
+    ) -> ClientResult<Admission> {
+        let resp = self.rpc(&WireRequest::Feedback {
+            tenant,
+            x,
+            label,
+            req_id,
+        })?;
+        Self::admission(resp, "Feedback")
     }
 
     /// Install externally trained adapters; returns the new published
@@ -87,116 +350,181 @@ impl NodeClient {
         &mut self,
         tenant: TenantId,
         adapters: Vec<LoraAdapter>,
-    ) -> Result<std::result::Result<u64, RejectReason>> {
+    ) -> ClientResult<std::result::Result<u64, RejectReason>> {
         match self.rpc(&WireRequest::SwapAdapters { tenant, adapters })? {
             WireResponse::Swapped { version } => Ok(Ok(version)),
             WireResponse::Rejected(reason) => Ok(Err(reason)),
-            other => bail!("unexpected response to SwapAdapters: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to SwapAdapters: {other:?}"
+            ))),
         }
     }
 
     /// Advance the node's pump clock one tick; returns what completed.
-    pub fn pump(&mut self) -> Result<Vec<Completion>> {
+    pub fn pump(&mut self) -> ClientResult<Vec<Completion>> {
         match self.rpc(&WireRequest::Pump)? {
             WireResponse::Completions(cs) => {
                 Ok(cs.into_iter().map(|c| c.into_completion()).collect())
             }
-            other => bail!("unexpected response to Pump: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to Pump: {other:?}"
+            ))),
         }
     }
 
     /// Pump until the node's queue is empty; returns every completion.
-    pub fn pump_drain(&mut self) -> Result<Vec<Completion>> {
+    pub fn pump_drain(&mut self) -> ClientResult<Vec<Completion>> {
         match self.rpc(&WireRequest::PumpDrain)? {
             WireResponse::Completions(cs) => {
                 Ok(cs.into_iter().map(|c| c.into_completion()).collect())
             }
-            other => bail!("unexpected response to PumpDrain: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to PumpDrain: {other:?}"
+            ))),
         }
     }
 
-    pub fn queue_depth(&mut self) -> Result<usize> {
+    pub fn queue_depth(&mut self) -> ClientResult<usize> {
         match self.rpc(&WireRequest::QueueDepth)? {
-            WireResponse::QueueDepthOk { queued } => Ok(queued as usize),
-            other => bail!("unexpected response to QueueDepth: {other:?}"),
+            WireResponse::QueueDepthOk { queued } => usize::try_from(queued).map_err(|_| {
+                ClientError::Protocol(format!("queue depth {queued} does not fit in usize"))
+            }),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to QueueDepth: {other:?}"
+            ))),
         }
     }
 
     /// The node's `skip2lora/obs/v1` snapshot as JSON text — feed N of
     /// these into `obs::fleet::merge_texts` for the fleet view.
-    pub fn observe(&mut self) -> Result<String> {
+    pub fn observe(&mut self) -> ClientResult<String> {
         match self.rpc(&WireRequest::Observe)? {
             WireResponse::Observed { json } => Ok(json),
-            other => bail!("unexpected response to Observe: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to Observe: {other:?}"
+            ))),
         }
     }
 
     /// Checkpoint the node's registry to a path ON THE NODE'S HOST;
     /// returns (tenants, bytes).
-    pub fn save_state(&mut self, path: &str) -> Result<(u64, u64)> {
+    pub fn save_state(&mut self, path: &str) -> ClientResult<(u64, u64)> {
         match self.rpc(&WireRequest::SaveState { path: path.into() })? {
             WireResponse::Persisted { tenants, bytes } => Ok((tenants, bytes)),
-            WireResponse::Rejected(reason) => bail!("SaveState rejected: {reason:?}"),
-            other => bail!("unexpected response to SaveState: {other:?}"),
+            WireResponse::Rejected(reason) => {
+                Err(ClientError::Server(format!("SaveState rejected: {reason:?}")))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to SaveState: {other:?}"
+            ))),
         }
     }
 
     /// Install a checkpoint from the node's host filesystem; returns
     /// (tenants, installed, max_version).
-    pub fn restore_state(&mut self, path: &str) -> Result<(u64, u64, u64)> {
+    pub fn restore_state(&mut self, path: &str) -> ClientResult<(u64, u64, u64)> {
         match self.rpc(&WireRequest::RestoreState { path: path.into() })? {
             WireResponse::Restored {
                 tenants,
                 installed,
                 max_version,
             } => Ok((tenants, installed, max_version)),
-            WireResponse::Rejected(reason) => bail!("RestoreState rejected: {reason:?}"),
-            other => bail!("unexpected response to RestoreState: {other:?}"),
+            WireResponse::Rejected(reason) => Err(ClientError::Server(format!(
+                "RestoreState rejected: {reason:?}"
+            ))),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to RestoreState: {other:?}"
+            ))),
         }
     }
 
     /// Pull one tenant's published adapters as a validated checkpoint
     /// payload — the source half of a migration.
-    pub fn export_tenant(&mut self, tenant: TenantId) -> Result<Vec<u8>> {
+    pub fn export_tenant(&mut self, tenant: TenantId) -> ClientResult<Vec<u8>> {
         match self.rpc(&WireRequest::ExportTenant { tenant })? {
             WireResponse::TenantExported { bytes } => Ok(bytes),
-            WireResponse::Error { msg } => bail!("ExportTenant failed: {msg}"),
-            other => bail!("unexpected response to ExportTenant: {other:?}"),
+            WireResponse::Error { msg } => {
+                Err(ClientError::Server(format!("ExportTenant failed: {msg}")))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to ExportTenant: {other:?}"
+            ))),
         }
     }
 
     /// Install an exported tenant payload — the destination half of a
     /// migration. The destination allocates the version.
-    pub fn import_tenant(&mut self, bytes: Vec<u8>) -> Result<(TenantId, u64)> {
+    pub fn import_tenant(&mut self, bytes: Vec<u8>) -> ClientResult<(TenantId, u64)> {
         match self.rpc(&WireRequest::ImportTenant { bytes })? {
             WireResponse::TenantImported { tenant, version } => Ok((tenant, version)),
-            WireResponse::Error { msg } => bail!("ImportTenant failed: {msg}"),
-            other => bail!("unexpected response to ImportTenant: {other:?}"),
+            WireResponse::Error { msg } => {
+                Err(ClientError::Server(format!("ImportTenant failed: {msg}")))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to ImportTenant: {other:?}"
+            ))),
         }
     }
 
     /// Close admissions and flush the node (see `FleetServer::drain`);
     /// the report lets the caller balance the books.
-    pub fn drain(&mut self) -> Result<DrainReport> {
+    pub fn drain(&mut self) -> ClientResult<DrainReport> {
         match self.rpc(&WireRequest::Drain)? {
             WireResponse::Drained {
                 queued_at_start,
                 finetunes_joined,
                 completions,
             } => Ok(DrainReport {
-                queued_at_start: queued_at_start as usize,
-                finetunes_joined: finetunes_joined as usize,
+                queued_at_start: queued_at_start as usize,  // s2l-lint: allow(cast) reason=u64 to usize widening on our targets
+                finetunes_joined: finetunes_joined as usize,  // s2l-lint: allow(cast) reason=u64 to usize widening on our targets
                 completions: completions.into_iter().map(|c| c.into_completion()).collect(),
             }),
-            other => bail!("unexpected response to Drain: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to Drain: {other:?}"
+            ))),
         }
     }
 
     /// Re-open admissions after a drain.
-    pub fn resume(&mut self) -> Result<()> {
+    pub fn resume(&mut self) -> ClientResult<()> {
         match self.rpc(&WireRequest::Resume)? {
             WireResponse::Resumed => Ok(()),
-            other => bail!("unexpected response to Resume: {other:?}"),
+            other => Err(ClientError::Protocol(format!(
+                "unexpected response to Resume: {other:?}"
+            ))),
         }
     }
+}
+
+/// Resolve, dial with `connect_timeout`, and arm the per-exchange
+/// read/write timeouts — after this, no call on the stream can block
+/// longer than `rpc_timeout`.
+fn dial(addr: &str, cfg: &ClientConfig) -> ClientResult<TcpStream> {
+    // an unresolvable address is structural, not transient
+    let sock: SocketAddr = addr
+        .to_socket_addrs()
+        .map_err(|e| ClientError::transport(false, format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| ClientError::transport(false, format!("{addr} resolves to no address")))?;
+    let stream = if cfg.connect_timeout.is_zero() {
+        TcpStream::connect(sock)
+    } else {
+        TcpStream::connect_timeout(&sock, cfg.connect_timeout)
+    }
+    .map_err(|e| ClientError::io(&format!("connect to node at {addr}"), &e))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| ClientError::io("set TCP_NODELAY", &e))?;
+    let rpc_timeout = if cfg.rpc_timeout.is_zero() {
+        None
+    } else {
+        Some(cfg.rpc_timeout)
+    };
+    stream
+        .set_read_timeout(rpc_timeout)
+        .map_err(|e| ClientError::io("set read timeout", &e))?;
+    stream
+        .set_write_timeout(rpc_timeout)
+        .map_err(|e| ClientError::io("set write timeout", &e))?;
+    Ok(stream)
 }

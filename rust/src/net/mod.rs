@@ -22,8 +22,10 @@ pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::{Admission, NodeClient};
-pub use server::NodeServer;
+pub use client::{
+    Admission, ClientConfig, ClientError, ClientResult, NodeClient, TransportError,
+};
+pub use server::{NodeServer, NodeServerConfig};
 pub use wire::{
     WireCompletion, WireRequest, WireResponse, MAX_FRAME_BYTES, WIRE_VERSION,
 };

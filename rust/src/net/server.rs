@@ -2,11 +2,12 @@
 //!
 //! A `NodeServer` owns the fleet server behind an `Arc<Mutex>`, binds a
 //! listener (port 0 works: the kernel picks, [`NodeServer::addr`] tells),
-//! and answers `skip2lora/wire/v1` frames from any number of concurrent
-//! connections. Every connection must open with a valid `Hello`
-//! handshake; anything else — wrong magic, wrong version, malformed
-//! frame — gets a typed [`WireResponse::Error`], never a panic or a
-//! silent close.
+//! and answers `skip2lora/wire` frames from concurrent connections.
+//! Every connection must open with a valid `Hello` handshake; anything
+//! else — wrong magic, wrong version, bad auth token, over the
+//! connection cap, malformed frame — gets a typed response
+//! ([`WireResponse::Error`] / [`WireResponse::Unauthorized`] /
+//! [`WireResponse::Busy`]), never a panic or a silent close.
 //!
 //! Concurrency model: the accept loop and each connection run on plain
 //! `std::thread`s, all checking one shared stop flag through short read
@@ -18,15 +19,35 @@
 //! whichever client drives `Pump`/`PumpDrain`, so a driver controls
 //! batching determinism over the wire exactly as it would in-process.
 //!
+//! Unattended-edge hardening ([`NodeServerConfig`], DESIGN.md §15):
+//!
+//! - `auth_token`: optional shared secret checked on the `Hello` BEFORE
+//!   any other verb is served; a wrong or missing token is answered with
+//!   [`WireResponse::Unauthorized`] and the connection closed.
+//! - `max_connections`: a hard cap on live connections. Over-limit peers
+//!   still get a full handshake answer — [`WireResponse::Busy`] — so a
+//!   router can tell "node saturated" from "node dead".
+//! - `idle_timeout`: a connection that sits between frames longer than
+//!   this is reaped (clean close), so abandoned sockets cannot pin
+//!   threads forever. Mid-frame reads are NOT idle — a slow sender
+//!   keeps its connection.
+//! - at-most-once admissions: `Predict`/`Feedback` frames carrying a
+//!   nonzero `(client_id, req_id)` pair record their admission response
+//!   in a bounded dedupe log; a retry of the same pair replays the
+//!   recorded response instead of enqueuing twice. This is what makes a
+//!   client retry after an AMBIGUOUS outcome (response lost mid-frame)
+//!   safe — the books still balance.
+//!
 //! [`NodeServer::shutdown`] stops the accept loop, joins every
 //! connection thread, and hands the inner [`FleetServer`] back — this is
 //! how the multi-node tests "kill" a node and how a decommissioned
 //! node's state can be inspected after its tenants have migrated away.
 
+use std::collections::{HashMap, VecDeque};
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
@@ -41,6 +62,63 @@ use super::wire::{
 /// How long a blocked read waits before re-checking the stop flag.
 const POLL: Duration = Duration::from_millis(25);
 
+/// Bound on the admission-dedupe log: old `(client_id, req_id)` entries
+/// are evicted FIFO past this, which is fine — dedupe only needs to
+/// cover the retry window of an in-flight request, not all history.
+const DEDUPE_CAP: usize = 4096;
+
+/// Serving-edge hardening knobs (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeServerConfig {
+    /// shared secret a client's `Hello` must present; `None` = open
+    pub auth_token: Option<String>,
+    /// live-connection cap; 0 = unlimited
+    pub max_connections: usize,
+    /// reap a connection idle between frames this long; zero = never
+    pub idle_timeout: Duration,
+}
+
+impl Default for NodeServerConfig {
+    fn default() -> Self {
+        Self {
+            auth_token: None,
+            max_connections: 64,
+            idle_timeout: Duration::ZERO,
+        }
+    }
+}
+
+/// Bounded `(client_id, req_id) → admission response` replay log — the
+/// server half of the at-most-once contract.
+struct AdmissionLog {
+    map: HashMap<(u64, u64), WireResponse>,
+    order: VecDeque<(u64, u64)>,
+}
+
+impl AdmissionLog {
+    fn new() -> Self {
+        Self {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+        }
+    }
+
+    fn get(&self, key: (u64, u64)) -> Option<WireResponse> {
+        self.map.get(&key).cloned()
+    }
+
+    fn put(&mut self, key: (u64, u64), resp: WireResponse) {
+        if self.map.insert(key, resp).is_none() {
+            self.order.push_back(key);
+        }
+        while self.order.len() > DEDUPE_CAP {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+    }
+}
+
 /// One fleet-server node listening on a TCP address.
 pub struct NodeServer {
     addr: SocketAddr,
@@ -51,8 +129,13 @@ pub struct NodeServer {
 
 impl NodeServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start serving `server` over the wire protocol.
+    /// start serving `server` with the default [`NodeServerConfig`].
     pub fn spawn(server: FleetServer, addr: &str) -> Result<Self> {
+        Self::spawn_with(server, addr, NodeServerConfig::default())
+    }
+
+    /// [`NodeServer::spawn`] with explicit auth/cap/idle hardening.
+    pub fn spawn_with(server: FleetServer, addr: &str, cfg: NodeServerConfig) -> Result<Self> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("bind node listener on {addr}"))?;
         let addr = listener
@@ -66,7 +149,7 @@ impl NodeServer {
         let accept_thread = {
             let stop = Arc::clone(&stop);
             let server = Arc::clone(&server);
-            thread::spawn(move || accept_loop(listener, stop, server))
+            thread::spawn(move || accept_loop(listener, stop, server, cfg))
         };
         Ok(Self {
             addr,
@@ -112,18 +195,46 @@ impl NodeServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, server: Arc<Mutex<FleetServer>>) {
+/// Everything one connection thread needs beyond its stream.
+struct ConnShared {
+    stop: Arc<AtomicBool>,
+    server: Arc<Mutex<FleetServer>>,
+    dedupe: Arc<Mutex<AdmissionLog>>,
+    live: Arc<AtomicUsize>,
+    cfg: Arc<NodeServerConfig>,
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    server: Arc<Mutex<FleetServer>>,
+    cfg: NodeServerConfig,
+) {
+    let cfg = Arc::new(cfg);
+    let dedupe = Arc::new(Mutex::new(AdmissionLog::new()));
+    let live = Arc::new(AtomicUsize::new(0));
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let _ = stream.set_nodelay(true);
                 let _ = stream.set_read_timeout(Some(POLL));
-                let stop = Arc::clone(&stop);
-                let server = Arc::clone(&server);
+                live.fetch_add(1, Ordering::SeqCst);
+                let shared = ConnShared {
+                    stop: Arc::clone(&stop),
+                    server: Arc::clone(&server),
+                    dedupe: Arc::clone(&dedupe),
+                    live: Arc::clone(&live),
+                    cfg: Arc::clone(&cfg),
+                };
                 conns.push(thread::spawn(move || {
-                    let _ = serve_connection(stream, stop, server);
+                    let _ = serve_connection(stream, &shared);
+                    shared.live.fetch_sub(1, Ordering::SeqCst);
                 }));
+                // joining finished threads here keeps the handle list
+                // (and thread count) proportional to LIVE connections,
+                // not to connection history
+                conns.retain(|h| !h.is_finished());
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => thread::sleep(Duration::from_millis(1)),
             // a failed accept (e.g. listener torn down) only ends the loop
@@ -136,11 +247,17 @@ fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>, server: Arc<Mutex<F
 }
 
 /// Read one length-prefixed frame, waking every [`POLL`] to honor the
-/// stop flag. `Ok(None)` means clean EOF before a frame started, or
-/// stop. A connection dying MID-frame is an error, like a torn file.
-fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Option<Vec<u8>>> {
+/// stop flag. `Ok(None)` means clean EOF before a frame started, stop,
+/// or `idle_polls` expired while no frame was in progress (the reap
+/// path). A connection dying MID-frame is an error, like a torn file.
+fn read_frame_stoppable(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+    idle_polls: u64,
+) -> Result<Option<Vec<u8>>> {
     let mut len_buf = [0u8; 4];
     let mut got = 0usize;
+    let mut idle = 0u64;
     while got < 4 {
         if stop.load(Ordering::SeqCst) {
             return Ok(None);
@@ -153,7 +270,15 @@ fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Opt
                 return Err(anyhow!("connection closed mid length-prefix"));
             }
             Ok(n) => got += n,
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                // only a connection with NO frame in progress is idle
+                if got == 0 && idle_polls > 0 {
+                    idle += 1;
+                    if idle >= idle_polls {
+                        return Ok(None);
+                    }
+                }
+            }
             Err(e) => return Err(anyhow!("read frame length: {e}")),
         }
     }
@@ -179,35 +304,64 @@ fn read_frame_stoppable(stream: &mut TcpStream, stop: &AtomicBool) -> Result<Opt
     Ok(Some(body))
 }
 
-fn serve_connection(
-    mut stream: TcpStream,
-    stop: Arc<AtomicBool>,
-    server: Arc<Mutex<FleetServer>>,
-) -> Result<()> {
+/// Idle budget in poll intervals (rounded up); 0 = never reap.
+fn idle_poll_budget(idle_timeout: Duration) -> u64 {
+    if idle_timeout.is_zero() {
+        return 0;
+    }
+    let nanos = idle_timeout.as_nanos();
+    let poll = POLL.as_nanos().max(1);
+    u64::try_from(nanos.div_ceil(poll)).unwrap_or(u64::MAX).max(1)  // s2l-lint: allow(panic) reason=unwrap_or cannot panic
+}
+
+fn serve_connection(mut stream: TcpStream, shared: &ConnShared) -> Result<()> {
+    let idle_polls = idle_poll_budget(shared.cfg.idle_timeout);
     // handshake: the FIRST frame must be a well-formed Hello at our
-    // version — anything else is answered with a typed Error and the
+    // version, carrying the right token, while under the connection cap
+    // — anything else is answered with a typed response and the
     // connection is closed
-    let first = match read_frame_stoppable(&mut stream, &stop)? {
+    let first = match read_frame_stoppable(&mut stream, &shared.stop, idle_polls)? {
         Some(body) => body,
         None => return Ok(()),
     };
-    match decode_request(&first) {
-        Ok(WireRequest::Hello { version }) if version == WIRE_VERSION => {
+    let client_id = match decode_request(&first) {
+        Ok(WireRequest::Hello {
+            version,
+            token,
+            client_id,
+        }) => {
+            if version != WIRE_VERSION {
+                write_response(
+                    &mut stream,
+                    &WireResponse::Error {
+                        msg: format!(
+                            "wire version mismatch: client v{version}, server v{WIRE_VERSION}"
+                        ),
+                    },
+                )?;
+                return Ok(());
+            }
+            // auth precedes everything else — an unauthorized peer
+            // learns nothing, not even whether the node is saturated
+            if shared.cfg.auth_token.is_some() && token != shared.cfg.auth_token {
+                write_response(&mut stream, &WireResponse::Unauthorized)?;
+                return Ok(());
+            }
+            let cap = shared.cfg.max_connections;
+            if cap > 0 && shared.live.load(Ordering::SeqCst) > cap {
+                write_response(
+                    &mut stream,
+                    &WireResponse::Busy { limit: cap as u64 },  // s2l-lint: allow(cast) reason=usize config bound to u64 widening
+                )?;
+                return Ok(());
+            }
             write_response(
                 &mut stream,
                 &WireResponse::HelloOk {
                     version: WIRE_VERSION,
                 },
             )?;
-        }
-        Ok(WireRequest::Hello { version }) => {
-            write_response(
-                &mut stream,
-                &WireResponse::Error {
-                    msg: format!("wire version mismatch: client v{version}, server v{WIRE_VERSION}"),
-                },
-            )?;
-            return Ok(());
+            client_id
         }
         Ok(other) => {
             write_response(
@@ -222,10 +376,10 @@ fn serve_connection(
             write_response(&mut stream, &WireResponse::Error { msg: e.to_string() })?;
             return Ok(());
         }
-    }
+    };
 
     loop {
-        let body = match read_frame_stoppable(&mut stream, &stop)? {
+        let body = match read_frame_stoppable(&mut stream, &shared.stop, idle_polls)? {
             Some(body) => body,
             None => return Ok(()),
         };
@@ -236,7 +390,7 @@ fn serve_connection(
             Ok(WireRequest::Hello { .. }) => WireResponse::Error {
                 msg: "duplicate Hello: the handshake already completed".into(),
             },
-            Ok(req) => dispatch(&server, req),
+            Ok(req) => dispatch(shared, client_id, req),
         };
         write_response(&mut stream, &resp)?;
     }
@@ -245,15 +399,22 @@ fn serve_connection(
 /// Map one wire request onto the serving plane. The mutex is held only
 /// for the duration of the call — the pump clock advances exactly once
 /// per `Pump` frame, whoever sends it.
-fn dispatch(server: &Mutex<FleetServer>, req: WireRequest) -> WireResponse {
+fn dispatch(shared: &ConnShared, client_id: u64, req: WireRequest) -> WireResponse {
     // s2l-lint: allow(panic) reason=poisoned mutex means a peer thread crashed; propagating is policy
-    let mut s = server.lock().expect("node server mutex poisoned");
+    let mut s = shared.server.lock().expect("node server mutex poisoned");
     match req {
         WireRequest::Hello { .. } => unreachable!("handled by serve_connection"),  // s2l-lint: allow(panic) reason=serve_connection consumes Hello before dispatch
-        WireRequest::Predict { tenant, x } => from_response(s.handle(tenant, Request::Predict(x))),
-        WireRequest::Feedback { tenant, x, label } => {
+        WireRequest::Predict { tenant, x, req_id } => deduped(shared, client_id, req_id, || {
+            from_response(s.handle(tenant, Request::Predict(x)))
+        }),
+        WireRequest::Feedback {
+            tenant,
+            x,
+            label,
+            req_id,
+        } => deduped(shared, client_id, req_id, || {
             from_response(s.handle(tenant, Request::Feedback(x, label as usize)))
-        }
+        }),
         WireRequest::SwapAdapters { tenant, adapters } => {
             from_response(s.handle(tenant, Request::SwapAdapters(adapters)))
         }
@@ -285,6 +446,30 @@ fn dispatch(server: &Mutex<FleetServer>, req: WireRequest) -> WireResponse {
             WireResponse::Resumed
         }
     }
+}
+
+/// At-most-once wrapper for admissions: a `(client_id, req_id)` pair
+/// already in the log replays its recorded response WITHOUT re-entering
+/// the serving plane; a fresh pair executes and is recorded. Zero in
+/// either field opts out (fire-once, the pre-v2 behavior).
+fn deduped(
+    shared: &ConnShared,
+    client_id: u64,
+    req_id: u64,
+    run: impl FnOnce() -> WireResponse,
+) -> WireResponse {
+    if client_id == 0 || req_id == 0 {
+        return run();
+    }
+    let key = (client_id, req_id);
+    // s2l-lint: allow(panic) reason=poisoned mutex means a peer thread crashed; propagating is policy
+    let mut log = shared.dedupe.lock().expect("dedupe log mutex poisoned");
+    if let Some(prev) = log.get(key) {
+        return prev;
+    }
+    let resp = run();
+    log.put(key, resp.clone());
+    resp
 }
 
 /// Serving-plane [`Response`] → wire frame. `Stats`/`Observed` carry

@@ -43,7 +43,11 @@ pub const MAGIC: &[u8; 4] = b"S2LW";
 /// Protocol version carried in the `Hello`/`HelloOk` handshake. Bump on
 /// any incompatible frame change; a server rejects mismatched clients
 /// with a typed [`WireResponse::Error`].
-pub const WIRE_VERSION: u16 = 1;
+///
+/// v2: `Hello` gained an optional auth token + a `client_id`, and
+/// `Predict`/`Feedback` gained a `req_id` for at-most-once admission
+/// (DESIGN.md §15) — all fixed-position fields, hence the bump.
+pub const WIRE_VERSION: u16 = 2;
 
 /// Hard cap on `len` (tag + payload). Generous enough for a full-fleet
 /// `ImportTenant` checkpoint or an `Observed` snapshot, small enough
@@ -80,6 +84,8 @@ const T_DRAINED: u8 = 0x8A;
 const T_COMPLETIONS: u8 = 0x8B;
 const T_QUEUE_DEPTH_OK: u8 = 0x8C;
 const T_RESUMED: u8 = 0x8D;
+const T_UNAUTHORIZED: u8 = 0x8E;
+const T_BUSY: u8 = 0x8F;
 const T_ERROR: u8 = 0xFF;
 
 // reject-reason codes inside a `Rejected` payload
@@ -94,10 +100,29 @@ const R_DRAINING: u8 = 5;
 /// handshake, migration, drain, and explicit pump-clock frames.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireRequest {
-    /// protocol handshake: magic + version; MUST be the first frame
-    Hello { version: u16 },
-    Predict { tenant: TenantId, x: Vec<f32> },
-    Feedback { tenant: TenantId, x: Vec<f32>, label: u32 },
+    /// Protocol handshake: magic + version; MUST be the first frame.
+    /// `token` is the optional shared-secret credential (checked by the
+    /// server before any other verb). `client_id` names the logical
+    /// client for at-most-once admission dedupe — 0 opts out.
+    Hello {
+        version: u16,
+        token: Option<String>,
+        client_id: u64,
+    },
+    /// `req_id` keys the server-side admission-dedupe log together with
+    /// the connection's `client_id`; 0 means "no dedupe" (fire-once).
+    /// A retry of an *ambiguous* admission MUST reuse the same `req_id`.
+    Predict {
+        tenant: TenantId,
+        x: Vec<f32>,
+        req_id: u64,
+    },
+    Feedback {
+        tenant: TenantId,
+        x: Vec<f32>,
+        label: u32,
+        req_id: u64,
+    },
     SwapAdapters { tenant: TenantId, adapters: Vec<LoraAdapter> },
     /// pull the node's `skip2lora/obs/v1` snapshot (returned as JSON text)
     Observe,
@@ -183,6 +208,11 @@ pub enum WireResponse {
     Completions(Vec<WireCompletion>),
     QueueDepthOk { queued: u64 },
     Resumed,
+    /// handshake carried a wrong or missing auth token — the connection
+    /// is closed after this frame, before any other verb is served
+    Unauthorized,
+    /// server is at its connection cap; retry later or elsewhere
+    Busy { limit: u64 },
     /// any server-side failure that is not a typed rejection
     Error { msg: String },
 }
@@ -296,21 +326,40 @@ fn put_completions(buf: &mut Vec<u8>, cs: &[WireCompletion]) {
 pub fn encode_request(req: &WireRequest) -> Vec<u8> {
     let mut buf = Vec::new();
     match req {
-        WireRequest::Hello { version } => {
+        WireRequest::Hello {
+            version,
+            token,
+            client_id,
+        } => {
             buf.push(T_HELLO);
             buf.extend_from_slice(MAGIC);
             put_u16(&mut buf, *version);
+            match token {
+                None => buf.push(0),
+                Some(t) => {
+                    buf.push(1);
+                    put_str(&mut buf, t);
+                }
+            }
+            put_u64(&mut buf, *client_id);
         }
-        WireRequest::Predict { tenant, x } => {
+        WireRequest::Predict { tenant, x, req_id } => {
             buf.push(T_PREDICT);
             put_u64(&mut buf, *tenant);
             put_floats(&mut buf, x);
+            put_u64(&mut buf, *req_id);
         }
-        WireRequest::Feedback { tenant, x, label } => {
+        WireRequest::Feedback {
+            tenant,
+            x,
+            label,
+            req_id,
+        } => {
             buf.push(T_FEEDBACK);
             put_u64(&mut buf, *tenant);
             put_floats(&mut buf, x);
             put_u32(&mut buf, *label);
+            put_u64(&mut buf, *req_id);
         }
         WireRequest::SwapAdapters { tenant, adapters } => {
             buf.push(T_SWAP);
@@ -425,6 +474,11 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
             put_u64(&mut buf, *queued);
         }
         WireResponse::Resumed => buf.push(T_RESUMED),
+        WireResponse::Unauthorized => buf.push(T_UNAUTHORIZED),
+        WireResponse::Busy { limit } => {
+            buf.push(T_BUSY);
+            put_u64(&mut buf, *limit);
+        }
         WireResponse::Error { msg } => {
             buf.push(T_ERROR);
             put_str(&mut buf, msg);
@@ -613,16 +667,28 @@ pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
             if magic != MAGIC {
                 bail!("bad hello magic {magic:?}: not a skip2lora/wire peer");
             }
-            WireRequest::Hello { version: rd.u16()? }
+            let version = rd.u16()?;
+            let token = match rd.u8()? {
+                0 => None,
+                1 => Some(rd.string()?),
+                other => bail!("bad hello token presence byte {other}"),
+            };
+            WireRequest::Hello {
+                version,
+                token,
+                client_id: rd.u64()?,
+            }
         }
         T_PREDICT => WireRequest::Predict {
             tenant: rd.u64()?,
             x: rd.floats()?,
+            req_id: rd.u64()?,
         },
         T_FEEDBACK => WireRequest::Feedback {
             tenant: rd.u64()?,
             x: rd.floats()?,
             label: rd.u32()?,
+            req_id: rd.u64()?,
         },
         T_SWAP => WireRequest::SwapAdapters {
             tenant: rd.u64()?,
@@ -697,6 +763,8 @@ pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
         T_COMPLETIONS => WireResponse::Completions(rd.completions()?),
         T_QUEUE_DEPTH_OK => WireResponse::QueueDepthOk { queued: rd.u64()? },
         T_RESUMED => WireResponse::Resumed,
+        T_UNAUTHORIZED => WireResponse::Unauthorized,
+        T_BUSY => WireResponse::Busy { limit: rd.u64()? },
         T_ERROR => WireResponse::Error { msg: rd.string()? },
         other => bail!("unknown response frame tag 0x{other:02X}"),
     };
@@ -789,15 +857,24 @@ mod tests {
         vec![
             WireRequest::Hello {
                 version: WIRE_VERSION,
+                token: None,
+                client_id: 0,
+            },
+            WireRequest::Hello {
+                version: WIRE_VERSION,
+                token: Some("shared-secret".into()),
+                client_id: 77,
             },
             WireRequest::Predict {
                 tenant: 3,
                 x: vec![0.1, -0.5, 1e9],
+                req_id: 0,
             },
             WireRequest::Feedback {
                 tenant: u64::MAX,
                 x: vec![],
                 label: 2,
+                req_id: u64::MAX,
             },
             WireRequest::SwapAdapters {
                 tenant: 17,
@@ -872,6 +949,8 @@ mod tests {
             ]),
             WireResponse::QueueDepthOk { queued: 77 },
             WireResponse::Resumed,
+            WireResponse::Unauthorized,
+            WireResponse::Busy { limit: 64 },
             WireResponse::Error {
                 msg: "tenant 5 has no published adapters".into(),
             },

@@ -55,6 +55,21 @@ const SERVE_COUNTERS: [&str; 20] = [
     "affinity_misses",
 ];
 
+/// Counters of the optional `fleet_health` section (DESIGN.md §15),
+/// summed exactly — kept in lockstep with `fleet::health::HealthCounters`
+/// and the validator's key list in `obs::snapshot`.
+const FLEET_HEALTH_COUNTERS: [&str; 9] = [
+    "rpc_retries",
+    "reconnects",
+    "failovers",
+    "probes",
+    "probe_failures",
+    "recoveries",
+    "deaths",
+    "recovered_tenants",
+    "rebalances",
+];
+
 fn getf(j: &Json, key: &str, ctx: &str) -> Result<f64, String> {
     let v = j
         .get(key)
@@ -400,6 +415,64 @@ pub fn merge_docs(docs: &[Json]) -> Result<Json, String> {
         }
     }
 
+    // --- fleet_health: optional router-attached section (DESIGN.md §15),
+    // kept whenever ANY doc carries one (a doc without it contributes
+    // nothing — an unfaulted single-node snapshot has no health ledger).
+    // Counters sum field-wise, node rows and transition logs concatenate
+    // in doc order with provenance, and the tick is the max across
+    // routers (ticks are per-router clocks; the max bounds them all). ---
+    let any_health = docs.iter().any(|d| d.get("fleet_health").is_some());
+    let mut health_json = Json::Null;
+    if any_health {
+        let mut tick_max = 0.0f64;
+        let mut node_rows: Vec<Json> = Vec::new();
+        let mut transitions: Vec<Json> = Vec::new();
+        let mut hc: std::collections::BTreeMap<String, f64> = FLEET_HEALTH_COUNTERS
+            .iter()
+            .map(|k| (k.to_string(), 0.0))
+            .collect();
+        for (i, d) in docs.iter().enumerate() {
+            let Some(fh) = d.get("fleet_health") else {
+                continue;
+            };
+            let ctx = format!("doc[{i}].fleet_health");
+            tick_max = tick_max.max(getf(fh, "tick", &ctx)?);
+            let counters = fh
+                .get("counters")
+                .ok_or_else(|| format!("{ctx}: missing 'counters'"))?;
+            for key in FLEET_HEALTH_COUNTERS {
+                *hc.entry(key.to_string()).or_insert(0.0) +=
+                    getf(counters, key, &format!("{ctx}.counters"))?;
+            }
+            for (field, sink) in [
+                ("nodes", &mut node_rows),
+                ("transitions", &mut transitions),
+            ] {
+                let rows = fh
+                    .get(field)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("{ctx}: missing '{field}' array"))?;
+                for e in rows {
+                    let mut fields = e
+                        .as_obj()
+                        .ok_or_else(|| format!("{ctx}: '{field}' row not an object"))?
+                        .clone();
+                    fields.insert("doc".into(), num(i as f64));
+                    sink.push(Json::Obj(fields));
+                }
+            }
+        }
+        health_json = obj(vec![
+            ("tick", num(tick_max)),
+            ("nodes", arr(node_rows)),
+            (
+                "counters",
+                Json::Obj(hc.into_iter().map(|(k, v)| (k, num(v))).collect()),
+            ),
+            ("transitions", arr(transitions)),
+        ]);
+    }
+
     let mut top = vec![
         ("schema", s(SCHEMA)),
         // extra fleet-only field; the validator ignores unknown keys
@@ -438,6 +511,9 @@ pub fn merge_docs(docs: &[Json]) -> Result<Json, String> {
     ];
     if all_have_lanes && !lane_rows.is_empty() {
         top.push(("lanes", arr(lane_rows)));
+    }
+    if any_health {
+        top.push(("fleet_health", health_json));
     }
     Ok(obj(top))
 }
@@ -699,6 +775,64 @@ mod tests {
         ];
         let merged = merge_texts(&texts).expect("mixed fleet must merge");
         assert!(merged.get("lanes").is_none());
+    }
+
+    #[test]
+    fn fleet_health_sections_sum_counters_and_concat_transitions() {
+        use crate::fleet::health::{HealthBoard, HealthPolicy};
+
+        // two routers' ledgers: one saw a node die, one saw a recovery
+        let mut board_a = HealthBoard::new(HealthPolicy::default());
+        let a0 = board_a.add_node();
+        board_a.on_failure(a0, 1, "rpc transport fault");
+        board_a.on_failure(a0, 2, "rpc transport fault");
+        board_a.mark_dead(a0, 3, "rpc retry budget exhausted");
+        board_a.counters.rpc_retries = 2;
+        board_a.counters.failovers = 1;
+        let mut board_b = HealthBoard::new(HealthPolicy::default());
+        let b0 = board_b.add_node();
+        board_b.on_failure(b0, 4, "probe failed");
+        board_b.on_success(b0, 9);
+        board_b.counters.probes = 3;
+        board_b.counters.probe_failures = 1;
+
+        let attach = |k: u64, fh: Json| -> String {
+            let mut m = match node_snapshot(k).to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            m.insert("fleet_health".into(), fh);
+            Json::Obj(m).to_string()
+        };
+        let texts = vec![
+            attach(0, board_a.to_json(3, &["n0".to_string()])),
+            attach(1, board_b.to_json(9, &["n1".to_string()])),
+        ];
+        // merge_texts re-validates: the merged fleet_health passes the
+        // schema gate (legal states, finite counters) by construction
+        let merged = merge_texts(&texts).expect("health-bearing fleet must merge");
+        let fh = merged.get("fleet_health").unwrap();
+        assert_eq!(fh.get("tick").unwrap().as_f64().unwrap(), 9.0);
+        let c = fh.get("counters").unwrap();
+        assert_eq!(c.get("rpc_retries").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(c.get("deaths").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(c.get("recoveries").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(c.get("probes").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(c.get("probe_failures").unwrap().as_f64().unwrap(), 1.0);
+        // transitions concatenate in doc order with provenance: A's
+        // alive→suspect and suspect→dead, then B's round trip
+        let trans = fh.get("transitions").unwrap().as_arr().unwrap();
+        assert_eq!(trans.len(), 4);
+        assert_eq!(trans[0].get("doc").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(trans[0].get("to").unwrap().as_str().unwrap(), "suspect");
+        assert_eq!(trans[1].get("to").unwrap().as_str().unwrap(), "dead");
+        assert_eq!(trans[3].get("doc").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(trans[3].get("to").unwrap().as_str().unwrap(), "alive");
+        // a health-free fleet still omits the section entirely
+        let plain: Vec<String> = (0..2u64)
+            .map(|k| node_snapshot(k).to_json().to_string())
+            .collect();
+        assert!(merge_texts(&plain).unwrap().get("fleet_health").is_none());
     }
 
     #[test]

@@ -584,6 +584,68 @@ pub fn validate(j: &Json) -> Result<f64, String> {
         }
     }
 
+    // 'fleet_health' is optional (absent on single-node documents — only
+    // a router attaches it, DESIGN.md §15); when present, every node row
+    // and transition must carry a legal state name and the counters must
+    // be finite
+    if let Some(fh) = j.get("fleet_health") {
+        let is_state = |s: &str| matches!(s, "alive" | "suspect" | "dead");
+        finite_nonneg(fh, "tick", "fleet_health")?;
+        let nodes = fh
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or("fleet_health: missing 'nodes' array")?;
+        for (i, n) in nodes.iter().enumerate() {
+            let ctx = format!("fleet_health.nodes[{i}]");
+            if n.get("name").and_then(Json::as_str).is_none() {
+                return Err(format!("{ctx}: missing 'name' string"));
+            }
+            match n.get("state").and_then(Json::as_str) {
+                Some(s) if is_state(s) => {}
+                other => {
+                    return Err(format!("{ctx}: bad 'state' {other:?}"));
+                }
+            }
+            finite_nonneg(n, "strikes", &ctx)?;
+        }
+        let counters = fh
+            .get("counters")
+            .ok_or("fleet_health: missing 'counters' object")?;
+        for key in [
+            "rpc_retries",
+            "reconnects",
+            "failovers",
+            "probes",
+            "probe_failures",
+            "recoveries",
+            "deaths",
+            "recovered_tenants",
+            "rebalances",
+        ] {
+            finite_nonneg(counters, key, "fleet_health.counters")?;
+        }
+        let transitions = fh
+            .get("transitions")
+            .and_then(Json::as_arr)
+            .ok_or("fleet_health: missing 'transitions' array")?;
+        for (i, t) in transitions.iter().enumerate() {
+            let ctx = format!("fleet_health.transitions[{i}]");
+            finite_nonneg(t, "tick", &ctx)?;
+            finite_nonneg(t, "node", &ctx)?;
+            for key in ["from", "to"] {
+                match t.get(key).and_then(Json::as_str) {
+                    Some(s) if is_state(s) => {}
+                    other => {
+                        return Err(format!("{ctx}: bad '{key}' {other:?}"));
+                    }
+                }
+            }
+            if t.get("cause").and_then(Json::as_str).is_none() {
+                return Err(format!("{ctx}: missing 'cause' string"));
+            }
+        }
+    }
+
     Ok(pump_ticks)
 }
 

@@ -1,0 +1,655 @@
+//! Deterministic fault-injection proxy for the wire edge
+//! (DESIGN.md §15) — no `toxiproxy`/`turmoil` offline, and a real
+//! chaos mesh would not be DETERMINISTIC anyway.
+//!
+//! [`FaultProxy`] sits on loopback between a `NodeClient` and a
+//! `NodeServer` and misbehaves **by plan, not by chance**: every
+//! accepted connection and every server→client response frame gets a
+//! monotonically increasing ordinal, and a [`FaultPlan`] maps ordinals
+//! to faults. A plan is either *scripted* (explicit ordinal → fault
+//! entries, for regression tests that need a specific fault at a
+//! specific frame) or *chaos* (faults drawn from a pure seeded
+//! function of the ordinal, [`chaos_draw`]), and the two compose —
+//! scripted entries win over the chaos draw. Because the draw is a
+//! pure function of `(seed, ordinal)` and the router drives RPCs
+//! sequentially, a chaos scenario REPLAYS BIT-IDENTICALLY from its
+//! seed: same seed, same faults, same client-visible error sequence.
+//!
+//! The fault vocabulary mirrors how real connections die:
+//!
+//! * [`ConnFault::Refuse`] — accept then immediately close: the client
+//!   sees a dead connection before the handshake (retryable).
+//! * [`RespFault::Cut`] — forward `keep` bytes of the frame, then kill
+//!   the connection: the client sees EOF mid-frame (retryable — and
+//!   the canonical AMBIGUOUS outcome, since the server already acted).
+//! * [`RespFault::Stall`] — forward `keep` bytes, then go silent with
+//!   the connection held open: the client blocks until `rpc_timeout`
+//!   (retryable; this is what a wedged peer looks like).
+//! * [`RespFault::Garbage`] — replace the frame with a well-framed
+//!   body of seeded junk under an unknown tag: the client gets a typed
+//!   PROTOCOL error (never retried — corruption is not a blip).
+//! * [`RespFault::Delay`] — hold the frame for N proxy polls, then
+//!   forward it intact (latency, not loss).
+//!
+//! Client→server bytes always pass through untouched: faulting the
+//! response path is sufficient to exercise every client failure mode
+//! (refuse covers the request path), and it keeps "what did the server
+//! actually admit" unambiguous for the at-most-once tests.
+//!
+//! The proxy records every ordinal→fault decision in an event log
+//! ([`FaultProxy::events`]) — plan applications, not byte timings, so
+//! the log itself is replay-stable and tests can assert on it.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::net::MAX_FRAME_BYTES;
+use crate::util::error::{Context, Result};
+use crate::util::rng::SplitMix64;
+
+/// The proxy's poll quantum: stop-flag checks, idle reads, and
+/// [`RespFault::Delay`] units are all multiples of this.
+pub const PROXY_POLL_MS: u64 = 5;
+
+/// What to do with an incoming connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnFault {
+    Accept,
+    /// accept then immediately close — the client's handshake dies
+    Refuse,
+}
+
+/// What to do with one server→client response frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RespFault {
+    /// forward intact
+    Pass,
+    /// forward the first `keep` bytes (of len-prefix + body), then kill
+    /// the connection — fast EOF mid-frame
+    Cut { keep: usize },
+    /// forward the first `keep` bytes, then hold the connection open in
+    /// silence — the client blocks until its `rpc_timeout`
+    Stall { keep: usize },
+    /// replace the frame with `len` bytes of seeded junk under an
+    /// unknown tag (well-framed, so the client's DECODE fails — a
+    /// protocol error, not a transport blip), then kill the connection
+    Garbage { len: usize },
+    /// forward intact after `polls` proxy poll quanta
+    Delay { polls: u32 },
+}
+
+impl RespFault {
+    /// Stable one-line rendering for the event log.
+    fn describe(&self) -> String {
+        match self {
+            RespFault::Pass => "pass".to_string(),
+            RespFault::Cut { keep } => format!("cut keep={keep}"),
+            RespFault::Stall { keep } => format!("stall keep={keep}"),
+            RespFault::Garbage { len } => format!("garbage len={len}"),
+            RespFault::Delay { polls } => format!("delay polls={polls}"),
+        }
+    }
+}
+
+/// Pure chaos draw: the fault for response ordinal `ordinal` under
+/// `seed`. Roughly 1 in 8 frames is faulted — enough to force retries
+/// and reconnects through a scenario without starving it of progress.
+/// `Stall` and `Garbage` are deliberately NOT drawn (a stall costs a
+/// full `rpc_timeout` of wall-clock per hit, and garbage is
+/// non-retryable by design) — script those explicitly.
+pub fn chaos_draw(seed: u64, ordinal: u64) -> RespFault {
+    let mut rng = SplitMix64::new(
+        seed ^ ordinal.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x0FA1_1707_C4A5_D00Du64,
+    );
+    let roll = rng.next_u64() % 16;
+    match roll {
+        0 => RespFault::Cut {
+            keep: (rng.next_u64() % 6) as usize,
+        },
+        1 => RespFault::Delay {
+            polls: 1 + (rng.next_u64() % 3) as u32,
+        },
+        _ => RespFault::Pass,
+    }
+}
+
+/// A deterministic misbehavior schedule: scripted ordinal → fault
+/// entries layered over an optional seeded chaos draw.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// when true, ordinals without a scripted entry consult
+    /// [`chaos_draw`]; when false they pass/accept
+    pub chaos: bool,
+    pub conn: BTreeMap<u64, ConnFault>,
+    pub resp: BTreeMap<u64, RespFault>,
+}
+
+impl FaultPlan {
+    /// Everything passes — a transparent proxy.
+    pub fn transparent() -> Self {
+        Self::default()
+    }
+
+    /// Chaos mode: unscripted response ordinals draw from `seed`.
+    pub fn from_seed(seed: u64) -> Self {
+        Self {
+            seed,
+            chaos: true,
+            conn: BTreeMap::new(),
+            resp: BTreeMap::new(),
+        }
+    }
+
+    /// Builder: refuse connection ordinal `ordinal`.
+    pub fn refuse_conn(mut self, ordinal: u64) -> Self {
+        self.conn.insert(ordinal, ConnFault::Refuse);
+        self
+    }
+
+    /// Builder: refuse every connection from `first` on (inclusive) up
+    /// to an ordinal horizon — "the node is gone". The horizon exists
+    /// because the map is finite; 1024 refused reconnects is far past
+    /// any retry budget.
+    pub fn refuse_conns_from(mut self, first: u64) -> Self {
+        for o in first..first + 1024 {
+            self.conn.insert(o, ConnFault::Refuse);
+        }
+        self
+    }
+
+    /// Builder: apply `fault` to response ordinal `ordinal`.
+    pub fn fault_resp(mut self, ordinal: u64, fault: RespFault) -> Self {
+        self.resp.insert(ordinal, fault);
+        self
+    }
+
+    /// Resolve the fault for a connection ordinal (scripted or Accept —
+    /// the chaos draw never refuses connections).
+    pub fn conn_fault(&self, ordinal: u64) -> ConnFault {
+        self.conn.get(&ordinal).copied().unwrap_or(ConnFault::Accept)
+    }
+
+    /// Resolve the fault for a response ordinal: scripted entry, else
+    /// chaos draw (when enabled), else Pass.
+    pub fn resp_fault(&self, ordinal: u64) -> RespFault {
+        if let Some(f) = self.resp.get(&ordinal) {
+            return *f;
+        }
+        if self.chaos {
+            return chaos_draw(self.seed, ordinal);
+        }
+        RespFault::Pass
+    }
+}
+
+/// One plan application, recorded when the decision is made.
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    /// "conn" or "resp"
+    pub kind: String,
+    pub ordinal: u64,
+    /// stable rendering of the applied fault
+    pub what: String,
+}
+
+struct Shared {
+    stop: AtomicBool,
+    plan: Mutex<FaultPlan>,
+    conn_seq: AtomicU64,
+    resp_seq: AtomicU64,
+    events: Mutex<Vec<FaultEvent>>,
+    upstream: String,
+}
+
+impl Shared {
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    fn log(&self, kind: &str, ordinal: u64, what: String) {
+        let mut ev = self.events.lock().unwrap_or_else(|p| p.into_inner());
+        ev.push(FaultEvent {
+            kind: kind.to_string(),
+            ordinal,
+            what,
+        });
+    }
+}
+
+/// A loopback TCP proxy that injects [`FaultPlan`] faults between a
+/// wire client and one upstream node. See the module docs.
+pub struct FaultProxy {
+    addr: String,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    pipes: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl FaultProxy {
+    /// Bind an ephemeral loopback port fronting `upstream` and start
+    /// proxying under `plan`.
+    pub fn spawn(upstream: &str, plan: FaultPlan) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("fault proxy bind")?;
+        listener
+            .set_nonblocking(true)
+            .context("fault proxy nonblocking")?;
+        let addr = listener
+            .local_addr()
+            .context("fault proxy local addr")?
+            .to_string();
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            plan: Mutex::new(plan),
+            conn_seq: AtomicU64::new(0),
+            resp_seq: AtomicU64::new(0),
+            events: Mutex::new(Vec::new()),
+            upstream: upstream.to_string(),
+        });
+        let pipes: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let pipes = Arc::clone(&pipes);
+            thread::spawn(move || accept_loop(&listener, &shared, &pipes))
+        };
+        Ok(Self {
+            addr,
+            shared,
+            accept: Some(accept),
+            pipes,
+        })
+    }
+
+    /// The proxy's listen address — hand this to the client/router.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Swap the active plan. Ordinal counters keep running — a plan
+    /// installed between sequential driver steps applies from the next
+    /// connection/response ordinal on, deterministically.
+    pub fn set_plan(&self, plan: FaultPlan) {
+        *self.shared.plan.lock().unwrap_or_else(|p| p.into_inner()) = plan;
+    }
+
+    /// Snapshot of the plan-application log.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.shared
+            .events
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    /// Connections accepted (or refused) so far.
+    pub fn conns_seen(&self) -> u64 {
+        self.shared.conn_seq.load(Ordering::SeqCst)
+    }
+
+    /// Response frames intercepted so far.
+    pub fn resps_seen(&self) -> u64 {
+        self.shared.resp_seq.load(Ordering::SeqCst)
+    }
+
+    /// Stop proxying and join every thread. Live proxied connections
+    /// are torn down (both sides see EOF/reset).
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.pipes.lock().unwrap_or_else(|p| p.into_inner());
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        // belt-and-suspenders: a dropped-without-shutdown proxy still
+        // tells its threads to exit (they poll the flag)
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    shared: &Arc<Shared>,
+    pipes: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        if shared.stopped() {
+            return;
+        }
+        let client = match listener.accept() {
+            Ok((sock, _peer)) => sock,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(PROXY_POLL_MS));
+                continue;
+            }
+            Err(_) => return,
+        };
+        let ordinal = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
+        let fault = shared
+            .plan
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .conn_fault(ordinal);
+        match fault {
+            ConnFault::Refuse => {
+                shared.log("conn", ordinal, "refuse".to_string());
+                let _ = client.shutdown(Shutdown::Both);
+            }
+            ConnFault::Accept => {
+                shared.log("conn", ordinal, "accept".to_string());
+                let upstream = match TcpStream::connect(&shared.upstream) {
+                    Ok(up) => up,
+                    Err(_) => {
+                        shared.log("conn", ordinal, "upstream unreachable".to_string());
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    }
+                };
+                spawn_pipes(shared, pipes, client, upstream);
+            }
+        }
+    }
+}
+
+fn spawn_pipes(
+    shared: &Arc<Shared>,
+    pipes: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    client: TcpStream,
+    upstream: TcpStream,
+) {
+    let (Ok(client_r), Ok(up_r)) = (client.try_clone(), upstream.try_clone()) else {
+        let _ = client.shutdown(Shutdown::Both);
+        let _ = upstream.shutdown(Shutdown::Both);
+        return;
+    };
+    let c2s = {
+        let shared = Arc::clone(shared);
+        thread::spawn(move || pipe_raw(&shared, client_r, upstream))
+    };
+    let s2c = {
+        let shared = Arc::clone(shared);
+        thread::spawn(move || pipe_frames(&shared, up_r, client))
+    };
+    let mut guard = pipes.lock().unwrap_or_else(|p| p.into_inner());
+    guard.push(c2s);
+    guard.push(s2c);
+}
+
+fn transient(kind: ErrorKind) -> bool {
+    kind == ErrorKind::WouldBlock || kind == ErrorKind::TimedOut || kind == ErrorKind::Interrupted
+}
+
+/// client→server: bytes pass through untouched (module docs explain
+/// why request-path faulting is unnecessary).
+fn pipe_raw(shared: &Shared, mut from: TcpStream, mut to: TcpStream) {
+    if from
+        .set_read_timeout(Some(Duration::from_millis(PROXY_POLL_MS)))
+        .is_err()
+    {
+        return;
+    }
+    let mut buf = [0u8; 4096];
+    loop {
+        if shared.stopped() {
+            break;
+        }
+        match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                let Some(chunk) = buf.get(..n) else { break };
+                if to.write_all(chunk).is_err() {
+                    break;
+                }
+            }
+            Err(e) if transient(e.kind()) => continue,
+            Err(_) => break,
+        }
+    }
+    let _ = to.shutdown(Shutdown::Write);
+}
+
+/// Read exactly `n` bytes with stop-flag polling. `None` on EOF, error,
+/// or stop.
+fn read_exact_stoppable(shared: &Shared, r: &mut TcpStream, n: usize) -> Option<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    let mut got = 0usize;
+    while got < n {
+        if shared.stopped() {
+            return None;
+        }
+        let Some(dst) = buf.get_mut(got..) else {
+            return None;
+        };
+        match r.read(dst) {
+            Ok(0) => return None,
+            Ok(k) => got += k,
+            Err(e) if transient(e.kind()) => continue,
+            Err(_) => return None,
+        }
+    }
+    Some(buf)
+}
+
+/// server→client: parse each response frame off the upstream, resolve
+/// its ordinal's fault, apply it. Terminal faults (cut/stall/garbage)
+/// end the connection — the pipe returns and both sockets die.
+fn pipe_frames(shared: &Shared, mut up: TcpStream, mut client: TcpStream) {
+    if up
+        .set_read_timeout(Some(Duration::from_millis(PROXY_POLL_MS)))
+        .is_err()
+    {
+        return;
+    }
+    loop {
+        if shared.stopped() {
+            break;
+        }
+        let Some(len_buf) = read_exact_stoppable(shared, &mut up, 4) else {
+            break;
+        };
+        let Ok(len_arr) = <[u8; 4]>::try_from(len_buf.as_slice()) else {
+            break;
+        };
+        let len = u32::from_le_bytes(len_arr) as usize;
+        // the upstream is our own NodeServer; a malformed length means
+        // the stream is torn, not that we should proxy it onward
+        if len == 0 || len > MAX_FRAME_BYTES {
+            break;
+        }
+        let Some(body) = read_exact_stoppable(shared, &mut up, len) else {
+            break;
+        };
+        let ordinal = shared.resp_seq.fetch_add(1, Ordering::SeqCst);
+        let (fault, seed) = {
+            let plan = shared.plan.lock().unwrap_or_else(|p| p.into_inner());
+            (plan.resp_fault(ordinal), plan.seed)
+        };
+        shared.log("resp", ordinal, fault.describe());
+        let mut frame = Vec::with_capacity(4 + body.len());
+        frame.extend_from_slice(&len_arr);
+        frame.extend_from_slice(&body);
+        match fault {
+            RespFault::Pass => {
+                if client.write_all(&frame).is_err() {
+                    break;
+                }
+            }
+            RespFault::Delay { polls } => {
+                for _ in 0..polls {
+                    if shared.stopped() {
+                        return;
+                    }
+                    thread::sleep(Duration::from_millis(PROXY_POLL_MS));
+                }
+                if client.write_all(&frame).is_err() {
+                    break;
+                }
+            }
+            RespFault::Cut { keep } => {
+                let head = frame.get(..keep).unwrap_or(&frame);
+                let _ = client.write_all(head);
+                break;
+            }
+            RespFault::Stall { keep } => {
+                let head = frame.get(..keep).unwrap_or(&frame);
+                if client.write_all(head).is_ok() {
+                    // hold the connection open in silence until the
+                    // proxy shuts down or the client gives up and
+                    // closes its end (observable as a failed probe
+                    // write — we just park; the client's rpc_timeout
+                    // is what unblocks the test)
+                    while !shared.stopped() {
+                        thread::sleep(Duration::from_millis(PROXY_POLL_MS));
+                    }
+                }
+                break;
+            }
+            RespFault::Garbage { len: glen } => {
+                let glen = glen.max(1);
+                let mut junk = Vec::with_capacity(4 + glen);
+                let glen32 = u32::try_from(glen.min(MAX_FRAME_BYTES)).unwrap_or(1);
+                junk.extend_from_slice(&glen32.to_le_bytes());
+                // tag 0x00 is unassigned in the wire protocol, so the
+                // client decodes a well-framed body and fails with a
+                // typed protocol error
+                junk.push(0x00);
+                let mut rng = SplitMix64::new(seed ^ ordinal ^ 0xBAD_F00D);
+                while junk.len() < 4 + glen32 as usize {
+                    junk.push((rng.next_u64() & 0xFF) as u8);
+                }
+                let _ = client.write_all(&junk);
+                break;
+            }
+        }
+    }
+    let _ = client.shutdown(Shutdown::Both);
+    let _ = up.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{read_frame, write_frame};
+
+    #[test]
+    fn chaos_draw_is_a_pure_function_of_seed_and_ordinal() {
+        for ordinal in 0..512u64 {
+            assert_eq!(chaos_draw(41, ordinal), chaos_draw(41, ordinal));
+        }
+        let a: Vec<RespFault> = (0..512).map(|o| chaos_draw(41, o)).collect();
+        let b: Vec<RespFault> = (0..512).map(|o| chaos_draw(42, o)).collect();
+        assert_ne!(a, b, "different seeds should draw different fault tapes");
+        let faulted = a.iter().filter(|f| **f != RespFault::Pass).count();
+        assert!(faulted > 16, "chaos tape too clean: {faulted}/512");
+        assert!(faulted < 256, "chaos tape too hostile: {faulted}/512");
+        assert!(
+            a.iter().all(|f| !matches!(f, RespFault::Stall { .. } | RespFault::Garbage { .. })),
+            "chaos must not draw stall/garbage"
+        );
+    }
+
+    #[test]
+    fn scripted_entries_override_the_chaos_draw() {
+        let plan = FaultPlan::from_seed(7)
+            .fault_resp(3, RespFault::Stall { keep: 2 })
+            .refuse_conn(1);
+        assert_eq!(plan.resp_fault(3), RespFault::Stall { keep: 2 });
+        assert_eq!(plan.conn_fault(1), ConnFault::Refuse);
+        assert_eq!(plan.conn_fault(0), ConnFault::Accept);
+        // unscripted ordinal falls through to the draw
+        assert_eq!(plan.resp_fault(9), chaos_draw(7, 9));
+        let quiet = FaultPlan::transparent();
+        assert_eq!(quiet.resp_fault(9), RespFault::Pass);
+    }
+
+    /// A minimal framed upstream: for each connection, echoes every
+    /// frame back with its first byte (the tag) incremented.
+    fn echo_upstream() -> (String, std::net::TcpListener) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        (addr, listener)
+    }
+
+    fn serve_one(listener: &std::net::TcpListener) -> std::thread::JoinHandle<()> {
+        let listener = listener.try_clone().unwrap();
+        std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            while let Ok(mut body) = read_frame(&mut sock) {
+                body[0] = body[0].wrapping_add(1);
+                if write_frame(&mut sock, &body).is_err() {
+                    break;
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn transparent_proxy_passes_frames_bit_identically() {
+        let (addr, listener) = echo_upstream();
+        let server = serve_one(&listener);
+        let proxy = FaultProxy::spawn(&addr, FaultPlan::transparent()).unwrap();
+        let mut sock = TcpStream::connect(proxy.addr()).unwrap();
+        for k in 0..4u8 {
+            write_frame(&mut sock, &[0x42, k, 7, 9]).unwrap();
+            let back = read_frame(&mut sock).unwrap();
+            assert_eq!(back, vec![0x43, k, 7, 9]);
+        }
+        assert_eq!(proxy.conns_seen(), 1);
+        assert_eq!(proxy.resps_seen(), 4);
+        let events = proxy.events();
+        assert!(events.iter().all(|e| e.what != "cut keep=0"));
+        drop(sock);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn cut_fault_kills_the_connection_mid_frame() {
+        let (addr, listener) = echo_upstream();
+        let server = serve_one(&listener);
+        let proxy = FaultProxy::spawn(
+            &addr,
+            FaultPlan::transparent().fault_resp(1, RespFault::Cut { keep: 3 }),
+        )
+        .unwrap();
+        let mut sock = TcpStream::connect(proxy.addr()).unwrap();
+        // ordinal 0 passes
+        write_frame(&mut sock, &[1, 2, 3]).unwrap();
+        assert_eq!(read_frame(&mut sock).unwrap(), vec![2, 2, 3]);
+        // ordinal 1 is cut after 3 bytes — the read fails, never hangs
+        write_frame(&mut sock, &[1, 2, 3]).unwrap();
+        assert!(read_frame(&mut sock).is_err());
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    #[test]
+    fn refused_connections_die_before_any_frame() {
+        let (addr, listener) = echo_upstream();
+        let _server = serve_one(&listener);
+        let proxy = FaultProxy::spawn(&addr, FaultPlan::transparent().refuse_conn(0)).unwrap();
+        let mut sock = TcpStream::connect(proxy.addr()).unwrap();
+        // the proxy accepted then closed; the first frame exchange fails
+        let dead = write_frame(&mut sock, &[1, 2, 3]).is_err() || read_frame(&mut sock).is_err();
+        assert!(dead, "refused connection should not carry a frame");
+        // next connection (ordinal 1) works
+        let mut sock = TcpStream::connect(proxy.addr()).unwrap();
+        write_frame(&mut sock, &[9, 9]).unwrap();
+        assert_eq!(read_frame(&mut sock).unwrap(), vec![10, 9]);
+        proxy.shutdown();
+    }
+}

@@ -2,15 +2,18 @@
 //! seeded multi-thread stress driver (no `loom`/`shuttle`), a counting
 //! allocator for zero-alloc proofs (no `stats_alloc`), a deterministic
 //! lane-interleaving replay harness for multi-lane flush parity
-//! ([`lanes`]), plus compile-time marker-trait assertions (no
-//! `static_assertions` crate).
+//! ([`lanes`]), a deterministic TCP fault-injection proxy for chaos
+//! tests ([`faults`] — no `toxiproxy`/`turmoil`), plus compile-time
+//! marker-trait assertions (no `static_assertions` crate).
 
 pub mod alloc_counter;
+pub mod faults;
 pub mod lanes;
 pub mod prop;
 pub mod stress;
 
 pub use alloc_counter::CountingAlloc;
+pub use faults::{ConnFault, FaultPlan, FaultProxy, RespFault};
 
 /// Compile-time assertion that `T: Send + Sync` — monomorphizing this
 /// function IS the check, so a regression (e.g. someone re-introducing a

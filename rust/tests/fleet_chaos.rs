@@ -1,0 +1,518 @@
+//! Chaos acceptance for the fault-tolerant fleet plane (DESIGN.md §15):
+//! a 3-node loopback fleet where every node sits behind a deterministic
+//! [`FaultProxy`], driven through one seeded scenario that
+//!
+//! * kills a node mid-RPC (response cut mid-frame, reconnects refused) —
+//!   the router retries, declares it dead past the budget, re-installs
+//!   the latest checkpoint on the survivors, and fails the admission
+//!   over to the rendezvous successor,
+//! * stalls another node mid-frame — the call is bounded by
+//!   `rpc_timeout`, the retry replays the recorded admission from the
+//!   server's dedupe log (at-most-once), and the node recovers in-call,
+//! * runs a stretch of seeded chaos (cuts/delays drawn per response
+//!   ordinal) over the survivors,
+//! * cuts a pump response so the suspect/probe/recover path runs on the
+//!   deterministic tick clock,
+//!
+//! and asserts: no router call ever hangs, the books balance
+//! (completions == admissions, the dead node's zombie admission is
+//! provably parked and never double-counted), surviving tenants serve
+//! BIT-IDENTICAL predictions to an unfaulted in-process oracle, and the
+//! whole `fleet_health` section — states, counters, transition log —
+//! replays bit-identically when the same seeded scenario runs again.
+
+use std::time::{Duration, Instant};
+
+use skip2lora::data::Dataset;
+use skip2lora::fleet::{FleetRouter, HealthPolicy, NodeState, RebalanceConfig, RouterConfig};
+use skip2lora::model::MlpConfig;
+use skip2lora::net::{Admission, ClientConfig, ClientError, NodeClient, NodeServer};
+use skip2lora::obs::snapshot::validate as validate_obs;
+use skip2lora::serve::{FleetServer, Request, Response, ServeConfig};
+use skip2lora::tensor::ops::Backend;
+use skip2lora::tensor::Mat;
+use skip2lora::testkit::{FaultPlan, FaultProxy, RespFault};
+use skip2lora::train::trainer::pretrain;
+use skip2lora::util::rng::Rng;
+
+const N_TENANTS: u64 = 6;
+/// feedback rounds per tenant — enough past `buffer_target` that every
+/// drifted tenant fine-tunes and PUBLISHES before the chaos starts, so
+/// checkpoint recovery has real trained state to re-install
+const ROUNDS: usize = 36;
+const PROBES: usize = 6;
+const CHAOS_ROUNDS: usize = 8;
+const SEED: u64 = 41;
+
+/// Generous wall-clock hang detector. Scripted faults resolve in at most
+/// a couple of `rpc_timeout`s; anything near this bound means a retry
+/// loop stopped terminating.
+const HANG: Duration = Duration::from_secs(30);
+
+fn clustered(seed: u64, n: usize, shift: f32) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = Mat::zeros(n, 8);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let c = i % 3;
+        for j in 0..8 {
+            let base = if j % 3 == c { 2.0 } else { 0.0 };
+            *x.at_mut(i, j) = base + shift + 0.3 * rng.normal();
+        }
+        labels.push(c);
+    }
+    Dataset {
+        x,
+        labels,
+        n_classes: 3,
+    }
+}
+
+fn serve_config() -> ServeConfig {
+    ServeConfig {
+        batch_capacity: 16,
+        window: 20,
+        accuracy_threshold: 0.7,
+        buffer_target: 30,
+        epochs: 20,
+        lr: 0.05,
+        train_batch: 15,
+        // inline fine-tunes: the pump clock fully determines execution,
+        // which is what makes the cross-run replay comparison exact
+        workers: 0,
+        ..Default::default()
+    }
+}
+
+fn backbone() -> skip2lora::model::Mlp {
+    let cfg = MlpConfig {
+        dims: vec![8, 12, 12, 3],
+        rank: 2,
+        batch_norm: true,
+    };
+    pretrain(cfg, &clustered(0, 120, 0.0), 50, 0.05, 1, Backend::Blocked)
+}
+
+fn new_server(bb: &skip2lora::model::Mlp) -> FleetServer {
+    FleetServer::new(bb.clone(), serve_config())
+}
+
+fn drifted(t: u64) -> bool {
+    t % 3 != 0
+}
+
+fn tenant_stream(t: u64) -> Dataset {
+    let shift = if drifted(t) { 2.5 } else { 0.0 };
+    clustered(1000 + t, ROUNDS, shift)
+}
+
+fn chaos_router_config(ckpt: String) -> RouterConfig {
+    RouterConfig {
+        client: ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            // every request→response exchange is bounded by this; large
+            // enough that no HEALTHY rpc (including an inline-fine-tune
+            // pump) ever times out, so the health log stays scripted
+            rpc_timeout: Duration::from_secs(2),
+            // 5 attempts per node: the scripted kill exhausts them all,
+            // while a seeded chaos cut recovers on the first retry
+            max_retries: 4,
+            backoff_ticks: 2,
+            token: None,
+            client_id: 1,
+        },
+        health: HealthPolicy {
+            // the scripted kill dies via BUDGET exhaustion (5 failed
+            // attempts < 6 strikes), exercising that death path; chaos
+            // strikes reset on every recovered call
+            dead_after_strikes: 6,
+            backoff_ticks: 2,
+        },
+        rebalance: None,
+        recovery_checkpoint: Some(ckpt),
+    }
+}
+
+/// Everything a scenario run produces that must replay bit-identically.
+#[derive(PartialEq, Debug)]
+struct ScenarioOut {
+    health_json: String,
+    preds: Vec<usize>,
+    admitted: u64,
+    completed: u64,
+}
+
+/// One full seeded chaos scenario over a fresh 3-node fleet. Pure in
+/// `seed`: every fault is either scripted at a response/connection
+/// ordinal or drawn by `chaos_draw(seed, ordinal)`, and the driver is
+/// single-threaded, so two runs see identical ordinal sequences.
+fn scenario(seed: u64) -> ScenarioOut {
+    let bb = backbone();
+    let mut servers = Vec::new();
+    let mut proxies = Vec::new();
+    for _ in 0..3 {
+        let ns = NodeServer::spawn(new_server(&bb), "127.0.0.1:0").unwrap();
+        let px = FaultProxy::spawn(&ns.addr().to_string(), FaultPlan::transparent()).unwrap();
+        servers.push(Some(ns));
+        proxies.push(px);
+    }
+    let mut oracle = new_server(&bb);
+
+    let ckpt = std::env::temp_dir().join(format!(
+        "s2l_chaos_ckpt_{}_{seed}.bin",
+        std::process::id()
+    ));
+    let mut router = FleetRouter::with_config(chaos_router_config(
+        ckpt.to_string_lossy().into_owned(),
+    ));
+    for (i, px) in proxies.iter().enumerate() {
+        router.add_node(&format!("node{i}"), px.addr()).unwrap();
+    }
+    assert_eq!(router.alive_count(), 3);
+
+    let streams: Vec<Dataset> = (0..N_TENANTS).map(tenant_stream).collect();
+    let mut admitted = 0u64;
+    let mut completed = 0u64;
+    let mut sends = 0usize;
+
+    // ---- phase 1: healthy labelled traffic, oracle mirrored with the
+    // identical per-tenant streams and pump cadence
+    for round in 0..ROUNDS {
+        for t in 0..N_TENANTS {
+            let x = streams[t as usize].x.row(round).to_vec();
+            let label = streams[t as usize].labels[round];
+            match router.feedback(t, x.clone(), label as u32).unwrap() {
+                Admission::Queued { .. } => admitted += 1,
+                other => panic!("unexpected rejection: {other:?}"),
+            }
+            match oracle.handle(t, Request::Feedback(x, label)) {
+                Response::Queued { .. } => {}
+                other => panic!("oracle rejected: {other:?}"),
+            }
+            sends += 1;
+            if sends % 16 == 0 {
+                completed += router.pump_all().unwrap().len() as u64;
+                oracle.pump();
+            }
+        }
+    }
+    completed += router.pump_drain_all().unwrap().len() as u64;
+    oracle.pump_until_drained();
+
+    // the fleet-wide recovery checkpoint: the oracle holds the identical
+    // published state of EVERY tenant (that is what phase 2 proves), so
+    // its checkpoint can re-home any dead node's tenants
+    oracle.persist_to(&ckpt).unwrap();
+
+    let probes = clustered(777, CHAOS_ROUNDS.max(PROBES), 1.0);
+
+    // ---- scripted kill: victim = tenant 1's home. Cut its next
+    // response mid-frame (AFTER the server admits — the ambiguous
+    // outcome), then refuse every reconnect. HRW places tenant 1 on
+    // node0 and re-homes it to node2 (deterministic hash, asserted).
+    let victim = router.route(1).unwrap();
+    assert_eq!(victim, 0, "rendezvous placement changed?");
+    {
+        let vp = &proxies[victim];
+        vp.set_plan(
+            FaultPlan::transparent()
+                .fault_resp(vp.resps_seen(), RespFault::Cut { keep: 2 })
+                .refuse_conns_from(vp.conns_seen()),
+        );
+    }
+    let t0 = Instant::now();
+    match router.predict(1, probes.x.row(0).to_vec()).unwrap() {
+        Admission::Queued { .. } => admitted += 1,
+        other => panic!("failover admission rejected: {other:?}"),
+    }
+    assert!(t0.elapsed() < HANG, "kill path did not stay bounded");
+    assert_eq!(router.node_state(victim), NodeState::Dead);
+    assert_eq!(router.alive_count(), 2);
+    assert_eq!(router.route(1), Some(2), "tenant 1 re-homed to successor");
+    {
+        let c = &router.health().counters;
+        assert_eq!(c.deaths, 1);
+        assert_eq!(c.failovers, 1);
+        assert!(c.rpc_retries >= 4, "budget not spent: {c:?}");
+        assert!(c.reconnects >= 4);
+        assert!(
+            c.recovered_tenants >= 1,
+            "checkpoint recovery installed nothing: {c:?}"
+        );
+    }
+
+    // ---- scripted stall: node1 (home of tenants 2/4/5) wedges
+    // mid-frame on its next response. The call is bounded by
+    // rpc_timeout; the retry reconnects and REPLAYS the recorded
+    // admission (same req_id), so the queue holds exactly one copy.
+    let stall = 1usize;
+    {
+        let sp = &proxies[stall];
+        sp.set_plan(
+            FaultPlan::transparent().fault_resp(sp.resps_seen(), RespFault::Stall { keep: 3 }),
+        );
+    }
+    let t1 = Instant::now();
+    match router.predict(2, probes.x.row(0).to_vec()).unwrap() {
+        Admission::Queued { .. } => admitted += 1,
+        other => panic!("stalled admission rejected: {other:?}"),
+    }
+    assert!(
+        t1.elapsed() < Duration::from_secs(12),
+        "stall was not bounded by rpc_timeout"
+    );
+    assert_eq!(
+        router.node_state(stall),
+        NodeState::Alive,
+        "stalled node recovers in-call"
+    );
+    // at-most-once: the stalled request was queued server-side AND its
+    // retry was deduped — one kill failover + one stalled predict = two
+    // queue entries across the fleet, not three
+    assert_eq!(router.queue_depth_total().unwrap(), 2);
+    completed += router.pump_drain_all().unwrap().len() as u64;
+
+    // ---- seeded chaos stretch over the survivors: label-free traffic
+    // (predicts mutate nothing, so ANY recovery path stays bit-exact),
+    // cuts ride the dedupe log, delays ride the timeout slack
+    for round in 0..CHAOS_ROUNDS {
+        for idx in [1usize, 2] {
+            proxies[idx].set_plan(FaultPlan::from_seed(seed ^ idx as u64));
+        }
+        for t in 0..N_TENANTS {
+            let t2 = Instant::now();
+            match router.predict(t, probes.x.row(round).to_vec()).unwrap() {
+                Admission::Queued { .. } => admitted += 1,
+                other => panic!("chaos probe rejected: {other:?}"),
+            }
+            assert!(t2.elapsed() < HANG, "chaos call hung");
+        }
+        // drain through quiet proxies so a chaos draw can never land on
+        // a pump response (whose loss would drop completions)
+        for idx in [1usize, 2] {
+            proxies[idx].set_plan(FaultPlan::transparent());
+        }
+        completed += router.pump_drain_all().unwrap().len() as u64;
+    }
+    assert_eq!(router.node_state(1), NodeState::Alive);
+    assert_eq!(router.node_state(2), NodeState::Alive);
+    assert_eq!(router.health().counters.deaths, 1, "chaos killed a survivor");
+
+    // ---- pump-path fault: cut node2's next (empty) pump response; the
+    // pump strikes it to Suspect, and the tick-scheduled probe recovers
+    // it two pumps later — the backoff is pump ticks, not wall clock
+    {
+        let pp = &proxies[2];
+        pp.set_plan(
+            FaultPlan::transparent().fault_resp(pp.resps_seen(), RespFault::Cut { keep: 1 }),
+        );
+    }
+    completed += router.pump_all().unwrap().len() as u64;
+    assert_eq!(router.node_state(2), NodeState::Suspect);
+    proxies[2].set_plan(FaultPlan::transparent());
+    let probes_before = router.health().counters.probes;
+    completed += router.pump_all().unwrap().len() as u64; // backoff tick 1: not due
+    assert_eq!(router.node_state(2), NodeState::Suspect);
+    completed += router.pump_all().unwrap().len() as u64; // backoff tick 2: probe fires
+    assert_eq!(router.node_state(2), NodeState::Alive);
+    assert_eq!(router.health().counters.probes, probes_before + 1);
+    assert_eq!(router.health().counters.probe_failures, 0);
+
+    // ---- phase 2: serving continues through the two survivors —
+    // predictions for EVERY tenant (including the dead node's, now
+    // served from the recovered checkpoint) bit-identical to the oracle
+    let mut preds = Vec::new();
+    for t in 0..N_TENANTS {
+        for p in 0..PROBES {
+            let x = probes.x.row(p).to_vec();
+            match router.predict(t, x.clone()).unwrap() {
+                Admission::Queued { .. } => admitted += 1,
+                other => panic!("probe rejected: {other:?}"),
+            }
+            let done = router.pump_drain_all().unwrap();
+            assert_eq!(done.len(), 1);
+            completed += 1;
+            preds.push(done[0].prediction);
+
+            match oracle.handle(t, Request::Predict(x)) {
+                Response::Queued { .. } => {}
+                other => panic!("oracle probe rejected: {other:?}"),
+            }
+            let oracle_done = oracle.pump_until_drained();
+            assert_eq!(oracle_done.len(), 1);
+            assert_eq!(
+                done[0].prediction, oracle_done[0].prediction,
+                "tenant {t} probe {p}: fleet diverged from the unfaulted oracle"
+            );
+            let serving = router.route(t).unwrap();
+            assert!(router.node_state(serving) == NodeState::Alive);
+        }
+    }
+
+    // ---- books: every admission the router acknowledged completed
+    // exactly once, across retries, failover, and chaos
+    assert_eq!(
+        completed, admitted,
+        "completions must equal admissions (zero lost, zero duplicated)"
+    );
+
+    // the merged fleet document still validates and carries the
+    // fleet_health section
+    let merged = router.fleet_obs().unwrap();
+    validate_obs(&merged).expect("fleet-merged document must validate under chaos");
+    assert!(merged.get("fleet_health").is_some());
+
+    let names: Vec<String> = (0..3).map(|i| format!("node{i}")).collect();
+    let health_json = router
+        .health()
+        .to_json(router.current_tick(), &names)
+        .to_string();
+
+    for px in proxies {
+        px.shutdown();
+    }
+    // the dead node's server still holds EXACTLY the one zombie
+    // admission whose response was cut after it was queued — proof the
+    // ambiguous outcome was real and the failover did not double-admit
+    let dead = servers[victim].take().unwrap().shutdown();
+    assert_eq!(dead.queued(), 1, "expected exactly the one zombie admission");
+    for s in servers.into_iter().flatten() {
+        s.shutdown();
+    }
+    oracle.shutdown();
+    let _ = std::fs::remove_file(&ckpt);
+
+    ScenarioOut {
+        health_json,
+        preds,
+        admitted,
+        completed,
+    }
+}
+
+#[test]
+fn seeded_kill_and_stall_chaos_is_survivable_and_replays_bit_identically() {
+    let a = scenario(SEED);
+    // the scenario's own asserts carry the survivability criteria; the
+    // second run proves the SAME seed reproduces the identical health
+    // transition log, counters, predictions, and books
+    let b = scenario(SEED);
+    assert_eq!(
+        a.health_json, b.health_json,
+        "fleet_health must replay bit-identically from the seed"
+    );
+    assert_eq!(a, b, "scenario outcome must be a pure function of the seed");
+}
+
+#[test]
+fn injected_garbage_is_a_protocol_error_not_a_retry_loop() {
+    let bb = backbone();
+    let ns = NodeServer::spawn(new_server(&bb), "127.0.0.1:0").unwrap();
+    // response ordinal 0 is the HelloOk; garbage lands on the first verb
+    let px = FaultProxy::spawn(
+        &ns.addr().to_string(),
+        FaultPlan::transparent().fault_resp(1, RespFault::Garbage { len: 16 }),
+    )
+    .unwrap();
+    let mut c = NodeClient::connect(px.addr()).unwrap();
+    match c.queue_depth() {
+        Err(e @ ClientError::Protocol(_)) => {
+            assert!(
+                !e.is_retryable(),
+                "a peer speaking garbage is not a transient fault"
+            );
+        }
+        other => panic!("expected a protocol violation, got {other:?}"),
+    }
+    drop(c);
+    px.shutdown();
+    ns.shutdown();
+}
+
+#[test]
+fn background_rebalance_fires_on_cadence_with_hysteresis_and_cooldown() {
+    let bb = backbone();
+    let mut nodes = Vec::new();
+    for _ in 0..2 {
+        nodes.push(NodeServer::spawn(new_server(&bb), "127.0.0.1:0").unwrap());
+    }
+    let mut router = FleetRouter::new();
+    for (i, n) in nodes.iter().enumerate() {
+        router
+            .add_node(&format!("node{i}"), &n.addr().to_string())
+            .unwrap();
+    }
+
+    // all-drifted tenants so every one publishes trained adapters (the
+    // skew probe counts registry tenants)
+    let tenants: Vec<u64> = (1..9).filter(|&t| drifted(t)).collect();
+    let mut sends = 0usize;
+    for round in 0..ROUNDS {
+        for &t in &tenants {
+            let data = tenant_stream(t);
+            let x = data.x.row(round).to_vec();
+            match router.feedback(t, x, data.labels[round] as u32).unwrap() {
+                Admission::Queued { .. } => {}
+                other => panic!("{other:?}"),
+            }
+            sends += 1;
+            if sends % 16 == 0 {
+                router.pump_all().unwrap();
+            }
+        }
+    }
+    router.pump_drain_all().unwrap();
+
+    // balanced fleet: the cadence runs but the high watermark holds
+    router.set_rebalance(Some(RebalanceConfig {
+        every_ticks: 1,
+        high_watermark: 1.2,
+        low_watermark: 1.0,
+        cooldown_ticks: 1000,
+    }));
+    router.pump_all().unwrap();
+    assert_eq!(
+        router.health().counters.rebalances,
+        0,
+        "no migration below the high watermark"
+    );
+
+    // force a hot node: migrate everything node1 owns onto node0
+    let on_node1: Vec<u64> = tenants
+        .iter()
+        .copied()
+        .filter(|&t| router.route(t) == Some(1))
+        .collect();
+    assert!(!on_node1.is_empty(), "rendezvous starved node1?");
+    assert!(on_node1.len() < tenants.len(), "rendezvous starved node0?");
+    for &t in &on_node1 {
+        router.migrate_tenant(t, 0).unwrap();
+    }
+    assert!(
+        router.skew().unwrap().max_over_mean > 1.2,
+        "forced imbalance below the watermark"
+    );
+
+    // next pump tick: exactly one rebalance step fires...
+    router.pump_all().unwrap();
+    assert_eq!(router.health().counters.rebalances, 1);
+    let moved: Vec<u64> = tenants
+        .iter()
+        .copied()
+        .filter(|&t| router.route(t) == Some(1))
+        .collect();
+    assert_eq!(moved.len(), 1, "one tenant moved off the hot node");
+
+    // ...and the cooldown suppresses the next, even though skew remains
+    router.pump_all().unwrap();
+    router.pump_all().unwrap();
+    assert_eq!(
+        router.health().counters.rebalances,
+        1,
+        "cooldown must suppress back-to-back migrations"
+    );
+
+    for n in nodes {
+        n.shutdown();
+    }
+}

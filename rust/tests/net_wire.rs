@@ -26,15 +26,24 @@ fn request_corpus() -> Vec<WireRequest> {
     vec![
         WireRequest::Hello {
             version: WIRE_VERSION,
+            token: None,
+            client_id: 0,
+        },
+        WireRequest::Hello {
+            version: WIRE_VERSION,
+            token: Some("shared-secret".into()),
+            client_id: 77,
         },
         WireRequest::Predict {
             tenant: 11,
             x: vec![1.0, 2.0, 3.0, 4.0],
+            req_id: 0,
         },
         WireRequest::Feedback {
             tenant: 0,
             x: vec![0.25; 8],
             label: 1,
+            req_id: u64::MAX,
         },
         WireRequest::SwapAdapters {
             tenant: 3,
@@ -104,6 +113,8 @@ fn response_corpus() -> Vec<WireResponse> {
         WireResponse::Completions(vec![c]),
         WireResponse::QueueDepthOk { queued: 0 },
         WireResponse::Resumed,
+        WireResponse::Unauthorized,
+        WireResponse::Busy { limit: 64 },
         WireResponse::Error { msg: "boom".into() },
     ]
 }
@@ -281,10 +292,13 @@ fn bad_hello_magic_is_rejected() {
     body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
     let err = decode_request(&body).unwrap_err().to_string();
     assert!(err.contains("magic"), "{err}");
-    // and the genuine magic still parses
+    // and the genuine magic still parses (v2 layout: magic, version,
+    // token presence byte, client_id)
     let mut body = vec![0x01u8];
     body.extend_from_slice(MAGIC);
     body.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    body.push(0); // no token
+    body.extend_from_slice(&0u64.to_le_bytes());
     assert!(decode_request(&body).is_ok());
 }
 
@@ -350,6 +364,8 @@ fn version_mismatch_handshake_is_refused_with_a_typed_error() {
         &mut stream,
         &WireRequest::Hello {
             version: WIRE_VERSION + 1,
+            token: None,
+            client_id: 0,
         },
     )
     .unwrap();
@@ -384,6 +400,8 @@ fn duplicate_hello_is_refused_but_connection_survives() {
     let mut stream = std::net::TcpStream::connect(&addr).unwrap();
     let hello = WireRequest::Hello {
         version: WIRE_VERSION,
+        token: None,
+        client_id: 0,
     };
     write_request(&mut stream, &hello).unwrap();
     match read_response(&mut stream).unwrap() {
@@ -416,6 +434,8 @@ fn malformed_frame_mid_session_gets_typed_error_and_session_continues() {
         &mut stream,
         &WireRequest::Hello {
             version: WIRE_VERSION,
+            token: None,
+            client_id: 0,
         },
     )
     .unwrap();
@@ -465,5 +485,277 @@ fn interleaved_connections_do_not_cross_frames() {
     assert_eq!(b.queue_depth().unwrap(), 0);
     drop(a);
     drop(b);
+    node.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// auth, connection caps, idle reaping, mid-frame death (PR: fleet plane
+// hardening — DESIGN.md §15)
+
+#[test]
+fn wrong_or_missing_auth_token_is_refused_before_any_verb() {
+    use skip2lora::net::NodeServerConfig;
+
+    let node = NodeServer::spawn_with(
+        tiny_server(),
+        "127.0.0.1:0",
+        NodeServerConfig {
+            auth_token: Some("open-sesame".into()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = node.addr().to_string();
+
+    // missing token, wrong token: typed Unauthorized, connection closed
+    for token in [None, Some("open-says-me".to_string())] {
+        let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+        write_request(
+            &mut stream,
+            &WireRequest::Hello {
+                version: WIRE_VERSION,
+                token,
+                client_id: 0,
+            },
+        )
+        .unwrap();
+        match read_response(&mut stream).unwrap() {
+            WireResponse::Unauthorized => {}
+            other => panic!("expected Unauthorized, got {other:?}"),
+        }
+        // the server hung up — no verb gets through on this connection
+        let _ = write_request(&mut stream, &WireRequest::QueueDepth);
+        assert!(
+            read_response(&mut stream).is_err(),
+            "unauthorized connection must not serve verbs"
+        );
+    }
+
+    // an adversary skipping Hello entirely learns only the Hello rule
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write_request(&mut stream, &WireRequest::Observe).unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Error { msg } => assert!(msg.contains("Hello"), "{msg}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // and the right token serves normally
+    let mut client = skip2lora::net::NodeClient::connect_with(
+        &addr,
+        skip2lora::net::ClientConfig {
+            token: Some("open-sesame".into()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(client.queue_depth().unwrap(), 0);
+    drop(client);
+    node.shutdown();
+}
+
+#[test]
+fn connection_cap_answers_busy_with_the_limit() {
+    use skip2lora::net::NodeServerConfig;
+
+    let node = NodeServer::spawn_with(
+        tiny_server(),
+        "127.0.0.1:0",
+        NodeServerConfig {
+            max_connections: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = node.addr().to_string();
+
+    let mut first = skip2lora::net::NodeClient::connect(&addr).unwrap();
+    assert_eq!(first.queue_depth().unwrap(), 0);
+
+    // the second concurrent connection is over the cap: typed Busy
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write_request(
+        &mut stream,
+        &WireRequest::Hello {
+            version: WIRE_VERSION,
+            token: None,
+            client_id: 0,
+        },
+    )
+    .unwrap();
+    match read_response(&mut stream).unwrap() {
+        WireResponse::Busy { limit } => assert_eq!(limit, 1),
+        other => panic!("expected Busy, got {other:?}"),
+    }
+    drop(stream);
+
+    // once the first connection closes, a newcomer gets a slot (the
+    // accept loop reaps finished handlers; poll briefly for the slot)
+    drop(first);
+    let mut ok = false;
+    for _ in 0..100 {
+        if let Ok(mut c) = skip2lora::net::NodeClient::connect(&addr) {
+            if c.queue_depth().is_ok() {
+                ok = true;
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(ok, "slot never freed after the first connection closed");
+    node.shutdown();
+}
+
+#[test]
+fn idle_connections_are_reaped_after_the_timeout() {
+    use skip2lora::net::NodeServerConfig;
+
+    let node = NodeServer::spawn_with(
+        tiny_server(),
+        "127.0.0.1:0",
+        NodeServerConfig {
+            idle_timeout: std::time::Duration::from_millis(75),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = node.addr().to_string();
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    write_request(
+        &mut stream,
+        &WireRequest::Hello {
+            version: WIRE_VERSION,
+            token: None,
+            client_id: 0,
+        },
+    )
+    .unwrap();
+    let _ = read_response(&mut stream).unwrap();
+
+    // go silent past the idle budget: the server hangs up
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let _ = write_request(&mut stream, &WireRequest::QueueDepth);
+    assert!(
+        read_response(&mut stream).is_err(),
+        "idle connection should have been reaped"
+    );
+
+    // an ACTIVE connection with the same config is untouched
+    let mut client = skip2lora::net::NodeClient::connect(&addr).unwrap();
+    for _ in 0..4 {
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert_eq!(client.queue_depth().unwrap(), 0);
+    }
+    drop(client);
+    node.shutdown();
+}
+
+#[test]
+fn mid_frame_death_is_a_typed_retryable_error_never_a_hang() {
+    use skip2lora::net::{ClientConfig, ClientError, NodeClient};
+    use skip2lora::testkit::faults::{FaultPlan, FaultProxy, RespFault};
+
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+    // response ordinal 0 is the HelloOk; the predict response (ordinal
+    // 1) dies 3 bytes in — "server killed while the client was reading"
+    let proxy = FaultProxy::spawn(
+        &addr,
+        FaultPlan::transparent().fault_resp(1, RespFault::Cut { keep: 3 }),
+    )
+    .unwrap();
+
+    let rpc_timeout = std::time::Duration::from_millis(500);
+    let cfg = ClientConfig {
+        rpc_timeout,
+        ..Default::default()
+    };
+    let mut client = NodeClient::connect_with(proxy.addr(), cfg.clone()).unwrap();
+    let start = std::time::Instant::now();
+    let err = client
+        .predict(7, vec![0.1, 0.2, 0.3, 0.4])
+        .expect_err("cut response must fail");
+    let elapsed = start.elapsed();
+    match &err {
+        ClientError::Transport(t) => assert!(t.retryable, "cut must be retryable: {t:?}"),
+        other => panic!("expected a transport error, got {other:?}"),
+    }
+    assert!(err.is_retryable());
+    assert!(client.is_broken(), "a torn stream must poison the client");
+    assert!(
+        elapsed < rpc_timeout + std::time::Duration::from_secs(2),
+        "mid-frame death took {elapsed:?} — the client must never hang"
+    );
+
+    // a STALLED response (bytes stop flowing, connection stays open) is
+    // bounded by rpc_timeout instead of hanging forever
+    let proxy2 = FaultProxy::spawn(
+        &addr,
+        FaultPlan::transparent().fault_resp(1, RespFault::Stall { keep: 2 }),
+    )
+    .unwrap();
+    let mut client2 = NodeClient::connect_with(proxy2.addr(), cfg).unwrap();
+    let start = std::time::Instant::now();
+    let err = client2
+        .predict(7, vec![0.1, 0.2, 0.3, 0.4])
+        .expect_err("stalled response must time out");
+    let elapsed = start.elapsed();
+    assert!(err.is_retryable(), "a timeout is retryable: {err:?}");
+    assert!(
+        elapsed < rpc_timeout * 4 + std::time::Duration::from_secs(2),
+        "stall took {elapsed:?}, rpc_timeout is {rpc_timeout:?}"
+    );
+
+    proxy.shutdown();
+    proxy2.shutdown();
+    node.shutdown();
+}
+
+#[test]
+fn retrying_a_req_id_replays_the_recorded_admission() {
+    use skip2lora::net::{Admission, ClientConfig, NodeClient};
+
+    let node = NodeServer::spawn(tiny_server(), "127.0.0.1:0").unwrap();
+    let addr = node.addr().to_string();
+    let mut client = NodeClient::connect_with(
+        &addr,
+        ClientConfig {
+            client_id: 42,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let x = vec![0.1, 0.2, 0.3, 0.4];
+    let first = match client.predict_req(7, x.clone(), 1001).unwrap() {
+        Admission::Queued { ticket } => ticket,
+        other => panic!("{other:?}"),
+    };
+    // the "retry after ambiguous outcome" path: same req_id replays the
+    // RECORDED response instead of double-admitting
+    match client.predict_req(7, x.clone(), 1001).unwrap() {
+        Admission::Queued { ticket } => assert_eq!(ticket, first, "double admission!"),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(client.queue_depth().unwrap(), 1, "dedupe must not re-queue");
+
+    // a fresh req_id is a fresh admission
+    match client.predict_req(7, x.clone(), 1002).unwrap() {
+        Admission::Queued { ticket } => assert_ne!(ticket, first),
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(client.queue_depth().unwrap(), 2);
+
+    // req_id 0 opts out of dedupe even with a client_id set
+    let a = client.predict_req(7, x.clone(), 0).unwrap();
+    let b = client.predict_req(7, x, 0).unwrap();
+    match (a, b) {
+        (Admission::Queued { ticket: ta }, Admission::Queued { ticket: tb }) => {
+            assert_ne!(ta, tb, "req_id 0 must never dedupe");
+        }
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(client.queue_depth().unwrap(), 4);
+    drop(client);
     node.shutdown();
 }

@@ -1,0 +1,17 @@
+// The hardened twin: backoff measured on the deterministic pump-tick
+// clock the router advances — `tick + backoff * 2^(strikes-1)` replays
+// bit-identically, no wall-clock source anywhere.
+pub struct NodeHealth {
+    pub strikes: u32,
+    pub next_probe_tick: u64,
+}
+
+pub fn strike(n: &mut NodeHealth, tick: u64, backoff_ticks: u64) {
+    n.strikes = n.strikes.saturating_add(1);
+    let factor = 1u64 << n.strikes.saturating_sub(1).min(6);
+    n.next_probe_tick = tick.saturating_add(backoff_ticks.saturating_mul(factor));
+}
+
+pub fn probe_due(n: &NodeHealth, tick: u64) -> bool {
+    tick >= n.next_probe_tick
+}

@@ -1,0 +1,17 @@
+// A health state machine that schedules its probe backoff off the wall
+// clock — exactly the drift R6 exists to catch in fleet/health.rs: a
+// chaos scenario can no longer replay bit-identically from its seed.
+use std::time::SystemTime;
+
+pub struct NodeHealth {
+    pub strikes: u32,
+    pub next_probe_ms: u128,
+}
+
+pub fn strike(n: &mut NodeHealth, backoff_ms: u128) {
+    n.strikes += 1;
+    let now = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map_or(0, |d| d.as_millis());
+    n.next_probe_ms = now + backoff_ms;
+}

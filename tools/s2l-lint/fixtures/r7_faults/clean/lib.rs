@@ -1,0 +1,18 @@
+// The hardened twin, idiomatic for a fault proxy: range slicing via
+// .get() with graceful fallbacks, poison-recovered locks, and typed
+// errors instead of panics on the pipe path.
+pub fn cut_frame(frame: &[u8], keep: usize) -> &[u8] {
+    frame.get(..keep).unwrap_or(frame)
+}
+
+pub fn frame_len(head: &[u8]) -> Result<u32, String> {
+    match head.get(..4).and_then(|h| <[u8; 4]>::try_from(h).ok()) {
+        Some(b) => Ok(u32::from_le_bytes(b)),
+        None => Err("short frame header".to_string()),
+    }
+}
+
+pub fn log_event(events: &std::sync::Mutex<Vec<u32>>, ordinal: u32) {
+    let mut guard = events.lock().unwrap_or_else(|p| p.into_inner());
+    guard.push(ordinal);
+}

@@ -1,0 +1,18 @@
+// A fault proxy that panics on the pipe path — exactly the hazards R7
+// (and R4's indexing scan) keep out of testkit/faults.rs: a chaos
+// harness that dies mid-scenario proves nothing about the system under
+// test.
+pub fn cut_frame(frame: &[u8], keep: usize) -> &[u8] {
+    &frame[..keep]
+}
+
+pub fn frame_len(head: &[u8]) -> u32 {
+    let bytes: [u8; 4] = head[..4].try_into().unwrap();
+    u32::from_le_bytes(bytes)
+}
+
+pub fn park(stalled: bool) {
+    if stalled {
+        panic!("stall fault wedged the pipe");
+    }
+}

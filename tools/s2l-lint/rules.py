@@ -54,13 +54,17 @@ class LintConfig:
         "rust/src/net/wire.rs",
         "rust/src/testkit/lanes.rs",
         "rust/src/testkit/stress.rs",
+        "rust/src/testkit/faults.rs",
         "rust/src/serve/registry.rs",
+        "rust/src/fleet/health.rs",
     )
     panic_files: tuple = (
         "rust/src/net/wire.rs",
         "rust/src/net/server.rs",
         "rust/src/net/client.rs",
         "rust/src/serve/persist.rs",
+        "rust/src/fleet/health.rs",
+        "rust/src/testkit/faults.rs",
     )
     exhaustive_enums: tuple = (
         "RejectReason", "Request", "Response", "EventKind", "SubmitError",
